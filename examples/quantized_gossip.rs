@@ -1,0 +1,73 @@
+//! Quantized gossip demo (paper Appendix G): the lattice/modulo codec on
+//! real models — wire-size accounting, decode-failure fallbacks, and the
+//! accuracy cost of 8/6/4-bit averaging, vs full precision.
+//!
+//! Run: `make artifacts && cargo run --release --example quantized_gossip`
+
+use swarm_sgd::coordinator::{AveragingMode, LocalSteps, LrSchedule};
+use swarm_sgd::figures::{paper_cost, run_arm, Arm, BackendSpec};
+use swarm_sgd::output::Table;
+use swarm_sgd::quant::{decode, encode};
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::Topology;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- codec micro-demo -------------------------------------------------
+    println!("== lattice codec on a 100k-dim model pair ==");
+    let d = 100_000;
+    let mut rng = Pcg64::seed(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = x.iter().map(|v| v + 0.02 * rng.normal() as f32).collect();
+    for bits in [4u32, 6, 8, 10] {
+        let msg = encode(&x, 1e-3, bits, 7);
+        let ok = decode(&msg, &y).is_ok();
+        println!(
+            "  {bits:>2}-bit: {:>9} wire bits ({:>5.2}x smaller than fp32)  decode_ok={ok}",
+            msg.wire_bits(),
+            (32 * d) as f64 / msg.wire_bits() as f64,
+        );
+    }
+
+    // --- end-to-end: quantized swarm on the MLP preset --------------------
+    println!("\n== quantized SwarmSGD (mlp_s, n=8) ==");
+    let n = 8;
+    let t = 300u64;
+    let lr = 0.05;
+    let cost = paper_cost("wideresnet28");
+    let spec = BackendSpec::xla("mlp_s", n, 512, 3);
+    let mut table = Table::new(&[
+        "variant", "acc", "loss", "GB on wire", "sim time (s)", "fallbacks",
+    ]);
+    for (name, mode) in [
+        ("fp32", AveragingMode::NonBlocking),
+        ("8-bit", AveragingMode::Quantized { bits: 8, eps: 2e-3 }),
+        ("6-bit", AveragingMode::Quantized { bits: 6, eps: 2e-3 }),
+        ("4-bit", AveragingMode::Quantized { bits: 4, eps: 2e-3 }),
+    ] {
+        let arm = Arm {
+            name: name.into(),
+            algo: "swarm".into(),
+            mode,
+            local_steps: LocalSteps::Fixed(2),
+            t,
+            lr: LrSchedule::Constant(lr),
+            h_localsgd: 5,
+        };
+        let m = run_arm(&arm, &spec, n, Topology::Complete, &cost, 27, 0, false)?;
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", m.final_eval_acc),
+            format!("{:.4}", m.final_eval_loss),
+            format!("{:.4}", m.total_bits as f64 / 8e9),
+            format!("{:.1}", m.sim_time),
+            m.quant_fallbacks.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: 8-bit matches fp32 accuracy (paper: <0.3% drop) \
+         at ~4x fewer bytes; aggressive 4-bit trips the distance criterion \
+         more often (fallbacks) and can cost accuracy."
+    );
+    Ok(())
+}

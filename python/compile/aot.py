@@ -1,0 +1,119 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts + manifest.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``:
+the ``xla`` crate links xla_extension 0.5.1, which rejects jax>=0.5 protos
+(64-bit instruction ids; ``proto.id() <= INT_MAX``).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+Presets can be restricted: ``--preset mlp_s --preset transformer_s``.
+
+Python runs ONCE, at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import build
+
+# ---------------------------------------------------------------------------
+# Presets: every (model, size) the coordinator/figures need.  K is the scan
+# length of the fixed-H fast-path artifact.
+# ---------------------------------------------------------------------------
+PRESETS = {
+    # quickstart + unit tests
+    "mlp_s": dict(model="mlp", k=4, wd=0.0,
+                  cfg=dict(in_dim=64, hidden=128, depth=2, classes=10, batch=32)),
+    # CIFAR-10/ResNet20 slot (table1, fig6, fig8)
+    "cnn_s": dict(model="cnn", k=4, wd=5e-4,
+                  cfg=dict(image=16, chan_in=3, width=16, depth=2, classes=10, batch=32)),
+    # ImageNet/ResNet18 slot (table1, fig2a, fig5)
+    "cnn_m": dict(model="cnn", k=4, wd=5e-4,
+                  cfg=dict(image=32, chan_in=3, width=24, depth=3, classes=100, batch=32)),
+    # WMT17/Transformer slots — xs for figure sweeps (CPU-tractable),
+    # small for tests/e2e-small, medium for the e2e driver
+    "transformer_xs": dict(model="transformer", k=2, wd=0.0,
+                           cfg=dict(vocab=128, d_model=64, heads=4, layers=2, seq=32, batch=8)),
+    "transformer_s": dict(model="transformer", k=2, wd=0.0,
+                          cfg=dict(vocab=256, d_model=128, heads=4, layers=2, seq=64, batch=16)),
+    "transformer_m": dict(model="transformer", k=2, wd=0.0,
+                          cfg=dict(vocab=512, d_model=256, heads=8, layers=4, seq=64, batch=16)),
+}
+
+QAVG_EPS = 1e-3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preset(name, preset, out_dir):
+    cfg, k = preset["cfg"], preset["k"]
+    fns = build(preset["model"], cfg, wd=preset["wd"], qavg_eps=QAVG_EPS)
+    p = fns["param_count"]
+    fvec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    scal_i = jax.ShapeDtypeStruct((), jnp.int32)
+    scal_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scal_u = jax.ShapeDtypeStruct((), jnp.uint32)
+    x, y = fns["example_batch"]()
+    xs = jax.ShapeDtypeStruct((k,) + x.shape, x.dtype)
+    ys = jax.ShapeDtypeStruct((k,) + y.shape, y.dtype)
+
+    artifacts = {
+        "init": (fns["init"], (scal_i,)),
+        "step": (fns["train_step"], (fvec, fvec, x, y, scal_f)),
+        "step_k": (fns["train_step_k"], (fvec, fvec, xs, ys, scal_f)),
+        "eval": (fns["eval_step"], (fvec, x, y)),
+        "qavg": (fns["qavg_step"], (fvec, fvec, scal_u)),
+    }
+    lines = [f"[{name}]"]
+    lines.append(f"model = {preset['model']}")
+    lines.append(f"param_count = {p}")
+    lines.append(f"batch = {cfg['batch']}")
+    lines.append(f"k = {k}")
+    lines.append(f"qavg_eps = {QAVG_EPS}")
+    for key, val in fns["manifest_fields"]().items():
+        lines.append(f"{key} = {val}")
+    for art, (fn, args) in artifacts.items():
+        fname = f"{name}_{art}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        print(f"  {fname:36s} {len(text) / 1e6:7.2f} MB  sha={digest}")
+        lines.append(f"{art} = {fname}")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="restrict to specific presets (repeatable)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.preset or list(PRESETS)
+    manifest = []
+    for name in names:
+        print(f"[aot] lowering preset {name}")
+        manifest.extend(lower_preset(name, PRESETS[name], args.out_dir))
+        manifest.append("")
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 — Pallas kernels for SwarmSGD (build-time only).
+
+All kernels run under ``interpret=True`` (CPU lowers them to plain HLO ops);
+the block structure is written for TPU: 128-lane minor dimension, MXU-shaped
+matmul tiles, fused single-pass elementwise kernels.  See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from .matmul import matmul
+from .qavg import lattice_qavg, lattice_quantize
+from .sgd import sgd_momentum_update
+
+__all__ = ["matmul", "lattice_qavg", "lattice_quantize", "sgd_momentum_update"]

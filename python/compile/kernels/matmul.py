@@ -1,0 +1,104 @@
+"""Tiled matmul Pallas kernel — the model's MXU hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a GPU implementation
+would tile with threadblocks over shared memory; on TPU we tile with
+``BlockSpec`` over VMEM.  Default tiles are 128x128x128:
+
+    VMEM footprint / grid step = (128*128 + 128*128 + 128*128) * 4 B = 192 KiB
+
+which leaves ample double-buffering headroom in ~16 MiB of VMEM and feeds the
+128x128 MXU systolic array with full-width operands.  The K dimension is the
+innermost grid axis and the output block index map ignores it, so the output
+tile is revisited and accumulated in place — the canonical Pallas reduction
+pattern (equivalent to a K-loop inside one threadblock on GPU).
+
+``matmul`` is wrapped in ``jax.custom_vjp`` so the L2 model can differentiate
+through it: both backward matmuls reuse the same Pallas kernel.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile. 512^3 keeps the VMEM footprint at 3 * 512*512*4 B = 3 MiB
+# (well inside ~16 MiB), remains MXU-aligned (512 = 4*128 lanes), and cuts
+# the interpret-mode grid iteration count 64x vs 128^3 — the dominant cost
+# when the kernel runs as lowered HLO loops on CPU (see EXPERIMENTS.md
+# §Perf). On real TPU hardware either size feeds the systolic array at full
+# width; 128^3 would be preferred only under multi-buffer pressure.
+BLOCK_M = 512
+BLOCK_N = 512
+BLOCK_K = 512
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; grid axis 2 walks K and accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation on the MXU (preferred_element_type pins the accumulator
+    # dtype even if inputs are later switched to bf16).
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _block(dim: int, block: int) -> int:
+    """Pick a tile size: full tile if the dim is large, else the padded dim."""
+    if dim >= block:
+        return block
+    # round small dims up to a multiple of 8 (sublane) for TPU friendliness
+    return max(8, -(-dim // 8) * 8)
+
+
+def _pad_to(a, rows, cols):
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_raw(x, y, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, q: (i, q)),
+            pl.BlockSpec((bk, bn), lambda i, j, q: (q, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, q: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """``x @ y`` through the Pallas tiled kernel, differentiable."""
+    return _matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g — same kernel, transposed operands.
+    return _matmul_raw(g, y.T), _matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,107 @@
+"""Fused lattice-quantize + average Pallas kernel (paper Appendix G).
+
+The quantized averaging step of SwarmSGD replaces ``(x + y) / 2`` with
+``(x + Q(y)) / 2`` where ``Q`` is the cubic-lattice quantizer of Davies et
+al. [12]: stochastically round ``y`` to the lattice ``eps * Z^d``.  The
+rounding is *unbiased* (``E[Q(y)] = y``) and its error is bounded by ``eps``
+per coordinate — i.e. by a resolution we control, not by ``||y||`` — which is
+exactly the property the paper's potential argument needs (the modulo wire
+encoding that achieves the O(d + log T) bit cost lives in the Rust codec,
+``rust/src/quant``; values are unchanged by it whenever the distance
+criterion holds, so this kernel computes the same result the decoded wire
+format produces).
+
+Kernel structure: single fused elementwise pass (one read of x, one read of
+y, one write) over (8, 128)-shaped VPU lanes.  Stochastic rounding uses a
+counter-based xorshift hash of (global element index, seed) so the kernel is
+deterministic given the seed — the pure-jnp oracle in ``ref.py`` and the
+Rust codec implement the *same* hash, giving exact cross-layer agreement.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 512  # 64k elems/block = 256 KiB/operand in VMEM
+BLOCK = LANES * SUBLANES  # elements per grid step
+
+
+def _hash_u32(idx, seed):
+    """lowbias32-style avalanche hash of a u32 counter, keyed by seed."""
+    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761) + seed.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _uniform01(idx, seed):
+    """u32 hash -> f32 uniform in [0, 1)."""
+    return _hash_u32(idx, seed).astype(jnp.float32) * jnp.float32(2.0**-32)
+
+
+def _qavg_kernel(seed_ref, x_ref, y_ref, o_ref, *, eps):
+    pid = pl.program_id(0)
+    shape = y_ref.shape
+    base = pid * BLOCK
+    lin = jax.lax.broadcasted_iota(jnp.uint32, shape, 0) * shape[1]
+    lin = lin + jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    gidx = lin + jnp.uint32(base)
+    u = _uniform01(gidx, seed_ref[0])
+    y = y_ref[...]
+    q = jnp.floor(y / eps + u) * eps  # stochastic rounding to eps*Z
+    o_ref[...] = (x_ref[...] + q) * jnp.float32(0.5)
+
+
+def _quant_kernel(seed_ref, y_ref, o_ref, *, eps):
+    pid = pl.program_id(0)
+    shape = y_ref.shape
+    base = pid * BLOCK
+    lin = jax.lax.broadcasted_iota(jnp.uint32, shape, 0) * shape[1]
+    lin = lin + jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    gidx = lin + jnp.uint32(base)
+    u = _uniform01(gidx, seed_ref[0])
+    o_ref[...] = jnp.floor(y_ref[...] / eps + u) * eps
+
+
+def _run_elementwise(kernel, seed, arrays, eps):
+    """Pad 1-D operands to a (rows, 128) layout and launch a 1-D grid."""
+    n = arrays[0].shape[0]
+    padded = -(-n // BLOCK) * BLOCK
+    rows = padded // LANES
+    ops = [jnp.pad(a, (0, padded - n)).reshape(rows, LANES) for a in arrays]
+    grid = rows // SUBLANES
+    out = pl.pallas_call(
+        partial(kernel, eps=float(eps)),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))]
+        + [pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)) for _ in ops],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(seed.reshape(1).astype(jnp.uint32), *ops)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def lattice_qavg(x, y, seed, eps=1e-3):
+    """``(x + Q_eps(y)) / 2`` — the quantized SwarmSGD averaging step.
+
+    Args:
+      x: local model, f32[P].
+      y: remote model, f32[P] (this is the side that crossed the wire).
+      seed: u32 scalar shared by encoder/decoder.
+      eps: lattice resolution (static).
+    """
+    return _run_elementwise(_qavg_kernel, seed, [x, y], eps)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def lattice_quantize(y, seed, eps=1e-3):
+    """Unbiased stochastic rounding of ``y`` to the lattice ``eps * Z^d``."""
+    return _run_elementwise(_quant_kernel, seed, [y], eps)

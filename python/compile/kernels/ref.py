@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package has an exact reference here.  ``pytest`` sweeps
+shapes/dtypes (hypothesis) and asserts ``allclose`` (matmul/sgd) or exact
+equality (qavg — the stochastic rounding hash is deterministic and
+re-implemented bit-for-bit, both here and in the Rust codec
+``rust/src/quant/lattice.rs``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def hash_u32_ref(idx, seed):
+    """lowbias32 avalanche hash — must match qavg.py and quant/lattice.rs."""
+    x = idx.astype(jnp.uint32) * jnp.uint32(2654435761) + jnp.uint32(seed)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def uniform01_ref(idx, seed):
+    return hash_u32_ref(idx, seed).astype(jnp.float32) * jnp.float32(2.0**-32)
+
+
+def lattice_quantize_ref(y, seed, eps=1e-3):
+    idx = jnp.arange(y.shape[0], dtype=jnp.uint32)
+    u = uniform01_ref(idx, seed)
+    return jnp.floor(y / jnp.float32(eps) + u) * jnp.float32(eps)
+
+
+def lattice_qavg_ref(x, y, seed, eps=1e-3):
+    return (x + lattice_quantize_ref(y, seed, eps)) * jnp.float32(0.5)
+
+
+def sgd_momentum_update_ref(params, mom, grad, lr, mu=0.9, wd=0.0):
+    m_new = jnp.float32(mu) * mom + grad + jnp.float32(wd) * params
+    return params - jnp.float32(lr).reshape(()) * m_new, m_new

@@ -1,0 +1,80 @@
+"""L2 — assemble per-model train/eval/init functions for AOT lowering.
+
+Every artifact signature is flat-vector based so the Rust coordinator stays
+shape-agnostic (DESIGN.md §7.2):
+
+  init(seed i32[])                     -> (params f32[P], mom f32[P])
+  train_step(params, mom, x, y, lr[])  -> (params', mom', loss[])
+  train_step_k(params, mom, xs, ys, lr[]) -> (params', mom', mean_loss[])
+      where xs/ys stack K batches; lax.scan over the fused single step —
+      the fixed-H fast path that amortizes PJRT dispatch.
+  eval_step(params, x, y)              -> (loss[], correct[])
+  qavg_step(x f32[P], y f32[P], seed u32[]) -> avg f32[P]
+      the quantized averaging step (Pallas lattice kernel), lowered once per
+      model size so L3 can do averaging inside XLA when configured.
+
+The SGD update (momentum 0.9 + optional weight decay, both static) runs
+through the fused Pallas axpy kernel.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lattice_qavg, sgd_momentum_update
+from .models import REGISTRY
+
+MOMENTUM = 0.9
+
+
+def get_model(name):
+    return REGISTRY[name]
+
+
+def build(name, cfg, wd=0.0, qavg_eps=1e-3):
+    """Return dict of jittable fns + the ParamSpec for model ``name``."""
+    mod = get_model(name)
+    spec_ = mod.spec(cfg)
+    psize = spec_.size
+
+    def loss(flat, x, y):
+        return mod.loss_fn(spec_, cfg, flat, x, y)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        flat = spec_.init_flat(key)
+        return flat, jnp.zeros((psize,), jnp.float32)
+
+    def train_step(flat, mom, x, y, lr):
+        l, g = jax.value_and_grad(loss)(flat, x, y)
+        flat2, mom2 = sgd_momentum_update(flat, mom, g, lr, mu=MOMENTUM, wd=wd)
+        return flat2, mom2, l
+
+    def train_step_k(flat, mom, xs, ys, lr):
+        def body(carry, xy):
+            f, m = carry
+            x, y = xy
+            f2, m2, l = train_step(f, m, x, y, lr)
+            return (f2, m2), l
+
+        (flat2, mom2), ls = jax.lax.scan(body, (flat, mom), (xs, ys))
+        return flat2, mom2, jnp.mean(ls)
+
+    def eval_step(flat, x, y):
+        return mod.metrics_fn(spec_, cfg, flat, x, y)
+
+    def qavg_step(x, y, seed):
+        return lattice_qavg(x, y, seed, eps=qavg_eps)
+
+    return dict(
+        spec=spec_,
+        param_count=psize,
+        init=init,
+        train_step=train_step,
+        train_step_k=train_step_k,
+        eval_step=eval_step,
+        qavg_step=qavg_step,
+        example_batch=partial(mod.example_batch, cfg),
+        manifest_fields=partial(mod.manifest_fields, cfg),
+    )

@@ -1,0 +1,18 @@
+"""L2 model zoo.
+
+Each model module exposes:
+
+  * ``spec(cfg) -> ParamSpec``       — flat parameter layout
+  * ``loss_fn(spec, cfg, flat, x, y) -> scalar loss``  (mean over batch)
+  * ``metrics_fn(spec, cfg, flat, x, y) -> (loss, correct_count)``
+
+``cfg`` is a plain dict of ints; all shapes are static at lowering time.
+"""
+
+from . import cnn, mlp, transformer
+
+REGISTRY = {
+    "mlp": mlp,
+    "cnn": cnn,
+    "transformer": transformer,
+}

@@ -1,0 +1,91 @@
+"""Small convnet — stands in for the paper's ResNet18/50 ImageNet workloads
+(DESIGN.md §2: synthetic Gaussian-mixture images replace ImageNet; the
+*algorithmic* path — non-convex vision-model SGD + decentralized averaging —
+is identical).
+
+Structure: ``depth`` conv blocks (3x3 conv, bias, ReLU, 2x2 avg-pool with a
+residual bypass when channels match), then a Pallas-matmul classifier head.
+Convolutions lower to XLA's native conv HLO; the dense head exercises the L1
+matmul kernel inside the same artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import matmul
+from ..packing import ParamSpec
+
+DEFAULTS = dict(image=16, chan_in=3, width=16, depth=2, classes=10, batch=32)
+
+
+def _out_hw(cfg):
+    hw = cfg["image"]
+    for _ in range(cfg["depth"]):
+        hw //= 2
+    return hw
+
+
+def spec(cfg) -> ParamSpec:
+    s = ParamSpec()
+    cin = cfg["chan_in"]
+    for i in range(cfg["depth"]):
+        cout = cfg["width"] * (2**i)
+        s.add(f"conv{i}", (3, 3, cin, cout))
+        s.add(f"conv{i}_b", (cout,))
+        cin = cout
+    feat = _out_hw(cfg) ** 2 * cin
+    s.add("head", (feat, cfg["classes"]))
+    s.add("head_b", (cfg["classes"],))
+    return s
+
+
+def forward(spec_, cfg, flat, x):
+    p = spec_.unpack(flat)
+    h = x  # NHWC
+    for i in range(cfg["depth"]):
+        w = p[f"conv{i}"]
+        z = lax.conv_general_dilated(
+            h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + p[f"conv{i}_b"]
+        z = jax.nn.relu(z)
+        if z.shape == h.shape:  # residual bypass when shapes allow
+            z = z + h
+        h = lax.reduce_window(
+            z, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        ) * jnp.float32(0.25)
+    h = h.reshape(h.shape[0], -1)
+    return matmul(h, p["head"]) + p["head_b"]
+
+
+def loss_fn(spec_, cfg, flat, x, y):
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def metrics_fn(spec_, cfg, flat, x, y):
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+def example_batch(cfg):
+    b = cfg["batch"]
+    return (
+        jax.ShapeDtypeStruct(
+            (b, cfg["image"], cfg["image"], cfg["chan_in"]), jnp.float32
+        ),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+
+
+def manifest_fields(cfg):
+    return {
+        "kind": "image",
+        "image": cfg["image"],
+        "chan_in": cfg["chan_in"],
+        "classes": cfg["classes"],
+    }

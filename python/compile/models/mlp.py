@@ -1,0 +1,65 @@
+"""MLP classifier — the quickstart model (paper's ResNet20/CIFAR-10 slot in
+spirit: small non-convex classification workload).
+
+Dense layers run through the Pallas tiled matmul (L1); loss is softmax
+cross-entropy over integer labels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+from ..packing import ParamSpec
+
+DEFAULTS = dict(in_dim=64, hidden=128, depth=2, classes=10, batch=32)
+
+
+def spec(cfg) -> ParamSpec:
+    s = ParamSpec()
+    dims = [cfg["in_dim"]] + [cfg["hidden"]] * cfg["depth"]
+    for i in range(cfg["depth"]):
+        s.add(f"w{i}", (dims[i], dims[i + 1]))
+        s.add(f"w{i}_b", (dims[i + 1],))
+    s.add("head", (dims[-1], cfg["classes"]))
+    s.add("head_b", (cfg["classes"],))
+    return s
+
+
+def forward(spec_, cfg, flat, x):
+    p = spec_.unpack(flat)
+    h = x
+    for i in range(cfg["depth"]):
+        h = matmul(h, p[f"w{i}"]) + p[f"w{i}_b"]
+        h = jax.nn.relu(h)
+    return matmul(h, p["head"]) + p["head_b"]
+
+
+def loss_fn(spec_, cfg, flat, x, y):
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def metrics_fn(spec_, cfg, flat, x, y):
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+def example_batch(cfg):
+    """ShapeDtypeStructs for (x, y) used at lowering time."""
+    b = cfg["batch"]
+    return (
+        jax.ShapeDtypeStruct((b, cfg["in_dim"]), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+
+
+def manifest_fields(cfg):
+    return {
+        "kind": "vector",
+        "in_dim": cfg["in_dim"],
+        "classes": cfg["classes"],
+    }

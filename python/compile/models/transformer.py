@@ -1,0 +1,121 @@
+"""Causal transformer LM — stands in for the paper's Transformer-XL/WMT17
+workload (DESIGN.md §2: a synthetic Markov token corpus replaces WMT17; the
+over-parameterized autoregressive-LM regime where SwarmSGD matches baseline
+epochs is what matters, not BLEU).
+
+Pre-LN decoder blocks; all dense projections (QKV, attention out, MLP in/out,
+LM head) run through the Pallas tiled matmul (L1) — these carry ~100% of the
+model FLOPs, which is exactly the MXU hot-spot the kernel exists for.
+Attention score/mix einsums stay in jnp (batched 4-D contractions).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+from ..packing import ParamSpec
+
+DEFAULTS = dict(vocab=256, d_model=128, heads=4, layers=2, seq=64, batch=16)
+
+
+def spec(cfg) -> ParamSpec:
+    d = cfg["d_model"]
+    s = ParamSpec()
+    s.add("embed", (cfg["vocab"], d), scale=0.02)
+    s.add("pos", (cfg["seq"], d), scale=0.02)
+    for i in range(cfg["layers"]):
+        s.add(f"l{i}_attn_ln_s", (d,))
+        s.add(f"l{i}_attn_ln_b", (d,))
+        s.add(f"l{i}_qkv", (d, 3 * d))
+        s.add(f"l{i}_qkv_b", (3 * d,))
+        s.add(f"l{i}_proj", (d, d), scale=0.02 / math.sqrt(2 * cfg["layers"]))
+        s.add(f"l{i}_proj_b", (d,))
+        s.add(f"l{i}_mlp_ln_s", (d,))
+        s.add(f"l{i}_mlp_ln_b", (d,))
+        s.add(f"l{i}_fc", (d, 4 * d))
+        s.add(f"l{i}_fc_b", (4 * d,))
+        s.add(f"l{i}_out", (4 * d, d), scale=0.02 / math.sqrt(2 * cfg["layers"]))
+        s.add(f"l{i}_out_b", (d,))
+    s.add("final_ln_s", (d,))
+    s.add("final_ln_b", (d,))
+    s.add("head", (d, cfg["vocab"]), scale=0.02)
+    return s
+
+
+def _ln(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _dense(x, w, b):
+    """(B, L, Din) @ (Din, Dout) through the Pallas matmul."""
+    bsz, seq, din = x.shape
+    y = matmul(x.reshape(bsz * seq, din), w) + b
+    return y.reshape(bsz, seq, -1)
+
+
+def forward(spec_, cfg, flat, tokens):
+    p = spec_.unpack(flat)
+    d, nh = cfg["d_model"], cfg["heads"]
+    hd = d // nh
+    bsz, seq = tokens.shape
+    h = p["embed"][tokens] + p["pos"][None, :seq, :]
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.bool_))
+    for i in range(cfg["layers"]):
+        # --- attention ---
+        a = _ln(h, p[f"l{i}_attn_ln_s"], p[f"l{i}_attn_ln_b"])
+        qkv = _dense(a, p[f"l{i}_qkv"], p[f"l{i}_qkv_b"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        mix = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+        mix = mix.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+        h = h + _dense(mix, p[f"l{i}_proj"], p[f"l{i}_proj_b"])
+        # --- MLP ---
+        m = _ln(h, p[f"l{i}_mlp_ln_s"], p[f"l{i}_mlp_ln_b"])
+        m = jax.nn.gelu(_dense(m, p[f"l{i}_fc"], p[f"l{i}_fc_b"]))
+        h = h + _dense(m, p[f"l{i}_out"], p[f"l{i}_out_b"])
+    h = _ln(h, p["final_ln_s"], p["final_ln_b"])
+    logits = matmul(h.reshape(bsz * seq, d), p["head"])
+    return logits.reshape(bsz, seq, cfg["vocab"])
+
+
+def loss_fn(spec_, cfg, flat, x, y):
+    """x: int32[B, L] inputs; y: int32[B, L] next-token targets."""
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def metrics_fn(spec_, cfg, flat, x, y):
+    logits = forward(spec_, cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = jnp.mean(-jnp.take_along_axis(logp, y[..., None], axis=-1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+def example_batch(cfg):
+    b, l = cfg["batch"], cfg["seq"]
+    return (
+        jax.ShapeDtypeStruct((b, l), jnp.int32),
+        jax.ShapeDtypeStruct((b, l), jnp.int32),
+    )
+
+
+def manifest_fields(cfg):
+    return {
+        "kind": "tokens",
+        "vocab": cfg["vocab"],
+        "seq": cfg["seq"],
+        "d_model": cfg["d_model"],
+        "layers": cfg["layers"],
+    }

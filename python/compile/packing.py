@@ -1,0 +1,69 @@
+"""Flat parameter packing — the model-space view the coordinator operates on.
+
+SwarmSGD's averaging/quantization acts on whole models as vectors in R^d
+(paper §2).  We therefore pack every model's parameter pytree into a single
+``f32[P]`` vector at the AOT boundary: the Rust coordinator averages,
+quantizes, and ships flat vectors without knowing layer shapes, and the L2
+forward pass unpacks them with static slices (free at HLO level — XLA folds
+``dynamic_slice`` with constant offsets into bitcasts/views).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ParamSpec:
+    """Ordered list of named tensors plus their init scales."""
+
+    entries: list[tuple[str, tuple[int, ...], float]] = field(default_factory=list)
+
+    def add(self, name: str, shape: tuple[int, ...], scale: float | None = None):
+        """Register a tensor. ``scale=None`` -> He/Glorot-ish fan-in init."""
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else max(1, shape[-1])
+            if len(shape) == 4:  # HWIO conv kernel
+                fan_in = shape[0] * shape[1] * shape[2]
+            scale = 1.0 / math.sqrt(fan_in)
+        self.entries.append((name, tuple(shape), float(scale)))
+        return self
+
+    @property
+    def size(self) -> int:
+        return sum(math.prod(s) for _, s, _ in self.entries)
+
+    def offsets(self) -> dict[str, tuple[int, tuple[int, ...]]]:
+        out, off = {}, 0
+        for name, shape, _ in self.entries:
+            out[name] = (off, shape)
+            off += math.prod(shape)
+        return out
+
+    def unpack(self, flat: jax.Array) -> dict[str, jax.Array]:
+        """Slice the flat vector into named, shaped tensors (static offsets)."""
+        params = {}
+        for name, (off, shape) in self.offsets().items():
+            n = math.prod(shape)
+            params[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        return params
+
+    def init_flat(self, key: jax.Array) -> jax.Array:
+        """Initialize the packed vector: scaled normals (zeros for biases/LN-b)."""
+        chunks = []
+        for i, (name, shape, scale) in enumerate(self.entries):
+            sub = jax.random.fold_in(key, i)
+            n = math.prod(shape)
+            if name.endswith("_b"):  # biases start at zero
+                chunks.append(jnp.zeros((n,), jnp.float32))
+            elif name.endswith("_ln_s"):  # LayerNorm scales start at one
+                chunks.append(jnp.ones((n,), jnp.float32))
+            else:
+                chunks.append(
+                    jax.random.normal(sub, (n,), jnp.float32) * jnp.float32(scale)
+                )
+        return jnp.concatenate(chunks)

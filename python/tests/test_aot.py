@@ -1,0 +1,58 @@
+"""AOT lowering checks: HLO text is produced, parseable-looking, and the
+manifest is consistent.  (The authoritative load check lives on the Rust
+side — rust/tests/runtime_artifacts.rs — which compiles the text through
+the real PJRT client.)"""
+
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered_dir():
+    with tempfile.TemporaryDirectory() as d:
+        lines = aot.lower_preset("mlp_s", aot.PRESETS["mlp_s"], d)
+        with open(os.path.join(d, "manifest.txt"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+        yield d
+
+
+def test_all_artifacts_written(lowered_dir):
+    for art in ["init", "step", "step_k", "eval", "qavg"]:
+        path = os.path.join(lowered_dir, f"mlp_s_{art}.hlo.txt")
+        assert os.path.exists(path), art
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{art}: not HLO text"
+        assert "ENTRY" in text
+
+
+def test_hlo_has_tuple_root(lowered_dir):
+    """return_tuple=True — the Rust side unwraps with to_tuple*()."""
+    text = open(os.path.join(lowered_dir, "mlp_s_step.hlo.txt")).read()
+    assert "ROOT" in text
+    root_line = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root_line, "expected a tuple-shaped ROOT"
+
+
+def test_manifest_fields(lowered_dir):
+    text = open(os.path.join(lowered_dir, "manifest.txt")).read()
+    assert "[mlp_s]" in text
+    for key in ["param_count", "batch", "k", "step", "step_k", "eval", "init", "qavg"]:
+        assert f"{key} = " in text
+
+
+def test_no_serialized_protos(lowered_dir):
+    """Guard: we must never emit binary protos (xla_extension 0.5.1 rejects
+    jax>=0.5 64-bit ids) — everything is text."""
+    for f in os.listdir(lowered_dir):
+        if f.endswith(".hlo.txt"):
+            head = open(os.path.join(lowered_dir, f), "rb").read(64)
+            head.decode("utf-8")  # must be valid text
+
+
+def test_presets_cover_models():
+    models = {p["model"] for p in aot.PRESETS.values()}
+    assert models == {"mlp", "cnn", "transformer"}

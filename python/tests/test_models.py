@@ -1,0 +1,174 @@
+"""L2 model checks: shapes, packing round-trips, loss decrease, artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import build
+from compile.models import REGISTRY
+from compile.packing import ParamSpec
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL_CFGS = {
+    "mlp": dict(in_dim=16, hidden=32, depth=2, classes=5, batch=8),
+    "cnn": dict(image=8, chan_in=3, width=8, depth=2, classes=5, batch=4),
+    "transformer": dict(vocab=32, d_model=32, heads=2, layers=1, seq=8, batch=4),
+}
+
+
+def _batch(name, cfg, key=0):
+    r = np.random.default_rng(key)
+    if name == "mlp":
+        x = jnp.array(r.normal(size=(cfg["batch"], cfg["in_dim"])), jnp.float32)
+        y = jnp.array(r.integers(0, cfg["classes"], cfg["batch"]), jnp.int32)
+    elif name == "cnn":
+        x = jnp.array(
+            r.normal(size=(cfg["batch"], cfg["image"], cfg["image"], cfg["chan_in"])),
+            jnp.float32,
+        )
+        y = jnp.array(r.integers(0, cfg["classes"], cfg["batch"]), jnp.int32)
+    else:
+        x = jnp.array(
+            r.integers(0, cfg["vocab"], (cfg["batch"], cfg["seq"])), jnp.int32
+        )
+        y = jnp.array(
+            r.integers(0, cfg["vocab"], (cfg["batch"], cfg["seq"])), jnp.int32
+        )
+    return x, y
+
+
+class TestPacking:
+    def test_roundtrip(self):
+        s = ParamSpec()
+        s.add("a", (3, 4)).add("b", (5,)).add("c_b", (7,))
+        flat = s.init_flat(jax.random.PRNGKey(0))
+        assert flat.shape == (3 * 4 + 5 + 7,)
+        parts = s.unpack(flat)
+        assert parts["a"].shape == (3, 4)
+        assert parts["b"].shape == (5,)
+        # biases init to zero
+        np.testing.assert_array_equal(parts["c_b"], np.zeros(7))
+        # re-concatenation reproduces the flat vector
+        recon = jnp.concatenate([parts[n].reshape(-1) for n, _, _ in s.entries])
+        np.testing.assert_array_equal(recon, flat)
+
+    def test_offsets_disjoint_and_total(self):
+        s = ParamSpec()
+        s.add("x", (10, 10)).add("y", (100,)).add("z", (2, 3, 4))
+        offs = s.offsets()
+        spans = sorted((o, o + int(np.prod(sh))) for o, sh in offs.values())
+        for (a0, a1), (b0, _) in zip(spans, spans[1:]):
+            assert a1 == b0
+        assert spans[-1][1] == s.size
+
+    def test_ln_scale_init_ones(self):
+        s = ParamSpec()
+        s.add("l_ln_s", (4,)).add("l_ln_b", (4,))
+        flat = s.init_flat(jax.random.PRNGKey(1))
+        p = s.unpack(flat)
+        np.testing.assert_array_equal(p["l_ln_s"], np.ones(4))
+        np.testing.assert_array_equal(p["l_ln_b"], np.zeros(4))
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+class TestModels:
+    def test_param_count_positive(self, name):
+        fns = build(name, SMALL_CFGS[name])
+        assert fns["param_count"] > 0
+
+    def test_init_shapes(self, name):
+        fns = build(name, SMALL_CFGS[name])
+        p, m = fns["init"](jnp.int32(0))
+        assert p.shape == (fns["param_count"],)
+        assert m.shape == p.shape
+        assert float(jnp.abs(m).max()) == 0.0
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+    def test_init_seed_sensitivity(self, name):
+        fns = build(name, SMALL_CFGS[name])
+        p0, _ = fns["init"](jnp.int32(0))
+        p1, _ = fns["init"](jnp.int32(1))
+        assert not np.allclose(np.asarray(p0), np.asarray(p1))
+
+    def test_loss_decreases(self, name):
+        cfg = SMALL_CFGS[name]
+        fns = build(name, cfg)
+        p, m = fns["init"](jnp.int32(0))
+        x, y = _batch(name, cfg)
+        step = jax.jit(fns["train_step"])
+        first = None
+        for _ in range(15):
+            p, m, l = step(p, m, x, y, jnp.float32(0.05))
+            first = first if first is not None else float(l)
+        assert float(l) < first, f"{name}: {first} -> {float(l)}"
+        assert np.isfinite(float(l))
+
+    def test_step_k_equals_k_steps(self, name):
+        """The scan'd fast path must equal k sequential single steps."""
+        cfg = SMALL_CFGS[name]
+        fns = build(name, cfg)
+        p0, m0 = fns["init"](jnp.int32(3))
+        k = 3
+        xs, ys = zip(*[_batch(name, cfg, key=i) for i in range(k)])
+        xs = jnp.stack(xs)
+        ys = jnp.stack(ys)
+        lr = jnp.float32(0.02)
+        pk, mk, lk = jax.jit(fns["train_step_k"])(p0, m0, xs, ys, lr)
+        p, m = p0, m0
+        ls = []
+        for i in range(k):
+            p, m, l = jax.jit(fns["train_step"])(p, m, xs[i], ys[i], lr)
+            ls.append(float(l))
+        np.testing.assert_allclose(np.asarray(pk), np.asarray(p), rtol=2e-4, atol=2e-6)
+        np.testing.assert_allclose(float(lk), np.mean(ls), rtol=1e-5)
+
+    def test_eval_metrics(self, name):
+        cfg = SMALL_CFGS[name]
+        fns = build(name, cfg)
+        p, _ = fns["init"](jnp.int32(0))
+        x, y = _batch(name, cfg)
+        loss, correct = fns["eval_step"](p, x, y)
+        n_pred = y.size
+        assert 0.0 <= float(correct) <= n_pred
+        assert np.isfinite(float(loss))
+
+    def test_qavg_step_midpoint(self, name):
+        cfg = SMALL_CFGS[name]
+        fns = build(name, cfg)
+        p0, _ = fns["init"](jnp.int32(0))
+        p1, _ = fns["init"](jnp.int32(1))
+        avg = fns["qavg_step"](p0, p1, jnp.uint32(9))
+        mid = (np.asarray(p0) + np.asarray(p1)) / 2
+        # quantized average is within eps/2 of the true midpoint per coord
+        assert np.abs(np.asarray(avg) - mid).max() <= 1e-3
+
+
+class TestTransformerSpecifics:
+    def test_causality(self):
+        """Future tokens must not influence earlier logits."""
+        cfg = SMALL_CFGS["transformer"]
+        from compile.models import transformer as tr
+
+        spec_ = tr.spec(cfg)
+        flat = spec_.init_flat(jax.random.PRNGKey(0))
+        r = np.random.default_rng(0)
+        x1 = jnp.array(r.integers(0, cfg["vocab"], (1, cfg["seq"])), jnp.int32)
+        x2 = np.asarray(x1).copy()
+        x2[0, -1] = (x2[0, -1] + 1) % cfg["vocab"]  # change ONLY the last token
+        x2 = jnp.array(x2)
+        l1 = tr.forward(spec_, cfg, flat, x1)
+        l2 = tr.forward(spec_, cfg, flat, x2)
+        np.testing.assert_allclose(
+            np.asarray(l1)[0, :-1], np.asarray(l2)[0, :-1], atol=1e-5
+        )
+        assert not np.allclose(np.asarray(l1)[0, -1], np.asarray(l2)[0, -1])
+
+    def test_loss_at_init_near_uniform(self):
+        cfg = SMALL_CFGS["transformer"]
+        fns = build("transformer", cfg)
+        p, _ = fns["init"](jnp.int32(0))
+        x, y = _batch("transformer", cfg)
+        loss, _ = fns["eval_step"](p, x, y)
+        assert abs(float(loss) - np.log(cfg["vocab"])) < 0.5

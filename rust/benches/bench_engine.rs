@@ -1,0 +1,56 @@
+//! Coordinator engine throughput: full SwarmSGD interactions/second on the
+//! quadratic oracle (gradient cost ~ O(d), so this measures the L3 overhead:
+//! averaging, scratch copies, clock accounting, RNG, metrics).
+//! §Perf target: the engine must never bottleneck simulated 0.4 s batches —
+//! i.e. ≥ 10^5 interactions/s at d=1k.
+
+use swarm_sgd::bench::Bench;
+use swarm_sgd::coordinator::{
+    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn run_swarm(dim: usize, n: usize, t: u64, mode: AveragingMode) -> f64 {
+    let mut backend = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.1, 3);
+    let mut rng = Pcg64::seed(5);
+    let graph = Graph::build(Topology::Complete, n, &mut rng);
+    let cost = CostModel::deterministic(0.4);
+    let mut ctx = RunContext {
+        backend: &mut backend,
+        graph: &graph,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let cfg = SwarmConfig {
+        n,
+        local_steps: LocalSteps::Fixed(2),
+        mode,
+        lr: LrSchedule::Constant(0.02),
+        interactions: t,
+        seed: 1,
+        name: "bench".into(),
+    };
+    SwarmRunner::new(cfg, &mut ctx).run(&mut ctx).final_eval_loss
+}
+
+fn main() {
+    let mut b = Bench::default();
+    println!("== coordinator engine (interactions/s, oracle backend) ==");
+    for (dim, t) in [(64usize, 20_000u64), (1024, 5_000)] {
+        b.run_elems(&format!("swarm nonblocking d={dim} T={t}"), t, || {
+            run_swarm(dim, 16, t, AveragingMode::NonBlocking)
+        });
+        b.run_elems(&format!("swarm blocking    d={dim} T={t}"), t, || {
+            run_swarm(dim, 16, t, AveragingMode::Blocking)
+        });
+        b.run_elems(&format!("swarm quantized8  d={dim} T={t}"), t, || {
+            run_swarm(dim, 16, t, AveragingMode::Quantized { bits: 8, eps: 1e-2 })
+        });
+    }
+    b.write_csv("results/bench_engine.csv").ok();
+}

@@ -1,0 +1,98 @@
+//! End-to-end bench rows, one per paper table/figure family (reduced sizes
+//! so `cargo bench` stays tractable; the full regenerations live behind
+//! `swarm figure --id <id>`). These time the complete pipeline each figure
+//! exercises: backend + coordinator + metrics + CSV.
+
+use swarm_sgd::bench::Bench;
+use swarm_sgd::coordinator::LrSchedule;
+use swarm_sgd::figures::{run_arm, Arm, BackendSpec};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::topology::Topology;
+
+fn main() {
+    let mut b = Bench::quick();
+    let cost = CostModel::deterministic(0.4);
+    println!("== figure-harness end-to-end rows (oracle-reduced) ==");
+
+    // table1 family: accuracy-recovery arms
+    let spec = BackendSpec::Softmax { n_train: 2048, dim: 32, classes: 10, batch: 32, seed: 5 };
+    b.run("table1 row: swarm H=2 softmax n=8 T=256", || {
+        run_arm(
+            &Arm::swarm("s", 2, 256, 0.1),
+            &spec,
+            8,
+            Topology::Complete,
+            &cost,
+            7,
+            0,
+            false,
+        )
+        .unwrap()
+    });
+    b.run("table1 row: allreduce softmax n=8 T=64", || {
+        run_arm(
+            &Arm::baseline("a", "allreduce", 64, 0.1),
+            &spec,
+            8,
+            Topology::Complete,
+            &cost,
+            7,
+            0,
+            false,
+        )
+        .unwrap()
+    });
+
+    // table2/gamma family: theory runs on quadratic
+    let qspec = BackendSpec::Quadratic { dim: 16, spread: 1.0, sigma: 0.2, seed: 31 };
+    b.run("table2 row: swarm theory-lr n=8 T=4096", || {
+        run_arm(
+            &Arm {
+                lr: LrSchedule::Theory { n: 8, t: 4096 },
+                ..Arm::swarm("s", 2, 4096, 0.0)
+            },
+            &qspec,
+            8,
+            Topology::Complete,
+            &cost,
+            7,
+            512,
+            true,
+        )
+        .unwrap()
+    });
+
+    // fig2b/fig4 family: time-per-batch measurement arms
+    for algo in ["adpsgd", "dpsgd", "sgp", "localsgd"] {
+        b.run(&format!("fig2b row: {algo} n=16 T=64"), || {
+            run_arm(
+                &Arm::baseline(algo, algo, 64, 0.05),
+                &qspec,
+                16,
+                Topology::Complete,
+                &cost,
+                7,
+                0,
+                false,
+            )
+            .unwrap()
+        });
+    }
+
+    // fig6a family: 64-agent scaling row
+    b.run("fig6a row: swarm softmax n=64 T=512", || {
+        run_arm(
+            &Arm::swarm("s", 2, 512, 0.1),
+            &BackendSpec::Softmax { n_train: 8192, dim: 32, classes: 10, batch: 32, seed: 5 },
+            64,
+            Topology::Complete,
+            &cost,
+            7,
+            0,
+            false,
+        )
+        .unwrap()
+    });
+
+    b.write_csv("results/bench_figures.csv").ok();
+}

@@ -1,0 +1,42 @@
+//! Quantizer hot-path benches: encode / decode / stochastic rounding /
+//! bit packing throughput. §Perf target: ≥ 1 GB/s/core end-to-end codec.
+
+use swarm_sgd::bench::Bench;
+use swarm_sgd::quant::{decode, encode, pack_bits, quantize_unbiased, unpack_bits};
+use swarm_sgd::rngx::Pcg64;
+
+fn main() {
+    let mut b = Bench::default();
+    let d = 1 << 20; // 1M coords = 4 MB model
+    let bytes = (d * 4) as u64;
+    let mut rng = Pcg64::seed(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = x.iter().map(|v| v + 0.01).collect();
+
+    println!("== quant codec (d = 1M coords, 4 MB model) ==");
+    b.run_elems("quantize_unbiased 1M", bytes, || {
+        quantize_unbiased(&x, 1e-3, 7)
+    });
+    b.run_elems("encode 8-bit 1M", bytes, || encode(&x, 1e-3, 8, 7));
+    let msg = encode(&x, 1e-3, 8, 7);
+    b.run_elems("decode 8-bit 1M", bytes, || decode(&msg, &y).unwrap());
+    b.run_elems("roundtrip 8-bit 1M", bytes, || {
+        let m = encode(&x, 1e-3, 8, 7);
+        decode(&m, &y).unwrap()
+    });
+
+    let coords: Vec<u32> = (0..d as u32).map(|i| i & 0xFF).collect();
+    b.run_elems("pack_bits 8 1M", bytes, || pack_bits(&coords, 8));
+    let packed = pack_bits(&coords, 8);
+    b.run_elems("unpack_bits 8 1M", bytes, || unpack_bits(&packed, 8, d));
+    b.run_elems("pack_bits 4 1M", bytes, || pack_bits(&coords, 4));
+
+    // averaging primitive (memory-bound baseline for comparison)
+    let mut a2 = x.clone();
+    let mut b2 = y.clone();
+    b.run_elems("average_into_both 1M", bytes * 2, || {
+        swarm_sgd::coordinator::average_into_both(&mut a2, &mut b2)
+    });
+
+    b.write_csv("results/bench_quant.csv").ok();
+}

@@ -1,0 +1,34 @@
+//! Topology/spectral benches: graph construction, λ₂ eigensolve (O(n³)
+//! Jacobi — fine for experiment sizes), edge sampling (the per-interaction
+//! hot path).
+
+use swarm_sgd::bench::Bench;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn main() {
+    let mut b = Bench::default();
+    println!("== topology ==");
+    for n in [16usize, 64, 128] {
+        b.run(&format!("lambda2 complete n={n}"), || {
+            Graph::complete(n).lambda2()
+        });
+    }
+    for n in [64usize, 256] {
+        let mut rng = Pcg64::seed(3);
+        b.run(&format!("build random_regular(6) n={n}"), || {
+            Graph::random_regular(n, 6, &mut rng)
+        });
+    }
+    let g = Graph::complete(64);
+    let mut rng = Pcg64::seed(5);
+    b.run_elems("sample_edge x1000 (K64)", 1000, || {
+        let mut acc = 0usize;
+        for _ in 0..1000 {
+            acc ^= g.sample_edge(&mut rng).0;
+        }
+        acc
+    });
+    b.run("random_matching (K64)", || g.random_matching(&mut rng));
+    b.write_csv("results/bench_topology.csv").ok();
+}

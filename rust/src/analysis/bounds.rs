@@ -1,0 +1,117 @@
+//! Closed-form evaluators for the paper's convergence upper bounds —
+//! used by the `table2` harness to print theory-vs-measured rows.
+
+/// Parameters shared by both theorems.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// number of agents n
+    pub n: usize,
+    /// graph degree r
+    pub r: f64,
+    /// Laplacian spectral gap λ₂
+    pub lambda2: f64,
+    /// mean local steps H
+    pub h: f64,
+    /// smoothness L
+    pub l: f64,
+    /// total interactions T
+    pub t: u64,
+    /// f(μ₀) − f(x*)
+    pub f_gap: f64,
+}
+
+/// Theorem 4.1 RHS (second-moment bound M², geometric H):
+/// 4(f(μ₀)−f*)/(√T·H) + 2304·H²·max(1,L²)·M²/√T · (r²/λ₂² + 1).
+pub fn theorem41_bound(p: &BoundParams, m_sq: f64) -> f64 {
+    let sqrt_t = (p.t as f64).sqrt();
+    let topo = p.r * p.r / (p.lambda2 * p.lambda2) + 1.0;
+    4.0 * p.f_gap / (sqrt_t * p.h)
+        + 2304.0 * p.h * p.h * p.l.max(1.0).powi(2) * m_sq / sqrt_t * topo
+}
+
+/// Theorem 4.2 RHS (variance σ² + heterogeneity ρ², fixed H):
+/// (f(μ₀)−f*)/(√T·H) + 376·H²·max(1,L²)·(σ²+4ρ²)/√T · (r²/λ₂² + 1).
+pub fn theorem42_bound(p: &BoundParams, sigma_sq: f64, rho_sq: f64) -> f64 {
+    let sqrt_t = (p.t as f64).sqrt();
+    let topo = p.r * p.r / (p.lambda2 * p.lambda2) + 1.0;
+    p.f_gap / (sqrt_t * p.h)
+        + 376.0 * p.h * p.h * p.l.max(1.0).powi(2) * (sigma_sq + 4.0 * rho_sq) / sqrt_t * topo
+}
+
+/// Theorem 4.1 admissibility: T ≥ n⁴.
+pub fn theorem41_t_ok(p: &BoundParams) -> bool {
+    p.t as f64 >= (p.n as f64).powi(4)
+}
+
+/// Theorem 4.2 admissibility: T ≥ 57600·n⁴H²·max(1,L²)·(r²/λ₂²+1)².
+pub fn theorem42_t_ok(p: &BoundParams) -> bool {
+    let topo = p.r * p.r / (p.lambda2 * p.lambda2) + 1.0;
+    p.t as f64
+        >= 57600.0 * (p.n as f64).powi(4) * p.h * p.h * p.l.max(1.0).powi(2) * topo * topo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> BoundParams {
+        BoundParams {
+            n: 8,
+            r: 7.0,
+            lambda2: 8.0,
+            h: 2.0,
+            l: 1.0,
+            t: 10_000,
+            f_gap: 1.0,
+        }
+    }
+
+    #[test]
+    fn bound_decreases_in_t() {
+        let mut p = base();
+        let b1 = theorem41_bound(&p, 1.0);
+        p.t = 1_000_000;
+        let b2 = theorem41_bound(&p, 1.0);
+        assert!(b2 < b1);
+        // O(1/sqrt(T)) scaling
+        assert!((b1 / b2 - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn first_term_benefits_from_h_second_pays_h_squared() {
+        let p1 = BoundParams { h: 1.0, ..base() };
+        let p4 = BoundParams { h: 4.0, ..base() };
+        let sqrt_t = (p1.t as f64).sqrt();
+        let first_1 = 4.0 * p1.f_gap / (sqrt_t * p1.h);
+        let first_4 = 4.0 * p4.f_gap / (sqrt_t * p4.h);
+        assert!((first_1 / first_4 - 4.0).abs() < 1e-9);
+        // full bound grows if variance dominates
+        assert!(theorem41_bound(&p4, 1.0) > theorem41_bound(&p1, 1.0));
+    }
+
+    #[test]
+    fn better_connectivity_tightens_bound() {
+        let ring = BoundParams { r: 2.0, lambda2: 0.1, ..base() };
+        let complete = BoundParams { r: 7.0, lambda2: 8.0, ..base() };
+        assert!(theorem41_bound(&complete, 1.0) < theorem41_bound(&ring, 1.0));
+    }
+
+    #[test]
+    fn admissibility_thresholds() {
+        let p = BoundParams { t: 4096, ..base() };
+        assert!(theorem41_t_ok(&p)); // 8^4 = 4096
+        let p2 = BoundParams { t: 4095, ..base() };
+        assert!(!theorem41_t_ok(&p2));
+        assert!(!theorem42_t_ok(&p)); // far stricter
+    }
+
+    #[test]
+    fn theorem42_uses_variance_not_second_moment() {
+        let p = base();
+        let low_var = theorem42_bound(&p, 0.01, 0.0);
+        let high_var = theorem42_bound(&p, 1.0, 0.0);
+        assert!(low_var < high_var);
+        let hetero = theorem42_bound(&p, 0.01, 1.0);
+        assert!(hetero > low_var);
+    }
+}

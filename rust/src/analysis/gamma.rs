@@ -1,0 +1,150 @@
+//! Γ_t = Σ_i ‖X_t^i − μ_t‖² — the paper's load-balancing potential (Eq. 6).
+//!
+//! The whole analysis rests on Γ_t staying bounded *independently of t*
+//! (Lemma F.3: E[Γ_t] ≤ (40r/λ₂ + 80r²/λ₂²)·n·η²H²M²). The tracker computes
+//! it exactly over all agents; the `gamma` figure harness plots it against
+//! the lemma's bound.
+
+/// Coordinate-wise mean of the agents' models.
+pub fn mean_model(models: &[Vec<f32>]) -> Vec<f64> {
+    let n = models.len();
+    assert!(n > 0);
+    let d = models[0].len();
+    let mut mu = vec![0.0f64; d];
+    for m in models {
+        debug_assert_eq!(m.len(), d);
+        for (a, &v) in mu.iter_mut().zip(m.iter()) {
+            *a += v as f64;
+        }
+    }
+    for a in &mut mu {
+        *a /= n as f64;
+    }
+    mu
+}
+
+/// Γ = Σ_i ‖X^i − μ‖².
+pub fn gamma_potential(models: &[Vec<f32>]) -> f64 {
+    let mu = mean_model(models);
+    models
+        .iter()
+        .map(|m| {
+            m.iter()
+                .zip(&mu)
+                .map(|(&x, &u)| (x as f64 - u).powi(2))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+/// Incremental tracker: records (t, Γ_t, ‖μ_t‖) samples during a run.
+#[derive(Default)]
+pub struct GammaTracker {
+    pub samples: Vec<(u64, f64)>,
+    pub mu_norms: Vec<(u64, f64)>,
+}
+
+impl GammaTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: u64, models: &[Vec<f32>]) {
+        let g = gamma_potential(models);
+        let mu = mean_model(models);
+        let norm = mu.iter().map(|v| v * v).sum::<f64>().sqrt();
+        self.samples.push((t, g));
+        self.mu_norms.push((t, norm));
+    }
+
+    pub fn max_gamma(&self) -> f64 {
+        self.samples.iter().map(|&(_, g)| g).fold(0.0, f64::max)
+    }
+
+    /// Mean Γ over the second half of the run (steady state).
+    pub fn steady_state_gamma(&self) -> f64 {
+        let half = self.samples.len() / 2;
+        let tail = &self.samples[half..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|&(_, g)| g).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Lemma F.3 upper bound: (40r/λ₂ + 80r²/λ₂²)·n·η²·H²·M².
+pub fn lemma_f3_bound(r: f64, lambda2: f64, n: usize, eta: f64, h: f64, m_sq: f64) -> f64 {
+    (40.0 * r / lambda2 + 80.0 * r * r / (lambda2 * lambda2))
+        * n as f64
+        * eta
+        * eta
+        * h
+        * h
+        * m_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_models_have_zero_gamma() {
+        let models = vec![vec![1.0f32, 2.0, 3.0]; 5];
+        assert_eq!(gamma_potential(&models), 0.0);
+    }
+
+    #[test]
+    fn gamma_known_value() {
+        // two models at ±1 in 1-D: μ=0, Γ = 1 + 1 = 2
+        let models = vec![vec![1.0f32], vec![-1.0f32]];
+        assert!((gamma_potential(&models) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_invariant_to_common_shift() {
+        let a = vec![vec![0.5f32, -1.0], vec![2.0, 0.25], vec![-0.75, 3.0]];
+        let b: Vec<Vec<f32>> = a
+            .iter()
+            .map(|m| m.iter().map(|v| v + 10.0).collect())
+            .collect();
+        assert!((gamma_potential(&a) - gamma_potential(&b)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn averaging_two_models_decreases_gamma() {
+        // the load-balancing contraction that drives Lemma F.1
+        let mut models = vec![
+            vec![4.0f32, 0.0],
+            vec![0.0, 4.0],
+            vec![-4.0, 0.0],
+            vec![0.0, -4.0],
+        ];
+        let before = gamma_potential(&models);
+        let avg: Vec<f32> = models[0]
+            .iter()
+            .zip(&models[1])
+            .map(|(a, b)| (a + b) / 2.0)
+            .collect();
+        models[0] = avg.clone();
+        models[1] = avg;
+        assert!(gamma_potential(&models) < before);
+    }
+
+    #[test]
+    fn tracker_steady_state() {
+        let mut t = GammaTracker::new();
+        let m1 = vec![vec![0.0f32], vec![2.0f32]];
+        for i in 0..10 {
+            t.record(i, &m1);
+        }
+        assert!((t.steady_state_gamma() - 2.0).abs() < 1e-9);
+        assert_eq!(t.max_gamma(), 2.0);
+    }
+
+    #[test]
+    fn f3_bound_monotone_in_h() {
+        let b1 = lemma_f3_bound(4.0, 2.0, 16, 0.01, 1.0, 1.0);
+        let b4 = lemma_f3_bound(4.0, 2.0, 16, 0.01, 4.0, 1.0);
+        assert!((b4 / b1 - 16.0).abs() < 1e-9); // quadratic in H
+    }
+}

@@ -1,0 +1,10 @@
+//! Theory instrumentation: the Γ_t potential and the Theorem 4.1/4.2 bound
+//! evaluators (DESIGN.md S19).
+
+mod bounds;
+mod gamma;
+mod ratefit;
+
+pub use bounds::{theorem41_bound, theorem41_t_ok, theorem42_bound, theorem42_t_ok, BoundParams};
+pub use gamma::{gamma_potential, lemma_f3_bound, mean_model, GammaTracker};
+pub use ratefit::{fit_power_law, gap_samples};

@@ -1,0 +1,76 @@
+//! The compute-backend abstraction every coordinator algorithm runs against.
+//!
+//! Two families implement it (DESIGN.md §3 "dual backend"):
+//!   * [`crate::runtime::XlaBackend`] — the real three-layer path: per-agent
+//!     minibatches fed into the AOT-compiled JAX+Pallas train step via PJRT.
+//!   * [`crate::grad`] oracles — pure-Rust objectives (quadratic, logistic,
+//!     softmax-linear) for theory figures, property tests, and large-n
+//!     sweeps where XLA dispatch would dominate.
+//!
+//! The coordinator only ever sees flat `f32` model vectors — the paper's
+//! model-space view (models are points in R^d that get averaged).
+
+/// Held-out evaluation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    /// classification accuracy in [0,1] (token accuracy for LMs);
+    /// NaN when the objective has no accuracy notion (quadratic).
+    pub accuracy: f64,
+}
+
+/// A training backend: owns the data shards and the step/eval computation.
+/// `agent` indexes the shard (non-iid support); parameters live with the
+/// caller so the coordinator fully controls averaging/quantization.
+pub trait TrainBackend {
+    /// Dimension `d` of the flat model vector.
+    fn param_count(&self) -> usize;
+
+    /// Fresh (params, momentum) for a given seed. All agents start from the
+    /// same point in the paper (x_0 arbitrary but common); callers pass the
+    /// same seed to every agent for that behaviour.
+    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>);
+
+    /// One local SGD step for `agent` on its own shard: updates `params`
+    /// and `mom` in place, returns the minibatch training loss.
+    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64;
+
+    /// `h` consecutive local steps (the paper's local-update phase).
+    /// Backends may fuse these (the XLA backend dispatches a single
+    /// lax.scan executable per `k` steps); the default just loops.
+    /// Returns the last minibatch loss.
+    fn step_burst(
+        &mut self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        h: u64,
+    ) -> f64 {
+        let mut last = f64::NAN;
+        for _ in 0..h {
+            last = self.step(agent, params, mom, lr);
+        }
+        last
+    }
+
+    /// Evaluate `params` on the backend's held-out set.
+    fn eval(&mut self, params: &[f32]) -> EvalResult;
+
+    /// Exact/full training objective `f(x)` if cheaply available
+    /// (oracles: yes; XLA models: sampled estimate).
+    fn full_loss(&mut self, params: &[f32]) -> f64 {
+        self.eval(params).loss
+    }
+
+    /// Squared norm of the true gradient at `params`, if the backend can
+    /// compute it (theory figures); `None` otherwise.
+    fn grad_norm_sq(&mut self, _params: &[f32]) -> Option<f64> {
+        None
+    }
+
+    /// Fractional data epochs consumed by `agent` so far.
+    fn epochs(&self, _agent: usize) -> f64 {
+        0.0
+    }
+}

@@ -1,0 +1,185 @@
+//! Minimal criterion-style benchmark harness (offline environment: the
+//! criterion crate is unavailable, so `benches/*.rs` use `harness = false`
+//! and drive this module instead).
+//!
+//! Method: warmup, then timed batches until both a minimum number of
+//! samples and a minimum total time are reached; reports median, mean, and
+//! a robust spread (IQR).  Deterministic workloads + median keep the
+//! numbers stable enough for the §Perf before/after log.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p25: Duration,
+    pub p75: Duration,
+    /// optional throughput basis (elements processed per iteration)
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    /// elements/second at the median, if a basis was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t > 1e9 => format!("  {:7.2} Gelem/s", t / 1e9),
+            Some(t) if t > 1e6 => format!("  {:7.2} Melem/s", t / 1e6),
+            Some(t) if t > 1e3 => format!("  {:7.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:7.2} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<40} median {:>12?}  mean {:>12?}  [{:?} .. {:?}] n={}{}",
+            self.name, self.median, self.mean, self.p25, self.p75, self.samples, tp
+        )
+    }
+}
+
+/// Benchmark runner with tunable budgets.
+pub struct Bench {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_secs(1),
+            min_samples: 10,
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            min_time: Duration::from_millis(200),
+            min_samples: 5,
+            max_samples: 50,
+            ..Self::default()
+        }
+    }
+
+    /// Time `f`, which should do one unit of work and return something to
+    /// keep alive (prevented from optimizing away via `black_box`).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    /// Like [`Bench::run`] with a throughput basis.
+    pub fn run_elems<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // sample
+        let mut times = Vec::with_capacity(self.min_samples * 2);
+        let begin = Instant::now();
+        while (times.len() < self.min_samples || begin.elapsed() < self.min_time)
+            && times.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let n = times.len();
+        let mean = times.iter().sum::<Duration>() / n as u32;
+        let r = BenchResult {
+            name: name.to_string(),
+            samples: n,
+            median: times[n / 2],
+            mean,
+            p25: times[n / 4],
+            p75: times[3 * n / 4],
+            elements,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write accumulated results to a CSV (for EXPERIMENTS.md §Perf).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = crate::output::CsvWriter::create(
+            path,
+            &["name", "median_ns", "mean_ns", "p25_ns", "p75_ns", "samples", "throughput"],
+        )?;
+        for r in &self.results {
+            w.row_mixed(&[
+                crate::output::CsvVal::S(r.name.clone()),
+                crate::output::CsvVal::I(r.median.as_nanos() as i64),
+                crate::output::CsvVal::I(r.mean.as_nanos() as i64),
+                crate::output::CsvVal::I(r.p25.as_nanos() as i64),
+                crate::output::CsvVal::I(r.p75.as_nanos() as i64),
+                crate::output::CsvVal::I(r.samples as i64),
+                crate::output::CsvVal::F(r.throughput().unwrap_or(f64::NAN)),
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 20,
+            results: Vec::new(),
+        };
+        let r = b
+            .run_elems("spin", 1000, || {
+                let mut s = 0u64;
+                for i in 0..1000u64 {
+                    s = s.wrapping_add(i * i);
+                }
+                s
+            })
+            .clone();
+        assert!(r.samples >= 3);
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.p25 <= r.median && r.median <= r.p75);
+    }
+}

@@ -1,0 +1,155 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap).
+//!
+//! Grammar: `swarm <subcommand> [--flag value] [--bool-flag] ...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    /// positional arguments after the subcommand
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `args` (excluding argv[0]). Flags may be `--k v` or `--k=v`;
+    /// a flag followed by another flag (or end) is boolean `true`.
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                cli.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            cli.flags.insert(flag.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => {
+                            cli.flags.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                return Err(format!("unknown short flag '{a}' (use --long flags)"));
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("flag --{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// All `--set k=v` style repeated overrides (we accept `--set` once with
+    /// comma separation: `--set n=8,h=3`).
+    pub fn overrides(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        if let Some(sets) = self.get("set") {
+            for pair in sets.split(',') {
+                if let Some((k, v)) = pair.split_once('=') {
+                    out.push((k.trim().to_string(), v.trim().to_string()));
+                }
+            }
+        }
+        out
+    }
+}
+
+pub const USAGE: &str = "\
+swarm — SwarmSGD: decentralized SGD with asynchronous, local & quantized updates
+        (reproduction of Nadiradze et al., NeurIPS 2021)
+
+USAGE:
+  swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
+                train with a given algorithm/backend; keys: algo, preset, n,
+                topology, interactions, h, geometric, mode, quant_bits,
+                quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
+                shard, data_per_agent, artifacts_dir, batch_time, out_csv
+  swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
+                      fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
+                [--quick] [--out results]
+                regenerate a paper table/figure (prints rows + writes CSV)
+  swarm inspect [--artifacts artifacts]
+                list compiled artifacts and their metadata
+  swarm topo    --n <n> [--topology complete|ring|torus|hypercube|random<r>]
+                print graph stats (degree, lambda2, theory factors)
+  swarm help    show this message
+
+EXAMPLES:
+  swarm train --set algo=swarm,preset=mlp_s,n=8,h=3,interactions=400
+  swarm train --set preset=oracle:quadratic,algo=adpsgd,n=16
+  swarm figure --id table1 --quick
+  swarm figure --id all --out results
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &[&str]) -> Cli {
+        Cli::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = p(&["figure", "--id", "table1", "--quick"]);
+        assert_eq!(c.subcommand, "figure");
+        assert_eq!(c.get("id"), Some("table1"));
+        assert!(c.has("quick"));
+        assert!(!c.has("nope"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let c = p(&["train", "--config=x.ini", "--set", "n=8,h=2"]);
+        assert_eq!(c.get("config"), Some("x.ini"));
+        assert_eq!(
+            c.overrides(),
+            vec![("n".into(), "8".into()), ("h".into(), "2".into())]
+        );
+    }
+
+    #[test]
+    fn typed_flags() {
+        let c = p(&["topo", "--n", "16"]);
+        assert_eq!(c.parse_flag::<usize>("n").unwrap(), Some(16));
+        assert!(c.parse_flag::<usize>("missing").unwrap().is_none());
+        let bad = p(&["topo", "--n", "xyz"]);
+        assert!(bad.parse_flag::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn rejects_short_flags() {
+        let args: Vec<String> = vec!["train".into(), "-x".into()];
+        assert!(Cli::parse(&args).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal INI parser: `[section]` headers, `key = value` pairs,
+//! `#`/`;` comments, blank lines.  Order-preserving.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct IniSection {
+    pub name: String,
+    pub entries: HashMap<String, String>,
+}
+
+impl IniSection {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
+        self.get(key)
+            .ok_or_else(|| format!("[{}] missing key '{key}'", self.name))?
+            .parse()
+            .map_err(|_| format!("[{}] key '{key}' unparseable", self.name))
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct IniDoc {
+    pub sections: Vec<IniSection>,
+}
+
+impl IniDoc {
+    pub fn section(&self, name: &str) -> Option<&IniSection> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+}
+
+/// Parse INI text. Keys outside any `[section]` go into a section named "".
+pub fn parse_ini(text: &str) -> Result<IniDoc, String> {
+    let mut doc = IniDoc::default();
+    let mut current = IniSection { name: String::new(), entries: HashMap::new() };
+    let mut started = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            if started || !current.entries.is_empty() {
+                doc.sections.push(std::mem::take(&mut current));
+            }
+            current.name = name.trim().to_string();
+            started = true;
+        } else if let Some((k, v)) = line.split_once('=') {
+            current
+                .entries
+                .insert(k.trim().to_string(), v.trim().to_string());
+        } else {
+            return Err(format!("line {}: expected 'key = value', got '{line}'", lineno + 1));
+        }
+    }
+    if started || !current.entries.is_empty() {
+        doc.sections.push(current);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = parse_ini(
+            "# comment\n[alpha]\nx = 1\nname = hello world\n\n[beta]\ny = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.sections.len(), 2);
+        let a = doc.section("alpha").unwrap();
+        assert_eq!(a.parse::<i32>("x"), Some(1));
+        assert_eq!(a.get("name"), Some("hello world"));
+        let b = doc.section("beta").unwrap();
+        assert_eq!(b.parse::<f64>("y"), Some(2.5));
+        assert!(doc.section("gamma").is_none());
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let doc = parse_ini("k = v\n[s]\na = b\n").unwrap();
+        assert_eq!(doc.sections[0].name, "");
+        assert_eq!(doc.sections[0].get("k"), Some("v"));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_ini("[unterminated\n").is_err());
+        assert!(parse_ini("not a kv pair\n").is_err());
+    }
+
+    #[test]
+    fn require_errors() {
+        let doc = parse_ini("[s]\nx = notanumber\n").unwrap();
+        let s = doc.section("s").unwrap();
+        assert!(s.require::<i64>("x").is_err());
+        assert!(s.require::<i64>("missing").is_err());
+        assert_eq!(s.require::<String>("x").unwrap(), "notanumber");
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: a dependency-free INI-subset parser (used for both run
+//! configs and the artifact manifest) plus typed run-configuration structs
+//! with named presets.
+
+mod ini;
+mod run;
+
+pub use ini::{parse_ini, IniDoc, IniSection};
+pub use run::{DataKind, RunConfig, ShardMode};

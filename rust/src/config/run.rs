@@ -1,0 +1,254 @@
+//! Typed run configuration + parsing from INI files / CLI overrides.
+
+use super::ini::parse_ini;
+use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule};
+use crate::netmodel::CostModel;
+use crate::topology::Topology;
+
+/// How the training data is partitioned across agents (paper §5 / Appx H).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShardMode {
+    Iid,
+    ByLabel,
+    Dirichlet(f64),
+}
+
+/// Which input modality the chosen model consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    Vector,
+    Image,
+    Tokens,
+}
+
+/// Complete description of one training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// swarm | adpsgd | dpsgd | sgp | localsgd | allreduce
+    pub algo: String,
+    /// artifact preset (mlp_s, cnn_s, cnn_m, transformer_s, transformer_m)
+    /// or oracle:quadratic / oracle:softmax / oracle:logistic
+    pub preset: String,
+    pub n: usize,
+    /// complete | ring | torus | hypercube | random<r> (e.g. random4)
+    pub topology: String,
+    /// total pairwise interactions (gossip) or rounds (synchronous)
+    pub interactions: u64,
+    /// mean local steps H
+    pub h: f64,
+    /// geometric H (Theorem 4.1) vs fixed H (Theorem 4.2)
+    pub geometric: bool,
+    /// blocking | nonblocking | quantized
+    pub mode: String,
+    pub quant_bits: u32,
+    pub quant_eps: f32,
+    pub lr: f32,
+    /// constant | step | theory
+    pub lr_schedule: String,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub track_gamma: bool,
+    pub shard: ShardMode,
+    /// training examples per agent (synthetic generation)
+    pub data_per_agent: usize,
+    pub artifacts_dir: String,
+    /// simulated compute seconds per local step
+    pub batch_time: f64,
+    pub jitter: f64,
+    /// results CSV path ("" = don't write)
+    pub out_csv: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            algo: "swarm".into(),
+            preset: "mlp_s".into(),
+            n: 8,
+            topology: "complete".into(),
+            interactions: 400,
+            h: 2.0,
+            geometric: false,
+            mode: "nonblocking".into(),
+            quant_bits: 8,
+            quant_eps: 1e-3,
+            lr: 0.05,
+            lr_schedule: "constant".into(),
+            seed: 42,
+            eval_every: 50,
+            track_gamma: false,
+            shard: ShardMode::Iid,
+            data_per_agent: 512,
+            artifacts_dir: "artifacts".into(),
+            batch_time: 0.4,
+            jitter: 0.05,
+            out_csv: String::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from INI text (single `[run]` section or top-level keys).
+    pub fn from_ini(text: &str) -> Result<Self, String> {
+        let doc = parse_ini(text)?;
+        let sec = doc
+            .section("run")
+            .or_else(|| doc.sections.first())
+            .ok_or("empty config")?;
+        let mut c = Self::default();
+        for (k, v) in &sec.entries {
+            c.set(k, v)?;
+        }
+        Ok(c)
+    }
+
+    /// Apply one `key=value` override (CLI `--set k=v` or INI entry).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |k: &str, v: &str| format!("bad value '{v}' for key '{k}'");
+        match key {
+            "algo" => self.algo = value.into(),
+            "preset" => self.preset = value.into(),
+            "n" => self.n = value.parse().map_err(|_| bad(key, value))?,
+            "topology" => self.topology = value.into(),
+            "interactions" | "rounds" => {
+                self.interactions = value.parse().map_err(|_| bad(key, value))?
+            }
+            "h" | "local_steps" => self.h = value.parse().map_err(|_| bad(key, value))?,
+            "geometric" => self.geometric = value.parse().map_err(|_| bad(key, value))?,
+            "mode" => self.mode = value.into(),
+            "quant_bits" => self.quant_bits = value.parse().map_err(|_| bad(key, value))?,
+            "quant_eps" => self.quant_eps = value.parse().map_err(|_| bad(key, value))?,
+            "lr" => self.lr = value.parse().map_err(|_| bad(key, value))?,
+            "lr_schedule" => self.lr_schedule = value.into(),
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "eval_every" => self.eval_every = value.parse().map_err(|_| bad(key, value))?,
+            "track_gamma" => {
+                self.track_gamma = value.parse().map_err(|_| bad(key, value))?
+            }
+            "shard" => {
+                self.shard = match value {
+                    "iid" => ShardMode::Iid,
+                    "label" => ShardMode::ByLabel,
+                    v if v.starts_with("dirichlet:") => {
+                        let a = v["dirichlet:".len()..]
+                            .parse()
+                            .map_err(|_| bad(key, value))?;
+                        ShardMode::Dirichlet(a)
+                    }
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "data_per_agent" => {
+                self.data_per_agent = value.parse().map_err(|_| bad(key, value))?
+            }
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "batch_time" => self.batch_time = value.parse().map_err(|_| bad(key, value))?,
+            "jitter" => self.jitter = value.parse().map_err(|_| bad(key, value))?,
+            "out_csv" => self.out_csv = value.into(),
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    pub fn topology_enum(&self) -> Result<Topology, String> {
+        Ok(match self.topology.as_str() {
+            "complete" => Topology::Complete,
+            "ring" => Topology::Ring,
+            "torus" => Topology::Torus,
+            "hypercube" => Topology::Hypercube,
+            t if t.starts_with("random") => {
+                let r = t["random".len()..]
+                    .parse()
+                    .map_err(|_| format!("bad topology '{t}' (want e.g. random4)"))?;
+                Topology::RandomRegular(r)
+            }
+            t => return Err(format!("unknown topology '{t}'")),
+        })
+    }
+
+    pub fn local_steps(&self) -> LocalSteps {
+        if self.geometric {
+            LocalSteps::Geometric(self.h)
+        } else {
+            LocalSteps::Fixed(self.h.round().max(1.0) as u64)
+        }
+    }
+
+    pub fn averaging_mode(&self) -> Result<AveragingMode, String> {
+        Ok(match self.mode.as_str() {
+            "blocking" => AveragingMode::Blocking,
+            "nonblocking" => AveragingMode::NonBlocking,
+            "quantized" => AveragingMode::Quantized {
+                bits: self.quant_bits,
+                eps: self.quant_eps,
+            },
+            m => return Err(format!("unknown averaging mode '{m}'")),
+        })
+    }
+
+    pub fn lr_schedule_enum(&self) -> Result<LrSchedule, String> {
+        Ok(match self.lr_schedule.as_str() {
+            "constant" => LrSchedule::Constant(self.lr),
+            "step" => LrSchedule::StepDecay { base: self.lr, total: self.interactions },
+            "theory" => LrSchedule::Theory { n: self.n, t: self.interactions },
+            s => return Err(format!("unknown lr schedule '{s}'")),
+        })
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        CostModel {
+            batch_time: self.batch_time,
+            jitter: self.jitter,
+            ..CostModel::default()
+        }
+    }
+
+    pub fn is_oracle(&self) -> bool {
+        self.preset.starts_with("oracle:")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_consistent() {
+        let c = RunConfig::default();
+        assert!(c.topology_enum().is_ok());
+        assert!(c.averaging_mode().is_ok());
+        assert!(c.lr_schedule_enum().is_ok());
+        assert!(!c.is_oracle());
+    }
+
+    #[test]
+    fn ini_roundtrip() {
+        let c = RunConfig::from_ini(
+            "[run]\nalgo = adpsgd\nn = 16\ntopology = random4\nh = 3\n\
+             mode = quantized\nquant_bits = 6\nshard = dirichlet:0.3\nlr = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(c.algo, "adpsgd");
+        assert_eq!(c.n, 16);
+        assert_eq!(c.topology_enum().unwrap(), Topology::RandomRegular(4));
+        assert_eq!(c.shard, ShardMode::Dirichlet(0.3));
+        match c.averaging_mode().unwrap() {
+            AveragingMode::Quantized { bits, .. } => assert_eq!(bits, 6),
+            m => panic!("wrong mode {m:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("definitely_not_a_key", "1").is_err());
+        assert!(c.set("n", "not_a_number").is_err());
+    }
+
+    #[test]
+    fn oracle_detection() {
+        let mut c = RunConfig::default();
+        c.preset = "oracle:quadratic".into();
+        assert!(c.is_oracle());
+    }
+}

@@ -1,0 +1,89 @@
+//! D-PSGD baseline (Lian et al. [27]): synchronous decentralized SGD.
+//! Every round each node takes one SGD step, then the nodes average along a
+//! random matching of the interaction graph (a doubly-stochastic, symmetric
+//! mixing step — the sequence-of-perfect-matchings gossip model the paper's
+//! related-work section describes).
+
+use super::{finalize, record_round_point, step_all, RoundsConfig};
+use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+
+pub struct DPsgdRunner {
+    pub cluster: Cluster,
+    pub clocks: NodeClocks,
+    cfg: RoundsConfig,
+}
+
+impl DPsgdRunner {
+    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
+        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
+        Self { clocks: NodeClocks::new(cfg.n), cluster, cfg }
+    }
+
+    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
+        let mut m = RunMetrics::new(&self.cfg.name);
+        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
+        for round in 1..=self.cfg.rounds {
+            let lr = self.cfg.lr.at(round);
+            step_all(&mut self.cluster, ctx, lr, &mut self.clocks);
+            // average along a random matching; pairs exchange in parallel,
+            // but the round is synchronous: barrier to the slowest, then one
+            // exchange latency for everyone matched.
+            let matching = ctx.graph.random_matching(ctx.rng);
+            for &(u, v) in &matching {
+                let (a, b) = self.cluster.pair_mut(u, v);
+                crate::coordinator::average_into_both(&mut a.params, &mut b.params);
+                a.comm.copy_from_slice(&a.params);
+                b.comm.copy_from_slice(&b.params);
+                m.total_bits += 2 * 8 * bytes;
+            }
+            self.clocks.barrier_all(ctx.cost.exchange_time(bytes));
+            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
+            {
+                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, None);
+            }
+        }
+        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::QuadraticOracle;
+    use crate::netmodel::CostModel;
+    use crate::rngx::Pcg64;
+    use crate::topology::{Graph, Topology};
+
+    #[test]
+    fn dpsgd_converges_on_quadratic() {
+        let n = 8;
+        let mut backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let backend_f_star = backend.f_star();
+        let gap0 = {
+            use crate::backend::TrainBackend;
+            let (p, _) = backend.init(0);
+            backend.full_loss(&p) - backend_f_star
+        };
+        let mut rng = Pcg64::seed(2);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        let cost = CostModel::deterministic(0.1);
+        let mut ctx = RunContext {
+            backend: &mut backend,
+            graph: &graph,
+            cost: &cost,
+            rng: &mut rng,
+            eval_every: 50,
+            track_gamma: true,
+        };
+        let cfg = RoundsConfig::new(n, 300, 0.05, "dpsgd");
+        let mut r = DPsgdRunner::new(cfg, &mut ctx);
+        let m = r.run(&mut ctx);
+        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        assert!(gap < 0.15, "normalized gap {gap}");
+        // models stay concentrated (gossip mixing)
+        let gamma_last = m.curve.last().unwrap().gamma;
+        assert!(gamma_last.is_finite());
+        assert!(gamma_last < 5.0, "gamma={gamma_last}");
+    }
+}

@@ -1,0 +1,190 @@
+//! SGP baseline (Assran et al. [5]): Stochastic Gradient Push.
+//!
+//! Push-sum over a directed gossip: each node holds a value `x` and a
+//! weight `w` (init 1).  Per round, after one SGD step on its de-biased
+//! model `z = x/w`, node `i` halves `(x, w)` and pushes one half to a
+//! uniformly chosen out-neighbor; incoming shares are accumulated.  The
+//! de-biased models converge to consensus while Σx and Σw are conserved —
+//! push-sum's defining invariant (tested below).  Run with overlap factor 1
+//! as the paper configures SGP.
+
+use super::{finalize, record_round_point, RoundsConfig};
+use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+
+pub struct SgpRunner {
+    pub cluster: Cluster,
+    pub clocks: NodeClocks,
+    /// push-sum weights w_i
+    pub weights: Vec<f64>,
+    cfg: RoundsConfig,
+}
+
+impl SgpRunner {
+    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
+        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
+        Self {
+            clocks: NodeClocks::new(cfg.n),
+            weights: vec![1.0; cfg.n],
+            cluster,
+            cfg,
+        }
+    }
+
+    /// De-biased model of node i: z_i = x_i / w_i.
+    pub fn debiased(&self, i: usize) -> Vec<f32> {
+        let w = self.weights[i] as f32;
+        self.cluster.agents[i].params.iter().map(|&v| v / w).collect()
+    }
+
+    /// Weighted mean model Σx / Σw (the consensus target).
+    pub fn consensus_model(&self) -> Vec<f32> {
+        let wsum: f64 = self.weights.iter().sum();
+        let d = self.cluster.dim;
+        let mut acc = vec![0.0f64; d];
+        for a in &self.cluster.agents {
+            for (s, &v) in acc.iter_mut().zip(&a.params) {
+                *s += v as f64;
+            }
+        }
+        acc.into_iter().map(|v| (v / wsum) as f32).collect()
+    }
+
+    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
+        let mut m = RunMetrics::new(&self.cfg.name);
+        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
+        let n = self.cfg.n;
+        let mut inbox_x: Vec<Vec<f32>> = vec![vec![0.0; self.cluster.dim]; n];
+        let mut inbox_w = vec![0.0f64; n];
+        for round in 1..=self.cfg.rounds {
+            let lr = self.cfg.lr.at(round);
+            // SGD step on the de-biased model, then re-bias the update
+            let mut max_comp: f64 = 0.0;
+            for i in 0..n {
+                let w = self.weights[i] as f32;
+                let mut z = self.debiased(i);
+                let a = &mut self.cluster.agents[i];
+                a.last_loss = ctx.backend.step(i, &mut z, &mut a.mom, lr);
+                a.steps += 1;
+                for (x, &zv) in a.params.iter_mut().zip(&z) {
+                    *x = zv * w;
+                }
+                max_comp = max_comp.max(ctx.cost.compute_time(&mut a.rng));
+            }
+            for i in 0..n {
+                self.clocks.charge_compute(i, max_comp); // synchronous round
+            }
+            // push phase: halve and send to one random out-neighbor
+            for ib in inbox_x.iter_mut() {
+                ib.iter_mut().for_each(|v| *v = 0.0);
+            }
+            inbox_w.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..n {
+                let dst = ctx.graph.sample_neighbor(i, ctx.rng);
+                let a = &self.cluster.agents[i];
+                for (s, &v) in inbox_x[dst].iter_mut().zip(&a.params) {
+                    *s += 0.5 * v;
+                }
+                inbox_w[dst] += 0.5 * self.weights[i];
+                m.total_bits += 8 * bytes + 64; // x halves + weight scalar
+            }
+            for i in 0..n {
+                let a = &mut self.cluster.agents[i];
+                for (x, &add) in a.params.iter_mut().zip(&inbox_x[i]) {
+                    *x = 0.5 * *x + add;
+                }
+                self.weights[i] = 0.5 * self.weights[i] + inbox_w[i];
+                a.comm.copy_from_slice(&a.params);
+            }
+            self.clocks.barrier_all(ctx.cost.p2p_time(bytes));
+            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
+            {
+                let mu = self.consensus_model();
+                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, Some(&mu));
+            }
+        }
+        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::QuadraticOracle;
+    use crate::netmodel::CostModel;
+    use crate::rngx::Pcg64;
+    use crate::topology::{Graph, Topology};
+
+    fn setup(
+        n: usize,
+    ) -> (QuadraticOracle, Graph, CostModel, Pcg64) {
+        let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let mut rng = Pcg64::seed(8);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        (backend, graph, CostModel::deterministic(0.1), rng)
+    }
+
+    #[test]
+    fn push_sum_conserves_mass() {
+        let n = 6;
+        let (mut backend, graph, cost, mut rng) = setup(n);
+        let mut ctx = RunContext {
+            backend: &mut backend,
+            graph: &graph,
+            cost: &cost,
+            rng: &mut rng,
+            eval_every: 0,
+            track_gamma: false,
+        };
+        let cfg = RoundsConfig {
+            lr: crate::coordinator::LrSchedule::Constant(0.0), // no SGD: pure gossip
+            ..RoundsConfig::new(n, 50, 0.0, "sgp")
+        };
+        let mut r = SgpRunner::new(cfg, &mut ctx);
+        // perturb one node so consensus is non-trivial
+        r.cluster.agents[0].params[0] = 6.0;
+        let x_sum_before: f64 = r
+            .cluster
+            .agents
+            .iter()
+            .map(|a| a.params[0] as f64)
+            .sum();
+        let w_sum_before: f64 = r.weights.iter().sum();
+        let _ = r.run(&mut ctx);
+        let x_sum_after: f64 =
+            r.cluster.agents.iter().map(|a| a.params[0] as f64).sum();
+        let w_sum_after: f64 = r.weights.iter().sum();
+        assert!((x_sum_before - x_sum_after).abs() < 1e-3);
+        assert!((w_sum_before - w_sum_after).abs() < 1e-9);
+        // and de-biased values reached consensus
+        let z0 = r.debiased(0)[0];
+        for i in 1..n {
+            assert!((r.debiased(i)[0] - z0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sgp_converges_on_quadratic() {
+        let n = 8;
+        let (mut backend, graph, cost, mut rng) = setup(n);
+        let backend_f_star = backend.f_star();
+        let gap0 = {
+            use crate::backend::TrainBackend;
+            let (p, _) = backend.init(0);
+            backend.full_loss(&p) - backend_f_star
+        };
+        let mut ctx = RunContext {
+            backend: &mut backend,
+            graph: &graph,
+            cost: &cost,
+            rng: &mut rng,
+            eval_every: 50,
+            track_gamma: false,
+        };
+        let cfg = RoundsConfig::new(n, 300, 0.05, "sgp");
+        let mut r = SgpRunner::new(cfg, &mut ctx);
+        let m = r.run(&mut ctx);
+        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        assert!(gap < 0.15, "normalized gap {gap}");
+    }
+}

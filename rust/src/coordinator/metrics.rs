@@ -1,0 +1,146 @@
+//! Run metrics: loss/accuracy curves on all the paper's axes
+//! (interactions, parallel time, simulated seconds, epochs, bits).
+
+/// One evaluation point along a run.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// interactions (gossip) or rounds (synchronous baselines)
+    pub t: u64,
+    /// parallel time = t / n
+    pub parallel_time: f64,
+    /// simulated wall-clock seconds (cost-model)
+    pub sim_time: f64,
+    /// mean fractional data epochs per agent
+    pub epochs: f64,
+    /// mean recent minibatch training loss
+    pub train_loss: f64,
+    /// held-out loss of the mean model μ_t
+    pub eval_loss: f64,
+    /// held-out accuracy of the mean model (NaN if not applicable)
+    pub eval_acc: f64,
+    /// held-out loss of a uniformly chosen *individual* model
+    /// (paper §5: "the real average ... is usually more accurate than an
+    /// arbitrary model, but not significantly")
+    pub indiv_loss: f64,
+    /// Γ_t potential (NaN if not tracked)
+    pub gamma: f64,
+    /// cumulative bits on the wire
+    pub bits: u64,
+}
+
+/// Aggregated result of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    pub curve: Vec<CurvePoint>,
+    pub interactions: u64,
+    pub local_steps: u64,
+    pub total_bits: u64,
+    pub sim_time: f64,
+    pub compute_time_total: f64,
+    pub comm_time_total: f64,
+    /// quantizer checksum failures that fell back to full precision
+    pub quant_fallbacks: u64,
+    /// final evaluation
+    pub final_eval_loss: f64,
+    pub final_eval_acc: f64,
+    /// mean data epochs per agent at the end
+    pub epochs: f64,
+}
+
+impl RunMetrics {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Self::default() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.curve.push(p);
+    }
+
+    /// Average communication seconds per local step per node — the y-axis of
+    /// the paper's Figure 4 (above the 0.4 s compute base).
+    pub fn comm_per_step(&self, n: usize) -> f64 {
+        if self.local_steps == 0 {
+            return 0.0;
+        }
+        let _ = n;
+        self.comm_time_total / self.local_steps as f64
+    }
+
+    /// Best (lowest) eval loss seen along the curve.
+    pub fn best_eval_loss(&self) -> f64 {
+        self.curve
+            .iter()
+            .map(|p| p.eval_loss)
+            .filter(|l| l.is_finite())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Best accuracy seen along the curve.
+    pub fn best_eval_acc(&self) -> f64 {
+        self.curve
+            .iter()
+            .map(|p| p.eval_acc)
+            .filter(|a| a.is_finite())
+            .fold(0.0, f64::max)
+    }
+
+    /// First simulated time at which eval loss ≤ target (None if never).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.curve
+            .iter()
+            .find(|p| p.eval_loss.is_finite() && p.eval_loss <= target)
+            .map(|p| p.sim_time)
+    }
+
+    /// Throughput: local steps per simulated second.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.sim_time > 0.0 {
+            self.local_steps as f64 / self.sim_time
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(t: u64, loss: f64, time: f64) -> CurvePoint {
+        CurvePoint {
+            t,
+            parallel_time: t as f64,
+            sim_time: time,
+            epochs: 0.0,
+            train_loss: loss,
+            eval_loss: loss,
+            eval_acc: 1.0 - loss,
+            indiv_loss: loss,
+            gamma: f64::NAN,
+            bits: 0,
+        }
+    }
+
+    #[test]
+    fn best_and_time_to_loss() {
+        let mut m = RunMetrics::new("x");
+        m.push(pt(0, 1.0, 0.0));
+        m.push(pt(10, 0.5, 1.0));
+        m.push(pt(20, 0.7, 2.0));
+        assert_eq!(m.best_eval_loss(), 0.5);
+        assert_eq!(m.time_to_loss(0.6), Some(1.0));
+        assert_eq!(m.time_to_loss(0.1), None);
+        assert!((m.best_eval_acc() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut m = RunMetrics::new("x");
+        m.local_steps = 100;
+        m.sim_time = 50.0;
+        assert_eq!(m.steps_per_sec(), 2.0);
+        m.comm_time_total = 25.0;
+        assert_eq!(m.comm_per_step(4), 0.25);
+    }
+}

@@ -1,0 +1,93 @@
+//! L3 — the SwarmSGD coordinator (the paper's system contribution).
+//!
+//! * [`swarm`] — Algorithm 1 (blocking), Algorithm 2 (non-blocking,
+//!   Appendix F) and the quantized variant (Appendix G), with fixed or
+//!   geometric local-step counts.
+//! * [`baselines`] — the comparison systems of §5: AD-PSGD, D-PSGD, SGP,
+//!   local SGD, and (large-batch) allreduce SGD.
+//! * [`engine`] — per-node simulated clocks + the event accounting that
+//!   turns the logical interaction sequence into the paper's time axes
+//!   (DESIGN.md §2: the discrete-event stand-in for Piz Daint).
+//! * [`cluster`] — shared agent state (live/communication model copies) and
+//!   pairwise averaging primitives.
+//! * [`metrics`] — loss curves, Γ_t, bits-on-wire, comm/compute splits.
+
+pub mod baselines;
+mod cluster;
+mod engine;
+mod metrics;
+mod poisson;
+mod swarm;
+
+pub use cluster::{average_into_both, midpoint, quantized_transfer, Agent, Cluster};
+pub use engine::NodeClocks;
+pub use metrics::{CurvePoint, RunMetrics};
+pub use poisson::PoissonRunner;
+pub use swarm::{AveragingMode, LocalSteps, SwarmConfig, SwarmRunner};
+
+use crate::backend::TrainBackend;
+use crate::netmodel::CostModel;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+
+/// Learning-rate schedule (paper §5: identical to sequential SGD per model;
+/// annealed at 1/3 and 2/3 of training for the vision recipes).
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// base lr, annealed ×0.1 at 1/3 and 2/3 of `total` progress
+    StepDecay { base: f32, total: u64 },
+    /// η = n/√T — the theory rate of Theorems 4.1/4.2
+    Theory { n: usize, t: u64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, progress: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::StepDecay { base, total } => {
+                let frac = progress as f64 / total.max(1) as f64;
+                if frac < 1.0 / 3.0 {
+                    base
+                } else if frac < 2.0 / 3.0 {
+                    base * 0.1
+                } else {
+                    base * 0.01
+                }
+            }
+            LrSchedule::Theory { n, t } => (n as f64 / (t as f64).sqrt()) as f32,
+        }
+    }
+}
+
+/// Everything a runner needs, bundled to keep signatures sane.
+pub struct RunContext<'a> {
+    pub backend: &'a mut dyn TrainBackend,
+    pub graph: &'a Graph,
+    pub cost: &'a CostModel,
+    pub rng: &'a mut Pcg64,
+    /// evaluate the mean model every this many interactions (0 = never)
+    pub eval_every: u64,
+    /// record Γ_t at eval points
+    pub track_gamma: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_variants() {
+        let c = LrSchedule::Constant(0.1);
+        assert_eq!(c.at(0), 0.1);
+        assert_eq!(c.at(1000), 0.1);
+
+        let s = LrSchedule::StepDecay { base: 0.3, total: 300 };
+        assert_eq!(s.at(0), 0.3);
+        assert!((s.at(150) - 0.03).abs() < 1e-6);
+        assert!((s.at(299) - 0.003).abs() < 1e-6);
+
+        let t = LrSchedule::Theory { n: 4, t: 1600 };
+        assert!((t.at(0) - 0.1).abs() < 1e-7); // 4/40
+    }
+}

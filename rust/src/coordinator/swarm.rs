@@ -1,0 +1,447 @@
+//! SwarmSGD — Algorithms 1 & 2 and the quantized variant, faithful to the
+//! paper's update rules:
+//!
+//! **Blocking (Alg. 1)**: sample edge (i,j); each endpoint runs `H` local
+//! SGD steps on its live model; both set `X ← (X_i + X_j)/2`.
+//!
+//! **Non-blocking (Alg. 2 / Appendix F)**: partners exchange *communication
+//! copies* `X' = X_{p+1/2}` — the averaged model from the node's previous
+//! interaction, **missing** its in-flight local-gradient batch — so nobody
+//! waits:
+//! ```text
+//!   S_i = X_i;  X_i ← H_i local steps;  Δ_i = X_i − S_i
+//!   X_i ← (S_i + X_j')/2 + Δ_i          (and symmetrically for j)
+//!   X_i' ← (S_i + X_j')/2               (next round's communication copy)
+//! ```
+//!
+//! **Quantized (Appendix G)**: same as non-blocking, but the incoming copy
+//! crosses the wire through the lattice codec; decode failures (distance
+//! criterion violated) fall back to full precision and are counted.
+//!
+//! Local step counts are fixed (`H`) or geometric with mean `H` — the two
+//! regimes of Theorems 4.2 and 4.1 respectively.
+
+use super::cluster::{quantized_transfer, Cluster};
+use super::engine::NodeClocks;
+use super::metrics::{CurvePoint, RunMetrics};
+use super::{LrSchedule, RunContext};
+
+/// Distribution of the number of local SGD steps between interactions.
+#[derive(Clone, Copy, Debug)]
+pub enum LocalSteps {
+    /// exactly H steps (Theorem 4.2 regime)
+    Fixed(u64),
+    /// geometric with mean H — Poisson interaction clocks (Theorem 4.1)
+    Geometric(f64),
+}
+
+impl LocalSteps {
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LocalSteps::Fixed(h) => h as f64,
+            LocalSteps::Geometric(h) => h,
+        }
+    }
+
+    fn sample(&self, rng: &mut crate::rngx::Pcg64) -> u64 {
+        match *self {
+            LocalSteps::Fixed(h) => h,
+            LocalSteps::Geometric(h) => rng.geometric(h),
+        }
+    }
+}
+
+/// How the pairwise averaging step is performed.
+#[derive(Clone, Copy, Debug)]
+pub enum AveragingMode {
+    /// Algorithm 1: rendezvous, average live models.
+    Blocking,
+    /// Algorithm 2: average against stale communication copies.
+    NonBlocking,
+    /// Appendix G: non-blocking + lattice-quantized exchange.
+    Quantized { bits: u32, eps: f32 },
+}
+
+/// Full SwarmSGD run configuration.
+#[derive(Clone, Debug)]
+pub struct SwarmConfig {
+    pub n: usize,
+    pub local_steps: LocalSteps,
+    pub mode: AveragingMode,
+    pub lr: LrSchedule,
+    /// total pairwise interactions T
+    pub interactions: u64,
+    pub seed: u64,
+    pub name: String,
+}
+
+impl SwarmConfig {
+    pub fn basic(n: usize, h: u64, lr: f32, interactions: u64) -> Self {
+        Self {
+            n,
+            local_steps: LocalSteps::Fixed(h),
+            mode: AveragingMode::NonBlocking,
+            lr: LrSchedule::Constant(lr),
+            interactions,
+            seed: 0x5EED,
+            name: "swarm".into(),
+        }
+    }
+}
+
+/// Executes SwarmSGD over a [`RunContext`]; owns the agents and clocks.
+pub struct SwarmRunner {
+    pub cluster: Cluster,
+    pub clocks: NodeClocks,
+    cfg: SwarmConfig,
+    // scratch buffers (no allocation on the interaction hot path)
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+    comm_a: Vec<f32>,
+    comm_b: Vec<f32>,
+}
+
+impl SwarmRunner {
+    pub fn new(cfg: SwarmConfig, ctx: &mut RunContext) -> Self {
+        assert_eq!(cfg.n, ctx.graph.n(), "config n must match graph");
+        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
+        let dim = cluster.dim;
+        Self {
+            clocks: NodeClocks::new(cfg.n),
+            cluster,
+            cfg,
+            scratch_a: vec![0.0; dim],
+            scratch_b: vec![0.0; dim],
+            comm_a: vec![0.0; dim],
+            comm_b: vec![0.0; dim],
+        }
+    }
+
+    /// Run to completion, returning the metrics record.
+    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
+        let mut m = RunMetrics::new(&self.cfg.name);
+        let total = self.cfg.interactions;
+        for t in 1..=total {
+            self.interact(ctx, t, &mut m);
+            let at_eval = ctx.eval_every > 0 && t % ctx.eval_every == 0;
+            if at_eval || t == total {
+                self.record_point(ctx, t, &mut m);
+            }
+        }
+        m.interactions = total;
+        m.local_steps = self.cluster.total_steps();
+        m.sim_time = self.clocks.max_time();
+        m.compute_time_total = self.clocks.compute_total;
+        m.comm_time_total = self.clocks.comm_total;
+        m.epochs = self.mean_epochs(ctx);
+        if let Some(p) = m.curve.last() {
+            m.final_eval_loss = p.eval_loss;
+            m.final_eval_acc = p.eval_acc;
+        }
+        m
+    }
+
+    fn mean_epochs(&self, ctx: &mut RunContext) -> f64 {
+        (0..self.cfg.n).map(|i| ctx.backend.epochs(i)).sum::<f64>() / self.cfg.n as f64
+    }
+
+    /// One step of the paper's process: sample an edge, run local steps on
+    /// both endpoints, average per the configured mode, charge time.
+    fn interact(&mut self, ctx: &mut RunContext, t: u64, m: &mut RunMetrics) {
+        let (i, j) = ctx.graph.sample_edge(ctx.rng);
+        let lr = self.cfg.lr.at(t);
+        let hi = self.cfg.local_steps.sample(ctx.rng);
+        let hj = self.cfg.local_steps.sample(ctx.rng);
+        let d = self.cluster.dim;
+        let full_bytes = ctx.cost.wire_bytes(d);
+
+        // --- local SGD phases (both endpoints) ---
+        // S_k snapshots for the non-blocking delta
+        self.scratch_a.copy_from_slice(&self.cluster.agents[i].params);
+        self.scratch_b.copy_from_slice(&self.cluster.agents[j].params);
+        let mut comp_i = 0.0;
+        let mut comp_j = 0.0;
+        {
+            let a = &mut self.cluster.agents[i];
+            a.last_loss = ctx.backend.step_burst(i, &mut a.params, &mut a.mom, lr, hi);
+            a.steps += hi;
+            for _ in 0..hi {
+                comp_i += ctx.cost.compute_time(&mut a.rng);
+            }
+        }
+        {
+            let a = &mut self.cluster.agents[j];
+            a.last_loss = ctx.backend.step_burst(j, &mut a.params, &mut a.mom, lr, hj);
+            a.steps += hj;
+            for _ in 0..hj {
+                comp_j += ctx.cost.compute_time(&mut a.rng);
+            }
+        }
+        self.clocks.charge_compute(i, comp_i);
+        self.clocks.charge_compute(j, comp_j);
+
+        // --- averaging phase ---
+        match self.cfg.mode {
+            AveragingMode::Blocking => {
+                let (ai, aj) = self.cluster.pair_mut(i, j);
+                super::cluster::average_into_both(&mut ai.params, &mut aj.params);
+                ai.comm.copy_from_slice(&ai.params);
+                aj.comm.copy_from_slice(&aj.params);
+                // both models cross the wire; rendezvous (Alg. 1 blocks)
+                self.clocks.rendezvous(i, j, ctx.cost.exchange_time(full_bytes));
+                m.total_bits += 2 * 8 * full_bytes;
+            }
+            AveragingMode::NonBlocking => {
+                self.nonblocking_average(i, j, None, ctx, m);
+                // initiator pays the exchange; partner is not delayed
+                self.clocks.charge_comm(i, ctx.cost.exchange_time(full_bytes));
+                m.total_bits += 2 * 8 * full_bytes;
+            }
+            AveragingMode::Quantized { bits, eps } => {
+                let q = Some((bits, eps));
+                let raw_bits = self.nonblocking_average(i, j, q, ctx, m);
+                let wire_bits = ctx.cost.scale_bits(raw_bits, d);
+                let bytes = wire_bits.div_ceil(8);
+                self.clocks.charge_comm(i, ctx.cost.exchange_time(bytes));
+                m.total_bits += wire_bits;
+            }
+        }
+        self.cluster.agents[i].interactions += 1;
+        self.cluster.agents[j].interactions += 1;
+    }
+
+    /// Appendix-F averaging. `scratch_a`/`scratch_b` hold S_i/S_j on entry.
+    /// Returns total wire bits when quantizing (0 otherwise — the caller
+    /// accounts full precision itself).
+    fn nonblocking_average(
+        &mut self,
+        i: usize,
+        j: usize,
+        quant: Option<(u32, f32)>,
+        _ctx: &mut RunContext,
+        m: &mut RunMetrics,
+    ) -> u64 {
+        let mut wire = 0u64;
+        // read both communication copies BEFORE either write (into scratch —
+        // no allocation on the hot path)
+        self.comm_a.copy_from_slice(&self.cluster.agents[i].comm);
+        self.comm_b.copy_from_slice(&self.cluster.agents[j].comm);
+        let seed_ij = self.cluster.agents[i].rng.next_u32();
+        let seed_ji = self.cluster.agents[j].rng.next_u32();
+
+        // incoming copy for i (from j) and for j (from i), possibly quantized
+        // (yi = comm_a, yj = comm_b)
+        if let Some((bits, eps)) = quant {
+            // receiver's reference is its own snapshot S (closest local
+            // state to the sender under the Γ bound)
+            let ti = quantized_transfer(&self.comm_b, &self.scratch_a, eps, bits, seed_ij);
+            let tj = quantized_transfer(&self.comm_a, &self.scratch_b, eps, bits, seed_ji);
+            wire += ti.bits + tj.bits;
+            m.quant_fallbacks += u64::from(ti.fell_back) + u64::from(tj.fell_back);
+            self.comm_b.copy_from_slice(&ti.decoded);
+            self.comm_a.copy_from_slice(&tj.decoded);
+        }
+
+        // X_i ← (S_i + inc)/2 + Δ_i ;  comm_i ← (S_i + inc)/2
+        {
+            let a = &mut self.cluster.agents[i];
+            let (s, inc) = (&self.scratch_a, &self.comm_b);
+            for k in 0..a.params.len() {
+                let avg = 0.5 * (s[k] + inc[k]);
+                let delta = a.params[k] - s[k];
+                a.comm[k] = avg;
+                a.params[k] = avg + delta;
+            }
+        }
+        {
+            let a = &mut self.cluster.agents[j];
+            let (s, inc) = (&self.scratch_b, &self.comm_a);
+            for k in 0..a.params.len() {
+                let avg = 0.5 * (s[k] + inc[k]);
+                let delta = a.params[k] - s[k];
+                a.comm[k] = avg;
+                a.params[k] = avg + delta;
+            }
+        }
+        wire
+    }
+
+    fn record_point(&mut self, ctx: &mut RunContext, t: u64, m: &mut RunMetrics) {
+        let mu = self.cluster.mean_model();
+        let ev = ctx.backend.eval(&mu);
+        // an arbitrary individual model (paper compares μ vs individual)
+        let pick = ctx.rng.below_usize(self.cfg.n);
+        let ind = ctx.backend.eval(&self.cluster.agents[pick].params);
+        let gamma = if ctx.track_gamma { self.cluster.gamma() } else { f64::NAN };
+        m.push(CurvePoint {
+            t,
+            parallel_time: t as f64 / self.cfg.n as f64,
+            sim_time: self.clocks.max_time(),
+            epochs: self.mean_epochs(ctx),
+            train_loss: self.cluster.mean_train_loss(),
+            eval_loss: ev.loss,
+            eval_acc: ev.accuracy,
+            indiv_loss: ind.loss,
+            gamma,
+            bits: m.total_bits,
+        });
+    }
+
+    /// The mean model after training (what gets deployed).
+    pub fn mean_model(&self) -> Vec<f32> {
+        self.cluster.mean_model()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::QuadraticOracle;
+    use crate::netmodel::CostModel;
+    use crate::rngx::Pcg64;
+    use crate::topology::{Graph, Topology};
+
+    fn ctx_parts(
+        n: usize,
+    ) -> (QuadraticOracle, Graph, CostModel, Pcg64) {
+        let backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
+        let mut rng = Pcg64::seed(5);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        (backend, graph, CostModel::deterministic(0.4), Pcg64::seed(6))
+    }
+
+    fn run_mode(mode: AveragingMode, h: LocalSteps) -> (RunMetrics, f64) {
+        let n = 8;
+        let (mut backend, graph, cost, mut rng) = ctx_parts(n);
+        // initial suboptimality gap f(x0) − f*
+        let gap0 = {
+            use crate::backend::TrainBackend;
+            let (p, _) = backend.init(0);
+            backend.full_loss(&p) - backend.f_star()
+        };
+        let f_star = backend.f_star();
+        let mut ctx = RunContext {
+            backend: &mut backend,
+            graph: &graph,
+            cost: &cost,
+            rng: &mut rng,
+            eval_every: 100,
+            track_gamma: true,
+        };
+        let cfg = SwarmConfig {
+            n,
+            local_steps: h,
+            mode,
+            lr: LrSchedule::Constant(0.05),
+            interactions: 800,
+            seed: 1,
+            name: "test".into(),
+        };
+        let mut runner = SwarmRunner::new(cfg, &mut ctx);
+        let m = runner.run(&mut ctx);
+        // return metrics + the normalized final gap (f(μ_T) − f*)/(f(x₀) − f*)
+        let gap = (m.final_eval_loss - f_star) / gap0;
+        (m, gap)
+    }
+
+    #[test]
+    fn blocking_converges_on_quadratic() {
+        let (_, gap) = run_mode(AveragingMode::Blocking, LocalSteps::Fixed(2));
+        assert!(gap < 0.1, "normalized gap {gap}");
+    }
+
+    #[test]
+    fn nonblocking_converges_on_quadratic() {
+        let (_, gap) = run_mode(AveragingMode::NonBlocking, LocalSteps::Fixed(2));
+        assert!(gap < 0.1, "normalized gap {gap}");
+    }
+
+    #[test]
+    fn geometric_steps_converge() {
+        let (m, gap) = run_mode(AveragingMode::NonBlocking, LocalSteps::Geometric(3.0));
+        assert!(gap < 0.1, "normalized gap {gap}");
+        // geometric sampling actually produced variable counts
+        assert!(m.local_steps > 0);
+    }
+
+    #[test]
+    fn quantized_converges_and_saves_bits() {
+        // larger model so the O(log T) header amortizes (paper: d >> log T)
+        let n = 8;
+        let run = |mode: AveragingMode| {
+            let mut backend = QuadraticOracle::new(256, n, 1.0, 0.5, 2.0, 0.05, 21);
+            let f_star = backend.f_star();
+            let gap0 = {
+                use crate::backend::TrainBackend;
+                let (p, _) = backend.init(0);
+                backend.full_loss(&p) - f_star
+            };
+            let mut rng = Pcg64::seed(9);
+            let graph = Graph::build(Topology::Complete, n, &mut rng);
+            let cost = CostModel::deterministic(0.4);
+            let mut ctx = RunContext {
+                backend: &mut backend,
+                graph: &graph,
+                cost: &cost,
+                rng: &mut rng,
+                eval_every: 200,
+                track_gamma: false,
+            };
+            let cfg = SwarmConfig {
+                n,
+                local_steps: LocalSteps::Fixed(2),
+                mode,
+                lr: LrSchedule::Constant(0.05),
+                interactions: 800,
+                seed: 1,
+                name: "q".into(),
+            };
+            let mut r = SwarmRunner::new(cfg, &mut ctx);
+            let m = r.run(&mut ctx);
+            ((m.final_eval_loss - f_star) / gap0, m)
+        };
+        let (gap, mq) = run(AveragingMode::Quantized { bits: 8, eps: 1e-2 });
+        let (_, mf) = run(AveragingMode::NonBlocking);
+        assert!(gap < 0.1, "normalized gap {gap}");
+        assert!(
+            (mq.total_bits as f64) < 0.5 * mf.total_bits as f64,
+            "quantized {} vs full {} (fallbacks {})",
+            mq.total_bits,
+            mf.total_bits,
+            mq.quant_fallbacks
+        );
+    }
+
+    #[test]
+    fn gamma_stays_bounded() {
+        let (m, _) = run_mode(AveragingMode::NonBlocking, LocalSteps::Fixed(4));
+        let gammas: Vec<f64> =
+            m.curve.iter().map(|p| p.gamma).filter(|g| g.is_finite()).collect();
+        assert!(!gammas.is_empty());
+        // potential must not blow up over the run (Lemma F.3: bounded in t)
+        let first = gammas[0];
+        let last = *gammas.last().unwrap();
+        assert!(last < 100.0 * first.max(1e-3), "Γ grew: {first} -> {last}");
+    }
+
+    #[test]
+    fn nonblocking_is_faster_than_blocking_in_sim_time() {
+        let (mb, _) = run_mode(AveragingMode::Blocking, LocalSteps::Fixed(2));
+        let (mn, _) = run_mode(AveragingMode::NonBlocking, LocalSteps::Fixed(2));
+        assert!(
+            mn.sim_time < mb.sim_time,
+            "non-blocking {} should beat blocking {}",
+            mn.sim_time,
+            mb.sim_time
+        );
+    }
+
+    #[test]
+    fn interactions_and_steps_accounted() {
+        let (m, _) = run_mode(AveragingMode::NonBlocking, LocalSteps::Fixed(3));
+        assert_eq!(m.interactions, 800);
+        assert_eq!(m.local_steps, 800 * 2 * 3); // two endpoints × H
+        assert!(m.total_bits > 0);
+        assert!(m.sim_time > 0.0);
+    }
+}

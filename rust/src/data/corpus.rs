@@ -1,0 +1,188 @@
+//! Synthetic Markov-chain token corpus — the WMT17 stand-in for the LM task.
+//!
+//! A first-order Markov source with sparse, power-law-weighted transitions:
+//! learnable structure (a transformer can push the loss well below
+//! `log(vocab)` toward the chain's conditional entropy) without any external
+//! data.  Every agent gets a contiguous shard of the stream, mirroring the
+//! paper's per-epoch partitioning.
+
+use super::Batch;
+use crate::rngx::Pcg64;
+
+/// Token stream + its generator parameters.
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+    /// per-state successor lists (succ, weight) used for entropy estimation
+    trans: Vec<Vec<(usize, f64)>>,
+}
+
+impl MarkovCorpus {
+    /// Build a chain with `branch` likely successors per state and sample
+    /// `len` tokens.
+    pub fn generate(vocab: usize, len: usize, branch: usize, rng: &mut Pcg64) -> Self {
+        assert!(vocab >= 2 && branch >= 1);
+        let mut trans: Vec<Vec<(usize, f64)>> = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            let succ = rng.sample_indices(vocab, branch.min(vocab));
+            // power-law weights 1/k over the chosen successors + smoothing
+            let mut row: Vec<(usize, f64)> = succ
+                .into_iter()
+                .enumerate()
+                .map(|(k, s)| (s, 1.0 / (k + 1) as f64))
+                .collect();
+            let total: f64 = row.iter().map(|(_, w)| w).sum();
+            for e in &mut row {
+                e.1 = 0.9 * e.1 / total; // 10% mass smoothed over full vocab
+            }
+            trans.push(row);
+        }
+        let mut tokens = Vec::with_capacity(len);
+        let mut state = rng.below_usize(vocab);
+        for _ in 0..len {
+            tokens.push(state as i32);
+            state = if rng.bernoulli(0.9) {
+                let row = &trans[state];
+                let weights: Vec<f64> = row.iter().map(|(_, w)| *w).collect();
+                row[rng.categorical(&weights)].0
+            } else {
+                rng.below_usize(vocab)
+            };
+        }
+        Self { vocab, tokens, trans }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Entropy rate of the chain in nats — the LM loss floor.
+    pub fn conditional_entropy(&self) -> f64 {
+        let v = self.vocab as f64;
+        let mut h = 0.0;
+        for row in &self.trans {
+            let mut hs = 0.0;
+            let smooth = 0.1 / v;
+            let mut structured = vec![smooth; self.vocab];
+            for &(s, w) in row {
+                structured[s] += w; // w already scaled to 0.9 total
+            }
+            for p in structured {
+                if p > 0.0 {
+                    hs -= p * p.ln();
+                }
+            }
+            h += hs;
+        }
+        h / v // states are ~uniform under the 10% teleport smoothing
+    }
+}
+
+/// Samples (x, y) next-token windows from a shard of the corpus.
+pub struct TokenBatcher {
+    tokens: Vec<i32>,
+    pub seq: usize,
+    pub batch: usize,
+    rng: Pcg64,
+    /// token windows consumed (for epoch accounting)
+    pub windows_served: u64,
+}
+
+impl TokenBatcher {
+    pub fn new(shard: &[i32], seq: usize, batch: usize, rng: Pcg64) -> Self {
+        assert!(shard.len() > seq + 1, "shard too small for seq={seq}");
+        Self { tokens: shard.to_vec(), seq, batch, rng, windows_served: 0 }
+    }
+
+    /// One (x, y) batch of `batch` windows, y shifted by one.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        let max_start = self.tokens.len() - self.seq - 1;
+        for _ in 0..self.batch {
+            let s = self.rng.below_usize(max_start + 1);
+            x.extend_from_slice(&self.tokens[s..s + self.seq]);
+            y.extend_from_slice(&self.tokens[s + 1..s + self.seq + 1]);
+        }
+        self.windows_served += self.batch as u64;
+        Batch::Tokens { x, y }
+    }
+
+    /// Fraction of the shard consumed, in epochs (windows × seq / len).
+    pub fn epochs(&self) -> f64 {
+        (self.windows_served as f64 * self.seq as f64) / self.tokens.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_in_range() {
+        let mut rng = Pcg64::seed(1);
+        let c = MarkovCorpus::generate(64, 10_000, 4, &mut rng);
+        assert_eq!(c.len(), 10_000);
+        assert!(c.tokens.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        // bigram predictability: most-likely-successor accuracy far above 1/V
+        let mut rng = Pcg64::seed(2);
+        let c = MarkovCorpus::generate(32, 50_000, 3, &mut rng);
+        let mut counts = vec![[0u32; 32]; 32];
+        for w in c.tokens.windows(2) {
+            counts[w[0] as usize][w[1] as usize] += 1;
+        }
+        let mut correct = 0u32;
+        let mut total = 0u32;
+        for w in c.tokens.windows(2) {
+            let pred = counts[w[0] as usize]
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, c)| **c)
+                .unwrap()
+                .0;
+            if pred == w[1] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.2, "bigram acc={acc}, chance={}", 1.0 / 32.0);
+    }
+
+    #[test]
+    fn entropy_below_uniform() {
+        let mut rng = Pcg64::seed(3);
+        let c = MarkovCorpus::generate(64, 1000, 4, &mut rng);
+        let h = c.conditional_entropy();
+        assert!(h < (64f64).ln(), "H={h} >= ln V");
+        assert!(h > 0.5, "H={h} suspiciously low");
+    }
+
+    #[test]
+    fn batcher_shapes_and_shift() {
+        let mut rng = Pcg64::seed(4);
+        let c = MarkovCorpus::generate(16, 5000, 3, &mut rng);
+        let mut b = TokenBatcher::new(&c.tokens, 8, 4, Pcg64::seed(9));
+        let batch = b.next_batch();
+        if let Batch::Tokens { x, y } = batch {
+            assert_eq!(x.len(), 32);
+            assert_eq!(y.len(), 32);
+            // y is x shifted within each window — check via corpus lookup
+            // (x window is contiguous in the corpus, so x[1..] == y[..-1])
+            for w in 0..4 {
+                assert_eq!(&x[w * 8 + 1..(w + 1) * 8], &y[w * 8..(w + 1) * 8 - 1]);
+            }
+        } else {
+            panic!("expected token batch");
+        }
+        assert!(b.epochs() > 0.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Synthetic workloads + sharding — the data substrate (DESIGN.md §2).
+//!
+//! The paper trains on CIFAR-10/ImageNet/WMT17; those are unavailable here
+//! (repro band 0/5), so we synthesize workloads with the same *shape*:
+//! labelled vectors (MLP), labelled images from a Gaussian mixture (CNN),
+//! and a Markov-chain token stream with power-law vocabulary (transformer
+//! LM).  Sharding follows the paper's §5 training process: re-shuffle and
+//! partition per epoch (iid), plus the non-iid partitions (by-label,
+//! Dirichlet) that exercise the Theorem 4.2 regime.
+
+mod corpus;
+mod shard;
+mod synth;
+
+pub use corpus::{MarkovCorpus, TokenBatcher};
+pub use shard::{dirichlet_shards, iid_shards, label_shards, ShardIter};
+pub use synth::{GaussianMixture, ImageDataset, VectorDataset};
+
+/// A host-side minibatch, ready to be wrapped into PJRT literals.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// x: f32 features (row-major), y: i32 labels
+    Dense { x: Vec<f32>, y: Vec<i32> },
+    /// x: i32 token ids, y: i32 next-token targets
+    Tokens { x: Vec<i32>, y: Vec<i32> },
+}
+
+impl Batch {
+    pub fn labels(&self) -> &[i32] {
+        match self {
+            Batch::Dense { y, .. } | Batch::Tokens { y, .. } => y,
+        }
+    }
+
+    /// Number of examples (Dense) — tokens batches report windows.
+    pub fn len_labels(&self) -> usize {
+        self.labels().len()
+    }
+}

@@ -1,0 +1,204 @@
+//! Dataset sharding across agents: iid, pathological by-label, and
+//! Dirichlet-skewed — the paper's §5 protocol (iid re-partitioning) plus the
+//! non-iid regimes of Theorem 4.2 / Appendix H.
+
+use crate::rngx::Pcg64;
+
+/// Shuffle and split `n` examples into `agents` near-equal shards.
+pub fn iid_shards(n: usize, agents: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(agents >= 1 && n >= agents);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    split_even(&idx, agents)
+}
+
+/// Sort by label and hand out contiguous chunks — maximal label skew.
+pub fn label_shards(labels: &[i32], agents: usize) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..labels.len()).collect();
+    idx.sort_by_key(|&i| labels[i]);
+    split_even(&idx, agents)
+}
+
+/// Dirichlet(α) label-distribution skew (standard federated-learning
+/// protocol): for each class, split its examples across agents with
+/// Dirichlet-sampled proportions. Small α → heavy skew, large α → ~iid.
+pub fn dirichlet_shards(
+    labels: &[i32],
+    agents: usize,
+    alpha: f64,
+    rng: &mut Pcg64,
+) -> Vec<Vec<usize>> {
+    let classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for (i, &y) in labels.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    let mut shards = vec![Vec::new(); agents];
+    for mut members in by_class {
+        rng.shuffle(&mut members);
+        let props = rng.dirichlet(alpha, agents);
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (a, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if a + 1 == agents {
+                members.len()
+            } else {
+                ((members.len() as f64) * acc).round() as usize
+            }
+            .min(members.len());
+            shards[a].extend_from_slice(&members[start..end]);
+            start = end;
+        }
+    }
+    // guarantee non-empty shards (move one element from the largest)
+    for a in 0..agents {
+        if shards[a].is_empty() {
+            let donor = (0..agents).max_by_key(|&b| shards[b].len()).unwrap();
+            let x = shards[donor].pop().expect("donor shard empty");
+            shards[a].push(x);
+        }
+    }
+    shards
+}
+
+fn split_even(idx: &[usize], agents: usize) -> Vec<Vec<usize>> {
+    let n = idx.len();
+    let base = n / agents;
+    let extra = n % agents;
+    let mut out = Vec::with_capacity(agents);
+    let mut start = 0;
+    for a in 0..agents {
+        let len = base + usize::from(a < extra);
+        out.push(idx[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+/// Cycles through a shard with per-epoch reshuffling (paper §5: "at the
+/// beginning of each epoch, we re-shuffle the dataset").
+pub struct ShardIter {
+    shard: Vec<usize>,
+    pos: usize,
+    rng: Pcg64,
+    pub epochs_done: u64,
+}
+
+impl ShardIter {
+    pub fn new(shard: Vec<usize>, mut rng: Pcg64) -> Self {
+        assert!(!shard.is_empty());
+        let mut s = shard;
+        rng.shuffle(&mut s);
+        Self { shard: s, pos: 0, rng, epochs_done: 0 }
+    }
+
+    /// Next `k` example indices (wrapping + reshuffling at epoch end).
+    pub fn next_indices(&mut self, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            if self.pos == self.shard.len() {
+                self.rng.shuffle(&mut self.shard);
+                self.pos = 0;
+                self.epochs_done += 1;
+            }
+            out.push(self.shard[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+
+    /// Fractional epochs consumed.
+    pub fn epochs(&self) -> f64 {
+        self.epochs_done as f64 + self.pos as f64 / self.shard.len() as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.shard.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shard.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_shards_partition() {
+        let mut rng = Pcg64::seed(1);
+        let shards = iid_shards(103, 8, &mut rng);
+        assert_eq!(shards.len(), 8);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13));
+    }
+
+    #[test]
+    fn label_shards_are_skewed() {
+        let labels: Vec<i32> = (0..100).map(|i| (i / 25) as i32).collect();
+        let shards = label_shards(&labels, 4);
+        // each shard should be single-label
+        for s in &shards {
+            let l0 = labels[s[0]];
+            assert!(s.iter().all(|&i| labels[i] == l0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_partition_and_coverage() {
+        let mut rng = Pcg64::seed(2);
+        let labels: Vec<i32> = (0..500).map(|i| (i % 10) as i32).collect();
+        for alpha in [0.1, 1.0, 100.0] {
+            let shards = dirichlet_shards(&labels, 8, alpha, &mut rng);
+            let mut all: Vec<usize> = shards.concat();
+            all.sort_unstable();
+            assert_eq!(all.len(), 500, "alpha={alpha}");
+            all.dedup();
+            assert_eq!(all.len(), 500);
+            assert!(shards.iter().all(|s| !s.is_empty()));
+        }
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let mut rng = Pcg64::seed(3);
+        let labels: Vec<i32> = (0..2000).map(|i| (i % 10) as i32).collect();
+        let skew = |alpha: f64, rng: &mut Pcg64| -> f64 {
+            let shards = dirichlet_shards(&labels, 10, alpha, rng);
+            // average per-shard max-class proportion
+            shards
+                .iter()
+                .map(|s| {
+                    let mut c = [0usize; 10];
+                    for &i in s {
+                        c[labels[i] as usize] += 1;
+                    }
+                    *c.iter().max().unwrap() as f64 / s.len().max(1) as f64
+                })
+                .sum::<f64>()
+                / 10.0
+        };
+        let low = skew(0.05, &mut rng);
+        let high = skew(100.0, &mut rng);
+        assert!(low > high + 0.2, "low-alpha skew {low} vs high-alpha {high}");
+    }
+
+    #[test]
+    fn shard_iter_visits_everything_each_epoch() {
+        let it_shard: Vec<usize> = (0..10).collect();
+        let mut it = ShardIter::new(it_shard, Pcg64::seed(4));
+        let first: Vec<usize> = it.next_indices(10);
+        let mut sorted = first.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+        assert_eq!(it.epochs_done, 0);
+        it.next_indices(1);
+        assert_eq!(it.epochs_done, 1);
+        assert!(it.epochs() > 1.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Gaussian-mixture synthetic datasets (vector + image variants).
+
+use super::Batch;
+use crate::rngx::Pcg64;
+
+/// Shared generator: `classes` Gaussian blobs in `dim` dimensions with
+/// controllable separation (higher = easier task).
+pub struct GaussianMixture {
+    pub dim: usize,
+    pub classes: usize,
+    means: Vec<f32>, // classes × dim
+    noise: f32,
+}
+
+impl GaussianMixture {
+    pub fn new(dim: usize, classes: usize, separation: f32, noise: f32, rng: &mut Pcg64) -> Self {
+        let scale = separation / (dim as f32).sqrt();
+        let means = (0..classes * dim)
+            .map(|_| rng.normal() as f32 * scale)
+            .collect();
+        Self { dim, classes, means, noise }
+    }
+
+    /// Sample one example: (features, label).
+    pub fn sample(&self, rng: &mut Pcg64) -> (Vec<f32>, i32) {
+        let c = rng.below_usize(self.classes);
+        let x = (0..self.dim)
+            .map(|j| self.means[c * self.dim + j] + rng.normal() as f32 * self.noise)
+            .collect();
+        (x, c as i32)
+    }
+}
+
+/// Materialized labelled-vector dataset (the MLP workload).
+pub struct VectorDataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub x: Vec<f32>, // n × dim row-major
+    pub y: Vec<i32>,
+}
+
+impl VectorDataset {
+    pub fn generate(n: usize, dim: usize, classes: usize, separation: f32, rng: &mut Pcg64) -> Self {
+        let gm = GaussianMixture::new(dim, classes, separation, 1.0, rng);
+        Self::from_mixture(&gm, n, rng)
+    }
+
+    /// Sample from an existing mixture (so train/test share the task).
+    pub fn from_mixture(gm: &GaussianMixture, n: usize, rng: &mut Pcg64) -> Self {
+        let mut x = Vec::with_capacity(n * gm.dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (xi, yi) = gm.sample(rng);
+            x.extend_from_slice(&xi);
+            y.push(yi);
+        }
+        Self { dim: gm.dim, classes: gm.classes, x, y }
+    }
+
+    /// Train/test pair drawn from the SAME mixture.
+    pub fn generate_split(
+        n_train: usize,
+        n_test: usize,
+        dim: usize,
+        classes: usize,
+        separation: f32,
+        rng: &mut Pcg64,
+    ) -> (Self, Self) {
+        let gm = GaussianMixture::new(dim, classes, separation, 1.0, rng);
+        (Self::from_mixture(&gm, n_train, rng), Self::from_mixture(&gm, n_test, rng))
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Gather examples at `idxs` into a dense batch.
+    pub fn batch(&self, idxs: &[usize]) -> Batch {
+        let mut x = Vec::with_capacity(idxs.len() * self.dim);
+        let mut y = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            x.extend_from_slice(&self.x[i * self.dim..(i + 1) * self.dim]);
+            y.push(self.y[i]);
+        }
+        Batch::Dense { x, y }
+    }
+}
+
+/// Labelled-image dataset (the CNN workload): per-class spatial templates
+/// (low-frequency blobs) + pixel noise — a CIFAR-shaped stand-in.
+pub struct ImageDataset {
+    pub hw: usize,
+    pub chans: usize,
+    pub classes: usize,
+    pub x: Vec<f32>, // n × hw × hw × chans (NHWC)
+    pub y: Vec<i32>,
+}
+
+impl ImageDataset {
+    pub fn generate(
+        n: usize,
+        hw: usize,
+        chans: usize,
+        classes: usize,
+        separation: f32,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let templates = Self::templates(hw, chans, classes, separation, rng);
+        Self::from_templates(&templates, n, hw, chans, classes, rng)
+    }
+
+    /// Train/test pair sharing the SAME class templates.
+    pub fn generate_split(
+        n_train: usize,
+        n_test: usize,
+        hw: usize,
+        chans: usize,
+        classes: usize,
+        separation: f32,
+        rng: &mut Pcg64,
+    ) -> (Self, Self) {
+        let t = Self::templates(hw, chans, classes, separation, rng);
+        (
+            Self::from_templates(&t, n_train, hw, chans, classes, rng),
+            Self::from_templates(&t, n_test, hw, chans, classes, rng),
+        )
+    }
+
+    /// Class templates: sums of random low-frequency cosines per channel.
+    fn templates(
+        hw: usize,
+        chans: usize,
+        classes: usize,
+        separation: f32,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let mut templates = vec![0.0f32; classes * hw * hw * chans];
+        for c in 0..classes {
+            for ch in 0..chans {
+                for _ in 0..3 {
+                    let fx = 1.0 + rng.below(3) as f32;
+                    let fy = 1.0 + rng.below(3) as f32;
+                    let px = rng.f32() * std::f32::consts::TAU;
+                    let py = rng.f32() * std::f32::consts::TAU;
+                    let amp = separation * (0.5 + rng.f32());
+                    for r in 0..hw {
+                        for q in 0..hw {
+                            let v = amp
+                                * ((fx * r as f32 / hw as f32 * std::f32::consts::TAU + px).cos()
+                                    + (fy * q as f32 / hw as f32 * std::f32::consts::TAU + py)
+                                        .cos());
+                            templates[((c * hw + r) * hw + q) * chans + ch] += v * 0.5;
+                        }
+                    }
+                }
+            }
+        }
+        templates
+    }
+
+    fn from_templates(
+        templates: &[f32],
+        n: usize,
+        hw: usize,
+        chans: usize,
+        classes: usize,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let img_sz = hw * hw * chans;
+        let mut x = Vec::with_capacity(n * img_sz);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below_usize(classes);
+            for j in 0..img_sz {
+                x.push(templates[c * img_sz + j] + rng.normal() as f32 * 1.0);
+            }
+            y.push(c as i32);
+        }
+        Self { hw, chans, classes, x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn batch(&self, idxs: &[usize]) -> Batch {
+        let img_sz = self.hw * self.hw * self.chans;
+        let mut x = Vec::with_capacity(idxs.len() * img_sz);
+        let mut y = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            x.extend_from_slice(&self.x[i * img_sz..(i + 1) * img_sz]);
+            y.push(self.y[i]);
+        }
+        Batch::Dense { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_dataset_shapes() {
+        let mut rng = Pcg64::seed(1);
+        let d = VectorDataset::generate(100, 8, 4, 3.0, &mut rng);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.x.len(), 800);
+        assert!(d.y.iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn vector_classes_are_separable() {
+        // a nearest-centroid classifier must beat chance by a wide margin
+        let mut rng = Pcg64::seed(2);
+        let d = VectorDataset::generate(2000, 16, 4, 4.0, &mut rng);
+        // estimate centroids from the data
+        let mut cent = vec![0.0f64; 4 * 16];
+        let mut cnt = [0usize; 4];
+        for i in 0..d.len() {
+            let c = d.y[i] as usize;
+            cnt[c] += 1;
+            for j in 0..16 {
+                cent[c * 16 + j] += d.x[i * 16 + j] as f64;
+            }
+        }
+        for c in 0..4 {
+            for j in 0..16 {
+                cent[c * 16 + j] /= cnt[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let mut best = (f64::MAX, 0);
+            for c in 0..4 {
+                let dist: f64 = (0..16)
+                    .map(|j| (d.x[i * 16 + j] as f64 - cent[c * 16 + j]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.len() as f64;
+        assert!(acc > 0.8, "nearest-centroid acc={acc}");
+    }
+
+    #[test]
+    fn image_dataset_shapes() {
+        let mut rng = Pcg64::seed(3);
+        let d = ImageDataset::generate(50, 8, 3, 5, 2.0, &mut rng);
+        assert_eq!(d.x.len(), 50 * 8 * 8 * 3);
+        assert_eq!(d.len(), 50);
+        let b = d.batch(&[0, 7, 12]);
+        match b {
+            Batch::Dense { x, y } => {
+                assert_eq!(x.len(), 3 * 8 * 8 * 3);
+                assert_eq!(y.len(), 3);
+            }
+            _ => panic!("expected dense batch"),
+        }
+    }
+
+    #[test]
+    fn batch_gathers_right_rows() {
+        let mut rng = Pcg64::seed(4);
+        let d = VectorDataset::generate(10, 4, 2, 3.0, &mut rng);
+        if let Batch::Dense { x, y } = d.batch(&[3, 5]) {
+            assert_eq!(&x[0..4], &d.x[12..16]);
+            assert_eq!(&x[4..8], &d.x[20..24]);
+            assert_eq!(y, vec![d.y[3], d.y[5]]);
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Figure 8 — quantized SwarmSGD (WideResNet-28-2/CIFAR-10 slot, multiplier
+//! 1): (a) convergence vs steps — quantized tracks full-precision within
+//! <0.3% accuracy; (b) convergence vs time — ~10% end-to-end speedup from
+//! 8-bit lattice exchange.
+
+use super::common::{interactions_for_epochs, paper_cost, run_arm, write_curves, Arm, BackendSpec};
+use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule};
+use crate::output::Table;
+use crate::topology::Topology;
+use std::path::Path;
+
+pub fn run(quick: bool, out_dir: &Path, time_axis: bool) -> Result<(), String> {
+    let (preset, n, data, epochs) = if quick {
+        ("mlp_s", 8usize, 256usize, 4.0f64)
+    } else {
+        ("cnn_s", 8, 512, 12.0)
+    };
+    let batch = 32;
+    let h = 2u64;
+    let lr = 0.05;
+    // the quantized variant's time win comes from shipping ~4x fewer bytes
+    let cost = paper_cost("wideresnet28");
+    let spec = BackendSpec::xla(preset, n, data, 97);
+    let t = interactions_for_epochs(epochs, n, h as f64, data, batch);
+
+    let arms = vec![
+        Arm {
+            lr: LrSchedule::StepDecay { base: lr, total: t },
+            ..Arm::swarm("Swarm fp32", h, t, lr)
+        },
+        Arm {
+            name: "Swarm 8-bit lattice".into(),
+            algo: "swarm".into(),
+            mode: AveragingMode::Quantized { bits: 8, eps: 2e-3 },
+            local_steps: LocalSteps::Fixed(h),
+            t,
+            lr: LrSchedule::StepDecay { base: lr, total: t },
+            h_localsgd: 5,
+        },
+        Arm {
+            name: "Swarm 4-bit lattice".into(),
+            algo: "swarm".into(),
+            mode: AveragingMode::Quantized { bits: 4, eps: 2e-3 },
+            local_steps: LocalSteps::Fixed(h),
+            t,
+            lr: LrSchedule::StepDecay { base: lr, total: t },
+            h_localsgd: 5,
+        },
+    ];
+
+    let axis = if time_axis { "time" } else { "steps" };
+    let mut table = Table::new(&[
+        "variant", "final acc", "final loss", "sim time (s)", "GB on wire", "fallbacks",
+    ]);
+    let mut all = Vec::new();
+    for arm in arms {
+        let m = run_arm(&arm, &spec, n, Topology::Complete, &cost, 13, (t / 12).max(1), false)?;
+        table.row(&[
+            arm.name.clone(),
+            format!("{:.4}", m.final_eval_acc),
+            format!("{:.4}", m.final_eval_loss),
+            format!("{:.1}", m.sim_time),
+            format!("{:.3}", m.total_bits as f64 / 8e9),
+            m.quant_fallbacks.to_string(),
+        ]);
+        all.push(m);
+    }
+    println!("\nFigure 8({}) — quantized Swarm vs fp32, multiplier 1 ({preset}, n={n}):",
+             if time_axis { "b" } else { "a" });
+    table.print();
+    let f = if time_axis { "fig8b_curves.csv" } else { "fig8a_curves.csv" };
+    write_curves(&out_dir.join(f), &all).map_err(|e| e.to_string())?;
+    println!(
+        "\npaper shape ({axis} axis): 8-bit matches fp32 accuracy within \
+         ~0.3%; the quantized variant finishes ~10% sooner (smaller \
+         exchanges), and 4-bit starts to cost accuracy/fallbacks."
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Γ_t analysis figure (paper §4 / Lemma F.3): the model-variance potential
+//! stays bounded independently of t, scales ~H² in the local steps, and is
+//! controlled by the topology's r²/λ₂² — measured against the closed-form
+//! Lemma F.3 bound on a quadratic with known constants.
+
+use super::common::{run_arm, Arm, BackendSpec};
+use crate::analysis::lemma_f3_bound;
+use crate::coordinator::LrSchedule;
+use crate::netmodel::CostModel;
+use crate::output::{CsvVal, CsvWriter, Table};
+use crate::rngx::Pcg64;
+use crate::topology::{Graph, Topology};
+use std::path::Path;
+
+pub fn run(quick: bool, out_dir: &Path) -> Result<(), String> {
+    let n = 16usize;
+    let t: u64 = if quick { 4000 } else { 20000 };
+    let dim = 16;
+    let sigma = 0.5;
+    let eta = 0.02f32;
+    let cost = CostModel::deterministic(1.0);
+
+    let mut table = Table::new(&[
+        "topology", "H", "lambda2", "steady Gamma", "max Gamma", "F.3 bound", "bound/measured",
+    ]);
+    let mut csv = CsvWriter::create(
+        out_dir.join("gamma.csv"),
+        &["topology", "h", "lambda2", "steady_gamma", "max_gamma", "f3_bound"],
+    )
+    .map_err(|e| e.to_string())?;
+
+    // M² estimate: gradient second moment near the operating region
+    let m_sq = {
+        let o = crate::grad::QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41);
+        let g = o.true_grad(&vec![0.0; dim]);
+        g.iter().map(|v| v * v).sum::<f64>() + sigma * sigma * dim as f64
+    };
+
+    for topo in [Topology::Complete, Topology::Hypercube, Topology::Ring] {
+        let (lambda2, r) = {
+            let mut rng = Pcg64::seed(2);
+            let g = Graph::build(topo, n, &mut rng);
+            (g.lambda2(), g.regular_degree().unwrap() as f64)
+        };
+        for h in [1u64, 2, 4, 8] {
+            let spec = BackendSpec::Quadratic { dim, spread: 1.0, sigma, seed: 41 };
+            let arm = Arm {
+                lr: LrSchedule::Constant(eta),
+                ..Arm::swarm(&format!("{topo:?}-H{h}"), h, t, eta)
+            };
+            let m = run_arm(&arm, &spec, n, topo, &cost, 3, (t / 64).max(1), true)?;
+            let gammas: Vec<f64> = m
+                .curve
+                .iter()
+                .map(|p| p.gamma)
+                .filter(|g| g.is_finite())
+                .collect();
+            let steady = gammas[gammas.len() / 2..].iter().sum::<f64>()
+                / (gammas.len() - gammas.len() / 2) as f64;
+            let gmax = gammas.iter().cloned().fold(0.0, f64::max);
+            let bound = lemma_f3_bound(r, lambda2, n, eta as f64, h as f64, m_sq);
+            table.row(&[
+                format!("{topo:?}"),
+                h.to_string(),
+                format!("{lambda2:.3}"),
+                format!("{steady:.4}"),
+                format!("{gmax:.4}"),
+                format!("{bound:.2}"),
+                format!("{:.0}x", bound / steady.max(1e-12)),
+            ]);
+            csv.row_mixed(&[
+                CsvVal::S(format!("{topo:?}")),
+                CsvVal::I(h as i64),
+                CsvVal::F(lambda2),
+                CsvVal::F(steady),
+                CsvVal::F(gmax),
+                CsvVal::F(bound),
+            ])
+            .map_err(|e| e.to_string())?;
+        }
+    }
+    println!("\nGamma potential vs Lemma F.3 bound (n={n}, eta={eta}, T={t}):");
+    table.print();
+    println!(
+        "\npaper shape: Γ_t is bounded independent of t; grows ~H²; ring \
+         (small λ₂) concentrates worse than complete/hypercube; the F.3 \
+         bound holds with (large) constant slack."
+    );
+    csv.flush().map_err(|e| e.to_string())
+}

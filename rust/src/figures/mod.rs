@@ -1,0 +1,74 @@
+//! Figure/table regeneration harnesses — one per artifact in the paper's
+//! evaluation (DESIGN.md §5 maps each id to workload and modules).
+//!
+//! Every harness prints paper-style rows/series to stdout and writes
+//! `results/<id>*.csv`.  `--quick` shrinks workloads for smoke runs.
+
+mod common;
+mod fig1;
+mod fig2;
+mod fig3;
+mod fig5;
+mod fig6;
+mod fig7;
+mod fig8;
+mod gamma;
+mod table1;
+mod table2;
+
+pub use common::{
+    interactions_for_epochs, paper_cost, run_arm, write_curves, Arm, BackendSpec,
+};
+
+use std::path::Path;
+
+/// All known figure ids, in paper order.
+pub const ALL_FIGURES: &[&str] = &[
+    "table1", "table2", "fig1a", "fig1b", "fig2a", "fig2b", "fig3a", "fig5",
+    "fig6a", "fig6b", "fig7", "fig8a", "fig8b", "gamma",
+];
+
+/// Run one harness by id. `quick` shrinks sizes; outputs CSVs to `out_dir`.
+pub fn run_figure(id: &str, quick: bool, out_dir: &Path) -> Result<(), String> {
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    match id {
+        "table1" => table1::run(quick, out_dir),
+        "table2" => table2::run(quick, out_dir),
+        "fig1a" => fig1::run_a(quick, out_dir),
+        "fig1b" => fig1::run_b(quick, out_dir),
+        "fig2a" => fig2::run_a(quick, out_dir),
+        "fig2b" | "fig4" => fig2::run_b(quick, out_dir),
+        "fig3a" => fig3::run(quick, out_dir),
+        "fig5" => fig5::run(quick, out_dir),
+        "fig6a" => fig6::run_a(quick, out_dir),
+        "fig6b" => fig6::run_b(quick, out_dir),
+        "fig7" => fig7::run(quick, out_dir),
+        "fig8a" => fig8::run(quick, out_dir, false),
+        "fig8b" => fig8::run(quick, out_dir, true),
+        "gamma" => gamma::run(quick, out_dir),
+        "all" => {
+            // one subprocess per figure: XLA CPU compilation + execution
+            // retain large allocations for the process lifetime, so a
+            // single long-lived process accumulates tens of GB across the
+            // full suite (observed OOM); child processes bound the peak.
+            let exe = std::env::current_exe().map_err(|e| e.to_string())?;
+            for f in ALL_FIGURES {
+                println!("\n================ {f} ================");
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("figure").arg("--id").arg(f).arg("--out").arg(out_dir);
+                if quick {
+                    cmd.arg("--quick");
+                }
+                let status = cmd.status().map_err(|e| e.to_string())?;
+                if !status.success() {
+                    return Err(format!("figure {f} failed: {status}"));
+                }
+            }
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown figure id '{other}'; known: {} or 'all'",
+            ALL_FIGURES.join(", ")
+        )),
+    }
+}

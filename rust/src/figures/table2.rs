@@ -1,0 +1,176 @@
+//! Table 2 — theory comparison: measured `(1/T)Σ‖∇f(μ_t)‖²` for each
+//! algorithm on a quadratic with KNOWN constants (L, σ², ρ², f − f*),
+//! against the closed-form Theorem 4.1/4.2 upper bounds, across topologies.
+//!
+//! Paper shape: all methods are O(1/√(Tn)); SwarmSGD's bound requires only
+//! (σ²|M², λ₂, r); measured values sit (far) below the bounds; better
+//! connectivity (λ₂ large) helps.
+
+use super::common::{run_arm, Arm, BackendSpec};
+use crate::analysis::{fit_power_law, gap_samples, theorem41_bound, theorem41_t_ok, theorem42_bound, BoundParams};
+use crate::backend::TrainBackend;
+use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule};
+use crate::grad::QuadraticOracle;
+use crate::netmodel::CostModel;
+use crate::output::{CsvVal, CsvWriter, Table};
+use crate::rngx::Pcg64;
+use crate::topology::{Graph, Topology};
+use std::path::Path;
+
+pub fn run(quick: bool, out_dir: &Path) -> Result<(), String> {
+    let n = if quick { 8 } else { 16 };
+    let t: u64 = if quick { 4096 } else { 65536 };
+    let dim = 16;
+    let sigma = 0.2;
+    let spread = 1.0;
+    let h = 2u64;
+    let seed = 31;
+    let cost = CostModel::deterministic(1.0);
+
+    let mut table = Table::new(&[
+        "algorithm", "assumptions", "topology", "lambda2", "measured E||grad||^2",
+        "fit T^-p", "thm4.1 bound", "thm4.2 bound", "T>=n^4",
+    ]);
+    let mut csv = CsvWriter::create(
+        out_dir.join("table2.csv"),
+        &["algo", "topology", "lambda2", "measured", "bound41", "bound42"],
+    )
+    .map_err(|e| e.to_string())?;
+
+    // constants of the oracle (identical across arms: same seed)
+    let probe = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
+    let l = probe.smoothness();
+    let f_gap = {
+        let mut o = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
+        let (p, _) = o.init(0);
+        o.full_loss(&p) - o.f_star()
+    };
+    let rho_sq = probe.rho_sq_at_optimum();
+    // second-moment proxy at init: M² ≈ E‖∇f_i(x₀)‖² + σ²·dim
+    let m_sq = {
+        let o = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
+        let g = o.true_grad(&vec![0.0; dim]);
+        g.iter().map(|v| v * v).sum::<f64>() + sigma * sigma * dim as f64
+    };
+
+    for topo in [Topology::Complete, Topology::Hypercube, Topology::Ring] {
+        let mut rng = Pcg64::seed(1);
+        let graph = Graph::build(topo, n, &mut rng);
+        let lambda2 = graph.lambda2();
+        let r = graph.regular_degree().unwrap_or(0) as f64;
+        let bp = BoundParams { n, r, lambda2, h: h as f64, l, t, f_gap };
+        let b41 = theorem41_bound(&bp, m_sq);
+        let b42 = theorem42_bound(&bp, sigma * sigma * dim as f64, rho_sq);
+
+        for (algo, assume, arm) in [
+            (
+                "SwarmSGD (geom H)",
+                "M2,l2,r",
+                Arm {
+                    name: "swarm-geo".into(),
+                    algo: "swarm".into(),
+                    mode: AveragingMode::NonBlocking,
+                    local_steps: LocalSteps::Geometric(h as f64),
+                    t,
+                    lr: LrSchedule::Theory { n, t },
+                    h_localsgd: 5,
+                },
+            ),
+            (
+                "SwarmSGD (fixed H)",
+                "s2,rho2,l2,r",
+                Arm {
+                    name: "swarm-fixed".into(),
+                    algo: "swarm".into(),
+                    mode: AveragingMode::NonBlocking,
+                    local_steps: LocalSteps::Fixed(h),
+                    t,
+                    lr: LrSchedule::Theory { n, t },
+                    h_localsgd: 5,
+                },
+            ),
+            (
+                "AD-PSGD",
+                "s2,l2,tau",
+                Arm {
+                    lr: LrSchedule::Theory { n, t },
+                    ..Arm::baseline("adpsgd", "adpsgd", t, 0.0)
+                },
+            ),
+            (
+                "SGP",
+                "s2,d,Delta,tau",
+                Arm {
+                    lr: LrSchedule::Theory { n, t: t / n as u64 },
+                    ..Arm::baseline("sgp", "sgp", t / n as u64, 0.0)
+                },
+            ),
+        ] {
+            // run and sample μ_t gradient norms through the curve
+            let spec = BackendSpec::Quadratic { dim, spread, sigma, seed };
+            let every = (arm.t / 32).max(1);
+            let m = run_arm(&arm, &spec, n, topo, &cost, 7, every, false)?;
+            // measured: oracle grad-norm² at the recorded mean-model losses.
+            // we reuse eval_loss-to-gradient relation by re-probing μ via
+            // loss-minimizing trick: we stored μ's loss, so instead measure
+            // via a fresh run-level estimate: E||grad||² ≈ 2·L·(f(μ)−f*) is
+            // an upper proxy; use exact when available.
+            let oracle = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
+            let f_star = oracle.f_star();
+            let measured: f64 = {
+                // smoothness bound ‖∇f(μ)‖² ≤ 2L(f(μ) − f*) — exact enough
+                // for a quadratic with known L to compare against the thms
+                let vals: Vec<f64> = m
+                    .curve
+                    .iter()
+                    .map(|p| 2.0 * l * (p.eval_loss - f_star).max(0.0))
+                    .collect();
+                vals.iter().sum::<f64>() / vals.len().max(1) as f64
+            };
+            // empirical rate exponent over the decay transient
+            let p_fit = {
+                let samples = gap_samples(&m.curve, f_star);
+                let tail: Vec<f64> = samples[samples.len() * 3 / 4..]
+                    .iter()
+                    .map(|s| s.1)
+                    .collect();
+                let floor = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+                let prefix: Vec<(f64, f64)> = samples
+                    .iter()
+                    .copied()
+                    .take_while(|&(_, g)| g > 2.0 * floor.max(1e-12))
+                    .collect();
+                fit_power_law(&prefix).map(|(p, _, _)| p)
+            };
+            table.row(&[
+                algo.to_string(),
+                assume.to_string(),
+                format!("{topo:?}"),
+                format!("{lambda2:.3}"),
+                format!("{measured:.4}"),
+                p_fit.map(|p| format!("{p:.2}")).unwrap_or("-".into()),
+                format!("{b41:.1}"),
+                format!("{b42:.1}"),
+                format!("{}", theorem41_t_ok(&bp)),
+            ]);
+            let _ = csv.row_mixed(&[
+                CsvVal::S(algo.into()),
+                CsvVal::S(format!("{topo:?}")),
+                CsvVal::F(lambda2),
+                CsvVal::F(measured),
+                CsvVal::F(b41),
+                CsvVal::F(b42),
+            ]);
+        }
+    }
+
+    println!("\nTable 2 — assumptions & measured rates vs theory bounds");
+    println!("(quadratic oracle: n={n} d={dim} L={l:.2} sigma={sigma} T={t})");
+    table.print();
+    println!(
+        "\npaper shape: all methods O(1/sqrt(Tn)); measured values sit well \
+         below the (loose, constant-heavy) theorem bounds; ring (small λ₂) \
+         degrades vs complete/hypercube."
+    );
+    csv.flush().map_err(|e| e.to_string())
+}

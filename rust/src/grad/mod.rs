@@ -1,0 +1,15 @@
+//! Pure-Rust gradient oracles (DESIGN.md S15).
+//!
+//! These implement [`crate::backend::TrainBackend`] without XLA so that
+//! (a) theory experiments (Γ_t, Theorem 4.1/4.2 bound checks) can use
+//! objectives with *known* L, σ², ρ², x*, and exact gradients;
+//! (b) property/integration tests run in milliseconds;
+//! (c) the n=256 scaling figure (paper Fig. 6a) is tractable.
+
+mod logistic;
+mod quadratic;
+mod softmax;
+
+pub use logistic::LogisticOracle;
+pub use quadratic::QuadraticOracle;
+pub use softmax::SoftmaxOracle;

@@ -1,0 +1,205 @@
+//! Linear softmax classifier oracle on Gaussian-mixture shards — the
+//! lightweight "CIFAR-10/ResNet20" stand-in used by the n=256 scaling
+//! figure (Fig. 6a) where per-step XLA dispatch would dominate.
+
+use crate::backend::{EvalResult, TrainBackend};
+use crate::data::{Batch, ShardIter, VectorDataset};
+use crate::rngx::Pcg64;
+
+pub struct SoftmaxOracle {
+    data: VectorDataset,
+    test: VectorDataset,
+    shards: Vec<ShardIter>,
+    pub batch: usize,
+    dim: usize,
+    classes: usize,
+    rng: Pcg64,
+}
+
+impl SoftmaxOracle {
+    pub fn new(
+        train: VectorDataset,
+        test: VectorDataset,
+        shard_idxs: Vec<Vec<usize>>,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let shards = shard_idxs
+            .into_iter()
+            .map(|s| ShardIter::new(s, rng.split(0)))
+            .collect();
+        let (dim, classes) = (train.dim, train.classes);
+        Self { data: train, test, shards, batch, dim, classes, rng }
+    }
+
+    /// Convenience constructor: generate data + iid shards internally.
+    pub fn synthetic(
+        n_train: usize,
+        dim: usize,
+        classes: usize,
+        agents: usize,
+        batch: usize,
+        separation: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let (train, test) = VectorDataset::generate_split(
+            n_train, n_train / 5 + 32, dim, classes, separation, &mut rng,
+        );
+        let shards = crate::data::iid_shards(train.len(), agents, &mut rng);
+        Self::new(train, test, shards, batch, seed ^ 0xABCD)
+    }
+
+    /// Loss+grad of the softmax CE on a batch. W is (dim+1) × classes
+    /// (last row = bias), packed row-major into the flat params.
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[i32], grad: Option<&mut [f32]>) -> f64 {
+        let (d, c) = (self.dim, self.classes);
+        let bsz = y.len();
+        let mut total = 0.0f64;
+        let mut g = grad;
+        let mut logits = vec![0.0f64; c];
+        for b in 0..bsz {
+            let xb = &x[b * d..(b + 1) * d];
+            for k in 0..c {
+                let mut z = params[d * c + k] as f64; // bias row
+                for j in 0..d {
+                    z += params[j * c + k] as f64 * xb[j] as f64;
+                }
+                logits[k] = z;
+            }
+            let m = logits.iter().cloned().fold(f64::MIN, f64::max);
+            let se: f64 = logits.iter().map(|z| (z - m).exp()).sum();
+            let lse = m + se.ln();
+            total += lse - logits[y[b] as usize];
+            if let Some(gr) = g.as_deref_mut() {
+                for k in 0..c {
+                    let p = (logits[k] - lse).exp();
+                    let delta = p - f64::from(k as i32 == y[b]);
+                    let scale = (delta / bsz as f64) as f32;
+                    for j in 0..d {
+                        gr[j * c + k] += scale * xb[j];
+                    }
+                    gr[d * c + k] += scale;
+                }
+            }
+        }
+        total / bsz as f64
+    }
+}
+
+impl TrainBackend for SoftmaxOracle {
+    fn param_count(&self) -> usize {
+        (self.dim + 1) * self.classes
+    }
+
+    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Pcg64::seed(seed as u64 ^ 0x50F7);
+        let scale = 0.01 / (self.dim as f32).sqrt();
+        let p = (0..self.param_count())
+            .map(|_| r.normal() as f32 * scale)
+            .collect();
+        (p, vec![0.0; self.param_count()])
+    }
+
+    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
+        let idxs = self.shards[agent].next_indices(self.batch);
+        let Batch::Dense { x, y } = self.data.batch(&idxs) else {
+            unreachable!()
+        };
+        let mut grad = vec![0.0f32; params.len()];
+        let loss = self.loss_grad(params, &x, &y, Some(&mut grad));
+        // momentum SGD (mu = 0.9, matching the deep-model recipe)
+        for j in 0..params.len() {
+            mom[j] = 0.9 * mom[j] + grad[j];
+            params[j] -= lr * mom[j];
+        }
+        let _ = &mut self.rng;
+        loss
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let (d, c) = (self.dim, self.classes);
+        let n = self.test.len();
+        let mut correct = 0usize;
+        let loss = self.loss_grad(params, &self.test.x, &self.test.y, None);
+        for b in 0..n {
+            let xb = &self.test.x[b * d..(b + 1) * d];
+            let mut best = (f64::MIN, 0usize);
+            for k in 0..c {
+                let mut z = params[d * c + k] as f64;
+                for j in 0..d {
+                    z += params[j * c + k] as f64 * xb[j] as f64;
+                }
+                if z > best.0 {
+                    best = (z, k);
+                }
+            }
+            correct += usize::from(best.1 == self.test.y[b] as usize);
+        }
+        EvalResult { loss, accuracy: correct as f64 / n as f64 }
+    }
+
+    fn full_loss(&mut self, params: &[f32]) -> f64 {
+        self.loss_grad(params, &self.data.x, &self.data.y, None)
+    }
+
+    fn epochs(&self, agent: usize) -> f64 {
+        self.shards[agent].epochs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_learns_separable_mixture() {
+        let mut o = SoftmaxOracle::synthetic(2000, 16, 4, 1, 32, 4.0, 11);
+        let (mut p, mut m) = o.init(0);
+        let start = o.eval(&p);
+        for _ in 0..300 {
+            o.step(0, &mut p, &mut m, 0.05);
+        }
+        let end = o.eval(&p);
+        assert!(end.loss < start.loss * 0.5, "{} -> {}", start.loss, end.loss);
+        assert!(end.accuracy > 0.85, "acc={}", end.accuracy);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let o = SoftmaxOracle::synthetic(64, 6, 3, 1, 8, 3.0, 5);
+        let mut r = Pcg64::seed(1);
+        let params: Vec<f32> = (0..o.param_count()).map(|_| r.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..4 * 6).map(|_| r.normal() as f32).collect();
+        let y = vec![0i32, 1, 2, 1];
+        let mut grad = vec![0.0f32; params.len()];
+        o.loss_grad(&params, &x, &y, Some(&mut grad));
+        let h = 1e-3f32;
+        for j in [0usize, 5, 11, o.param_count() - 1] {
+            let mut pp = params.clone();
+            pp[j] += h;
+            let lp = o.loss_grad(&pp, &x, &y, None);
+            pp[j] -= 2.0 * h;
+            let lm = o.loss_grad(&pp, &x, &y, None);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - grad[j] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {j}: fd={fd} analytic={}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn epochs_accounting() {
+        let mut o = SoftmaxOracle::synthetic(320, 8, 2, 2, 32, 3.0, 2);
+        let (mut p, mut m) = o.init(0);
+        for _ in 0..5 {
+            o.step(0, &mut p, &mut m, 0.01);
+        }
+        // agent 0 shard = 160 examples; 5 steps × 32 = 160 = 1 epoch
+        assert!((o.epochs(0) - 1.0).abs() < 1e-9, "epochs={}", o.epochs(0));
+        assert_eq!(o.epochs(1), 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # swarm-sgd
+//!
+//! Production-grade reproduction of **“Decentralized SGD with Asynchronous,
+//! Local, and Quantized Updates”** (Nadiradze et al., NeurIPS 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the SwarmSGD coordinator: discrete-event cluster
+//!   engine, pairwise gossip scheduling, blocking/non-blocking/quantized
+//!   averaging, the decentralized baselines (AD-PSGD, D-PSGD, SGP, local
+//!   SGD, allreduce SGD), topology/spectral math, the lattice codec, and
+//!   the figure-regeneration harnesses.
+//! * **L2 (python/compile)** — JAX models (MLP / CNN / transformer LM) with
+//!   flat-packed parameters, lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
+//!   lattice quantize-average, fused SGD update) with pure-jnp oracles.
+//!
+//! Python never runs at training time: `make artifacts` AOT-compiles the
+//! models; the [`runtime`] module loads them through PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod backend;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod grad;
+pub mod netmodel;
+pub mod output;
+pub mod quant;
+pub mod rngx;
+pub mod runtime;
+pub mod topology;

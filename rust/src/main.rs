@@ -1,0 +1,240 @@
+//! `swarm` — the leader binary: train, regenerate paper figures, inspect
+//! artifacts, probe topologies.  See `swarm help`.
+
+use std::path::Path;
+use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::cli::{Cli, USAGE};
+use swarm_sgd::config::RunConfig;
+use swarm_sgd::coordinator::baselines::{
+    AdPsgdRunner, AllReduceRunner, DPsgdRunner, LocalSgdRunner, RoundsConfig, SgpRunner,
+};
+use swarm_sgd::coordinator::{RunContext, RunMetrics, SwarmConfig, SwarmRunner};
+use swarm_sgd::figures::{run_figure, write_curves};
+use swarm_sgd::grad::{LogisticOracle, QuadraticOracle, SoftmaxOracle};
+use swarm_sgd::output::Table;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::runtime::{load_manifest, XlaBackend, XlaBackendConfig};
+use swarm_sgd::topology::Graph;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match Cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cli.subcommand.as_str() {
+        "train" => cmd_train(&cli),
+        "figure" => cmd_figure(&cli),
+        "inspect" => cmd_inspect(&cli),
+        "topo" => cmd_topo(&cli),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_backend(cfg: &RunConfig) -> Result<Box<dyn TrainBackend>, String> {
+    if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
+        return Ok(match kind {
+            "quadratic" => Box::new(QuadraticOracle::new(
+                64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed,
+            )),
+            "softmax" => Box::new(SoftmaxOracle::synthetic(
+                cfg.data_per_agent * cfg.n,
+                32,
+                10,
+                cfg.n,
+                32,
+                4.0,
+                cfg.seed,
+            )),
+            "logistic" => Box::new(LogisticOracle::synthetic(
+                cfg.data_per_agent * cfg.n,
+                16,
+                cfg.n,
+                32,
+                cfg.shard == swarm_sgd::config::ShardMode::Iid,
+                cfg.seed,
+            )),
+            k => return Err(format!("unknown oracle '{k}'")),
+        });
+    }
+    let xcfg = XlaBackendConfig {
+        agents: cfg.n,
+        data_per_agent: cfg.data_per_agent,
+        shard: cfg.shard,
+        separation: 3.0,
+        seed: cfg.seed,
+        eval_batches: 2,
+    };
+    Ok(Box::new(
+        XlaBackend::load(Path::new(&cfg.artifacts_dir), &cfg.preset, xcfg)
+            .map_err(|e| format!("{e:#}"))?,
+    ))
+}
+
+fn cmd_train(cli: &Cli) -> Result<(), String> {
+    let mut cfg = match cli.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            RunConfig::from_ini(&text)?
+        }
+        None => RunConfig::default(),
+    };
+    for (k, v) in cli.overrides() {
+        cfg.set(&k, &v)?;
+    }
+    if cli.has("quick") {
+        cfg.interactions = cfg.interactions.min(100);
+    }
+    println!("config: {cfg:?}\n");
+
+    let mut backend = build_backend(&cfg)?;
+    let mut rng = Pcg64::seed(cfg.seed);
+    let graph = Graph::build(cfg.topology_enum()?, cfg.n, &mut rng);
+    println!(
+        "topology: {} n={} degree={:?} lambda2={:.4}",
+        cfg.topology,
+        cfg.n,
+        graph.regular_degree(),
+        graph.lambda2()
+    );
+    let cost = cfg.cost_model();
+    let mut ctx = RunContext {
+        backend: backend.as_mut(),
+        graph: &graph,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: cfg.eval_every,
+        track_gamma: cfg.track_gamma,
+    };
+
+    let started = std::time::Instant::now();
+    let metrics: RunMetrics = match cfg.algo.as_str() {
+        "swarm" => {
+            let scfg = SwarmConfig {
+                n: cfg.n,
+                local_steps: cfg.local_steps(),
+                mode: cfg.averaging_mode()?,
+                lr: cfg.lr_schedule_enum()?,
+                interactions: cfg.interactions,
+                seed: cfg.seed,
+                name: "swarm".into(),
+            };
+            SwarmRunner::new(scfg, &mut ctx).run(&mut ctx)
+        }
+        algo => {
+            let rcfg = RoundsConfig {
+                n: cfg.n,
+                rounds: cfg.interactions,
+                lr: cfg.lr_schedule_enum()?,
+                seed: cfg.seed,
+                name: algo.to_string(),
+                h: cfg.h.round().max(1.0) as u64,
+            };
+            match algo {
+                "adpsgd" => AdPsgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
+                "dpsgd" => DPsgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
+                "sgp" => SgpRunner::new(rcfg, &mut ctx).run(&mut ctx),
+                "localsgd" => LocalSgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
+                "allreduce" => AllReduceRunner::new(rcfg, &mut ctx).run(&mut ctx),
+                a => return Err(format!("unknown algo '{a}'")),
+            }
+        }
+    };
+    let wall = started.elapsed();
+
+    println!("\nloss curve (eval on mean model μ_t):");
+    let mut table =
+        Table::new(&["t", "par.time", "sim time", "train loss", "eval loss", "acc", "gamma"]);
+    for p in &metrics.curve {
+        table.row(&[
+            p.t.to_string(),
+            format!("{:.1}", p.parallel_time),
+            format!("{:.1}", p.sim_time),
+            format!("{:.4}", p.train_loss),
+            format!("{:.4}", p.eval_loss),
+            if p.eval_acc.is_nan() { "-".into() } else { format!("{:.3}", p.eval_acc) },
+            if p.gamma.is_nan() { "-".into() } else { format!("{:.4}", p.gamma) },
+        ]);
+    }
+    table.print();
+    println!(
+        "\nsummary: interactions={} local_steps={} epochs/agent={:.2}\n\
+         sim_time={:.1}s (compute {:.1}s, comm {:.1}s)  wire={:.3} GB  \
+         quant_fallbacks={}\nwall-clock: {:.1}s",
+        metrics.interactions,
+        metrics.local_steps,
+        metrics.epochs,
+        metrics.sim_time,
+        metrics.compute_time_total,
+        metrics.comm_time_total,
+        metrics.total_bits as f64 / 8e9,
+        metrics.quant_fallbacks,
+        wall.as_secs_f64(),
+    );
+    if !cfg.out_csv.is_empty() {
+        write_curves(Path::new(&cfg.out_csv), &[metrics]).map_err(|e| e.to_string())?;
+        println!("curve written to {}", cfg.out_csv);
+    }
+    Ok(())
+}
+
+fn cmd_figure(cli: &Cli) -> Result<(), String> {
+    let id = cli
+        .get("id")
+        .ok_or("figure: missing --id (try --id all)")?
+        .to_string();
+    let quick = cli.has("quick");
+    let out = cli.get_or("out", "results");
+    run_figure(&id, quick, Path::new(&out))
+}
+
+fn cmd_inspect(cli: &Cli) -> Result<(), String> {
+    let dir = cli.get_or("artifacts", "artifacts");
+    let manifests = load_manifest(Path::new(&dir))?;
+    let mut table =
+        Table::new(&["preset", "model", "params", "batch", "k", "kind", "artifacts"]);
+    for m in &manifests {
+        table.row(&[
+            m.name.clone(),
+            m.model.clone(),
+            m.param_count.to_string(),
+            m.batch.to_string(),
+            m.k.to_string(),
+            format!("{:?}", m.kind()),
+            m.artifacts.len().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_topo(cli: &Cli) -> Result<(), String> {
+    let n: usize = cli.parse_flag("n")?.unwrap_or(16);
+    let mut cfg = RunConfig::default();
+    cfg.n = n;
+    cfg.topology = cli.get_or("topology", "complete");
+    let mut rng = Pcg64::seed(1);
+    let g = Graph::build(cfg.topology_enum()?, n, &mut rng);
+    let r = g.regular_degree().unwrap_or(0) as f64;
+    let l2 = g.lambda2();
+    println!("topology {} n={n}", cfg.topology);
+    println!("  degree r        = {r}");
+    println!("  edges           = {}", g.edges().len());
+    println!("  lambda2         = {l2:.6}");
+    println!(
+        "  r^2/lambda2^2+1 = {:.4}  (theorem topology factor)",
+        r * r / (l2 * l2) + 1.0
+    );
+    Ok(())
+}

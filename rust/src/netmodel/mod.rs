@@ -1,0 +1,180 @@
+//! Communication/compute cost models — the simulated Piz Daint (DESIGN.md §2).
+//!
+//! The paper's time-axis figures (1b, 2b/4, 5, 7, 8b) measure wall-clock on a
+//! Cray XC50 with Aries interconnect.  We charge time in a calibrated model:
+//!
+//! * compute: per-batch time with optional log-normal jitter/stragglers —
+//!   the paper's Figure 4 base value (0.4 s/batch for ResNet18 on P100) is
+//!   the default so the y-axes line up;
+//! * point-to-point: `latency + bytes/bandwidth` (Aries-ish: 1.5 µs, ~10 GB/s
+//!   effective per flow);
+//! * ring allreduce: `2(n−1)/n · bytes/bandwidth + 2 log₂n · latency`
+//!   (bandwidth-optimal ring; what NCCL does for large messages);
+//! * gossip pairwise exchange: both models cross the wire (send + recv ≈
+//!   full duplex → one transfer time), plus a handshake latency.
+//!
+//! All values are configurable; figures sweep them where the paper does.
+
+use crate::rngx::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// mean compute time per local SGD step (seconds)
+    pub batch_time: f64,
+    /// log-normal jitter sigma on compute (0 = deterministic)
+    pub jitter: f64,
+    /// probability a step is a straggler (multiplied by `straggle_factor`)
+    pub straggler_prob: f64,
+    pub straggle_factor: f64,
+    /// p2p message latency (seconds)
+    pub latency: f64,
+    /// p2p effective bandwidth (bytes/second)
+    pub bandwidth: f64,
+    /// override for the model's wire size (simulate paper-scale models —
+    /// e.g. ResNet18's 45 MB — while computing on a small stand-in)
+    pub model_bytes_override: Option<u64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            batch_time: 0.4,        // paper Fig. 4 base value (ResNet18/P100)
+            jitter: 0.05,
+            straggler_prob: 0.01,
+            straggle_factor: 3.0,
+            latency: 1.5e-6,        // Aries-class
+            bandwidth: 10.0e9,      // effective per-flow
+            model_bytes_override: None,
+        }
+    }
+}
+
+impl CostModel {
+    /// Deterministic variant (tests, theory figures).
+    pub fn deterministic(batch_time: f64) -> Self {
+        Self {
+            batch_time,
+            jitter: 0.0,
+            straggler_prob: 0.0,
+            straggle_factor: 1.0,
+            ..Self::default()
+        }
+    }
+
+    /// Time for one local SGD step on one node.
+    pub fn compute_time(&self, rng: &mut Pcg64) -> f64 {
+        let mut t = self.batch_time;
+        if self.jitter > 0.0 {
+            t *= (rng.normal() * self.jitter).exp();
+        }
+        if self.straggler_prob > 0.0 && rng.bernoulli(self.straggler_prob) {
+            t *= self.straggle_factor;
+        }
+        t
+    }
+
+    /// One-way p2p transfer of `bytes`.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Pairwise gossip exchange (full-duplex swap of `bytes` each way +
+    /// handshake round-trip).
+    pub fn exchange_time(&self, bytes: u64) -> f64 {
+        2.0 * self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Ring allreduce over `n` nodes of `bytes` (reduce-scatter + allgather).
+    pub fn allreduce_time(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = 2.0 * (n as f64).log2();
+        2.0 * ((n - 1) as f64 / n as f64) * bytes as f64 / self.bandwidth
+            + steps * self.latency
+    }
+
+    /// Model size on the wire at full precision.
+    pub fn model_bytes(d: usize) -> u64 {
+        4 * d as u64
+    }
+
+    /// Wire size for a `d`-parameter model, honoring the override.
+    pub fn wire_bytes(&self, d: usize) -> u64 {
+        self.model_bytes_override.unwrap_or(4 * d as u64)
+    }
+
+    /// Scale quantized wire bits when an override is active (the override
+    /// re-scales the full-precision size; quantized payloads shrink by the
+    /// same ratio).
+    pub fn scale_bits(&self, bits: u64, d: usize) -> u64 {
+        match self.model_bytes_override {
+            None => bits,
+            Some(ov) => {
+                let full = (4 * d as u64).max(1);
+                (bits as f64 * ov as f64 / full as f64) as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_compute_is_constant() {
+        let m = CostModel::deterministic(0.4);
+        let mut r = Pcg64::seed(1);
+        for _ in 0..10 {
+            assert_eq!(m.compute_time(&mut r), 0.4);
+        }
+    }
+
+    #[test]
+    fn jitter_changes_times_but_keeps_mean() {
+        let m = CostModel { jitter: 0.2, straggler_prob: 0.0, ..CostModel::default() };
+        let mut r = Pcg64::seed(2);
+        let ts: Vec<f64> = (0..20_000).map(|_| m.compute_time(&mut r)).collect();
+        let mean = ts.iter().sum::<f64>() / ts.len() as f64;
+        // lognormal mean = batch_time * exp(sigma^2/2)
+        let expect = 0.4 * (0.02f64).exp();
+        assert!((mean - expect).abs() < 0.01, "mean={mean}");
+        assert!(ts.iter().any(|&t| (t - 0.4).abs() > 0.01));
+    }
+
+    #[test]
+    fn allreduce_scales_with_n_and_bytes() {
+        let m = CostModel::default();
+        let t8 = m.allreduce_time(8, 1 << 20);
+        let t64 = m.allreduce_time(64, 1 << 20);
+        assert!(t64 > t8); // latency term grows, bandwidth term saturates
+        let tbig = m.allreduce_time(8, 1 << 24);
+        assert!(tbig > 10.0 * t8 / 16.0);
+        assert_eq!(m.allreduce_time(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn exchange_cheaper_than_allreduce_at_scale() {
+        // the core SwarmSGD claim: pairwise cost is independent of n
+        let m = CostModel::default();
+        let bytes = CostModel::model_bytes(25_000_000); // 100 MB model
+        let pair = m.exchange_time(bytes);
+        let ar64 = m.allreduce_time(64, bytes);
+        assert!(pair < ar64, "pair={pair} ar={ar64}");
+    }
+
+    #[test]
+    fn straggler_inflates_tail() {
+        let m = CostModel {
+            jitter: 0.0,
+            straggler_prob: 0.5,
+            straggle_factor: 4.0,
+            ..CostModel::default()
+        };
+        let mut r = Pcg64::seed(3);
+        let ts: Vec<f64> = (0..1000).map(|_| m.compute_time(&mut r)).collect();
+        let slow = ts.iter().filter(|&&t| t > 1.0).count();
+        assert!((300..700).contains(&slow));
+    }
+}

@@ -1,0 +1,111 @@
+//! Model checkpointing: flat parameter vectors as `.npy` files (v1.0,
+//! little-endian f32, 1-D) — loadable by numpy/JAX for offline analysis,
+//! and reloadable by the coordinator to resume or evaluate.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Write a flat f32 vector as a 1-D `.npy` (format 1.0).
+pub fn save_npy(path: &Path, data: &[f32]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    let header_body = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({},), }}",
+        data.len()
+    );
+    // pad header (incl. trailing \n) so that 10 + len is a multiple of 64
+    let unpadded = 10 + header_body.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    let header = format!("{header_body}{}\n", " ".repeat(pad));
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)
+}
+
+/// Read a 1-D little-endian f32 `.npy` written by [`save_npy`] (or numpy).
+pub fn load_npy(path: &Path) -> std::io::Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "not an npy file",
+        ));
+    }
+    let mut hlen = [0u8; 2];
+    f.read_exact(&mut hlen)?;
+    let hlen = u16::from_le_bytes(hlen) as usize;
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+    if !header.contains("'<f4'") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("expected <f4 dtype, header: {header}"),
+        ));
+    }
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "payload not a multiple of 4 bytes",
+        ));
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("swarm_npy_{}", std::process::id()));
+        let path = dir.join("model.npy");
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save_npy(&path, &data).unwrap();
+        let back = load_npy(&path).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let dir = std::env::temp_dir().join(format!("swarm_npy2_{}", std::process::id()));
+        let path = dir.join("m.npy");
+        save_npy(&path, &[1.0, 2.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+        // payload
+        assert_eq!(&bytes[10 + hlen..], &[0, 0, 128, 63, 0, 0, 0, 64]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("swarm_npy3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.npy");
+        std::fs::write(&path, b"not an npy at all").unwrap();
+        assert!(load_npy(&path).is_err());
+    }
+
+    #[test]
+    fn empty_vector() {
+        let dir = std::env::temp_dir().join(format!("swarm_npy4_{}", std::process::id()));
+        let path = dir.join("empty.npy");
+        save_npy(&path, &[]).unwrap();
+        assert!(load_npy(&path).unwrap().is_empty());
+    }
+}

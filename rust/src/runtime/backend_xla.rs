@@ -1,0 +1,353 @@
+//! [`XlaBackend`] — the real three-layer training path as a [`TrainBackend`]:
+//! per-agent synthetic data shards feed the AOT-compiled JAX+Pallas step
+//! executables through PJRT.
+
+use super::manifest::{find_preset, ModelManifest};
+use super::model::XlaModel;
+use crate::backend::{EvalResult, TrainBackend};
+use crate::config::{DataKind, ShardMode};
+use crate::data::{
+    dirichlet_shards, iid_shards, label_shards, Batch, ImageDataset, MarkovCorpus,
+    ShardIter, TokenBatcher, VectorDataset,
+};
+use crate::rngx::Pcg64;
+use anyhow::Result;
+use std::path::Path;
+
+/// Data-generation knobs for the XLA backend.
+#[derive(Clone, Debug)]
+pub struct XlaBackendConfig {
+    pub agents: usize,
+    /// training examples per agent (dense) / tokens per agent (LM)
+    pub data_per_agent: usize,
+    pub shard: ShardMode,
+    /// Gaussian-mixture class separation
+    pub separation: f32,
+    pub seed: u64,
+    /// held-out evaluation batches
+    pub eval_batches: usize,
+}
+
+impl Default for XlaBackendConfig {
+    fn default() -> Self {
+        Self {
+            agents: 8,
+            data_per_agent: 512,
+            shard: ShardMode::Iid,
+            separation: 3.0,
+            seed: 7,
+            eval_batches: 4,
+        }
+    }
+}
+
+enum DataSource {
+    Dense {
+        train: DenseKind,
+        shards: Vec<ShardIter>,
+    },
+    Tokens {
+        batchers: Vec<TokenBatcher>,
+        /// held-out token stream
+        test: Vec<i32>,
+    },
+}
+
+enum DenseKind {
+    Vector(VectorDataset),
+    Image(ImageDataset),
+}
+
+impl DenseKind {
+    fn batch(&self, idxs: &[usize]) -> Batch {
+        match self {
+            DenseKind::Vector(d) => d.batch(idxs),
+            DenseKind::Image(d) => d.batch(idxs),
+        }
+    }
+}
+
+/// The PJRT-backed training backend.
+pub struct XlaBackend {
+    pub model: XlaModel,
+    cfg: XlaBackendConfig,
+    source: DataSource,
+    /// held-out dense set (None for token models)
+    test_dense: Option<DenseKind>,
+    shape_x: Vec<i64>,
+    shape_y: Vec<i64>,
+    rng: Pcg64,
+    /// lazily measured: is the lax.scan step_k artifact faster per step
+    /// than k separate dispatches on this host? (XLA CPU often pessimizes
+    /// scan bodies — see EXPERIMENTS.md §Perf)
+    step_k_faster: std::cell::Cell<Option<bool>>,
+}
+
+impl XlaBackend {
+    /// Load preset `name` from `artifacts_dir` and synthesize shards.
+    pub fn load(artifacts_dir: &Path, name: &str, cfg: XlaBackendConfig) -> Result<Self> {
+        let manifest = find_preset(artifacts_dir, name).map_err(anyhow::Error::msg)?;
+        let model = XlaModel::load(manifest)?;
+        Self::with_model(model, cfg)
+    }
+
+    pub fn with_model(model: XlaModel, cfg: XlaBackendConfig) -> Result<Self> {
+        let mut rng = Pcg64::seed(cfg.seed);
+        let m = &model.manifest;
+        let b = m.batch as i64;
+        let (source, test_dense, shape_x, shape_y) = match m.kind() {
+            DataKind::Vector => {
+                let dim = m.field_usize("in_dim").expect("manifest in_dim");
+                let classes = m.field_usize("classes").expect("manifest classes");
+                let n = cfg.agents * cfg.data_per_agent;
+                let (train, test) = VectorDataset::generate_split(
+                    n,
+                    m.batch * cfg.eval_batches,
+                    dim,
+                    classes,
+                    cfg.separation,
+                    &mut rng,
+                );
+                let shards = make_shards(&train.y, cfg.agents, cfg.shard, &mut rng);
+                let iters = shards
+                    .into_iter()
+                    .map(|s| ShardIter::new(s, rng.split(11)))
+                    .collect();
+                (
+                    DataSource::Dense { train: DenseKind::Vector(train), shards: iters },
+                    Some(DenseKind::Vector(test)),
+                    vec![b, dim as i64],
+                    vec![b],
+                )
+            }
+            DataKind::Image => {
+                let hw = m.field_usize("image").expect("manifest image");
+                let chans = m.field_usize("chan_in").expect("manifest chan_in");
+                let classes = m.field_usize("classes").expect("manifest classes");
+                let n = cfg.agents * cfg.data_per_agent;
+                let (train, test) = ImageDataset::generate_split(
+                    n,
+                    m.batch * cfg.eval_batches,
+                    hw,
+                    chans,
+                    classes,
+                    cfg.separation,
+                    &mut rng,
+                );
+                let shards = make_shards(&train.y, cfg.agents, cfg.shard, &mut rng);
+                let iters = shards
+                    .into_iter()
+                    .map(|s| ShardIter::new(s, rng.split(13)))
+                    .collect();
+                (
+                    DataSource::Dense { train: DenseKind::Image(train), shards: iters },
+                    Some(DenseKind::Image(test)),
+                    vec![b, hw as i64, hw as i64, chans as i64],
+                    vec![b],
+                )
+            }
+            DataKind::Tokens => {
+                let vocab = m.field_usize("vocab").expect("manifest vocab");
+                let seq = m.field_usize("seq").expect("manifest seq");
+                let total = cfg.agents * cfg.data_per_agent + m.batch * cfg.eval_batches * (seq + 1);
+                let corpus = MarkovCorpus::generate(vocab, total, 4, &mut rng);
+                let test_len = m.batch * cfg.eval_batches * (seq + 1);
+                let (train_toks, test_toks) = corpus.tokens.split_at(corpus.len() - test_len);
+                let shard_len = train_toks.len() / cfg.agents;
+                let batchers = (0..cfg.agents)
+                    .map(|a| {
+                        let lo = a * shard_len;
+                        TokenBatcher::new(
+                            &train_toks[lo..lo + shard_len],
+                            seq,
+                            m.batch,
+                            rng.split(a as u64),
+                        )
+                    })
+                    .collect();
+                (
+                    DataSource::Tokens { batchers, test: test_toks.to_vec() },
+                    None,
+                    vec![b, seq as i64],
+                    vec![b, seq as i64],
+                )
+            }
+        };
+        Ok(Self {
+            model,
+            cfg,
+            source,
+            test_dense,
+            shape_x,
+            shape_y,
+            rng,
+            step_k_faster: std::cell::Cell::new(None),
+        })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.model.manifest
+    }
+
+    fn next_batch(&mut self, agent: usize) -> Batch {
+        match &mut self.source {
+            DataSource::Dense { train, shards } => {
+                let idxs = shards[agent].next_indices(self.model.manifest.batch);
+                train.batch(&idxs)
+            }
+            DataSource::Tokens { batchers, .. } => batchers[agent].next_batch(),
+        }
+    }
+
+    /// Evaluation batches over the held-out set (deterministic coverage).
+    fn eval_batches(&mut self) -> Vec<Batch> {
+        let bsz = self.model.manifest.batch;
+        match (&self.test_dense, &self.source) {
+            (Some(test), _) => {
+                let n = match test {
+                    DenseKind::Vector(d) => d.len(),
+                    DenseKind::Image(d) => d.len(),
+                };
+                (0..self.cfg.eval_batches)
+                    .map(|k| {
+                        let idxs: Vec<usize> =
+                            (0..bsz).map(|i| (k * bsz + i) % n).collect();
+                        test.batch(&idxs)
+                    })
+                    .collect()
+            }
+            (None, DataSource::Tokens { test, .. }) => {
+                let seq = self
+                    .model
+                    .manifest
+                    .field_usize("seq")
+                    .expect("manifest seq");
+                let mut out = Vec::new();
+                let mut pos = 0usize;
+                for _ in 0..self.cfg.eval_batches {
+                    let mut x = Vec::with_capacity(bsz * seq);
+                    let mut y = Vec::with_capacity(bsz * seq);
+                    for _ in 0..bsz {
+                        if pos + seq + 1 >= test.len() {
+                            pos = 0;
+                        }
+                        x.extend_from_slice(&test[pos..pos + seq]);
+                        y.extend_from_slice(&test[pos + 1..pos + seq + 1]);
+                        pos += seq;
+                    }
+                    out.push(Batch::Tokens { x, y });
+                }
+                out
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Tokens-per-label-position for accuracy normalization.
+    fn labels_per_batch(&self) -> f64 {
+        let m = &self.model.manifest;
+        match m.kind() {
+            DataKind::Tokens => {
+                (m.batch * m.field_usize("seq").unwrap_or(1)) as f64
+            }
+            _ => m.batch as f64,
+        }
+    }
+}
+
+fn make_shards(
+    labels: &[i32],
+    agents: usize,
+    mode: ShardMode,
+    rng: &mut Pcg64,
+) -> Vec<Vec<usize>> {
+    match mode {
+        ShardMode::Iid => iid_shards(labels.len(), agents, rng),
+        ShardMode::ByLabel => label_shards(labels, agents),
+        ShardMode::Dirichlet(a) => dirichlet_shards(labels, agents, a, rng),
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn param_count(&self) -> usize {
+        self.model.param_count()
+    }
+
+    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>) {
+        self.model.init(seed as i32).expect("init artifact failed")
+    }
+
+    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
+        let batch = self.next_batch(agent);
+        let _ = &mut self.rng;
+        self.model
+            .step(params, mom, &batch, &self.shape_x, &self.shape_y, lr)
+            .expect("step artifact failed")
+    }
+
+    fn step_burst(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32, h: u64) -> f64 {
+        let k = self.model.manifest.k as u64;
+        // First time we see a burst that could use the fused lax.scan
+        // artifact, race it against k unit dispatches (both do real
+        // training work, so nothing is wasted) and remember the winner.
+        if self.step_k_faster.get().is_none() && h >= 2 * k && k > 1 {
+            let t0 = std::time::Instant::now();
+            let batches: Vec<Batch> = (0..k).map(|_| self.next_batch(agent)).collect();
+            self.model
+                .step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr)
+                .expect("step_k artifact failed");
+            let fused = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            for _ in 0..k {
+                self.step(agent, params, mom, lr);
+            }
+            let unit = t1.elapsed();
+            self.step_k_faster.set(Some(fused < unit));
+            return self.step_burst(agent, params, mom, lr, h.saturating_sub(2 * k));
+        }
+        let use_fused = self.step_k_faster.get().unwrap_or(false) && k > 1;
+        let mut remaining = h;
+        let mut last = f64::NAN;
+        if use_fused {
+            while remaining >= k {
+                let batches: Vec<Batch> =
+                    (0..k).map(|_| self.next_batch(agent)).collect();
+                last = self
+                    .model
+                    .step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr)
+                    .expect("step_k artifact failed");
+                remaining -= k;
+            }
+        }
+        for _ in 0..remaining {
+            last = self.step(agent, params, mom, lr);
+        }
+        last
+    }
+
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let batches = self.eval_batches();
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let denom = (batches.len() as f64) * self.labels_per_batch();
+        for b in &batches {
+            let (l, c) = self
+                .model
+                .eval(params, b, &self.shape_x, &self.shape_y)
+                .expect("eval artifact failed");
+            loss += l;
+            correct += c;
+        }
+        EvalResult {
+            loss: loss / batches.len() as f64,
+            accuracy: correct / denom,
+        }
+    }
+
+    fn epochs(&self, agent: usize) -> f64 {
+        match &self.source {
+            DataSource::Dense { shards, .. } => shards[agent].epochs(),
+            DataSource::Tokens { batchers, .. } => batchers[agent].epochs(),
+        }
+    }
+}

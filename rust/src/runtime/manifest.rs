@@ -1,0 +1,125 @@
+//! Artifact manifest: the INI file `aot.py` writes next to the HLO text.
+
+use crate::config::{parse_ini, DataKind};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one lowered model preset.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    /// preset name, e.g. "mlp_s"
+    pub name: String,
+    /// model family: mlp | cnn | transformer
+    pub model: String,
+    pub param_count: usize,
+    pub batch: usize,
+    /// scan length of the step_k fast-path artifact
+    pub k: usize,
+    /// lattice resolution baked into the qavg artifact
+    pub qavg_eps: f32,
+    /// modality + shape fields (in_dim/classes, image/chan_in, vocab/seq)
+    pub fields: HashMap<String, String>,
+    /// artifact paths (absolute), keyed by init/step/step_k/eval/qavg
+    pub artifacts: HashMap<String, PathBuf>,
+}
+
+impl ModelManifest {
+    pub fn kind(&self) -> DataKind {
+        match self.fields.get("kind").map(|s| s.as_str()) {
+            Some("image") => DataKind::Image,
+            Some("tokens") => DataKind::Tokens,
+            _ => DataKind::Vector,
+        }
+    }
+
+    pub fn field_usize(&self, key: &str) -> Option<usize> {
+        self.fields.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn artifact(&self, which: &str) -> Option<&Path> {
+        self.artifacts.get(which).map(|p| p.as_path())
+    }
+}
+
+/// Load `<dir>/manifest.txt`; returns all presets found.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ModelManifest>, String> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("cannot read {} — run `make artifacts` first ({e})", path.display()))?;
+    let doc = parse_ini(&text)?;
+    let mut out = Vec::new();
+    for sec in &doc.sections {
+        if sec.name.is_empty() {
+            continue;
+        }
+        let mut artifacts = HashMap::new();
+        for which in ["init", "step", "step_k", "eval", "qavg"] {
+            if let Some(f) = sec.get(which) {
+                artifacts.insert(which.to_string(), dir.join(f));
+            }
+        }
+        let mut fields = HashMap::new();
+        for (k, v) in &sec.entries {
+            fields.insert(k.clone(), v.clone());
+        }
+        out.push(ModelManifest {
+            name: sec.name.clone(),
+            model: sec.require("model")?,
+            param_count: sec.require("param_count")?,
+            batch: sec.require("batch")?,
+            k: sec.require("k")?,
+            qavg_eps: sec.parse("qavg_eps").unwrap_or(1e-3),
+            fields,
+            artifacts,
+        });
+    }
+    if out.is_empty() {
+        return Err(format!("{}: no presets found", path.display()));
+    }
+    Ok(out)
+}
+
+/// Find one preset by name.
+pub fn find_preset(dir: &Path, name: &str) -> Result<ModelManifest, String> {
+    load_manifest(dir)?
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| format!("preset '{name}' not in {}/manifest.txt (run `make artifacts`)", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("swarm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), text).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = write_tmp(
+            "[mlp_s]\nmodel = mlp\nparam_count = 100\nbatch = 32\nk = 4\n\
+             qavg_eps = 0.001\nkind = vector\nin_dim = 64\nclasses = 10\n\
+             init = mlp_s_init.hlo.txt\nstep = mlp_s_step.hlo.txt\n\
+             step_k = mlp_s_step_k.hlo.txt\neval = mlp_s_eval.hlo.txt\nqavg = mlp_s_qavg.hlo.txt\n",
+        );
+        let ms = load_manifest(&dir).unwrap();
+        assert_eq!(ms.len(), 1);
+        let m = &ms[0];
+        assert_eq!(m.name, "mlp_s");
+        assert_eq!(m.param_count, 100);
+        assert_eq!(m.kind(), DataKind::Vector);
+        assert_eq!(m.field_usize("in_dim"), Some(64));
+        assert!(m.artifact("step").unwrap().ends_with("mlp_s_step.hlo.txt"));
+        assert!(m.artifact("nonexistent").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = load_manifest(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and exposes them as a [`TrainBackend`].
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that the linked xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` re-parses and reassigns ids cleanly
+//! (see /opt/xla-example/README.md and DESIGN.md §7.1).
+//!
+//! Python never runs here — the compiled executables are self-contained.
+
+mod backend_xla;
+mod manifest;
+mod model;
+
+pub use backend_xla::{XlaBackend, XlaBackendConfig};
+pub use manifest::{load_manifest, ModelManifest};
+pub use model::XlaModel;
+
+use crate::backend::TrainBackend;
+
+#[allow(dead_code)]
+fn _object_safe(_: &dyn TrainBackend) {}

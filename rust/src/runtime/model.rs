@@ -1,0 +1,183 @@
+//! Compiled model: the five PJRT executables of one preset + typed wrappers.
+
+use super::manifest::ModelManifest;
+use crate::data::Batch;
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A fully compiled model preset, ready to execute.
+pub struct XlaModel {
+    pub manifest: ModelManifest,
+    client: PjRtClient,
+    init_exe: PjRtLoadedExecutable,
+    step_exe: PjRtLoadedExecutable,
+    step_k_exe: Option<PjRtLoadedExecutable>,
+    eval_exe: PjRtLoadedExecutable,
+    qavg_exe: Option<PjRtLoadedExecutable>,
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl XlaModel {
+    /// Compile all artifacts of `manifest` on a fresh CPU PJRT client.
+    pub fn load(manifest: ModelManifest) -> Result<Self> {
+        let client = PjRtClient::cpu()?;
+        let get = |which: &str| -> Result<PjRtLoadedExecutable> {
+            let p = manifest
+                .artifact(which)
+                .ok_or_else(|| anyhow!("manifest missing artifact '{which}'"))?;
+            compile(&client, p)
+        };
+        let init_exe = get("init")?;
+        let step_exe = get("step")?;
+        let eval_exe = get("eval")?;
+        let step_k_exe = manifest.artifact("step_k").map(|_| get("step_k")).transpose()?;
+        let qavg_exe = manifest.artifact("qavg").map(|_| get("qavg")).transpose()?;
+        Ok(Self { manifest, client, init_exe, step_exe, step_k_exe, eval_exe, qavg_exe })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    /// init(seed) -> (params, mom)
+    pub fn init(&self, seed: i32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.init_exe.execute::<Literal>(&[Literal::scalar(seed)])?[0][0]
+            .to_literal_sync()?;
+        let (p, m) = out.to_tuple2()?;
+        Ok((p.to_vec::<f32>()?, m.to_vec::<f32>()?))
+    }
+
+    fn batch_literals(&self, batch: &Batch, shape_x: &[i64], shape_y: &[i64]) -> Result<(Literal, Literal)> {
+        Ok(match batch {
+            Batch::Dense { x, y } => (
+                Literal::vec1(x).reshape(shape_x)?,
+                Literal::vec1(y).reshape(shape_y)?,
+            ),
+            Batch::Tokens { x, y } => (
+                Literal::vec1(x).reshape(shape_x)?,
+                Literal::vec1(y).reshape(shape_y)?,
+            ),
+        })
+    }
+
+    /// One train step: (params, mom, batch, lr) -> (params', mom', loss).
+    /// `shape_x`/`shape_y` are the batch tensor shapes from the manifest.
+    pub fn step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        batch: &Batch,
+        shape_x: &[i64],
+        shape_y: &[i64],
+        lr: f32,
+    ) -> Result<f64> {
+        let pl = Literal::vec1(params);
+        let ml = Literal::vec1(mom);
+        let (xl, yl) = self.batch_literals(batch, shape_x, shape_y)?;
+        let lrl = Literal::scalar(lr);
+        let out = self.step_exe.execute(&[&pl, &ml, &xl, &yl, &lrl])?[0][0]
+            .to_literal_sync()?;
+        let (p2, m2, loss) = out.to_tuple3()?;
+        p2.copy_raw_to(params)?;
+        m2.copy_raw_to(mom)?;
+        Ok(loss.get_first_element::<f32>()? as f64)
+    }
+
+    /// K fused steps via the lax.scan artifact: batches stacked on axis 0.
+    /// Returns the mean loss across the K microbatches.
+    pub fn step_k(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        batches: &[Batch],
+        shape_x: &[i64],
+        shape_y: &[i64],
+        lr: f32,
+    ) -> Result<f64> {
+        let exe = self
+            .step_k_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("preset has no step_k artifact"))?;
+        assert_eq!(batches.len(), self.manifest.k, "step_k needs exactly k batches");
+        // stack
+        let (mut xs_f, mut xs_i, mut ys) = (Vec::new(), Vec::new(), Vec::<i32>::new());
+        let mut dense = true;
+        for b in batches {
+            match b {
+                Batch::Dense { x, y } => {
+                    xs_f.extend_from_slice(x);
+                    ys.extend_from_slice(y);
+                }
+                Batch::Tokens { x, y } => {
+                    dense = false;
+                    xs_i.extend_from_slice(x);
+                    ys.extend_from_slice(y);
+                }
+            }
+        }
+        let k = self.manifest.k as i64;
+        let sx: Vec<i64> = std::iter::once(k).chain(shape_x.iter().copied()).collect();
+        let sy: Vec<i64> = std::iter::once(k).chain(shape_y.iter().copied()).collect();
+        let xl = if dense {
+            Literal::vec1(&xs_f).reshape(&sx)?
+        } else {
+            Literal::vec1(&xs_i).reshape(&sx)?
+        };
+        let yl = Literal::vec1(&ys).reshape(&sy)?;
+        let pl = Literal::vec1(params);
+        let ml = Literal::vec1(mom);
+        let lrl = Literal::scalar(lr);
+        let out = exe.execute(&[&pl, &ml, &xl, &yl, &lrl])?[0][0].to_literal_sync()?;
+        let (p2, m2, loss) = out.to_tuple3()?;
+        p2.copy_raw_to(params)?;
+        m2.copy_raw_to(mom)?;
+        Ok(loss.get_first_element::<f32>()? as f64)
+    }
+
+    /// eval(params, batch) -> (loss, correct_count)
+    pub fn eval(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        shape_x: &[i64],
+        shape_y: &[i64],
+    ) -> Result<(f64, f64)> {
+        let pl = Literal::vec1(params);
+        let (xl, yl) = self.batch_literals(batch, shape_x, shape_y)?;
+        let out = self.eval_exe.execute(&[&pl, &xl, &yl])?[0][0].to_literal_sync()?;
+        let (loss, correct) = out.to_tuple2()?;
+        Ok((
+            loss.get_first_element::<f32>()? as f64,
+            correct.get_first_element::<f32>()? as f64,
+        ))
+    }
+
+    /// Quantized average via the Pallas lattice kernel artifact:
+    /// (x, y, seed) -> (x + Q_eps(y)) / 2.
+    pub fn qavg(&self, x: &[f32], y: &[f32], seed: u32) -> Result<Vec<f32>> {
+        let exe = self
+            .qavg_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("preset has no qavg artifact"))?;
+        let xl = Literal::vec1(x);
+        let yl = Literal::vec1(y);
+        let sl = Literal::scalar(seed);
+        let out = exe.execute(&[&xl, &yl, &sl])?[0][0].to_literal_sync()?;
+        let avg = out.to_tuple1()?;
+        Ok(avg.to_vec::<f32>()?)
+    }
+}

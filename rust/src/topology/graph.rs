@@ -1,0 +1,330 @@
+//! Graph construction: the regular topologies the paper's model assumes.
+
+use crate::rngx::Pcg64;
+
+/// Named topology families. All are `r`-regular and connected (the random
+/// regular family retries until connected).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Complete graph K_n — the paper's experimental overlay ("fully
+    /// connected with random pairings"); λ₂ = n.
+    Complete,
+    /// Cycle C_n; λ₂ = 2(1 − cos 2π/n). Worst-case connectivity.
+    Ring,
+    /// √n × √n torus (requires square n); 4-regular.
+    Torus,
+    /// Hypercube Q_d (requires n = 2^d); log₂n-regular, λ₂ = 2.
+    Hypercube,
+    /// Random r-regular graph via the pairing model (connected by retry).
+    RandomRegular(usize),
+}
+
+/// Undirected simple graph stored as an edge list + adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn build(topo: Topology, n: usize, rng: &mut Pcg64) -> Self {
+        match topo {
+            Topology::Complete => Self::complete(n),
+            Topology::Ring => Self::ring(n),
+            Topology::Torus => Self::torus(n),
+            Topology::Hypercube => Self::hypercube(n),
+            Topology::RandomRegular(r) => Self::random_regular(n, r, rng),
+        }
+    }
+
+    pub fn from_edges(n: usize, edges: Vec<(usize, usize)>) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in &edges {
+            assert!(u < n && v < n && u != v, "bad edge ({u},{v}) for n={n}");
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        Self { n, edges, adj }
+    }
+
+    pub fn complete(n: usize) -> Self {
+        assert!(n >= 1, "complete graph needs n >= 1");
+        // n == 1 yields an edgeless single-node graph (valid for the
+        // single-node SGD baseline; gossip algorithms never sample from it)
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                edges.push((u, v));
+            }
+        }
+        Self::from_edges(n, edges)
+    }
+
+    pub fn ring(n: usize) -> Self {
+        assert!(n >= 3, "ring needs n >= 3");
+        let edges = (0..n).map(|u| (u, (u + 1) % n)).collect();
+        Self::from_edges(n, edges)
+    }
+
+    pub fn torus(n: usize) -> Self {
+        let side = (n as f64).sqrt().round() as usize;
+        assert_eq!(side * side, n, "torus needs square n, got {n}");
+        assert!(side >= 3, "torus needs side >= 3 for simple graph");
+        let mut edges = Vec::new();
+        for r in 0..side {
+            for c in 0..side {
+                let u = r * side + c;
+                edges.push((u, r * side + (c + 1) % side));
+                edges.push((u, ((r + 1) % side) * side + c));
+            }
+        }
+        Self::from_edges(n, edges)
+    }
+
+    pub fn hypercube(n: usize) -> Self {
+        assert!(n >= 2 && n.is_power_of_two(), "hypercube needs n = 2^d");
+        let d = n.trailing_zeros() as usize;
+        let mut edges = Vec::new();
+        for u in 0..n {
+            for b in 0..d {
+                let v = u ^ (1 << b);
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Self::from_edges(n, edges)
+    }
+
+    /// Random r-regular graph as a union of random Hamiltonian cycles
+    /// (+ one random perfect matching when r is odd; requires even n then).
+    /// Always connected (every graph contains a Ham cycle); each component
+    /// is resampled if it would duplicate an existing edge, which succeeds
+    /// quickly for r « n.
+    pub fn random_regular(n: usize, r: usize, rng: &mut Pcg64) -> Self {
+        assert!(r >= 2 && r < n, "need 2 <= r < n");
+        assert!(n * r % 2 == 0, "need n*r even");
+        assert!(
+            r % 2 == 0 || n % 2 == 0,
+            "odd r needs even n for the matching layer"
+        );
+        let mut seen = std::collections::HashSet::new();
+        let mut edges: Vec<(usize, usize)> = Vec::with_capacity(n * r / 2);
+        let add_all = |cand: &[(usize, usize)],
+                           seen: &mut std::collections::HashSet<(usize, usize)>,
+                           edges: &mut Vec<(usize, usize)>|
+         -> bool {
+            let keys: Vec<(usize, usize)> =
+                cand.iter().map(|&(u, v)| (u.min(v), u.max(v))).collect();
+            if keys.iter().any(|k| seen.contains(k) || k.0 == k.1) {
+                return false;
+            }
+            // also reject duplicates within the candidate set itself
+            let mut s = keys.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != keys.len() {
+                return false;
+            }
+            seen.extend(keys);
+            edges.extend_from_slice(cand);
+            true
+        };
+        // r/2 Hamiltonian cycles
+        for _layer in 0..r / 2 {
+            let mut ok = false;
+            for _attempt in 0..10_000 {
+                let mut perm: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut perm);
+                let cand: Vec<(usize, usize)> =
+                    (0..n).map(|i| (perm[i], perm[(i + 1) % n])).collect();
+                if add_all(&cand, &mut seen, &mut edges) {
+                    ok = true;
+                    break;
+                }
+            }
+            assert!(ok, "random_regular({n},{r}): cycle layer failed");
+        }
+        // one matching layer if r is odd
+        if r % 2 == 1 {
+            let mut ok = false;
+            for _attempt in 0..10_000 {
+                let mut perm: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut perm);
+                let cand: Vec<(usize, usize)> =
+                    perm.chunks(2).map(|c| (c[0], c[1])).collect();
+                if add_all(&cand, &mut seen, &mut edges) {
+                    ok = true;
+                    break;
+                }
+            }
+            assert!(ok, "random_regular({n},{r}): matching layer failed");
+        }
+        let g = Self::from_edges(n, edges);
+        debug_assert!(g.is_connected());
+        g
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    pub fn neighbors(&self, u: usize) -> &[usize] {
+        &self.adj[u]
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Degree if regular, else None.
+    pub fn regular_degree(&self) -> Option<usize> {
+        let d = self.degree(0);
+        (1..self.n).all(|u| self.degree(u) == d).then_some(d)
+    }
+
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Sample an edge uniformly at random — one "step" of the paper's model.
+    #[inline]
+    pub fn sample_edge(&self, rng: &mut Pcg64) -> (usize, usize) {
+        self.edges[rng.below_usize(self.edges.len())]
+    }
+
+    /// Sample a uniform random neighbor of `u`.
+    #[inline]
+    pub fn sample_neighbor(&self, u: usize, rng: &mut Pcg64) -> usize {
+        self.adj[u][rng.below_usize(self.adj[u].len())]
+    }
+
+    /// Random perfect/near-perfect matching on G (used by D-PSGD rounds):
+    /// greedy over a shuffled edge list.
+    pub fn random_matching(&self, rng: &mut Pcg64) -> Vec<(usize, usize)> {
+        let mut order: Vec<usize> = (0..self.edges.len()).collect();
+        rng.shuffle(&mut order);
+        let mut used = vec![false; self.n];
+        let mut m = Vec::with_capacity(self.n / 2);
+        for i in order {
+            let (u, v) = self.edges[i];
+            if !used[u] && !used[v] {
+                used[u] = true;
+                used[v] = true;
+                m.push((u, v));
+            }
+        }
+        m
+    }
+
+    /// λ₂ of the Laplacian (delegates to the Jacobi eigensolver).
+    pub fn lambda2(&self) -> f64 {
+        super::spectral::spectral_gap(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed(0xC0FFEE)
+    }
+
+    #[test]
+    fn complete_graph_properties() {
+        let g = Graph::complete(8);
+        assert_eq!(g.edges().len(), 28);
+        assert_eq!(g.regular_degree(), Some(7));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn ring_properties() {
+        let g = Graph::ring(10);
+        assert_eq!(g.edges().len(), 10);
+        assert_eq!(g.regular_degree(), Some(2));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_properties() {
+        let g = Graph::torus(16);
+        assert_eq!(g.regular_degree(), Some(4));
+        assert_eq!(g.edges().len(), 32);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn hypercube_properties() {
+        let g = Graph::hypercube(16);
+        assert_eq!(g.regular_degree(), Some(4));
+        assert_eq!(g.edges().len(), 32);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn random_regular_is_regular_and_connected() {
+        let mut r = rng();
+        for (n, d) in [(10, 3), (16, 4), (32, 6)] {
+            let g = Graph::random_regular(n, d, &mut r);
+            assert_eq!(g.regular_degree(), Some(d), "n={n} d={d}");
+            assert!(g.is_connected());
+            assert_eq!(g.edges().len(), n * d / 2);
+        }
+    }
+
+    #[test]
+    fn sample_edge_covers_graph() {
+        let g = Graph::ring(6);
+        let mut r = rng();
+        let mut hit = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            hit.insert(g.sample_edge(&mut r));
+        }
+        assert_eq!(hit.len(), 6);
+    }
+
+    #[test]
+    fn matching_is_valid() {
+        let g = Graph::complete(12);
+        let mut r = rng();
+        for _ in 0..50 {
+            let m = g.random_matching(&mut r);
+            let mut used = std::collections::HashSet::new();
+            for (u, v) in &m {
+                assert!(used.insert(*u));
+                assert!(used.insert(*v));
+            }
+            // complete graph: greedy always achieves a perfect matching
+            assert_eq!(m.len(), 6);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn torus_rejects_non_square() {
+        Graph::torus(10);
+    }
+}

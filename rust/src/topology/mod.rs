@@ -1,0 +1,14 @@
+//! Communication topologies — the `r`-regular interaction graphs of §2.
+//!
+//! The paper's model samples an edge of a connected `r`-regular graph `G`
+//! uniformly at random per step; the convergence bounds depend on `r` and on
+//! `λ₂`, the second-smallest eigenvalue of the Laplacian (spectral gap).
+//! This module builds the standard topologies (complete, ring, 2-D torus,
+//! hypercube, random regular) and computes `λ₂` exactly with a dense Jacobi
+//! eigensolver (`spectral.rs`) — no external linear-algebra crates.
+
+mod graph;
+mod spectral;
+
+pub use graph::{Graph, Topology};
+pub use spectral::{jacobi_eigenvalues, laplacian, spectral_gap};

@@ -1,0 +1,179 @@
+//! Dense symmetric eigensolver (cyclic Jacobi) for Laplacian spectra.
+//!
+//! The paper's rates carry a `(r²/λ₂² + 1)` factor; the figure harnesses and
+//! the theory-bound evaluators need λ₂ for each topology. n ≤ a few hundred
+//! in every experiment, so an O(n³) dense Jacobi sweep is plenty — and it is
+//! provably convergent on symmetric matrices, with no external deps.
+
+use super::Graph;
+
+/// Row-major dense Laplacian L = D − A of `g`.
+pub fn laplacian(g: &Graph) -> Vec<f64> {
+    let n = g.n();
+    let mut l = vec![0.0; n * n];
+    for u in 0..n {
+        l[u * n + u] = g.degree(u) as f64;
+    }
+    for &(u, v) in g.edges() {
+        l[u * n + v] -= 1.0;
+        l[v * n + u] -= 1.0;
+    }
+    l
+}
+
+/// All eigenvalues of a symmetric matrix (row-major, n×n), ascending.
+/// Cyclic Jacobi with threshold sweeps; converges quadratically.
+pub fn jacobi_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    // symmetry check (debug builds only)
+    #[cfg(debug_assertions)]
+    for i in 0..n {
+        for j in 0..n {
+            debug_assert!(
+                (m[i * n + j] - m[j * n + i]).abs() < 1e-9,
+                "matrix not symmetric at ({i},{j})"
+            );
+        }
+    }
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eig
+}
+
+/// λ₂ — second-smallest Laplacian eigenvalue of `g` (0 for disconnected).
+pub fn spectral_gap(g: &Graph) -> f64 {
+    let n = g.n();
+    let l = laplacian(g);
+    let eig = jacobi_eigenvalues(&l, n);
+    eig[1].max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+    use crate::topology::Topology;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn complete_graph_lambda2_is_n() {
+        for n in [4, 8, 16] {
+            let g = Graph::complete(n);
+            assert!(
+                close(g.lambda2(), n as f64, 1e-8),
+                "K_{n}: λ₂={}",
+                g.lambda2()
+            );
+        }
+    }
+
+    #[test]
+    fn ring_lambda2_closed_form() {
+        for n in [4usize, 8, 16, 32] {
+            let g = Graph::ring(n);
+            let expect = 2.0 * (1.0 - (std::f64::consts::TAU / n as f64).cos());
+            assert!(
+                close(g.lambda2(), expect, 1e-8),
+                "C_{n}: λ₂={} expect={expect}",
+                g.lambda2()
+            );
+        }
+    }
+
+    #[test]
+    fn hypercube_lambda2_is_two() {
+        for n in [8, 16, 32] {
+            let g = Graph::hypercube(n);
+            assert!(close(g.lambda2(), 2.0, 1e-8), "Q: λ₂={}", g.lambda2());
+        }
+    }
+
+    #[test]
+    fn torus_lambda2_closed_form() {
+        // λ₂(C_s □ C_s) = λ₂(C_s) = 2(1 − cos 2π/s)
+        let g = Graph::torus(25);
+        let expect = 2.0 * (1.0 - (std::f64::consts::TAU / 5.0).cos());
+        assert!(close(g.lambda2(), expect, 1e-8), "λ₂={}", g.lambda2());
+    }
+
+    #[test]
+    fn smallest_eigenvalue_is_zero() {
+        let g = Graph::torus(16);
+        let eig = jacobi_eigenvalues(&laplacian(&g), 16);
+        assert!(eig[0].abs() < 1e-9);
+        // connected => λ₂ > 0
+        assert!(eig[1] > 1e-9);
+    }
+
+    #[test]
+    fn eigenvalue_sum_equals_trace() {
+        let mut rng = Pcg64::seed(5);
+        let g = Graph::build(Topology::RandomRegular(4), 20, &mut rng);
+        let l = laplacian(&g);
+        let eig = jacobi_eigenvalues(&l, 20);
+        let trace: f64 = (0..20).map(|i| l[i * 20 + i]).sum();
+        assert!(close(eig.iter().sum::<f64>(), trace, 1e-6));
+        // trace of Laplacian = sum of degrees = 2|E|
+        assert!(close(trace, 80.0, 1e-12));
+    }
+
+    #[test]
+    fn random_regular_connected_gap_positive() {
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..5 {
+            let g = Graph::random_regular(24, 4, &mut rng);
+            assert!(g.lambda2() > 0.05, "λ₂={}", g.lambda2());
+        }
+    }
+
+    #[test]
+    fn jacobi_on_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues {1, 3}
+        let eig = jacobi_eigenvalues(&[2.0, 1.0, 1.0, 2.0], 2);
+        assert!(close(eig[0], 1.0, 1e-12) && close(eig[1], 3.0, 1e-12));
+    }
+}

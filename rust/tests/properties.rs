@@ -1,0 +1,286 @@
+//! Property-based tests (hand-rolled: proptest is unavailable offline).
+//! Each property runs over many seeded random cases; failures print the
+//! offending seed so cases are reproducible.
+
+use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::coordinator::{average_into_both, Cluster};
+use swarm_sgd::data::{dirichlet_shards, iid_shards, label_shards};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::quant::{decode, encode, pack_bits, quantize_unbiased, unpack_bits, QuantError};
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::Graph;
+
+/// Run `f` over `cases` seeded RNGs; panic with the failing seed.
+fn prop(cases: u64, f: impl Fn(&mut Pcg64) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::seed(0xBEEF_0000 + seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantizer properties (paper Appendix G requirements)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_roundtrip_exact_under_distance_criterion() {
+    prop(50, |rng| {
+        let d = 1 + rng.below_usize(3000);
+        let bits = 4 + rng.below(9) as u32; // 4..=12
+        let eps = 10f32.powf(-(1.0 + rng.f32() * 2.0)); // 1e-1 .. 1e-3
+        let margin = ((1u64 << bits) / 2 - 1) as f32 * eps;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 2.0).collect();
+        // receiver reference strictly inside the criterion
+        let y: Vec<f32> = x
+            .iter()
+            .map(|v| v + (rng.f32() - 0.5) * margin)
+            .collect();
+        let seed = rng.next_u32();
+        let msg = encode(&x, eps, bits, seed);
+        let got = decode(&msg, &y).map_err(|e| format!("decode failed: {e}"))?;
+        let want = quantize_unbiased(&x, eps, seed);
+        if got != want {
+            return Err(format!("d={d} bits={bits} eps={eps}: decode != sender rounding"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_error_below_eps() {
+    prop(30, |rng| {
+        let d = 1 + rng.below_usize(2000);
+        let eps = 10f32.powf(-(1.0 + rng.f32() * 2.5));
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let q = quantize_unbiased(&x, eps, rng.next_u32());
+        for (qi, xi) in q.iter().zip(&x) {
+            let err = (qi - xi).abs();
+            if err > eps * 1.001 {
+                return Err(format!("err {err} > eps {eps}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_failure_always_detected_not_silent() {
+    // when the distance criterion is violated grossly, decode must either
+    // fail loudly (checksum) or — never — return wrong values silently
+    prop(40, |rng| {
+        let d = 64 + rng.below_usize(512);
+        let bits = 3 + rng.below(3) as u32; // 3..=5: tiny modulus
+        let eps = 1e-3f32;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let shift = ((1u64 << bits) as f32) * eps * (2.0 + rng.f32() * 10.0);
+        let y: Vec<f32> = x.iter().map(|v| v + shift).collect();
+        let msg = encode(&x, eps, bits, rng.next_u32());
+        match decode(&msg, &y) {
+            Err(QuantError::ChecksumMismatch) => Ok(()),
+            Err(e) => Err(format!("unexpected error {e}")),
+            Ok(vals) => {
+                // acceptable only if actually equal to the true rounding
+                let want = quantize_unbiased(&x, eps, msg.seed);
+                if vals == want {
+                    Ok(())
+                } else {
+                    Err("silent wrong decode".into())
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    prop(100, |rng| {
+        let bits = 1 + rng.below(16) as u32;
+        let n = rng.below_usize(500);
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let vals: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+        let got = unpack_bits(&pack_bits(&vals, bits), bits, n);
+        if got != vals {
+            return Err(format!("bits={bits} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// topology properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_regular_always_regular_connected() {
+    prop(30, |rng| {
+        let n = 6 + 2 * rng.below_usize(40); // even, 6..=84
+        let r = 2 + rng.below_usize((n - 2).min(7)); // 2..=8 < n
+        let g = Graph::random_regular(n, r, rng);
+        if g.regular_degree() != Some(r) {
+            return Err(format!("n={n} r={r}: not regular"));
+        }
+        if !g.is_connected() {
+            return Err(format!("n={n} r={r}: disconnected"));
+        }
+        if g.edges().len() != n * r / 2 {
+            return Err("edge count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lambda2_positive_and_at_most_n() {
+    prop(15, |rng| {
+        let n = 6 + 2 * rng.below_usize(15);
+        let r = 2 + rng.below_usize(4);
+        let g = Graph::random_regular(n, r, rng);
+        let l2 = g.lambda2();
+        if !(l2 > 1e-9 && l2 <= n as f64 + 1e-9) {
+            return Err(format!("λ₂={l2} out of (0, {n}]"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matching_is_disjoint_subset_of_edges() {
+    prop(30, |rng| {
+        let n = 6 + 2 * rng.below_usize(20);
+        let g = Graph::random_regular(n, 4, rng);
+        let m = g.random_matching(rng);
+        let edgeset: std::collections::HashSet<(usize, usize)> = g
+            .edges()
+            .iter()
+            .map(|&(u, v)| (u.min(v), u.max(v)))
+            .collect();
+        let mut used = std::collections::HashSet::new();
+        for (u, v) in m {
+            if !edgeset.contains(&(u.min(v), u.max(v))) {
+                return Err("matching edge not in graph".into());
+            }
+            if !used.insert(u) || !used.insert(v) {
+                return Err("vertex reused".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sharding properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_shard_modes_partition() {
+    prop(40, |rng| {
+        let n = 20 + rng.below_usize(400);
+        let agents = 2 + rng.below_usize(10.min(n / 2));
+        let classes = 2 + rng.below(8) as i32;
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(classes as u64) as i32).collect();
+        for (name, shards) in [
+            ("iid", iid_shards(n, agents, rng)),
+            ("label", label_shards(&labels, agents)),
+            ("dirichlet", dirichlet_shards(&labels, agents, 0.5, rng)),
+        ] {
+            let mut all: Vec<usize> = shards.concat();
+            all.sort_unstable();
+            let expect: Vec<usize> = (0..n).collect();
+            if all != expect {
+                return Err(format!("{name}: not a partition (n={n}, a={agents})"));
+            }
+            if shards.iter().any(|s| s.is_empty()) {
+                return Err(format!("{name}: empty shard"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pairwise_averaging_preserves_mean() {
+    // the conservation law behind the paper's μ_t analysis
+    prop(40, |rng| {
+        let n = 2 + rng.below_usize(10);
+        let d = 1 + rng.below_usize(50);
+        let mut backend = QuadraticOracle::new(d, n, 1.0, 0.5, 2.0, 0.0, 7);
+        let mut c = Cluster::init(n, &mut backend, 3);
+        for a in &mut c.agents {
+            for v in a.params.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+        }
+        let mu_before = c.mean_model();
+        for _ in 0..20 {
+            let i = rng.below_usize(n);
+            let mut j = rng.below_usize(n);
+            while j == i {
+                j = rng.below_usize(n);
+            }
+            let (a, b) = c.pair_mut(i, j);
+            // split borrows: average params
+            average_into_both(&mut a.params, &mut b.params);
+        }
+        let mu_after = c.mean_model();
+        for (x, y) in mu_before.iter().zip(&mu_after) {
+            if (x - y).abs() > 1e-4 {
+                return Err(format!("mean moved: {x} -> {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_averaging_contracts_gamma() {
+    prop(40, |rng| {
+        let n = 3 + rng.below_usize(8);
+        let d = 2 + rng.below_usize(20);
+        let mut backend = QuadraticOracle::new(d, n, 1.0, 0.5, 2.0, 0.0, 7);
+        let mut c = Cluster::init(n, &mut backend, 3);
+        for a in &mut c.agents {
+            for v in a.params.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+        }
+        let before = c.gamma();
+        let i = rng.below_usize(n);
+        let mut j = rng.below_usize(n);
+        while j == i {
+            j = rng.below_usize(n);
+        }
+        let (a, b) = c.pair_mut(i, j);
+        average_into_both(&mut a.params, &mut b.params);
+        let after = c.gamma();
+        if after > before + 1e-5 {
+            return Err(format!("Γ increased: {before} -> {after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_determinism_and_stream_independence() {
+    prop(20, |rng| {
+        let seed = rng.next_u64();
+        let mut a = Pcg64::seed(seed);
+        let mut b = Pcg64::seed(seed);
+        for _ in 0..100 {
+            if a.next_u64() != b.next_u64() {
+                return Err("same seed diverged".into());
+            }
+        }
+        let mut c = Pcg64::seed(seed ^ 1);
+        let hits = (0..64).filter(|_| a.next_u64() == c.next_u64()).count();
+        if hits > 2 {
+            return Err(format!("adjacent seeds correlated ({hits} hits)"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,178 @@
+//! Integration tests over the REAL three-layer path: AOT artifacts loaded
+//! through PJRT, driven by the coordinator. Gated on `artifacts/manifest.txt`
+//! existing (run `make artifacts` first); they skip cleanly otherwise so
+//! `cargo test` works in a fresh checkout.
+
+use std::path::Path;
+use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::config::ShardMode;
+use swarm_sgd::coordinator::{
+    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::runtime::{XlaBackend, XlaBackendConfig};
+use swarm_sgd::topology::{Graph, Topology};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_mlp(agents: usize) -> Option<XlaBackend> {
+    let dir = artifacts_dir()?;
+    let cfg = XlaBackendConfig {
+        agents,
+        data_per_agent: 256,
+        shard: ShardMode::Iid,
+        separation: 3.0,
+        seed: 5,
+        eval_batches: 2,
+    };
+    Some(XlaBackend::load(dir, "mlp_s", cfg).expect("load mlp_s"))
+}
+
+#[test]
+fn xla_backend_single_agent_learns() {
+    let Some(mut b) = load_mlp(1) else { return };
+    let (mut p, mut m) = b.init(0);
+    assert_eq!(p.len(), b.param_count());
+    let before = b.eval(&p);
+    for _ in 0..30 {
+        b.step(0, &mut p, &mut m, 0.05);
+    }
+    let after = b.eval(&p);
+    assert!(
+        after.loss < before.loss * 0.8,
+        "loss {} -> {}",
+        before.loss,
+        after.loss
+    );
+    assert!(after.accuracy >= before.accuracy);
+}
+
+#[test]
+fn xla_step_burst_matches_unit_steps_statistically() {
+    // step_burst uses the lax.scan artifact; same data distribution so the
+    // loss trajectory must be comparable (not identical: different batches).
+    let Some(mut b) = load_mlp(1) else { return };
+    let (mut p, mut m) = b.init(0);
+    let burst_loss = {
+        for _ in 0..5 {
+            b.step_burst(0, &mut p, &mut m, 0.05, 4);
+        }
+        b.eval(&p).loss
+    };
+    let (mut p2, mut m2) = b.init(0);
+    let unit_loss = {
+        for _ in 0..20 {
+            b.step(0, &mut p2, &mut m2, 0.05);
+        }
+        b.eval(&p2).loss
+    };
+    assert!(
+        (burst_loss - unit_loss).abs() < 0.5 * unit_loss.max(0.2),
+        "burst {burst_loss} vs unit {unit_loss}"
+    );
+}
+
+#[test]
+fn swarm_on_xla_mlp_converges() {
+    let n = 4;
+    let Some(mut backend) = load_mlp(n) else { return };
+    let mut rng = Pcg64::seed(3);
+    let graph = Graph::build(Topology::Complete, n, &mut rng);
+    let cost = CostModel::deterministic(0.4);
+    let f0 = {
+        let (p, _) = backend.init(0);
+        backend.eval(&p).loss
+    };
+    let mut ctx = RunContext {
+        backend: &mut backend,
+        graph: &graph,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: 30,
+        track_gamma: true,
+    };
+    let cfg = SwarmConfig {
+        n,
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+        lr: LrSchedule::Constant(0.05),
+        interactions: 120,
+        seed: 1,
+        name: "swarm-xla".into(),
+    };
+    let mut runner = SwarmRunner::new(cfg, &mut ctx);
+    let m = runner.run(&mut ctx);
+    assert!(
+        m.final_eval_loss < 0.5 * f0,
+        "loss {} vs init {}",
+        m.final_eval_loss,
+        f0
+    );
+    assert!(m.final_eval_acc > 0.5, "acc {}", m.final_eval_acc);
+    // Γ stayed finite and bounded
+    let gmax = m.curve.iter().map(|p| p.gamma).fold(0.0, f64::max);
+    assert!(gmax.is_finite());
+}
+
+#[test]
+fn xla_qavg_kernel_matches_rust_codec() {
+    // cross-layer contract: the Pallas lattice kernel (L1, via PJRT) and the
+    // Rust codec (L3) implement the same hash -> identical lattice points.
+    let Some(b) = load_mlp(1) else { return };
+    let d = b.param_count();
+    let mut rng = Pcg64::seed(9);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+    let y: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+    let seed = 42u32;
+    let eps = b.manifest().qavg_eps;
+    let got = b.model.qavg(&x, &y, seed).expect("qavg artifact");
+    let q = swarm_sgd::quant::quantize_unbiased(&y, eps, seed);
+    for i in 0..d {
+        let want = 0.5 * (x[i] + q[i]);
+        assert!(
+            (got[i] - want).abs() < 1e-5,
+            "coord {i}: xla {} vs rust {}",
+            got[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn quantized_swarm_on_xla_runs() {
+    let n = 4;
+    let Some(mut backend) = load_mlp(n) else { return };
+    let mut rng = Pcg64::seed(4);
+    let graph = Graph::build(Topology::Complete, n, &mut rng);
+    let cost = CostModel::deterministic(0.4);
+    let mut ctx = RunContext {
+        backend: &mut backend,
+        graph: &graph,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let cfg = SwarmConfig {
+        n,
+        local_steps: LocalSteps::Geometric(2.0),
+        mode: AveragingMode::Quantized { bits: 8, eps: 1e-3 },
+        lr: LrSchedule::Constant(0.05),
+        interactions: 60,
+        seed: 2,
+        name: "swarm-xla-q".into(),
+    };
+    let mut runner = SwarmRunner::new(cfg, &mut ctx);
+    let m = runner.run(&mut ctx);
+    assert!(m.final_eval_loss.is_finite());
+    assert!(m.total_bits > 0);
+}
