@@ -39,9 +39,14 @@ fn run_swarm(dim: usize, n: usize, t: u64, mode: AveragingMode) -> f64 {
 }
 
 fn main() {
-    let mut b = Bench::default();
+    // `cargo bench --bench bench_engine -- --test` = CI smoke mode: tiny
+    // budgets, no stats — just proves the bench paths run
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let mut b = if smoke { Bench::quick() } else { Bench::default() };
     println!("== coordinator engine (interactions/s, oracle backend) ==");
-    for (dim, t) in [(64usize, 20_000u64), (1024, 5_000)] {
+    let sizes: &[(usize, u64)] =
+        if smoke { &[(64, 2_000)] } else { &[(64, 20_000), (1024, 5_000)] };
+    for &(dim, t) in sizes {
         b.run_elems(&format!("swarm nonblocking d={dim} T={t}"), t, || {
             run_swarm(dim, 16, t, AveragingMode::NonBlocking)
         });

@@ -1,0 +1,136 @@
+//! Parallel-executor throughput: SwarmSGD interactions/second vs worker
+//! thread count on an n=32 synthetic-quadratic workload, against the serial
+//! discrete-event runner as baseline. §Perf target (CI-recorded): ≥ 2x
+//! interactions/s at 4 threads vs serial.
+//!
+//! Writes `BENCH_parallel.json` (crate root) so CI can archive the perf
+//! trajectory per PR. `-- --test` runs the reduced smoke configuration.
+
+use std::io::Write;
+use swarm_sgd::bench::{Bench, BenchResult};
+use swarm_sgd::coordinator::{
+    run_parallel, AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+const N: usize = 32;
+
+/// σ=0 so the oracle is draw-free and the bench measures executor overhead
+/// + gradient math, not Box–Muller throughput.
+fn oracle(dim: usize) -> QuadraticOracle {
+    QuadraticOracle::new(dim, N, 1.0, 0.5, 2.0, 0.0, 3)
+}
+
+fn cfg(t: u64, mode: AveragingMode) -> SwarmConfig {
+    SwarmConfig {
+        n: N,
+        local_steps: LocalSteps::Fixed(4),
+        mode,
+        lr: LrSchedule::Constant(0.02),
+        interactions: t,
+        seed: 1,
+        name: "bench-par".into(),
+    }
+}
+
+fn graph() -> Graph {
+    let mut rng = Pcg64::seed(5);
+    Graph::build(Topology::Complete, N, &mut rng)
+}
+
+fn run_serial(dim: usize, t: u64, mode: AveragingMode) -> f64 {
+    let mut backend = oracle(dim);
+    let mut rng = Pcg64::seed(5);
+    let g = graph();
+    let cost = CostModel::deterministic(0.4);
+    let mut ctx = RunContext {
+        backend: &mut backend,
+        graph: &g,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: 0,
+        track_gamma: false,
+    };
+    SwarmRunner::new(cfg(t, mode), &mut ctx).run(&mut ctx).final_eval_loss
+}
+
+fn run_par(dim: usize, t: u64, threads: usize, mode: AveragingMode) -> f64 {
+    let backend = oracle(dim);
+    let g = graph();
+    let cost = CostModel::deterministic(0.4);
+    run_parallel(&cfg(t, mode), threads, &g, &cost, &backend, 0, false).final_eval_loss
+}
+
+fn json_row(r: &BenchResult, threads: usize) -> String {
+    format!(
+        "    {{\"name\": \"{}\", \"threads\": {}, \"interactions_per_sec\": {:.1}, \
+         \"median_ns\": {}}}",
+        r.name,
+        threads,
+        r.throughput().unwrap_or(f64::NAN),
+        r.median.as_nanos()
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let (dim, t) = if smoke { (512, 2_000u64) } else { (2048, 10_000) };
+    let mut b = if smoke { Bench::quick() } else { Bench::default() };
+    println!("== parallel executor (n={N}, d={dim}, T={t}, H=4, quadratic oracle) ==");
+
+    let mode = AveragingMode::NonBlocking;
+    let mut rows: Vec<String> = Vec::new();
+
+    let serial = b
+        .run_elems(&format!("serial runner      d={dim} T={t}"), t, || {
+            run_serial(dim, t, mode)
+        })
+        .clone();
+    rows.push(json_row(&serial, 1));
+
+    let mut par4_tp = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let r = b
+            .run_elems(&format!("parallel x{threads}        d={dim} T={t}"), t, || {
+                run_par(dim, t, threads, mode)
+            })
+            .clone();
+        if threads == 4 {
+            par4_tp = r.throughput().unwrap_or(f64::NAN);
+        }
+        rows.push(json_row(&r, threads));
+    }
+
+    // quantized non-blocking at 4 threads (the Appendix-G hot path)
+    let rq = b
+        .run_elems(&format!("parallel x4 quant8 d={dim} T={t}"), t, || {
+            run_par(dim, t, 4, AveragingMode::Quantized { bits: 8, eps: 1e-2 })
+        })
+        .clone();
+    rows.push(json_row(&rq, 4));
+
+    let serial_tp = serial.throughput().unwrap_or(f64::NAN);
+    let speedup = par4_tp / serial_tp;
+    println!(
+        "speedup @4 threads vs serial runner: {speedup:.2}x \
+         ({par4_tp:.0} vs {serial_tp:.0} interactions/s)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_parallel\",\n  \"workload\": \
+         {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \"h\": 4, \
+         \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ],\n  \
+         \"speedup_4threads_vs_serial\": {speedup:.3}\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::File::create("BENCH_parallel.json")
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("wrote BENCH_parallel.json"),
+        Err(e) => eprintln!("could not write BENCH_parallel.json: {e}"),
+    }
+    b.write_csv("results/bench_parallel.csv").ok();
+}

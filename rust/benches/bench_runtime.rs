@@ -2,55 +2,71 @@
 //! train steps, the fused step_k amortization, and eval. §Perf target:
 //! dispatch overhead ≤ 5% of step compute at transformer size; step_k
 //! should clearly beat k separate dispatches at MLP size.
+//!
+//! Requires `--features pjrt`; the default build prints a skip notice so
+//! `cargo bench` stays green in hermetic environments.
 
-use std::path::Path;
-use swarm_sgd::backend::TrainBackend;
-use swarm_sgd::bench::Bench;
-use swarm_sgd::config::ShardMode;
-use swarm_sgd::runtime::{XlaBackend, XlaBackendConfig};
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::path::Path;
+    use swarm_sgd::backend::TrainBackend;
+    use swarm_sgd::bench::Bench;
+    use swarm_sgd::config::ShardMode;
+    use swarm_sgd::runtime::{XlaBackend, XlaBackendConfig};
 
-fn load(preset: &str) -> Option<XlaBackend> {
-    if !Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("SKIP bench_runtime: run `make artifacts` first");
-        return None;
+    fn load(preset: &str) -> Option<XlaBackend> {
+        if !Path::new("artifacts/manifest.txt").exists() {
+            eprintln!("SKIP bench_runtime: run `make artifacts` first");
+            return None;
+        }
+        XlaBackend::load(
+            Path::new("artifacts"),
+            preset,
+            XlaBackendConfig {
+                agents: 1,
+                data_per_agent: 2048,
+                shard: ShardMode::Iid,
+                separation: 3.0,
+                seed: 5,
+                eval_batches: 2,
+            },
+        )
+        .ok()
     }
-    XlaBackend::load(
-        Path::new("artifacts"),
-        preset,
-        XlaBackendConfig {
-            agents: 1,
-            data_per_agent: 2048,
-            shard: ShardMode::Iid,
-            separation: 3.0,
-            seed: 5,
-            eval_batches: 2,
-        },
-    )
-    .ok()
+
+    pub fn main() {
+        let mut b = Bench::quick();
+        println!("== PJRT runtime (per-step latency) ==");
+        for preset in ["mlp_s", "cnn_s", "transformer_s"] {
+            let Some(mut be) = load(preset) else { return };
+            let (mut p, mut m) = be.init(0);
+            b.run(&format!("{preset} step x1"), || {
+                be.step(0, &mut p, &mut m, 0.01)
+            });
+            let k = be.manifest().k as u64;
+            b.run_elems(&format!("{preset} step_k (k={k}) per-call"), k, || {
+                be.step_burst(0, &mut p, &mut m, 0.01, k)
+            });
+            b.run(&format!("{preset} eval"), || be.eval(&p));
+            if preset == "mlp_s" {
+                let d = be.param_count();
+                let x: Vec<f32> = vec![0.1; d];
+                let y: Vec<f32> = vec![0.2; d];
+                b.run_elems(&format!("{preset} qavg artifact (d={d})"), (d * 4) as u64, || {
+                    be.model.qavg(&x, &y, 3).unwrap()
+                });
+            }
+        }
+        b.write_csv("results/bench_runtime.csv").ok();
+    }
 }
 
+#[cfg(feature = "pjrt")]
 fn main() {
-    let mut b = Bench::quick();
-    println!("== PJRT runtime (per-step latency) ==");
-    for preset in ["mlp_s", "cnn_s", "transformer_s"] {
-        let Some(mut be) = load(preset) else { return };
-        let (mut p, mut m) = be.init(0);
-        b.run(&format!("{preset} step x1"), || {
-            be.step(0, &mut p, &mut m, 0.01)
-        });
-        let k = be.manifest().k as u64;
-        b.run_elems(&format!("{preset} step_k (k={k}) per-call"), k, || {
-            be.step_burst(0, &mut p, &mut m, 0.01, k)
-        });
-        b.run(&format!("{preset} eval"), || be.eval(&p));
-        if preset == "mlp_s" {
-            let d = be.param_count();
-            let x: Vec<f32> = vec![0.1; d];
-            let y: Vec<f32> = vec![0.2; d];
-            b.run_elems(&format!("{preset} qavg artifact (d={d})"), (d * 4) as u64, || {
-                be.model.qavg(&x, &y, 3).unwrap()
-            });
-        }
-    }
-    b.write_csv("results/bench_runtime.csv").ok();
+    real::main();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("SKIP bench_runtime: built without the `pjrt` feature");
 }

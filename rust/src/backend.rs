@@ -74,3 +74,39 @@ pub trait TrainBackend {
         0.0
     }
 }
+
+/// A thread-safe training backend for the shared-memory parallel executor
+/// ([`crate::coordinator::run_parallel`]).
+///
+/// Differs from [`TrainBackend`] in two load-bearing ways:
+///
+/// * every method takes `&self` and the trait requires `Sync`, so N worker
+///   threads can step different agents concurrently without a global lock;
+/// * all randomness (gradient noise, batch draws) comes from the
+///   caller-supplied `rng` — the executor hands each node its own
+///   [`Pcg64::stream`], which is what makes a parallel run independent of
+///   thread interleaving and hence serially replayable bit-for-bit.
+///
+/// Method names deliberately do not collide with [`TrainBackend`] so a type
+/// can implement both and call sites stay unambiguous.
+pub trait SyncBackend: Sync {
+    /// Dimension `d` of the flat model vector.
+    fn dim(&self) -> usize;
+
+    /// The common starting point (params, momentum) — the paper's shared x₀.
+    fn common_init(&self) -> (Vec<f32>, Vec<f32>);
+
+    /// One local SGD step for `agent`, drawing all stochasticity from `rng`.
+    /// Returns the minibatch training loss.
+    fn step_with(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut crate::rngx::Pcg64,
+    ) -> f64;
+
+    /// Evaluate `params` on the backend's held-out objective.
+    fn eval_at(&self, params: &[f32]) -> EvalResult;
+}

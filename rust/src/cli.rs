@@ -90,10 +90,16 @@ swarm — SwarmSGD: decentralized SGD with asynchronous, local & quantized updat
 
 USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
+                [--executor serial|parallel] [--threads K]
                 train with a given algorithm/backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
-                shard, data_per_agent, artifacts_dir, batch_time, out_csv
+                shard, data_per_agent, artifacts_dir, batch_time, out_csv,
+                executor, threads
+                --executor parallel runs SwarmSGD on K shared-memory worker
+                threads (K=0: one per core; oracle presets only); the same
+                seed with --threads 1 replays the schedule serially,
+                bit-identical. --executor serial is the discrete-event runner
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]

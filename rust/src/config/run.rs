@@ -57,6 +57,11 @@ pub struct RunConfig {
     pub jitter: f64,
     /// results CSV path ("" = don't write)
     pub out_csv: String,
+    /// serial | parallel — which SwarmSGD executor runs the interaction
+    /// sequence (parallel = shared-memory worker threads, oracle presets)
+    pub executor: String,
+    /// worker threads for the parallel executor (0 = one per available core)
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -83,6 +88,8 @@ impl Default for RunConfig {
             batch_time: 0.4,
             jitter: 0.05,
             out_csv: String::new(),
+            executor: "serial".into(),
+            threads: 0,
         }
     }
 }
@@ -145,6 +152,11 @@ impl RunConfig {
             "batch_time" => self.batch_time = value.parse().map_err(|_| bad(key, value))?,
             "jitter" => self.jitter = value.parse().map_err(|_| bad(key, value))?,
             "out_csv" => self.out_csv = value.into(),
+            "executor" => match value {
+                "serial" | "parallel" => self.executor = value.into(),
+                _ => return Err(bad(key, value)),
+            },
+            "threads" => self.threads = value.parse().map_err(|_| bad(key, value))?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -206,6 +218,16 @@ impl RunConfig {
     pub fn is_oracle(&self) -> bool {
         self.preset.starts_with("oracle:")
     }
+
+    /// Worker-thread count for the parallel executor: the configured value,
+    /// or one per available core when left at 0 ("auto").
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -250,5 +272,20 @@ mod tests {
         let mut c = RunConfig::default();
         c.preset = "oracle:quadratic".into();
         assert!(c.is_oracle());
+    }
+
+    #[test]
+    fn executor_keys_parse_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.executor, "serial");
+        c.set("executor", "parallel").unwrap();
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.executor, "parallel");
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.effective_threads(), 4);
+        assert!(c.set("executor", "gpu").is_err());
+        assert!(c.set("threads", "many").is_err());
+        c.set("threads", "0").unwrap();
+        assert!(c.effective_threads() >= 1);
     }
 }

@@ -117,6 +117,23 @@ pub fn average_into_both(a: &mut [f32], b: &mut [f32]) {
     }
 }
 
+/// The Appendix-F non-blocking update for one endpoint, shared by every
+/// executor (serial, Poisson, parallel) so they stay bit-identical: given
+/// the pre-local-phase snapshot `s` and the incoming communication copy
+/// `inc`, set `comm ← (s + inc)/2` and `params ← (s + inc)/2 + (params − s)`
+/// in place.
+pub fn nonblocking_update(params: &mut [f32], comm: &mut [f32], s: &[f32], inc: &[f32]) {
+    debug_assert_eq!(params.len(), comm.len());
+    debug_assert_eq!(params.len(), s.len());
+    debug_assert_eq!(params.len(), inc.len());
+    for k in 0..params.len() {
+        let avg = 0.5 * (s[k] + inc[k]);
+        let delta = params[k] - s[k];
+        comm[k] = avg;
+        params[k] = avg + delta;
+    }
+}
+
 /// out ← (x + y)/2 without touching inputs.
 pub fn midpoint(x: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());

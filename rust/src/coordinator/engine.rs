@@ -23,6 +23,15 @@ impl NodeClocks {
         Self { t: vec![0.0; n], compute_total: 0.0, comm_total: 0.0 }
     }
 
+    /// Reassemble clocks from per-node recordings — used by the parallel
+    /// executor, which accounts time inside each node's state (no shared
+    /// mutable clock on the hot path) and merges once at the end. Callers
+    /// must reduce the per-node totals in node-index order so the f64 sums
+    /// are bit-identical to a serial replay.
+    pub fn from_parts(t: Vec<f64>, compute_total: f64, comm_total: f64) -> Self {
+        Self { t, compute_total, comm_total }
+    }
+
     pub fn n(&self) -> usize {
         self.t.len()
     }

@@ -46,6 +46,11 @@ pub struct RunMetrics {
     pub final_eval_acc: f64,
     /// mean data epochs per agent at the end
     pub epochs: f64,
+    /// which executor produced this run ("" = legacy serial runners)
+    pub executor: String,
+    /// worker threads of the schedule executor (0 = not applicable:
+    /// SwarmRunner / Poisson / baselines)
+    pub threads: usize,
 }
 
 impl RunMetrics {

@@ -11,17 +11,24 @@
 //! * [`cluster`] — shared agent state (live/communication model copies) and
 //!   pairwise averaging primitives.
 //! * [`metrics`] — loss curves, Γ_t, bits-on-wire, comm/compute splits.
+//! * [`parallel`] — the shared-memory multi-threaded executor: per-node
+//!   locks + lock-free communication slots, with a deterministic schedule
+//!   that makes any parallel run serially replayable bit-for-bit.
 
 pub mod baselines;
 mod cluster;
 mod engine;
 mod metrics;
+mod parallel;
 mod poisson;
 mod swarm;
 
-pub use cluster::{average_into_both, midpoint, quantized_transfer, Agent, Cluster};
+pub use cluster::{
+    average_into_both, midpoint, nonblocking_update, quantized_transfer, Agent, Cluster,
+};
 pub use engine::NodeClocks;
 pub use metrics::{CurvePoint, RunMetrics};
+pub use parallel::{run_parallel, run_replay_serial, Interaction, Schedule};
 pub use poisson::PoissonRunner;
 pub use swarm::{AveragingMode, LocalSteps, SwarmConfig, SwarmRunner};
 

@@ -1,0 +1,772 @@
+//! Shared-memory parallel SwarmSGD executor — Algorithm 2 executed, not
+//! simulated.
+//!
+//! The serial [`super::SwarmRunner`] walks the paper's interaction sequence
+//! one pairwise gossip at a time through a discrete-event loop. This module
+//! runs the same process on N real worker threads over shared node state,
+//! so "non-blocking pairwise averaging" is carried out by genuinely
+//! concurrent interactions:
+//!
+//! * **Per-node state** lives in `Mutex<NodeState>`; an interaction locks
+//!   only the endpoint it is currently updating.
+//! * **Blocking mode (Alg. 1)** takes both endpoint locks in ascending node
+//!   order (a global lock order, so rendezvous pairs cannot deadlock) and
+//!   holds them across the whole interaction — the rendezvous semantics.
+//! * **Non-blocking / quantized modes (Alg. 2 / Appendices F–G)** never hold
+//!   two locks: each node's communication copy `X'` is published into a
+//!   lock-free double-buffered [`CommSlot`] (seqlock: version counter +
+//!   two buffers, flipped by an atomic), and partners read it without
+//!   touching the owner's lock — the paper's "nobody waits" property.
+//!
+//! # Replay determinism
+//!
+//! A parallel run is **bit-identical** to a serial replay of the same seed,
+//! by construction rather than by luck:
+//!
+//! 1. The whole interaction sequence (edges, local-step counts H_i, and
+//!    quantizer seeds) is pre-drawn by [`Schedule::generate`] from a
+//!    dedicated [`Pcg64::stream`] — it does not depend on execution order.
+//! 2. All node-local randomness (gradient noise, compute-time jitter) comes
+//!    from that node's own `Pcg64::stream`, consumed in the node's schedule
+//!    order.
+//! 3. Workers claim interactions from a global cursor but **commit in
+//!    dependency order**: interaction t runs only after both endpoints have
+//!    finished all of their earlier scheduled interactions. The dataflow
+//!    DAG — and therefore every f32 operation and operand — is fixed by the
+//!    schedule, so any thread interleaving computes the same bits.
+//!
+//! [`run_replay_serial`] executes the identical schedule in plain program
+//! order; `tests/parallel_executor.rs` asserts metric-for-metric bit
+//! equality against multi-threaded runs, and CI enforces it on every PR.
+//!
+//! Deadlock freedom: the blocking mode uses ordered two-lock acquisition;
+//! the dependency wait cannot cycle because the lowest unfinished schedule
+//! index always has both dependencies satisfied (induction over t).
+
+use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
+use super::engine::NodeClocks;
+use super::metrics::{CurvePoint, RunMetrics};
+use super::swarm::{AveragingMode, LocalSteps, SwarmConfig};
+use crate::analysis::gamma_potential;
+use crate::backend::SyncBackend;
+use crate::netmodel::CostModel;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Stream tags for the executor's deterministic sub-RNGs (arbitrary,
+/// distinct; node streams use `STREAM_NODE_BASE + node`).
+const STREAM_SCHEDULE: u64 = 0x5EED_5C8E_D01E_0001;
+const STREAM_EVAL: u64 = 0x5EED_E7A1_0000_0002;
+const STREAM_NODE_BASE: u64 = 0x5EED_40DE_0000_0003;
+
+/// One pre-drawn pairwise interaction of the global schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interaction {
+    /// initiator endpoint (pays the exchange in non-blocking modes)
+    pub i: usize,
+    /// partner endpoint
+    pub j: usize,
+    /// local-step counts for each endpoint
+    pub hi: u64,
+    pub hj: u64,
+    /// lattice-quantizer seeds for the i←j and j←i transfers
+    pub seed_ij: u32,
+    pub seed_ji: u32,
+    /// this is endpoint i's `seq_i`-th interaction (0-based) — the
+    /// dependency token workers wait on
+    pub seq_i: u64,
+    pub seq_j: u64,
+}
+
+/// The full pre-drawn interaction sequence of one run. Everything stochastic
+/// about *who* interacts, *how many* local steps they take, and *which*
+/// quantizer hashes they use is fixed here, before any thread starts — the
+/// first pillar of the replay-determinism contract.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub steps: Vec<Interaction>,
+    /// total interactions per node (seq_* counters end at these values)
+    pub per_node: Vec<u64>,
+}
+
+impl Schedule {
+    pub fn generate(cfg: &SwarmConfig, graph: &Graph) -> Self {
+        let mut rng = Pcg64::stream(cfg.seed, STREAM_SCHEDULE);
+        let mut per_node = vec![0u64; cfg.n];
+        let mut steps = Vec::with_capacity(cfg.interactions as usize);
+        for _ in 0..cfg.interactions {
+            let (i, j) = graph.sample_edge(&mut rng);
+            let (hi, hj) = match cfg.local_steps {
+                LocalSteps::Fixed(h) => (h, h),
+                LocalSteps::Geometric(h) => (rng.geometric(h), rng.geometric(h)),
+            };
+            let seed_ij = rng.next_u32();
+            let seed_ji = rng.next_u32();
+            steps.push(Interaction {
+                i,
+                j,
+                hi,
+                hj,
+                seed_ij,
+                seed_ji,
+                seq_i: per_node[i],
+                seq_j: per_node[j],
+            });
+            per_node[i] += 1;
+            per_node[j] += 1;
+        }
+        Self { steps, per_node }
+    }
+}
+
+/// Lock-free double-buffered communication-copy slot (seqlock).
+///
+/// In this executor the per-node dependency order guarantees a slot is
+/// never written while being read (a node has at most one enabled
+/// interaction, which is the only writer, and readers are interactions of
+/// the partner — also serialized against it). The seqlock protocol is
+/// defense in depth for that invariant breaking (e.g. a future
+/// free-running mode): writers mark the version odd, fill the inactive
+/// buffer, then flip; readers copy and retry on any version change, with
+/// fences ordering the buffer accesses against the version stores.
+struct CommSlot {
+    /// odd = write in progress; `(seq >> 1) & 1` = active buffer index
+    seq: AtomicU64,
+    buf: [UnsafeCell<Vec<f32>>; 2],
+}
+
+// Safety: buffer contents are only written by the slot's unique active
+// interaction (dependency order) and reads validate the version counter
+// around the copy; the atomic `seq` stores/fences provide the necessary
+// release/acquire edges.
+unsafe impl Sync for CommSlot {}
+
+impl CommSlot {
+    fn new(init: &[f32]) -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            buf: [UnsafeCell::new(init.to_vec()), UnsafeCell::new(init.to_vec())],
+        }
+    }
+
+    /// Publish a fresh communication copy (caller is the node's unique
+    /// enabled interaction).
+    fn publish(&self, data: &[f32]) {
+        let s = self.seq.load(Ordering::Relaxed);
+        debug_assert_eq!(s & 1, 0, "concurrent CommSlot writers");
+        self.seq.store(s.wrapping_add(1), Ordering::Relaxed);
+        // buffer writes must not become visible before the odd mark
+        fence(Ordering::SeqCst);
+        let idx = (((s >> 1) + 1) & 1) as usize;
+        unsafe { (*self.buf[idx].get()).copy_from_slice(data) };
+        self.seq.store(s.wrapping_add(2), Ordering::Release);
+    }
+
+    /// Copy the current communication copy into `out` (lock-free).
+    fn read_into(&self, out: &mut [f32]) {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let idx = ((s1 >> 1) & 1) as usize;
+            out.copy_from_slice(unsafe { &*self.buf[idx].get() });
+            // the copy must complete before the validating re-read
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return;
+            }
+        }
+    }
+}
+
+/// Everything one simulated node owns. Guarded by its own mutex; the
+/// simulated clock and cost totals live here too, so the hot path touches
+/// no shared mutable accounting (merged once, in node-index order, at the
+/// end — keeping f64 sums replay-exact).
+struct NodeState {
+    params: Vec<f32>,
+    mom: Vec<f32>,
+    /// communication copy X' (also mirrored into the lock-free slot)
+    comm: Vec<f32>,
+    /// snapshot S of `params` taken before the current local phase
+    snap: Vec<f32>,
+    /// per-node stream: gradient noise + compute-time jitter
+    rng: Pcg64,
+    steps: u64,
+    interactions: u64,
+    last_loss: f64,
+    /// simulated clock (seconds)
+    time: f64,
+    compute: f64,
+    comm_time: f64,
+}
+
+/// Shared run state visible to every worker.
+struct Shared<'a, B: SyncBackend + ?Sized> {
+    backend: &'a B,
+    cost: &'a CostModel,
+    cfg: &'a SwarmConfig,
+    schedule: &'a [Interaction],
+    nodes: Vec<Mutex<NodeState>>,
+    slots: Vec<CommSlot>,
+    /// completed-interaction count per node (the dependency tokens)
+    done: Vec<AtomicU64>,
+    /// global schedule cursor (next unclaimed interaction index)
+    cursor: AtomicU64,
+    bits: AtomicU64,
+    fallbacks: AtomicU64,
+    /// set when a worker panics so dependency spins stay live
+    abort: AtomicBool,
+    dim: usize,
+}
+
+/// Flags `abort` if the owning thread unwinds, so sibling workers spinning
+/// on a dependency from the dead thread exit instead of hanging.
+struct AbortGuard<'a>(&'a AtomicBool);
+
+impl Drop for AbortGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Run SwarmSGD on `threads` worker threads over shared node state.
+///
+/// Evaluation points are chunk barriers: workers drain the schedule up to
+/// each milestone (multiples of `eval_every`, plus the end), then the
+/// calling thread records a [`CurvePoint`] exactly as the serial runner
+/// would. `threads == 1` degenerates to the serial replay path.
+pub fn run_parallel<B: SyncBackend + ?Sized>(
+    cfg: &SwarmConfig,
+    threads: usize,
+    graph: &Graph,
+    cost: &CostModel,
+    backend: &B,
+    eval_every: u64,
+    track_gamma: bool,
+) -> RunMetrics {
+    run_schedule(cfg, threads.max(1), graph, cost, backend, eval_every, track_gamma, "parallel")
+}
+
+/// Serially replay the exact schedule a parallel run with the same
+/// [`SwarmConfig`] executes. Metrics are bit-identical to [`run_parallel`]
+/// at any thread count — the executor's testable oracle.
+pub fn run_replay_serial<B: SyncBackend + ?Sized>(
+    cfg: &SwarmConfig,
+    graph: &Graph,
+    cost: &CostModel,
+    backend: &B,
+    eval_every: u64,
+    track_gamma: bool,
+) -> RunMetrics {
+    run_schedule(cfg, 1, graph, cost, backend, eval_every, track_gamma, "serial-replay")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_schedule<B: SyncBackend + ?Sized>(
+    cfg: &SwarmConfig,
+    threads: usize,
+    graph: &Graph,
+    cost: &CostModel,
+    backend: &B,
+    eval_every: u64,
+    track_gamma: bool,
+    label: &str,
+) -> RunMetrics {
+    assert!(cfg.n >= 2, "gossip needs n >= 2");
+    assert_eq!(cfg.n, graph.n(), "config n must match graph");
+    let schedule = Schedule::generate(cfg, graph);
+    let dim = backend.dim();
+    let (p0, m0) = backend.common_init();
+    assert_eq!(p0.len(), dim, "backend dim() must match its init vector");
+    let nodes: Vec<Mutex<NodeState>> = (0..cfg.n)
+        .map(|k| {
+            Mutex::new(NodeState {
+                params: p0.clone(),
+                mom: m0.clone(),
+                comm: p0.clone(),
+                snap: vec![0.0; dim],
+                rng: Pcg64::stream(cfg.seed, STREAM_NODE_BASE + k as u64),
+                steps: 0,
+                interactions: 0,
+                last_loss: f64::NAN,
+                time: 0.0,
+                compute: 0.0,
+                comm_time: 0.0,
+            })
+        })
+        .collect();
+    let sh = Shared {
+        backend,
+        cost,
+        cfg,
+        schedule: &schedule.steps,
+        nodes,
+        slots: (0..cfg.n).map(|_| CommSlot::new(&p0)).collect(),
+        done: (0..cfg.n).map(|_| AtomicU64::new(0)).collect(),
+        cursor: AtomicU64::new(0),
+        bits: AtomicU64::new(0),
+        fallbacks: AtomicU64::new(0),
+        abort: AtomicBool::new(false),
+        dim,
+    };
+    let mut eval_rng = Pcg64::stream(cfg.seed, STREAM_EVAL);
+    let mut m = RunMetrics::new(&cfg.name);
+    if threads == 1 {
+        let mut inc_i = vec![0.0f32; dim];
+        let mut inc_j = vec![0.0f32; dim];
+        for end in milestones(cfg.interactions, eval_every) {
+            chunk_serial(&sh, end, &mut inc_i, &mut inc_j);
+            record_point(&sh, end, &mut eval_rng, track_gamma, &mut m);
+        }
+    } else {
+        for end in milestones(cfg.interactions, eval_every) {
+            chunk_parallel(&sh, end, threads);
+            record_point(&sh, end, &mut eval_rng, track_gamma, &mut m);
+        }
+    }
+    let Shared { nodes, bits, fallbacks, .. } = sh;
+    let states: Vec<NodeState> = nodes
+        .into_iter()
+        .map(|n| n.into_inner().expect("node lock poisoned"))
+        .collect();
+    let clocks = NodeClocks::from_parts(
+        states.iter().map(|s| s.time).collect(),
+        states.iter().map(|s| s.compute).sum(),
+        states.iter().map(|s| s.comm_time).sum(),
+    );
+    m.interactions = cfg.interactions;
+    m.local_steps = states.iter().map(|s| s.steps).sum();
+    m.sim_time = clocks.max_time();
+    m.compute_time_total = clocks.compute_total;
+    m.comm_time_total = clocks.comm_total;
+    m.total_bits = bits.into_inner();
+    m.quant_fallbacks = fallbacks.into_inner();
+    m.executor = label.to_string();
+    m.threads = threads;
+    if let Some(p) = m.curve.last() {
+        m.final_eval_loss = p.eval_loss;
+        m.final_eval_acc = p.eval_acc;
+    }
+    m
+}
+
+/// Chunk ends: every multiple of `eval_every` in `(0, total)`, then `total`
+/// (matching the serial runner's `at_eval || t == total` cadence).
+fn milestones(total: u64, eval_every: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    if total == 0 {
+        return v;
+    }
+    if eval_every > 0 {
+        let mut next = eval_every;
+        while next < total {
+            v.push(next);
+            next += eval_every;
+        }
+    }
+    v.push(total);
+    v
+}
+
+/// Drain schedule indices `[cursor, end)` on `threads` scoped workers.
+fn chunk_parallel<B: SyncBackend + ?Sized>(sh: &Shared<'_, B>, end: u64, threads: usize) {
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let _guard = AbortGuard(&sh.abort);
+                let mut inc_i = vec![0.0f32; sh.dim];
+                let mut inc_j = vec![0.0f32; sh.dim];
+                loop {
+                    let t = sh.cursor.fetch_add(1, Ordering::Relaxed);
+                    if t >= end {
+                        break;
+                    }
+                    let it = sh.schedule[t as usize];
+                    if !wait_deps(sh, &it) {
+                        break;
+                    }
+                    execute_interaction(sh, t, &it, &mut inc_i, &mut inc_j);
+                    // this worker is the unique owner of both endpoints here
+                    sh.done[it.i].store(it.seq_i + 1, Ordering::Release);
+                    sh.done[it.j].store(it.seq_j + 1, Ordering::Release);
+                }
+            });
+        }
+    });
+    // indices over-claimed past `end` were abandoned; hand them to the
+    // next chunk
+    sh.cursor.store(end, Ordering::Relaxed);
+}
+
+/// The `threads == 1` replay path: plain program order, no spawning.
+fn chunk_serial<B: SyncBackend + ?Sized>(
+    sh: &Shared<'_, B>,
+    end: u64,
+    inc_i: &mut [f32],
+    inc_j: &mut [f32],
+) {
+    loop {
+        let t = sh.cursor.load(Ordering::Relaxed);
+        if t >= end {
+            break;
+        }
+        sh.cursor.store(t + 1, Ordering::Relaxed);
+        let it = sh.schedule[t as usize];
+        // program order trivially satisfies the dependency order
+        execute_interaction(sh, t, &it, inc_i, inc_j);
+        sh.done[it.i].store(it.seq_i + 1, Ordering::Relaxed);
+        sh.done[it.j].store(it.seq_j + 1, Ordering::Relaxed);
+    }
+}
+
+/// Spin until both endpoints of `it` have completed all earlier scheduled
+/// interactions. Returns false if the run is aborting (sibling panic).
+fn wait_deps<B: SyncBackend + ?Sized>(sh: &Shared<'_, B>, it: &Interaction) -> bool {
+    let mut spins = 0u32;
+    while sh.done[it.i].load(Ordering::Acquire) != it.seq_i
+        || sh.done[it.j].load(Ordering::Acquire) != it.seq_j
+    {
+        if sh.abort.load(Ordering::Relaxed) {
+            return false;
+        }
+        spins = spins.wrapping_add(1);
+        if spins % 64 == 0 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+    true
+}
+
+/// Execute one scheduled interaction (both endpoints), per the configured
+/// averaging mode. `t` is the 0-based schedule index.
+fn execute_interaction<B: SyncBackend + ?Sized>(
+    sh: &Shared<'_, B>,
+    t: u64,
+    it: &Interaction,
+    inc_i: &mut [f32],
+    inc_j: &mut [f32],
+) {
+    // the serial runner numbers interactions from 1
+    let lr = sh.cfg.lr.at(t + 1);
+    let full_bytes = sh.cost.wire_bytes(sh.dim);
+    match sh.cfg.mode {
+        AveragingMode::Blocking => {
+            // ordered two-lock acquisition: ascending node index
+            let (lo, hi) = (it.i.min(it.j), it.i.max(it.j));
+            let mut g_lo = sh.nodes[lo].lock().expect("node lock poisoned");
+            let mut g_hi = sh.nodes[hi].lock().expect("node lock poisoned");
+            let (ni, nj) = if lo == it.i {
+                (&mut *g_lo, &mut *g_hi)
+            } else {
+                (&mut *g_hi, &mut *g_lo)
+            };
+            local_phase(sh.backend, sh.cost, it.i, ni, lr, it.hi);
+            local_phase(sh.backend, sh.cost, it.j, nj, lr, it.hj);
+            average_into_both(&mut ni.params, &mut nj.params);
+            ni.comm.copy_from_slice(&ni.params);
+            nj.comm.copy_from_slice(&nj.params);
+            sh.slots[it.i].publish(&ni.comm);
+            sh.slots[it.j].publish(&nj.comm);
+            // rendezvous: both wait for the later endpoint, both pay the NIC
+            let exch = sh.cost.exchange_time(full_bytes);
+            let done = ni.time.max(nj.time) + exch;
+            ni.time = done;
+            nj.time = done;
+            ni.comm_time += exch;
+            nj.comm_time += exch;
+            ni.interactions += 1;
+            nj.interactions += 1;
+            sh.bits.fetch_add(2 * 8 * full_bytes, Ordering::Relaxed);
+        }
+        mode => {
+            // --- local phases, each endpoint under its own lock only ---
+            {
+                let mut g = sh.nodes[it.i].lock().expect("node lock poisoned");
+                local_phase(sh.backend, sh.cost, it.i, &mut g, lr, it.hi);
+            }
+            {
+                let mut g = sh.nodes[it.j].lock().expect("node lock poisoned");
+                local_phase(sh.backend, sh.cost, it.j, &mut g, lr, it.hj);
+            }
+            // --- read both communication copies BEFORE either update
+            // (matches the serial runner); lock-free seqlock reads ---
+            sh.slots[it.j].read_into(inc_i); // incoming for i: X'_j
+            sh.slots[it.i].read_into(inc_j); // incoming for j: X'_i
+            let quant = match mode {
+                AveragingMode::Quantized { bits, eps } => Some((bits, eps)),
+                _ => None,
+            };
+            // --- endpoint updates: nobody ever takes the partner's lock.
+            // j first, so i's guard can also absorb the initiator's
+            // exchange charge (which needs both wire-bit counts) without a
+            // third lock acquisition on the hot path ---
+            let wire_j = {
+                let mut g = sh.nodes[it.j].lock().expect("node lock poisoned");
+                endpoint_update(sh, it.j, &mut g, inc_j, quant, it.seed_ji)
+            };
+            let add_bits = {
+                let mut g = sh.nodes[it.i].lock().expect("node lock poisoned");
+                let st = &mut *g;
+                let wire = wire_j + endpoint_update(sh, it.i, st, inc_i, quant, it.seed_ij);
+                // time/bit accounting: the initiator pays the exchange
+                let (exch, add_bits) = match quant {
+                    None => (sh.cost.exchange_time(full_bytes), 2 * 8 * full_bytes),
+                    Some(_) => {
+                        let wire_bits = sh.cost.scale_bits(wire, sh.dim);
+                        (sh.cost.exchange_time(wire_bits.div_ceil(8)), wire_bits)
+                    }
+                };
+                st.time += exch;
+                st.comm_time += exch;
+                add_bits
+            };
+            sh.bits.fetch_add(add_bits, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One endpoint's local-SGD phase: snapshot S, run `h` steps drawing all
+/// randomness from the node's own stream, charge compute time.
+fn local_phase<B: SyncBackend + ?Sized>(
+    backend: &B,
+    cost: &CostModel,
+    agent: usize,
+    st: &mut NodeState,
+    lr: f32,
+    h: u64,
+) {
+    st.snap.copy_from_slice(&st.params);
+    let mut last = f64::NAN;
+    for _ in 0..h {
+        last = backend.step_with(agent, &mut st.params, &mut st.mom, lr, &mut st.rng);
+    }
+    st.last_loss = last;
+    st.steps += h;
+    let mut comp = 0.0;
+    for _ in 0..h {
+        comp += cost.compute_time(&mut st.rng);
+    }
+    st.time += comp;
+    st.compute += comp;
+}
+
+/// Apply the Appendix-F update to one endpoint (caller holds its lock):
+/// optional lattice decode of the incoming copy against the node's
+/// snapshot, the averaging rule, then publish the fresh communication
+/// copy. Returns wire bits consumed (0 when not quantizing).
+fn endpoint_update<B: SyncBackend + ?Sized>(
+    sh: &Shared<'_, B>,
+    node: usize,
+    st: &mut NodeState,
+    inc: &mut [f32],
+    quant: Option<(u32, f32)>,
+    seed: u32,
+) -> u64 {
+    let mut wire = 0u64;
+    if let Some((bits, eps)) = quant {
+        let tr = quantized_transfer(inc, &st.snap, eps, bits, seed);
+        wire = tr.bits;
+        if tr.fell_back {
+            sh.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        inc.copy_from_slice(&tr.decoded);
+    }
+    nonblocking_update(&mut st.params, &mut st.comm, &st.snap, inc);
+    sh.slots[node].publish(&st.comm);
+    st.interactions += 1;
+    wire
+}
+
+/// Record a curve point at a chunk barrier (no workers active). Mirrors the
+/// serial runner's bookkeeping: μ_t in f64 node-index order, an eval-stream
+/// individual pick, Γ_t on demand.
+fn record_point<B: SyncBackend + ?Sized>(
+    sh: &Shared<'_, B>,
+    t: u64,
+    eval_rng: &mut Pcg64,
+    track_gamma: bool,
+    m: &mut RunMetrics,
+) {
+    let guards: Vec<std::sync::MutexGuard<'_, NodeState>> =
+        sh.nodes.iter().map(|n| n.lock().expect("node lock poisoned")).collect();
+    let n = guards.len();
+    let mut acc = vec![0.0f64; sh.dim];
+    for g in &guards {
+        for (s, &v) in acc.iter_mut().zip(&g.params) {
+            *s += v as f64;
+        }
+    }
+    let mu: Vec<f32> = acc.into_iter().map(|v| (v / n as f64) as f32).collect();
+    let ev = sh.backend.eval_at(&mu);
+    let pick = eval_rng.below_usize(n);
+    let ind = sh.backend.eval_at(&guards[pick].params);
+    let gamma = if track_gamma {
+        let models: Vec<Vec<f32>> = guards.iter().map(|g| g.params.clone()).collect();
+        gamma_potential(&models)
+    } else {
+        f64::NAN
+    };
+    let finite: Vec<f64> =
+        guards.iter().map(|g| g.last_loss).filter(|l| l.is_finite()).collect();
+    let train_loss = if finite.is_empty() {
+        f64::NAN
+    } else {
+        finite.iter().sum::<f64>() / finite.len() as f64
+    };
+    let sim_time = guards.iter().map(|g| g.time).fold(0.0, f64::max);
+    m.push(CurvePoint {
+        t,
+        parallel_time: t as f64 / n as f64,
+        sim_time,
+        epochs: 0.0,
+        train_loss,
+        eval_loss: ev.loss,
+        eval_acc: ev.accuracy,
+        indiv_loss: ind.loss,
+        gamma,
+        bits: sh.bits.load(Ordering::Relaxed),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LrSchedule;
+    use crate::grad::QuadraticOracle;
+    use crate::topology::Topology;
+
+    fn quad(n: usize, dim: usize, sigma: f64) -> QuadraticOracle {
+        QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 11)
+    }
+
+    fn cfg(n: usize, t: u64, mode: AveragingMode) -> SwarmConfig {
+        SwarmConfig {
+            n,
+            local_steps: LocalSteps::Fixed(2),
+            mode,
+            lr: LrSchedule::Constant(0.05),
+            interactions: t,
+            seed: 9,
+            name: "par".into(),
+        }
+    }
+
+    fn graph(n: usize) -> Graph {
+        let mut rng = Pcg64::seed(5);
+        Graph::build(Topology::Complete, n, &mut rng)
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_sequenced() {
+        let c = cfg(8, 500, AveragingMode::NonBlocking);
+        let g = graph(8);
+        let a = Schedule::generate(&c, &g);
+        let b = Schedule::generate(&c, &g);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.per_node, b.per_node);
+        // seq tokens count each node's interactions in order
+        let mut seen = vec![0u64; 8];
+        for it in &a.steps {
+            assert_ne!(it.i, it.j);
+            assert_eq!(it.seq_i, seen[it.i]);
+            assert_eq!(it.seq_j, seen[it.j]);
+            seen[it.i] += 1;
+            seen[it.j] += 1;
+        }
+        assert_eq!(seen, a.per_node);
+        assert_eq!(seen.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn comm_slot_roundtrip_flips_buffers() {
+        let s = CommSlot::new(&[1.0, 2.0]);
+        let mut out = vec![0.0f32; 2];
+        s.read_into(&mut out);
+        assert_eq!(out, [1.0, 2.0]);
+        s.publish(&[3.0, 4.0]);
+        s.read_into(&mut out);
+        assert_eq!(out, [3.0, 4.0]);
+        s.publish(&[5.0, 6.0]);
+        s.read_into(&mut out);
+        assert_eq!(out, [5.0, 6.0]);
+    }
+
+    fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics) {
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (pa, pb) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(pa.t, pb.t);
+            assert_eq!(pa.eval_loss.to_bits(), pb.eval_loss.to_bits(), "t={}", pa.t);
+            assert_eq!(pa.train_loss.to_bits(), pb.train_loss.to_bits());
+            assert_eq!(pa.indiv_loss.to_bits(), pb.indiv_loss.to_bits());
+            assert_eq!(pa.gamma.to_bits(), pb.gamma.to_bits());
+            assert_eq!(pa.sim_time.to_bits(), pb.sim_time.to_bits());
+            assert_eq!(pa.bits, pb.bits);
+        }
+        assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.quant_fallbacks, b.quant_fallbacks);
+        assert_eq!(a.local_steps, b.local_steps);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(a.compute_time_total.to_bits(), b.compute_time_total.to_bits());
+        assert_eq!(a.comm_time_total.to_bits(), b.comm_time_total.to_bits());
+    }
+
+    #[test]
+    fn parallel_matches_serial_replay_all_modes() {
+        let n = 8;
+        for mode in [
+            AveragingMode::NonBlocking,
+            AveragingMode::Blocking,
+            AveragingMode::Quantized { bits: 8, eps: 1e-2 },
+        ] {
+            let c = cfg(n, 400, mode);
+            let g = graph(n);
+            let backend = quad(n, 16, 0.1);
+            let cost = CostModel::deterministic(0.4);
+            let serial = run_replay_serial(&c, &g, &cost, &backend, 100, true);
+            for threads in [2, 4] {
+                let par = run_parallel(&c, threads, &g, &cost, &backend, 100, true);
+                assert_bit_identical(&serial, &par);
+            }
+        }
+    }
+
+    #[test]
+    fn replay_converges_on_quadratic() {
+        let n = 8;
+        let backend = quad(n, 16, 0.1);
+        let f_star = backend.f_star();
+        let gap0 = {
+            let (p, _) = backend.common_init();
+            backend.eval_at(&p).loss - f_star
+        };
+        let c = cfg(n, 800, AveragingMode::NonBlocking);
+        let g = graph(n);
+        let cost = CostModel::deterministic(0.4);
+        let m = run_replay_serial(&c, &g, &cost, &backend, 100, false);
+        let gap = (m.final_eval_loss - f_star) / gap0;
+        assert!(gap < 0.1, "normalized gap {gap}");
+        assert_eq!(m.interactions, 800);
+        assert_eq!(m.local_steps, 800 * 2 * 2);
+        assert!(m.sim_time > 0.0);
+        assert_eq!(m.executor, "serial-replay");
+    }
+
+    #[test]
+    fn milestones_cadence_matches_serial_runner() {
+        assert_eq!(milestones(10, 0), vec![10]);
+        assert_eq!(milestones(10, 4), vec![4, 8, 10]);
+        assert_eq!(milestones(8, 4), vec![4, 8]);
+        assert!(milestones(0, 4).is_empty());
+    }
+}

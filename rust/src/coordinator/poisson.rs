@@ -99,12 +99,7 @@ impl PoissonRunner {
             let comm_j = self.cluster.agents[j].comm.clone();
             for (node, s, inc) in [(i, &scratch_i, &comm_j), (j, &scratch_j, &comm_i)] {
                 let a = &mut self.cluster.agents[node];
-                for k in 0..d {
-                    let avg = 0.5 * (s[k] + inc[k]);
-                    let delta = a.params[k] - s[k];
-                    a.comm[k] = avg;
-                    a.params[k] = avg + delta;
-                }
+                super::cluster::nonblocking_update(&mut a.params, &mut a.comm, s, inc);
                 a.interactions += 1;
             }
             self.clocks.charge_comm(i, ctx.cost.exchange_time(full_bytes));

@@ -21,7 +21,7 @@
 //! Local step counts are fixed (`H`) or geometric with mean `H` — the two
 //! regimes of Theorems 4.2 and 4.1 respectively.
 
-use super::cluster::{quantized_transfer, Cluster};
+use super::cluster::{nonblocking_update, quantized_transfer, Cluster};
 use super::engine::NodeClocks;
 use super::metrics::{CurvePoint, RunMetrics};
 use super::{LrSchedule, RunContext};
@@ -134,6 +134,7 @@ impl SwarmRunner {
         m.compute_time_total = self.clocks.compute_total;
         m.comm_time_total = self.clocks.comm_total;
         m.epochs = self.mean_epochs(ctx);
+        m.executor = "serial".into();
         if let Some(p) = m.curve.last() {
             m.final_eval_loss = p.eval_loss;
             m.final_eval_acc = p.eval_acc;
@@ -245,23 +246,11 @@ impl SwarmRunner {
         // X_i ← (S_i + inc)/2 + Δ_i ;  comm_i ← (S_i + inc)/2
         {
             let a = &mut self.cluster.agents[i];
-            let (s, inc) = (&self.scratch_a, &self.comm_b);
-            for k in 0..a.params.len() {
-                let avg = 0.5 * (s[k] + inc[k]);
-                let delta = a.params[k] - s[k];
-                a.comm[k] = avg;
-                a.params[k] = avg + delta;
-            }
+            nonblocking_update(&mut a.params, &mut a.comm, &self.scratch_a, &self.comm_b);
         }
         {
             let a = &mut self.cluster.agents[j];
-            let (s, inc) = (&self.scratch_b, &self.comm_a);
-            for k in 0..a.params.len() {
-                let avg = 0.5 * (s[k] + inc[k]);
-                let delta = a.params[k] - s[k];
-                a.comm[k] = avg;
-                a.params[k] = avg + delta;
-            }
+            nonblocking_update(&mut a.params, &mut a.comm, &self.scratch_b, &self.comm_a);
         }
         wire
     }

@@ -110,6 +110,37 @@ impl QuadraticOracle {
     pub fn f_star(&self) -> f64 {
         self.loss(&self.optimum())
     }
+
+    /// The single SGD update rule both backend impls delegate to (takes the
+    /// oracle tables and the RNG as separate borrows so `TrainBackend::step`
+    /// can pass disjoint fields of `&mut self`). Draw-free when `sigma == 0`
+    /// so noiseless benches measure pure executor cost.
+    #[allow(clippy::too_many_arguments)]
+    fn step_core(
+        d: &[f64],
+        c: &[f64],
+        dim: usize,
+        agent: usize,
+        sigma: f64,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let mut loss = 0.0;
+        for j in 0..dim {
+            let x = params[j] as f64;
+            let dij = d[agent * dim + j];
+            let cij = c[agent * dim + j];
+            let noise = if sigma > 0.0 { rng.normal() * sigma } else { 0.0 };
+            let g = dij * (x - cij) + noise;
+            loss += 0.5 * dij * (x - cij) * (x - cij);
+            // plain SGD (mu=0) — the theory setting; momentum unused here
+            mom[j] = g as f32;
+            params[j] = (x - lr as f64 * g) as f32;
+        }
+        loss
+    }
 }
 
 impl TrainBackend for QuadraticOracle {
@@ -125,17 +156,17 @@ impl TrainBackend for QuadraticOracle {
 
     fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
         debug_assert!(agent < self.agents);
-        let mut loss = 0.0;
-        for j in 0..self.dim {
-            let x = params[j] as f64;
-            let dij = self.d[agent * self.dim + j];
-            let cij = self.c[agent * self.dim + j];
-            let g = dij * (x - cij) + self.rng.normal() * self.sigma;
-            loss += 0.5 * dij * (x - cij) * (x - cij);
-            // plain SGD (mu=0) — the theory setting; momentum unused here
-            mom[j] = g as f32;
-            params[j] = (x - lr as f64 * g) as f32;
-        }
+        let loss = Self::step_core(
+            &self.d,
+            &self.c,
+            self.dim,
+            agent,
+            self.sigma,
+            params,
+            mom,
+            lr,
+            &mut self.rng,
+        );
         self.steps[agent] += 1;
         loss
     }
@@ -153,6 +184,38 @@ impl TrainBackend for QuadraticOracle {
     fn grad_norm_sq(&mut self, params: &[f32]) -> Option<f64> {
         let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
         Some(self.true_grad(&x).iter().map(|g| g * g).sum())
+    }
+}
+
+/// Thread-safe variant for the parallel executor: the oracle's `d`/`c`
+/// tables are immutable, so stepping only needs the caller's per-node RNG.
+/// (Per-agent step counters are not tracked here — they live with the
+/// executor's node states.)
+impl crate::backend::SyncBackend for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn common_init(&self) -> (Vec<f32>, Vec<f32>) {
+        // deterministic start (paper: x_0 = 0^d), matching TrainBackend::init
+        (vec![0.0; self.dim], vec![0.0; self.dim])
+    }
+
+    fn step_with(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        debug_assert!(agent < self.agents);
+        Self::step_core(&self.d, &self.c, self.dim, agent, self.sigma, params, mom, lr, rng)
+    }
+
+    fn eval_at(&self, params: &[f32]) -> EvalResult {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        EvalResult { loss: self.loss(&x), accuracy: f64::NAN }
     }
 }
 

@@ -15,7 +15,33 @@
 //!   lattice quantize-average, fused SGD update) with pure-jnp oracles.
 //!
 //! Python never runs at training time: `make artifacts` AOT-compiles the
-//! models; the [`runtime`] module loads them through PJRT.
+//! models; the [`runtime`] module loads them through PJRT (behind the
+//! `pjrt` feature — default builds substitute a stub and stay hermetic).
+//!
+//! # Executors
+//!
+//! Two executors run the SwarmSGD interaction sequence:
+//!
+//! * **Serial** ([`coordinator::SwarmRunner`], `--executor serial`) — the
+//!   discrete-event reference: one interaction at a time, simulated
+//!   per-node clocks supplying the paper's time axes.
+//! * **Parallel** ([`coordinator::run_parallel`], `--executor parallel
+//!   --threads K`) — N shared-memory worker threads over per-node
+//!   `Mutex<NodeState>`; Algorithm 1 rendezvous uses ordered two-lock
+//!   acquisition, Algorithms 2/G read partners' communication copies from
+//!   lock-free double-buffered slots, so "nobody waits" is executed, not
+//!   simulated.
+//!
+//! **Replay-determinism contract:** a parallel run pre-draws its whole
+//! interaction schedule and gives every node a private
+//! [`rngx::Pcg64::stream`]; workers commit interactions in per-node
+//! dependency order, which fixes the dataflow DAG independently of thread
+//! interleaving. [`coordinator::run_replay_serial`] executes the identical
+//! schedule in program order and must match **bit-for-bit** on every
+//! metric — `tests/parallel_executor.rs` asserts this for blocking,
+//! non-blocking, and quantized modes, and `.github/workflows/ci.yml` runs
+//! those tests (plus fmt/clippy gates and a non-blocking throughput bench
+//! that archives `BENCH_parallel.json`) on every push and PR.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

@@ -8,7 +8,7 @@ use swarm_sgd::config::RunConfig;
 use swarm_sgd::coordinator::baselines::{
     AdPsgdRunner, AllReduceRunner, DPsgdRunner, LocalSgdRunner, RoundsConfig, SgpRunner,
 };
-use swarm_sgd::coordinator::{RunContext, RunMetrics, SwarmConfig, SwarmRunner};
+use swarm_sgd::coordinator::{run_parallel, RunContext, RunMetrics, SwarmConfig, SwarmRunner};
 use swarm_sgd::figures::{run_figure, write_curves};
 use swarm_sgd::grad::{LogisticOracle, QuadraticOracle, SoftmaxOracle};
 use swarm_sgd::output::Table;
@@ -42,12 +42,16 @@ fn main() {
     }
 }
 
+/// The `oracle:quadratic` preset — single definition so `--executor serial`
+/// and `--executor parallel` train the identical objective.
+fn quadratic_preset(cfg: &RunConfig) -> QuadraticOracle {
+    QuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
+}
+
 fn build_backend(cfg: &RunConfig) -> Result<Box<dyn TrainBackend>, String> {
     if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
         return Ok(match kind {
-            "quadratic" => Box::new(QuadraticOracle::new(
-                64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed,
-            )),
+            "quadratic" => Box::new(quadratic_preset(cfg)),
             "softmax" => Box::new(SoftmaxOracle::synthetic(
                 cfg.data_per_agent * cfg.n,
                 32,
@@ -93,10 +97,19 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
+    for key in ["executor", "threads"] {
+        if let Some(v) = cli.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
     if cli.has("quick") {
         cfg.interactions = cfg.interactions.min(100);
     }
     println!("config: {cfg:?}\n");
+
+    if cfg.executor == "parallel" {
+        return train_parallel(&cfg);
+    }
 
     let mut backend = build_backend(&cfg)?;
     let mut rng = Pcg64::seed(cfg.seed);
@@ -152,7 +165,66 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         }
     };
     let wall = started.elapsed();
+    report_run(&cfg, metrics, wall)
+}
 
+/// Train SwarmSGD on the shared-memory parallel executor (oracle presets
+/// only — the PJRT path is not thread-safe). `--threads 1` is the serial
+/// replay of the identical schedule.
+fn train_parallel(cfg: &RunConfig) -> Result<(), String> {
+    if cfg.algo != "swarm" {
+        return Err(format!("--executor parallel implements algo=swarm (got '{}')", cfg.algo));
+    }
+    let oracle = match cfg.preset.as_str() {
+        "oracle:quadratic" => quadratic_preset(cfg),
+        p => {
+            return Err(format!(
+                "--executor parallel needs a thread-safe oracle backend; \
+                 use preset=oracle:quadratic (got '{p}')"
+            ))
+        }
+    };
+    let mut rng = Pcg64::seed(cfg.seed);
+    let graph = Graph::build(cfg.topology_enum()?, cfg.n, &mut rng);
+    let cost = cfg.cost_model();
+    let threads = cfg.effective_threads();
+    let scfg = SwarmConfig {
+        n: cfg.n,
+        local_steps: cfg.local_steps(),
+        mode: cfg.averaging_mode()?,
+        lr: cfg.lr_schedule_enum()?,
+        interactions: cfg.interactions,
+        seed: cfg.seed,
+        name: "swarm-parallel".into(),
+    };
+    println!(
+        "parallel executor: {} worker thread(s), n={} topology={}",
+        threads, cfg.n, cfg.topology
+    );
+    let started = std::time::Instant::now();
+    let metrics = run_parallel(
+        &scfg,
+        threads,
+        &graph,
+        &cost,
+        &oracle,
+        cfg.eval_every,
+        cfg.track_gamma,
+    );
+    let wall = started.elapsed();
+    println!(
+        "throughput: {:.0} interactions/s on {} thread(s)",
+        metrics.interactions as f64 / wall.as_secs_f64().max(1e-9),
+        threads
+    );
+    report_run(cfg, metrics, wall)
+}
+
+fn report_run(
+    cfg: &RunConfig,
+    metrics: RunMetrics,
+    wall: std::time::Duration,
+) -> Result<(), String> {
     println!("\nloss curve (eval on mean model μ_t):");
     let mut table =
         Table::new(&["t", "par.time", "sim time", "train loss", "eval loss", "acc", "gamma"]);
@@ -221,9 +293,11 @@ fn cmd_inspect(cli: &Cli) -> Result<(), String> {
 
 fn cmd_topo(cli: &Cli) -> Result<(), String> {
     let n: usize = cli.parse_flag("n")?.unwrap_or(16);
-    let mut cfg = RunConfig::default();
-    cfg.n = n;
-    cfg.topology = cli.get_or("topology", "complete");
+    let cfg = RunConfig {
+        n,
+        topology: cli.get_or("topology", "complete"),
+        ..RunConfig::default()
+    };
     let mut rng = Pcg64::seed(1);
     let g = Graph::build(cfg.topology_enum()?, n, &mut rng);
     let r = g.regular_degree().unwrap_or(0) as f64;

@@ -4,6 +4,7 @@
 
 use super::manifest::{find_preset, ModelManifest};
 use super::model::XlaModel;
+use super::XlaBackendConfig;
 use crate::backend::{EvalResult, TrainBackend};
 use crate::config::{DataKind, ShardMode};
 use crate::data::{
@@ -13,33 +14,6 @@ use crate::data::{
 use crate::rngx::Pcg64;
 use anyhow::Result;
 use std::path::Path;
-
-/// Data-generation knobs for the XLA backend.
-#[derive(Clone, Debug)]
-pub struct XlaBackendConfig {
-    pub agents: usize,
-    /// training examples per agent (dense) / tokens per agent (LM)
-    pub data_per_agent: usize,
-    pub shard: ShardMode,
-    /// Gaussian-mixture class separation
-    pub separation: f32,
-    pub seed: u64,
-    /// held-out evaluation batches
-    pub eval_batches: usize,
-}
-
-impl Default for XlaBackendConfig {
-    fn default() -> Self {
-        Self {
-            agents: 8,
-            data_per_agent: 512,
-            shard: ShardMode::Iid,
-            separation: 3.0,
-            seed: 7,
-            eval_batches: 4,
-        }
-    }
-}
 
 enum DataSource {
     Dense {

@@ -1,0 +1,81 @@
+//! Stub [`XlaBackend`] for builds without the `pjrt` feature: keeps the API
+//! surface (`load` + [`TrainBackend`]) so callers compile unchanged, but
+//! loading always fails with an actionable error instead of requiring PJRT
+//! headers and libraries at link time.
+
+use super::XlaBackendConfig;
+use crate::backend::{EvalResult, TrainBackend};
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Error returned by [`XlaBackend::load`] when the crate was built without
+/// the `pjrt` feature.
+#[derive(Debug)]
+pub struct PjrtUnavailable {
+    preset: String,
+}
+
+impl std::fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "preset '{}' needs the XLA/PJRT runtime, but this binary was built \
+             without the `pjrt` feature (use an oracle:* preset, or rebuild \
+             with `--features pjrt` on a host with xla_extension installed)",
+            self.preset
+        )
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+/// Uninhabited placeholder for the PJRT-backed training backend. It can
+/// never be constructed; the [`TrainBackend`] impl exists purely so
+/// `Box<dyn TrainBackend>` call sites compile without the feature.
+pub struct XlaBackend {
+    never: Infallible,
+}
+
+impl XlaBackend {
+    /// Always fails: artifact execution requires `--features pjrt`.
+    pub fn load(
+        _artifacts_dir: &Path,
+        name: &str,
+        _cfg: XlaBackendConfig,
+    ) -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable { preset: name.to_string() })
+    }
+}
+
+impl TrainBackend for XlaBackend {
+    fn param_count(&self) -> usize {
+        match self.never {}
+    }
+
+    fn init(&mut self, _seed: i64) -> (Vec<f32>, Vec<f32>) {
+        match self.never {}
+    }
+
+    fn step(&mut self, _agent: usize, _params: &mut [f32], _mom: &mut [f32], _lr: f32) -> f64 {
+        match self.never {}
+    }
+
+    fn eval(&mut self, _params: &[f32]) -> EvalResult {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_actionable_error() {
+        let err = XlaBackend::load(Path::new("artifacts"), "mlp_s", XlaBackendConfig::default())
+            .err()
+            .expect("stub must never load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("mlp_s"), "{msg}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Parallel-executor contract tests.
+//!
+//! 1. **Replay determinism** (the CI-enforced contract): a run on N worker
+//!    threads is bit-identical, metric for metric, to a serial replay of the
+//!    same seed — for fixed H across blocking, non-blocking, and quantized
+//!    averaging.
+//! 2. **Stress**: a larger quantized non-blocking run (n=64, 4 threads)
+//!    completes without deadlock or poisoned locks, and its decode-fallback
+//!    counter matches the serial replay.
+//! 3. **Algorithmic agreement**: the executor converges like the original
+//!    discrete-event [`SwarmRunner`] on the same workload (statistically —
+//!    the two draw noise from different stream layouts by design).
+//!
+//! Caveat on (1): replay and parallel share `run_schedule`'s per-interaction
+//! code, so bit equality proves *interleaving independence* (the concurrency
+//! contract), not the update rule itself — that is what (3) plus the serial
+//! runner's own unit tests cover.
+
+use swarm_sgd::backend::SyncBackend;
+use swarm_sgd::coordinator::{
+    run_parallel, run_replay_serial, AveragingMode, LocalSteps, LrSchedule, RunContext,
+    RunMetrics, SwarmConfig, SwarmRunner,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn quad(n: usize, dim: usize, sigma: f64, seed: u64) -> QuadraticOracle {
+    QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, seed)
+}
+
+fn graph(n: usize) -> Graph {
+    let mut rng = Pcg64::seed(5);
+    Graph::build(Topology::Complete, n, &mut rng)
+}
+
+fn swarm_cfg(n: usize, t: u64, h: u64, mode: AveragingMode, seed: u64) -> SwarmConfig {
+    SwarmConfig {
+        n,
+        local_steps: LocalSteps::Fixed(h),
+        mode,
+        lr: LrSchedule::Constant(0.05),
+        interactions: t,
+        seed,
+        name: "par-it".into(),
+    }
+}
+
+/// Every externally observable metric must agree to the bit.
+fn assert_replay_identical(serial: &RunMetrics, parallel: &RunMetrics) {
+    assert_eq!(serial.curve.len(), parallel.curve.len());
+    for (a, b) in serial.curve.iter().zip(&parallel.curve) {
+        assert_eq!(a.t, b.t);
+        assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits(), "eval_loss at t={}", a.t);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "train_loss at t={}", a.t);
+        assert_eq!(a.indiv_loss.to_bits(), b.indiv_loss.to_bits(), "indiv_loss at t={}", a.t);
+        assert_eq!(a.gamma.to_bits(), b.gamma.to_bits(), "gamma at t={}", a.t);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "sim_time at t={}", a.t);
+        assert_eq!(a.bits, b.bits, "bits at t={}", a.t);
+    }
+    // "identical final loss to 1e-12" — trivially implied by bit equality,
+    // asserted explicitly as the acceptance-criterion statement
+    assert!((serial.final_eval_loss - parallel.final_eval_loss).abs() <= 1e-12);
+    assert_eq!(serial.final_eval_loss.to_bits(), parallel.final_eval_loss.to_bits());
+    assert_eq!(serial.total_bits, parallel.total_bits);
+    assert_eq!(serial.quant_fallbacks, parallel.quant_fallbacks);
+    assert_eq!(serial.local_steps, parallel.local_steps);
+    assert_eq!(serial.sim_time.to_bits(), parallel.sim_time.to_bits());
+    assert_eq!(
+        serial.compute_time_total.to_bits(),
+        parallel.compute_time_total.to_bits()
+    );
+    assert_eq!(serial.comm_time_total.to_bits(), parallel.comm_time_total.to_bits());
+}
+
+#[test]
+fn fixed_h_replay_is_bit_identical_across_thread_counts() {
+    let n = 16;
+    for mode in [
+        AveragingMode::NonBlocking,
+        AveragingMode::Blocking,
+        AveragingMode::Quantized { bits: 8, eps: 1e-2 },
+    ] {
+        let cfg = swarm_cfg(n, 1000, 3, mode, 0xA11CE);
+        let g = graph(n);
+        let backend = quad(n, 32, 0.2, 7);
+        // jittery cost model: time accounting must replay exactly too
+        let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
+        let serial = run_replay_serial(&cfg, &g, &cost, &backend, 250, true);
+        assert_eq!(serial.executor, "serial-replay");
+        for threads in [2, 4, 8] {
+            let par = run_parallel(&cfg, threads, &g, &cost, &backend, 250, true);
+            assert_eq!(par.executor, "parallel");
+            assert_eq!(par.threads, threads);
+            assert_replay_identical(&serial, &par);
+        }
+    }
+}
+
+#[test]
+fn geometric_h_replay_is_bit_identical() {
+    // H is pre-drawn in the schedule, so even the geometric regime replays
+    let n = 8;
+    let cfg = SwarmConfig {
+        local_steps: LocalSteps::Geometric(3.0),
+        ..swarm_cfg(n, 600, 1, AveragingMode::NonBlocking, 0xBEE)
+    };
+    let g = graph(n);
+    let backend = quad(n, 16, 0.1, 3);
+    let cost = CostModel::deterministic(0.4);
+    let serial = run_replay_serial(&cfg, &g, &cost, &backend, 150, false);
+    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 150, false);
+    assert_replay_identical(&serial, &par);
+}
+
+#[test]
+fn stress_quantized_nonblocking_n64_4threads() {
+    // n=64, quantized non-blocking, tight eps so fallbacks actually occur;
+    // completing at all proves no deadlock / no poisoned lock (any worker
+    // panic would propagate through thread::scope and fail the test).
+    let n = 64;
+    let cfg = swarm_cfg(n, 4000, 2, AveragingMode::Quantized { bits: 6, eps: 5e-4 }, 0xD15C);
+    let g = graph(n);
+    let backend = quad(n, 64, 0.3, 13);
+    let cost = CostModel::deterministic(0.4);
+    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 1000, false);
+    assert!(par.final_eval_loss.is_finite());
+    assert_eq!(par.interactions, 4000);
+    assert_eq!(par.local_steps, 4000 * 2 * 2);
+    assert!(par.total_bits > 0);
+    // fallback counters match the serial replay exactly (stronger than the
+    // "within tolerance" requirement)
+    let serial = run_replay_serial(&cfg, &g, &cost, &backend, 1000, false);
+    assert_eq!(par.quant_fallbacks, serial.quant_fallbacks);
+    assert_replay_identical(&serial, &par);
+}
+
+#[test]
+fn parallel_executor_converges_like_serial_swarm_runner() {
+    // the executors use different RNG layouts, so agreement is statistical:
+    // both must reach a small normalized gap on the same quadratic workload
+    let n = 16;
+    let t = 2000;
+    let backend = quad(n, 32, 0.1, 21);
+    let f_star = backend.f_star();
+    let gap0 = {
+        let (p, _) = backend.common_init();
+        backend.eval_at(&p).loss - f_star
+    };
+    let g = graph(n);
+    let cost = CostModel::deterministic(0.4);
+    let cfg = swarm_cfg(n, t, 2, AveragingMode::NonBlocking, 0xFAB);
+    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 0, false);
+    let gap_par = ((par.final_eval_loss - f_star) / gap0).max(1e-9);
+
+    let mut serial_backend = quad(n, 32, 0.1, 21);
+    let mut rng = Pcg64::seed(0xFAB);
+    let mut ctx = RunContext {
+        backend: &mut serial_backend,
+        graph: &g,
+        cost: &cost,
+        rng: &mut rng,
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let m = SwarmRunner::new(cfg.clone(), &mut ctx).run(&mut ctx);
+    let gap_serial = ((m.final_eval_loss - f_star) / gap0).max(1e-9);
+
+    assert!(gap_par < 0.1, "parallel normalized gap {gap_par}");
+    assert!(gap_serial < 0.1, "serial normalized gap {gap_serial}");
+    let ratio = gap_par / gap_serial;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "parallel gap {gap_par} vs serial gap {gap_serial}"
+    );
+}
+
+#[test]
+fn quantized_parallel_saves_bits_vs_full_precision() {
+    let n = 16;
+    let g = graph(n);
+    let backend = quad(n, 256, 0.05, 31);
+    let cost = CostModel::deterministic(0.4);
+    let q = run_parallel(
+        &swarm_cfg(n, 800, 2, AveragingMode::Quantized { bits: 8, eps: 1e-2 }, 1),
+        4,
+        &g,
+        &cost,
+        &backend,
+        0,
+        false,
+    );
+    let f = run_parallel(
+        &swarm_cfg(n, 800, 2, AveragingMode::NonBlocking, 1),
+        4,
+        &g,
+        &cost,
+        &backend,
+        0,
+        false,
+    );
+    assert!(
+        (q.total_bits as f64) < 0.5 * f.total_bits as f64,
+        "quantized {} vs full {} (fallbacks {})",
+        q.total_bits,
+        f.total_bits,
+        q.quant_fallbacks
+    );
+}

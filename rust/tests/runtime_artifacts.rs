@@ -1,7 +1,10 @@
 //! Integration tests over the REAL three-layer path: AOT artifacts loaded
-//! through PJRT, driven by the coordinator. Gated on `artifacts/manifest.txt`
-//! existing (run `make artifacts` first); they skip cleanly otherwise so
-//! `cargo test` works in a fresh checkout.
+//! through PJRT, driven by the coordinator. Compiled only with the `pjrt`
+//! feature (the default build has no XLA runtime), and additionally gated on
+//! `artifacts/manifest.txt` existing (run `make artifacts` first); they skip
+//! cleanly otherwise so `cargo test --features pjrt` works in a fresh
+//! checkout.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use swarm_sgd::backend::TrainBackend;
