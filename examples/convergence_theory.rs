@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example convergence_theory`
 
 use swarm_sgd::analysis::{lemma_f3_bound, theorem41_bound, BoundParams};
-use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::backend::Backend;
 use swarm_sgd::coordinator::LrSchedule;
 use swarm_sgd::figures::{run_arm, Arm, BackendSpec};
 use swarm_sgd::grad::QuadraticOracle;
@@ -32,8 +32,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         g.iter().map(|v| v * v).sum::<f64>() + sigma * sigma * dim as f64
     };
     let f_gap = {
-        let mut o = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41);
-        let (p, _) = o.init(0);
+        let o = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 41);
+        let (p, _) = o.init();
         o.full_loss(&p) - o.f_star()
     };
     println!("quadratic oracle: n={n} d={dim} L={l:.2} M^2={m_sq:.2} f-gap={f_gap:.3}\n");

@@ -9,7 +9,7 @@
 use std::path::Path;
 use swarm_sgd::config::ShardMode;
 use swarm_sgd::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+    run_serial, AveragingMode, LocalSteps, LrSchedule, RunSpec, SwarmSgd,
 };
 use swarm_sgd::netmodel::CostModel;
 use swarm_sgd::rngx::Pcg64;
@@ -19,7 +19,7 @@ use swarm_sgd::topology::{Graph, Topology};
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 8;
     // 1. backend: AOT-compiled MLP + per-agent data shards
-    let mut backend = XlaBackend::load(
+    let backend = XlaBackend::load(
         Path::new("artifacts"),
         "mlp_s",
         XlaBackendConfig {
@@ -35,26 +35,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let graph = Graph::build(Topology::Complete, n, &mut rng);
     let cost = CostModel::default(); // Piz-Daint-ish: 0.4 s/batch, Aries-class net
 
-    // 3. run SwarmSGD
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    // 3. run SwarmSGD (swap in any other Algorithm — adpsgd, sgp, … — or
+    // run_parallel for real worker threads; metrics are bit-identical)
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+    };
+    let spec = RunSpec {
+        n,
+        events: 400,
+        lr: LrSchedule::Constant(0.05),
+        seed: 1,
+        name: "quickstart".into(),
         eval_every: 40,
         track_gamma: true,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(2),
-        mode: AveragingMode::NonBlocking,
-        lr: LrSchedule::Constant(0.05),
-        interactions: 400,
-        seed: 1,
-        name: "quickstart".into(),
-    };
-    let mut runner = SwarmRunner::new(cfg, &mut ctx);
-    let metrics = runner.run(&mut ctx);
+    let metrics = run_serial(&algo, &backend, &spec, &graph, &cost);
 
     println!("t      eval-loss  accuracy  gamma");
     for p in &metrics.curve {

@@ -16,7 +16,7 @@
 use std::path::Path;
 use swarm_sgd::config::ShardMode;
 use swarm_sgd::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+    run_serial, AveragingMode, LocalSteps, LrSchedule, RunSpec, SwarmSgd,
 };
 use swarm_sgd::figures::write_curves;
 use swarm_sgd::netmodel::CostModel;
@@ -33,7 +33,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== SwarmSGD end-to-end transformer training ==");
     println!("preset={preset} agents={n} interactions={interactions}");
 
-    let mut backend = XlaBackend::load(
+    let backend = XlaBackend::load(
         Path::new("artifacts"),
         preset,
         XlaBackendConfig {
@@ -57,26 +57,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Pcg64::seed(3);
     let graph = Graph::build(Topology::Complete, n, &mut rng);
     let cost = CostModel::default();
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+    };
+    let spec = RunSpec {
+        n,
+        events: interactions,
+        lr: LrSchedule::StepDecay { base: 0.3, total: interactions },
+        seed: 11,
+        name: "e2e-transformer".into(),
         eval_every: (interactions / 12).max(1),
         track_gamma: true,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(2),
-        mode: AveragingMode::NonBlocking,
-        lr: LrSchedule::StepDecay { base: 0.3, total: interactions },
-        interactions,
-        seed: 11,
-        name: "e2e-transformer".into(),
-    };
     let started = std::time::Instant::now();
-    let mut runner = SwarmRunner::new(cfg, &mut ctx);
-    let metrics = runner.run(&mut ctx);
+    let metrics = run_serial(&algo, &backend, &spec, &graph, &cost);
     let wall = started.elapsed();
 
     println!("\nt      sim-time  train-loss  eval-loss  tok-acc  gamma");
@@ -102,7 +97,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // checkpoint the deployable (mean) model as .npy for numpy/JAX analysis
     swarm_sgd::output::save_npy(
         Path::new("results/e2e_transformer_model.npy"),
-        &runner.mean_model(),
+        &metrics.final_model,
     )?;
     println!("model -> results/e2e_transformer_model.npy");
     let vocab = backend_vocab as f64;

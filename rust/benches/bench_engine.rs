@@ -6,7 +6,7 @@
 
 use swarm_sgd::bench::Bench;
 use swarm_sgd::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+    run_serial, AveragingMode, LocalSteps, LrSchedule, RunSpec, SwarmSgd,
 };
 use swarm_sgd::grad::QuadraticOracle;
 use swarm_sgd::netmodel::CostModel;
@@ -14,28 +14,21 @@ use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::{Graph, Topology};
 
 fn run_swarm(dim: usize, n: usize, t: u64, mode: AveragingMode) -> f64 {
-    let mut backend = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.1, 3);
+    let backend = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.1, 3);
     let mut rng = Pcg64::seed(5);
     let graph = Graph::build(Topology::Complete, n, &mut rng);
     let cost = CostModel::deterministic(0.4);
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd { local_steps: LocalSteps::Fixed(2), mode };
+    let spec = RunSpec {
+        n,
+        events: t,
+        lr: LrSchedule::Constant(0.02),
+        seed: 1,
+        name: "bench".into(),
         eval_every: 0,
         track_gamma: false,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(2),
-        mode,
-        lr: LrSchedule::Constant(0.02),
-        interactions: t,
-        seed: 1,
-        name: "bench".into(),
-    };
-    SwarmRunner::new(cfg, &mut ctx).run(&mut ctx).final_eval_loss
+    run_serial(&algo, &backend, &spec, &graph, &cost).final_eval_loss
 }
 
 fn main() {

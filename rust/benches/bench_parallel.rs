@@ -1,15 +1,18 @@
-//! Parallel-executor throughput: SwarmSGD interactions/second vs worker
-//! thread count on an n=32 synthetic-quadratic workload, against the serial
-//! discrete-event runner as baseline. §Perf target (CI-recorded): ≥ 2x
-//! interactions/s at 4 threads vs serial.
+//! Parallel-executor throughput: interactions/second vs worker thread count
+//! on an n=32 synthetic-quadratic workload, for the two gossip algorithms
+//! that genuinely parallelize (SwarmSGD and AD-PSGD), against the serial
+//! executor as baseline. §Perf target (CI-recorded): ≥ 2x interactions/s at
+//! 4 threads vs serial for SwarmSGD non-blocking.
 //!
-//! Writes `BENCH_parallel.json` (crate root) so CI can archive the perf
-//! trajectory per PR. `-- --test` runs the reduced smoke configuration.
+//! Writes `BENCH_parallel.json` (crate root) with algorithm-tagged entries
+//! so CI can archive the perf trajectory per PR. `-- --test` runs the
+//! reduced smoke configuration.
 
 use std::io::Write;
 use swarm_sgd::bench::{Bench, BenchResult};
 use swarm_sgd::coordinator::{
-    run_parallel, AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+    make_algorithm, run_parallel, run_serial, AlgoOptions, AveragingMode, LocalSteps,
+    LrSchedule, RunSpec,
 };
 use swarm_sgd::grad::QuadraticOracle;
 use swarm_sgd::netmodel::CostModel;
@@ -24,15 +27,15 @@ fn oracle(dim: usize) -> QuadraticOracle {
     QuadraticOracle::new(dim, N, 1.0, 0.5, 2.0, 0.0, 3)
 }
 
-fn cfg(t: u64, mode: AveragingMode) -> SwarmConfig {
-    SwarmConfig {
+fn spec(t: u64) -> RunSpec {
+    RunSpec {
         n: N,
-        local_steps: LocalSteps::Fixed(4),
-        mode,
+        events: t,
         lr: LrSchedule::Constant(0.02),
-        interactions: t,
         seed: 1,
         name: "bench-par".into(),
+        eval_every: 0,
+        track_gamma: false,
     }
 }
 
@@ -41,35 +44,31 @@ fn graph() -> Graph {
     Graph::build(Topology::Complete, N, &mut rng)
 }
 
-fn run_serial(dim: usize, t: u64, mode: AveragingMode) -> f64 {
-    let mut backend = oracle(dim);
-    let mut rng = Pcg64::seed(5);
-    let g = graph();
-    let cost = CostModel::deterministic(0.4);
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &g,
-        cost: &cost,
-        rng: &mut rng,
-        eval_every: 0,
-        track_gamma: false,
-    };
-    SwarmRunner::new(cfg(t, mode), &mut ctx).run(&mut ctx).final_eval_loss
+fn opts(h: u64, mode: AveragingMode) -> AlgoOptions {
+    AlgoOptions { local_steps: LocalSteps::Fixed(h), mode, h_localsgd: 5 }
 }
 
-fn run_par(dim: usize, t: u64, threads: usize, mode: AveragingMode) -> f64 {
+fn run_algo(name: &str, dim: usize, t: u64, threads: usize, o: &AlgoOptions) -> f64 {
+    let algo = make_algorithm(name, o).expect("known algorithm");
     let backend = oracle(dim);
     let g = graph();
     let cost = CostModel::deterministic(0.4);
-    run_parallel(&cfg(t, mode), threads, &g, &cost, &backend, 0, false).final_eval_loss
+    let s = spec(t);
+    if threads <= 1 {
+        run_serial(algo.as_ref(), &backend, &s, &g, &cost).final_eval_loss
+    } else {
+        run_parallel(algo.as_ref(), &backend, &s, &g, &cost, threads).final_eval_loss
+    }
 }
 
-fn json_row(r: &BenchResult, threads: usize) -> String {
+fn json_row(r: &BenchResult, algorithm: &str, threads: usize, h: u64) -> String {
     format!(
-        "    {{\"name\": \"{}\", \"threads\": {}, \"interactions_per_sec\": {:.1}, \
-         \"median_ns\": {}}}",
+        "    {{\"name\": \"{}\", \"algorithm\": \"{}\", \"threads\": {}, \"h\": {}, \
+         \"interactions_per_sec\": {:.1}, \"median_ns\": {}}}",
         r.name,
+        algorithm,
         threads,
+        h,
         r.throughput().unwrap_or(f64::NAN),
         r.median.as_nanos()
     )
@@ -79,51 +78,73 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
     let (dim, t) = if smoke { (512, 2_000u64) } else { (2048, 10_000) };
     let mut b = if smoke { Bench::quick() } else { Bench::default() };
-    println!("== parallel executor (n={N}, d={dim}, T={t}, H=4, quadratic oracle) ==");
+    println!("== parallel executor (n={N}, d={dim}, T={t}, quadratic oracle) ==");
 
-    let mode = AveragingMode::NonBlocking;
+    let swarm = opts(4, AveragingMode::NonBlocking);
     let mut rows: Vec<String> = Vec::new();
 
     let serial = b
-        .run_elems(&format!("serial runner      d={dim} T={t}"), t, || {
-            run_serial(dim, t, mode)
+        .run_elems(&format!("swarm serial       d={dim} T={t}"), t, || {
+            run_algo("swarm", dim, t, 1, &swarm)
         })
         .clone();
-    rows.push(json_row(&serial, 1));
+    rows.push(json_row(&serial, "swarm", 1, 4));
 
     let mut par4_tp = f64::NAN;
-    for threads in [1usize, 2, 4] {
+    for threads in [2usize, 4] {
         let r = b
-            .run_elems(&format!("parallel x{threads}        d={dim} T={t}"), t, || {
-                run_par(dim, t, threads, mode)
+            .run_elems(&format!("swarm parallel x{threads}  d={dim} T={t}"), t, || {
+                run_algo("swarm", dim, t, threads, &swarm)
             })
             .clone();
         if threads == 4 {
             par4_tp = r.throughput().unwrap_or(f64::NAN);
         }
-        rows.push(json_row(&r, threads));
+        rows.push(json_row(&r, "swarm", threads, 4));
     }
 
     // quantized non-blocking at 4 threads (the Appendix-G hot path)
     let rq = b
-        .run_elems(&format!("parallel x4 quant8 d={dim} T={t}"), t, || {
-            run_par(dim, t, 4, AveragingMode::Quantized { bits: 8, eps: 1e-2 })
+        .run_elems(&format!("swarm x4 quant8    d={dim} T={t}"), t, || {
+            run_algo("swarm", dim, t, 4, &opts(4, AveragingMode::Quantized { bits: 8, eps: 1e-2 }))
         })
         .clone();
-    rows.push(json_row(&rq, 4));
+    rows.push(json_row(&rq, "swarm-quant8", 4, 4));
+
+    // AD-PSGD: the asynchronous baseline on the same executor (satellite:
+    // algorithm-tagged throughput rows in BENCH_parallel.json)
+    let adpsgd = opts(1, AveragingMode::NonBlocking);
+    let ra1 = b
+        .run_elems(&format!("adpsgd serial      d={dim} T={t}"), t, || {
+            run_algo("adpsgd", dim, t, 1, &adpsgd)
+        })
+        .clone();
+    rows.push(json_row(&ra1, "adpsgd", 1, 1));
+    let ra4 = b
+        .run_elems(&format!("adpsgd parallel x4 d={dim} T={t}"), t, || {
+            run_algo("adpsgd", dim, t, 4, &adpsgd)
+        })
+        .clone();
+    rows.push(json_row(&ra4, "adpsgd", 4, 1));
 
     let serial_tp = serial.throughput().unwrap_or(f64::NAN);
     let speedup = par4_tp / serial_tp;
     println!(
-        "speedup @4 threads vs serial runner: {speedup:.2}x \
+        "swarm speedup @4 threads vs serial: {speedup:.2}x \
          ({par4_tp:.0} vs {serial_tp:.0} interactions/s)"
     );
+    let adpsgd_speedup =
+        ra4.throughput().unwrap_or(f64::NAN) / ra1.throughput().unwrap_or(f64::NAN);
+    println!("adpsgd speedup @4 threads vs serial: {adpsgd_speedup:.2}x");
 
+    // h is per-algorithm (swarm rows run H=4, adpsgd is defined with H=1),
+    // so the shared workload stanza carries only algorithm-independent keys
     let json = format!(
         "{{\n  \"bench\": \"bench_parallel\",\n  \"workload\": \
-         {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \"h\": 4, \
+         {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \
          \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ],\n  \
-         \"speedup_4threads_vs_serial\": {speedup:.3}\n}}\n",
+         \"speedup_4threads_vs_serial\": {speedup:.3},\n  \
+         \"adpsgd_speedup_4threads_vs_serial\": {adpsgd_speedup:.3}\n}}\n",
         rows.join(",\n")
     );
     match std::fs::File::create("BENCH_parallel.json")

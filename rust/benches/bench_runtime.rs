@@ -9,9 +9,10 @@
 #[cfg(feature = "pjrt")]
 mod real {
     use std::path::Path;
-    use swarm_sgd::backend::TrainBackend;
+    use swarm_sgd::backend::Backend;
     use swarm_sgd::bench::Bench;
     use swarm_sgd::config::ShardMode;
+    use swarm_sgd::rngx::Pcg64;
     use swarm_sgd::runtime::{XlaBackend, XlaBackendConfig};
 
     fn load(preset: &str) -> Option<XlaBackend> {
@@ -38,22 +39,23 @@ mod real {
         let mut b = Bench::quick();
         println!("== PJRT runtime (per-step latency) ==");
         for preset in ["mlp_s", "cnn_s", "transformer_s"] {
-            let Some(mut be) = load(preset) else { return };
-            let (mut p, mut m) = be.init(0);
+            let Some(be) = load(preset) else { return };
+            let (mut p, mut m) = be.init();
+            let mut rng = Pcg64::seed(7);
             b.run(&format!("{preset} step x1"), || {
-                be.step(0, &mut p, &mut m, 0.01)
+                be.step(0, &mut p, &mut m, 0.01, &mut rng)
             });
             let k = be.manifest().k as u64;
             b.run_elems(&format!("{preset} step_k (k={k}) per-call"), k, || {
-                be.step_burst(0, &mut p, &mut m, 0.01, k)
+                be.step_burst(0, &mut p, &mut m, 0.01, k, &mut rng)
             });
             b.run(&format!("{preset} eval"), || be.eval(&p));
             if preset == "mlp_s" {
-                let d = be.param_count();
+                let d = be.dim();
                 let x: Vec<f32> = vec![0.1; d];
                 let y: Vec<f32> = vec![0.2; d];
                 b.run_elems(&format!("{preset} qavg artifact (d={d})"), (d * 4) as u64, || {
-                    be.model.qavg(&x, &y, 3).unwrap()
+                    be.qavg(&x, &y, 3).unwrap()
                 });
             }
         }

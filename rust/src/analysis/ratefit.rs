@@ -90,9 +90,8 @@ mod tests {
 
     #[test]
     fn swarm_rate_on_noisy_quadratic_is_sublinear_power_law() {
-        use crate::backend::TrainBackend;
         use crate::coordinator::{
-            AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+            run_serial, AveragingMode, LocalSteps, LrSchedule, RunSpec, SwarmSgd,
         };
         use crate::grad::QuadraticOracle;
         use crate::netmodel::CostModel;
@@ -101,30 +100,25 @@ mod tests {
 
         let n = 8;
         let t = 16_384u64;
-        let mut b = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.5, 77);
+        let b = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.5, 77);
         let f_star = b.f_star();
-        let _ = b.init(0);
         let mut rng = Pcg64::seed(3);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(1.0);
-        let mut ctx = RunContext {
-            backend: &mut b,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
+        let algo = SwarmSgd {
+            local_steps: LocalSteps::Fixed(2),
+            mode: AveragingMode::NonBlocking,
+        };
+        let spec = RunSpec {
+            n,
+            events: t,
+            lr: LrSchedule::Theory { n, t },
+            seed: 5,
+            name: "fit".into(),
             eval_every: 16, // dense early sampling: the decay is fast
             track_gamma: false,
         };
-        let cfg = SwarmConfig {
-            n,
-            local_steps: LocalSteps::Fixed(2),
-            mode: AveragingMode::NonBlocking,
-            lr: LrSchedule::Theory { n, t },
-            interactions: t,
-            seed: 5,
-            name: "fit".into(),
-        };
-        let m = SwarmRunner::new(cfg, &mut ctx).run(&mut ctx);
+        let m = run_serial(&algo, &b, &spec, &graph, &cost);
         let samples = gap_samples(&m.curve, f_star);
         // a constant lr plateaus at its noise floor; the power-law regime is
         // the transient ABOVE the floor — fit that prefix only

@@ -1,4 +1,5 @@
-//! The compute-backend abstraction every coordinator algorithm runs against.
+//! The single compute-backend abstraction every coordinator algorithm runs
+//! against (PR 2 collapsed the former `TrainBackend`/`SyncBackend` duality).
 //!
 //! Two families implement it (DESIGN.md §3 "dual backend"):
 //!   * [`crate::runtime::XlaBackend`] — the real three-layer path: per-agent
@@ -7,8 +8,20 @@
 //!     softmax-linear) for theory figures, property tests, and large-n
 //!     sweeps where XLA dispatch would dominate.
 //!
-//! The coordinator only ever sees flat `f32` model vectors — the paper's
-//! model-space view (models are points in R^d that get averaged).
+//! # Contract
+//!
+//! * Every method takes `&self` and the trait requires `Sync`, so the
+//!   shared-memory parallel executor can step different agents from N
+//!   worker threads without a global lock.
+//! * **All stochasticity** (gradient noise, batch draws) comes from the
+//!   caller-supplied [`Pcg64`] — the executor hands each node its own
+//!   [`Pcg64::stream`], which is what makes a parallel run independent of
+//!   thread interleaving and hence bit-identical to its serial replay
+//!   (the PR-1 replay-determinism contract).
+//! * The coordinator only ever sees flat `f32` model vectors — the paper's
+//!   model-space view (models are points in R^d that get averaged).
+
+use crate::rngx::Pcg64;
 
 /// Held-out evaluation result.
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,91 +35,68 @@ pub struct EvalResult {
 /// A training backend: owns the data shards and the step/eval computation.
 /// `agent` indexes the shard (non-iid support); parameters live with the
 /// caller so the coordinator fully controls averaging/quantization.
-pub trait TrainBackend {
+pub trait Backend: Sync {
     /// Dimension `d` of the flat model vector.
-    fn param_count(&self) -> usize;
+    fn dim(&self) -> usize;
 
-    /// Fresh (params, momentum) for a given seed. All agents start from the
-    /// same point in the paper (x_0 arbitrary but common); callers pass the
-    /// same seed to every agent for that behaviour.
-    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>);
+    /// The common starting point (params, momentum) — the paper's shared x₀.
+    /// Deterministic per backend instance, so every agent starts identical.
+    fn init(&self) -> (Vec<f32>, Vec<f32>);
 
-    /// One local SGD step for `agent` on its own shard: updates `params`
-    /// and `mom` in place, returns the minibatch training loss.
-    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64;
+    /// One local SGD step for `agent` on its own shard, drawing all
+    /// stochasticity from `rng`: updates `params` and `mom` in place and
+    /// returns the minibatch training loss.
+    fn step(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64;
 
     /// `h` consecutive local steps (the paper's local-update phase).
     /// Backends may fuse these (the XLA backend dispatches a single
     /// lax.scan executable per `k` steps); the default just loops.
     /// Returns the last minibatch loss.
     fn step_burst(
-        &mut self,
-        agent: usize,
-        params: &mut [f32],
-        mom: &mut [f32],
-        lr: f32,
-        h: u64,
-    ) -> f64 {
-        let mut last = f64::NAN;
-        for _ in 0..h {
-            last = self.step(agent, params, mom, lr);
-        }
-        last
-    }
-
-    /// Evaluate `params` on the backend's held-out set.
-    fn eval(&mut self, params: &[f32]) -> EvalResult;
-
-    /// Exact/full training objective `f(x)` if cheaply available
-    /// (oracles: yes; XLA models: sampled estimate).
-    fn full_loss(&mut self, params: &[f32]) -> f64 {
-        self.eval(params).loss
-    }
-
-    /// Squared norm of the true gradient at `params`, if the backend can
-    /// compute it (theory figures); `None` otherwise.
-    fn grad_norm_sq(&mut self, _params: &[f32]) -> Option<f64> {
-        None
-    }
-
-    /// Fractional data epochs consumed by `agent` so far.
-    fn epochs(&self, _agent: usize) -> f64 {
-        0.0
-    }
-}
-
-/// A thread-safe training backend for the shared-memory parallel executor
-/// ([`crate::coordinator::run_parallel`]).
-///
-/// Differs from [`TrainBackend`] in two load-bearing ways:
-///
-/// * every method takes `&self` and the trait requires `Sync`, so N worker
-///   threads can step different agents concurrently without a global lock;
-/// * all randomness (gradient noise, batch draws) comes from the
-///   caller-supplied `rng` — the executor hands each node its own
-///   [`Pcg64::stream`], which is what makes a parallel run independent of
-///   thread interleaving and hence serially replayable bit-for-bit.
-///
-/// Method names deliberately do not collide with [`TrainBackend`] so a type
-/// can implement both and call sites stay unambiguous.
-pub trait SyncBackend: Sync {
-    /// Dimension `d` of the flat model vector.
-    fn dim(&self) -> usize;
-
-    /// The common starting point (params, momentum) — the paper's shared x₀.
-    fn common_init(&self) -> (Vec<f32>, Vec<f32>);
-
-    /// One local SGD step for `agent`, drawing all stochasticity from `rng`.
-    /// Returns the minibatch training loss.
-    fn step_with(
         &self,
         agent: usize,
         params: &mut [f32],
         mom: &mut [f32],
         lr: f32,
-        rng: &mut crate::rngx::Pcg64,
-    ) -> f64;
+        h: u64,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let mut last = f64::NAN;
+        for _ in 0..h {
+            last = self.step(agent, params, mom, lr, rng);
+        }
+        last
+    }
 
-    /// Evaluate `params` on the backend's held-out objective.
-    fn eval_at(&self, params: &[f32]) -> EvalResult;
+    /// Evaluate `params` on the backend's held-out set.
+    fn eval(&self, params: &[f32]) -> EvalResult;
+
+    /// Exact/full training objective `f(x)` if cheaply available
+    /// (oracles: yes; XLA models: sampled estimate).
+    fn full_loss(&self, params: &[f32]) -> f64 {
+        self.eval(params).loss
+    }
+
+    /// Squared norm of the true gradient at `params`, if the backend can
+    /// compute it (theory figures); `None` otherwise.
+    fn grad_norm_sq(&self, _params: &[f32]) -> Option<f64> {
+        None
+    }
+
+    /// Fractional data epochs consumed by `agent` after `steps` local
+    /// steps. Stateless because the backend no longer owns cursors: the
+    /// executor tracks per-node step counts and asks for the conversion.
+    fn epochs(&self, _agent: usize, _steps: u64) -> f64 {
+        0.0
+    }
 }
+
+#[allow(dead_code)]
+fn _assert_backend_object_safe(_: &dyn Backend) {}

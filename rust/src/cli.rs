@@ -90,16 +90,21 @@ swarm — SwarmSGD: decentralized SGD with asynchronous, local & quantized updat
 
 USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
+                [--algorithm swarm|poisson|adpsgd|dpsgd|sgp|localsgd|allreduce]
                 [--executor serial|parallel] [--threads K]
-                train with a given algorithm/backend; keys: algo, preset, n,
+                train one algorithm on one backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
                 shard, data_per_agent, artifacts_dir, batch_time, out_csv,
                 executor, threads
-                --executor parallel runs SwarmSGD on K shared-memory worker
-                threads (K=0: one per core; oracle presets only); the same
-                seed with --threads 1 replays the schedule serially,
-                bit-identical. --executor serial is the discrete-event runner
+                --algorithm picks the training process (SwarmSGD or any §5
+                baseline) and is orthogonal to --executor: every algorithm
+                runs on the serial discrete-event executor AND on K
+                shared-memory worker threads (K=0: one per core). For the
+                oracle:* presets the same seed produces bit-identical
+                metrics on both executors at any thread count (the
+                replay-determinism contract; the PJRT path's fused-step
+                heuristic is wall-clock-raced, so it is excluded).
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]
@@ -112,7 +117,9 @@ USAGE:
 
 EXAMPLES:
   swarm train --set algo=swarm,preset=mlp_s,n=8,h=3,interactions=400
-  swarm train --set preset=oracle:quadratic,algo=adpsgd,n=16
+  swarm train --algorithm adpsgd --set preset=oracle:quadratic,n=16
+  swarm train --algorithm sgp --executor parallel --threads 4 \\
+              --set preset=oracle:softmax,n=8,interactions=200
   swarm figure --id table1 --quick
   swarm figure --id all --out results
 ";

@@ -24,7 +24,8 @@ pub enum DataKind {
 /// Complete description of one training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// swarm | adpsgd | dpsgd | sgp | localsgd | allreduce
+    /// swarm | poisson | adpsgd | dpsgd | sgp | localsgd | allreduce
+    /// (the `--algorithm` selector; orthogonal to `executor`)
     pub algo: String,
     /// artifact preset (mlp_s, cnn_s, cnn_m, transformer_s, transformer_m)
     /// or oracle:quadratic / oracle:softmax / oracle:logistic
@@ -57,8 +58,9 @@ pub struct RunConfig {
     pub jitter: f64,
     /// results CSV path ("" = don't write)
     pub out_csv: String,
-    /// serial | parallel — which SwarmSGD executor runs the interaction
-    /// sequence (parallel = shared-memory worker threads, oracle presets)
+    /// serial | parallel — which executor drains the algorithm's event
+    /// schedule (parallel = shared-memory worker threads); every
+    /// `--algorithm` runs on either executor
     pub executor: String,
     /// worker threads for the parallel executor (0 = one per available core)
     pub threads: usize,
@@ -113,7 +115,15 @@ impl RunConfig {
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
         let bad = |k: &str, v: &str| format!("bad value '{v}' for key '{k}'");
         match key {
-            "algo" => self.algo = value.into(),
+            "algo" | "algorithm" => {
+                if !crate::coordinator::ALGORITHM_NAMES.contains(&value) {
+                    return Err(format!(
+                        "unknown algorithm '{value}' (known: {})",
+                        crate::coordinator::ALGORITHM_NAMES.join("|")
+                    ));
+                }
+                self.algo = value.into();
+            }
             "preset" => self.preset = value.into(),
             "n" => self.n = value.parse().map_err(|_| bad(key, value))?,
             "topology" => self.topology = value.into(),
@@ -265,6 +275,19 @@ mod tests {
         let mut c = RunConfig::default();
         assert!(c.set("definitely_not_a_key", "1").is_err());
         assert!(c.set("n", "not_a_number").is_err());
+    }
+
+    #[test]
+    fn algorithm_key_is_validated_and_aliased() {
+        let mut c = RunConfig::default();
+        for name in crate::coordinator::ALGORITHM_NAMES {
+            c.set("algorithm", name).unwrap();
+            assert_eq!(&c.algo, name);
+        }
+        c.set("algo", "sgp").unwrap();
+        assert_eq!(c.algo, "sgp");
+        assert!(c.set("algorithm", "sgdx").is_err());
+        assert!(c.set("algo", "").is_err());
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! The `Algorithm` plug-in API — one engine, many training processes.
+//!
+//! PR 2's redesign: SwarmSGD's three averaging modes and all five §5
+//! baselines (AD-PSGD, D-PSGD, SGP, local SGD, allreduce SGD) implement one
+//! object-safe trait, and both executors ([`super::run_serial`] /
+//! [`super::run_parallel`]) are generic drivers over
+//! `&dyn Algorithm × &dyn Backend`. The decomposition follows the
+//! observation (Even et al., "Asynchronous SGD on Graphs"; DIGEST) that all
+//! of these methods are instances of one scheduled-interaction process:
+//!
+//! 1. **Schedule** — the algorithm pre-draws its full [`InteractionSchedule`]
+//!    from a dedicated RNG stream: a sequence of [`Event`]s, each naming its
+//!    participating nodes, pre-drawn local-step counts, and an event-local
+//!    randomness seed. Gossip algorithms emit 2-node events; synchronous
+//!    round-based algorithms emit whole-cluster events (their semantics IS
+//!    a global barrier).
+//! 2. **Interact** — the executor grants the event exclusive access to its
+//!    participants' [`NodeState`]s (locks taken in ascending node order →
+//!    deadlock-free) and the algorithm applies its update rule, charging
+//!    simulated time to the per-node clocks carried in the states.
+//! 3. **Round metrics** — at evaluation barriers the algorithm maps raw
+//!    node states to the models the paper's curves evaluate (mean model for
+//!    most; SGP overrides with its de-biased push-sum consensus).
+//!
+//! Because every event's participant set and every draw of randomness is
+//! fixed before any thread starts, and node-local noise comes from each
+//! node's private [`Pcg64::stream`], a parallel run at any thread count is
+//! bit-identical to the serial program-order replay — the same
+//! replay-determinism contract PR 1 established for SwarmSGD, now holding
+//! for every algorithm.
+
+use crate::backend::Backend;
+use crate::netmodel::CostModel;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+
+/// One pre-drawn event of the global schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// participating nodes in *role* order (gossip: `[initiator, partner]`;
+    /// round-based: `0..n`). The executor grants exclusive access to these
+    /// states, passed to [`Algorithm::interact`] in the same order.
+    pub nodes: Vec<usize>,
+    /// pre-drawn local-step counts, aligned with `nodes`
+    pub h: Vec<u64>,
+    /// event-local randomness (quantizer hashes, matchings, push targets):
+    /// algorithms derive a deterministic `Pcg64::seed(seed)` from it
+    pub seed: u64,
+    /// per-participant dependency tokens, aligned with `nodes`: this event
+    /// is participant `k`'s `seq[k]`-th event (0-based) — what parallel
+    /// workers wait on
+    pub seq: Vec<u64>,
+}
+
+/// The full pre-drawn event sequence of one run. Everything stochastic
+/// about *who* interacts and *how much* local work they do is fixed here,
+/// before any thread starts — the first pillar of replay determinism.
+#[derive(Clone, Debug, Default)]
+pub struct InteractionSchedule {
+    pub events: Vec<Event>,
+    /// total events per node (seq tokens end at these values)
+    pub per_node: Vec<u64>,
+}
+
+impl InteractionSchedule {
+    pub fn new(n: usize) -> Self {
+        Self { events: Vec::new(), per_node: vec![0; n] }
+    }
+
+    /// Append one event, assigning its per-participant sequence tokens.
+    /// Participants must be distinct (the executor takes one lock each).
+    pub fn push(&mut self, nodes: Vec<usize>, h: Vec<u64>, seed: u64) {
+        debug_assert_eq!(nodes.len(), h.len());
+        debug_assert!(
+            {
+                let mut sorted = nodes.clone();
+                sorted.sort_unstable();
+                sorted.windows(2).all(|w| w[0] != w[1])
+            },
+            "duplicate participant in event"
+        );
+        let seq: Vec<u64> = nodes.iter().map(|&k| self.per_node[k]).collect();
+        for &k in &nodes {
+            self.per_node[k] += 1;
+        }
+        self.events.push(Event { nodes, h, seed, seq });
+    }
+}
+
+/// Everything one node owns: model copies, its private RNG stream, and its
+/// simulated clock/accounting. The executor guards each in its own mutex;
+/// algorithms receive exclusive borrows of the event's participants.
+pub struct NodeState {
+    /// live model copy X^i
+    pub params: Vec<f32>,
+    /// optimizer momentum (travels with the live copy; NOT averaged —
+    /// matching the paper's implementation where only models are exchanged)
+    pub mom: Vec<f32>,
+    /// communication copy X' that partners read (Appendix F)
+    pub comm: Vec<f32>,
+    /// scratch: snapshot S of `params` before the current local phase
+    pub snap: Vec<f32>,
+    /// scratch: incoming model buffer (gossip) / push-sum inbox (SGP)
+    pub inbox: Vec<f32>,
+    /// push-sum weight w_i (SGP); 1.0 and untouched elsewhere
+    pub weight: f64,
+    /// private stream: gradient noise, batch draws, compute-time jitter
+    pub rng: Pcg64,
+    /// local SGD steps performed
+    pub steps: u64,
+    /// events participated in
+    pub interactions: u64,
+    /// last observed minibatch loss
+    pub last_loss: f64,
+    /// simulated clock (seconds)
+    pub time: f64,
+    /// simulated seconds spent computing
+    pub compute: f64,
+    /// simulated seconds spent communicating
+    pub comm_time: f64,
+}
+
+impl NodeState {
+    pub fn new(params: Vec<f32>, mom: Vec<f32>, rng: Pcg64) -> Self {
+        let dim = params.len();
+        Self {
+            comm: params.clone(),
+            snap: vec![0.0; dim],
+            inbox: vec![0.0; dim],
+            params,
+            mom,
+            weight: 1.0,
+            rng,
+            steps: 0,
+            interactions: 0,
+            last_loss: f64::NAN,
+            time: 0.0,
+            compute: 0.0,
+            comm_time: 0.0,
+        }
+    }
+}
+
+/// Per-event context handed to [`Algorithm::interact`].
+pub struct StepCtx<'a> {
+    pub backend: &'a dyn Backend,
+    pub cost: &'a CostModel,
+    pub graph: &'a Graph,
+    /// learning rate at this event (from the run's [`super::LrSchedule`])
+    pub lr: f32,
+    /// model dimension d
+    pub dim: usize,
+    /// cluster size n
+    pub n: usize,
+}
+
+/// What one event consumed (merged into [`super::RunMetrics`] totals).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EventOutcome {
+    /// bits that crossed the wire
+    pub bits: u64,
+    /// lattice-decode failures that fell back to full precision
+    pub fallbacks: u64,
+}
+
+/// The models an evaluation barrier measures.
+pub struct RoundModels {
+    /// consensus model evaluated as μ_t (mean by default; SGP: Σx/Σw)
+    pub consensus: Vec<f32>,
+    /// one node's individual model (paper §5 compares μ vs individual)
+    pub individual: Vec<f32>,
+}
+
+/// A decentralized training algorithm as a plug-in to the executors.
+///
+/// Object-safe by design: the CLI, figure harnesses, and both executors
+/// hold `Box<dyn Algorithm>` / `&dyn Algorithm`.
+pub trait Algorithm: Sync {
+    /// Short identifier (`"swarm"`, `"adpsgd"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Pre-draw the complete event sequence for a run of `events` events on
+    /// `n` nodes. All randomness must come from `rng` (the executor hands a
+    /// dedicated schedule stream), never from global state.
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule;
+
+    /// Execute one event. `parts` are exclusive borrows of the event's
+    /// participant states, aligned with `ev.nodes`; `t` is the 0-based
+    /// event index. Charge simulated time to the states' clocks and return
+    /// the wire accounting.
+    fn interact(
+        &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome;
+
+    /// The paper's parallel-time axis for event count `t`: gossip events
+    /// advance it by 1/n (default); synchronous rounds by 1.
+    fn parallel_time(&self, t: u64, n: usize) -> f64 {
+        t as f64 / n as f64
+    }
+
+    /// Map node states to the models an evaluation barrier measures.
+    /// Default: coordinate-wise mean of live models + node `pick`'s params.
+    fn round_metrics(&self, states: &[&NodeState], pick: usize) -> RoundModels {
+        RoundModels {
+            consensus: mean_model(states),
+            individual: states[pick].params.clone(),
+        }
+    }
+}
+
+/// Coordinate-wise f64 mean over `n` parameter slices, accumulated in
+/// iteration (node-index) order — the single definition every averaging
+/// site shares so consensus math stays bit-identical across serial runs,
+/// parallel runs, and the synchronous baselines' in-event allreduce.
+pub fn mean_params<'a, I: IntoIterator<Item = &'a [f32]>>(
+    models: I,
+    dim: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f64; dim];
+    for m in models {
+        for (a, &v) in acc.iter_mut().zip(m) {
+            *a += v as f64;
+        }
+    }
+    acc.into_iter().map(|v| (v / n as f64) as f32).collect()
+}
+
+/// Coordinate-wise mean of live models μ_t.
+pub fn mean_model(states: &[&NodeState]) -> Vec<f32> {
+    let dim = states.first().map_or(0, |s| s.params.len());
+    mean_params(states.iter().map(|s| s.params.as_slice()), dim, states.len())
+}
+
+/// One endpoint's local-SGD phase, shared by the gossip algorithms:
+/// snapshot S, `h` steps drawing all randomness from the node's own stream,
+/// compute-time charge.
+pub fn local_phase(ctx: &StepCtx<'_>, agent: usize, st: &mut NodeState, h: u64) {
+    st.snap.copy_from_slice(&st.params);
+    st.last_loss =
+        ctx.backend.step_burst(agent, &mut st.params, &mut st.mom, ctx.lr, h, &mut st.rng);
+    st.steps += h;
+    let mut comp = 0.0;
+    for _ in 0..h {
+        comp += ctx.cost.compute_time(&mut st.rng);
+    }
+    st.time += comp;
+    st.compute += comp;
+}
+
+/// One single SGD step + its compute-time charge for a node — the H=1
+/// counterpart of [`local_phase`], shared by the per-step baselines so the
+/// charging rule has exactly one definition. (SGP steps on a de-biased
+/// copy and charges the round max instead, so it keeps its own body.)
+pub fn step_once(ctx: &StepCtx<'_>, agent: usize, st: &mut NodeState) {
+    st.last_loss = ctx.backend.step(agent, &mut st.params, &mut st.mom, ctx.lr, &mut st.rng);
+    st.steps += 1;
+    let dt = ctx.cost.compute_time(&mut st.rng);
+    st.time += dt;
+    st.compute += dt;
+}
+
+/// Synchronous-round barrier over the event's participants: everyone
+/// advances to the participant max, then pays `cost` together.
+pub fn barrier_all(parts: &mut [&mut NodeState], cost: f64) {
+    let meet = parts.iter().map(|s| s.time).fold(0.0, f64::max);
+    let done = meet + cost;
+    for st in parts.iter_mut() {
+        st.time = done;
+        st.comm_time += cost;
+    }
+}
+
+/// Exclusive borrows of participants `u` and `v` (distinct positions).
+pub fn pair_at<'a>(
+    parts: &'a mut [&mut NodeState],
+    u: usize,
+    v: usize,
+) -> (&'a mut NodeState, &'a mut NodeState) {
+    assert_ne!(u, v);
+    if u < v {
+        let (a, b) = parts.split_at_mut(v);
+        (&mut *a[u], &mut *b[0])
+    } else {
+        let (a, b) = parts.split_at_mut(u);
+        (&mut *b[0], &mut *a[v])
+    }
+}
+
+/// The two participants of a gossip event, in role order.
+pub(crate) fn pair<'a>(
+    parts: &'a mut [&mut NodeState],
+) -> (&'a mut NodeState, &'a mut NodeState) {
+    debug_assert_eq!(parts.len(), 2);
+    pair_at(parts, 0, 1)
+}
+
+/// Knobs for [`make_algorithm`] that are not universal across algorithms.
+#[derive(Clone, Copy, Debug)]
+pub struct AlgoOptions {
+    /// SwarmSGD local-step distribution (fixed H vs geometric)
+    pub local_steps: super::LocalSteps,
+    /// SwarmSGD averaging mode (blocking / non-blocking / quantized)
+    pub mode: super::AveragingMode,
+    /// Local-SGD communication period
+    pub h_localsgd: u64,
+}
+
+impl Default for AlgoOptions {
+    fn default() -> Self {
+        Self {
+            local_steps: super::LocalSteps::Fixed(2),
+            mode: super::AveragingMode::NonBlocking,
+            h_localsgd: 5,
+        }
+    }
+}
+
+/// All `--algorithm` selector values, in paper order.
+pub const ALGORITHM_NAMES: &[&str] =
+    &["swarm", "poisson", "adpsgd", "dpsgd", "sgp", "localsgd", "allreduce"];
+
+/// Build an algorithm by its `--algorithm` selector name.
+pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorithm>, String> {
+    use super::baselines::{AdPsgd, AllReduce, DPsgd, LocalSgd, Sgp};
+    use super::{PoissonSwarm, SwarmSgd};
+    Ok(match name {
+        "swarm" => Box::new(SwarmSgd { local_steps: opts.local_steps, mode: opts.mode }),
+        "poisson" => Box::new(PoissonSwarm::new(opts.local_steps, opts.mode)),
+        "adpsgd" => Box::new(AdPsgd),
+        "dpsgd" => Box::new(DPsgd),
+        "sgp" => Box::new(Sgp),
+        "localsgd" => Box::new(LocalSgd { h: opts.h_localsgd.max(1) }),
+        "allreduce" => Box::new(AllReduce),
+        other => {
+            return Err(format!(
+                "unknown algorithm '{other}' (known: {})",
+                ALGORITHM_NAMES.join("|")
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_state(vals: &[f32]) -> NodeState {
+        NodeState::new(vals.to_vec(), vec![0.0; vals.len()], Pcg64::seed(1))
+    }
+
+    #[test]
+    fn schedule_push_assigns_sequence_tokens() {
+        let mut s = InteractionSchedule::new(4);
+        s.push(vec![0, 1], vec![2, 2], 7);
+        s.push(vec![1, 3], vec![1, 1], 8);
+        s.push(vec![0, 1, 2, 3], vec![1; 4], 9);
+        assert_eq!(s.events[0].seq, vec![0, 0]);
+        assert_eq!(s.events[1].seq, vec![1, 0]);
+        assert_eq!(s.events[2].seq, vec![1, 2, 0, 1]);
+        assert_eq!(s.per_node, vec![2, 3, 1, 2]);
+    }
+
+    #[test]
+    fn mean_model_is_f64_accumulated() {
+        let a = dummy_state(&[0.0, 2.0]);
+        let b = dummy_state(&[4.0, 0.0]);
+        let mu = mean_model(&[&a, &b]);
+        assert_eq!(mu, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn barrier_advances_to_max_plus_cost() {
+        let mut a = dummy_state(&[0.0]);
+        let mut b = dummy_state(&[0.0]);
+        a.time = 1.0;
+        b.time = 3.0;
+        {
+            let mut parts = [&mut a, &mut b];
+            barrier_all(&mut parts, 0.5);
+        }
+        assert_eq!(a.time, 3.5);
+        assert_eq!(b.time, 3.5);
+        assert_eq!(a.comm_time, 0.5);
+    }
+
+    #[test]
+    fn pair_at_returns_role_order() {
+        let mut a = dummy_state(&[1.0]);
+        let mut b = dummy_state(&[2.0]);
+        let mut c = dummy_state(&[3.0]);
+        let mut parts = [&mut a, &mut b, &mut c];
+        let (x, y) = pair_at(&mut parts, 2, 0);
+        assert_eq!(x.params[0], 3.0);
+        assert_eq!(y.params[0], 1.0);
+    }
+
+    #[test]
+    fn factory_knows_all_names() {
+        let opts = AlgoOptions::default();
+        for name in ALGORITHM_NAMES {
+            let a = make_algorithm(name, &opts).unwrap();
+            assert_eq!(a.name(), *name);
+        }
+        assert!(make_algorithm("nope", &opts).is_err());
+    }
+}

@@ -4,97 +4,111 @@
 //! node's own sends, but the pairwise averaging itself blocks both
 //! endpoints — so every iteration pays compute + exchange, which is exactly
 //! the communication-frequency disadvantage SwarmSGD's Figure 4 highlights.
+//!
+//! As an [`Algorithm`], AD-PSGD schedules 2-node events (uniform random
+//! edges), so it parallelizes on the shared-memory executor just like
+//! SwarmSGD — the paper's async-baseline comparison on real threads.
 
-use super::{finalize, RoundsConfig};
-use crate::coordinator::{average_into_both, Cluster, NodeClocks, RunContext, RunMetrics};
+use crate::coordinator::algorithm::{
+    pair, step_once, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
+};
+use crate::coordinator::cluster::average_into_both;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
-pub struct AdPsgdRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: RoundsConfig,
-}
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdPsgd;
 
-impl AdPsgdRunner {
-    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self { clocks: NodeClocks::new(cfg.n), cluster, cfg }
+impl Algorithm for AdPsgd {
+    fn name(&self) -> &'static str {
+        "adpsgd"
     }
 
-    /// `cfg.rounds` counts pairwise interactions (same unit as SwarmSGD).
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
-        for t in 1..=self.cfg.rounds {
-            let lr = self.cfg.lr.at(t);
-            let (i, j) = ctx.graph.sample_edge(ctx.rng);
-            // one local step on each endpoint (AD-PSGD workers never idle)
-            let mut comp = [0.0f64; 2];
-            for (slot, &node) in [i, j].iter().enumerate() {
-                let a = &mut self.cluster.agents[node];
-                a.last_loss = ctx.backend.step(node, &mut a.params, &mut a.mom, lr);
-                a.steps += 1;
-                comp[slot] = ctx.cost.compute_time(&mut a.rng);
-            }
-            // averaging every step; compute overlapped with communication
-            {
-                let (a, b) = self.cluster.pair_mut(i, j);
-                average_into_both(&mut a.params, &mut b.params);
-                a.comm.copy_from_slice(&a.params);
-                b.comm.copy_from_slice(&b.params);
-            }
-            let exch = ctx.cost.exchange_time(bytes);
-            // AD-PSGD overlaps gradient compute with its own sends, but the
-            // averaging step itself blocks both endpoints (paper Appx B):
-            // every iteration pays compute + exchange.
-            self.clocks.charge_compute(i, comp[0]);
-            self.clocks.charge_compute(j, comp[1]);
-            self.clocks.charge_comm(i, exch);
-            self.clocks.charge_comm(j, exch);
-            self.cluster.agents[i].interactions += 1;
-            self.cluster.agents[j].interactions += 1;
-            m.total_bits += 2 * 8 * bytes;
-            if (ctx.eval_every > 0 && t % ctx.eval_every == 0) || t == self.cfg.rounds {
-                super::record_round_point(&self.cluster, &self.clocks, ctx, t, &mut m, None);
-            }
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        assert!(n >= 2, "gossip needs n >= 2");
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let (i, j) = graph.sample_edge(rng);
+            let seed = rng.next_u64();
+            s.push(vec![i, j], vec![1, 1], seed);
         }
-        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
-        m
+        s
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        let (ni, nj) = pair(parts);
+        // one local step on each endpoint (AD-PSGD workers never idle)
+        step_once(ctx, ev.nodes[0], ni);
+        step_once(ctx, ev.nodes[1], nj);
+        // averaging every step; the averaging blocks both endpoints
+        // (paper Appx B): every iteration pays compute + exchange
+        average_into_both(&mut ni.params, &mut nj.params);
+        ni.comm.copy_from_slice(&ni.params);
+        nj.comm.copy_from_slice(&nj.params);
+        let exch = ctx.cost.exchange_time(bytes);
+        for st in [ni, nj] {
+            st.time += exch;
+            st.comm_time += exch;
+            st.interactions += 1;
+        }
+        EventOutcome { bits: 2 * 8 * bytes, fallbacks: 0 }
+    }
+
+    /// AD-PSGD counts its t axis in interactions, plotted per round like
+    /// the paper's baseline tables.
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::Backend;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
+
+    fn spec(n: usize, t: u64, eval_every: u64) -> RunSpec {
+        RunSpec {
+            n,
+            events: t,
+            lr: LrSchedule::Constant(0.05),
+            seed: 4,
+            name: "adpsgd".into(),
+            eval_every,
+            track_gamma: false,
+        }
+    }
 
     #[test]
     fn adpsgd_converges_on_quadratic() {
         let n = 8;
-        let mut backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
-        let backend_f_star = backend.f_star();
+        let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let f_star = backend.f_star();
         let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend_f_star
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
         let mut rng = Pcg64::seed(4);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.1);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 100,
-            track_gamma: false,
-        };
-        let cfg = RoundsConfig::new(n, 800, 0.05, "adpsgd");
-        let mut r = AdPsgdRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
-        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        let m = run_serial(&AdPsgd, &backend, &spec(n, 800, 100), &graph, &cost);
+        let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
         assert_eq!(m.local_steps, 2 * 800); // one step per endpoint
     }
@@ -103,7 +117,7 @@ mod tests {
     fn adpsgd_pays_comm_every_step() {
         // with a big model, AD-PSGD per-step time is dominated by exchange
         let n = 4;
-        let mut backend = QuadraticOracle::new(64, n, 1.0, 0.5, 2.0, 0.0, 3);
+        let backend = QuadraticOracle::new(64, n, 1.0, 0.5, 2.0, 0.0, 3);
         let mut rng = Pcg64::seed(4);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         // tiny compute, slow network -> comm dominates
@@ -114,17 +128,7 @@ mod tests {
             bandwidth: 1e3, // 1 KB/s: 64*4 B takes .256 s
             ..CostModel::default()
         };
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 0,
-            track_gamma: false,
-        };
-        let cfg = RoundsConfig::new(n, 100, 0.01, "adpsgd");
-        let mut r = AdPsgdRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
+        let m = run_serial(&AdPsgd, &backend, &spec(n, 100, 0), &graph, &cost);
         // ~100 interactions × 0.256 s spread over 4 nodes ≥ ~6 s at the max
         assert!(m.sim_time > 1.0, "sim_time={}", m.sim_time);
     }

@@ -5,90 +5,102 @@
 //! SGD+momentum when momenta follow the same trajectory, which they do
 //! here — all agents stay in lock-step.)
 
-use super::{finalize, record_round_point, step_all, RoundsConfig};
-use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+use crate::coordinator::algorithm::{
+    barrier_all, mean_params, step_once, Algorithm, Event, EventOutcome, InteractionSchedule,
+    NodeState, StepCtx,
+};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
-pub struct AllReduceRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: RoundsConfig,
-}
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AllReduce;
 
-impl AllReduceRunner {
-    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self { clocks: NodeClocks::new(cfg.n), cluster, cfg }
+impl Algorithm for AllReduce {
+    fn name(&self) -> &'static str {
+        "allreduce"
     }
 
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let d = self.cluster.dim;
-        let bytes = ctx.cost.wire_bytes(d);
-        for round in 1..=self.cfg.rounds {
-            let lr = self.cfg.lr.at(round);
-            step_all(&mut self.cluster, ctx, lr, &mut self.clocks);
-            // global model average (== gradient allreduce)
-            let mu = self.cluster.mean_model();
-            for a in &mut self.cluster.agents {
-                a.params.copy_from_slice(&mu);
-                a.comm.copy_from_slice(&mu);
-            }
-            self.clocks.barrier_all(ctx.cost.allreduce_time(self.cfg.n, bytes));
-            // ring allreduce moves ~2·(n−1)/n·bytes per node
-            m.total_bits += (2 * (self.cfg.n as u64 - 1) / self.cfg.n as u64)
-                .max(1)
-                * 8
-                * bytes
-                * self.cfg.n as u64;
-            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
-            {
-                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, None);
-            }
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let seed = rng.next_u64();
+            s.push((0..n).collect(), vec![1; n], seed);
         }
-        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
-        m
+        s
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        for (k, st) in parts.iter_mut().enumerate() {
+            step_once(ctx, ev.nodes[k], st);
+        }
+        // global model average (== gradient allreduce; shared f64 helper)
+        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+        for st in parts.iter_mut() {
+            st.params.copy_from_slice(&mu);
+            st.comm.copy_from_slice(&mu);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+        // ring allreduce moves ~2·(n−1)/n·bytes per node
+        let bits = (2 * (n as u64 - 1) / n as u64).max(1) * 8 * bytes * n as u64;
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    /// Synchronous rounds: one event advances parallel time by 1.
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::LrSchedule;
+    use crate::backend::Backend;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
     #[test]
     fn allreduce_keeps_models_identical_and_converges() {
         let n = 4;
-        let mut backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
-        let backend_f_star = backend.f_star();
+        let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let f_star = backend.f_star();
         let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend_f_star
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
         let mut rng = Pcg64::seed(1);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.1);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
+        let spec = RunSpec {
+            n,
+            events: 200,
+            lr: LrSchedule::Constant(0.05),
+            seed: 1,
+            name: "allreduce".into(),
             eval_every: 50,
             track_gamma: true,
         };
-        let cfg = RoundsConfig {
-            lr: LrSchedule::Constant(0.05),
-            ..RoundsConfig::new(n, 200, 0.05, "allreduce")
-        };
-        let mut r = AllReduceRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
+        let m = run_serial(&AllReduce, &backend, &spec, &graph, &cost);
         // models identical after every round
-        assert!(r.cluster.gamma() < 1e-9);
-        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        let gamma_last = m.curve.last().unwrap().gamma;
+        assert!(gamma_last < 1e-9, "gamma={gamma_last}");
+        let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.1, "normalized gap {gap}");
         assert!(m.sim_time > 0.0);
         assert_eq!(m.local_steps, 200 * n as u64);

@@ -3,83 +3,114 @@
 //! random matching of the interaction graph (a doubly-stochastic, symmetric
 //! mixing step — the sequence-of-perfect-matchings gossip model the paper's
 //! related-work section describes).
+//!
+//! As an [`Algorithm`], each round is one whole-cluster event: D-PSGD's
+//! semantics IS a global barrier, so the event claims every node and the
+//! matching is drawn from the event's own seed.
 
-use super::{finalize, record_round_point, step_all, RoundsConfig};
-use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+use crate::coordinator::algorithm::{
+    barrier_all, pair_at, step_once, Algorithm, Event, EventOutcome, InteractionSchedule,
+    NodeState, StepCtx,
+};
+use crate::coordinator::cluster::average_into_both;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
-pub struct DPsgdRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: RoundsConfig,
-}
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DPsgd;
 
-impl DPsgdRunner {
-    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self { clocks: NodeClocks::new(cfg.n), cluster, cfg }
+impl Algorithm for DPsgd {
+    fn name(&self) -> &'static str {
+        "dpsgd"
     }
 
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
-        for round in 1..=self.cfg.rounds {
-            let lr = self.cfg.lr.at(round);
-            step_all(&mut self.cluster, ctx, lr, &mut self.clocks);
-            // average along a random matching; pairs exchange in parallel,
-            // but the round is synchronous: barrier to the slowest, then one
-            // exchange latency for everyone matched.
-            let matching = ctx.graph.random_matching(ctx.rng);
-            for &(u, v) in &matching {
-                let (a, b) = self.cluster.pair_mut(u, v);
-                crate::coordinator::average_into_both(&mut a.params, &mut b.params);
-                a.comm.copy_from_slice(&a.params);
-                b.comm.copy_from_slice(&b.params);
-                m.total_bits += 2 * 8 * bytes;
-            }
-            self.clocks.barrier_all(ctx.cost.exchange_time(bytes));
-            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
-            {
-                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, None);
-            }
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let seed = rng.next_u64();
+            s.push((0..n).collect(), vec![1; n], seed);
         }
-        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
-        m
+        s
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        // the matching below indexes `parts` by node id, which requires
+        // the identity-ordered whole-cluster events this schedule emits
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        // one SGD step per node, each from its own stream
+        for (k, st) in parts.iter_mut().enumerate() {
+            step_once(ctx, ev.nodes[k], st);
+        }
+        // average along a random matching (drawn from the event seed);
+        // pairs exchange in parallel, but the round is synchronous:
+        // barrier to the slowest, then one exchange latency for everyone
+        let mut er = Pcg64::seed(ev.seed);
+        let matching = ctx.graph.random_matching(&mut er);
+        let mut bits = 0u64;
+        for &(u, v) in &matching {
+            let (a, b) = pair_at(parts, u, v);
+            average_into_both(&mut a.params, &mut b.params);
+            a.comm.copy_from_slice(&a.params);
+            b.comm.copy_from_slice(&b.params);
+            a.interactions += 1;
+            b.interactions += 1;
+            bits += 2 * 8 * bytes;
+        }
+        barrier_all(parts, ctx.cost.exchange_time(bytes));
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    /// Synchronous rounds: one event advances parallel time by 1.
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::Backend;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
     #[test]
     fn dpsgd_converges_on_quadratic() {
         let n = 8;
-        let mut backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
-        let backend_f_star = backend.f_star();
+        let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let f_star = backend.f_star();
         let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend_f_star
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
         let mut rng = Pcg64::seed(2);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.1);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
+        let spec = RunSpec {
+            n,
+            events: 300,
+            lr: LrSchedule::Constant(0.05),
+            seed: 2,
+            name: "dpsgd".into(),
             eval_every: 50,
             track_gamma: true,
         };
-        let cfg = RoundsConfig::new(n, 300, 0.05, "dpsgd");
-        let mut r = DPsgdRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
-        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        let m = run_serial(&DPsgd, &backend, &spec, &graph, &cost);
+        let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
         // models stay concentrated (gossip mixing)
         let gamma_last = m.curve.last().unwrap().gamma;

@@ -1,88 +1,112 @@
 //! Local SGD baseline [38, 29]: every node runs `h` local steps, then a
 //! global model average (the paper's comparison point communicates every
 //! 5 steps, following Lin et al. [29]).
+//!
+//! One [`Algorithm`] event = one communication round (`h` local steps per
+//! node + one allreduce barrier).
 
-use super::{finalize, record_round_point, step_all, RoundsConfig};
-use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+use crate::coordinator::algorithm::{
+    barrier_all, local_phase, mean_params, Algorithm, Event, EventOutcome,
+    InteractionSchedule, NodeState, StepCtx,
+};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
-pub struct LocalSgdRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: RoundsConfig,
+#[derive(Clone, Copy, Debug)]
+pub struct LocalSgd {
+    /// communication period (local steps per round)
+    pub h: u64,
 }
 
-impl LocalSgdRunner {
-    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
-        assert!(cfg.h >= 1);
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self { clocks: NodeClocks::new(cfg.n), cluster, cfg }
+impl Algorithm for LocalSgd {
+    fn name(&self) -> &'static str {
+        "localsgd"
     }
 
-    /// `cfg.rounds` counts *communication* rounds; each is `h` local steps +
-    /// one global average.
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
-        for round in 1..=self.cfg.rounds {
-            let lr = self.cfg.lr.at(round);
-            for _ in 0..self.cfg.h {
-                step_all(&mut self.cluster, ctx, lr, &mut self.clocks);
-            }
-            let mu = self.cluster.mean_model();
-            for a in &mut self.cluster.agents {
-                a.params.copy_from_slice(&mu);
-                a.comm.copy_from_slice(&mu);
-            }
-            self.clocks.barrier_all(ctx.cost.allreduce_time(self.cfg.n, bytes));
-            m.total_bits += 2 * 8 * bytes * self.cfg.n as u64;
-            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
-            {
-                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, None);
-            }
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        assert!(self.h >= 1);
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let seed = rng.next_u64();
+            s.push((0..n).collect(), vec![self.h; n], seed);
         }
-        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
-        m
+        s
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        // h local steps per node, each node on its own stream (the shared
+        // burst + per-step compute-charge rule)
+        for (k, st) in parts.iter_mut().enumerate() {
+            local_phase(ctx, ev.nodes[k], st, ev.h[k]);
+        }
+        // global model average (shared f64 node-order accumulation)
+        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+        for st in parts.iter_mut() {
+            st.params.copy_from_slice(&mu);
+            st.comm.copy_from_slice(&mu);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+        EventOutcome { bits: 2 * 8 * bytes * n as u64, fallbacks: 0 }
+    }
+
+    /// Synchronous rounds: one event advances parallel time by 1.
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::Backend;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
     #[test]
     fn localsgd_converges_and_communicates_less() {
         let n = 4;
-        let mut backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
-        let backend_f_star = backend.f_star();
+        let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let f_star = backend.f_star();
         let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend_f_star
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
         let mut rng = Pcg64::seed(1);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.1);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
+        let spec = RunSpec {
+            n,
+            events: 60,
+            lr: LrSchedule::Constant(0.05),
+            seed: 1,
+            name: "localsgd".into(),
             eval_every: 20,
-            track_gamma: false,
+            track_gamma: true,
         };
-        let mut cfg = RoundsConfig::new(n, 60, 0.05, "localsgd");
-        cfg.h = 5;
-        let mut r = LocalSgdRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
-        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        let m = run_serial(&LocalSgd { h: 5 }, &backend, &spec, &graph, &cost);
+        let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.1, "normalized gap {gap}");
         // 60 rounds × 5 steps × 4 nodes local steps
         assert_eq!(m.local_steps, 60 * 5 * 4);
         // after the final average all models agree
-        assert!(r.cluster.gamma() < 1e-9);
+        let gamma_last = m.curve.last().unwrap().gamma;
+        assert!(gamma_last < 1e-9, "gamma={gamma_last}");
     }
 }

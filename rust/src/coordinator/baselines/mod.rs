@@ -1,17 +1,21 @@
-//! The comparison systems of the paper's §5 evaluation:
+//! The comparison systems of the paper's §5 evaluation, each an
+//! [`crate::coordinator::Algorithm`] plug-in to the shared executors:
 //!
-//! | module        | paper baseline                | communication pattern        |
+//! | module        | paper baseline                | event shape                  |
 //! |---------------|-------------------------------|------------------------------|
-//! | [`allreduce`] | (large-batch) data-parallel SGD [16] | global allreduce / step |
-//! | [`localsgd`]  | Local SGD [38, 29]            | global average every H steps |
-//! | [`dpsgd`]     | D-PSGD [27]                   | matching average / step      |
-//! | [`adpsgd`]    | AD-PSGD [28]                  | pairwise average / step      |
-//! | [`sgp`]       | SGP (push-sum) [5]            | directed push / step         |
+//! | [`allreduce`] | (large-batch) data-parallel SGD [16] | whole-cluster round   |
+//! | [`localsgd`]  | Local SGD [38, 29]            | whole-cluster round (h steps)|
+//! | [`dpsgd`]     | D-PSGD [27]                   | whole-cluster round + matching|
+//! | [`adpsgd`]    | AD-PSGD [28]                  | pairwise gossip event        |
+//! | [`sgp`]       | SGP (push-sum) [5]            | whole-cluster push round     |
 //!
-//! All reuse [`super::Cluster`] and [`super::NodeClocks`], evaluate the mean
-//! (or de-biased) model on the same cadence as SwarmSGD, and charge time
-//! from the same [`crate::netmodel::CostModel`] — so loss-vs-time and
-//! time-per-batch comparisons are apples-to-apples.
+//! All evaluate on the same cadence as SwarmSGD and charge time from the
+//! same [`crate::netmodel::CostModel`] through the per-node clocks in
+//! [`crate::coordinator::NodeState`] — so loss-vs-time and time-per-batch
+//! comparisons are apples-to-apples, on either executor. The asynchronous
+//! baselines (AD-PSGD) schedule 2-node events and genuinely parallelize on
+//! `--executor parallel`; the synchronous ones schedule whole-cluster
+//! events, because their semantics IS a global barrier per round.
 
 mod adpsgd;
 mod allreduce;
@@ -19,123 +23,8 @@ mod dpsgd;
 mod localsgd;
 mod sgp;
 
-pub use adpsgd::AdPsgdRunner;
-pub use allreduce::AllReduceRunner;
-pub use dpsgd::DPsgdRunner;
-pub use localsgd::LocalSgdRunner;
-pub use sgp::SgpRunner;
-
-use super::{Cluster, LrSchedule, NodeClocks, RunContext, RunMetrics};
-use crate::backend::TrainBackend;
-
-/// Shared configuration for the round-based baselines.
-#[derive(Clone, Debug)]
-pub struct RoundsConfig {
-    pub n: usize,
-    /// synchronous rounds (each round = 1 local step per node, except
-    /// LocalSGD which takes `h` steps per communication round)
-    pub rounds: u64,
-    pub lr: LrSchedule,
-    pub seed: u64,
-    pub name: String,
-    /// LocalSGD communication period (ignored by the others)
-    pub h: u64,
-}
-
-impl RoundsConfig {
-    pub fn new(n: usize, rounds: u64, lr: f32, name: &str) -> Self {
-        Self {
-            n,
-            rounds,
-            lr: LrSchedule::Constant(lr),
-            seed: 0x5EED,
-            name: name.to_string(),
-            h: 5,
-        }
-    }
-}
-
-/// Record one curve point for a round-based run (shared by all baselines).
-pub(crate) fn record_round_point(
-    cluster: &Cluster,
-    clocks: &NodeClocks,
-    ctx: &mut RunContext,
-    round: u64,
-    metrics: &mut RunMetrics,
-    mean_override: Option<&[f32]>,
-) {
-    let mu_owned;
-    let mu: &[f32] = match mean_override {
-        Some(m) => m,
-        None => {
-            mu_owned = cluster.mean_model();
-            &mu_owned
-        }
-    };
-    let ev = ctx.backend.eval(mu);
-    let pick = ctx.rng.below_usize(cluster.n());
-    let ind = ctx.backend.eval(&cluster.agents[pick].params);
-    let gamma = if ctx.track_gamma { cluster.gamma() } else { f64::NAN };
-    let n = cluster.n() as f64;
-    let epochs =
-        (0..cluster.n()).map(|i| ctx.backend.epochs(i)).sum::<f64>() / n;
-    metrics.push(super::CurvePoint {
-        t: round,
-        parallel_time: round as f64,
-        sim_time: clocks.max_time(),
-        epochs,
-        train_loss: cluster.mean_train_loss(),
-        eval_loss: ev.loss,
-        eval_acc: ev.accuracy,
-        indiv_loss: ind.loss,
-        gamma,
-        bits: metrics.total_bits,
-    });
-}
-
-/// Finalize aggregate fields common to all round-based runners.
-pub(crate) fn finalize(
-    metrics: &mut RunMetrics,
-    cluster: &Cluster,
-    clocks: &NodeClocks,
-    ctx: &mut RunContext,
-    rounds: u64,
-) {
-    metrics.interactions = rounds;
-    metrics.local_steps = cluster.total_steps();
-    metrics.sim_time = clocks.max_time();
-    metrics.compute_time_total = clocks.compute_total;
-    metrics.comm_time_total = clocks.comm_total;
-    metrics.epochs =
-        (0..cluster.n()).map(|i| ctx.backend.epochs(i)).sum::<f64>() / cluster.n() as f64;
-    if let Some(p) = metrics.curve.last() {
-        metrics.final_eval_loss = p.eval_loss;
-        metrics.final_eval_acc = p.eval_acc;
-    }
-}
-
-/// One local SGD step for every node; returns the max per-node compute time
-/// (the synchronous-round critical path).
-pub(crate) fn step_all(
-    cluster: &mut Cluster,
-    ctx: &mut RunContext,
-    lr: f32,
-    clocks: &mut NodeClocks,
-) -> f64 {
-    let mut max_t: f64 = 0.0;
-    for i in 0..cluster.n() {
-        let a = &mut cluster.agents[i];
-        a.last_loss = ctx.backend.step(i, &mut a.params, &mut a.mom, lr);
-        a.steps += 1;
-        let dt = ctx.cost.compute_time(&mut a.rng);
-        clocks.charge_compute(i, dt);
-        max_t = max_t.max(dt);
-    }
-    max_t
-}
-
-#[allow(unused_imports)]
-pub(crate) use crate::backend::EvalResult;
-
-#[allow(dead_code)]
-fn _assert_backend_obj_safe(_: &mut dyn TrainBackend) {}
+pub use adpsgd::AdPsgd;
+pub use allreduce::AllReduce;
+pub use dpsgd::DPsgd;
+pub use localsgd::LocalSgd;
+pub use sgp::Sgp;

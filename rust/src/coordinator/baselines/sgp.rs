@@ -7,184 +7,187 @@
 //! de-biased models converge to consensus while Σx and Σw are conserved —
 //! push-sum's defining invariant (tested below).  Run with overlap factor 1
 //! as the paper configures SGP.
+//!
+//! One [`Algorithm`] event = one synchronous push-sum round. The push
+//! targets are drawn from the event seed; each node's inbox is its `inbox`
+//! scratch, so the round allocates only the n-vector of weight shares.
+//! [`Algorithm::round_metrics`] is overridden: curves evaluate the
+//! de-biased consensus Σx/Σw, and the individual model is z = x/w.
 
-use super::{finalize, record_round_point, RoundsConfig};
-use crate::coordinator::{Cluster, NodeClocks, RunContext, RunMetrics};
+use crate::coordinator::algorithm::{
+    barrier_all, pair_at, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState,
+    RoundModels, StepCtx,
+};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
-pub struct SgpRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    /// push-sum weights w_i
-    pub weights: Vec<f64>,
-    cfg: RoundsConfig,
-}
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sgp;
 
-impl SgpRunner {
-    pub fn new(cfg: RoundsConfig, ctx: &mut RunContext) -> Self {
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self {
-            clocks: NodeClocks::new(cfg.n),
-            weights: vec![1.0; cfg.n],
-            cluster,
-            cfg,
+impl Algorithm for Sgp {
+    fn name(&self) -> &'static str {
+        "sgp"
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let seed = rng.next_u64();
+            s.push((0..n).collect(), vec![1; n], seed);
         }
+        s
     }
 
-    /// De-biased model of node i: z_i = x_i / w_i.
-    pub fn debiased(&self, i: usize) -> Vec<f32> {
-        let w = self.weights[i] as f32;
-        self.cluster.agents[i].params.iter().map(|&v| v / w).collect()
-    }
-
-    /// Weighted mean model Σx / Σw (the consensus target).
-    pub fn consensus_model(&self) -> Vec<f32> {
-        let wsum: f64 = self.weights.iter().sum();
-        let d = self.cluster.dim;
-        let mut acc = vec![0.0f64; d];
-        for a in &self.cluster.agents {
-            for (s, &v) in acc.iter_mut().zip(&a.params) {
-                *s += v as f64;
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        // the push targets below index `parts` by node id, which requires
+        // the identity-ordered whole-cluster events this schedule emits
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        let mut er = Pcg64::seed(ev.seed);
+        // SGD step on the de-biased model z = x/w, then re-bias the update;
+        // the round is synchronous: everyone is charged the slowest step
+        let mut max_comp: f64 = 0.0;
+        for (k, st) in parts.iter_mut().enumerate() {
+            let agent = ev.nodes[k];
+            let w = st.weight as f32;
+            for (z, &x) in st.snap.iter_mut().zip(&st.params) {
+                *z = x / w;
             }
+            st.last_loss =
+                ctx.backend.step(agent, &mut st.snap, &mut st.mom, ctx.lr, &mut st.rng);
+            st.steps += 1;
+            for (x, &z) in st.params.iter_mut().zip(&st.snap) {
+                *x = z * w;
+            }
+            let dt = ctx.cost.compute_time(&mut st.rng);
+            max_comp = max_comp.max(dt);
         }
-        acc.into_iter().map(|v| (v / wsum) as f32).collect()
-    }
-
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let bytes = ctx.cost.wire_bytes(self.cluster.dim);
-        let n = self.cfg.n;
-        let mut inbox_x: Vec<Vec<f32>> = vec![vec![0.0; self.cluster.dim]; n];
+        for st in parts.iter_mut() {
+            st.time += max_comp;
+            st.compute += max_comp;
+        }
+        // push phase: halve and send to one random out-neighbor; inboxes
+        // are the receivers' `inbox` scratch buffers
+        for st in parts.iter_mut() {
+            st.inbox.iter_mut().for_each(|v| *v = 0.0);
+        }
         let mut inbox_w = vec![0.0f64; n];
-        for round in 1..=self.cfg.rounds {
-            let lr = self.cfg.lr.at(round);
-            // SGD step on the de-biased model, then re-bias the update
-            let mut max_comp: f64 = 0.0;
-            for i in 0..n {
-                let w = self.weights[i] as f32;
-                let mut z = self.debiased(i);
-                let a = &mut self.cluster.agents[i];
-                a.last_loss = ctx.backend.step(i, &mut z, &mut a.mom, lr);
-                a.steps += 1;
-                for (x, &zv) in a.params.iter_mut().zip(&z) {
-                    *x = zv * w;
-                }
-                max_comp = max_comp.max(ctx.cost.compute_time(&mut a.rng));
+        let mut bits = 0u64;
+        for k in 0..n {
+            let dst = ctx.graph.sample_neighbor(ev.nodes[k], &mut er);
+            inbox_w[dst] += 0.5 * parts[k].weight;
+            let (src, dstst) = pair_at(parts, k, dst);
+            for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
+                *s += 0.5 * v;
             }
-            for i in 0..n {
-                self.clocks.charge_compute(i, max_comp); // synchronous round
+            bits += 8 * bytes + 64; // x halves + weight scalar
+        }
+        // absorb: x ← x/2 + inbox, w ← w/2 + inbox_w
+        for (k, st) in parts.iter_mut().enumerate() {
+            for (x, &add) in st.params.iter_mut().zip(&st.inbox) {
+                *x = 0.5 * *x + add;
             }
-            // push phase: halve and send to one random out-neighbor
-            for ib in inbox_x.iter_mut() {
-                ib.iter_mut().for_each(|v| *v = 0.0);
-            }
-            inbox_w.iter_mut().for_each(|v| *v = 0.0);
-            for i in 0..n {
-                let dst = ctx.graph.sample_neighbor(i, ctx.rng);
-                let a = &self.cluster.agents[i];
-                for (s, &v) in inbox_x[dst].iter_mut().zip(&a.params) {
-                    *s += 0.5 * v;
-                }
-                inbox_w[dst] += 0.5 * self.weights[i];
-                m.total_bits += 8 * bytes + 64; // x halves + weight scalar
-            }
-            for i in 0..n {
-                let a = &mut self.cluster.agents[i];
-                for (x, &add) in a.params.iter_mut().zip(&inbox_x[i]) {
-                    *x = 0.5 * *x + add;
-                }
-                self.weights[i] = 0.5 * self.weights[i] + inbox_w[i];
-                a.comm.copy_from_slice(&a.params);
-            }
-            self.clocks.barrier_all(ctx.cost.p2p_time(bytes));
-            if (ctx.eval_every > 0 && round % ctx.eval_every == 0) || round == self.cfg.rounds
-            {
-                let mu = self.consensus_model();
-                record_round_point(&self.cluster, &self.clocks, ctx, round, &mut m, Some(&mu));
+            st.weight = 0.5 * st.weight + inbox_w[k];
+            st.comm.copy_from_slice(&st.params);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.p2p_time(bytes));
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    /// Synchronous rounds: one event advances parallel time by 1.
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
+    }
+
+    /// Curves evaluate push-sum's de-biased quantities: the weighted
+    /// consensus Σx/Σw and the picked node's z = x/w.
+    fn round_metrics(&self, states: &[&NodeState], pick: usize) -> RoundModels {
+        let wsum: f64 = states.iter().map(|s| s.weight).sum();
+        let dim = states.first().map_or(0, |s| s.params.len());
+        let mut acc = vec![0.0f64; dim];
+        for s in states {
+            for (a, &v) in acc.iter_mut().zip(&s.params) {
+                *a += v as f64;
             }
         }
-        finalize(&mut m, &self.cluster, &self.clocks, ctx, self.cfg.rounds);
-        m
+        let consensus = acc.into_iter().map(|v| (v / wsum) as f32).collect();
+        let w = states[pick].weight as f32;
+        let individual = states[pick].params.iter().map(|&v| v / w).collect();
+        RoundModels { consensus, individual }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::Backend;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
-    fn setup(
-        n: usize,
-    ) -> (QuadraticOracle, Graph, CostModel, Pcg64) {
+    fn setup(n: usize) -> (QuadraticOracle, Graph, CostModel) {
         let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);
         let mut rng = Pcg64::seed(8);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
-        (backend, graph, CostModel::deterministic(0.1), rng)
+        (backend, graph, CostModel::deterministic(0.1))
+    }
+
+    fn spec(n: usize, t: u64, lr: f32) -> RunSpec {
+        RunSpec {
+            n,
+            events: t,
+            lr: LrSchedule::Constant(lr),
+            seed: 8,
+            name: "sgp".into(),
+            eval_every: 50,
+            track_gamma: false,
+        }
     }
 
     #[test]
     fn push_sum_conserves_mass() {
+        // lr=0: pure gossip. The consensus model must equal the initial
+        // common model exactly in expectation — and the de-biased curve
+        // must stay at the initial loss (mass conservation).
         let n = 6;
-        let (mut backend, graph, cost, mut rng) = setup(n);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 0,
-            track_gamma: false,
-        };
-        let cfg = RoundsConfig {
-            lr: crate::coordinator::LrSchedule::Constant(0.0), // no SGD: pure gossip
-            ..RoundsConfig::new(n, 50, 0.0, "sgp")
-        };
-        let mut r = SgpRunner::new(cfg, &mut ctx);
-        // perturb one node so consensus is non-trivial
-        r.cluster.agents[0].params[0] = 6.0;
-        let x_sum_before: f64 = r
-            .cluster
-            .agents
-            .iter()
-            .map(|a| a.params[0] as f64)
-            .sum();
-        let w_sum_before: f64 = r.weights.iter().sum();
-        let _ = r.run(&mut ctx);
-        let x_sum_after: f64 =
-            r.cluster.agents.iter().map(|a| a.params[0] as f64).sum();
-        let w_sum_after: f64 = r.weights.iter().sum();
-        assert!((x_sum_before - x_sum_after).abs() < 1e-3);
-        assert!((w_sum_before - w_sum_after).abs() < 1e-9);
-        // and de-biased values reached consensus
-        let z0 = r.debiased(0)[0];
-        for i in 1..n {
-            assert!((r.debiased(i)[0] - z0).abs() < 1e-3);
-        }
+        let (backend, graph, cost) = setup(n);
+        let (p0, _) = backend.init();
+        let init_loss = backend.eval(&p0).loss;
+        let m = run_serial(&Sgp, &backend, &spec(n, 50, 0.0), &graph, &cost);
+        // with no gradient steps, Σx/Σw stays the common x₀ forever
+        let final_loss = m.final_eval_loss;
+        assert!(
+            (final_loss - init_loss).abs() < 1e-6 * init_loss.abs().max(1.0),
+            "consensus drifted: {init_loss} -> {final_loss}"
+        );
     }
 
     #[test]
     fn sgp_converges_on_quadratic() {
         let n = 8;
-        let (mut backend, graph, cost, mut rng) = setup(n);
-        let backend_f_star = backend.f_star();
+        let (backend, graph, cost) = setup(n);
+        let f_star = backend.f_star();
         let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend_f_star
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 50,
-            track_gamma: false,
-        };
-        let cfg = RoundsConfig::new(n, 300, 0.05, "sgp");
-        let mut r = SgpRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
-        let gap = (m.final_eval_loss - backend_f_star) / gap0;
+        let m = run_serial(&Sgp, &backend, &spec(n, 300, 0.05), &graph, &cost);
+        let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
     }
 }

@@ -1,111 +1,8 @@
-//! Agent state + pairwise averaging primitives shared by all algorithms.
+//! Pairwise averaging primitives shared by all algorithms. (The former
+//! `Agent`/`Cluster` state containers are gone — node state now lives in
+//! [`super::NodeState`], owned by the executors.)
 
-use crate::analysis::gamma_potential;
-use crate::backend::TrainBackend;
 use crate::quant::{decode, encode, QuantError};
-use crate::rngx::Pcg64;
-
-/// One decentralized agent (paper §3): a live model copy `X^i` being updated
-/// by local SGD, and a communication copy `Y^i` that partners read
-/// asynchronously in the non-blocking variant (Appendix F).
-pub struct Agent {
-    /// live copy X^i
-    pub params: Vec<f32>,
-    /// optimizer momentum (travels with the live copy; NOT averaged —
-    /// matching the paper's implementation where only models are exchanged)
-    pub mom: Vec<f32>,
-    /// communication copy Y^i = X^i + η·h̃ of the *previous* local batch
-    /// (what a partner sees if it reads while we're mid-computation)
-    pub comm: Vec<f32>,
-    /// local SGD steps performed
-    pub steps: u64,
-    /// pairwise interactions participated in
-    pub interactions: u64,
-    /// last observed minibatch loss
-    pub last_loss: f64,
-    /// private randomness (quantizer seeds, H sampling)
-    pub rng: Pcg64,
-}
-
-impl Agent {
-    fn new(params: Vec<f32>, mom: Vec<f32>, rng: Pcg64) -> Self {
-        let comm = params.clone();
-        Self { params, mom, comm, steps: 0, interactions: 0, last_loss: f64::NAN, rng }
-    }
-}
-
-/// The set of agents + convenience ops over them.
-pub struct Cluster {
-    pub agents: Vec<Agent>,
-    pub dim: usize,
-}
-
-impl Cluster {
-    /// All agents start from the same init (paper: common x₀).
-    pub fn init(n: usize, backend: &mut dyn TrainBackend, seed: u64) -> Self {
-        let mut root = Pcg64::seed(seed);
-        let (p, m) = backend.init(seed as i64);
-        let dim = p.len();
-        let agents = (0..n)
-            .map(|i| Agent::new(p.clone(), m.clone(), root.split(i as u64)))
-            .collect();
-        Self { agents, dim }
-    }
-
-    pub fn n(&self) -> usize {
-        self.agents.len()
-    }
-
-    /// Mutable access to two distinct agents.
-    pub fn pair_mut(&mut self, i: usize, j: usize) -> (&mut Agent, &mut Agent) {
-        assert_ne!(i, j);
-        if i < j {
-            let (a, b) = self.agents.split_at_mut(j);
-            (&mut a[i], &mut b[0])
-        } else {
-            let (a, b) = self.agents.split_at_mut(i);
-            (&mut b[0], &mut a[j])
-        }
-    }
-
-    /// Coordinate-wise mean of live models μ_t.
-    pub fn mean_model(&self) -> Vec<f32> {
-        let n = self.n() as f64;
-        let mut mu = vec![0.0f64; self.dim];
-        for a in &self.agents {
-            for (s, &v) in mu.iter_mut().zip(&a.params) {
-                *s += v as f64;
-            }
-        }
-        mu.into_iter().map(|v| (v / n) as f32).collect()
-    }
-
-    /// Γ_t over live models.
-    pub fn gamma(&self) -> f64 {
-        let models: Vec<Vec<f32>> = self.agents.iter().map(|a| a.params.clone()).collect();
-        gamma_potential(&models)
-    }
-
-    /// Mean of recent minibatch losses (training-loss proxy).
-    pub fn mean_train_loss(&self) -> f64 {
-        let vals: Vec<f64> = self
-            .agents
-            .iter()
-            .map(|a| a.last_loss)
-            .filter(|l| l.is_finite())
-            .collect();
-        if vals.is_empty() {
-            f64::NAN
-        } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
-        }
-    }
-
-    /// Total local steps across agents.
-    pub fn total_steps(&self) -> u64 {
-        self.agents.iter().map(|a| a.steps).sum()
-    }
-}
 
 /// In-place midpoint: a ← b ← (a+b)/2 — Algorithm 1's averaging step.
 pub fn average_into_both(a: &mut [f32], b: &mut [f32]) {
@@ -118,9 +15,9 @@ pub fn average_into_both(a: &mut [f32], b: &mut [f32]) {
 }
 
 /// The Appendix-F non-blocking update for one endpoint, shared by every
-/// executor (serial, Poisson, parallel) so they stay bit-identical: given
-/// the pre-local-phase snapshot `s` and the incoming communication copy
-/// `inc`, set `comm ← (s + inc)/2` and `params ← (s + inc)/2 + (params − s)`
+/// algorithm that uses it so all executors stay bit-identical: given the
+/// pre-local-phase snapshot `s` and the incoming communication copy `inc`,
+/// set `comm ← (s + inc)/2` and `params ← (s + inc)/2 + (params − s)`
 /// in place.
 pub fn nonblocking_update(params: &mut [f32], comm: &mut [f32], s: &[f32], inc: &[f32]) {
     debug_assert_eq!(params.len(), comm.len());
@@ -179,35 +76,6 @@ pub fn quantized_transfer(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::grad::QuadraticOracle;
-
-    #[test]
-    fn init_all_agents_identical() {
-        let mut b = QuadraticOracle::new(8, 4, 1.0, 0.5, 2.0, 0.0, 3);
-        let c = Cluster::init(4, &mut b, 42);
-        assert_eq!(c.n(), 4);
-        for a in &c.agents {
-            assert_eq!(a.params, c.agents[0].params);
-            assert_eq!(a.comm, a.params);
-        }
-        assert_eq!(c.gamma(), 0.0);
-    }
-
-    #[test]
-    fn pair_mut_both_orders() {
-        let mut b = QuadraticOracle::new(4, 2, 1.0, 1.0, 1.0, 0.0, 1);
-        let mut c = Cluster::init(3, &mut b, 7);
-        {
-            let (a, b2) = c.pair_mut(0, 2);
-            a.params[0] = 1.0;
-            b2.params[0] = 2.0;
-        }
-        {
-            let (a, b2) = c.pair_mut(2, 0);
-            assert_eq!(a.params[0], 2.0);
-            assert_eq!(b2.params[0], 1.0);
-        }
-    }
 
     #[test]
     fn average_into_both_midpoint() {
@@ -219,13 +87,24 @@ mod tests {
     }
 
     #[test]
-    fn mean_model_correct() {
-        let mut b = QuadraticOracle::new(2, 2, 1.0, 1.0, 1.0, 0.0, 1);
-        let mut c = Cluster::init(2, &mut b, 7);
-        c.agents[0].params = vec![0.0, 2.0];
-        c.agents[1].params = vec![4.0, 0.0];
-        assert_eq!(c.mean_model(), vec![2.0, 1.0]);
-        assert!((c.gamma() - 2.0 * (4.0 + 1.0)).abs() < 1e-5);
+    fn nonblocking_update_rule() {
+        // S = [0, 0], inc = [2, 4], params = S + delta with delta = [1, 1]
+        let s = vec![0.0f32, 0.0];
+        let mut params = vec![1.0f32, 1.0];
+        let mut comm = vec![9.0f32, 9.0];
+        let inc = vec![2.0f32, 4.0];
+        nonblocking_update(&mut params, &mut comm, &s, &inc);
+        assert_eq!(comm, vec![1.0, 2.0]); // (S+inc)/2
+        assert_eq!(params, vec![2.0, 3.0]); // (S+inc)/2 + delta
+    }
+
+    #[test]
+    fn midpoint_is_elementwise_mean() {
+        let x = vec![1.0f32, -2.0];
+        let y = vec![3.0f32, 2.0];
+        let mut out = vec![0.0f32; 2];
+        midpoint(&x, &y, &mut out);
+        assert_eq!(out, vec![2.0, 0.0]);
     }
 
     #[test]

@@ -1,12 +1,11 @@
-//! Per-node simulated clocks — the discrete-event core (DESIGN.md S10).
+//! Per-node simulated clocks — the aggregate time view (DESIGN.md S10).
 //!
-//! The logical algorithm (who interacts with whom, in what order) follows
-//! the paper's model exactly: a uniformly random edge per step.  This module
-//! supplies the *time* axis: each node owns a clock; compute and
-//! communication charges advance it; rendezvous semantics differ between
-//! blocking (clocks synchronize at the interaction) and non-blocking (the
-//! partner is not delayed).  "Parallel time" = interactions / n is also
-//! tracked for the theory figures.
+//! The executors account time inside each [`super::NodeState`] (no shared
+//! mutable clock on any hot path); this type reassembles those per-node
+//! recordings into the paper's aggregate time axes once a run finishes.
+//! The charging rules themselves (rendezvous max, synchronous barriers,
+//! initiator-pays exchanges) live with the algorithms — see
+//! [`super::barrier_all`] and the per-algorithm `interact` impls.
 
 /// Simulated per-node clocks (seconds) plus aggregate accounting.
 #[derive(Clone, Debug)]
@@ -19,15 +18,9 @@ pub struct NodeClocks {
 }
 
 impl NodeClocks {
-    pub fn new(n: usize) -> Self {
-        Self { t: vec![0.0; n], compute_total: 0.0, comm_total: 0.0 }
-    }
-
-    /// Reassemble clocks from per-node recordings — used by the parallel
-    /// executor, which accounts time inside each node's state (no shared
-    /// mutable clock on the hot path) and merges once at the end. Callers
-    /// must reduce the per-node totals in node-index order so the f64 sums
-    /// are bit-identical to a serial replay.
+    /// Reassemble clocks from per-node recordings. Callers must reduce the
+    /// per-node totals in node-index order so the f64 sums are bit-identical
+    /// between serial and parallel executions.
     pub fn from_parts(t: Vec<f64>, compute_total: f64, comm_total: f64) -> Self {
         Self { t, compute_total, comm_total }
     }
@@ -38,44 +31,6 @@ impl NodeClocks {
 
     pub fn get(&self, i: usize) -> f64 {
         self.t[i]
-    }
-
-    /// Charge compute time to node `i`.
-    pub fn charge_compute(&mut self, i: usize, dt: f64) {
-        debug_assert!(dt >= 0.0);
-        self.t[i] += dt;
-        self.compute_total += dt;
-    }
-
-    /// Charge communication time to node `i`.
-    pub fn charge_comm(&mut self, i: usize, dt: f64) {
-        debug_assert!(dt >= 0.0);
-        self.t[i] += dt;
-        self.comm_total += dt;
-    }
-
-    /// Blocking rendezvous: both nodes wait for the later one, then both pay
-    /// the exchange; returns the completion time.
-    pub fn rendezvous(&mut self, i: usize, j: usize, exchange: f64) -> f64 {
-        let meet = self.t[i].max(self.t[j]);
-        // waiting is idle time (charged to neither bucket, but clocks move)
-        let done = meet + exchange;
-        self.comm_total += exchange * 2.0; // both endpoints occupy their NIC
-        self.t[i] = done;
-        self.t[j] = done;
-        done
-    }
-
-    /// Synchronous-round barrier: everyone advances to the global max, then
-    /// pays `cost` together (allreduce / matching round). Returns new time.
-    pub fn barrier_all(&mut self, cost: f64) -> f64 {
-        let meet = self.t.iter().cloned().fold(0.0, f64::max);
-        let done = meet + cost;
-        self.comm_total += cost * self.t.len() as f64;
-        for t in &mut self.t {
-            *t = done;
-        }
-        done
     }
 
     /// Global simulated time = the furthest-ahead node (what a wall clock
@@ -97,42 +52,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn charges_accumulate() {
-        let mut c = NodeClocks::new(3);
-        c.charge_compute(0, 1.0);
-        c.charge_comm(0, 0.5);
-        c.charge_compute(1, 2.0);
+    fn from_parts_reassembles() {
+        let c = NodeClocks::from_parts(vec![1.5, 2.0, 0.0], 3.0, 0.5);
+        assert_eq!(c.n(), 3);
         assert_eq!(c.get(0), 1.5);
         assert_eq!(c.get(1), 2.0);
-        assert_eq!(c.get(2), 0.0);
         assert_eq!(c.compute_total, 3.0);
         assert_eq!(c.comm_total, 0.5);
     }
 
     #[test]
-    fn rendezvous_synchronizes() {
-        let mut c = NodeClocks::new(2);
-        c.charge_compute(0, 1.0);
-        c.charge_compute(1, 3.0);
-        let done = c.rendezvous(0, 1, 0.25);
-        assert_eq!(done, 3.25);
-        assert_eq!(c.get(0), 3.25);
-        assert_eq!(c.get(1), 3.25);
-    }
-
-    #[test]
-    fn barrier_includes_stragglers() {
-        let mut c = NodeClocks::new(4);
-        c.charge_compute(2, 5.0);
-        let done = c.barrier_all(1.0);
-        assert_eq!(done, 6.0);
-        assert!((0..4).all(|i| c.get(i) == 6.0));
-    }
-
-    #[test]
     fn median_vs_max() {
-        let mut c = NodeClocks::new(4);
-        c.charge_compute(0, 10.0);
+        let c = NodeClocks::from_parts(vec![10.0, 0.0, 0.0, 0.0], 10.0, 0.0);
         assert_eq!(c.max_time(), 10.0);
         assert_eq!(c.median_time(), 0.0);
     }

@@ -1,0 +1,541 @@
+//! The two generic executors: every [`Algorithm`] × every [`Backend`], on
+//! one thread or many.
+//!
+//! * [`run_serial`] walks the pre-drawn [`super::InteractionSchedule`] in
+//!   program order — the discrete-event reference execution, and
+//!   simultaneously the testable replay oracle for the parallel executor.
+//! * [`run_parallel`] drains the identical schedule on N real worker
+//!   threads over per-node `Mutex<NodeState>`; an event takes its
+//!   participants' locks in ascending node order (a global lock order, so
+//!   no two events can deadlock) and workers **commit events in per-node
+//!   dependency order**: event t runs only after each participant has
+//!   finished all of its earlier scheduled events.
+//!
+//! # Replay determinism
+//!
+//! A parallel run is **bit-identical** to the serial run of the same seed,
+//! by construction rather than by luck:
+//!
+//! 1. The whole event sequence (participants, local-step counts H_i, and
+//!    event-local randomness seeds) is pre-drawn by
+//!    [`Algorithm::schedule`] from a dedicated [`Pcg64::stream`] — it does
+//!    not depend on execution order.
+//! 2. All node-local randomness (gradient noise, batch draws, compute-time
+//!    jitter) comes from that node's own `Pcg64::stream`, consumed in the
+//!    node's schedule order.
+//! 3. The dependency order fixes the dataflow DAG — and therefore every
+//!    f32 operation and operand — so any thread interleaving computes the
+//!    same bits. Per-node f64 clock totals are merged once, in node-index
+//!    order, at the end.
+//!
+//! `tests/parallel_executor.rs` asserts metric-for-metric bit equality
+//! between the two executors for SwarmSGD (all three averaging modes,
+//! quadratic and softmax oracles) and AD-PSGD, and CI enforces it on every
+//! push/PR.
+//!
+//! Deadlock freedom: ordered lock acquisition within an event, plus the
+//! induction that the lowest unfinished schedule index always has all of
+//! its dependencies satisfied.
+
+use super::algorithm::{Algorithm, Event, NodeState, StepCtx};
+use super::engine::NodeClocks;
+use super::metrics::{CurvePoint, RunMetrics};
+use super::LrSchedule;
+use crate::analysis::gamma_potential;
+use crate::backend::Backend;
+use crate::netmodel::CostModel;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Stream tags for the executor's deterministic sub-RNGs (arbitrary,
+/// distinct; node streams use `STREAM_NODE_BASE + node`).
+const STREAM_SCHEDULE: u64 = 0x5EED_5C8E_D01E_0001;
+const STREAM_EVAL: u64 = 0x5EED_E7A1_0000_0002;
+const STREAM_NODE_BASE: u64 = 0x5EED_40DE_0000_0003;
+
+/// Everything that parameterizes one run besides the algorithm, backend,
+/// graph, and cost model.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub n: usize,
+    /// total schedule length: pairwise interactions (gossip algorithms) or
+    /// synchronous rounds (round-based algorithms)
+    pub events: u64,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    /// metrics tag
+    pub name: String,
+    /// evaluate every this many events (0 = only at the end)
+    pub eval_every: u64,
+    /// record Γ_t at eval points
+    pub track_gamma: bool,
+}
+
+/// Shared run state visible to every worker.
+struct Shared<'a> {
+    algo: &'a dyn Algorithm,
+    backend: &'a dyn Backend,
+    cost: &'a CostModel,
+    graph: &'a Graph,
+    lr: LrSchedule,
+    events: &'a [Event],
+    nodes: Vec<Mutex<NodeState>>,
+    /// completed-event count per node (the dependency tokens)
+    done: Vec<AtomicU64>,
+    /// global schedule cursor (next unclaimed event index)
+    cursor: AtomicU64,
+    bits: AtomicU64,
+    fallbacks: AtomicU64,
+    /// set when a worker panics so dependency spins stay live
+    abort: AtomicBool,
+    dim: usize,
+    n: usize,
+}
+
+/// Flags `abort` if the owning thread unwinds, so sibling workers spinning
+/// on a dependency from the dead thread exit instead of hanging.
+struct AbortGuard<'a>(&'a AtomicBool);
+
+impl Drop for AbortGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Execute the run's schedule in program order on the calling thread — the
+/// discrete-event reference executor (`--executor serial`).
+pub fn run_serial(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+) -> RunMetrics {
+    run_schedule(algo, backend, spec, graph, cost, 1, "serial")
+}
+
+/// Drain the identical schedule on `threads` shared-memory worker threads
+/// (`--executor parallel --threads K`). Metrics are bit-identical to
+/// [`run_serial`] at any thread count.
+pub fn run_parallel(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+    threads: usize,
+) -> RunMetrics {
+    run_schedule(algo, backend, spec, graph, cost, threads.max(1), "parallel")
+}
+
+fn run_schedule(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+    threads: usize,
+    label: &str,
+) -> RunMetrics {
+    assert!(spec.n >= 1, "need at least one node");
+    assert_eq!(spec.n, graph.n(), "spec n must match graph");
+    let schedule = {
+        let mut srng = Pcg64::stream(spec.seed, STREAM_SCHEDULE);
+        algo.schedule(spec.n, spec.events, graph, &mut srng)
+    };
+    let dim = backend.dim();
+    let (p0, m0) = backend.init();
+    assert_eq!(p0.len(), dim, "backend dim() must match its init vector");
+    let nodes: Vec<Mutex<NodeState>> = (0..spec.n)
+        .map(|k| {
+            Mutex::new(NodeState::new(
+                p0.clone(),
+                m0.clone(),
+                Pcg64::stream(spec.seed, STREAM_NODE_BASE + k as u64),
+            ))
+        })
+        .collect();
+    let sh = Shared {
+        algo,
+        backend,
+        cost,
+        graph,
+        lr: spec.lr,
+        events: &schedule.events,
+        nodes,
+        done: (0..spec.n).map(|_| AtomicU64::new(0)).collect(),
+        cursor: AtomicU64::new(0),
+        bits: AtomicU64::new(0),
+        fallbacks: AtomicU64::new(0),
+        abort: AtomicBool::new(false),
+        dim,
+        n: spec.n,
+    };
+    let mut eval_rng = Pcg64::stream(spec.seed, STREAM_EVAL);
+    let mut m = RunMetrics::new(&spec.name);
+    let total = schedule.events.len() as u64;
+    for end in milestones(total, spec.eval_every) {
+        if threads == 1 {
+            chunk_serial(&sh, end);
+        } else {
+            chunk_parallel(&sh, end, threads);
+        }
+        record_point(&sh, end, &mut eval_rng, spec.track_gamma, &mut m);
+    }
+    let Shared { nodes, bits, fallbacks, .. } = sh;
+    let states: Vec<NodeState> = nodes
+        .into_iter()
+        .map(|n| n.into_inner().expect("node lock poisoned"))
+        .collect();
+    let clocks = NodeClocks::from_parts(
+        states.iter().map(|s| s.time).collect(),
+        states.iter().map(|s| s.compute).sum(),
+        states.iter().map(|s| s.comm_time).sum(),
+    );
+    m.interactions = total;
+    m.local_steps = states.iter().map(|s| s.steps).sum();
+    m.sim_time = clocks.max_time();
+    m.compute_time_total = clocks.compute_total;
+    m.comm_time_total = clocks.comm_total;
+    m.total_bits = bits.into_inner();
+    m.quant_fallbacks = fallbacks.into_inner();
+    m.epochs = states
+        .iter()
+        .enumerate()
+        .map(|(i, s)| backend.epochs(i, s.steps))
+        .sum::<f64>()
+        / spec.n as f64;
+    m.executor = label.to_string();
+    m.threads = threads;
+    if let Some(p) = m.curve.last() {
+        m.final_eval_loss = p.eval_loss;
+        m.final_eval_acc = p.eval_acc;
+    }
+    m
+}
+
+/// Chunk ends: every multiple of `eval_every` in `(0, total)`, then `total`.
+fn milestones(total: u64, eval_every: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    if total == 0 {
+        return v;
+    }
+    if eval_every > 0 {
+        let mut next = eval_every;
+        while next < total {
+            v.push(next);
+            next += eval_every;
+        }
+    }
+    v.push(total);
+    v
+}
+
+/// Drain schedule indices `[cursor, end)` on `threads` scoped workers.
+fn chunk_parallel(sh: &Shared<'_>, end: u64, threads: usize) {
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let _guard = AbortGuard(&sh.abort);
+                loop {
+                    let t = sh.cursor.fetch_add(1, Ordering::Relaxed);
+                    if t >= end {
+                        break;
+                    }
+                    let ev = &sh.events[t as usize];
+                    if !wait_deps(sh, ev) {
+                        break;
+                    }
+                    execute_event(sh, t, ev);
+                    // this worker is the unique owner of all participants
+                    for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
+                        sh.done[k].store(s + 1, Ordering::Release);
+                    }
+                }
+            });
+        }
+    });
+    // indices over-claimed past `end` were abandoned; hand them to the
+    // next chunk
+    sh.cursor.store(end, Ordering::Relaxed);
+}
+
+/// The single-thread path: plain program order, no spawning.
+fn chunk_serial(sh: &Shared<'_>, end: u64) {
+    loop {
+        let t = sh.cursor.load(Ordering::Relaxed);
+        if t >= end {
+            break;
+        }
+        sh.cursor.store(t + 1, Ordering::Relaxed);
+        let ev = &sh.events[t as usize];
+        // program order trivially satisfies the dependency order
+        execute_event(sh, t, ev);
+        for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
+            sh.done[k].store(s + 1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Spin until every participant of `ev` has completed all earlier scheduled
+/// events. Returns false if the run is aborting (sibling panic).
+fn wait_deps(sh: &Shared<'_>, ev: &Event) -> bool {
+    let mut spins = 0u32;
+    loop {
+        let ready = ev
+            .nodes
+            .iter()
+            .zip(&ev.seq)
+            .all(|(&k, &s)| sh.done[k].load(Ordering::Acquire) == s);
+        if ready {
+            return true;
+        }
+        if sh.abort.load(Ordering::Relaxed) {
+            return false;
+        }
+        spins = spins.wrapping_add(1);
+        if spins % 64 == 0 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Execute one scheduled event: take the participants' locks in ascending
+/// node order, hand exclusive borrows to the algorithm in role order,
+/// merge the wire accounting.
+fn execute_event(sh: &Shared<'_>, t: u64, ev: &Event) {
+    let ctx = StepCtx {
+        backend: sh.backend,
+        cost: sh.cost,
+        graph: sh.graph,
+        // the paper numbers interactions from 1
+        lr: sh.lr.at(t + 1),
+        dim: sh.dim,
+        n: sh.n,
+    };
+    let outcome = if ev.nodes.len() == 2 {
+        // gossip fast path: two ordered locks, no allocation
+        let (i, j) = (ev.nodes[0], ev.nodes[1]);
+        let (lo, hi) = (i.min(j), i.max(j));
+        let mut g_lo = sh.nodes[lo].lock().expect("node lock poisoned");
+        let mut g_hi = sh.nodes[hi].lock().expect("node lock poisoned");
+        let (a, b) = if lo == i {
+            (&mut *g_lo, &mut *g_hi)
+        } else {
+            (&mut *g_hi, &mut *g_lo)
+        };
+        let mut parts = [a, b];
+        sh.algo.interact(t, ev, &mut parts, &ctx)
+    } else {
+        // general path: lock all participants in ascending node order,
+        // then re-borrow in the event's role order
+        let mut order: Vec<usize> = ev.nodes.clone();
+        order.sort_unstable();
+        let mut guards: Vec<MutexGuard<'_, NodeState>> = order
+            .iter()
+            .map(|&k| sh.nodes[k].lock().expect("node lock poisoned"))
+            .collect();
+        let mut slots: Vec<Option<&mut NodeState>> =
+            guards.iter_mut().map(|g| Some(&mut **g)).collect();
+        let mut parts: Vec<&mut NodeState> = ev
+            .nodes
+            .iter()
+            .map(|&k| {
+                let rank = order.binary_search(&k).expect("participant not locked");
+                slots[rank].take().expect("duplicate participant")
+            })
+            .collect();
+        sh.algo.interact(t, ev, &mut parts, &ctx)
+    };
+    if outcome.bits > 0 {
+        sh.bits.fetch_add(outcome.bits, Ordering::Relaxed);
+    }
+    if outcome.fallbacks > 0 {
+        sh.fallbacks.fetch_add(outcome.fallbacks, Ordering::Relaxed);
+    }
+}
+
+/// Record a curve point at a chunk barrier (no workers active): consensus
+/// and individual models from the algorithm, Γ_t on demand, per-node f64
+/// reductions in node-index order.
+fn record_point(
+    sh: &Shared<'_>,
+    t: u64,
+    eval_rng: &mut Pcg64,
+    track_gamma: bool,
+    m: &mut RunMetrics,
+) {
+    let guards: Vec<MutexGuard<'_, NodeState>> =
+        sh.nodes.iter().map(|n| n.lock().expect("node lock poisoned")).collect();
+    let states: Vec<&NodeState> = guards.iter().map(|g| &**g).collect();
+    let n = states.len();
+    let pick = eval_rng.below_usize(n);
+    let models = sh.algo.round_metrics(&states, pick);
+    let ev = sh.backend.eval(&models.consensus);
+    let ind = sh.backend.eval(&models.individual);
+    m.final_model = models.consensus;
+    let gamma = if track_gamma {
+        let live: Vec<Vec<f32>> = states.iter().map(|s| s.params.clone()).collect();
+        gamma_potential(&live)
+    } else {
+        f64::NAN
+    };
+    let finite: Vec<f64> =
+        states.iter().map(|s| s.last_loss).filter(|l| l.is_finite()).collect();
+    let train_loss = if finite.is_empty() {
+        f64::NAN
+    } else {
+        finite.iter().sum::<f64>() / finite.len() as f64
+    };
+    let sim_time = states.iter().map(|s| s.time).fold(0.0, f64::max);
+    let epochs = states
+        .iter()
+        .enumerate()
+        .map(|(i, s)| sh.backend.epochs(i, s.steps))
+        .sum::<f64>()
+        / n as f64;
+    m.push(CurvePoint {
+        t,
+        parallel_time: sh.algo.parallel_time(t, n),
+        sim_time,
+        epochs,
+        train_loss,
+        eval_loss: ev.loss,
+        eval_acc: ev.accuracy,
+        indiv_loss: ind.loss,
+        gamma,
+        bits: sh.bits.load(Ordering::Relaxed),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AveragingMode, LocalSteps, SwarmSgd};
+    use crate::grad::QuadraticOracle;
+    use crate::topology::Topology;
+
+    fn quad(n: usize, dim: usize, sigma: f64) -> QuadraticOracle {
+        QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 11)
+    }
+
+    fn spec(n: usize, t: u64) -> RunSpec {
+        RunSpec {
+            n,
+            events: t,
+            lr: LrSchedule::Constant(0.05),
+            seed: 9,
+            name: "par".into(),
+            eval_every: 100,
+            track_gamma: true,
+        }
+    }
+
+    fn graph(n: usize) -> Graph {
+        let mut rng = Pcg64::seed(5);
+        Graph::build(Topology::Complete, n, &mut rng)
+    }
+
+    fn swarm(mode: AveragingMode) -> SwarmSgd {
+        SwarmSgd { local_steps: LocalSteps::Fixed(2), mode }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_sequenced() {
+        let algo = swarm(AveragingMode::NonBlocking);
+        let g = graph(8);
+        let mut r1 = Pcg64::stream(9, STREAM_SCHEDULE);
+        let mut r2 = Pcg64::stream(9, STREAM_SCHEDULE);
+        let a = algo.schedule(8, 500, &g, &mut r1);
+        let b = algo.schedule(8, 500, &g, &mut r2);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.per_node, b.per_node);
+        // seq tokens count each node's events in order
+        let mut seen = vec![0u64; 8];
+        for ev in &a.events {
+            assert_ne!(ev.nodes[0], ev.nodes[1]);
+            for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
+                assert_eq!(s, seen[k]);
+                seen[k] += 1;
+            }
+        }
+        assert_eq!(seen, a.per_node);
+        assert_eq!(seen.iter().sum::<u64>(), 1000);
+    }
+
+    fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics) {
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (pa, pb) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(pa.t, pb.t);
+            assert_eq!(pa.eval_loss.to_bits(), pb.eval_loss.to_bits(), "t={}", pa.t);
+            assert_eq!(pa.train_loss.to_bits(), pb.train_loss.to_bits());
+            assert_eq!(pa.indiv_loss.to_bits(), pb.indiv_loss.to_bits());
+            assert_eq!(pa.gamma.to_bits(), pb.gamma.to_bits());
+            assert_eq!(pa.sim_time.to_bits(), pb.sim_time.to_bits());
+            assert_eq!(pa.bits, pb.bits);
+        }
+        assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits());
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.quant_fallbacks, b.quant_fallbacks);
+        assert_eq!(a.local_steps, b.local_steps);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(a.compute_time_total.to_bits(), b.compute_time_total.to_bits());
+        assert_eq!(a.comm_time_total.to_bits(), b.comm_time_total.to_bits());
+    }
+
+    #[test]
+    fn parallel_matches_serial_all_swarm_modes() {
+        let n = 8;
+        for mode in [
+            AveragingMode::NonBlocking,
+            AveragingMode::Blocking,
+            AveragingMode::Quantized { bits: 8, eps: 1e-2 },
+        ] {
+            let algo = swarm(mode);
+            let g = graph(n);
+            let backend = quad(n, 16, 0.1);
+            let cost = CostModel::deterministic(0.4);
+            let s = spec(n, 400);
+            let serial = run_serial(&algo, &backend, &s, &g, &cost);
+            for threads in [2, 4] {
+                let par = run_parallel(&algo, &backend, &s, &g, &cost, threads);
+                assert_bit_identical(&serial, &par);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_converges_on_quadratic() {
+        let n = 8;
+        let backend = quad(n, 16, 0.1);
+        let f_star = backend.f_star();
+        let gap0 = {
+            let (p, _) = backend.init();
+            backend.eval(&p).loss - f_star
+        };
+        let algo = swarm(AveragingMode::NonBlocking);
+        let g = graph(n);
+        let cost = CostModel::deterministic(0.4);
+        let m = run_serial(&algo, &backend, &spec(n, 800), &g, &cost);
+        let gap = (m.final_eval_loss - f_star) / gap0;
+        assert!(gap < 0.1, "normalized gap {gap}");
+        assert_eq!(m.interactions, 800);
+        assert_eq!(m.local_steps, 800 * 2 * 2);
+        assert!(m.sim_time > 0.0);
+        assert_eq!(m.executor, "serial");
+    }
+
+    #[test]
+    fn milestones_cadence() {
+        assert_eq!(milestones(10, 0), vec![10]);
+        assert_eq!(milestones(10, 4), vec![4, 8, 10]);
+        assert_eq!(milestones(8, 4), vec![4, 8]);
+        assert!(milestones(0, 4).is_empty());
+    }
+}

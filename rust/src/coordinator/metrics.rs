@@ -44,12 +44,13 @@ pub struct RunMetrics {
     /// final evaluation
     pub final_eval_loss: f64,
     pub final_eval_acc: f64,
+    /// consensus (deployable) model at the last evaluation point
+    pub final_model: Vec<f32>,
     /// mean data epochs per agent at the end
     pub epochs: f64,
-    /// which executor produced this run ("" = legacy serial runners)
+    /// which executor produced this run ("serial" | "parallel")
     pub executor: String,
-    /// worker threads of the schedule executor (0 = not applicable:
-    /// SwarmRunner / Poisson / baselines)
+    /// worker threads the executor ran with (serial runs report 1)
     pub threads: usize,
 }
 
@@ -72,22 +73,34 @@ impl RunMetrics {
         self.comm_time_total / self.local_steps as f64
     }
 
-    /// Best (lowest) eval loss seen along the curve.
+    /// Best (lowest) eval loss seen along the curve. NaN entries are
+    /// skipped (a NaN operand would poison a plain min fold); returns NaN
+    /// only when no finite point exists.
     pub fn best_eval_loss(&self) -> f64 {
-        self.curve
+        let best = self
+            .curve
             .iter()
             .map(|p| p.eval_loss)
             .filter(|l| l.is_finite())
-            .fold(f64::INFINITY, f64::min)
+            .fold(f64::INFINITY, f64::min);
+        if best.is_finite() {
+            best
+        } else {
+            f64::NAN
+        }
     }
 
-    /// Best accuracy seen along the curve.
+    /// Best accuracy seen along the curve. The quadratic oracle emits NaN
+    /// accuracy (no accuracy notion); those entries must not poison the max
+    /// fold. Returns NaN when the curve has no finite accuracy at all.
     pub fn best_eval_acc(&self) -> f64 {
-        self.curve
-            .iter()
-            .map(|p| p.eval_acc)
-            .filter(|a| a.is_finite())
-            .fold(0.0, f64::max)
+        let mut best = f64::NAN;
+        for a in self.curve.iter().map(|p| p.eval_acc).filter(|a| a.is_finite()) {
+            if best.is_nan() || a > best {
+                best = a;
+            }
+        }
+        best
     }
 
     /// First simulated time at which eval loss ≤ target (None if never).
@@ -137,6 +150,35 @@ mod tests {
         assert_eq!(m.time_to_loss(0.6), Some(1.0));
         assert_eq!(m.time_to_loss(0.1), None);
         assert!((m.best_eval_acc() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_eval_entries_do_not_poison_best_folds() {
+        // regression: the quadratic oracle emits NaN accuracy for every
+        // point (and a curve can contain NaN losses from divergent runs);
+        // best_* must skip them instead of folding NaN through min/max
+        let mut m = RunMetrics::new("nan");
+        let mut a = pt(0, 1.0, 0.0);
+        a.eval_acc = f64::NAN;
+        let mut b = pt(10, f64::NAN, 1.0);
+        b.eval_acc = 0.75;
+        let mut c = pt(20, 0.4, 2.0);
+        c.eval_acc = f64::NAN;
+        m.push(a);
+        m.push(b);
+        m.push(c);
+        assert_eq!(m.best_eval_loss(), 0.4);
+        assert_eq!(m.best_eval_acc(), 0.75);
+
+        // all-NaN curves report NaN, not ±∞/0.0 sentinels
+        let mut all_nan = RunMetrics::new("allnan");
+        let mut p = pt(0, f64::NAN, 0.0);
+        p.eval_acc = f64::NAN;
+        all_nan.push(p);
+        assert!(all_nan.best_eval_loss().is_nan());
+        assert!(all_nan.best_eval_acc().is_nan());
+        assert!(RunMetrics::new("empty").best_eval_loss().is_nan());
+        assert!(RunMetrics::new("empty").best_eval_acc().is_nan());
     }
 
     #[test]

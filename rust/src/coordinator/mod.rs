@@ -1,41 +1,47 @@
-//! L3 — the SwarmSGD coordinator (the paper's system contribution).
+//! L3 — the coordinator: one engine, every algorithm (PR 2's redesign).
 //!
-//! * [`swarm`] — Algorithm 1 (blocking), Algorithm 2 (non-blocking,
-//!   Appendix F) and the quantized variant (Appendix G), with fixed or
-//!   geometric local-step counts.
+//! The module is organized as an **Algorithm × Backend × Executor** matrix:
+//!
+//! * [`algorithm`] — the object-safe [`Algorithm`] trait ( `schedule` /
+//!   `interact` / `round_metrics`), [`NodeState`], the pre-drawn
+//!   [`InteractionSchedule`], and the [`make_algorithm`] factory behind the
+//!   CLI's `--algorithm` selector.
+//! * [`swarm`] — SwarmSGD: Algorithm 1 (blocking), Algorithm 2
+//!   (non-blocking, Appendix F) and the quantized variant (Appendix G),
+//!   with fixed or geometric local-step counts.
+//! * [`poisson`] — the same process scheduled by literal Poisson clocks
+//!   (paper §2's equivalence, testable on the schedule).
 //! * [`baselines`] — the comparison systems of §5: AD-PSGD, D-PSGD, SGP,
 //!   local SGD, and (large-batch) allreduce SGD.
-//! * [`engine`] — per-node simulated clocks + the event accounting that
-//!   turns the logical interaction sequence into the paper's time axes
-//!   (DESIGN.md §2: the discrete-event stand-in for Piz Daint).
-//! * [`cluster`] — shared agent state (live/communication model copies) and
-//!   pairwise averaging primitives.
+//! * [`executor`] — [`run_serial`] (program-order reference) and
+//!   [`run_parallel`] (shared-memory worker threads), generic over
+//!   `&dyn Algorithm × &dyn Backend`, with the PR-1 replay-determinism
+//!   contract extended to every algorithm.
+//! * [`cluster`] — pairwise averaging primitives shared by the algorithms.
+//! * [`engine`] — per-node simulated clocks merged into the paper's time
+//!   axes.
 //! * [`metrics`] — loss curves, Γ_t, bits-on-wire, comm/compute splits.
-//! * [`parallel`] — the shared-memory multi-threaded executor: per-node
-//!   locks + lock-free communication slots, with a deterministic schedule
-//!   that makes any parallel run serially replayable bit-for-bit.
 
+mod algorithm;
 pub mod baselines;
 mod cluster;
 mod engine;
+mod executor;
 mod metrics;
-mod parallel;
 mod poisson;
 mod swarm;
 
-pub use cluster::{
-    average_into_both, midpoint, nonblocking_update, quantized_transfer, Agent, Cluster,
+pub use algorithm::{
+    barrier_all, local_phase, make_algorithm, mean_model, mean_params, pair_at, step_once,
+    AlgoOptions, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, RoundModels,
+    StepCtx, ALGORITHM_NAMES,
 };
+pub use cluster::{average_into_both, midpoint, nonblocking_update, quantized_transfer};
 pub use engine::NodeClocks;
+pub use executor::{run_parallel, run_serial, RunSpec};
 pub use metrics::{CurvePoint, RunMetrics};
-pub use parallel::{run_parallel, run_replay_serial, Interaction, Schedule};
-pub use poisson::PoissonRunner;
-pub use swarm::{AveragingMode, LocalSteps, SwarmConfig, SwarmRunner};
-
-use crate::backend::TrainBackend;
-use crate::netmodel::CostModel;
-use crate::rngx::Pcg64;
-use crate::topology::Graph;
+pub use poisson::PoissonSwarm;
+pub use swarm::{AveragingMode, LocalSteps, SwarmSgd};
 
 /// Learning-rate schedule (paper §5: identical to sequential SGD per model;
 /// annealed at 1/3 and 2/3 of training for the vision recipes).
@@ -65,18 +71,6 @@ impl LrSchedule {
             LrSchedule::Theory { n, t } => (n as f64 / (t as f64).sqrt()) as f32,
         }
     }
-}
-
-/// Everything a runner needs, bundled to keep signatures sane.
-pub struct RunContext<'a> {
-    pub backend: &'a mut dyn TrainBackend,
-    pub graph: &'a Graph,
-    pub cost: &'a CostModel,
-    pub rng: &'a mut Pcg64,
-    /// evaluate the mean model every this many interactions (0 = never)
-    pub eval_every: u64,
-    /// record Γ_t at eval points
-    pub track_gamma: bool,
 }
 
 #[cfg(test)]

@@ -1,190 +1,130 @@
-//! Event-driven Poisson-clock runner — the paper's §2 model states that
-//! uniform random edge sampling is equivalent to "random times given by a
-//! clock of Poisson rate" per node (the asynchronous gossip model of
-//! Boyd et al. [10]). This runner implements the Poisson-clock semantics
-//! *literally* with an event queue (each node rings at rate 1 and wakes a
-//! uniform neighbor), so the equivalence is testable rather than assumed:
-//! the induced edge distribution must be uniform on E for regular graphs,
-//! and training results must statistically match the edge-sampling runner.
+//! Poisson-clock scheduling — the paper's §2 model states that uniform
+//! random edge sampling is equivalent to "random times given by a clock of
+//! Poisson rate" per node (the asynchronous gossip model of Boyd et al.
+//! [10]).
+//!
+//! Under the `Algorithm` API this is purely a *scheduling policy*: the
+//! event queue semantics (each node rings at rate 1 and wakes a uniform
+//! neighbor) live in `PoissonSwarm`'s `schedule`, while the interaction
+//! body is delegated verbatim to [`SwarmSgd`]. The equivalence is therefore
+//! testable on the schedule itself — the induced edge distribution must be
+//! uniform on E for regular graphs — and training results must
+//! statistically match the edge-sampling scheduler.
 
-use super::cluster::Cluster;
-use super::engine::NodeClocks;
-use super::metrics::{CurvePoint, RunMetrics};
-use super::swarm::{LocalSteps, SwarmConfig};
-use super::RunContext;
+use super::algorithm::{Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx};
+use super::swarm::{AveragingMode, LocalSteps, SwarmSgd};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// f64 ordered for the event heap.
+/// f64-ordered entry for the clock heap.
 #[derive(PartialEq)]
-struct Event {
+struct Ring {
     at: f64,
     node: usize,
 }
 
-impl Eq for Event {}
-impl PartialOrd for Event {
+impl Eq for Ring {}
+impl PartialOrd for Ring {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for Event {
+impl Ord for Ring {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.at.partial_cmp(&other.at).unwrap_or(std::cmp::Ordering::Equal)
     }
 }
 
-/// Poisson-clock SwarmSGD (non-blocking averaging only — the natural pair
-/// for asynchronous clocks). Interactions stop after `cfg.interactions`.
-pub struct PoissonRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: SwarmConfig,
-    /// per-edge interaction counts (for the equivalence test)
-    pub edge_counts: std::collections::HashMap<(usize, usize), u64>,
+/// SwarmSGD driven by literal Poisson clocks instead of uniform edge draws.
+#[derive(Clone, Copy, Debug)]
+pub struct PoissonSwarm {
+    inner: SwarmSgd,
 }
 
-impl PoissonRunner {
-    pub fn new(cfg: SwarmConfig, ctx: &mut RunContext) -> Self {
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        Self {
-            clocks: NodeClocks::new(cfg.n),
-            cluster,
-            cfg,
-            edge_counts: std::collections::HashMap::new(),
-        }
+impl PoissonSwarm {
+    pub fn new(local_steps: LocalSteps, mode: AveragingMode) -> Self {
+        Self { inner: SwarmSgd { local_steps, mode } }
+    }
+}
+
+impl Algorithm for PoissonSwarm {
+    fn name(&self) -> &'static str {
+        "poisson"
     }
 
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let n = self.cfg.n;
-        let d = self.cluster.dim;
-        let full_bytes = ctx.cost.wire_bytes(d);
-        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        assert!(n >= 2, "gossip needs n >= 2");
+        let mut s = InteractionSchedule::new(n);
+        let mut heap: BinaryHeap<Reverse<Ring>> = BinaryHeap::new();
         // every node's clock rings at rate 1 (arbitrary time unit)
         for node in 0..n {
-            let dt = ctx.rng.exponential(1.0);
-            heap.push(Reverse(Event { at: dt, node }));
+            let dt = rng.exponential(1.0);
+            heap.push(Reverse(Ring { at: dt, node }));
         }
-        let mut t = 0u64;
-        let mut scratch_i = vec![0.0f32; d];
-        let mut scratch_j = vec![0.0f32; d];
-        while t < self.cfg.interactions {
-            let Reverse(Event { at, node: i }) = heap.pop().expect("heap never empty");
+        for _ in 0..events {
+            let Reverse(Ring { at, node: i }) = heap.pop().expect("heap never empty");
             // initiator wakes and picks a uniform random neighbor
-            let j = ctx.graph.sample_neighbor(i, ctx.rng);
-            t += 1;
-            let key = (i.min(j), i.max(j));
-            *self.edge_counts.entry(key).or_insert(0) += 1;
-            let lr = self.cfg.lr.at(t);
-            let (hi, hj) = match self.cfg.local_steps {
-                LocalSteps::Fixed(h) => (h, h),
-                LocalSteps::Geometric(h) => (ctx.rng.geometric(h), ctx.rng.geometric(h)),
-            };
-            // local phases
-            scratch_i.copy_from_slice(&self.cluster.agents[i].params);
-            scratch_j.copy_from_slice(&self.cluster.agents[j].params);
-            for (node, h) in [(i, hi), (j, hj)] {
-                let ag = &mut self.cluster.agents[node];
-                ag.last_loss = ctx.backend.step_burst(node, &mut ag.params, &mut ag.mom, lr, h);
-                ag.steps += h;
-                let mut comp = 0.0;
-                for _ in 0..h {
-                    comp += ctx.cost.compute_time(&mut ag.rng);
-                }
-                self.clocks.charge_compute(node, comp);
-            }
-            // non-blocking averaging (Appendix F), same update as SwarmRunner
-            let comm_i = self.cluster.agents[i].comm.clone();
-            let comm_j = self.cluster.agents[j].comm.clone();
-            for (node, s, inc) in [(i, &scratch_i, &comm_j), (j, &scratch_j, &comm_i)] {
-                let a = &mut self.cluster.agents[node];
-                super::cluster::nonblocking_update(&mut a.params, &mut a.comm, s, inc);
-                a.interactions += 1;
-            }
-            self.clocks.charge_comm(i, ctx.cost.exchange_time(full_bytes));
-            m.total_bits += 2 * 8 * full_bytes;
+            let j = graph.sample_neighbor(i, rng);
+            let hi = self.inner.local_steps.sample(rng);
+            let hj = self.inner.local_steps.sample(rng);
+            let seed = rng.next_u64();
+            s.push(vec![i, j], vec![hi, hj], seed);
             // re-arm i's Poisson clock
-            let dt = ctx.rng.exponential(1.0);
-            heap.push(Reverse(Event { at: at + dt, node: i }));
-            // metrics
-            if (ctx.eval_every > 0 && t % ctx.eval_every == 0) || t == self.cfg.interactions {
-                let mu = self.cluster.mean_model();
-                let ev = ctx.backend.eval(&mu);
-                let gamma = if ctx.track_gamma { self.cluster.gamma() } else { f64::NAN };
-                m.push(CurvePoint {
-                    t,
-                    parallel_time: t as f64 / n as f64,
-                    sim_time: self.clocks.max_time(),
-                    epochs: 0.0,
-                    train_loss: self.cluster.mean_train_loss(),
-                    eval_loss: ev.loss,
-                    eval_acc: ev.accuracy,
-                    indiv_loss: f64::NAN,
-                    gamma,
-                    bits: m.total_bits,
-                });
-            }
+            let dt = rng.exponential(1.0);
+            heap.push(Reverse(Ring { at: at + dt, node: i }));
         }
-        m.interactions = self.cfg.interactions;
-        m.local_steps = self.cluster.total_steps();
-        m.sim_time = self.clocks.max_time();
-        m.compute_time_total = self.clocks.compute_total;
-        m.comm_time_total = self.clocks.comm_total;
-        if let Some(p) = m.curve.last() {
-            m.final_eval_loss = p.eval_loss;
-            m.final_eval_acc = p.eval_acc;
-        }
-        m
+        s
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        self.inner.interact_pair(ev, parts, ctx)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{AveragingMode, LrSchedule};
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec, SwarmSgd};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
-    fn run_poisson(t: u64) -> (RunMetrics, PoissonRunner) {
-        let n = 8;
-        let mut backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
-        let mut rng = Pcg64::seed(5);
-        let graph = Graph::build(Topology::Complete, n, &mut rng);
-        let cost = CostModel::deterministic(0.4);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: (t / 8).max(1),
-            track_gamma: true,
-        };
-        let cfg = SwarmConfig {
-            n,
-            local_steps: LocalSteps::Fixed(2),
-            mode: AveragingMode::NonBlocking,
-            lr: LrSchedule::Constant(0.05),
-            interactions: t,
-            seed: 1,
-            name: "poisson".into(),
-        };
-        let mut r = PoissonRunner::new(cfg, &mut ctx);
-        let m = r.run(&mut ctx);
-        (m, r)
+    fn algo() -> PoissonSwarm {
+        PoissonSwarm::new(LocalSteps::Fixed(2), AveragingMode::NonBlocking)
     }
 
     #[test]
     fn poisson_clock_induces_uniform_edges() {
         // paper §2: Poisson clocks + uniform neighbor choice on a regular
-        // graph ≡ uniform edge sampling. χ²-ish check over K8's 28 edges.
-        let (_, r) = run_poisson(28_000);
-        let counts: Vec<u64> = r.edge_counts.values().copied().collect();
+        // graph ≡ uniform edge sampling. χ²-ish check over K8's 28 edges,
+        // applied directly to the pre-drawn schedule.
+        let n = 8;
+        let mut rng = Pcg64::seed(5);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        let mut srng = Pcg64::stream(1, 77);
+        let sched = algo().schedule(n, 28_000, &graph, &mut srng);
+        let mut counts = std::collections::HashMap::new();
+        for ev in &sched.events {
+            let (i, j) = (ev.nodes[0], ev.nodes[1]);
+            *counts.entry((i.min(j), i.max(j))).or_insert(0u64) += 1;
+        }
         assert_eq!(counts.len(), 28, "all edges must fire");
         let mean = 1000.0;
-        for &c in &counts {
+        for &c in counts.values() {
             assert!(
                 (c as f64 - mean).abs() < 5.0 * mean.sqrt() + 30.0,
                 "edge count {c} far from uniform mean {mean}"
@@ -194,34 +134,29 @@ mod tests {
 
     #[test]
     fn poisson_converges_like_edge_sampling() {
-        let (m, _) = run_poisson(1200);
-        // same oracle/config via the edge-sampling SwarmRunner
         let n = 8;
-        let mut backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
+        let backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
         let f_star = backend.f_star();
         let mut rng = Pcg64::seed(5);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.4);
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 0,
+        let spec = RunSpec {
+            n,
+            events: 1200,
+            lr: LrSchedule::Constant(0.05),
+            seed: 1,
+            name: "poisson".into(),
+            eval_every: 150,
             track_gamma: false,
         };
-        let cfg = SwarmConfig {
-            n,
+        let mp = run_serial(&algo(), &backend, &spec, &graph, &cost);
+        let edge = SwarmSgd {
             local_steps: LocalSteps::Fixed(2),
             mode: AveragingMode::NonBlocking,
-            lr: LrSchedule::Constant(0.05),
-            interactions: 1200,
-            seed: 1,
-            name: "edge".into(),
         };
-        let edge = crate::coordinator::SwarmRunner::new(cfg, &mut ctx).run(&mut ctx);
-        let gap_p = (m.final_eval_loss - f_star).max(1e-9);
-        let gap_e = (edge.final_eval_loss - f_star).max(1e-9);
+        let me = run_serial(&edge, &backend, &spec, &graph, &cost);
+        let gap_p = (mp.final_eval_loss - f_star).max(1e-9);
+        let gap_e = (me.final_eval_loss - f_star).max(1e-9);
         let ratio = gap_p / gap_e;
         assert!(
             (0.2..5.0).contains(&ratio),

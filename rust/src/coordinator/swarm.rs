@@ -1,5 +1,5 @@
 //! SwarmSGD — Algorithms 1 & 2 and the quantized variant, faithful to the
-//! paper's update rules:
+//! paper's update rules, as an [`Algorithm`] plug-in:
 //!
 //! **Blocking (Alg. 1)**: sample edge (i,j); each endpoint runs `H` local
 //! SGD steps on its live model; both set `X ← (X_i + X_j)/2`.
@@ -21,10 +21,12 @@
 //! Local step counts are fixed (`H`) or geometric with mean `H` — the two
 //! regimes of Theorems 4.2 and 4.1 respectively.
 
-use super::cluster::{nonblocking_update, quantized_transfer, Cluster};
-use super::engine::NodeClocks;
-use super::metrics::{CurvePoint, RunMetrics};
-use super::{LrSchedule, RunContext};
+use super::algorithm::{
+    local_phase, pair, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
+};
+use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
 
 /// Distribution of the number of local SGD steps between interactions.
 #[derive(Clone, Copy, Debug)]
@@ -43,7 +45,7 @@ impl LocalSteps {
         }
     }
 
-    fn sample(&self, rng: &mut crate::rngx::Pcg64) -> u64 {
+    pub(crate) fn sample(&self, rng: &mut Pcg64) -> u64 {
         match *self {
             LocalSteps::Fixed(h) => h,
             LocalSteps::Geometric(h) => rng.geometric(h),
@@ -62,273 +64,176 @@ pub enum AveragingMode {
     Quantized { bits: u32, eps: f32 },
 }
 
-/// Full SwarmSGD run configuration.
-#[derive(Clone, Debug)]
-pub struct SwarmConfig {
-    pub n: usize,
+/// SwarmSGD as an [`Algorithm`]: uniform random edges, `H` local steps per
+/// endpoint, pairwise averaging per the configured mode.
+#[derive(Clone, Copy, Debug)]
+pub struct SwarmSgd {
     pub local_steps: LocalSteps,
     pub mode: AveragingMode,
-    pub lr: LrSchedule,
-    /// total pairwise interactions T
-    pub interactions: u64,
-    pub seed: u64,
-    pub name: String,
 }
 
-impl SwarmConfig {
-    pub fn basic(n: usize, h: u64, lr: f32, interactions: u64) -> Self {
-        Self {
-            n,
-            local_steps: LocalSteps::Fixed(h),
-            mode: AveragingMode::NonBlocking,
-            lr: LrSchedule::Constant(lr),
-            interactions,
-            seed: 0x5EED,
-            name: "swarm".into(),
-        }
-    }
-}
-
-/// Executes SwarmSGD over a [`RunContext`]; owns the agents and clocks.
-pub struct SwarmRunner {
-    pub cluster: Cluster,
-    pub clocks: NodeClocks,
-    cfg: SwarmConfig,
-    // scratch buffers (no allocation on the interaction hot path)
-    scratch_a: Vec<f32>,
-    scratch_b: Vec<f32>,
-    comm_a: Vec<f32>,
-    comm_b: Vec<f32>,
-}
-
-impl SwarmRunner {
-    pub fn new(cfg: SwarmConfig, ctx: &mut RunContext) -> Self {
-        assert_eq!(cfg.n, ctx.graph.n(), "config n must match graph");
-        let cluster = Cluster::init(cfg.n, ctx.backend, cfg.seed);
-        let dim = cluster.dim;
-        Self {
-            clocks: NodeClocks::new(cfg.n),
-            cluster,
-            cfg,
-            scratch_a: vec![0.0; dim],
-            scratch_b: vec![0.0; dim],
-            comm_a: vec![0.0; dim],
-            comm_b: vec![0.0; dim],
-        }
+impl SwarmSgd {
+    pub fn nonblocking(h: u64) -> Self {
+        Self { local_steps: LocalSteps::Fixed(h), mode: AveragingMode::NonBlocking }
     }
 
-    /// Run to completion, returning the metrics record.
-    pub fn run(&mut self, ctx: &mut RunContext) -> RunMetrics {
-        let mut m = RunMetrics::new(&self.cfg.name);
-        let total = self.cfg.interactions;
-        for t in 1..=total {
-            self.interact(ctx, t, &mut m);
-            let at_eval = ctx.eval_every > 0 && t % ctx.eval_every == 0;
-            if at_eval || t == total {
-                self.record_point(ctx, t, &mut m);
-            }
-        }
-        m.interactions = total;
-        m.local_steps = self.cluster.total_steps();
-        m.sim_time = self.clocks.max_time();
-        m.compute_time_total = self.clocks.compute_total;
-        m.comm_time_total = self.clocks.comm_total;
-        m.epochs = self.mean_epochs(ctx);
-        m.executor = "serial".into();
-        if let Some(p) = m.curve.last() {
-            m.final_eval_loss = p.eval_loss;
-            m.final_eval_acc = p.eval_acc;
-        }
-        m
-    }
-
-    fn mean_epochs(&self, ctx: &mut RunContext) -> f64 {
-        (0..self.cfg.n).map(|i| ctx.backend.epochs(i)).sum::<f64>() / self.cfg.n as f64
-    }
-
-    /// One step of the paper's process: sample an edge, run local steps on
-    /// both endpoints, average per the configured mode, charge time.
-    fn interact(&mut self, ctx: &mut RunContext, t: u64, m: &mut RunMetrics) {
-        let (i, j) = ctx.graph.sample_edge(ctx.rng);
-        let lr = self.cfg.lr.at(t);
-        let hi = self.cfg.local_steps.sample(ctx.rng);
-        let hj = self.cfg.local_steps.sample(ctx.rng);
-        let d = self.cluster.dim;
-        let full_bytes = ctx.cost.wire_bytes(d);
-
-        // --- local SGD phases (both endpoints) ---
-        // S_k snapshots for the non-blocking delta
-        self.scratch_a.copy_from_slice(&self.cluster.agents[i].params);
-        self.scratch_b.copy_from_slice(&self.cluster.agents[j].params);
-        let mut comp_i = 0.0;
-        let mut comp_j = 0.0;
-        {
-            let a = &mut self.cluster.agents[i];
-            a.last_loss = ctx.backend.step_burst(i, &mut a.params, &mut a.mom, lr, hi);
-            a.steps += hi;
-            for _ in 0..hi {
-                comp_i += ctx.cost.compute_time(&mut a.rng);
-            }
-        }
-        {
-            let a = &mut self.cluster.agents[j];
-            a.last_loss = ctx.backend.step_burst(j, &mut a.params, &mut a.mom, lr, hj);
-            a.steps += hj;
-            for _ in 0..hj {
-                comp_j += ctx.cost.compute_time(&mut a.rng);
-            }
-        }
-        self.clocks.charge_compute(i, comp_i);
-        self.clocks.charge_compute(j, comp_j);
-
-        // --- averaging phase ---
-        match self.cfg.mode {
+    /// The pairwise interaction body, shared with [`super::PoissonSwarm`]
+    /// (which differs only in how the edge sequence is scheduled).
+    pub(crate) fn interact_pair(
+        &self,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let (ni, nj) = pair(parts);
+        local_phase(ctx, ev.nodes[0], ni, ev.h[0]);
+        local_phase(ctx, ev.nodes[1], nj, ev.h[1]);
+        let full_bytes = ctx.cost.wire_bytes(ctx.dim);
+        let outcome = match self.mode {
             AveragingMode::Blocking => {
-                let (ai, aj) = self.cluster.pair_mut(i, j);
-                super::cluster::average_into_both(&mut ai.params, &mut aj.params);
-                ai.comm.copy_from_slice(&ai.params);
-                aj.comm.copy_from_slice(&aj.params);
-                // both models cross the wire; rendezvous (Alg. 1 blocks)
-                self.clocks.rendezvous(i, j, ctx.cost.exchange_time(full_bytes));
-                m.total_bits += 2 * 8 * full_bytes;
+                average_into_both(&mut ni.params, &mut nj.params);
+                ni.comm.copy_from_slice(&ni.params);
+                nj.comm.copy_from_slice(&nj.params);
+                // rendezvous: both wait for the later endpoint, both pay
+                // the NIC (Alg. 1 blocks)
+                let exch = ctx.cost.exchange_time(full_bytes);
+                let done = ni.time.max(nj.time) + exch;
+                ni.time = done;
+                nj.time = done;
+                ni.comm_time += exch;
+                nj.comm_time += exch;
+                EventOutcome { bits: 2 * 8 * full_bytes, fallbacks: 0 }
             }
-            AveragingMode::NonBlocking => {
-                self.nonblocking_average(i, j, None, ctx, m);
-                // initiator pays the exchange; partner is not delayed
-                self.clocks.charge_comm(i, ctx.cost.exchange_time(full_bytes));
-                m.total_bits += 2 * 8 * full_bytes;
+            mode => {
+                // read both communication copies BEFORE either update
+                ni.inbox.copy_from_slice(&nj.comm);
+                nj.inbox.copy_from_slice(&ni.comm);
+                let quant = match mode {
+                    AveragingMode::Quantized { bits, eps } => Some((bits, eps)),
+                    _ => None,
+                };
+                // event-local randomness: the two one-way quantizer seeds
+                let mut er = Pcg64::seed(ev.seed);
+                let seed_i = er.next_u32(); // for i's incoming (from j)
+                let seed_j = er.next_u32(); // for j's incoming (from i)
+                let mut fallbacks = 0u64;
+                let wire = endpoint_update(ni, quant, seed_i, &mut fallbacks)
+                    + endpoint_update(nj, quant, seed_j, &mut fallbacks);
+                // time/bit accounting: the initiator pays the exchange;
+                // the partner is not delayed (the "nobody waits" property)
+                let (exch, bits) = match quant {
+                    None => (ctx.cost.exchange_time(full_bytes), 2 * 8 * full_bytes),
+                    Some(_) => {
+                        let wire_bits = ctx.cost.scale_bits(wire, ctx.dim);
+                        (ctx.cost.exchange_time(wire_bits.div_ceil(8)), wire_bits)
+                    }
+                };
+                ni.time += exch;
+                ni.comm_time += exch;
+                EventOutcome { bits, fallbacks }
             }
-            AveragingMode::Quantized { bits, eps } => {
-                let q = Some((bits, eps));
-                let raw_bits = self.nonblocking_average(i, j, q, ctx, m);
-                let wire_bits = ctx.cost.scale_bits(raw_bits, d);
-                let bytes = wire_bits.div_ceil(8);
-                self.clocks.charge_comm(i, ctx.cost.exchange_time(bytes));
-                m.total_bits += wire_bits;
-            }
+        };
+        ni.interactions += 1;
+        nj.interactions += 1;
+        outcome
+    }
+}
+
+/// Apply the Appendix-F update to one endpoint: optional lattice decode of
+/// the incoming copy (in `st.inbox`) against the node's snapshot, the
+/// averaging rule, then refresh the communication copy. Returns wire bits
+/// consumed (0 when not quantizing).
+fn endpoint_update(
+    st: &mut NodeState,
+    quant: Option<(u32, f32)>,
+    seed: u32,
+    fallbacks: &mut u64,
+) -> u64 {
+    let mut wire = 0u64;
+    if let Some((bits, eps)) = quant {
+        let tr = quantized_transfer(&st.inbox, &st.snap, eps, bits, seed);
+        wire = tr.bits;
+        if tr.fell_back {
+            *fallbacks += 1;
         }
-        self.cluster.agents[i].interactions += 1;
-        self.cluster.agents[j].interactions += 1;
+        st.inbox.copy_from_slice(&tr.decoded);
+    }
+    nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
+    wire
+}
+
+impl Algorithm for SwarmSgd {
+    fn name(&self) -> &'static str {
+        "swarm"
     }
 
-    /// Appendix-F averaging. `scratch_a`/`scratch_b` hold S_i/S_j on entry.
-    /// Returns total wire bits when quantizing (0 otherwise — the caller
-    /// accounts full precision itself).
-    fn nonblocking_average(
-        &mut self,
-        i: usize,
-        j: usize,
-        quant: Option<(u32, f32)>,
-        _ctx: &mut RunContext,
-        m: &mut RunMetrics,
-    ) -> u64 {
-        let mut wire = 0u64;
-        // read both communication copies BEFORE either write (into scratch —
-        // no allocation on the hot path)
-        self.comm_a.copy_from_slice(&self.cluster.agents[i].comm);
-        self.comm_b.copy_from_slice(&self.cluster.agents[j].comm);
-        let seed_ij = self.cluster.agents[i].rng.next_u32();
-        let seed_ji = self.cluster.agents[j].rng.next_u32();
-
-        // incoming copy for i (from j) and for j (from i), possibly quantized
-        // (yi = comm_a, yj = comm_b)
-        if let Some((bits, eps)) = quant {
-            // receiver's reference is its own snapshot S (closest local
-            // state to the sender under the Γ bound)
-            let ti = quantized_transfer(&self.comm_b, &self.scratch_a, eps, bits, seed_ij);
-            let tj = quantized_transfer(&self.comm_a, &self.scratch_b, eps, bits, seed_ji);
-            wire += ti.bits + tj.bits;
-            m.quant_fallbacks += u64::from(ti.fell_back) + u64::from(tj.fell_back);
-            self.comm_b.copy_from_slice(&ti.decoded);
-            self.comm_a.copy_from_slice(&tj.decoded);
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        assert!(n >= 2, "gossip needs n >= 2");
+        let mut s = InteractionSchedule::new(n);
+        for _ in 0..events {
+            let (i, j) = graph.sample_edge(rng);
+            let hi = self.local_steps.sample(rng);
+            let hj = self.local_steps.sample(rng);
+            let seed = rng.next_u64();
+            s.push(vec![i, j], vec![hi, hj], seed);
         }
-
-        // X_i ← (S_i + inc)/2 + Δ_i ;  comm_i ← (S_i + inc)/2
-        {
-            let a = &mut self.cluster.agents[i];
-            nonblocking_update(&mut a.params, &mut a.comm, &self.scratch_a, &self.comm_b);
-        }
-        {
-            let a = &mut self.cluster.agents[j];
-            nonblocking_update(&mut a.params, &mut a.comm, &self.scratch_b, &self.comm_a);
-        }
-        wire
+        s
     }
 
-    fn record_point(&mut self, ctx: &mut RunContext, t: u64, m: &mut RunMetrics) {
-        let mu = self.cluster.mean_model();
-        let ev = ctx.backend.eval(&mu);
-        // an arbitrary individual model (paper compares μ vs individual)
-        let pick = ctx.rng.below_usize(self.cfg.n);
-        let ind = ctx.backend.eval(&self.cluster.agents[pick].params);
-        let gamma = if ctx.track_gamma { self.cluster.gamma() } else { f64::NAN };
-        m.push(CurvePoint {
-            t,
-            parallel_time: t as f64 / self.cfg.n as f64,
-            sim_time: self.clocks.max_time(),
-            epochs: self.mean_epochs(ctx),
-            train_loss: self.cluster.mean_train_loss(),
-            eval_loss: ev.loss,
-            eval_acc: ev.accuracy,
-            indiv_loss: ind.loss,
-            gamma,
-            bits: m.total_bits,
-        });
-    }
-
-    /// The mean model after training (what gets deployed).
-    pub fn mean_model(&self) -> Vec<f32> {
-        self.cluster.mean_model()
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        self.interact_pair(ev, parts, ctx)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::rngx::Pcg64;
-    use crate::topology::{Graph, Topology};
+    use crate::topology::Topology;
 
-    fn ctx_parts(
-        n: usize,
-    ) -> (QuadraticOracle, Graph, CostModel, Pcg64) {
-        let backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
+    fn graph(n: usize) -> Graph {
         let mut rng = Pcg64::seed(5);
-        let graph = Graph::build(Topology::Complete, n, &mut rng);
-        (backend, graph, CostModel::deterministic(0.4), Pcg64::seed(6))
+        Graph::build(Topology::Complete, n, &mut rng)
     }
 
-    fn run_mode(mode: AveragingMode, h: LocalSteps) -> (RunMetrics, f64) {
-        let n = 8;
-        let (mut backend, graph, cost, mut rng) = ctx_parts(n);
-        // initial suboptimality gap f(x0) − f*
-        let gap0 = {
-            use crate::backend::TrainBackend;
-            let (p, _) = backend.init(0);
-            backend.full_loss(&p) - backend.f_star()
-        };
-        let f_star = backend.f_star();
-        let mut ctx = RunContext {
-            backend: &mut backend,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
-            eval_every: 100,
-            track_gamma: true,
-        };
-        let cfg = SwarmConfig {
+    fn spec(n: usize, t: u64) -> RunSpec {
+        RunSpec {
             n,
-            local_steps: h,
-            mode,
+            events: t,
             lr: LrSchedule::Constant(0.05),
-            interactions: 800,
             seed: 1,
             name: "test".into(),
+            eval_every: 100,
+            track_gamma: true,
+        }
+    }
+
+    fn run_mode(mode: AveragingMode, h: LocalSteps) -> (crate::coordinator::RunMetrics, f64) {
+        let n = 8;
+        let backend = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.1, 11);
+        let f_star = backend.f_star();
+        let gap0 = {
+            use crate::backend::Backend;
+            let (p, _) = backend.init();
+            backend.full_loss(&p) - f_star
         };
-        let mut runner = SwarmRunner::new(cfg, &mut ctx);
-        let m = runner.run(&mut ctx);
-        // return metrics + the normalized final gap (f(μ_T) − f*)/(f(x₀) − f*)
+        let algo = SwarmSgd { local_steps: h, mode };
+        let cost = CostModel::deterministic(0.4);
+        let m = run_serial(&algo, &backend, &spec(n, 800), &graph(n), &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         (m, gap)
     }
@@ -358,35 +263,16 @@ mod tests {
         // larger model so the O(log T) header amortizes (paper: d >> log T)
         let n = 8;
         let run = |mode: AveragingMode| {
-            let mut backend = QuadraticOracle::new(256, n, 1.0, 0.5, 2.0, 0.05, 21);
+            let backend = QuadraticOracle::new(256, n, 1.0, 0.5, 2.0, 0.05, 21);
             let f_star = backend.f_star();
             let gap0 = {
-                use crate::backend::TrainBackend;
-                let (p, _) = backend.init(0);
+                use crate::backend::Backend;
+                let (p, _) = backend.init();
                 backend.full_loss(&p) - f_star
             };
-            let mut rng = Pcg64::seed(9);
-            let graph = Graph::build(Topology::Complete, n, &mut rng);
+            let algo = SwarmSgd { local_steps: LocalSteps::Fixed(2), mode };
             let cost = CostModel::deterministic(0.4);
-            let mut ctx = RunContext {
-                backend: &mut backend,
-                graph: &graph,
-                cost: &cost,
-                rng: &mut rng,
-                eval_every: 200,
-                track_gamma: false,
-            };
-            let cfg = SwarmConfig {
-                n,
-                local_steps: LocalSteps::Fixed(2),
-                mode,
-                lr: LrSchedule::Constant(0.05),
-                interactions: 800,
-                seed: 1,
-                name: "q".into(),
-            };
-            let mut r = SwarmRunner::new(cfg, &mut ctx);
-            let m = r.run(&mut ctx);
+            let m = run_serial(&algo, &backend, &spec(n, 800), &graph(n), &cost);
             ((m.final_eval_loss - f_star) / gap0, m)
         };
         let (gap, mq) = run(AveragingMode::Quantized { bits: 8, eps: 1e-2 });

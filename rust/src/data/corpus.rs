@@ -82,40 +82,23 @@ impl MarkovCorpus {
     }
 }
 
-/// Samples (x, y) next-token windows from a shard of the corpus.
-pub struct TokenBatcher {
-    tokens: Vec<i32>,
-    pub seq: usize,
-    pub batch: usize,
-    rng: Pcg64,
-    /// token windows consumed (for epoch accounting)
-    pub windows_served: u64,
-}
-
-impl TokenBatcher {
-    pub fn new(shard: &[i32], seq: usize, batch: usize, rng: Pcg64) -> Self {
-        assert!(shard.len() > seq + 1, "shard too small for seq={seq}");
-        Self { tokens: shard.to_vec(), seq, batch, rng, windows_served: 0 }
+/// Sample one (x, y) next-token batch of `batch` windows from a token
+/// shard, y shifted by one, drawing window starts from the caller's RNG —
+/// the stateless token-side counterpart of
+/// [`super::draw_batch_indices`], shared so every token backend consumes
+/// node streams identically.
+pub fn draw_token_batch(shard: &[i32], seq: usize, batch: usize, rng: &mut Pcg64) -> Batch {
+    assert!(shard.len() > seq + 1, "shard too small for seq={seq}");
+    // valid window starts are 0..=len-seq-1 (y is shifted by 1)
+    let max_start = shard.len() - seq - 1;
+    let mut x = Vec::with_capacity(batch * seq);
+    let mut y = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let s = rng.below_usize(max_start + 1);
+        x.extend_from_slice(&shard[s..s + seq]);
+        y.extend_from_slice(&shard[s + 1..s + seq + 1]);
     }
-
-    /// One (x, y) batch of `batch` windows, y shifted by one.
-    pub fn next_batch(&mut self) -> Batch {
-        let mut x = Vec::with_capacity(self.batch * self.seq);
-        let mut y = Vec::with_capacity(self.batch * self.seq);
-        let max_start = self.tokens.len() - self.seq - 1;
-        for _ in 0..self.batch {
-            let s = self.rng.below_usize(max_start + 1);
-            x.extend_from_slice(&self.tokens[s..s + self.seq]);
-            y.extend_from_slice(&self.tokens[s + 1..s + self.seq + 1]);
-        }
-        self.windows_served += self.batch as u64;
-        Batch::Tokens { x, y }
-    }
-
-    /// Fraction of the shard consumed, in epochs (windows × seq / len).
-    pub fn epochs(&self) -> f64 {
-        (self.windows_served as f64 * self.seq as f64) / self.tokens.len() as f64
-    }
+    Batch::Tokens { x, y }
 }
 
 #[cfg(test)]
@@ -167,11 +150,11 @@ mod tests {
     }
 
     #[test]
-    fn batcher_shapes_and_shift() {
+    fn token_batch_shapes_and_shift() {
         let mut rng = Pcg64::seed(4);
         let c = MarkovCorpus::generate(16, 5000, 3, &mut rng);
-        let mut b = TokenBatcher::new(&c.tokens, 8, 4, Pcg64::seed(9));
-        let batch = b.next_batch();
+        let mut brng = Pcg64::seed(9);
+        let batch = draw_token_batch(&c.tokens, 8, 4, &mut brng);
         if let Batch::Tokens { x, y } = batch {
             assert_eq!(x.len(), 32);
             assert_eq!(y.len(), 32);
@@ -183,6 +166,12 @@ mod tests {
         } else {
             panic!("expected token batch");
         }
-        assert!(b.epochs() > 0.0);
+        // same stream → same batch (the replay contract at the data layer)
+        let one = draw_token_batch(&c.tokens, 8, 4, &mut Pcg64::seed(9));
+        let two = draw_token_batch(&c.tokens, 8, 4, &mut Pcg64::seed(9));
+        match (one, two) {
+            (Batch::Tokens { x: a, .. }, Batch::Tokens { x: b, .. }) => assert_eq!(a, b),
+            _ => panic!("expected token batches"),
+        }
     }
 }

@@ -4,16 +4,19 @@
 //! (repro band 0/5), so we synthesize workloads with the same *shape*:
 //! labelled vectors (MLP), labelled images from a Gaussian mixture (CNN),
 //! and a Markov-chain token stream with power-law vocabulary (transformer
-//! LM).  Sharding follows the paper's §5 training process: re-shuffle and
-//! partition per epoch (iid), plus the non-iid partitions (by-label,
-//! Dirichlet) that exercise the Theorem 4.2 regime.
+//! LM).  Sharding partitions the data per agent (iid shuffle, plus the
+//! non-iid by-label and Dirichlet partitions that exercise the Theorem 4.2
+//! regime); minibatches are then drawn from a shard via the shared
+//! [`draw_batch_indices`] / [`draw_token_batch`] rules, uniformly with
+//! replacement from the *caller's* RNG — the stateless sampling the
+//! unified backend contract requires for bit-exact replay.
 
 mod corpus;
 mod shard;
 mod synth;
 
-pub use corpus::{MarkovCorpus, TokenBatcher};
-pub use shard::{dirichlet_shards, iid_shards, label_shards, ShardIter};
+pub use corpus::{draw_token_batch, MarkovCorpus};
+pub use shard::{dirichlet_shards, draw_batch_indices, iid_shards, label_shards};
 pub use synth::{GaussianMixture, ImageDataset, VectorDataset};
 
 /// A host-side minibatch, ready to be wrapped into PJRT literals.

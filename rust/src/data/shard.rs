@@ -76,50 +76,16 @@ fn split_even(idx: &[usize], agents: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Cycles through a shard with per-epoch reshuffling (paper §5: "at the
-/// beginning of each epoch, we re-shuffle the dataset").
-pub struct ShardIter {
-    shard: Vec<usize>,
-    pos: usize,
-    rng: Pcg64,
-    pub epochs_done: u64,
-}
-
-impl ShardIter {
-    pub fn new(shard: Vec<usize>, mut rng: Pcg64) -> Self {
-        assert!(!shard.is_empty());
-        let mut s = shard;
-        rng.shuffle(&mut s);
-        Self { shard: s, pos: 0, rng, epochs_done: 0 }
-    }
-
-    /// Next `k` example indices (wrapping + reshuffling at epoch end).
-    pub fn next_indices(&mut self, k: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(k);
-        for _ in 0..k {
-            if self.pos == self.shard.len() {
-                self.rng.shuffle(&mut self.shard);
-                self.pos = 0;
-                self.epochs_done += 1;
-            }
-            out.push(self.shard[self.pos]);
-            self.pos += 1;
-        }
-        out
-    }
-
-    /// Fractional epochs consumed.
-    pub fn epochs(&self) -> f64 {
-        self.epochs_done as f64 + self.pos as f64 / self.shard.len() as f64
-    }
-
-    pub fn len(&self) -> usize {
-        self.shard.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.shard.is_empty()
-    }
+/// Draw one minibatch of example indices from a shard, uniformly with
+/// replacement, consuming exactly `batch` outputs from the caller's RNG.
+///
+/// This is THE batch-selection rule of the unified backend contract: every
+/// oracle and the PJRT path call it (or mirror it for non-index data), so
+/// all backends consume a node's private stream identically — a pillar of
+/// the executors' replay-determinism guarantee.
+pub fn draw_batch_indices(shard: &[usize], batch: usize, rng: &mut Pcg64) -> Vec<usize> {
+    assert!(!shard.is_empty(), "empty shard");
+    (0..batch).map(|_| shard[rng.below_usize(shard.len())]).collect()
 }
 
 #[cfg(test)]
@@ -189,16 +155,19 @@ mod tests {
     }
 
     #[test]
-    fn shard_iter_visits_everything_each_epoch() {
-        let it_shard: Vec<usize> = (0..10).collect();
-        let mut it = ShardIter::new(it_shard, Pcg64::seed(4));
-        let first: Vec<usize> = it.next_indices(10);
-        let mut sorted = first.clone();
-        sorted.sort_unstable();
-        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
-        assert_eq!(it.epochs_done, 0);
-        it.next_indices(1);
-        assert_eq!(it.epochs_done, 1);
-        assert!(it.epochs() > 1.0);
+    fn draw_batch_indices_is_uniform_and_replayable() {
+        let shard: Vec<usize> = (100..110).collect();
+        let mut a = Pcg64::seed(4);
+        let mut b = Pcg64::seed(4);
+        let da = draw_batch_indices(&shard, 64, &mut a);
+        let db = draw_batch_indices(&shard, 64, &mut b);
+        assert_eq!(da, db, "same stream must draw the same batch");
+        assert_eq!(da.len(), 64);
+        assert!(da.iter().all(|i| shard.contains(i)));
+        // with replacement: 64 draws from 10 values must repeat something
+        let mut uniq = da.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 10);
     }
 }

@@ -1,14 +1,14 @@
 //! Shared machinery for the figure/table harnesses: backend factories and
 //! a uniform "arm" runner so every figure compares algorithms on identical
-//! data, topology, and cost models.
+//! data, topology, and cost models. Arms are dispatched through the
+//! [`make_algorithm`] factory — the same path as the CLI's `--algorithm`
+//! selector — and run on the serial executor.
 
-use crate::backend::TrainBackend;
+use crate::backend::Backend;
 use crate::config::ShardMode;
-use crate::coordinator::baselines::{
-    AdPsgdRunner, AllReduceRunner, DPsgdRunner, LocalSgdRunner, RoundsConfig, SgpRunner,
-};
 use crate::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, RunMetrics, SwarmConfig, SwarmRunner,
+    make_algorithm, run_serial, AlgoOptions, AveragingMode, LocalSteps, LrSchedule, RunMetrics,
+    RunSpec,
 };
 use crate::grad::{QuadraticOracle, SoftmaxOracle};
 use crate::netmodel::CostModel;
@@ -58,7 +58,7 @@ impl BackendSpec {
     }
 
     /// Build a fresh backend (same seed → same data across arms).
-    pub fn build(&self, agents: usize) -> Result<Box<dyn TrainBackend>, String> {
+    pub fn build(&self, agents: usize) -> Result<Box<dyn Backend>, String> {
         Ok(match self {
             BackendSpec::Quadratic { dim, spread, sigma, seed } => Box::new(
                 QuadraticOracle::new(*dim, agents, *spread, 0.5, 2.0, *sigma, *seed),
@@ -82,7 +82,7 @@ impl BackendSpec {
 #[derive(Clone, Debug)]
 pub struct Arm {
     pub name: String,
-    /// swarm | adpsgd | dpsgd | sgp | localsgd | allreduce
+    /// swarm | poisson | adpsgd | dpsgd | sgp | localsgd | allreduce
     pub algo: String,
     pub mode: AveragingMode,
     pub local_steps: LocalSteps,
@@ -132,51 +132,27 @@ pub fn run_arm(
     eval_every: u64,
     track_gamma: bool,
 ) -> Result<RunMetrics, String> {
-    let mut backend = spec.build(n)?;
+    let backend = spec.build(n)?;
     let mut rng = Pcg64::seed(seed);
     let graph = Graph::build(topo, n, &mut rng);
-    let mut ctx = RunContext {
-        backend: backend.as_mut(),
-        graph: &graph,
-        cost,
-        rng: &mut rng,
+    let algo = make_algorithm(
+        &arm.algo,
+        &AlgoOptions {
+            local_steps: arm.local_steps,
+            mode: arm.mode,
+            h_localsgd: arm.h_localsgd,
+        },
+    )?;
+    let run = RunSpec {
+        n,
+        events: arm.t,
+        lr: arm.lr,
+        seed,
+        name: arm.name.clone(),
         eval_every,
         track_gamma,
     };
-    let mut m = match arm.algo.as_str() {
-        "swarm" => {
-            let cfg = SwarmConfig {
-                n,
-                local_steps: arm.local_steps,
-                mode: arm.mode,
-                lr: arm.lr,
-                interactions: arm.t,
-                seed,
-                name: arm.name.clone(),
-            };
-            SwarmRunner::new(cfg, &mut ctx).run(&mut ctx)
-        }
-        other => {
-            let cfg = RoundsConfig {
-                n,
-                rounds: arm.t,
-                lr: arm.lr,
-                seed,
-                name: arm.name.clone(),
-                h: arm.h_localsgd,
-            };
-            match other {
-                "adpsgd" => AdPsgdRunner::new(cfg, &mut ctx).run(&mut ctx),
-                "dpsgd" => DPsgdRunner::new(cfg, &mut ctx).run(&mut ctx),
-                "sgp" => SgpRunner::new(cfg, &mut ctx).run(&mut ctx),
-                "localsgd" => LocalSgdRunner::new(cfg, &mut ctx).run(&mut ctx),
-                "allreduce" => AllReduceRunner::new(cfg, &mut ctx).run(&mut ctx),
-                a => return Err(format!("unknown algo '{a}'")),
-            }
-        }
-    };
-    m.name = arm.name.clone();
-    Ok(m)
+    Ok(run_serial(algo.as_ref(), backend.as_ref(), &run, &graph, cost))
 }
 
 /// Dump the loss curves of several runs into one long-format CSV.

@@ -8,7 +8,7 @@
 
 use super::common::{run_arm, Arm, BackendSpec};
 use crate::analysis::{fit_power_law, gap_samples, theorem41_bound, theorem41_t_ok, theorem42_bound, BoundParams};
-use crate::backend::TrainBackend;
+use crate::backend::Backend;
 use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule};
 use crate::grad::QuadraticOracle;
 use crate::netmodel::CostModel;
@@ -41,8 +41,8 @@ pub fn run(quick: bool, out_dir: &Path) -> Result<(), String> {
     let probe = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
     let l = probe.smoothness();
     let f_gap = {
-        let mut o = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
-        let (p, _) = o.init(0);
+        let o = QuadraticOracle::new(dim, n, spread, 0.5, 2.0, sigma, seed);
+        let (p, _) = o.init();
         o.full_loss(&p) - o.f_star()
     };
     let rho_sq = probe.rho_sq_at_optimum();

@@ -1,15 +1,19 @@
 //! Binary logistic-regression oracle — convex, smooth, bounded-gradient:
 //! the cleanest instrument for the non-iid (Theorem 4.2) experiments, since
 //! ρ² is driven directly by label-skewed sharding.
+//!
+//! Implements the unified [`Backend`] trait (immutable data + caller-RNG
+//! batch draws), so it runs on both the serial and parallel executors.
 
-use crate::backend::{EvalResult, TrainBackend};
-use crate::data::{Batch, ShardIter, VectorDataset};
+use crate::backend::{Backend, EvalResult};
+use crate::data::{draw_batch_indices, Batch, VectorDataset};
 use crate::rngx::Pcg64;
 
 pub struct LogisticOracle {
     data: VectorDataset,
     test: VectorDataset,
-    shards: Vec<ShardIter>,
+    /// per-agent example index lists (immutable)
+    shards: Vec<Vec<usize>>,
     pub batch: usize,
     dim: usize,
     /// L2 regularization (makes the objective strongly convex)
@@ -17,22 +21,19 @@ pub struct LogisticOracle {
 }
 
 impl LogisticOracle {
+    /// (Deterministic given the datasets/shards: batch stochasticity comes
+    /// from the caller's RNG at step time, so there is no seed here.)
     pub fn new(
         train: VectorDataset,
         test: VectorDataset,
         shard_idxs: Vec<Vec<usize>>,
         batch: usize,
         reg: f32,
-        seed: u64,
     ) -> Self {
         assert_eq!(train.classes, 2, "logistic oracle is binary");
-        let mut rng = Pcg64::seed(seed);
-        let shards = shard_idxs
-            .into_iter()
-            .map(|s| ShardIter::new(s, rng.split(1)))
-            .collect();
+        assert!(shard_idxs.iter().all(|s| !s.is_empty()), "empty shard");
         let dim = train.dim;
-        Self { data: train, test, shards, batch, dim, reg }
+        Self { data: train, test, shards: shard_idxs, batch, dim, reg }
     }
 
     /// Synthetic two-blob task, split either iid or by label.
@@ -52,7 +53,7 @@ impl LogisticOracle {
         } else {
             crate::data::label_shards(&train.y, agents)
         };
-        Self::new(train, test, shard_idxs, batch, 1e-4, seed ^ 0x1061)
+        Self::new(train, test, shard_idxs, batch, 1e-4)
     }
 
     fn loss_grad(&self, w: &[f32], x: &[f32], y: &[i32], grad: Option<&mut [f32]>) -> f64 {
@@ -89,17 +90,24 @@ impl LogisticOracle {
     }
 }
 
-impl TrainBackend for LogisticOracle {
-    fn param_count(&self) -> usize {
+impl Backend for LogisticOracle {
+    fn dim(&self) -> usize {
         self.dim + 1
     }
 
-    fn init(&mut self, _seed: i64) -> (Vec<f32>, Vec<f32>) {
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
         (vec![0.0; self.dim + 1], vec![0.0; self.dim + 1])
     }
 
-    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
-        let idxs = self.shards[agent].next_indices(self.batch);
+    fn step(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let idxs = draw_batch_indices(&self.shards[agent], self.batch, rng);
         let Batch::Dense { x, y } = self.data.batch(&idxs) else {
             unreachable!()
         };
@@ -112,7 +120,7 @@ impl TrainBackend for LogisticOracle {
         loss
     }
 
-    fn eval(&mut self, params: &[f32]) -> EvalResult {
+    fn eval(&self, params: &[f32]) -> EvalResult {
         let d = self.dim;
         let loss = self.loss_grad(params, &self.test.x, &self.test.y, None);
         let mut correct = 0usize;
@@ -127,18 +135,18 @@ impl TrainBackend for LogisticOracle {
         EvalResult { loss, accuracy: correct as f64 / self.test.len() as f64 }
     }
 
-    fn full_loss(&mut self, params: &[f32]) -> f64 {
+    fn full_loss(&self, params: &[f32]) -> f64 {
         self.loss_grad(params, &self.data.x, &self.data.y, None)
     }
 
-    fn grad_norm_sq(&mut self, params: &[f32]) -> Option<f64> {
+    fn grad_norm_sq(&self, params: &[f32]) -> Option<f64> {
         let mut grad = vec![0.0f32; params.len()];
         self.loss_grad(params, &self.data.x, &self.data.y, Some(&mut grad));
         Some(grad.iter().map(|&g| (g as f64).powi(2)).sum())
     }
 
-    fn epochs(&self, agent: usize) -> f64 {
-        self.shards[agent].epochs()
+    fn epochs(&self, agent: usize, steps: u64) -> f64 {
+        steps as f64 * self.batch as f64 / self.shards[agent].len() as f64
     }
 }
 
@@ -148,10 +156,11 @@ mod tests {
 
     #[test]
     fn learns_two_blobs() {
-        let mut o = LogisticOracle::synthetic(1000, 8, 1, 32, true, 3);
-        let (mut p, mut m) = o.init(0);
+        let o = LogisticOracle::synthetic(1000, 8, 1, 32, true, 3);
+        let (mut p, mut m) = o.init();
+        let mut rng = Pcg64::seed(4);
         for _ in 0..400 {
-            o.step(0, &mut p, &mut m, 0.1);
+            o.step(0, &mut p, &mut m, 0.1, &mut rng);
         }
         let r = o.eval(&p);
         assert!(r.accuracy > 0.9, "acc={}", r.accuracy);
@@ -160,12 +169,13 @@ mod tests {
     #[test]
     fn label_skew_creates_heterogeneity() {
         // non-iid: an agent training alone should drift to a biased model
-        let mut o = LogisticOracle::synthetic(1000, 8, 2, 32, false, 5);
-        let (mut p0, mut m0) = o.init(0);
+        let o = LogisticOracle::synthetic(1000, 8, 2, 32, false, 5);
+        let (mut p0, mut m0) = o.init();
         let (mut p1, mut m1) = (p0.clone(), m0.clone());
+        let mut rng = Pcg64::seed(6);
         for _ in 0..200 {
-            o.step(0, &mut p0, &mut m0, 0.1);
-            o.step(1, &mut p1, &mut m1, 0.1);
+            o.step(0, &mut p0, &mut m0, 0.1, &mut rng);
+            o.step(1, &mut p1, &mut m1, 0.1, &mut rng);
         }
         // agents saw opposite labels -> opposite bias signs
         let b0 = p0[8];

@@ -1,6 +1,9 @@
 //! Pure-Rust gradient oracles (DESIGN.md S15).
 //!
-//! These implement [`crate::backend::TrainBackend`] without XLA so that
+//! All three implement the unified [`crate::backend::Backend`] trait
+//! (`&self + Sync`, caller-supplied RNG), so every oracle runs on both the
+//! serial and the shared-memory parallel executor with bit-identical
+//! replay. They exist so that
 //! (a) theory experiments (Γ_t, Theorem 4.1/4.2 bound checks) can use
 //! objectives with *known* L, σ², ρ², x*, and exact gradients;
 //! (b) property/integration tests run in milliseconds;

@@ -8,7 +8,7 @@
 //! from the c_i spread — the ideal instrument for validating Theorems
 //! 4.1/4.2 and the Γ_t bound (Lemma F.3).
 
-use crate::backend::{EvalResult, TrainBackend};
+use crate::backend::{Backend, EvalResult};
 use crate::rngx::Pcg64;
 
 pub struct QuadraticOracle {
@@ -20,8 +20,6 @@ pub struct QuadraticOracle {
     c: Vec<f64>,
     /// gradient noise stddev (σ of the paper's variance bound)
     pub sigma: f64,
-    rng: Pcg64,
-    steps: Vec<u64>,
 }
 
 impl QuadraticOracle {
@@ -44,7 +42,7 @@ impl QuadraticOracle {
         let c: Vec<f64> = (0..agents * dim)
             .map(|_| rng.normal() * spread)
             .collect();
-        Self { dim, agents, d, c, sigma, rng, steps: vec![0; agents] }
+        Self { dim, agents, d, c, sigma }
     }
 
     /// Global optimum x* = (Σ D_i)⁻¹ Σ D_i c_i (coordinate-wise).
@@ -110,98 +108,23 @@ impl QuadraticOracle {
     pub fn f_star(&self) -> f64 {
         self.loss(&self.optimum())
     }
-
-    /// The single SGD update rule both backend impls delegate to (takes the
-    /// oracle tables and the RNG as separate borrows so `TrainBackend::step`
-    /// can pass disjoint fields of `&mut self`). Draw-free when `sigma == 0`
-    /// so noiseless benches measure pure executor cost.
-    #[allow(clippy::too_many_arguments)]
-    fn step_core(
-        d: &[f64],
-        c: &[f64],
-        dim: usize,
-        agent: usize,
-        sigma: f64,
-        params: &mut [f32],
-        mom: &mut [f32],
-        lr: f32,
-        rng: &mut Pcg64,
-    ) -> f64 {
-        let mut loss = 0.0;
-        for j in 0..dim {
-            let x = params[j] as f64;
-            let dij = d[agent * dim + j];
-            let cij = c[agent * dim + j];
-            let noise = if sigma > 0.0 { rng.normal() * sigma } else { 0.0 };
-            let g = dij * (x - cij) + noise;
-            loss += 0.5 * dij * (x - cij) * (x - cij);
-            // plain SGD (mu=0) — the theory setting; momentum unused here
-            mom[j] = g as f32;
-            params[j] = (x - lr as f64 * g) as f32;
-        }
-        loss
-    }
 }
 
-impl TrainBackend for QuadraticOracle {
-    fn param_count(&self) -> usize {
-        self.dim
-    }
-
-    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>) {
-        // deterministic start (paper: x_0 = 0^d)
-        let _ = seed;
-        (vec![0.0; self.dim], vec![0.0; self.dim])
-    }
-
-    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
-        debug_assert!(agent < self.agents);
-        let loss = Self::step_core(
-            &self.d,
-            &self.c,
-            self.dim,
-            agent,
-            self.sigma,
-            params,
-            mom,
-            lr,
-            &mut self.rng,
-        );
-        self.steps[agent] += 1;
-        loss
-    }
-
-    fn eval(&mut self, params: &[f32]) -> EvalResult {
-        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
-        EvalResult { loss: self.loss(&x), accuracy: f64::NAN }
-    }
-
-    fn full_loss(&mut self, params: &[f32]) -> f64 {
-        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
-        self.loss(&x)
-    }
-
-    fn grad_norm_sq(&mut self, params: &[f32]) -> Option<f64> {
-        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
-        Some(self.true_grad(&x).iter().map(|g| g * g).sum())
-    }
-}
-
-/// Thread-safe variant for the parallel executor: the oracle's `d`/`c`
-/// tables are immutable, so stepping only needs the caller's per-node RNG.
-/// (Per-agent step counters are not tracked here — they live with the
-/// executor's node states.)
-impl crate::backend::SyncBackend for QuadraticOracle {
+/// The oracle's `d`/`c` tables are immutable after construction, so the
+/// unified backend impl is trivially `&self + Sync`: stepping only needs
+/// the caller's per-node RNG. Draw-free when `sigma == 0` so noiseless
+/// benches measure pure executor cost.
+impl Backend for QuadraticOracle {
     fn dim(&self) -> usize {
         self.dim
     }
 
-    fn common_init(&self) -> (Vec<f32>, Vec<f32>) {
-        // deterministic start (paper: x_0 = 0^d), matching TrainBackend::init
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
+        // deterministic start (paper: x_0 = 0^d)
         (vec![0.0; self.dim], vec![0.0; self.dim])
     }
 
-    fn step_with(
+    fn step(
         &self,
         agent: usize,
         params: &mut [f32],
@@ -210,12 +133,35 @@ impl crate::backend::SyncBackend for QuadraticOracle {
         rng: &mut Pcg64,
     ) -> f64 {
         debug_assert!(agent < self.agents);
-        Self::step_core(&self.d, &self.c, self.dim, agent, self.sigma, params, mom, lr, rng)
+        let dim = self.dim;
+        let mut loss = 0.0;
+        for j in 0..dim {
+            let x = params[j] as f64;
+            let dij = self.d[agent * dim + j];
+            let cij = self.c[agent * dim + j];
+            let noise = if self.sigma > 0.0 { rng.normal() * self.sigma } else { 0.0 };
+            let g = dij * (x - cij) + noise;
+            loss += 0.5 * dij * (x - cij) * (x - cij);
+            // plain SGD (mu=0) — the theory setting; momentum unused here
+            mom[j] = g as f32;
+            params[j] = (x - lr as f64 * g) as f32;
+        }
+        loss
     }
 
-    fn eval_at(&self, params: &[f32]) -> EvalResult {
+    fn eval(&self, params: &[f32]) -> EvalResult {
         let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
         EvalResult { loss: self.loss(&x), accuracy: f64::NAN }
+    }
+
+    fn full_loss(&self, params: &[f32]) -> f64 {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        self.loss(&x)
+    }
+
+    fn grad_norm_sq(&self, params: &[f32]) -> Option<f64> {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        Some(self.true_grad(&x).iter().map(|g| g * g).sum())
     }
 }
 
@@ -242,10 +188,11 @@ mod tests {
 
     #[test]
     fn noiseless_sgd_converges() {
-        let mut o = QuadraticOracle::new(8, 1, 1.0, 0.5, 2.0, 0.0, 5);
-        let (mut p, mut m) = o.init(0);
+        let o = QuadraticOracle::new(8, 1, 1.0, 0.5, 2.0, 0.0, 5);
+        let (mut p, mut m) = o.init();
+        let mut rng = Pcg64::seed(1);
         for _ in 0..500 {
-            o.step(0, &mut p, &mut m, 0.1);
+            o.step(0, &mut p, &mut m, 0.1, &mut rng);
         }
         let f = o.full_loss(&p);
         assert!(
@@ -257,14 +204,15 @@ mod tests {
 
     #[test]
     fn stochastic_gradient_is_unbiased() {
-        let mut o = QuadraticOracle::new(4, 2, 1.0, 1.0, 1.0, 0.5, 9);
+        let o = QuadraticOracle::new(4, 2, 1.0, 1.0, 1.0, 0.5, 9);
         let x = vec![0.3f32; 4];
+        let mut rng = Pcg64::seed(2);
         let mut acc = vec![0.0f64; 4];
         let trials = 20_000;
         for _ in 0..trials {
             let mut p = x.clone();
             let mut m = vec![0.0; 4];
-            o.step(0, &mut p, &mut m, 1.0);
+            o.step(0, &mut p, &mut m, 1.0, &mut rng);
             for j in 0..4 {
                 acc[j] += (x[j] - p[j]) as f64; // = lr * g_noisy, lr=1
             }
@@ -277,6 +225,24 @@ mod tests {
                 "coord {j}"
             );
         }
+    }
+
+    #[test]
+    fn step_is_deterministic_in_caller_rng() {
+        // the replay contract at the oracle level: identical rng streams
+        // produce identical trajectories, independent of any hidden state
+        let o = QuadraticOracle::new(8, 2, 1.0, 0.5, 2.0, 0.3, 11);
+        let run = || {
+            let (mut p, mut m) = o.init();
+            let mut rng = Pcg64::stream(42, 7);
+            for _ in 0..50 {
+                o.step(1, &mut p, &mut m, 0.05, &mut rng);
+            }
+            p
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,19 +1,26 @@
 //! Linear softmax classifier oracle on Gaussian-mixture shards — the
 //! lightweight "CIFAR-10/ResNet20" stand-in used by the n=256 scaling
 //! figure (Fig. 6a) where per-step XLA dispatch would dominate.
+//!
+//! Implements the unified [`Backend`] trait: the oracle holds only
+//! immutable data (datasets + shard index lists), and every batch draw
+//! comes from the caller's RNG — so the parallel executor can step agents
+//! concurrently and replay them bit-for-bit.
 
-use crate::backend::{EvalResult, TrainBackend};
-use crate::data::{Batch, ShardIter, VectorDataset};
+use crate::backend::{Backend, EvalResult};
+use crate::data::{draw_batch_indices, Batch, VectorDataset};
 use crate::rngx::Pcg64;
 
 pub struct SoftmaxOracle {
     data: VectorDataset,
     test: VectorDataset,
-    shards: Vec<ShardIter>,
+    /// per-agent example index lists (immutable; batches are drawn from the
+    /// caller's RNG, uniformly with replacement)
+    shards: Vec<Vec<usize>>,
     pub batch: usize,
     dim: usize,
     classes: usize,
-    rng: Pcg64,
+    init_seed: u64,
 }
 
 impl SoftmaxOracle {
@@ -24,13 +31,9 @@ impl SoftmaxOracle {
         batch: usize,
         seed: u64,
     ) -> Self {
-        let mut rng = Pcg64::seed(seed);
-        let shards = shard_idxs
-            .into_iter()
-            .map(|s| ShardIter::new(s, rng.split(0)))
-            .collect();
+        assert!(shard_idxs.iter().all(|s| !s.is_empty()), "empty shard");
         let (dim, classes) = (train.dim, train.classes);
-        Self { data: train, test, shards, batch, dim, classes, rng }
+        Self { data: train, test, shards: shard_idxs, batch, dim, classes, init_seed: seed }
     }
 
     /// Convenience constructor: generate data + iid shards internally.
@@ -88,22 +91,27 @@ impl SoftmaxOracle {
     }
 }
 
-impl TrainBackend for SoftmaxOracle {
-    fn param_count(&self) -> usize {
+impl Backend for SoftmaxOracle {
+    fn dim(&self) -> usize {
         (self.dim + 1) * self.classes
     }
 
-    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>) {
-        let mut r = Pcg64::seed(seed as u64 ^ 0x50F7);
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Pcg64::seed(self.init_seed ^ 0x50F7);
         let scale = 0.01 / (self.dim as f32).sqrt();
-        let p = (0..self.param_count())
-            .map(|_| r.normal() as f32 * scale)
-            .collect();
-        (p, vec![0.0; self.param_count()])
+        let p = (0..self.dim()).map(|_| r.normal() as f32 * scale).collect();
+        (p, vec![0.0; self.dim()])
     }
 
-    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
-        let idxs = self.shards[agent].next_indices(self.batch);
+    fn step(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let idxs = draw_batch_indices(&self.shards[agent], self.batch, rng);
         let Batch::Dense { x, y } = self.data.batch(&idxs) else {
             unreachable!()
         };
@@ -114,11 +122,10 @@ impl TrainBackend for SoftmaxOracle {
             mom[j] = 0.9 * mom[j] + grad[j];
             params[j] -= lr * mom[j];
         }
-        let _ = &mut self.rng;
         loss
     }
 
-    fn eval(&mut self, params: &[f32]) -> EvalResult {
+    fn eval(&self, params: &[f32]) -> EvalResult {
         let (d, c) = (self.dim, self.classes);
         let n = self.test.len();
         let mut correct = 0usize;
@@ -140,12 +147,12 @@ impl TrainBackend for SoftmaxOracle {
         EvalResult { loss, accuracy: correct as f64 / n as f64 }
     }
 
-    fn full_loss(&mut self, params: &[f32]) -> f64 {
+    fn full_loss(&self, params: &[f32]) -> f64 {
         self.loss_grad(params, &self.data.x, &self.data.y, None)
     }
 
-    fn epochs(&self, agent: usize) -> f64 {
-        self.shards[agent].epochs()
+    fn epochs(&self, agent: usize, steps: u64) -> f64 {
+        steps as f64 * self.batch as f64 / self.shards[agent].len() as f64
     }
 }
 
@@ -155,11 +162,12 @@ mod tests {
 
     #[test]
     fn sgd_learns_separable_mixture() {
-        let mut o = SoftmaxOracle::synthetic(2000, 16, 4, 1, 32, 4.0, 11);
-        let (mut p, mut m) = o.init(0);
+        let o = SoftmaxOracle::synthetic(2000, 16, 4, 1, 32, 4.0, 11);
+        let (mut p, mut m) = o.init();
+        let mut rng = Pcg64::seed(7);
         let start = o.eval(&p);
         for _ in 0..300 {
-            o.step(0, &mut p, &mut m, 0.05);
+            o.step(0, &mut p, &mut m, 0.05, &mut rng);
         }
         let end = o.eval(&p);
         assert!(end.loss < start.loss * 0.5, "{} -> {}", start.loss, end.loss);
@@ -170,13 +178,13 @@ mod tests {
     fn grad_matches_finite_difference() {
         let o = SoftmaxOracle::synthetic(64, 6, 3, 1, 8, 3.0, 5);
         let mut r = Pcg64::seed(1);
-        let params: Vec<f32> = (0..o.param_count()).map(|_| r.normal() as f32 * 0.1).collect();
+        let params: Vec<f32> = (0..o.dim()).map(|_| r.normal() as f32 * 0.1).collect();
         let x: Vec<f32> = (0..4 * 6).map(|_| r.normal() as f32).collect();
         let y = vec![0i32, 1, 2, 1];
         let mut grad = vec![0.0f32; params.len()];
         o.loss_grad(&params, &x, &y, Some(&mut grad));
         let h = 1e-3f32;
-        for j in [0usize, 5, 11, o.param_count() - 1] {
+        for j in [0usize, 5, 11, o.dim() - 1] {
             let mut pp = params.clone();
             pp[j] += h;
             let lp = o.loss_grad(&pp, &x, &y, None);
@@ -192,14 +200,25 @@ mod tests {
     }
 
     #[test]
-    fn epochs_accounting() {
-        let mut o = SoftmaxOracle::synthetic(320, 8, 2, 2, 32, 3.0, 2);
-        let (mut p, mut m) = o.init(0);
-        for _ in 0..5 {
-            o.step(0, &mut p, &mut m, 0.01);
-        }
+    fn epochs_accounting_is_stateless() {
+        let o = SoftmaxOracle::synthetic(320, 8, 2, 2, 32, 3.0, 2);
         // agent 0 shard = 160 examples; 5 steps × 32 = 160 = 1 epoch
-        assert!((o.epochs(0) - 1.0).abs() < 1e-9, "epochs={}", o.epochs(0));
-        assert_eq!(o.epochs(1), 0.0);
+        assert!((o.epochs(0, 5) - 1.0).abs() < 1e-9, "epochs={}", o.epochs(0, 5));
+        assert_eq!(o.epochs(1, 0), 0.0);
+        assert!((o.epochs(1, 10) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_replays_from_caller_rng() {
+        let o = SoftmaxOracle::synthetic(256, 8, 3, 2, 16, 3.0, 9);
+        let run = || {
+            let (mut p, mut m) = o.init();
+            let mut rng = Pcg64::stream(3, 1);
+            for _ in 0..20 {
+                o.step(1, &mut p, &mut m, 0.05, &mut rng);
+            }
+            p
+        };
+        assert_eq!(run(), run());
     }
 }

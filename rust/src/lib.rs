@@ -4,11 +4,10 @@
 //! Local, and Quantized Updates”** (Nadiradze et al., NeurIPS 2021) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the SwarmSGD coordinator: discrete-event cluster
-//!   engine, pairwise gossip scheduling, blocking/non-blocking/quantized
-//!   averaging, the decentralized baselines (AD-PSGD, D-PSGD, SGP, local
-//!   SGD, allreduce SGD), topology/spectral math, the lattice codec, and
-//!   the figure-regeneration harnesses.
+//! * **L3 (this crate)** — the coordinator: the Algorithm plug-in API
+//!   (SwarmSGD + the §5 baselines), two schedule executors, topology/
+//!   spectral math, the lattice codec, and the figure-regeneration
+//!   harnesses.
 //! * **L2 (python/compile)** — JAX models (MLP / CNN / transformer LM) with
 //!   flat-packed parameters, lowered once to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (tiled matmul, fused
@@ -18,30 +17,49 @@
 //! models; the [`runtime`] module loads them through PJRT (behind the
 //! `pjrt` feature — default builds substitute a stub and stay hermetic).
 //!
-//! # Executors
+//! # The Algorithm × Backend × Executor matrix
 //!
-//! Two executors run the SwarmSGD interaction sequence:
+//! PR 2 collapsed the crate around three orthogonal axes; any combination
+//! runs:
 //!
-//! * **Serial** ([`coordinator::SwarmRunner`], `--executor serial`) — the
-//!   discrete-event reference: one interaction at a time, simulated
-//!   per-node clocks supplying the paper's time axes.
-//! * **Parallel** ([`coordinator::run_parallel`], `--executor parallel
-//!   --threads K`) — N shared-memory worker threads over per-node
-//!   `Mutex<NodeState>`; Algorithm 1 rendezvous uses ordered two-lock
-//!   acquisition, Algorithms 2/G read partners' communication copies from
-//!   lock-free double-buffered slots, so "nobody waits" is executed, not
-//!   simulated.
+//! * **Algorithm** ([`coordinator::Algorithm`], CLI `--algorithm`):
+//!   `swarm` (blocking / non-blocking / quantized averaging, fixed or
+//!   geometric H), `poisson` (Poisson-clock scheduling), and the five
+//!   baselines `adpsgd | dpsgd | sgp | localsgd | allreduce`. An algorithm
+//!   pre-draws an event schedule (`schedule`), executes one event over its
+//!   participants' [`coordinator::NodeState`]s (`interact`), and maps
+//!   states to the evaluated models (`round_metrics`).
+//! * **Backend** ([`backend::Backend`], config `preset=`): the quadratic /
+//!   softmax / logistic gradient oracles and the PJRT-compiled models. One
+//!   `&self + Sync` trait; all stochasticity comes from the caller's
+//!   [`rngx::Pcg64`] stream.
+//! * **Executor** ([`coordinator::run_serial`] /
+//!   [`coordinator::run_parallel`], CLI `--executor serial|parallel
+//!   --threads K`): generic drivers over `&dyn Algorithm × &dyn Backend`.
+//!   Serial walks the schedule in program order; parallel drains it on K
+//!   shared-memory worker threads with per-node locks, committing events in
+//!   per-node dependency order.
 //!
-//! **Replay-determinism contract:** a parallel run pre-draws its whole
-//! interaction schedule and gives every node a private
-//! [`rngx::Pcg64::stream`]; workers commit interactions in per-node
-//! dependency order, which fixes the dataflow DAG independently of thread
-//! interleaving. [`coordinator::run_replay_serial`] executes the identical
-//! schedule in program order and must match **bit-for-bit** on every
-//! metric — `tests/parallel_executor.rs` asserts this for blocking,
-//! non-blocking, and quantized modes, and `.github/workflows/ci.yml` runs
-//! those tests (plus fmt/clippy gates and a non-blocking throughput bench
-//! that archives `BENCH_parallel.json`) on every push and PR.
+//! **Replay-determinism contract:** the schedule (participants, local-step
+//! counts, event seeds) is pre-drawn from a dedicated
+//! [`rngx::Pcg64::stream`], every node draws noise/jitter from its private
+//! stream, and workers commit in dependency order — so the dataflow DAG,
+//! and therefore every f32 operation, is fixed before any thread starts. A
+//! parallel run at any thread count is **bit-identical** to the serial run
+//! of the same seed, for every algorithm on the oracle backends. (The PJRT
+//! backend is excluded: its fused-step heuristic races wall-clock timings,
+//! so its runs are correct but not bit-replayable.)
+//! `tests/parallel_executor.rs`
+//! asserts this for SwarmSGD (all averaging modes, quadratic and softmax
+//! oracles) and AD-PSGD, and `.github/workflows/ci.yml` runs those tests
+//! (plus fmt/clippy/doc gates and a non-blocking throughput bench that
+//! archives algorithm-tagged `BENCH_parallel.json` rows) on every push and
+//! PR.
+//!
+//! Gossip algorithms (swarm, poisson, adpsgd) schedule 2-node events and
+//! genuinely parallelize; the synchronous baselines schedule whole-cluster
+//! events — a global barrier per round is their semantics, executed
+//! faithfully.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

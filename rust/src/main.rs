@@ -1,14 +1,19 @@
 //! `swarm` — the leader binary: train, regenerate paper figures, inspect
 //! artifacts, probe topologies.  See `swarm help`.
+//!
+//! Training dispatch is the Algorithm × Backend × Executor matrix:
+//! `--algorithm` picks the training process (SwarmSGD or any §5 baseline),
+//! the `preset` key picks the compute backend (gradient oracles or the
+//! PJRT path), and `--executor serial|parallel` picks the driver — every
+//! combination runs, and serial/parallel agree bit-for-bit per seed.
 
 use std::path::Path;
-use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::backend::Backend;
 use swarm_sgd::cli::{Cli, USAGE};
 use swarm_sgd::config::RunConfig;
-use swarm_sgd::coordinator::baselines::{
-    AdPsgdRunner, AllReduceRunner, DPsgdRunner, LocalSgdRunner, RoundsConfig, SgpRunner,
+use swarm_sgd::coordinator::{
+    make_algorithm, run_parallel, run_serial, AlgoOptions, Algorithm, RunMetrics, RunSpec,
 };
-use swarm_sgd::coordinator::{run_parallel, RunContext, RunMetrics, SwarmConfig, SwarmRunner};
 use swarm_sgd::figures::{run_figure, write_curves};
 use swarm_sgd::grad::{LogisticOracle, QuadraticOracle, SoftmaxOracle};
 use swarm_sgd::output::Table;
@@ -42,13 +47,13 @@ fn main() {
     }
 }
 
-/// The `oracle:quadratic` preset — single definition so `--executor serial`
-/// and `--executor parallel` train the identical objective.
+/// The `oracle:quadratic` preset — single definition so every executor and
+/// algorithm trains the identical objective.
 fn quadratic_preset(cfg: &RunConfig) -> QuadraticOracle {
     QuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
 }
 
-fn build_backend(cfg: &RunConfig) -> Result<Box<dyn TrainBackend>, String> {
+fn build_backend(cfg: &RunConfig) -> Result<Box<dyn Backend>, String> {
     if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
         return Ok(match kind {
             "quadratic" => Box::new(quadratic_preset(cfg)),
@@ -97,7 +102,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in ["executor", "threads"] {
+    for key in ["algorithm", "executor", "threads"] {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
@@ -107,11 +112,15 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     }
     println!("config: {cfg:?}\n");
 
-    if cfg.executor == "parallel" {
-        return train_parallel(&cfg);
-    }
-
-    let mut backend = build_backend(&cfg)?;
+    let algo: Box<dyn Algorithm> = make_algorithm(
+        &cfg.algo,
+        &AlgoOptions {
+            local_steps: cfg.local_steps(),
+            mode: cfg.averaging_mode()?,
+            h_localsgd: cfg.h.round().max(1.0) as u64,
+        },
+    )?;
+    let backend = build_backend(&cfg)?;
     let mut rng = Pcg64::seed(cfg.seed);
     let graph = Graph::build(cfg.topology_enum()?, cfg.n, &mut rng);
     println!(
@@ -122,102 +131,35 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         graph.lambda2()
     );
     let cost = cfg.cost_model();
-    let mut ctx = RunContext {
-        backend: backend.as_mut(),
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let spec = RunSpec {
+        n: cfg.n,
+        events: cfg.interactions,
+        lr: cfg.lr_schedule_enum()?,
+        seed: cfg.seed,
+        name: format!("{}-{}", cfg.algo, cfg.executor),
         eval_every: cfg.eval_every,
         track_gamma: cfg.track_gamma,
     };
 
     let started = std::time::Instant::now();
-    let metrics: RunMetrics = match cfg.algo.as_str() {
-        "swarm" => {
-            let scfg = SwarmConfig {
-                n: cfg.n,
-                local_steps: cfg.local_steps(),
-                mode: cfg.averaging_mode()?,
-                lr: cfg.lr_schedule_enum()?,
-                interactions: cfg.interactions,
-                seed: cfg.seed,
-                name: "swarm".into(),
-            };
-            SwarmRunner::new(scfg, &mut ctx).run(&mut ctx)
+    let metrics = match cfg.executor.as_str() {
+        "parallel" => {
+            let threads = cfg.effective_threads();
+            println!(
+                "parallel executor: {} worker thread(s), algorithm={} n={} topology={}",
+                threads, cfg.algo, cfg.n, cfg.topology
+            );
+            run_parallel(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads)
         }
-        algo => {
-            let rcfg = RoundsConfig {
-                n: cfg.n,
-                rounds: cfg.interactions,
-                lr: cfg.lr_schedule_enum()?,
-                seed: cfg.seed,
-                name: algo.to_string(),
-                h: cfg.h.round().max(1.0) as u64,
-            };
-            match algo {
-                "adpsgd" => AdPsgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
-                "dpsgd" => DPsgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
-                "sgp" => SgpRunner::new(rcfg, &mut ctx).run(&mut ctx),
-                "localsgd" => LocalSgdRunner::new(rcfg, &mut ctx).run(&mut ctx),
-                "allreduce" => AllReduceRunner::new(rcfg, &mut ctx).run(&mut ctx),
-                a => return Err(format!("unknown algo '{a}'")),
-            }
-        }
+        _ => run_serial(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost),
     };
     let wall = started.elapsed();
-    report_run(&cfg, metrics, wall)
-}
-
-/// Train SwarmSGD on the shared-memory parallel executor (oracle presets
-/// only — the PJRT path is not thread-safe). `--threads 1` is the serial
-/// replay of the identical schedule.
-fn train_parallel(cfg: &RunConfig) -> Result<(), String> {
-    if cfg.algo != "swarm" {
-        return Err(format!("--executor parallel implements algo=swarm (got '{}')", cfg.algo));
-    }
-    let oracle = match cfg.preset.as_str() {
-        "oracle:quadratic" => quadratic_preset(cfg),
-        p => {
-            return Err(format!(
-                "--executor parallel needs a thread-safe oracle backend; \
-                 use preset=oracle:quadratic (got '{p}')"
-            ))
-        }
-    };
-    let mut rng = Pcg64::seed(cfg.seed);
-    let graph = Graph::build(cfg.topology_enum()?, cfg.n, &mut rng);
-    let cost = cfg.cost_model();
-    let threads = cfg.effective_threads();
-    let scfg = SwarmConfig {
-        n: cfg.n,
-        local_steps: cfg.local_steps(),
-        mode: cfg.averaging_mode()?,
-        lr: cfg.lr_schedule_enum()?,
-        interactions: cfg.interactions,
-        seed: cfg.seed,
-        name: "swarm-parallel".into(),
-    };
     println!(
-        "parallel executor: {} worker thread(s), n={} topology={}",
-        threads, cfg.n, cfg.topology
-    );
-    let started = std::time::Instant::now();
-    let metrics = run_parallel(
-        &scfg,
-        threads,
-        &graph,
-        &cost,
-        &oracle,
-        cfg.eval_every,
-        cfg.track_gamma,
-    );
-    let wall = started.elapsed();
-    println!(
-        "throughput: {:.0} interactions/s on {} thread(s)",
+        "throughput: {:.0} events/s wall-clock ({} executor)",
         metrics.interactions as f64 / wall.as_secs_f64().max(1e-9),
-        threads
+        metrics.executor
     );
-    report_run(cfg, metrics, wall)
+    report_run(&cfg, metrics, wall)
 }
 
 fn report_run(
@@ -225,7 +167,7 @@ fn report_run(
     metrics: RunMetrics,
     wall: std::time::Duration,
 ) -> Result<(), String> {
-    println!("\nloss curve (eval on mean model μ_t):");
+    println!("\nloss curve (eval on consensus model μ_t):");
     let mut table =
         Table::new(&["t", "par.time", "sim time", "train loss", "eval loss", "acc", "gamma"]);
     for p in &metrics.curve {

@@ -1,29 +1,42 @@
-//! [`XlaBackend`] — the real three-layer training path as a [`TrainBackend`]:
-//! per-agent synthetic data shards feed the AOT-compiled JAX+Pallas step
-//! executables through PJRT.
+//! [`XlaBackend`] — the real three-layer training path as a unified
+//! [`Backend`]: per-agent synthetic data shards feed the AOT-compiled
+//! JAX+Pallas step executables through PJRT.
+//!
+//! PR 2 adapted it to the `&self + Sync` backend contract:
+//!
+//! * shard/batch selection is **stateless** — batch indices (dense) and
+//!   window offsets (tokens) are drawn from the caller's RNG, so the data
+//!   order a node sees is fixed by its private stream, not by thread
+//!   interleaving;
+//! * PJRT executable dispatch is serialized through an internal lock (the
+//!   linked xla_extension client is not known to be thread-safe), so the
+//!   parallel executor is *correct* on this backend but gains no XLA-side
+//!   speedup yet — the ROADMAP's "thread-safe PJRT backend" item.
 
 use super::manifest::{find_preset, ModelManifest};
 use super::model::XlaModel;
 use super::XlaBackendConfig;
-use crate::backend::{EvalResult, TrainBackend};
+use crate::backend::{Backend, EvalResult};
 use crate::config::{DataKind, ShardMode};
 use crate::data::{
-    dirichlet_shards, iid_shards, label_shards, Batch, ImageDataset, MarkovCorpus,
-    ShardIter, TokenBatcher, VectorDataset,
+    dirichlet_shards, draw_batch_indices, draw_token_batch, iid_shards, label_shards, Batch,
+    ImageDataset, MarkovCorpus, VectorDataset,
 };
 use crate::rngx::Pcg64;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Mutex;
 
 enum DataSource {
     Dense {
         train: DenseKind,
-        shards: Vec<ShardIter>,
+        /// immutable per-agent example index lists
+        shards: Vec<Vec<usize>>,
     },
     Tokens {
-        batchers: Vec<TokenBatcher>,
-        /// held-out token stream
-        test: Vec<i32>,
+        /// immutable per-agent token shards
+        shards: Vec<Vec<i32>>,
+        seq: usize,
     },
 }
 
@@ -43,19 +56,28 @@ impl DenseKind {
 
 /// The PJRT-backed training backend.
 pub struct XlaBackend {
-    pub model: XlaModel,
+    model: XlaModel,
     cfg: XlaBackendConfig,
     source: DataSource,
     /// held-out dense set (None for token models)
     test_dense: Option<DenseKind>,
+    /// held-out token stream (token models)
+    test_tokens: Option<Vec<i32>>,
     shape_x: Vec<i64>,
     shape_y: Vec<i64>,
-    rng: Pcg64,
+    /// examples (dense) / windows (tokens) per shard, for `epochs`
+    shard_sizes: Vec<f64>,
+    /// serializes every PJRT dispatch (client thread-safety unproven)
+    dispatch: Mutex<()>,
     /// lazily measured: is the lax.scan step_k artifact faster per step
     /// than k separate dispatches on this host? (XLA CPU often pessimizes
     /// scan bodies — see EXPERIMENTS.md §Perf)
-    step_k_faster: std::cell::Cell<Option<bool>>,
+    step_k_faster: Mutex<Option<bool>>,
 }
+
+// Safety: all `XlaModel` executions go through `Self::run`, which holds the
+// `dispatch` mutex; the remaining fields are plain owned data.
+unsafe impl Sync for XlaBackend {}
 
 impl XlaBackend {
     /// Load preset `name` from `artifacts_dir` and synthesize shards.
@@ -69,7 +91,7 @@ impl XlaBackend {
         let mut rng = Pcg64::seed(cfg.seed);
         let m = &model.manifest;
         let b = m.batch as i64;
-        let (source, test_dense, shape_x, shape_y) = match m.kind() {
+        let (source, test_dense, test_tokens, shape_x, shape_y) = match m.kind() {
             DataKind::Vector => {
                 let dim = m.field_usize("in_dim").expect("manifest in_dim");
                 let classes = m.field_usize("classes").expect("manifest classes");
@@ -83,13 +105,10 @@ impl XlaBackend {
                     &mut rng,
                 );
                 let shards = make_shards(&train.y, cfg.agents, cfg.shard, &mut rng);
-                let iters = shards
-                    .into_iter()
-                    .map(|s| ShardIter::new(s, rng.split(11)))
-                    .collect();
                 (
-                    DataSource::Dense { train: DenseKind::Vector(train), shards: iters },
+                    DataSource::Dense { train: DenseKind::Vector(train), shards },
                     Some(DenseKind::Vector(test)),
+                    None,
                     vec![b, dim as i64],
                     vec![b],
                 )
@@ -109,13 +128,10 @@ impl XlaBackend {
                     &mut rng,
                 );
                 let shards = make_shards(&train.y, cfg.agents, cfg.shard, &mut rng);
-                let iters = shards
-                    .into_iter()
-                    .map(|s| ShardIter::new(s, rng.split(13)))
-                    .collect();
                 (
-                    DataSource::Dense { train: DenseKind::Image(train), shards: iters },
+                    DataSource::Dense { train: DenseKind::Image(train), shards },
                     Some(DenseKind::Image(test)),
+                    None,
                     vec![b, hw as i64, hw as i64, chans as i64],
                     vec![b],
                 )
@@ -123,28 +139,36 @@ impl XlaBackend {
             DataKind::Tokens => {
                 let vocab = m.field_usize("vocab").expect("manifest vocab");
                 let seq = m.field_usize("seq").expect("manifest seq");
-                let total = cfg.agents * cfg.data_per_agent + m.batch * cfg.eval_batches * (seq + 1);
+                let total =
+                    cfg.agents * cfg.data_per_agent + m.batch * cfg.eval_batches * (seq + 1);
                 let corpus = MarkovCorpus::generate(vocab, total, 4, &mut rng);
                 let test_len = m.batch * cfg.eval_batches * (seq + 1);
                 let (train_toks, test_toks) = corpus.tokens.split_at(corpus.len() - test_len);
                 let shard_len = train_toks.len() / cfg.agents;
-                let batchers = (0..cfg.agents)
-                    .map(|a| {
-                        let lo = a * shard_len;
-                        TokenBatcher::new(
-                            &train_toks[lo..lo + shard_len],
-                            seq,
-                            m.batch,
-                            rng.split(a as u64),
-                        )
-                    })
+                assert!(
+                    shard_len > seq + 1,
+                    "token shard ({shard_len} tokens) must exceed seq+1 ({}); \
+                     raise data_per_agent",
+                    seq + 1
+                );
+                let shards: Vec<Vec<i32>> = (0..cfg.agents)
+                    .map(|a| train_toks[a * shard_len..(a + 1) * shard_len].to_vec())
                     .collect();
                 (
-                    DataSource::Tokens { batchers, test: test_toks.to_vec() },
+                    DataSource::Tokens { shards, seq },
                     None,
+                    Some(test_toks.to_vec()),
                     vec![b, seq as i64],
                     vec![b, seq as i64],
                 )
+            }
+        };
+        let shard_sizes: Vec<f64> = match &source {
+            DataSource::Dense { shards, .. } => {
+                shards.iter().map(|s| s.len() as f64).collect()
+            }
+            DataSource::Tokens { shards, seq } => {
+                shards.iter().map(|s| (s.len() / seq).max(1) as f64).collect()
             }
         };
         Ok(Self {
@@ -152,10 +176,12 @@ impl XlaBackend {
             cfg,
             source,
             test_dense,
+            test_tokens,
             shape_x,
             shape_y,
-            rng,
-            step_k_faster: std::cell::Cell::new(None),
+            shard_sizes,
+            dispatch: Mutex::new(()),
+            step_k_faster: Mutex::new(None),
         })
     }
 
@@ -163,20 +189,35 @@ impl XlaBackend {
         &self.model.manifest
     }
 
-    fn next_batch(&mut self, agent: usize) -> Batch {
-        match &mut self.source {
+    /// Run a model dispatch under the serialization lock.
+    fn run<R>(&self, f: impl FnOnce(&XlaModel) -> R) -> R {
+        let _g = self.dispatch.lock().expect("dispatch lock poisoned");
+        f(&self.model)
+    }
+
+    /// The fused quantize-average Pallas artifact (benches/tests).
+    pub fn qavg(&self, x: &[f32], y: &[f32], seed: u32) -> Result<Vec<f32>> {
+        self.run(|m| m.qavg(x, y, seed))
+    }
+
+    /// Draw one minibatch for `agent` from the caller's RNG (the shared
+    /// `data::draw_*` rules, so all backends consume node streams alike).
+    fn next_batch(&self, agent: usize, rng: &mut Pcg64) -> Batch {
+        let bsz = self.model.manifest.batch;
+        match &self.source {
             DataSource::Dense { train, shards } => {
-                let idxs = shards[agent].next_indices(self.model.manifest.batch);
-                train.batch(&idxs)
+                train.batch(&draw_batch_indices(&shards[agent], bsz, rng))
             }
-            DataSource::Tokens { batchers, .. } => batchers[agent].next_batch(),
+            DataSource::Tokens { shards, seq } => {
+                draw_token_batch(&shards[agent], *seq, bsz, rng)
+            }
         }
     }
 
     /// Evaluation batches over the held-out set (deterministic coverage).
-    fn eval_batches(&mut self) -> Vec<Batch> {
+    fn eval_batches(&self) -> Vec<Batch> {
         let bsz = self.model.manifest.batch;
-        match (&self.test_dense, &self.source) {
+        match (&self.test_dense, &self.test_tokens) {
             (Some(test), _) => {
                 let n = match test {
                     DenseKind::Vector(d) => d.len(),
@@ -184,18 +225,13 @@ impl XlaBackend {
                 };
                 (0..self.cfg.eval_batches)
                     .map(|k| {
-                        let idxs: Vec<usize> =
-                            (0..bsz).map(|i| (k * bsz + i) % n).collect();
+                        let idxs: Vec<usize> = (0..bsz).map(|i| (k * bsz + i) % n).collect();
                         test.batch(&idxs)
                     })
                     .collect()
             }
-            (None, DataSource::Tokens { test, .. }) => {
-                let seq = self
-                    .model
-                    .manifest
-                    .field_usize("seq")
-                    .expect("manifest seq");
+            (None, Some(test)) => {
+                let seq = self.model.manifest.field_usize("seq").expect("manifest seq");
                 let mut out = Vec::new();
                 let mut pos = 0usize;
                 for _ in 0..self.cfg.eval_batches {
@@ -221,9 +257,7 @@ impl XlaBackend {
     fn labels_per_batch(&self) -> f64 {
         let m = &self.model.manifest;
         match m.kind() {
-            DataKind::Tokens => {
-                (m.batch * m.field_usize("seq").unwrap_or(1)) as f64
-            }
+            DataKind::Tokens => (m.batch * m.field_usize("seq").unwrap_or(1)) as f64,
             _ => m.batch as f64,
         }
     }
@@ -242,72 +276,95 @@ fn make_shards(
     }
 }
 
-impl TrainBackend for XlaBackend {
-    fn param_count(&self) -> usize {
+impl Backend for XlaBackend {
+    fn dim(&self) -> usize {
         self.model.param_count()
     }
 
-    fn init(&mut self, seed: i64) -> (Vec<f32>, Vec<f32>) {
-        self.model.init(seed as i32).expect("init artifact failed")
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
+        self.run(|m| m.init(self.cfg.seed as i32)).expect("init artifact failed")
     }
 
-    fn step(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32) -> f64 {
-        let batch = self.next_batch(agent);
-        let _ = &mut self.rng;
-        self.model
-            .step(params, mom, &batch, &self.shape_x, &self.shape_y, lr)
+    fn step(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let batch = self.next_batch(agent, rng);
+        self.run(|m| m.step(params, mom, &batch, &self.shape_x, &self.shape_y, lr))
             .expect("step artifact failed")
     }
 
-    fn step_burst(&mut self, agent: usize, params: &mut [f32], mom: &mut [f32], lr: f32, h: u64) -> f64 {
+    fn step_burst(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        h: u64,
+        rng: &mut Pcg64,
+    ) -> f64 {
         let k = self.model.manifest.k as u64;
         // First time we see a burst that could use the fused lax.scan
         // artifact, race it against k unit dispatches (both do real
         // training work, so nothing is wasted) and remember the winner.
-        if self.step_k_faster.get().is_none() && h >= 2 * k && k > 1 {
+        // The verdict lock is held across the whole measurement so a second
+        // worker neither races the decision nor pollutes the timings with
+        // dispatch-mutex contention.
+        let mut verdict = self.step_k_faster.lock().expect("step_k lock poisoned");
+        if verdict.is_none() && h >= 2 * k && k > 1 {
             let t0 = std::time::Instant::now();
-            let batches: Vec<Batch> = (0..k).map(|_| self.next_batch(agent)).collect();
-            self.model
-                .step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr)
+            let batches: Vec<Batch> = (0..k).map(|_| self.next_batch(agent, rng)).collect();
+            self.run(|m| m.step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr))
                 .expect("step_k artifact failed");
             let fused = t0.elapsed();
             let t1 = std::time::Instant::now();
+            let mut measured_last = f64::NAN;
             for _ in 0..k {
-                self.step(agent, params, mom, lr);
+                measured_last = self.step(agent, params, mom, lr, rng);
             }
             let unit = t1.elapsed();
-            self.step_k_faster.set(Some(fused < unit));
-            return self.step_burst(agent, params, mom, lr, h.saturating_sub(2 * k));
+            *verdict = Some(fused < unit);
+            drop(verdict);
+            let remaining = h - 2 * k;
+            if remaining == 0 {
+                // the measurement consumed the whole burst; honour the
+                // "returns the last minibatch loss" contract
+                return measured_last;
+            }
+            return self.step_burst(agent, params, mom, lr, remaining, rng);
         }
-        let use_fused = self.step_k_faster.get().unwrap_or(false) && k > 1;
+        let use_fused = verdict.unwrap_or(false) && k > 1;
+        drop(verdict);
         let mut remaining = h;
         let mut last = f64::NAN;
         if use_fused {
             while remaining >= k {
                 let batches: Vec<Batch> =
-                    (0..k).map(|_| self.next_batch(agent)).collect();
+                    (0..k).map(|_| self.next_batch(agent, rng)).collect();
                 last = self
-                    .model
-                    .step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr)
+                    .run(|m| m.step_k(params, mom, &batches, &self.shape_x, &self.shape_y, lr))
                     .expect("step_k artifact failed");
                 remaining -= k;
             }
         }
         for _ in 0..remaining {
-            last = self.step(agent, params, mom, lr);
+            last = self.step(agent, params, mom, lr, rng);
         }
         last
     }
 
-    fn eval(&mut self, params: &[f32]) -> EvalResult {
+    fn eval(&self, params: &[f32]) -> EvalResult {
         let batches = self.eval_batches();
         let mut loss = 0.0;
         let mut correct = 0.0;
         let denom = (batches.len() as f64) * self.labels_per_batch();
         for b in &batches {
             let (l, c) = self
-                .model
-                .eval(params, b, &self.shape_x, &self.shape_y)
+                .run(|m| m.eval(params, b, &self.shape_x, &self.shape_y))
                 .expect("eval artifact failed");
             loss += l;
             correct += c;
@@ -318,10 +375,7 @@ impl TrainBackend for XlaBackend {
         }
     }
 
-    fn epochs(&self, agent: usize) -> f64 {
-        match &self.source {
-            DataSource::Dense { shards, .. } => shards[agent].epochs(),
-            DataSource::Tokens { batchers, .. } => batchers[agent].epochs(),
-        }
+    fn epochs(&self, agent: usize, steps: u64) -> f64 {
+        steps as f64 * self.model.manifest.batch as f64 / self.shard_sizes[agent]
     }
 }

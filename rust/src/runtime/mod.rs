@@ -1,5 +1,7 @@
 //! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
-//! once by `make artifacts`) and exposes them as a [`TrainBackend`].
+//! once by `make artifacts`) and exposes them through the unified
+//! [`Backend`] trait, so compiled models plug into the same
+//! Algorithm × Executor matrix as the pure-Rust oracles.
 //!
 //! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
 //! 64-bit instruction ids that the linked xla_extension 0.5.1 rejects;
@@ -21,7 +23,7 @@ mod manifest;
 
 pub use manifest::{find_preset, load_manifest, ModelManifest};
 
-use crate::backend::TrainBackend;
+use crate::backend::Backend;
 use crate::config::ShardMode;
 
 /// Data-generation knobs for the XLA backend.
@@ -67,4 +69,4 @@ mod stub;
 pub use stub::{PjrtUnavailable, XlaBackend};
 
 #[allow(dead_code)]
-fn _object_safe(_: &dyn TrainBackend) {}
+fn _object_safe(_: &dyn Backend) {}

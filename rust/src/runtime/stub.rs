@@ -1,10 +1,11 @@
 //! Stub [`XlaBackend`] for builds without the `pjrt` feature: keeps the API
-//! surface (`load` + [`TrainBackend`]) so callers compile unchanged, but
-//! loading always fails with an actionable error instead of requiring PJRT
-//! headers and libraries at link time.
+//! surface (`load` + the unified [`Backend`] trait) so callers compile
+//! unchanged, but loading always fails with an actionable error instead of
+//! requiring PJRT headers and libraries at link time.
 
 use super::XlaBackendConfig;
-use crate::backend::{EvalResult, TrainBackend};
+use crate::backend::{Backend, EvalResult};
+use crate::rngx::Pcg64;
 use std::convert::Infallible;
 use std::path::Path;
 
@@ -30,8 +31,8 @@ impl std::fmt::Display for PjrtUnavailable {
 impl std::error::Error for PjrtUnavailable {}
 
 /// Uninhabited placeholder for the PJRT-backed training backend. It can
-/// never be constructed; the [`TrainBackend`] impl exists purely so
-/// `Box<dyn TrainBackend>` call sites compile without the feature.
+/// never be constructed; the [`Backend`] impl exists purely so
+/// `Box<dyn Backend>` call sites compile without the feature.
 pub struct XlaBackend {
     never: Infallible,
 }
@@ -47,20 +48,27 @@ impl XlaBackend {
     }
 }
 
-impl TrainBackend for XlaBackend {
-    fn param_count(&self) -> usize {
+impl Backend for XlaBackend {
+    fn dim(&self) -> usize {
         match self.never {}
     }
 
-    fn init(&mut self, _seed: i64) -> (Vec<f32>, Vec<f32>) {
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
         match self.never {}
     }
 
-    fn step(&mut self, _agent: usize, _params: &mut [f32], _mom: &mut [f32], _lr: f32) -> f64 {
+    fn step(
+        &self,
+        _agent: usize,
+        _params: &mut [f32],
+        _mom: &mut [f32],
+        _lr: f32,
+        _rng: &mut Pcg64,
+    ) -> f64 {
         match self.never {}
     }
 
-    fn eval(&mut self, _params: &[f32]) -> EvalResult {
+    fn eval(&self, _params: &[f32]) -> EvalResult {
         match self.never {}
     }
 }

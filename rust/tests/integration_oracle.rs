@@ -2,10 +2,10 @@
 //! paper's analysis predicts, checked end-to-end through the coordinator
 //! (no artifacts required — these always run).
 
-use swarm_sgd::backend::TrainBackend;
-use swarm_sgd::coordinator::baselines::{AdPsgdRunner, LocalSgdRunner, RoundsConfig};
+use swarm_sgd::backend::Backend;
 use swarm_sgd::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, RunMetrics, SwarmConfig, SwarmRunner,
+    make_algorithm, run_serial, AlgoOptions, AveragingMode, LocalSteps, LrSchedule, RunMetrics,
+    RunSpec, SwarmSgd,
 };
 use swarm_sgd::figures::{run_arm, Arm, BackendSpec};
 use swarm_sgd::grad::{LogisticOracle, QuadraticOracle};
@@ -13,8 +13,9 @@ use swarm_sgd::netmodel::CostModel;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::{Graph, Topology};
 
+#[allow(clippy::too_many_arguments)]
 fn swarm_run(
-    backend: &mut dyn TrainBackend,
+    backend: &dyn Backend,
     n: usize,
     t: u64,
     h: u64,
@@ -26,24 +27,17 @@ fn swarm_run(
     let mut rng = Pcg64::seed(seed);
     let graph = Graph::build(topo, n, &mut rng);
     let cost = CostModel::deterministic(0.4);
-    let mut ctx = RunContext {
-        backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd { local_steps: LocalSteps::Fixed(h), mode };
+    let spec = RunSpec {
+        n,
+        events: t,
+        lr,
+        seed,
+        name: "it".into(),
         eval_every: (t / 8).max(1),
         track_gamma: true,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(h),
-        mode,
-        lr,
-        interactions: t,
-        seed,
-        name: "it".into(),
-    };
-    SwarmRunner::new(cfg, &mut ctx).run(&mut ctx)
+    run_serial(&algo, backend, &spec, &graph, &cost)
 }
 
 #[test]
@@ -52,10 +46,10 @@ fn convergence_improves_with_t() {
     let gaps: Vec<f64> = [500u64, 2000, 8000]
         .iter()
         .map(|&t| {
-            let mut b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.3, 5);
+            let b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.3, 5);
             let f_star = b.f_star();
             let m = swarm_run(
-                &mut b,
+                &b,
                 8,
                 t,
                 2,
@@ -78,9 +72,9 @@ fn noniid_logistic_swarm_beats_isolated_agents() {
     // Theorem 4.2 regime: label-skewed shards. Swarm must pull the agents
     // to a model that classifies BOTH classes (isolated agents can't).
     let n = 4;
-    let mut b = LogisticOracle::synthetic(2000, 8, n, 32, /*iid=*/ false, 11);
+    let b = LogisticOracle::synthetic(2000, 8, n, 32, /*iid=*/ false, 11);
     let m = swarm_run(
-        &mut b,
+        &b,
         n,
         600,
         2,
@@ -99,9 +93,9 @@ fn noniid_logistic_swarm_beats_isolated_agents() {
 #[test]
 fn ring_concentrates_worse_than_complete() {
     let run = |topo| {
-        let mut b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 21);
+        let b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 21);
         let m = swarm_run(
-            &mut b,
+            &b,
             16,
             4000,
             2,
@@ -124,9 +118,9 @@ fn ring_concentrates_worse_than_complete() {
 #[test]
 fn gamma_scales_roughly_h_squared() {
     let steady = |h: u64| {
-        let mut b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 41);
+        let b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 41);
         let m = swarm_run(
-            &mut b,
+            &b,
             16,
             4000,
             h,
@@ -151,9 +145,9 @@ fn gamma_scales_roughly_h_squared() {
 #[test]
 fn quantized_tracks_full_precision_loss() {
     let run = |mode| {
-        let mut b = QuadraticOracle::new(128, 8, 1.0, 0.5, 2.0, 0.1, 61);
+        let b = QuadraticOracle::new(128, 8, 1.0, 0.5, 2.0, 0.1, 61);
         swarm_run(
-            &mut b,
+            &b,
             8,
             1500,
             2,
@@ -175,9 +169,9 @@ fn quantized_tracks_full_precision_loss() {
 #[test]
 fn runs_are_deterministic_given_seed() {
     let run = || {
-        let mut b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.3, 5);
+        let b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.3, 5);
         swarm_run(
-            &mut b,
+            &b,
             8,
             400,
             2,
@@ -202,10 +196,10 @@ fn blocking_and_nonblocking_agree_in_the_limit() {
     // same budget, both must reach comparable quality (Appendix F claims
     // the staleness costs only constants)
     let run = |mode| {
-        let mut b = QuadraticOracle::new(32, 8, 1.0, 0.5, 2.0, 0.2, 81);
+        let b = QuadraticOracle::new(32, 8, 1.0, 0.5, 2.0, 0.2, 81);
         let f_star = b.f_star();
         let m = swarm_run(
-            &mut b,
+            &b,
             8,
             3000,
             2,
@@ -228,30 +222,28 @@ fn blocking_and_nonblocking_agree_in_the_limit() {
 #[test]
 fn localsgd_and_adpsgd_reach_quadratic_optimum() {
     let cost = CostModel::deterministic(0.4);
-    for algo in ["localsgd", "adpsgd"] {
-        let mut b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.1, 91);
+    for algo_name in ["localsgd", "adpsgd"] {
+        let b = QuadraticOracle::new(16, 8, 1.0, 0.5, 2.0, 0.1, 91);
         let f_star = b.f_star();
         let gap0 = {
-            let (p, _) = b.init(0);
+            let (p, _) = b.init();
             b.full_loss(&p) - f_star
         };
         let mut rng = Pcg64::seed(5);
         let graph = Graph::build(Topology::Complete, 8, &mut rng);
-        let mut ctx = RunContext {
-            backend: &mut b,
-            graph: &graph,
-            cost: &cost,
-            rng: &mut rng,
+        let algo = make_algorithm(algo_name, &AlgoOptions::default()).unwrap();
+        let spec = RunSpec {
+            n: 8,
+            events: 500,
+            lr: LrSchedule::Constant(0.05),
+            seed: 5,
+            name: algo_name.into(),
             eval_every: 0,
             track_gamma: false,
         };
-        let cfg = RoundsConfig::new(8, 500, 0.05, algo);
-        let m = match algo {
-            "localsgd" => LocalSgdRunner::new(cfg, &mut ctx).run(&mut ctx),
-            _ => AdPsgdRunner::new(cfg, &mut ctx).run(&mut ctx),
-        };
+        let m = run_serial(algo.as_ref(), &b, &spec, &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
-        assert!(gap < 0.15, "{algo} normalized gap {gap}");
+        assert!(gap < 0.15, "{algo_name} normalized gap {gap}");
     }
 }
 
@@ -291,32 +283,27 @@ fn extension_arbitrary_irregular_graph_still_converges() {
     let graph = Graph::from_edges(n, edges);
     assert!(graph.is_connected());
     assert!(graph.regular_degree().is_none(), "meant to be irregular");
-    let mut b = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.2, 101);
+    let b = QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.2, 101);
     let f_star = b.f_star();
     let gap0 = {
-        let (p, _) = b.init(0);
+        let (p, _) = b.init();
         b.full_loss(&p) - f_star
     };
     let cost = CostModel::deterministic(0.4);
-    let mut rng = Pcg64::seed(7);
-    let mut ctx = RunContext {
-        backend: &mut b,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+    };
+    let spec = RunSpec {
+        n,
+        events: 1500,
+        lr: LrSchedule::Constant(0.04),
+        seed: 3,
+        name: "irregular".into(),
         eval_every: 0,
         track_gamma: false,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(2),
-        mode: AveragingMode::NonBlocking,
-        lr: LrSchedule::Constant(0.04),
-        interactions: 1500,
-        seed: 3,
-        name: "irregular".into(),
-    };
-    let m = SwarmRunner::new(cfg, &mut ctx).run(&mut ctx);
+    let m = run_serial(&algo, &b, &spec, &graph, &cost);
     let gap = (m.final_eval_loss - f_star) / gap0;
     assert!(gap < 0.15, "irregular-graph normalized gap {gap}");
 }
@@ -333,9 +320,9 @@ fn lambda2_predicts_cross_topology_ordering() {
         r * r / (l2 * l2)
     };
     let gamma = |topo| {
-        let mut b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 21);
+        let b = QuadraticOracle::new(16, 16, 1.0, 0.5, 2.0, 0.5, 21);
         let m = swarm_run(
-            &mut b,
+            &b,
             16,
             3000,
             2,

@@ -1,27 +1,27 @@
-//! Parallel-executor contract tests.
+//! Executor contract tests for the Algorithm × Backend × Executor matrix.
 //!
 //! 1. **Replay determinism** (the CI-enforced contract): a run on N worker
-//!    threads is bit-identical, metric for metric, to a serial replay of the
-//!    same seed — for fixed H across blocking, non-blocking, and quantized
-//!    averaging.
-//! 2. **Stress**: a larger quantized non-blocking run (n=64, 4 threads)
+//!    threads is bit-identical, metric for metric, to the serial run of the
+//!    same seed — for SwarmSGD across blocking, non-blocking, and quantized
+//!    averaging; for AD-PSGD (the asynchronous baseline); and for SwarmSGD
+//!    on the softmax oracle (caller-RNG batch draws).
+//! 2. **Coverage**: all six `--algorithm` selections run on BOTH executors
+//!    and agree bit-for-bit — the acceptance criterion of the API redesign.
+//! 3. **Stress**: a larger quantized non-blocking run (n=64, 4 threads)
 //!    completes without deadlock or poisoned locks, and its decode-fallback
-//!    counter matches the serial replay.
-//! 3. **Algorithmic agreement**: the executor converges like the original
-//!    discrete-event [`SwarmRunner`] on the same workload (statistically —
-//!    the two draw noise from different stream layouts by design).
+//!    counter matches the serial run.
 //!
-//! Caveat on (1): replay and parallel share `run_schedule`'s per-interaction
-//! code, so bit equality proves *interleaving independence* (the concurrency
-//! contract), not the update rule itself — that is what (3) plus the serial
-//! runner's own unit tests cover.
+//! Caveat on (1): serial and parallel share the per-event code, so bit
+//! equality proves *interleaving independence* (the concurrency contract),
+//! not the update rule itself — that is what the per-algorithm unit tests
+//! cover.
 
-use swarm_sgd::backend::SyncBackend;
+use swarm_sgd::backend::Backend;
 use swarm_sgd::coordinator::{
-    run_parallel, run_replay_serial, AveragingMode, LocalSteps, LrSchedule, RunContext,
-    RunMetrics, SwarmConfig, SwarmRunner,
+    make_algorithm, run_parallel, run_serial, AlgoOptions, AveragingMode, LocalSteps,
+    LrSchedule, RunMetrics, RunSpec, SwarmSgd, ALGORITHM_NAMES,
 };
-use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::grad::{QuadraticOracle, SoftmaxOracle};
 use swarm_sgd::netmodel::CostModel;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::{Graph, Topology};
@@ -35,16 +35,20 @@ fn graph(n: usize) -> Graph {
     Graph::build(Topology::Complete, n, &mut rng)
 }
 
-fn swarm_cfg(n: usize, t: u64, h: u64, mode: AveragingMode, seed: u64) -> SwarmConfig {
-    SwarmConfig {
+fn spec(n: usize, t: u64, seed: u64, eval_every: u64, track_gamma: bool) -> RunSpec {
+    RunSpec {
         n,
-        local_steps: LocalSteps::Fixed(h),
-        mode,
+        events: t,
         lr: LrSchedule::Constant(0.05),
-        interactions: t,
         seed,
         name: "par-it".into(),
+        eval_every,
+        track_gamma,
     }
+}
+
+fn swarm(h: u64, mode: AveragingMode) -> SwarmSgd {
+    SwarmSgd { local_steps: LocalSteps::Fixed(h), mode }
 }
 
 /// Every externally observable metric must agree to the bit.
@@ -55,8 +59,10 @@ fn assert_replay_identical(serial: &RunMetrics, parallel: &RunMetrics) {
         assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits(), "eval_loss at t={}", a.t);
         assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "train_loss at t={}", a.t);
         assert_eq!(a.indiv_loss.to_bits(), b.indiv_loss.to_bits(), "indiv_loss at t={}", a.t);
+        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "eval_acc at t={}", a.t);
         assert_eq!(a.gamma.to_bits(), b.gamma.to_bits(), "gamma at t={}", a.t);
         assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "sim_time at t={}", a.t);
+        assert_eq!(a.epochs.to_bits(), b.epochs.to_bits(), "epochs at t={}", a.t);
         assert_eq!(a.bits, b.bits, "bits at t={}", a.t);
     }
     // "identical final loss to 1e-12" — trivially implied by bit equality,
@@ -82,15 +88,16 @@ fn fixed_h_replay_is_bit_identical_across_thread_counts() {
         AveragingMode::Blocking,
         AveragingMode::Quantized { bits: 8, eps: 1e-2 },
     ] {
-        let cfg = swarm_cfg(n, 1000, 3, mode, 0xA11CE);
+        let algo = swarm(3, mode);
         let g = graph(n);
         let backend = quad(n, 32, 0.2, 7);
         // jittery cost model: time accounting must replay exactly too
         let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
-        let serial = run_replay_serial(&cfg, &g, &cost, &backend, 250, true);
-        assert_eq!(serial.executor, "serial-replay");
+        let s = spec(n, 1000, 0xA11CE, 250, true);
+        let serial = run_serial(&algo, &backend, &s, &g, &cost);
+        assert_eq!(serial.executor, "serial");
         for threads in [2, 4, 8] {
-            let par = run_parallel(&cfg, threads, &g, &cost, &backend, 250, true);
+            let par = run_parallel(&algo, &backend, &s, &g, &cost, threads);
             assert_eq!(par.executor, "parallel");
             assert_eq!(par.threads, threads);
             assert_replay_identical(&serial, &par);
@@ -102,16 +109,73 @@ fn fixed_h_replay_is_bit_identical_across_thread_counts() {
 fn geometric_h_replay_is_bit_identical() {
     // H is pre-drawn in the schedule, so even the geometric regime replays
     let n = 8;
-    let cfg = SwarmConfig {
+    let algo = SwarmSgd {
         local_steps: LocalSteps::Geometric(3.0),
-        ..swarm_cfg(n, 600, 1, AveragingMode::NonBlocking, 0xBEE)
+        mode: AveragingMode::NonBlocking,
     };
     let g = graph(n);
     let backend = quad(n, 16, 0.1, 3);
     let cost = CostModel::deterministic(0.4);
-    let serial = run_replay_serial(&cfg, &g, &cost, &backend, 150, false);
-    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 150, false);
+    let s = spec(n, 600, 0xBEE, 150, false);
+    let serial = run_serial(&algo, &backend, &s, &g, &cost);
+    let par = run_parallel(&algo, &backend, &s, &g, &cost, 4);
     assert_replay_identical(&serial, &par);
+}
+
+#[test]
+fn adpsgd_parallel_is_bit_identical_to_serial() {
+    // the asynchronous baseline under the new Algorithm API: pairwise
+    // events, so it genuinely parallelizes — and must still replay exactly
+    let n = 16;
+    let algo = make_algorithm("adpsgd", &AlgoOptions::default()).unwrap();
+    let g = graph(n);
+    let backend = quad(n, 32, 0.2, 17);
+    let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
+    let s = spec(n, 1200, 0xADP5, 300, true);
+    let serial = run_serial(algo.as_ref(), &backend, &s, &g, &cost);
+    for threads in [2, 4, 8] {
+        let par = run_parallel(algo.as_ref(), &backend, &s, &g, &cost, threads);
+        assert_replay_identical(&serial, &par);
+    }
+}
+
+#[test]
+fn softmax_oracle_swarm_replay_is_bit_identical() {
+    // satellite: the softmax oracle's batch draws come from the caller's
+    // per-node stream, so SwarmSGD on it replays bit-for-bit too — and its
+    // accuracy/epochs curves (non-NaN here) must agree as well
+    let n = 8;
+    let algo = swarm(2, AveragingMode::NonBlocking);
+    let g = graph(n);
+    let backend = SoftmaxOracle::synthetic(2048, 16, 4, n, 32, 4.0, 23);
+    let cost = CostModel::deterministic(0.4);
+    let s = spec(n, 300, 0x50F7, 75, false);
+    let serial = run_serial(&algo, &backend, &s, &g, &cost);
+    assert!(serial.final_eval_acc.is_finite());
+    assert!(serial.epochs > 0.0);
+    for threads in [2, 4] {
+        let par = run_parallel(&algo, &backend, &s, &g, &cost, threads);
+        assert_replay_identical(&serial, &par);
+    }
+}
+
+#[test]
+fn all_algorithms_run_on_both_executors_bit_identically() {
+    // the acceptance criterion of the API redesign: every --algorithm value
+    // runs on --executor serial AND --executor parallel, agreeing exactly
+    let n = 8;
+    let g = graph(n);
+    let backend = quad(n, 16, 0.1, 29);
+    let cost = CostModel::deterministic(0.2);
+    for name in ALGORITHM_NAMES {
+        let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+        let s = spec(n, 120, 0xC0DE, 40, true);
+        let serial = run_serial(algo.as_ref(), &backend, &s, &g, &cost);
+        assert_eq!(serial.interactions, 120, "{name}");
+        assert!(serial.final_eval_loss.is_finite(), "{name}");
+        let par = run_parallel(algo.as_ref(), &backend, &s, &g, &cost, 4);
+        assert_replay_identical(&serial, &par);
+    }
 }
 
 #[test]
@@ -120,60 +184,39 @@ fn stress_quantized_nonblocking_n64_4threads() {
     // completing at all proves no deadlock / no poisoned lock (any worker
     // panic would propagate through thread::scope and fail the test).
     let n = 64;
-    let cfg = swarm_cfg(n, 4000, 2, AveragingMode::Quantized { bits: 6, eps: 5e-4 }, 0xD15C);
+    let algo = swarm(2, AveragingMode::Quantized { bits: 6, eps: 5e-4 });
     let g = graph(n);
     let backend = quad(n, 64, 0.3, 13);
     let cost = CostModel::deterministic(0.4);
-    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 1000, false);
+    let s = spec(n, 4000, 0xD15C, 1000, false);
+    let par = run_parallel(&algo, &backend, &s, &g, &cost, 4);
     assert!(par.final_eval_loss.is_finite());
     assert_eq!(par.interactions, 4000);
     assert_eq!(par.local_steps, 4000 * 2 * 2);
     assert!(par.total_bits > 0);
-    // fallback counters match the serial replay exactly (stronger than the
+    // fallback counters match the serial run exactly (stronger than the
     // "within tolerance" requirement)
-    let serial = run_replay_serial(&cfg, &g, &cost, &backend, 1000, false);
+    let serial = run_serial(&algo, &backend, &s, &g, &cost);
     assert_eq!(par.quant_fallbacks, serial.quant_fallbacks);
     assert_replay_identical(&serial, &par);
 }
 
 #[test]
-fn parallel_executor_converges_like_serial_swarm_runner() {
-    // the executors use different RNG layouts, so agreement is statistical:
-    // both must reach a small normalized gap on the same quadratic workload
+fn parallel_executor_converges_on_quadratic() {
     let n = 16;
     let t = 2000;
     let backend = quad(n, 32, 0.1, 21);
     let f_star = backend.f_star();
     let gap0 = {
-        let (p, _) = backend.common_init();
-        backend.eval_at(&p).loss - f_star
+        let (p, _) = backend.init();
+        backend.eval(&p).loss - f_star
     };
     let g = graph(n);
     let cost = CostModel::deterministic(0.4);
-    let cfg = swarm_cfg(n, t, 2, AveragingMode::NonBlocking, 0xFAB);
-    let par = run_parallel(&cfg, 4, &g, &cost, &backend, 0, false);
-    let gap_par = ((par.final_eval_loss - f_star) / gap0).max(1e-9);
-
-    let mut serial_backend = quad(n, 32, 0.1, 21);
-    let mut rng = Pcg64::seed(0xFAB);
-    let mut ctx = RunContext {
-        backend: &mut serial_backend,
-        graph: &g,
-        cost: &cost,
-        rng: &mut rng,
-        eval_every: 0,
-        track_gamma: false,
-    };
-    let m = SwarmRunner::new(cfg.clone(), &mut ctx).run(&mut ctx);
-    let gap_serial = ((m.final_eval_loss - f_star) / gap0).max(1e-9);
-
-    assert!(gap_par < 0.1, "parallel normalized gap {gap_par}");
-    assert!(gap_serial < 0.1, "serial normalized gap {gap_serial}");
-    let ratio = gap_par / gap_serial;
-    assert!(
-        (0.2..5.0).contains(&ratio),
-        "parallel gap {gap_par} vs serial gap {gap_serial}"
-    );
+    let algo = swarm(2, AveragingMode::NonBlocking);
+    let par = run_parallel(&algo, &backend, &spec(n, t, 0xFAB, 0, false), &g, &cost, 4);
+    let gap = ((par.final_eval_loss - f_star) / gap0).max(1e-9);
+    assert!(gap < 0.1, "parallel normalized gap {gap}");
 }
 
 #[test]
@@ -183,22 +226,20 @@ fn quantized_parallel_saves_bits_vs_full_precision() {
     let backend = quad(n, 256, 0.05, 31);
     let cost = CostModel::deterministic(0.4);
     let q = run_parallel(
-        &swarm_cfg(n, 800, 2, AveragingMode::Quantized { bits: 8, eps: 1e-2 }, 1),
-        4,
+        &swarm(2, AveragingMode::Quantized { bits: 8, eps: 1e-2 }),
+        &backend,
+        &spec(n, 800, 1, 0, false),
         &g,
         &cost,
-        &backend,
-        0,
-        false,
+        4,
     );
     let f = run_parallel(
-        &swarm_cfg(n, 800, 2, AveragingMode::NonBlocking, 1),
-        4,
+        &swarm(2, AveragingMode::NonBlocking),
+        &backend,
+        &spec(n, 800, 1, 0, false),
         &g,
         &cost,
-        &backend,
-        0,
-        false,
+        4,
     );
     assert!(
         (q.total_bits as f64) < 0.5 * f.total_bits as f64,

@@ -2,11 +2,13 @@
 //! Each property runs over many seeded random cases; failures print the
 //! offending seed so cases are reproducible.
 
-use swarm_sgd::backend::TrainBackend;
-use swarm_sgd::coordinator::{average_into_both, Cluster};
+use swarm_sgd::analysis::gamma_potential;
+use swarm_sgd::coordinator::average_into_both;
 use swarm_sgd::data::{dirichlet_shards, iid_shards, label_shards};
-use swarm_sgd::grad::QuadraticOracle;
-use swarm_sgd::quant::{decode, encode, pack_bits, quantize_unbiased, unpack_bits, QuantError};
+use swarm_sgd::quant::{
+    decode, encode, pack_bits, qsgd_decode, qsgd_encode, quantize_unbiased, unpack_bits,
+    QuantError,
+};
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::Graph;
 
@@ -43,6 +45,84 @@ fn prop_quant_roundtrip_exact_under_distance_criterion() {
         let want = quantize_unbiased(&x, eps, seed);
         if got != want {
             return Err(format!("d={d} bits={bits} eps={eps}: decode != sender rounding"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lattice_roundtrip_recovers_input_within_eps_and_wire_bits_match_payload() {
+    // satellite: end-to-end encode→decode recovers the *original* vector to
+    // within the lattice resolution eps (because decode == the sender's
+    // unbiased rounding, whose per-coordinate error is < eps), and the
+    // advertised wire_bits must equal the packed payload size plus the
+    // fixed checksum + header overhead.
+    prop(40, |rng| {
+        let d = 1 + rng.below_usize(2000);
+        let bits = 4 + rng.below(9) as u32; // 4..=12
+        let eps = 10f32.powf(-(1.0 + rng.f32() * 2.0));
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        // receiver close to the sender (well inside the criterion)
+        let y: Vec<f32> = x.iter().map(|v| v + eps * (rng.f32() - 0.5)).collect();
+        let seed = rng.next_u32();
+        let msg = encode(&x, eps, bits, seed);
+        // wire accounting: d·bits payload + 64-bit checksum + 96-bit header
+        let expect_bits = d as u64 * bits as u64 + 64 + 96;
+        if msg.wire_bits() != expect_bits {
+            return Err(format!(
+                "wire_bits {} != payload accounting {expect_bits} (d={d}, bits={bits})",
+                msg.wire_bits()
+            ));
+        }
+        // and the physical payload actually holds d residues of `bits` bits
+        if msg.payload.len() != (d * bits as usize).div_ceil(8) {
+            return Err(format!(
+                "payload {} bytes != ceil(d*bits/8) = {}",
+                msg.payload.len(),
+                (d * bits as usize).div_ceil(8)
+            ));
+        }
+        let got = decode(&msg, &y).map_err(|e| format!("decode failed: {e}"))?;
+        let want = quantize_unbiased(&x, eps, seed);
+        if got != want {
+            return Err("decode disagrees with quantize_unbiased".into());
+        }
+        for (g, v) in got.iter().zip(&x) {
+            let err = (g - v).abs();
+            if err > eps * 1.001 {
+                return Err(format!("roundtrip error {err} > eps {eps}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qsgd_roundtrip_same_shape_and_bounded_error() {
+    // satellite: the QSGD counterpoint codec must decode to the input's
+    // shape with per-coordinate error bounded by ||x||/s (its level grid)
+    prop(40, |rng| {
+        let d = 1 + rng.below_usize(1000);
+        let bits = 2 + rng.below(7) as u32; // 2..=8
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let msg = qsgd_encode(&x, bits, rng);
+        if msg.len != d || msg.levels.len() != d {
+            return Err(format!("message shape {} != input {d}", msg.levels.len()));
+        }
+        if msg.wire_bits() != d as u64 * bits as u64 + 32 {
+            return Err("qsgd wire_bits accounting".into());
+        }
+        let back = qsgd_decode(&msg);
+        if back.len() != d {
+            return Err(format!("decoded shape {} != input {d}", back.len()));
+        }
+        let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let s = ((1u32 << (bits - 1)) - 1).max(1) as f32;
+        let tol = norm / s + 1e-6;
+        for (b, v) in back.iter().zip(&x) {
+            if (b - v).abs() > tol {
+                return Err(format!("qsgd error {} > ||x||/s {tol}", (b - v).abs()));
+            }
         }
         Ok(())
     });
@@ -203,31 +283,43 @@ fn prop_all_shard_modes_partition() {
 // coordinator invariants
 // ---------------------------------------------------------------------------
 
+fn random_models(rng: &mut Pcg64, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn mean_of(models: &[Vec<f32>]) -> Vec<f64> {
+    let d = models[0].len();
+    let mut mu = vec![0.0f64; d];
+    for m in models {
+        for (s, &v) in mu.iter_mut().zip(m) {
+            *s += v as f64;
+        }
+    }
+    mu.iter_mut().for_each(|v| *v /= models.len() as f64);
+    mu
+}
+
 #[test]
 fn prop_pairwise_averaging_preserves_mean() {
     // the conservation law behind the paper's μ_t analysis
     prop(40, |rng| {
         let n = 2 + rng.below_usize(10);
         let d = 1 + rng.below_usize(50);
-        let mut backend = QuadraticOracle::new(d, n, 1.0, 0.5, 2.0, 0.0, 7);
-        let mut c = Cluster::init(n, &mut backend, 3);
-        for a in &mut c.agents {
-            for v in a.params.iter_mut() {
-                *v = rng.normal() as f32;
-            }
-        }
-        let mu_before = c.mean_model();
+        let mut models = random_models(rng, n, d);
+        let mu_before = mean_of(&models);
         for _ in 0..20 {
             let i = rng.below_usize(n);
             let mut j = rng.below_usize(n);
             while j == i {
                 j = rng.below_usize(n);
             }
-            let (a, b) = c.pair_mut(i, j);
-            // split borrows: average params
-            average_into_both(&mut a.params, &mut b.params);
+            let (lo, hi) = (i.min(j), i.max(j));
+            let (a, b) = models.split_at_mut(hi);
+            average_into_both(&mut a[lo], &mut b[0]);
         }
-        let mu_after = c.mean_model();
+        let mu_after = mean_of(&models);
         for (x, y) in mu_before.iter().zip(&mu_after) {
             if (x - y).abs() > 1e-4 {
                 return Err(format!("mean moved: {x} -> {y}"));
@@ -242,22 +334,17 @@ fn prop_averaging_contracts_gamma() {
     prop(40, |rng| {
         let n = 3 + rng.below_usize(8);
         let d = 2 + rng.below_usize(20);
-        let mut backend = QuadraticOracle::new(d, n, 1.0, 0.5, 2.0, 0.0, 7);
-        let mut c = Cluster::init(n, &mut backend, 3);
-        for a in &mut c.agents {
-            for v in a.params.iter_mut() {
-                *v = rng.normal() as f32;
-            }
-        }
-        let before = c.gamma();
+        let mut models = random_models(rng, n, d);
+        let before = gamma_potential(&models);
         let i = rng.below_usize(n);
         let mut j = rng.below_usize(n);
         while j == i {
             j = rng.below_usize(n);
         }
-        let (a, b) = c.pair_mut(i, j);
-        average_into_both(&mut a.params, &mut b.params);
-        let after = c.gamma();
+        let (lo, hi) = (i.min(j), i.max(j));
+        let (a, b) = models.split_at_mut(hi);
+        average_into_both(&mut a[lo], &mut b[0]);
+        let after = gamma_potential(&models);
         if after > before + 1e-5 {
             return Err(format!("Γ increased: {before} -> {after}"));
         }

@@ -7,10 +7,10 @@
 #![cfg(feature = "pjrt")]
 
 use std::path::Path;
-use swarm_sgd::backend::TrainBackend;
+use swarm_sgd::backend::Backend;
 use swarm_sgd::config::ShardMode;
 use swarm_sgd::coordinator::{
-    AveragingMode, LocalSteps, LrSchedule, RunContext, SwarmConfig, SwarmRunner,
+    run_serial, AveragingMode, LocalSteps, LrSchedule, RunSpec, SwarmSgd,
 };
 use swarm_sgd::netmodel::CostModel;
 use swarm_sgd::rngx::Pcg64;
@@ -42,12 +42,13 @@ fn load_mlp(agents: usize) -> Option<XlaBackend> {
 
 #[test]
 fn xla_backend_single_agent_learns() {
-    let Some(mut b) = load_mlp(1) else { return };
-    let (mut p, mut m) = b.init(0);
-    assert_eq!(p.len(), b.param_count());
+    let Some(b) = load_mlp(1) else { return };
+    let (mut p, mut m) = b.init();
+    let mut rng = Pcg64::seed(1);
+    assert_eq!(p.len(), b.dim());
     let before = b.eval(&p);
     for _ in 0..30 {
-        b.step(0, &mut p, &mut m, 0.05);
+        b.step(0, &mut p, &mut m, 0.05, &mut rng);
     }
     let after = b.eval(&p);
     assert!(
@@ -63,18 +64,19 @@ fn xla_backend_single_agent_learns() {
 fn xla_step_burst_matches_unit_steps_statistically() {
     // step_burst uses the lax.scan artifact; same data distribution so the
     // loss trajectory must be comparable (not identical: different batches).
-    let Some(mut b) = load_mlp(1) else { return };
-    let (mut p, mut m) = b.init(0);
+    let Some(b) = load_mlp(1) else { return };
+    let mut rng = Pcg64::seed(2);
+    let (mut p, mut m) = b.init();
     let burst_loss = {
         for _ in 0..5 {
-            b.step_burst(0, &mut p, &mut m, 0.05, 4);
+            b.step_burst(0, &mut p, &mut m, 0.05, 4, &mut rng);
         }
         b.eval(&p).loss
     };
-    let (mut p2, mut m2) = b.init(0);
+    let (mut p2, mut m2) = b.init();
     let unit_loss = {
         for _ in 0..20 {
-            b.step(0, &mut p2, &mut m2, 0.05);
+            b.step(0, &mut p2, &mut m2, 0.05, &mut rng);
         }
         b.eval(&p2).loss
     };
@@ -87,33 +89,28 @@ fn xla_step_burst_matches_unit_steps_statistically() {
 #[test]
 fn swarm_on_xla_mlp_converges() {
     let n = 4;
-    let Some(mut backend) = load_mlp(n) else { return };
+    let Some(backend) = load_mlp(n) else { return };
     let mut rng = Pcg64::seed(3);
     let graph = Graph::build(Topology::Complete, n, &mut rng);
     let cost = CostModel::deterministic(0.4);
     let f0 = {
-        let (p, _) = backend.init(0);
+        let (p, _) = backend.init();
         backend.eval(&p).loss
     };
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+    };
+    let spec = RunSpec {
+        n,
+        events: 120,
+        lr: LrSchedule::Constant(0.05),
+        seed: 1,
+        name: "swarm-xla".into(),
         eval_every: 30,
         track_gamma: true,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Fixed(2),
-        mode: AveragingMode::NonBlocking,
-        lr: LrSchedule::Constant(0.05),
-        interactions: 120,
-        seed: 1,
-        name: "swarm-xla".into(),
-    };
-    let mut runner = SwarmRunner::new(cfg, &mut ctx);
-    let m = runner.run(&mut ctx);
+    let m = run_serial(&algo, &backend, &spec, &graph, &cost);
     assert!(
         m.final_eval_loss < 0.5 * f0,
         "loss {} vs init {}",
@@ -131,13 +128,13 @@ fn xla_qavg_kernel_matches_rust_codec() {
     // cross-layer contract: the Pallas lattice kernel (L1, via PJRT) and the
     // Rust codec (L3) implement the same hash -> identical lattice points.
     let Some(b) = load_mlp(1) else { return };
-    let d = b.param_count();
+    let d = b.dim();
     let mut rng = Pcg64::seed(9);
     let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
     let y: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
     let seed = 42u32;
     let eps = b.manifest().qavg_eps;
-    let got = b.model.qavg(&x, &y, seed).expect("qavg artifact");
+    let got = b.qavg(&x, &y, seed).expect("qavg artifact");
     let q = swarm_sgd::quant::quantize_unbiased(&y, eps, seed);
     for i in 0..d {
         let want = 0.5 * (x[i] + q[i]);
@@ -153,29 +150,24 @@ fn xla_qavg_kernel_matches_rust_codec() {
 #[test]
 fn quantized_swarm_on_xla_runs() {
     let n = 4;
-    let Some(mut backend) = load_mlp(n) else { return };
+    let Some(backend) = load_mlp(n) else { return };
     let mut rng = Pcg64::seed(4);
     let graph = Graph::build(Topology::Complete, n, &mut rng);
     let cost = CostModel::deterministic(0.4);
-    let mut ctx = RunContext {
-        backend: &mut backend,
-        graph: &graph,
-        cost: &cost,
-        rng: &mut rng,
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Geometric(2.0),
+        mode: AveragingMode::Quantized { bits: 8, eps: 1e-3 },
+    };
+    let spec = RunSpec {
+        n,
+        events: 60,
+        lr: LrSchedule::Constant(0.05),
+        seed: 2,
+        name: "swarm-xla-q".into(),
         eval_every: 0,
         track_gamma: false,
     };
-    let cfg = SwarmConfig {
-        n,
-        local_steps: LocalSteps::Geometric(2.0),
-        mode: AveragingMode::Quantized { bits: 8, eps: 1e-3 },
-        lr: LrSchedule::Constant(0.05),
-        interactions: 60,
-        seed: 2,
-        name: "swarm-xla-q".into(),
-    };
-    let mut runner = SwarmRunner::new(cfg, &mut ctx);
-    let m = runner.run(&mut ctx);
+    let m = run_serial(&algo, &backend, &spec, &graph, &cost);
     assert!(m.final_eval_loss.is_finite());
     assert!(m.total_bits > 0);
 }
