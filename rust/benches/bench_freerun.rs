@@ -1,0 +1,102 @@
+//! Free-running executor smoke bench: *real* interactions/second and
+//! staleness quantiles vs worker-thread count, for the two gossip
+//! algorithms the paper races (SwarmSGD and AD-PSGD), on an `n ≫ threads`
+//! sharded quadratic workload.
+//!
+//! Unlike `bench_parallel` this does not wrap runs in the timing harness:
+//! the free-running executor measures its own wall-clock throughput
+//! (`RunMetrics::freerun`), and its numbers are non-replayable and
+//! runner-dependent by contract — CI records them (`BENCH_freerun.json`),
+//! it never gates on them. `-- --test` runs the reduced smoke
+//! configuration.
+
+use std::io::Write;
+use swarm_sgd::coordinator::{
+    make_algorithm, run_freerun, AlgoOptions, AveragingMode, LocalSteps, LrSchedule, RunSpec,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+const N: usize = 64;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let (dim, t) = if smoke { (256, 4_000u64) } else { (2048, 40_000) };
+    println!("== freerun executor (n={N}, d={dim}, T={t}, quadratic oracle) ==");
+
+    // σ=0: draw-free oracle, so the numbers measure runtime + slot traffic
+    let backend = QuadraticOracle::new(dim, N, 1.0, 0.5, 2.0, 0.0, 3);
+    let graph = {
+        let mut rng = Pcg64::seed(5);
+        Graph::build(Topology::Complete, N, &mut rng)
+    };
+    let cost = CostModel::deterministic(0.4);
+    let spec = RunSpec {
+        n: N,
+        events: t,
+        lr: LrSchedule::Constant(0.02),
+        seed: 1,
+        name: "bench-freerun".into(),
+        eval_every: 0,
+        track_gamma: false,
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    for (name, opts) in [
+        (
+            "swarm",
+            AlgoOptions {
+                local_steps: LocalSteps::Fixed(4),
+                mode: AveragingMode::NonBlocking,
+                h_localsgd: 5,
+            },
+        ),
+        ("adpsgd", AlgoOptions::default()),
+    ] {
+        let algo = make_algorithm(name, &opts).expect("known algorithm");
+        for threads in [1usize, 2, 4] {
+            let shards = 2 * threads; // exercise multi-shard ownership
+            let m = run_freerun(algo.as_ref(), &backend, &spec, &graph, &cost, threads, shards);
+            let fr = m.freerun.as_ref().expect("freerun telemetry");
+            println!(
+                "{name:<7} x{threads} ({shards} shards): {:>9.0} interactions/s  \
+                 staleness p50={} p99={} max={}  read-retries={} cross-write drops={}",
+                fr.interactions_per_sec,
+                fr.staleness.p50(),
+                fr.staleness.p99(),
+                fr.staleness.max_observed(),
+                fr.slot_read_retries,
+                fr.slot_push_conflicts,
+            );
+            rows.push(format!(
+                "    {{\"algorithm\": \"{name}\", \"threads\": {threads}, \
+                 \"shards\": {shards}, \"interactions_per_sec\": {:.1}, \
+                 \"staleness_p50\": {}, \"staleness_p99\": {}, \
+                 \"staleness_mean\": {:.2}, \"slot_read_retries\": {}, \
+                 \"slot_publish_retries\": {}, \"slot_push_conflicts\": {}}}",
+                fr.interactions_per_sec,
+                fr.staleness.p50(),
+                fr.staleness.p99(),
+                fr.staleness.mean(),
+                fr.slot_read_retries,
+                fr.slot_publish_retries,
+                fr.slot_push_conflicts,
+            ));
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_freerun\",\n  \"workload\": \
+         {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \
+         \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::File::create("BENCH_freerun.json")
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("wrote BENCH_freerun.json"),
+        Err(e) => eprintln!("could not write BENCH_freerun.json: {e}"),
+    }
+}

@@ -91,20 +91,28 @@ swarm — SwarmSGD: decentralized SGD with asynchronous, local & quantized updat
 USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
                 [--algorithm swarm|poisson|adpsgd|dpsgd|sgp|localsgd|allreduce]
-                [--executor serial|parallel] [--threads K]
+                [--executor serial|parallel|freerun] [--threads K] [--shards S]
                 train one algorithm on one backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
-                shard, data_per_agent, artifacts_dir, batch_time, out_csv,
-                executor, threads
+                shard, data_per_agent, artifacts_dir, batch_time, jitter,
+                straggler_prob, straggle_factor, latency, bandwidth,
+                model_bytes, out_csv, executor, threads, shards
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
                 shared-memory worker threads (K=0: one per core). For the
                 oracle:* presets the same seed produces bit-identical
-                metrics on both executors at any thread count (the
+                metrics on both replay executors at any thread count (the
                 replay-determinism contract; the PJRT path's fused-step
                 heuristic is wall-clock-raced, so it is excluded).
+                --executor freerun (gossip algorithms only: swarm, poisson,
+                adpsgd) drops the schedule: K workers own S node shards
+                (S=0: one per worker; n >> cores supported), ring live
+                Poisson clocks, and average against non-blocking seqlock
+                model slots. Non-replayable by contract — in exchange it
+                measures real interactions/s, per-interaction staleness
+                (version lag), seqlock contention, and worker busy/wait.
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]
@@ -120,6 +128,9 @@ EXAMPLES:
   swarm train --algorithm adpsgd --set preset=oracle:quadratic,n=16
   swarm train --algorithm sgp --executor parallel --threads 4 \\
               --set preset=oracle:softmax,n=8,interactions=200
+  swarm train --algorithm swarm --executor freerun --threads 4 --shards 16 \\
+              --set preset=oracle:quadratic,n=64,interactions=20000
+  swarm train --set preset=oracle:quadratic,model_bytes=45000000,latency=1e-4
   swarm figure --id table1 --quick
   swarm figure --id all --out results
 ";

@@ -56,14 +56,26 @@ pub struct RunConfig {
     /// simulated compute seconds per local step
     pub batch_time: f64,
     pub jitter: f64,
+    /// probability a local step straggles (multiplied by `straggle_factor`)
+    pub straggler_prob: f64,
+    pub straggle_factor: f64,
+    /// p2p message latency (seconds)
+    pub latency: f64,
+    /// p2p effective bandwidth (bytes/second)
+    pub bandwidth: f64,
+    /// wire-size override in bytes for the simulated model (0 = native 4·d)
+    pub model_bytes: u64,
     /// results CSV path ("" = don't write)
     pub out_csv: String,
-    /// serial | parallel — which executor drains the algorithm's event
-    /// schedule (parallel = shared-memory worker threads); every
-    /// `--algorithm` runs on either executor
+    /// serial | parallel | freerun — which executor runs the algorithm.
+    /// `serial`/`parallel` drain the pre-drawn schedule (bit-replayable);
+    /// `freerun` is the free-running sharded runtime (throughput-faithful,
+    /// non-replayable, gossip algorithms only)
     pub executor: String,
-    /// worker threads for the parallel executor (0 = one per available core)
+    /// worker threads for the parallel/freerun executors (0 = one per core)
     pub threads: usize,
+    /// node shards for the freerun executor (0 = one shard per worker)
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -89,9 +101,15 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             batch_time: 0.4,
             jitter: 0.05,
+            straggler_prob: 0.01,
+            straggle_factor: 3.0,
+            latency: 1.5e-6,
+            bandwidth: 10.0e9,
+            model_bytes: 0,
             out_csv: String::new(),
             executor: "serial".into(),
             threads: 0,
+            shards: 0,
         }
     }
 }
@@ -161,12 +179,24 @@ impl RunConfig {
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "batch_time" => self.batch_time = value.parse().map_err(|_| bad(key, value))?,
             "jitter" => self.jitter = value.parse().map_err(|_| bad(key, value))?,
+            "straggler_prob" => {
+                self.straggler_prob = value.parse().map_err(|_| bad(key, value))?
+            }
+            "straggle_factor" => {
+                self.straggle_factor = value.parse().map_err(|_| bad(key, value))?
+            }
+            "latency" => self.latency = value.parse().map_err(|_| bad(key, value))?,
+            "bandwidth" => self.bandwidth = value.parse().map_err(|_| bad(key, value))?,
+            "model_bytes" | "model_bytes_override" => {
+                self.model_bytes = value.parse().map_err(|_| bad(key, value))?
+            }
             "out_csv" => self.out_csv = value.into(),
             "executor" => match value {
-                "serial" | "parallel" => self.executor = value.into(),
+                "serial" | "parallel" | "freerun" => self.executor = value.into(),
                 _ => return Err(bad(key, value)),
             },
             "threads" => self.threads = value.parse().map_err(|_| bad(key, value))?,
+            "shards" => self.shards = value.parse().map_err(|_| bad(key, value))?,
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -217,11 +247,21 @@ impl RunConfig {
         })
     }
 
+    /// Fully configured [`CostModel`] — every knob is INI/CLI-reachable
+    /// (defaults match `CostModel::default()`, so omitting keys is neutral).
     pub fn cost_model(&self) -> CostModel {
         CostModel {
             batch_time: self.batch_time,
             jitter: self.jitter,
-            ..CostModel::default()
+            straggler_prob: self.straggler_prob,
+            straggle_factor: self.straggle_factor,
+            latency: self.latency,
+            bandwidth: self.bandwidth,
+            model_bytes_override: if self.model_bytes > 0 {
+                Some(self.model_bytes)
+            } else {
+                None
+            },
         }
     }
 
@@ -236,6 +276,17 @@ impl RunConfig {
             self.threads
         } else {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        }
+    }
+
+    /// Node-shard count for the freerun executor: the configured value, or
+    /// one shard per worker thread when left at 0 ("auto"). The executor
+    /// clamps to `[1, n]`.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            self.effective_threads()
         }
     }
 }
@@ -310,5 +361,51 @@ mod tests {
         assert!(c.set("threads", "many").is_err());
         c.set("threads", "0").unwrap();
         assert!(c.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn freerun_executor_and_shards_parse() {
+        let mut c = RunConfig::default();
+        c.set("executor", "freerun").unwrap();
+        assert_eq!(c.executor, "freerun");
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.effective_shards(), 4, "shards default to one per worker");
+        c.set("shards", "16").unwrap();
+        assert_eq!(c.effective_shards(), 16);
+        assert!(c.set("shards", "lots").is_err());
+    }
+
+    #[test]
+    fn cost_model_knobs_are_fully_wired() {
+        // defaults must reproduce CostModel::default() exactly, so configs
+        // that omit the keys keep their pre-existing behavior
+        let d = RunConfig::default().cost_model();
+        let want = CostModel::default();
+        assert_eq!(d.batch_time, want.batch_time);
+        assert_eq!(d.jitter, want.jitter);
+        assert_eq!(d.straggler_prob, want.straggler_prob);
+        assert_eq!(d.straggle_factor, want.straggle_factor);
+        assert_eq!(d.latency, want.latency);
+        assert_eq!(d.bandwidth, want.bandwidth);
+        assert_eq!(d.model_bytes_override, want.model_bytes_override);
+
+        let c = RunConfig::from_ini(
+            "[run]\nstraggler_prob = 0.2\nstraggle_factor = 5\nlatency = 1e-4\n\
+             bandwidth = 1e9\nmodel_bytes = 45000000\nbatch_time = 0.1\njitter = 0\n",
+        )
+        .unwrap();
+        let m = c.cost_model();
+        assert_eq!(m.straggler_prob, 0.2);
+        assert_eq!(m.straggle_factor, 5.0);
+        assert_eq!(m.latency, 1e-4);
+        assert_eq!(m.bandwidth, 1e9);
+        assert_eq!(m.model_bytes_override, Some(45_000_000));
+        assert_eq!(m.batch_time, 0.1);
+        assert_eq!(m.jitter, 0.0);
+
+        let mut z = RunConfig::default();
+        z.set("model_bytes_override", "0").unwrap();
+        assert_eq!(z.cost_model().model_bytes_override, None);
+        assert!(z.set("bandwidth", "fast").is_err());
     }
 }

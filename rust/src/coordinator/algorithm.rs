@@ -163,6 +163,24 @@ pub struct EventOutcome {
     pub fallbacks: u64,
 }
 
+/// How the free-running executor ([`super::run_freerun`]) drives one
+/// initiator-side interaction for a gossip algorithm: how many local SGD
+/// steps the initiator runs, and which averaging rule it applies against
+/// the partner's published (possibly stale) slot snapshot.
+///
+/// Only algorithms that schedule 2-node events advertise one — the
+/// synchronous round-based baselines are whole-cluster barriers by
+/// definition and return `None` from [`Algorithm::gossip_profile`].
+#[derive(Clone, Copy, Debug)]
+pub struct GossipProfile {
+    /// local SGD steps per interaction (fixed H or geometric with mean H)
+    pub local_steps: super::LocalSteps,
+    /// averaging rule against the partner snapshot. `Blocking` means
+    /// live-model averaging (the AD-PSGD rule) — in the free-running
+    /// executor the snapshot *read* still never blocks anyone.
+    pub mode: super::AveragingMode,
+}
+
 /// The models an evaluation barrier measures.
 pub struct RoundModels {
     /// consensus model evaluated as μ_t (mean by default; SGP: Σx/Σw)
@@ -215,6 +233,13 @@ pub trait Algorithm: Sync {
             consensus: mean_model(states),
             individual: states[pick].params.clone(),
         }
+    }
+
+    /// Free-running gossip profile: `Some` iff the algorithm schedules
+    /// 2-node events and can run initiator-driven on
+    /// [`super::run_freerun`]. Default `None` (round-based semantics).
+    fn gossip_profile(&self) -> Option<GossipProfile> {
+        None
     }
 }
 

@@ -10,9 +10,11 @@
 //! SwarmSGD — the paper's async-baseline comparison on real threads.
 
 use crate::coordinator::algorithm::{
-    pair, step_once, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
+    pair, step_once, Algorithm, Event, EventOutcome, GossipProfile, InteractionSchedule,
+    NodeState, StepCtx,
 };
 use crate::coordinator::cluster::average_into_both;
+use crate::coordinator::{AveragingMode, LocalSteps};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -71,6 +73,16 @@ impl Algorithm for AdPsgd {
     /// the paper's baseline tables.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
+    }
+
+    /// Free-running profile: one step per interaction, live-model averaging
+    /// against the partner's published snapshot. The snapshot read never
+    /// blocks the partner — the `Blocking` tag names the averaging rule.
+    fn gossip_profile(&self) -> Option<GossipProfile> {
+        Some(GossipProfile {
+            local_steps: LocalSteps::Fixed(1),
+            mode: AveragingMode::Blocking,
+        })
     }
 }
 

@@ -38,7 +38,6 @@
 //! its dependencies satisfied.
 
 use super::algorithm::{Algorithm, Event, NodeState, StepCtx};
-use super::engine::NodeClocks;
 use super::metrics::{CurvePoint, RunMetrics};
 use super::LrSchedule;
 use crate::analysis::gamma_potential;
@@ -191,35 +190,22 @@ fn run_schedule(
         .into_iter()
         .map(|n| n.into_inner().expect("node lock poisoned"))
         .collect();
-    let clocks = NodeClocks::from_parts(
-        states.iter().map(|s| s.time).collect(),
-        states.iter().map(|s| s.compute).sum(),
-        states.iter().map(|s| s.comm_time).sum(),
+    m.finalize(
+        &states,
+        backend,
+        total,
+        bits.into_inner(),
+        fallbacks.into_inner(),
+        label,
+        threads,
     );
-    m.interactions = total;
-    m.local_steps = states.iter().map(|s| s.steps).sum();
-    m.sim_time = clocks.max_time();
-    m.compute_time_total = clocks.compute_total;
-    m.comm_time_total = clocks.comm_total;
-    m.total_bits = bits.into_inner();
-    m.quant_fallbacks = fallbacks.into_inner();
-    m.epochs = states
-        .iter()
-        .enumerate()
-        .map(|(i, s)| backend.epochs(i, s.steps))
-        .sum::<f64>()
-        / spec.n as f64;
-    m.executor = label.to_string();
-    m.threads = threads;
-    if let Some(p) = m.curve.last() {
-        m.final_eval_loss = p.eval_loss;
-        m.final_eval_acc = p.eval_acc;
-    }
     m
 }
 
 /// Chunk ends: every multiple of `eval_every` in `(0, total)`, then `total`.
-fn milestones(total: u64, eval_every: u64) -> Vec<u64> {
+/// (Shared with the free-running executor, which records all but the final
+/// mark from live slot snapshots.)
+pub(super) fn milestones(total: u64, eval_every: u64) -> Vec<u64> {
     let mut v = Vec::new();
     if total == 0 {
         return v;

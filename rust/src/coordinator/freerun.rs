@@ -1,0 +1,628 @@
+//! The free-running executor (`--executor freerun`): OS-thread workers
+//! over node *shards*, live Poisson clocks, and non-blocking model slots.
+//!
+//! The two replay executors ([`super::run_serial`] / [`super::run_parallel`])
+//! drain a pre-drawn schedule, which makes them bit-replayable — and makes
+//! it impossible for them to *measure* the thing the paper actually claims:
+//! that non-blocking gossip wins on wall-clock because nobody ever waits.
+//! This executor drops the schedule entirely:
+//!
+//! * **Sharded workers** — `n` nodes are partitioned into `S` shards and
+//!   the shards are dealt round-robin to `K` OS threads, so `n ≫ cores`
+//!   runs without one-thread-per-node. A worker *owns* its nodes outright
+//!   (no locks on node state, ever); everything cross-worker flows through
+//!   the slots.
+//! * **Live Poisson clocks** — each worker keeps a clock heap over its own
+//!   nodes (rate-1 exponential inter-arrival, the paper's §2 model). When a
+//!   node rings, the worker picks a uniform random neighbor *at that
+//!   moment* and runs the interaction — partners are chosen on the fly, not
+//!   replayed. Each worker executes an event quota proportional to the
+//!   nodes it owns, so per-node initiation rates stay uniform even when
+//!   the shard deal is uneven or workers run at different speeds.
+//! * **Non-blocking model slots** — every node publishes its communication
+//!   copy X' into a seqlock-style versioned double buffer (`ModelSlot`).
+//!   An initiator seqlock-reads the partner's slot (a possibly-stale
+//!   snapshot; the partner is **never** delayed), applies the algorithm's
+//!   averaging rule on its own side, republishes its own slot, and
+//!   best-effort cross-writes the pair average into the partner's slot
+//!   (Algorithm 2's symmetric X' update) — if that CAS loses a race it is
+//!   *dropped and counted*, not waited on. In quantized mode the snapshot
+//!   crosses the simulated wire through the lattice codec
+//!   ([`super::quantized_transfer`]), decode-fallbacks included.
+//!
+//! # Contract split
+//!
+//! `serial`/`parallel` are **bit-replayable**; `freerun` is
+//! **throughput-faithful but non-replayable** — thread interleaving is real,
+//! so two runs of the same seed differ in the bits. Tests against this
+//! executor must be statistical (tolerance-based convergence, telemetry
+//! invariants), never bit-equality. What freerun gives back is telemetry
+//! the replay executors cannot produce ([`super::telemetry`]): real
+//! interactions/sec, per-interaction staleness (version-lag) histograms,
+//! seqlock retry counts, and per-worker busy/wait splits, surfaced in
+//! [`RunMetrics::freerun`].
+//!
+//! Only algorithms that schedule 2-node events run here — those advertise
+//! an initiator-side [`GossipProfile`] via
+//! [`Algorithm::gossip_profile`] (`swarm`, `poisson`, `adpsgd`); the
+//! synchronous round-based baselines are whole-cluster barriers by
+//! definition and refuse.
+
+use super::algorithm::{local_phase, mean_params, Algorithm, GossipProfile, NodeState, StepCtx};
+use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
+use super::executor::{milestones, RunSpec};
+use super::metrics::{CurvePoint, RunMetrics};
+use super::swarm::AveragingMode;
+use super::telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
+use super::LrSchedule;
+use crate::analysis::gamma_potential;
+use crate::backend::Backend;
+use crate::netmodel::CostModel;
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+use std::cell::UnsafeCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Stream tags for the executor's sub-RNGs (disjoint from the replay
+/// executors' tags; worker streams use `STREAM_WORKER_BASE + worker`).
+const STREAM_EVAL: u64 = 0x5EED_F4EE_0000_0001;
+const STREAM_WORKER_BASE: u64 = 0x5EED_F4EE_0000_0010;
+const STREAM_NODE_BASE: u64 = 0x5EED_F4EE_0000_1000;
+
+/// Seqlock-style versioned double buffer holding one node's published
+/// communication copy plus the global interaction count at publish time
+/// (the staleness stamp). Readers never block writers and vice versa;
+/// multiple writers are arbitrated by a CAS on the odd bit, and the
+/// best-effort cross-write path simply gives up (and is counted) when it
+/// loses that race.
+struct ModelSlot {
+    /// odd = write in progress; `(seq >> 1) & 1` = active buffer index
+    seq: AtomicU64,
+    buf: [UnsafeCell<Vec<f32>>; 2],
+    /// global interaction count at publish, aligned with `buf`
+    stamp: [AtomicU64; 2],
+}
+
+// Safety: a buffer is only written while the writer holds the odd seq mark
+// (exclusive via compare_exchange), and readers validate the version
+// counter around their copy, retrying on any change; the seq stores and
+// fences provide the release/acquire edges. Same protocol as PR 1's
+// CommSlot, extended with CAS writer arbitration and a publish stamp.
+unsafe impl Sync for ModelSlot {}
+
+impl ModelSlot {
+    fn new(init: &[f32]) -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            buf: [UnsafeCell::new(init.to_vec()), UnsafeCell::new(init.to_vec())],
+            stamp: [AtomicU64::new(0), AtomicU64::new(0)],
+        }
+    }
+
+    /// One publish attempt; false if another writer holds the slot.
+    fn try_publish(&self, data: &[f32], stamp: u64) -> bool {
+        let s = self.seq.load(Ordering::Relaxed);
+        if s & 1 == 1 {
+            return false;
+        }
+        if self
+            .seq
+            .compare_exchange(s, s.wrapping_add(1), Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        let idx = (((s >> 1) + 1) & 1) as usize;
+        unsafe { (*self.buf[idx].get()).copy_from_slice(data) };
+        self.stamp[idx].store(stamp, Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(2), Ordering::Release);
+        true
+    }
+
+    /// Publish, spinning out any concurrent cross-writer (owners must
+    /// succeed). Returns the CAS retries burned.
+    fn publish(&self, data: &[f32], stamp: u64) -> u64 {
+        let mut retries = 0;
+        while !self.try_publish(data, stamp) {
+            retries += 1;
+            std::hint::spin_loop();
+        }
+        retries
+    }
+
+    /// Seqlock read of the current copy into `out`; returns the publish
+    /// stamp and the retries burned racing concurrent writes.
+    fn read_into(&self, out: &mut [f32]) -> (u64, u64) {
+        let mut retries = 0;
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                retries += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            let idx = ((s1 >> 1) & 1) as usize;
+            out.copy_from_slice(unsafe { &*self.buf[idx].get() });
+            let stamp = self.stamp[idx].load(Ordering::Relaxed);
+            // the copy must complete before the validating re-read
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return (stamp, retries);
+            }
+            retries += 1;
+        }
+    }
+}
+
+/// Shared run state visible to every worker and the evaluation monitor.
+struct FreeShared<'a> {
+    backend: &'a dyn Backend,
+    cost: &'a CostModel,
+    graph: &'a Graph,
+    lr: LrSchedule,
+    profile: GossipProfile,
+    slots: Vec<ModelSlot>,
+    /// next unclaimed global event index
+    claimed: AtomicU64,
+    /// completed interactions — the staleness clock
+    done: AtomicU64,
+    bits: AtomicU64,
+    fallbacks: AtomicU64,
+    total: u64,
+    dim: usize,
+    n: usize,
+}
+
+/// f64-ordered clock-heap entry (same shape as the Poisson scheduler's).
+#[derive(PartialEq)]
+struct Tick {
+    at: f64,
+    /// index into the worker's owned-node vector
+    ix: usize,
+}
+
+impl Eq for Tick {}
+impl PartialOrd for Tick {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Tick {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.partial_cmp(&other.at).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// What one worker hands back at join time.
+struct WorkerResult {
+    states: Vec<(usize, NodeState)>,
+    activity: WorkerActivity,
+    read_retries: u64,
+    publish_retries: u64,
+    push_conflicts: u64,
+    staleness: StalenessHistogram,
+}
+
+/// Run `spec.events` free-running gossip interactions on `threads` workers
+/// over `shards` node shards (`--executor freerun --threads K --shards S`).
+///
+/// Non-replayable by contract (see the module docs); returns the usual
+/// [`RunMetrics`] plus [`RunMetrics::freerun`] telemetry.
+///
+/// # Panics
+///
+/// Panics if the algorithm does not advertise a [`GossipProfile`]
+/// (round-based baselines schedule whole-cluster barriers, which have no
+/// free-running semantics). The CLI checks this up front.
+pub fn run_freerun(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+    threads: usize,
+    shards: usize,
+) -> RunMetrics {
+    let profile = algo.gossip_profile().unwrap_or_else(|| {
+        panic!(
+            "--executor freerun requires a gossip algorithm (2-node events); \
+             '{}' schedules whole-cluster rounds",
+            algo.name()
+        )
+    });
+    assert!(spec.n >= 2, "gossip needs n >= 2");
+    assert_eq!(spec.n, graph.n(), "spec n must match graph");
+    let threads = threads.max(1);
+    let shards = shards.clamp(1, spec.n);
+    let n = spec.n;
+    let dim = backend.dim();
+    let (p0, m0) = backend.init();
+    assert_eq!(p0.len(), dim, "backend dim() must match its init vector");
+
+    // deal node k to shard k % S, shard s to worker s % K
+    let mut owned: Vec<Vec<(usize, NodeState)>> = (0..threads).map(|_| Vec::new()).collect();
+    for k in 0..n {
+        let st = NodeState::new(
+            p0.clone(),
+            m0.clone(),
+            Pcg64::stream(spec.seed, STREAM_NODE_BASE + k as u64),
+        );
+        owned[(k % shards) % threads].push((k, st));
+    }
+    let sh = FreeShared {
+        backend,
+        cost,
+        graph,
+        lr: spec.lr,
+        profile,
+        slots: (0..n).map(|_| ModelSlot::new(&p0)).collect(),
+        claimed: AtomicU64::new(0),
+        done: AtomicU64::new(0),
+        bits: AtomicU64::new(0),
+        fallbacks: AtomicU64::new(0),
+        total: spec.events,
+        dim,
+        n,
+    };
+    // staleness is measured in global interaction counts; lags beyond a few
+    // multiples of n land in the overflow bucket (quantiles then report max)
+    let staleness_cap = (8 * n).max(1024);
+
+    // each worker executes an event quota proportional to the nodes it
+    // owns, so per-node initiation rates stay uniform (the rate-1 Poisson
+    // model) even when the shard deal is uneven (shards % threads != 0) or
+    // workers run at different speeds
+    let quotas: Vec<u64> = {
+        let counts: Vec<u64> = owned.iter().map(|v| v.len() as u64).collect();
+        let mut q: Vec<u64> = counts
+            .iter()
+            .map(|&c| (spec.events as u128 * c as u128 / n as u128) as u64)
+            .collect();
+        let mut leftover = spec.events - q.iter().sum::<u64>();
+        let mut w = 0usize;
+        while leftover > 0 {
+            if counts[w] > 0 {
+                q[w] += 1;
+                leftover -= 1;
+            }
+            w = (w + 1) % threads;
+        }
+        q
+    };
+
+    let mut m = RunMetrics::new(&spec.name);
+    let mut eval_rng = Pcg64::stream(spec.seed, STREAM_EVAL);
+    let marks = milestones(spec.events, spec.eval_every);
+    // all but the final milestone are recorded live from non-blocking slot
+    // snapshots; the final point is computed exactly from the joined states
+    let live_marks = &marks[..marks.len().saturating_sub(1)];
+
+    let started = Instant::now();
+    let results: Vec<WorkerResult> = std::thread::scope(|scope| {
+        let shref = &sh;
+        let seed = spec.seed;
+        let handles: Vec<_> = owned
+            .into_iter()
+            .enumerate()
+            .map(|(wid, nodes)| {
+                let quota = quotas[wid];
+                scope.spawn(move || worker_loop(shref, nodes, wid, seed, staleness_cap, quota))
+            })
+            .collect();
+        // evaluation monitor: snapshots the published slots without ever
+        // stopping the workers — the free-running analogue of eval
+        // barriers. Best-effort by contract: a run that drains faster than
+        // the sampling loop records fewer live points (only the final
+        // exact point is guaranteed), and nothing is recorded at d ≥ total
+        // (the exact final point covers the end).
+        let mut next = 0usize;
+        while !handles.iter().all(|h| h.is_finished()) {
+            let d = sh.done.load(Ordering::Acquire);
+            if next < live_marks.len() && d >= live_marks[next] && d < sh.total {
+                m.push(slot_point(&sh, algo, d, spec.track_gamma, &mut eval_rng));
+                while next < live_marks.len() && live_marks[next] <= d {
+                    next += 1;
+                }
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("freerun worker panicked"))
+            .collect()
+    });
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    // merge worker-local telemetry and reassemble the node states
+    let mut staleness = StalenessHistogram::new(staleness_cap);
+    let mut workers: Vec<WorkerActivity> = Vec::with_capacity(threads);
+    let (mut read_retries, mut publish_retries, mut push_conflicts) = (0u64, 0u64, 0u64);
+    let mut tagged: Vec<(usize, NodeState)> = Vec::with_capacity(n);
+    for r in results {
+        staleness.merge(&r.staleness);
+        workers.push(r.activity);
+        read_retries += r.read_retries;
+        publish_retries += r.publish_retries;
+        push_conflicts += r.push_conflicts;
+        tagged.extend(r.states);
+    }
+    tagged.sort_by_key(|&(k, _)| k);
+    let states: Vec<NodeState> = tagged.into_iter().map(|(_, s)| s).collect();
+    debug_assert_eq!(states.len(), n);
+
+    // exact final evaluation point from the joined states
+    {
+        let refs: Vec<&NodeState> = states.iter().collect();
+        let pick = eval_rng.below_usize(n);
+        let models = algo.round_metrics(&refs, pick);
+        let ev = backend.eval(&models.consensus);
+        let ind = backend.eval(&models.individual);
+        m.final_model = models.consensus;
+        let gamma = if spec.track_gamma {
+            let live: Vec<Vec<f32>> = states.iter().map(|s| s.params.clone()).collect();
+            gamma_potential(&live)
+        } else {
+            f64::NAN
+        };
+        let finite: Vec<f64> =
+            states.iter().map(|s| s.last_loss).filter(|l| l.is_finite()).collect();
+        let train_loss = if finite.is_empty() {
+            f64::NAN
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        };
+        m.push(CurvePoint {
+            t: spec.events,
+            parallel_time: algo.parallel_time(spec.events, n),
+            sim_time: states.iter().map(|s| s.time).fold(0.0, f64::max),
+            epochs: states
+                .iter()
+                .enumerate()
+                .map(|(i, s)| backend.epochs(i, s.steps))
+                .sum::<f64>()
+                / n as f64,
+            train_loss,
+            eval_loss: ev.loss,
+            eval_acc: ev.accuracy,
+            indiv_loss: ind.loss,
+            gamma,
+            bits: sh.bits.load(Ordering::Relaxed),
+        });
+    }
+
+    let total_bits = sh.bits.into_inner();
+    let quant_fallbacks = sh.fallbacks.into_inner();
+    m.finalize(&states, backend, spec.events, total_bits, quant_fallbacks, "freerun", threads);
+    m.freerun = Some(FreerunStats {
+        threads,
+        shards,
+        wall_secs,
+        interactions_per_sec: spec.events as f64 / wall_secs.max(1e-9),
+        slot_read_retries: read_retries,
+        slot_publish_retries: publish_retries,
+        slot_push_conflicts: push_conflicts,
+        staleness,
+        workers,
+    });
+    m
+}
+
+/// One worker: execute its event quota (proportional to the nodes it
+/// owns), ringing own nodes off the local Poisson heap and running
+/// initiator-side interactions against slot snapshots. The global
+/// `claimed` counter only sequences event indices (for the lr schedule);
+/// it never redistributes work, so per-node initiation rates stay uniform
+/// regardless of worker speed or shard-deal imbalance.
+fn worker_loop(
+    sh: &FreeShared<'_>,
+    mut owned: Vec<(usize, NodeState)>,
+    wid: usize,
+    seed: u64,
+    staleness_cap: usize,
+    quota: u64,
+) -> WorkerResult {
+    let mut res = WorkerResult {
+        states: Vec::new(),
+        activity: WorkerActivity::default(),
+        read_retries: 0,
+        publish_retries: 0,
+        push_conflicts: 0,
+        staleness: StalenessHistogram::new(staleness_cap),
+    };
+    if owned.is_empty() || quota == 0 {
+        res.states = owned;
+        return res;
+    }
+    let mut rng = Pcg64::stream(seed, STREAM_WORKER_BASE + wid as u64);
+    let mut heap: BinaryHeap<Reverse<Tick>> = BinaryHeap::new();
+    for ix in 0..owned.len() {
+        heap.push(Reverse(Tick { at: rng.exponential(1.0), ix }));
+    }
+    for _ in 0..quota {
+        let t = sh.claimed.fetch_add(1, Ordering::Relaxed);
+        debug_assert!(t < sh.total, "worker quotas must sum to the event budget");
+        let started = Instant::now();
+        let mut sync_secs = 0.0f64;
+        let Reverse(Tick { at, ix }) = heap.pop().expect("non-empty worker heap");
+        let node = owned[ix].0;
+        let st = &mut owned[ix].1;
+        // the node rings: pick a partner *now* and draw the local phase
+        let partner = sh.graph.sample_neighbor(node, &mut rng);
+        let h = sh.profile.local_steps.sample(&mut rng);
+        let ctx = StepCtx {
+            backend: sh.backend,
+            cost: sh.cost,
+            graph: sh.graph,
+            lr: sh.lr.at(t + 1),
+            dim: sh.dim,
+            n: sh.n,
+        };
+        local_phase(&ctx, node, st, h);
+        // non-blocking snapshot of the partner's published copy
+        let t0 = Instant::now();
+        let (stamp, retries) = sh.slots[partner].read_into(&mut st.inbox);
+        sync_secs += t0.elapsed().as_secs_f64();
+        res.read_retries += retries;
+        res.staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
+        // the algorithm's averaging rule, initiator side only — the partner
+        // is never touched, let alone delayed
+        let full_bytes = sh.cost.wire_bytes(sh.dim);
+        let (exch, wire_bits) = match sh.profile.mode {
+            AveragingMode::Blocking => {
+                // live-model averaging (AD-PSGD-style); the *read* still
+                // never blocks — "blocking" is the averaging rule, not the
+                // synchronization
+                average_into_both(&mut st.params, &mut st.inbox);
+                st.comm.copy_from_slice(&st.params);
+                (sh.cost.exchange_time(full_bytes), 2 * 8 * full_bytes)
+            }
+            AveragingMode::NonBlocking => {
+                nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
+                (sh.cost.exchange_time(full_bytes), 2 * 8 * full_bytes)
+            }
+            AveragingMode::Quantized { bits, eps } => {
+                let tr = quantized_transfer(&st.inbox, &st.snap, eps, bits, rng.next_u32());
+                if tr.fell_back {
+                    sh.fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+                st.inbox.copy_from_slice(&tr.decoded);
+                nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
+                // quantized pull + the symmetric cross-write payload
+                let push_bits = sh.dim as u64 * bits as u64 + 160;
+                let wire = sh.cost.scale_bits(tr.bits + push_bits, sh.dim);
+                (sh.cost.exchange_time(wire.div_ceil(8)), wire)
+            }
+        };
+        st.time += exch;
+        st.comm_time += exch;
+        st.interactions += 1;
+        sh.bits.fetch_add(wire_bits, Ordering::Relaxed);
+        // republish our copy; best-effort cross-write of the pair average
+        // (st.comm IS the pair average under every mode above) into the
+        // partner's slot — dropped and counted if the slot is held
+        let stamp_now = sh.done.load(Ordering::Relaxed);
+        let t1 = Instant::now();
+        res.publish_retries += sh.slots[node].publish(&st.comm, stamp_now);
+        if !sh.slots[partner].try_publish(&st.comm, stamp_now) {
+            res.push_conflicts += 1;
+        }
+        sync_secs += t1.elapsed().as_secs_f64();
+        // re-arm this node's Poisson clock
+        heap.push(Reverse(Tick { at: at + rng.exponential(1.0), ix }));
+        sh.done.fetch_add(1, Ordering::Release);
+        let dt = started.elapsed().as_secs_f64();
+        res.activity.busy_secs += (dt - sync_secs).max(0.0);
+        res.activity.wait_secs += sync_secs;
+        res.activity.interactions += 1;
+    }
+    res.states = owned;
+    res
+}
+
+/// A live curve point from non-blocking slot snapshots: consensus/individual
+/// models come from the *published* copies (the workers are not stopped, so
+/// per-node clocks and losses are unavailable — those fields are NaN).
+fn slot_point(
+    sh: &FreeShared<'_>,
+    algo: &dyn Algorithm,
+    t: u64,
+    track_gamma: bool,
+    eval_rng: &mut Pcg64,
+) -> CurvePoint {
+    let mut snaps: Vec<Vec<f32>> = Vec::with_capacity(sh.n);
+    let mut buf = vec![0.0f32; sh.dim];
+    for slot in &sh.slots {
+        slot.read_into(&mut buf);
+        snaps.push(buf.clone());
+    }
+    let consensus = mean_params(snaps.iter().map(|v| v.as_slice()), sh.dim, sh.n);
+    let pick = eval_rng.below_usize(sh.n);
+    let ev = sh.backend.eval(&consensus);
+    let ind = sh.backend.eval(&snaps[pick]);
+    let gamma = if track_gamma { gamma_potential(&snaps) } else { f64::NAN };
+    CurvePoint {
+        t,
+        parallel_time: algo.parallel_time(t, sh.n),
+        sim_time: f64::NAN,
+        epochs: f64::NAN,
+        train_loss: f64::NAN,
+        eval_loss: ev.loss,
+        eval_acc: ev.accuracy,
+        indiv_loss: ind.loss,
+        gamma,
+        bits: sh.bits.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_roundtrips_data_and_stamp() {
+        let s = ModelSlot::new(&[1.0, 2.0]);
+        let mut out = vec![0.0f32; 2];
+        let (stamp, _) = s.read_into(&mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(stamp, 0);
+        assert_eq!(s.publish(&[3.0, 4.0], 7), 0);
+        let (stamp, _) = s.read_into(&mut out);
+        assert_eq!(out, vec![3.0, 4.0]);
+        assert_eq!(stamp, 7);
+    }
+
+    #[test]
+    fn slot_sequential_publishes_always_succeed() {
+        let s = ModelSlot::new(&[0.0]);
+        assert!(s.try_publish(&[1.0], 1));
+        assert!(s.try_publish(&[2.0], 2));
+        let mut out = vec![0.0f32];
+        let (stamp, _) = s.read_into(&mut out);
+        assert_eq!(out, vec![2.0]);
+        assert_eq!(stamp, 2);
+    }
+
+    #[test]
+    fn slot_concurrent_reads_see_consistent_pairs() {
+        // hammer one slot from a writer and several readers: every read
+        // must return one of the published (data, stamp) pairs intact
+        let dim = 64;
+        let s = ModelSlot::new(&vec![0.0f32; dim]);
+        let writes = 2_000u64;
+        std::thread::scope(|scope| {
+            let sref = &s;
+            scope.spawn(move || {
+                for v in 1..=writes {
+                    let data = vec![v as f32; dim];
+                    sref.publish(&data, v);
+                }
+            });
+            for _ in 0..3 {
+                scope.spawn(move || {
+                    let mut out = vec![0.0f32; dim];
+                    for _ in 0..2_000 {
+                        let (stamp, _) = sref.read_into(&mut out);
+                        let v = out[0];
+                        assert!(out.iter().all(|&x| x == v), "torn read");
+                        assert_eq!(stamp, v as u64, "stamp/data pair mixed");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn tick_heap_orders_by_time() {
+        let mut heap: BinaryHeap<Reverse<Tick>> = BinaryHeap::new();
+        heap.push(Reverse(Tick { at: 2.0, ix: 0 }));
+        heap.push(Reverse(Tick { at: 0.5, ix: 1 }));
+        heap.push(Reverse(Tick { at: 1.0, ix: 2 }));
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|Reverse(t)| t.ix))
+            .collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+}

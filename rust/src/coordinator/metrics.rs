@@ -1,6 +1,11 @@
 //! Run metrics: loss/accuracy curves on all the paper's axes
 //! (interactions, parallel time, simulated seconds, epochs, bits).
 
+use super::algorithm::NodeState;
+use super::engine::NodeClocks;
+use super::telemetry::FreerunStats;
+use crate::backend::Backend;
+
 /// One evaluation point along a run.
 #[derive(Clone, Copy, Debug)]
 pub struct CurvePoint {
@@ -48,10 +53,13 @@ pub struct RunMetrics {
     pub final_model: Vec<f32>,
     /// mean data epochs per agent at the end
     pub epochs: f64,
-    /// which executor produced this run ("serial" | "parallel")
+    /// which executor produced this run ("serial" | "parallel" | "freerun")
     pub executor: String,
     /// worker threads the executor ran with (serial runs report 1)
     pub threads: usize,
+    /// contention/staleness telemetry — only the free-running executor
+    /// produces it; `None` for the replay executors
+    pub freerun: Option<FreerunStats>,
 }
 
 impl RunMetrics {
@@ -61,6 +69,47 @@ impl RunMetrics {
 
     pub fn push(&mut self, p: CurvePoint) {
         self.curve.push(p);
+    }
+
+    /// Fill the aggregate tail every executor shares, from the final node
+    /// states: totals (steps, bits, fallbacks), per-node f64 clock
+    /// reductions in node-index order (bit-identical across executors),
+    /// epochs, the executor tag, and the final eval from the last curve
+    /// point. Call after the last curve point is pushed.
+    pub(super) fn finalize(
+        &mut self,
+        states: &[NodeState],
+        backend: &dyn Backend,
+        total: u64,
+        total_bits: u64,
+        quant_fallbacks: u64,
+        executor: &str,
+        threads: usize,
+    ) {
+        let clocks = NodeClocks::from_parts(
+            states.iter().map(|s| s.time).collect(),
+            states.iter().map(|s| s.compute).sum(),
+            states.iter().map(|s| s.comm_time).sum(),
+        );
+        self.interactions = total;
+        self.local_steps = states.iter().map(|s| s.steps).sum();
+        self.sim_time = clocks.max_time();
+        self.compute_time_total = clocks.compute_total;
+        self.comm_time_total = clocks.comm_total;
+        self.total_bits = total_bits;
+        self.quant_fallbacks = quant_fallbacks;
+        self.epochs = states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| backend.epochs(i, s.steps))
+            .sum::<f64>()
+            / states.len().max(1) as f64;
+        self.executor = executor.to_string();
+        self.threads = threads;
+        if let Some(p) = self.curve.last() {
+            self.final_eval_loss = p.eval_loss;
+            self.final_eval_acc = p.eval_acc;
+        }
     }
 
     /// Average communication seconds per local step per node — the y-axis of

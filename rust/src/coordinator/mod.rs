@@ -17,6 +17,13 @@
 //!   [`run_parallel`] (shared-memory worker threads), generic over
 //!   `&dyn Algorithm × &dyn Backend`, with the PR-1 replay-determinism
 //!   contract extended to every algorithm.
+//! * [`freerun`] — [`run_freerun`], the third executor: no schedule at all.
+//!   Sharded OS-thread workers, live per-worker Poisson clocks, and
+//!   non-blocking seqlock model slots — throughput-faithful, measured, and
+//!   deliberately **non-replayable** (the contract split is documented in
+//!   that module and in `lib.rs`).
+//! * [`telemetry`] — what only the free-running executor can measure:
+//!   staleness histograms, seqlock retry counts, per-worker busy/wait.
 //! * [`cluster`] — pairwise averaging primitives shared by the algorithms.
 //! * [`engine`] — per-node simulated clocks merged into the paper's time
 //!   axes.
@@ -27,21 +34,25 @@ pub mod baselines;
 mod cluster;
 mod engine;
 mod executor;
+pub mod freerun;
 mod metrics;
 mod poisson;
 mod swarm;
+pub mod telemetry;
 
 pub use algorithm::{
     barrier_all, local_phase, make_algorithm, mean_model, mean_params, pair_at, step_once,
-    AlgoOptions, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, RoundModels,
-    StepCtx, ALGORITHM_NAMES,
+    AlgoOptions, Algorithm, Event, EventOutcome, GossipProfile, InteractionSchedule, NodeState,
+    RoundModels, StepCtx, ALGORITHM_NAMES,
 };
 pub use cluster::{average_into_both, midpoint, nonblocking_update, quantized_transfer};
 pub use engine::NodeClocks;
 pub use executor::{run_parallel, run_serial, RunSpec};
+pub use freerun::run_freerun;
 pub use metrics::{CurvePoint, RunMetrics};
 pub use poisson::PoissonSwarm;
 pub use swarm::{AveragingMode, LocalSteps, SwarmSgd};
+pub use telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
 
 /// Learning-rate schedule (paper §5: identical to sequential SGD per model;
 /// annealed at 1/3 and 2/3 of training for the vision recipes).

@@ -93,6 +93,12 @@ impl Algorithm for PoissonSwarm {
     ) -> EventOutcome {
         self.inner.interact_pair(ev, parts, ctx)
     }
+
+    /// Same profile as [`SwarmSgd`] — the free-running executor *is* the
+    /// literal per-node Poisson-clock runtime this scheduler simulates.
+    fn gossip_profile(&self) -> Option<super::GossipProfile> {
+        self.inner.gossip_profile()
+    }
 }
 
 #[cfg(test)]

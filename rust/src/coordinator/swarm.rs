@@ -195,6 +195,10 @@ impl Algorithm for SwarmSgd {
     ) -> EventOutcome {
         self.interact_pair(ev, parts, ctx)
     }
+
+    fn gossip_profile(&self) -> Option<super::GossipProfile> {
+        Some(super::GossipProfile { local_steps: self.local_steps, mode: self.mode })
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,238 @@
+//! Contention & staleness telemetry for the free-running executor.
+//!
+//! The replay executors can *simulate* time but never *measure* true
+//! asynchrony: their schedules are pre-drawn, so nothing ever actually
+//! contends. The free-running executor ([`super::run_freerun`]) is where
+//! real threads race on real memory, and this module holds the quantities
+//! that only exist there:
+//!
+//! * **per-interaction staleness** — how many global interactions elapsed
+//!   since the partner's model slot was last published (the "version lag"
+//!   of the asynchronous-SGD delay analyses, e.g. Even et al.), recorded
+//!   into an exact bounded [`StalenessHistogram`];
+//! * **slot contention** — seqlock read retries, publish CAS retries, and
+//!   dropped best-effort cross-writes ([`FreerunStats`] counters);
+//! * **worker activity** — wall-clock busy vs. slot-synchronization time
+//!   per worker ([`WorkerActivity`]), plus the run's *real* (not simulated)
+//!   interactions/second.
+//!
+//! Everything here is plain data: workers record locally (no shared
+//! counters on the hot path) and the executor merges once at join time.
+
+/// Exact histogram of small non-negative integer observations (staleness
+/// is measured in interaction counts, so values are small relative to the
+/// run length). Values at or above the bucket capacity land in a single
+/// overflow bucket; quantiles falling there report the observed maximum.
+#[derive(Clone, Debug)]
+pub struct StalenessHistogram {
+    /// exact counts for values `0..buckets.len()`
+    buckets: Vec<u64>,
+    overflow: u64,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl StalenessHistogram {
+    /// Histogram with exact buckets for `0..cap` (cap is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self { buckets: vec![0; cap.max(1)], overflow: 0, count: 0, sum: 0, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        match self.buckets.get_mut(v as usize) {
+            Some(b) => *b += 1,
+            None => self.overflow += 1,
+        }
+    }
+
+    /// Fold another histogram in (capacities may differ; the merged
+    /// histogram keeps the larger exact range).
+    pub fn merge(&mut self, other: &Self) {
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += c;
+        }
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean observed value (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_observed(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile by rank over the recorded values (`q` clamped to [0, 1]).
+    /// Returns 0 on an empty histogram; ranks falling into the overflow
+    /// bucket report the observed maximum.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (v, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return v as u64;
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+/// One worker's wall-clock activity split: `busy` is time inside
+/// interaction bodies (local SGD + averaging), `wait` is time spent in
+/// slot synchronization (seqlock reads/retries + publishes). Workers never
+/// block on each other, so `wait` measures pure memory contention.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerActivity {
+    pub busy_secs: f64,
+    pub wait_secs: f64,
+    /// interactions this worker initiated
+    pub interactions: u64,
+}
+
+/// Everything the free-running executor measures that the replay
+/// executors cannot, surfaced through
+/// [`super::RunMetrics::freerun`].
+#[derive(Clone, Debug)]
+pub struct FreerunStats {
+    /// worker threads the run used
+    pub threads: usize,
+    /// node shards the run partitioned over
+    pub shards: usize,
+    /// real wall-clock seconds start-to-join
+    pub wall_secs: f64,
+    /// real (wall-clock) interactions per second — the throughput number
+    /// the paper's non-blocking claim is about
+    pub interactions_per_sec: f64,
+    /// seqlock read retries (reader raced a concurrent slot write)
+    pub slot_read_retries: u64,
+    /// publish CAS retries by slot owners (racing a cross-write)
+    pub slot_publish_retries: u64,
+    /// best-effort cross-writes dropped because the slot was held — the
+    /// "nobody ever waits" property, counted instead of blocked on
+    pub slot_push_conflicts: u64,
+    /// per-interaction version lag of the partner snapshot, in global
+    /// interaction counts
+    pub staleness: StalenessHistogram,
+    /// per-worker activity, indexed by worker id
+    pub workers: Vec<WorkerActivity>,
+}
+
+impl FreerunStats {
+    /// Total busy seconds across workers.
+    pub fn busy_total(&self) -> f64 {
+        self.workers.iter().map(|w| w.busy_secs).sum()
+    }
+
+    /// Total slot-synchronization seconds across workers.
+    pub fn wait_total(&self) -> f64 {
+        self.workers.iter().map(|w| w.wait_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = StalenessHistogram::new(16);
+        for v in [0u64, 0, 1, 1, 1, 2, 3, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max_observed(), 10);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.p50(), 1);
+        assert_eq!(h.quantile(1.0), 10);
+        assert!((h.mean() - 18.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_overflow_reports_max() {
+        let mut h = StalenessHistogram::new(4);
+        h.record(2);
+        h.record(100);
+        h.record(200);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_observed(), 200);
+        // ranks in the overflow region fall back to the observed max
+        assert_eq!(h.quantile(1.0), 200);
+        assert_eq!(h.p99(), 200);
+        assert_eq!(h.quantile(0.0), 2);
+    }
+
+    #[test]
+    fn histogram_merge_folds_counts() {
+        let mut a = StalenessHistogram::new(8);
+        let mut b = StalenessHistogram::new(32);
+        a.record(1);
+        a.record(20); // overflow for a
+        b.record(3);
+        b.record(20); // exact for b
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max_observed(), 20);
+        assert_eq!(a.p50(), 3);
+        assert!((a.mean() - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_and_zero() {
+        let h = StalenessHistogram::new(8);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert!(h.mean().is_nan());
+        assert_eq!(h.max_observed(), 0);
+    }
+
+    #[test]
+    fn stats_totals_sum_workers() {
+        let s = FreerunStats {
+            threads: 2,
+            shards: 4,
+            wall_secs: 1.0,
+            interactions_per_sec: 100.0,
+            slot_read_retries: 0,
+            slot_publish_retries: 0,
+            slot_push_conflicts: 0,
+            staleness: StalenessHistogram::new(4),
+            workers: vec![
+                WorkerActivity { busy_secs: 1.0, wait_secs: 0.25, interactions: 10 },
+                WorkerActivity { busy_secs: 2.0, wait_secs: 0.75, interactions: 20 },
+            ],
+        };
+        assert!((s.busy_total() - 3.0).abs() < 1e-12);
+        assert!((s.wait_total() - 1.0).abs() < 1e-12);
+    }
+}

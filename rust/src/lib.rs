@@ -33,33 +33,45 @@
 //!   softmax / logistic gradient oracles and the PJRT-compiled models. One
 //!   `&self + Sync` trait; all stochasticity comes from the caller's
 //!   [`rngx::Pcg64`] stream.
-//! * **Executor** ([`coordinator::run_serial`] /
-//!   [`coordinator::run_parallel`], CLI `--executor serial|parallel
-//!   --threads K`): generic drivers over `&dyn Algorithm × &dyn Backend`.
-//!   Serial walks the schedule in program order; parallel drains it on K
-//!   shared-memory worker threads with per-node locks, committing events in
-//!   per-node dependency order.
+//! * **Executor** (CLI `--executor serial|parallel|freerun --threads K
+//!   [--shards S]`): three generic drivers over
+//!   `&dyn Algorithm × &dyn Backend`, split into two contract classes:
 //!
-//! **Replay-determinism contract:** the schedule (participants, local-step
-//! counts, event seeds) is pre-drawn from a dedicated
-//! [`rngx::Pcg64::stream`], every node draws noise/jitter from its private
-//! stream, and workers commit in dependency order — so the dataflow DAG,
-//! and therefore every f32 operation, is fixed before any thread starts. A
-//! parallel run at any thread count is **bit-identical** to the serial run
-//! of the same seed, for every algorithm on the oracle backends. (The PJRT
-//! backend is excluded: its fused-step heuristic races wall-clock timings,
-//! so its runs are correct but not bit-replayable.)
-//! `tests/parallel_executor.rs`
-//! asserts this for SwarmSGD (all averaging modes, quadratic and softmax
-//! oracles) and AD-PSGD, and `.github/workflows/ci.yml` runs those tests
-//! (plus fmt/clippy/doc gates and a non-blocking throughput bench that
-//! archives algorithm-tagged `BENCH_parallel.json` rows) on every push and
-//! PR.
+//!   | executor | mechanism | contract |
+//!   |---|---|---|
+//!   | [`coordinator::run_serial`] | pre-drawn schedule, program order | **bit-replayable** (the reference) |
+//!   | [`coordinator::run_parallel`] | same schedule, K workers, per-node locks, dependency-order commits | **bit-replayable** (≡ serial at any K) |
+//!   | [`coordinator::run_freerun`] | **no schedule**: K workers own S node shards, live Poisson clocks pick partners on the fly, seqlock model slots, initiator never blocks the partner | **throughput-faithful, non-replayable** (statistical assertions only) |
 //!
-//! Gossip algorithms (swarm, poisson, adpsgd) schedule 2-node events and
-//! genuinely parallelize; the synchronous baselines schedule whole-cluster
-//! events — a global barrier per round is their semantics, executed
-//! faithfully.
+//! **The contract split.** `serial`/`parallel` exist to *simulate*
+//! faithfully: the schedule (participants, local-step counts, event seeds)
+//! is pre-drawn from a dedicated [`rngx::Pcg64::stream`], every node draws
+//! noise/jitter from its private stream, and workers commit in dependency
+//! order — so the dataflow DAG, and therefore every f32 operation, is
+//! fixed before any thread starts, making a parallel run at any thread
+//! count **bit-identical** to the serial run of the same seed, for every
+//! algorithm on the oracle backends. (The PJRT backend is excluded: its
+//! fused-step heuristic races wall-clock timings.) `freerun` exists to
+//! *measure* what replay cannot: real threads race on real memory, so two
+//! runs of one seed legitimately differ in the bits — and in exchange it
+//! reports true interactions/sec, per-interaction staleness (version-lag)
+//! histograms, seqlock contention counters, and per-worker busy/wait
+//! splits through [`coordinator::RunMetrics::freerun`]
+//! (see [`coordinator::telemetry`]). Tests against it are tolerance-based
+//! (`tests/freerun_executor.rs`), never bit-equality.
+//!
+//! `tests/parallel_executor.rs` asserts the replay contract for SwarmSGD
+//! (all averaging modes, quadratic and softmax oracles) and AD-PSGD, and
+//! `.github/workflows/ci.yml` runs both suites (plus fmt/clippy/doc gates
+//! and non-blocking throughput benches that append algorithm-tagged
+//! `BENCH_parallel.json` / `BENCH_freerun.json` rows to the committed
+//! perf trajectory) on every push and PR.
+//!
+//! Gossip algorithms (swarm, poisson, adpsgd) schedule 2-node events,
+//! genuinely parallelize, and advertise the [`coordinator::GossipProfile`]
+//! that admits them to the free-running executor; the synchronous
+//! baselines schedule whole-cluster events — a global barrier per round is
+//! their semantics, executed faithfully on the replay executors only.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

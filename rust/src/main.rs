@@ -4,15 +4,18 @@
 //! Training dispatch is the Algorithm × Backend × Executor matrix:
 //! `--algorithm` picks the training process (SwarmSGD or any §5 baseline),
 //! the `preset` key picks the compute backend (gradient oracles or the
-//! PJRT path), and `--executor serial|parallel` picks the driver — every
-//! combination runs, and serial/parallel agree bit-for-bit per seed.
+//! PJRT path), and `--executor serial|parallel|freerun` picks the driver.
+//! serial/parallel replay the pre-drawn schedule and agree bit-for-bit per
+//! seed; freerun is the free-running sharded runtime (gossip algorithms
+//! only) that trades replayability for real contention/staleness telemetry.
 
 use std::path::Path;
 use swarm_sgd::backend::Backend;
 use swarm_sgd::cli::{Cli, USAGE};
 use swarm_sgd::config::RunConfig;
 use swarm_sgd::coordinator::{
-    make_algorithm, run_parallel, run_serial, AlgoOptions, Algorithm, RunMetrics, RunSpec,
+    make_algorithm, run_freerun, run_parallel, run_serial, AlgoOptions, Algorithm, RunMetrics,
+    RunSpec,
 };
 use swarm_sgd::figures::{run_figure, write_curves};
 use swarm_sgd::grad::{LogisticOracle, QuadraticOracle, SoftmaxOracle};
@@ -102,7 +105,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in ["algorithm", "executor", "threads"] {
+    for key in ["algorithm", "executor", "threads", "shards"] {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
@@ -151,6 +154,23 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
             );
             run_parallel(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads)
         }
+        "freerun" => {
+            if algo.gossip_profile().is_none() {
+                return Err(format!(
+                    "--executor freerun requires a gossip algorithm (2-node events); \
+                     '{}' schedules whole-cluster rounds — use --executor serial|parallel",
+                    cfg.algo
+                ));
+            }
+            let threads = cfg.effective_threads();
+            let shards = cfg.effective_shards();
+            println!(
+                "freerun executor: {} worker thread(s) over {} shard(s), \
+                 algorithm={} n={} topology={} (non-replayable)",
+                threads, shards, cfg.algo, cfg.n, cfg.topology
+            );
+            run_freerun(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads, shards)
+        }
         _ => run_serial(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost),
     };
     let wall = started.elapsed();
@@ -196,6 +216,29 @@ fn report_run(
         metrics.quant_fallbacks,
         wall.as_secs_f64(),
     );
+    if let Some(fr) = &metrics.freerun {
+        println!(
+            "\nfreerun telemetry ({} thread(s) × {} shard(s), wall {:.2}s):\n\
+             real throughput  : {:.0} interactions/s\n\
+             staleness (events): p50={} p99={} max={} mean={:.1}\n\
+             slot contention  : {} read retries, {} publish retries, \
+             {} dropped cross-writes\n\
+             worker activity  : {:.2}s busy / {:.3}s slot-sync across workers",
+            fr.threads,
+            fr.shards,
+            fr.wall_secs,
+            fr.interactions_per_sec,
+            fr.staleness.p50(),
+            fr.staleness.p99(),
+            fr.staleness.max_observed(),
+            fr.staleness.mean(),
+            fr.slot_read_retries,
+            fr.slot_publish_retries,
+            fr.slot_push_conflicts,
+            fr.busy_total(),
+            fr.wait_total(),
+        );
+    }
     if !cfg.out_csv.is_empty() {
         write_curves(Path::new(&cfg.out_csv), &[metrics]).map_err(|e| e.to_string())?;
         println!("curve written to {}", cfg.out_csv);

@@ -1,0 +1,176 @@
+//! Free-running executor contract tests.
+//!
+//! `freerun` is **non-replayable by design** (real thread interleaving),
+//! so unlike `tests/parallel_executor.rs` nothing here asserts bit
+//! equality — the contract is statistical:
+//!
+//! 1. **Coverage**: every gossip algorithm (swarm, poisson, adpsgd) runs
+//!    end-to-end with `n ≥ 8×` the thread count, and the round-based
+//!    baselines refuse (no [`GossipProfile`]).
+//! 2. **Telemetry**: the run reports nonzero staleness, real
+//!    interactions/sec, and per-worker accounting that sums to the total.
+//! 3. **Convergence sanity**: a quadratic-oracle freerun run lands in the
+//!    same loss ballpark as `run_serial` (tolerance-based), guarding
+//!    against silent divergence in the lock-free slot path.
+//!
+//! [`GossipProfile`]: swarm_sgd::coordinator::GossipProfile
+
+use swarm_sgd::backend::Backend;
+use swarm_sgd::coordinator::{
+    make_algorithm, run_freerun, run_serial, AlgoOptions, Algorithm, AveragingMode, LocalSteps,
+    LrSchedule, RunSpec, SwarmSgd,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn quad(n: usize, dim: usize, sigma: f64) -> QuadraticOracle {
+    QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, 11)
+}
+
+fn graph(n: usize) -> Graph {
+    let mut rng = Pcg64::seed(5);
+    Graph::build(Topology::Complete, n, &mut rng)
+}
+
+fn spec(n: usize, t: u64, eval_every: u64) -> RunSpec {
+    RunSpec {
+        n,
+        events: t,
+        lr: LrSchedule::Constant(0.05),
+        seed: 9,
+        name: "freerun-it".into(),
+        eval_every,
+        track_gamma: false,
+    }
+}
+
+#[test]
+fn freerun_runs_every_gossip_algorithm_with_sharded_nodes() {
+    // n = 8 × threads: node-sharding must carry n >> cores
+    let n = 32;
+    let threads = 4;
+    let t = 600u64;
+    for name in ["swarm", "poisson", "adpsgd"] {
+        let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+        assert!(algo.gossip_profile().is_some(), "{name} must be freerun-capable");
+        let backend = quad(n, 32, 0.1);
+        let cost = CostModel::deterministic(0.4);
+        let m =
+            run_freerun(algo.as_ref(), &backend, &spec(n, t, 200), &graph(n), &cost, threads, 8);
+        assert_eq!(m.executor, "freerun", "{name}");
+        assert_eq!(m.threads, threads);
+        assert_eq!(m.interactions, t);
+        assert!(m.local_steps > 0, "{name}: no local steps recorded");
+        assert!(m.sim_time > 0.0);
+        assert!(m.final_eval_loss.is_finite(), "{name}: diverged");
+        assert!(!m.curve.is_empty());
+
+        let fr = m.freerun.as_ref().expect("freerun telemetry must be present");
+        assert_eq!(fr.threads, threads);
+        assert_eq!(fr.shards, 8);
+        // one staleness observation per interaction, and the partner
+        // snapshots must actually be stale (version lag > 0 somewhere)
+        assert_eq!(fr.staleness.count(), t, "{name}");
+        assert!(fr.staleness.max_observed() > 0, "{name}: staleness never nonzero");
+        assert!(fr.staleness.p99() >= fr.staleness.p50());
+        assert!(fr.interactions_per_sec > 0.0);
+        assert!(fr.wall_secs > 0.0);
+        assert_eq!(fr.workers.len(), threads);
+        assert_eq!(
+            fr.workers.iter().map(|w| w.interactions).sum::<u64>(),
+            t,
+            "{name}: per-worker interaction counts must sum to the total"
+        );
+        assert!(fr.busy_total() > 0.0);
+    }
+}
+
+#[test]
+fn round_based_algorithms_refuse_freerun() {
+    for name in ["dpsgd", "sgp", "localsgd", "allreduce"] {
+        let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+        assert!(
+            algo.gossip_profile().is_none(),
+            "{name} schedules whole-cluster rounds; it must not advertise a gossip profile"
+        );
+    }
+}
+
+#[test]
+fn freerun_convergence_matches_serial_ballpark() {
+    // the convergence-sanity guard: same backend, same event budget; the
+    // free-running lock-free path must land in the same loss ballpark as
+    // the serial reference (no seeded-schedule equality is possible)
+    let n = 16;
+    let t = 2500u64;
+    let backend = quad(n, 16, 0.1);
+    let f_star = backend.f_star();
+    let gap0 = {
+        let (p, _) = backend.init();
+        backend.eval(&p).loss - f_star
+    };
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(2),
+        mode: AveragingMode::NonBlocking,
+    };
+    let cost = CostModel::deterministic(0.4);
+    let g = graph(n);
+    let s = spec(n, t, 500);
+    let serial = run_serial(&algo, &backend, &s, &g, &cost);
+    let free = run_freerun(&algo, &backend, &s, &g, &cost, 2, 4);
+    let gap_serial = (serial.final_eval_loss - f_star) / gap0;
+    let gap_free = (free.final_eval_loss - f_star) / gap0;
+    assert!(gap_serial < 0.1, "serial reference off the rails: {gap_serial}");
+    assert!(
+        gap_free < 0.15,
+        "freerun normalized gap {gap_free} vs serial {gap_serial} — lock-free path diverged"
+    );
+}
+
+#[test]
+fn freerun_quantized_mode_saves_wire_bits() {
+    let n = 16;
+    let t = 500u64;
+    let g = graph(n);
+    let cost = CostModel::deterministic(0.4);
+    let run = |mode: AveragingMode| {
+        let backend = quad(n, 256, 0.05);
+        let algo = SwarmSgd { local_steps: LocalSteps::Fixed(2), mode };
+        run_freerun(&algo, &backend, &spec(n, t, 0), &g, &cost, 2, 0)
+    };
+    let mq = run(AveragingMode::Quantized { bits: 8, eps: 1e-2 });
+    let mf = run(AveragingMode::NonBlocking);
+    assert!(mq.final_eval_loss.is_finite());
+    assert!(mq.total_bits > 0);
+    assert!(
+        (mq.total_bits as f64) < 0.5 * mf.total_bits as f64,
+        "quantized slots {} bits vs full-precision {} bits (fallbacks {})",
+        mq.total_bits,
+        mf.total_bits,
+        mq.quant_fallbacks
+    );
+}
+
+#[test]
+fn freerun_single_thread_and_tiny_cluster_edge_cases() {
+    // threads > shards > n-degenerate setups must still complete
+    let n = 4;
+    let backend = quad(n, 8, 0.1);
+    let algo = SwarmSgd {
+        local_steps: LocalSteps::Fixed(1),
+        mode: AveragingMode::NonBlocking,
+    };
+    let cost = CostModel::deterministic(0.1);
+    // more threads than nodes: surplus workers own nothing and exit
+    let m = run_freerun(&algo, &backend, &spec(n, 200, 0), &graph(n), &cost, 8, 64);
+    assert_eq!(m.interactions, 200);
+    assert!(m.final_eval_loss.is_finite());
+    // single worker: still free-running (its own clocks), still telemetered
+    let m1 = run_freerun(&algo, &backend, &spec(n, 200, 0), &graph(n), &cost, 1, 1);
+    assert_eq!(m1.interactions, 200);
+    let fr = m1.freerun.as_ref().unwrap();
+    assert_eq!(fr.workers.len(), 1);
+    assert_eq!(fr.staleness.count(), 200);
+}

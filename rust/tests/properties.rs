@@ -188,6 +188,75 @@ fn prop_pack_unpack_roundtrip() {
     });
 }
 
+#[test]
+fn prop_pack_payload_is_exactly_the_bit_budget() {
+    // the wire accounting everywhere (QuantizedMsg::wire_bits, figures)
+    // assumes a packed payload of exactly ceil(n*bits/8) bytes
+    prop(80, |rng| {
+        let bits = 1 + rng.below(16) as u32;
+        let n = rng.below_usize(700);
+        let mask = (1u32 << bits) - 1;
+        let vals: Vec<u32> = (0..n).map(|_| rng.next_u32() & mask).collect();
+        let packed = pack_bits(&vals, bits);
+        let want = (n * bits as usize).div_ceil(8);
+        if packed.len() != want {
+            return Err(format!("bits={bits} n={n}: {} bytes != {want}", packed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_unpack_boundary_widths_and_lengths() {
+    // bit-width edge cases: every width in 1..=16 at lengths straddling
+    // byte and word boundaries, with extremal (all-max / all-zero) values
+    for bits in 1..=16u32 {
+        let max = (1u64 << bits) as u32 - 1;
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65] {
+            let maxed = vec![max; n];
+            assert_eq!(
+                unpack_bits(&pack_bits(&maxed, bits), bits, n),
+                maxed,
+                "all-max roundtrip bits={bits} n={n}"
+            );
+            let zeros = vec![0u32; n];
+            let packed = pack_bits(&zeros, bits);
+            assert!(packed.iter().all(|&b| b == 0), "zero payload bits={bits} n={n}");
+            assert_eq!(unpack_bits(&packed, bits, n), zeros);
+            // an alternating pattern exercises cross-byte carries
+            let alt: Vec<u32> = (0..n).map(|i| if i % 2 == 0 { max } else { 0 }).collect();
+            assert_eq!(
+                unpack_bits(&pack_bits(&alt, bits), bits, n),
+                alt,
+                "alternating roundtrip bits={bits} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pack_masks_high_bits_and_unpack_zero_fills_short_input() {
+    // pack must keep only the low `bits` of each value…
+    prop(40, |rng| {
+        let bits = 1 + rng.below(15) as u32; // 1..=15 so high bits exist
+        let n = 1 + rng.below_usize(100);
+        let vals: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mask = (1u32 << bits) - 1;
+        let want: Vec<u32> = vals.iter().map(|v| v & mask).collect();
+        if unpack_bits(&pack_bits(&vals, bits), bits, n) != want {
+            return Err(format!("high bits leaked (bits={bits} n={n})"));
+        }
+        Ok(())
+    });
+    // …and unpack of a truncated stream reads missing bytes as zero
+    let vals = vec![0x3FFu32; 8];
+    let mut packed = pack_bits(&vals, 10);
+    packed.truncate(packed.len() - 2);
+    let got = unpack_bits(&packed, 10, 8);
+    assert_eq!(&got[..6], &vals[..6]);
+    assert!(got[7] < 0x3FF, "tail values must come from zero-fill, not garbage");
+}
+
 // ---------------------------------------------------------------------------
 // topology properties
 // ---------------------------------------------------------------------------
