@@ -1,8 +1,11 @@
 //! Parallel-executor throughput: interactions/second vs worker thread count
-//! on an n=32 synthetic-quadratic workload, for the two gossip algorithms
-//! that genuinely parallelize (SwarmSGD and AD-PSGD), against the serial
-//! executor as baseline. §Perf target (CI-recorded): ≥ 2x interactions/s at
-//! 4 threads vs serial for SwarmSGD non-blocking.
+//! on an n=32 synthetic-quadratic workload — the gossip algorithms
+//! (SwarmSGD and AD-PSGD) plus the round-based baselines that parallelize
+//! since the phased-event redesign (D-PSGD and allreduce: n per-node
+//! compute events + mix barrier per round), against the serial executor as
+//! baseline. §Perf target (CI-recorded): ≥ 2x interactions/s at 4 threads
+//! vs serial for SwarmSGD non-blocking. Round-based rows count rounds/s
+//! (one round = n compute events + mixing).
 //!
 //! Writes `BENCH_parallel.json` (crate root) with algorithm-tagged entries
 //! so CI can archive the perf trajectory per PR. `-- --test` runs the
@@ -127,6 +130,35 @@ fn main() {
         .clone();
     rows.push(json_row(&ra4, "adpsgd", 4, 1));
 
+    // the newly-parallel round-based baselines (phased events): one round
+    // is n compute events + mixing, so fewer rounds match the step budget
+    let t_rounds = (t / 8).max(1);
+    let round_opts = opts(1, AveragingMode::NonBlocking);
+    let rd1 = b
+        .run_elems(&format!("dpsgd serial       d={dim} R={t_rounds}"), t_rounds, || {
+            run_algo("dpsgd", dim, t_rounds, 1, &round_opts)
+        })
+        .clone();
+    rows.push(json_row(&rd1, "dpsgd", 1, 1));
+    let rd4 = b
+        .run_elems(&format!("dpsgd parallel x4  d={dim} R={t_rounds}"), t_rounds, || {
+            run_algo("dpsgd", dim, t_rounds, 4, &round_opts)
+        })
+        .clone();
+    rows.push(json_row(&rd4, "dpsgd", 4, 1));
+    let rr1 = b
+        .run_elems(&format!("allreduce serial   d={dim} R={t_rounds}"), t_rounds, || {
+            run_algo("allreduce", dim, t_rounds, 1, &round_opts)
+        })
+        .clone();
+    rows.push(json_row(&rr1, "allreduce", 1, 1));
+    let rr4 = b
+        .run_elems(&format!("allreduce parallel x4 d={dim} R={t_rounds}"), t_rounds, || {
+            run_algo("allreduce", dim, t_rounds, 4, &round_opts)
+        })
+        .clone();
+    rows.push(json_row(&rr4, "allreduce", 4, 1));
+
     let serial_tp = serial.throughput().unwrap_or(f64::NAN);
     let speedup = par4_tp / serial_tp;
     println!(
@@ -136,15 +168,24 @@ fn main() {
     let adpsgd_speedup =
         ra4.throughput().unwrap_or(f64::NAN) / ra1.throughput().unwrap_or(f64::NAN);
     println!("adpsgd speedup @4 threads vs serial: {adpsgd_speedup:.2}x");
+    let dpsgd_speedup =
+        rd4.throughput().unwrap_or(f64::NAN) / rd1.throughput().unwrap_or(f64::NAN);
+    println!("dpsgd speedup @4 threads vs serial: {dpsgd_speedup:.2}x (phased rounds)");
+    let allreduce_speedup =
+        rr4.throughput().unwrap_or(f64::NAN) / rr1.throughput().unwrap_or(f64::NAN);
+    println!("allreduce speedup @4 threads vs serial: {allreduce_speedup:.2}x (phased rounds)");
 
     // h is per-algorithm (swarm rows run H=4, adpsgd is defined with H=1),
     // so the shared workload stanza carries only algorithm-independent keys
     let json = format!(
         "{{\n  \"bench\": \"bench_parallel\",\n  \"workload\": \
          {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \
+         \"rounds\": {t_rounds}, \
          \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ],\n  \
          \"speedup_4threads_vs_serial\": {speedup:.3},\n  \
-         \"adpsgd_speedup_4threads_vs_serial\": {adpsgd_speedup:.3}\n}}\n",
+         \"adpsgd_speedup_4threads_vs_serial\": {adpsgd_speedup:.3},\n  \
+         \"dpsgd_speedup_4threads_vs_serial\": {dpsgd_speedup:.3},\n  \
+         \"allreduce_speedup_4threads_vs_serial\": {allreduce_speedup:.3}\n}}\n",
         rows.join(",\n")
     );
     match std::fs::File::create("BENCH_parallel.json")

@@ -101,18 +101,23 @@ USAGE:
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
-                shared-memory worker threads (K=0: one per core). For the
-                oracle:* presets the same seed produces bit-identical
-                metrics on both replay executors at any thread count (the
-                replay-determinism contract; the PJRT path's fused-step
-                heuristic is wall-clock-raced, so it is excluded).
-                --executor freerun (gossip algorithms only: swarm, poisson,
-                adpsgd) drops the schedule: K workers own S node shards
-                (S=0: one per worker; n >> cores supported), ring live
-                Poisson clocks, and average against non-blocking seqlock
-                model slots. Non-replayable by contract — in exchange it
-                measures real interactions/s, per-interaction staleness
-                (version lag), seqlock contention, and worker busy/wait.
+                shared-memory worker threads (K=0: one per core). Gossip
+                algorithms schedule 2-node events; the round-based
+                baselines schedule *phased* rounds (n per-node compute
+                events + one mix barrier), so all seven genuinely
+                parallelize. For the oracle:* presets the same seed
+                produces bit-identical metrics on both replay executors at
+                any thread count (the replay-determinism contract; the
+                PJRT path's fused-step heuristic is wall-clock-raced, so
+                it is excluded).
+                --executor freerun (pairwise-mixing algorithms: swarm,
+                poisson, adpsgd, dpsgd) drops the schedule: K workers own
+                S node shards (omit --shards for one per worker; n >>
+                cores supported), ring live Poisson clocks, and average
+                against non-blocking seqlock model slots. Non-replayable
+                by contract — in exchange it measures real interactions/s,
+                per-interaction staleness (version lag), seqlock
+                contention, and worker busy/wait.
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]

@@ -70,11 +70,14 @@ pub struct RunConfig {
     /// serial | parallel | freerun — which executor runs the algorithm.
     /// `serial`/`parallel` drain the pre-drawn schedule (bit-replayable);
     /// `freerun` is the free-running sharded runtime (throughput-faithful,
-    /// non-replayable, gossip algorithms only)
+    /// non-replayable, pairwise-mixing algorithms only: swarm, poisson,
+    /// adpsgd, dpsgd)
     pub executor: String,
     /// worker threads for the parallel/freerun executors (0 = one per core)
     pub threads: usize,
-    /// node shards for the freerun executor (0 = one shard per worker)
+    /// node shards for the freerun executor. 0 is the *internal* "auto"
+    /// default (one shard per worker); explicitly setting `shards=0` is
+    /// rejected at parse time with an actionable error
     pub shards: usize,
 }
 
@@ -196,7 +199,17 @@ impl RunConfig {
                 _ => return Err(bad(key, value)),
             },
             "threads" => self.threads = value.parse().map_err(|_| bad(key, value))?,
-            "shards" => self.shards = value.parse().map_err(|_| bad(key, value))?,
+            "shards" => {
+                let s: usize = value.parse().map_err(|_| bad(key, value))?;
+                if s == 0 {
+                    return Err(
+                        "shards must be >= 1; omit the key (or the --shards flag) \
+                         to default to one shard per worker thread"
+                            .to_string(),
+                    );
+                }
+                self.shards = s;
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -373,6 +386,11 @@ mod tests {
         c.set("shards", "16").unwrap();
         assert_eq!(c.effective_shards(), 16);
         assert!(c.set("shards", "lots").is_err());
+        // explicit shards=0 is rejected with an actionable message, not
+        // silently clamped; the prior value is left untouched
+        let err = c.set("shards", "0").unwrap_err();
+        assert!(err.contains("shards must be >= 1"), "unhelpful error: {err}");
+        assert_eq!(c.shards, 16);
     }
 
     #[test]

@@ -10,10 +10,14 @@
 //!
 //! 1. **Schedule** — the algorithm pre-draws its full [`InteractionSchedule`]
 //!    from a dedicated RNG stream: a sequence of [`Event`]s, each naming its
-//!    participating nodes, pre-drawn local-step counts, and an event-local
-//!    randomness seed. Gossip algorithms emit 2-node events; synchronous
-//!    round-based algorithms emit whole-cluster events (their semantics IS
-//!    a global barrier).
+//!    [`EventKind`], participating nodes, pre-drawn local-step counts, and
+//!    an event-local randomness seed. Gossip algorithms emit 2-node
+//!    [`EventKind::Gossip`] events; synchronous round-based algorithms emit
+//!    *phased* rounds — `n` independent single-node [`EventKind::Compute`]
+//!    events (each node's local SGD phase, drawing only from its private
+//!    stream) closed by an [`EventKind::Mix`] barrier — so their compute
+//!    phases spread across all workers and only the mixing step is a
+//!    barrier.
 //! 2. **Interact** — the executor grants the event exclusive access to its
 //!    participants' [`NodeState`]s (locks taken in ascending node order →
 //!    deadlock-free) and the algorithm applies its update rule, charging
@@ -34,22 +38,92 @@ use crate::netmodel::CostModel;
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
+/// The scheduling/locking class of one [`Event`] — what the executors
+/// dispatch on (exhaustively, so adding a kind is a compile error at every
+/// dispatch site rather than a silently misrouted event).
+///
+/// * `Gossip` — an independent 2-node pairwise interaction: the executor
+///   takes the two participants' locks in ascending node order (the
+///   allocation-free fast path). Gossip *algorithms* schedule one per
+///   logical tick; D-PSGD schedules its per-matching-edge mixing steps as
+///   in-round `Gossip` events sharing the round's tick.
+/// * `Compute` — a single-node local phase (one lock, no peers): one node's
+///   SGD burst inside a phased synchronous round, drawing only from that
+///   node's private RNG stream. `n` of these per round run concurrently
+///   across all workers.
+/// * `Mix` — a multi-node mixing/barrier phase closing a synchronous
+///   round; the executor locks all participants in ascending node order.
+///   The schedule's `seq` dependency tokens wire every compute (and
+///   in-round gossip) event before the round's mix event.
+///
+/// # Examples
+///
+/// A phased synchronous round is `n` `Compute` events plus one `Mix`
+/// barrier, all sharing one logical tick:
+///
+/// ```
+/// use swarm_sgd::coordinator::{EventKind, InteractionSchedule};
+///
+/// let mut s = InteractionSchedule::new(3);
+/// s.push_round(&[5, 5, 5], 0xABCD); // 5 local steps per node, round seed
+/// assert_eq!(s.events.len(), 4); // 3 computes + 1 mix
+/// assert!(s.events[..3].iter().all(|e| e.kind == EventKind::Compute));
+/// assert_eq!(s.events[3].kind, EventKind::Mix);
+/// assert!(s.events.iter().all(|e| e.tick == 0));
+/// assert_eq!(s.ticks, 1); // one logical round
+/// // the mix event waits on every compute via the seq tokens
+/// assert_eq!(s.events[3].seq, vec![1, 1, 1]);
+/// ```
+///
+/// Gossip events are one per tick:
+///
+/// ```
+/// use swarm_sgd::coordinator::{EventKind, InteractionSchedule};
+///
+/// let mut s = InteractionSchedule::new(4);
+/// s.push_gossip(0, 2, 3, 3, 7);
+/// s.push_gossip(1, 2, 3, 3, 8);
+/// assert_eq!(s.events[1].kind, EventKind::Gossip);
+/// assert_eq!(s.events[1].tick, 1);
+/// assert_eq!(s.ticks, 2);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// independent 2-node pairwise interaction (`[initiator, partner]`)
+    Gossip,
+    /// single-node local compute phase of a phased synchronous round
+    Compute,
+    /// multi-node mixing barrier closing a phased synchronous round
+    Mix,
+}
+
 /// One pre-drawn event of the global schedule.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Event {
+    /// scheduling/locking class — executors dispatch on this, never on
+    /// participant arity
+    pub kind: EventKind,
     /// participating nodes in *role* order (gossip: `[initiator, partner]`;
-    /// round-based: `0..n`). The executor grants exclusive access to these
-    /// states, passed to [`Algorithm::interact`] in the same order.
+    /// compute: `[node]`; mix: `0..n`). The executor grants exclusive
+    /// access to these states, passed to [`Algorithm::interact`] in the
+    /// same order.
     pub nodes: Vec<usize>,
-    /// pre-drawn local-step counts, aligned with `nodes`
+    /// pre-drawn local-step counts, aligned with `nodes` (0 for pure
+    /// mixing events)
     pub h: Vec<u64>,
     /// event-local randomness (quantizer hashes, matchings, push targets):
-    /// algorithms derive a deterministic `Pcg64::seed(seed)` from it
+    /// algorithms derive a deterministic `Pcg64::seed(seed)` from it.
+    /// Every event of one phased round shares the round's seed.
     pub seed: u64,
     /// per-participant dependency tokens, aligned with `nodes`: this event
     /// is participant `k`'s `seq[k]`-th event (0-based) — what parallel
     /// workers wait on
     pub seq: Vec<u64>,
+    /// logical time this event belongs to: the gossip interaction index,
+    /// or the synchronous round. Drives the lr schedule, the parallel-time
+    /// axis, and eval milestones — so a phased round's `n + 1` events cost
+    /// one tick, exactly like the monolithic round they replaced.
+    pub tick: u64,
 }
 
 /// The full pre-drawn event sequence of one run. Everything stochastic
@@ -60,16 +134,21 @@ pub struct InteractionSchedule {
     pub events: Vec<Event>,
     /// total events per node (seq tokens end at these values)
     pub per_node: Vec<u64>,
+    /// total logical ticks: gossip interactions or synchronous rounds.
+    /// `RunSpec::events` counts ticks, and events are in non-decreasing
+    /// tick order, so executors map tick milestones to event boundaries.
+    pub ticks: u64,
 }
 
 impl InteractionSchedule {
     pub fn new(n: usize) -> Self {
-        Self { events: Vec::new(), per_node: vec![0; n] }
+        Self { events: Vec::new(), per_node: vec![0; n], ticks: 0 }
     }
 
-    /// Append one event, assigning its per-participant sequence tokens.
-    /// Participants must be distinct (the executor takes one lock each).
-    pub fn push(&mut self, nodes: Vec<usize>, h: Vec<u64>, seed: u64) {
+    /// Append one event at the current tick, assigning its per-participant
+    /// sequence tokens. Participants must be distinct (the executor takes
+    /// one lock each).
+    fn append(&mut self, kind: EventKind, nodes: Vec<usize>, h: Vec<u64>, seed: u64) {
         debug_assert_eq!(nodes.len(), h.len());
         debug_assert!(
             {
@@ -83,7 +162,54 @@ impl InteractionSchedule {
         for &k in &nodes {
             self.per_node[k] += 1;
         }
-        self.events.push(Event { nodes, h, seed, seq });
+        self.events.push(Event { kind, nodes, h, seed, seq, tick: self.ticks });
+    }
+
+    /// Append one standalone 2-node [`EventKind::Gossip`] interaction
+    /// (`h_i`/`h_j` pre-drawn local steps) occupying its own logical tick.
+    pub fn push_gossip(&mut self, i: usize, j: usize, h_i: u64, h_j: u64, seed: u64) {
+        self.append(EventKind::Gossip, vec![i, j], vec![h_i, h_j], seed);
+        self.ticks += 1;
+    }
+
+    /// Append one single-node [`EventKind::Compute`] phase to the round
+    /// under construction (the tick advances only at [`Self::seal_round`]).
+    pub fn push_compute(&mut self, node: usize, h: u64, seed: u64) {
+        self.append(EventKind::Compute, vec![node], vec![h], seed);
+    }
+
+    /// Append one pairwise mixing edge to the round under construction —
+    /// scheduled as [`EventKind::Gossip`] (it *is* an independent 2-node
+    /// event; disjoint edges of a matching run concurrently) but sharing
+    /// the round's tick. D-PSGD's per-edge neighbor averaging.
+    pub fn push_pair_mix(&mut self, i: usize, j: usize, seed: u64) {
+        self.append(EventKind::Gossip, vec![i, j], vec![0, 0], seed);
+    }
+
+    /// Append one [`EventKind::Mix`] barrier over `nodes` to the round
+    /// under construction. The `seq` tokens make it wait for every earlier
+    /// event of each participant — compute → mix ordering by construction.
+    pub fn push_mix(&mut self, nodes: Vec<usize>, seed: u64) {
+        let h = vec![0; nodes.len()];
+        self.append(EventKind::Mix, nodes, h, seed);
+    }
+
+    /// Close the round under construction: advance the logical tick.
+    pub fn seal_round(&mut self) {
+        self.ticks += 1;
+    }
+
+    /// Append one complete phased synchronous round: one `Compute` event
+    /// per node (`h[k]` local steps) followed by one whole-cluster `Mix`
+    /// barrier, all sharing one logical tick and one round seed.
+    pub fn push_round(&mut self, h: &[u64], seed: u64) {
+        let n = self.per_node.len();
+        debug_assert_eq!(h.len(), n, "one local-step count per node");
+        for (k, &hk) in h.iter().enumerate() {
+            self.push_compute(k, hk, seed);
+        }
+        self.push_mix((0..n).collect(), seed);
+        self.seal_round();
     }
 }
 
@@ -112,6 +238,10 @@ pub struct NodeState {
     pub interactions: u64,
     /// last observed minibatch loss
     pub last_loss: f64,
+    /// compute-time drawn during a `Compute` phase but not yet charged —
+    /// synchronous algorithms that charge the round *max* (SGP) park the
+    /// draw here and settle it at the round's `Mix` barrier
+    pub pending_compute: f64,
     /// simulated clock (seconds)
     pub time: f64,
     /// simulated seconds spent computing
@@ -134,6 +264,7 @@ impl NodeState {
             steps: 0,
             interactions: 0,
             last_loss: f64::NAN,
+            pending_compute: 0.0,
             time: 0.0,
             compute: 0.0,
             comm_time: 0.0,
@@ -168,9 +299,13 @@ pub struct EventOutcome {
 /// steps the initiator runs, and which averaging rule it applies against
 /// the partner's published (possibly stale) slot snapshot.
 ///
-/// Only algorithms that schedule 2-node events advertise one — the
-/// synchronous round-based baselines are whole-cluster barriers by
-/// definition and return `None` from [`Algorithm::gossip_profile`].
+/// An algorithm advertises one iff its mixing decomposes into pairwise
+/// events: the gossip algorithms (swarm, poisson, adpsgd), and — since the
+/// phased-event redesign — D-PSGD, whose per-round matching average is
+/// scheduled as per-edge events and degrades gracefully to initiator-driven
+/// pairwise averaging. Algorithms whose mixing is irreducibly global (SGP's
+/// push-sum, local SGD's and allreduce's global mean) return `None` from
+/// [`Algorithm::gossip_profile`].
 #[derive(Clone, Copy, Debug)]
 pub struct GossipProfile {
     /// local SGD steps per interaction (fixed H or geometric with mean H)
@@ -209,9 +344,11 @@ pub trait Algorithm: Sync {
     ) -> InteractionSchedule;
 
     /// Execute one event. `parts` are exclusive borrows of the event's
-    /// participant states, aligned with `ev.nodes`; `t` is the 0-based
-    /// event index. Charge simulated time to the states' clocks and return
-    /// the wire accounting.
+    /// participant states, aligned with `ev.nodes`; `t` is the event's
+    /// 0-based logical tick (`ev.tick`: the gossip interaction index, or
+    /// the synchronous round the event belongs to). Dispatch on `ev.kind`
+    /// for phased schedules. Charge simulated time to the states' clocks
+    /// and return the wire accounting.
     fn interact(
         &self,
         t: u64,
@@ -235,9 +372,10 @@ pub trait Algorithm: Sync {
         }
     }
 
-    /// Free-running gossip profile: `Some` iff the algorithm schedules
-    /// 2-node events and can run initiator-driven on
-    /// [`super::run_freerun`]. Default `None` (round-based semantics).
+    /// Free-running gossip profile: `Some` iff the algorithm's mixing
+    /// decomposes into pairwise events, so it can run initiator-driven on
+    /// [`super::run_freerun`] (swarm, poisson, adpsgd, dpsgd). Default
+    /// `None` (irreducibly global mixing).
     fn gossip_profile(&self) -> Option<GossipProfile> {
         None
     }
@@ -365,7 +503,17 @@ pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorith
         "adpsgd" => Box::new(AdPsgd),
         "dpsgd" => Box::new(DPsgd),
         "sgp" => Box::new(Sgp),
-        "localsgd" => Box::new(LocalSgd { h: opts.h_localsgd.max(1) }),
+        "localsgd" => {
+            if opts.h_localsgd == 0 {
+                return Err(
+                    "localsgd needs a communication period h >= 1 (got h=0): \
+                     pass --set h=5 for the paper's period, or any positive \
+                     integer"
+                        .to_string(),
+                );
+            }
+            Box::new(LocalSgd { h: opts.h_localsgd })
+        }
         "allreduce" => Box::new(AllReduce),
         other => {
             return Err(format!(
@@ -387,13 +535,71 @@ mod tests {
     #[test]
     fn schedule_push_assigns_sequence_tokens() {
         let mut s = InteractionSchedule::new(4);
-        s.push(vec![0, 1], vec![2, 2], 7);
-        s.push(vec![1, 3], vec![1, 1], 8);
-        s.push(vec![0, 1, 2, 3], vec![1; 4], 9);
+        s.push_gossip(0, 1, 2, 2, 7);
+        s.push_gossip(1, 3, 1, 1, 8);
+        s.push_mix(vec![0, 1, 2, 3], 9);
+        s.seal_round();
         assert_eq!(s.events[0].seq, vec![0, 0]);
         assert_eq!(s.events[1].seq, vec![1, 0]);
         assert_eq!(s.events[2].seq, vec![1, 2, 0, 1]);
         assert_eq!(s.per_node, vec![2, 3, 1, 2]);
+        assert_eq!(s.ticks, 3);
+        assert_eq!(
+            s.events.iter().map(|e| e.tick).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn phased_round_wires_compute_before_mix() {
+        let n = 3;
+        let mut s = InteractionSchedule::new(n);
+        s.push_round(&[2, 2, 2], 11);
+        s.push_round(&[2, 2, 2], 12);
+        assert_eq!(s.events.len(), 2 * (n + 1));
+        assert_eq!(s.ticks, 2);
+        for r in 0..2 {
+            let base = r * (n + 1);
+            for k in 0..n {
+                let ev = &s.events[base + k];
+                assert_eq!(ev.kind, EventKind::Compute);
+                assert_eq!(ev.nodes, vec![k]);
+                assert_eq!(ev.h, vec![2]);
+                assert_eq!(ev.tick, r as u64);
+            }
+            let mix = &s.events[base + n];
+            assert_eq!(mix.kind, EventKind::Mix);
+            assert_eq!(mix.nodes, (0..n).collect::<Vec<_>>());
+            assert_eq!(mix.tick, r as u64);
+            // the mix waits for every compute of its round
+            let expect: Vec<u64> = (0..n).map(|_| (2 * r + 1) as u64).collect();
+            assert_eq!(mix.seq, expect);
+        }
+        // events are in non-decreasing tick order (the executors'
+        // milestone mapping relies on this)
+        assert!(s.events.windows(2).all(|w| w[0].tick <= w[1].tick));
+    }
+
+    #[test]
+    fn pair_mix_shares_round_tick() {
+        let mut s = InteractionSchedule::new(4);
+        s.push_compute(0, 1, 5);
+        s.push_compute(1, 1, 5);
+        s.push_compute(2, 1, 5);
+        s.push_compute(3, 1, 5);
+        s.push_pair_mix(0, 2, 5);
+        s.push_pair_mix(1, 3, 5);
+        s.push_mix(vec![0, 1, 2, 3], 5);
+        s.seal_round();
+        assert_eq!(s.ticks, 1);
+        assert!(s.events.iter().all(|e| e.tick == 0));
+        assert_eq!(s.events[4].kind, EventKind::Gossip);
+        assert_eq!(s.events[4].nodes, vec![0, 2]);
+        assert_eq!(s.events[4].h, vec![0, 0]);
+        // edge (0,2) depends on computes of 0 and 2 only
+        assert_eq!(s.events[4].seq, vec![1, 1]);
+        // the barrier is every node's third event
+        assert_eq!(s.events[6].seq, vec![2, 2, 2, 2]);
     }
 
     #[test]
@@ -438,5 +644,15 @@ mod tests {
             assert_eq!(a.name(), *name);
         }
         assert!(make_algorithm("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn factory_rejects_zero_localsgd_period() {
+        let opts = AlgoOptions { h_localsgd: 0, ..AlgoOptions::default() };
+        let err = make_algorithm("localsgd", &opts).unwrap_err();
+        assert!(err.contains("h >= 1"), "unhelpful error: {err}");
+        // other algorithms ignore the localsgd period entirely
+        assert!(make_algorithm("swarm", &opts).is_ok());
+        assert!(make_algorithm("dpsgd", &opts).is_ok());
     }
 }

@@ -38,7 +38,7 @@ impl Algorithm for AdPsgd {
         for _ in 0..events {
             let (i, j) = graph.sample_edge(rng);
             let seed = rng.next_u64();
-            s.push(vec![i, j], vec![1, 1], seed);
+            s.push_gossip(i, j, 1, 1, seed);
         }
         s
     }

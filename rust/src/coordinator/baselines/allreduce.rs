@@ -4,10 +4,14 @@
 //! common start is algebraically identical to averaging gradients for
 //! SGD+momentum when momenta follow the same trajectory, which they do
 //! here — all agents stay in lock-step.)
+//!
+//! Under the phased-event contract one round is `n` single-node
+//! [`EventKind::Compute`] events (one step each, spread across every
+//! worker) plus one whole-cluster [`EventKind::Mix`] allreduce barrier.
 
 use crate::coordinator::algorithm::{
-    barrier_all, mean_params, step_once, Algorithm, Event, EventOutcome, InteractionSchedule,
-    NodeState, StepCtx,
+    barrier_all, mean_params, step_once, Algorithm, Event, EventKind, EventOutcome,
+    InteractionSchedule, NodeState, StepCtx,
 };
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
@@ -28,9 +32,10 @@ impl Algorithm for AllReduce {
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         let mut s = InteractionSchedule::new(n);
+        let h = vec![1; n];
         for _ in 0..events {
             let seed = rng.next_u64();
-            s.push((0..n).collect(), vec![1; n], seed);
+            s.push_round(&h, seed);
         }
         s
     }
@@ -42,25 +47,36 @@ impl Algorithm for AllReduce {
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
-        let n = parts.len();
-        let bytes = ctx.cost.wire_bytes(ctx.dim);
-        for (k, st) in parts.iter_mut().enumerate() {
-            step_once(ctx, ev.nodes[k], st);
+        match ev.kind {
+            // one SGD step on one node, from its own stream
+            EventKind::Compute => {
+                step_once(ctx, ev.nodes[0], &mut *parts[0]);
+                EventOutcome::default()
+            }
+            // global model average (== gradient allreduce; shared f64
+            // node-order helper) + the ring-allreduce barrier
+            EventKind::Mix => {
+                let n = parts.len();
+                debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+                let bytes = ctx.cost.wire_bytes(ctx.dim);
+                let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+                for st in parts.iter_mut() {
+                    st.params.copy_from_slice(&mu);
+                    st.comm.copy_from_slice(&mu);
+                    st.interactions += 1;
+                }
+                barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+                // ring allreduce moves ~2·(n−1)/n·bytes per node
+                let bits = (2 * (n as u64 - 1) / n as u64).max(1) * 8 * bytes * n as u64;
+                EventOutcome { bits, fallbacks: 0 }
+            }
+            EventKind::Gossip => {
+                unreachable!("allreduce schedules phased compute+mix rounds only")
+            }
         }
-        // global model average (== gradient allreduce; shared f64 helper)
-        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
-        for st in parts.iter_mut() {
-            st.params.copy_from_slice(&mu);
-            st.comm.copy_from_slice(&mu);
-            st.interactions += 1;
-        }
-        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
-        // ring allreduce moves ~2·(n−1)/n·bytes per node
-        let bits = (2 * (n as u64 - 1) / n as u64).max(1) * 8 * bytes * n as u64;
-        EventOutcome { bits, fallbacks: 0 }
     }
 
-    /// Synchronous rounds: one event advances parallel time by 1.
+    /// Synchronous rounds: one tick is one round of parallel time.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
     }
@@ -104,5 +120,7 @@ mod tests {
         assert!(gap < 0.1, "normalized gap {gap}");
         assert!(m.sim_time > 0.0);
         assert_eq!(m.local_steps, 200 * n as u64);
+        // phased rounds still report one interaction per round
+        assert_eq!(m.interactions, 200);
     }
 }

@@ -4,15 +4,31 @@
 //! mixing step — the sequence-of-perfect-matchings gossip model the paper's
 //! related-work section describes).
 //!
-//! As an [`Algorithm`], each round is one whole-cluster event: D-PSGD's
-//! semantics IS a global barrier, so the event claims every node and the
-//! matching is drawn from the event's own seed.
+//! Under the phased-event contract each round decomposes into:
+//!
+//! 1. `n` single-node [`EventKind::Compute`] events — one SGD step per
+//!    node, each drawing only from its private stream — that spread across
+//!    every worker of the parallel executor;
+//! 2. one [`EventKind::Gossip`] event **per matching edge** (the matching
+//!    is pre-drawn from the round seed at schedule time — the identical
+//!    draw the former monolithic round made at interact time), averaging
+//!    the two endpoints; disjoint edges run concurrently;
+//! 3. one whole-cluster [`EventKind::Mix`] barrier that settles the round's
+//!    synchronous time accounting (everyone meets the slowest, then pays
+//!    one exchange latency).
+//!
+//! The per-edge decomposition is also what makes D-PSGD freerun-eligible:
+//! its mixing is pairwise, so it advertises a [`GossipProfile`] (one step
+//! per interaction, live-model averaging) and runs on
+//! [`run_freerun`](crate::coordinator::run_freerun) as the asynchronous
+//! matching-free degradation of the same update rule.
 
 use crate::coordinator::algorithm::{
-    barrier_all, pair_at, step_once, Algorithm, Event, EventOutcome, InteractionSchedule,
-    NodeState, StepCtx,
+    barrier_all, pair, step_once, Algorithm, Event, EventKind, EventOutcome, GossipProfile,
+    InteractionSchedule, NodeState, StepCtx,
 };
 use crate::coordinator::cluster::average_into_both;
+use crate::coordinator::{AveragingMode, LocalSteps};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -28,13 +44,24 @@ impl Algorithm for DPsgd {
         &self,
         n: usize,
         events: u64,
-        _graph: &Graph,
+        graph: &Graph,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         let mut s = InteractionSchedule::new(n);
         for _ in 0..events {
             let seed = rng.next_u64();
-            s.push((0..n).collect(), vec![1; n], seed);
+            for k in 0..n {
+                s.push_compute(k, 1, seed);
+            }
+            // pre-draw the matching from the round seed — bit-for-bit the
+            // draw the monolithic round used to make at interact time, so
+            // phased schedules replay the identical mixing sequence
+            let mut er = Pcg64::seed(seed);
+            for &(u, v) in &graph.random_matching(&mut er) {
+                s.push_pair_mix(u, v, seed);
+            }
+            s.push_mix((0..n).collect(), seed);
+            s.seal_round();
         }
         s
     }
@@ -47,35 +74,47 @@ impl Algorithm for DPsgd {
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
         let bytes = ctx.cost.wire_bytes(ctx.dim);
-        // the matching below indexes `parts` by node id, which requires
-        // the identity-ordered whole-cluster events this schedule emits
-        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
-        // one SGD step per node, each from its own stream
-        for (k, st) in parts.iter_mut().enumerate() {
-            step_once(ctx, ev.nodes[k], st);
+        match ev.kind {
+            // one SGD step on one node, from its own stream
+            EventKind::Compute => {
+                step_once(ctx, ev.nodes[0], &mut *parts[0]);
+                EventOutcome::default()
+            }
+            // one matching edge: average the endpoints (disjoint edges of
+            // the matching commute, so they run concurrently); the time
+            // charge is settled at the round barrier
+            EventKind::Gossip => {
+                let (a, b) = pair(parts);
+                average_into_both(&mut a.params, &mut b.params);
+                a.comm.copy_from_slice(&a.params);
+                b.comm.copy_from_slice(&b.params);
+                a.interactions += 1;
+                b.interactions += 1;
+                EventOutcome { bits: 2 * 8 * bytes, fallbacks: 0 }
+            }
+            // round barrier: the round is synchronous — everyone advances
+            // to the slowest node, then pays one exchange latency together
+            EventKind::Mix => {
+                barrier_all(parts, ctx.cost.exchange_time(bytes));
+                EventOutcome::default()
+            }
         }
-        // average along a random matching (drawn from the event seed);
-        // pairs exchange in parallel, but the round is synchronous:
-        // barrier to the slowest, then one exchange latency for everyone
-        let mut er = Pcg64::seed(ev.seed);
-        let matching = ctx.graph.random_matching(&mut er);
-        let mut bits = 0u64;
-        for &(u, v) in &matching {
-            let (a, b) = pair_at(parts, u, v);
-            average_into_both(&mut a.params, &mut b.params);
-            a.comm.copy_from_slice(&a.params);
-            b.comm.copy_from_slice(&b.params);
-            a.interactions += 1;
-            b.interactions += 1;
-            bits += 2 * 8 * bytes;
-        }
-        barrier_all(parts, ctx.cost.exchange_time(bytes));
-        EventOutcome { bits, fallbacks: 0 }
     }
 
-    /// Synchronous rounds: one event advances parallel time by 1.
+    /// Synchronous rounds: one tick is one round of parallel time.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
+    }
+
+    /// Pairwise mixing makes D-PSGD freerun-eligible: one step per
+    /// interaction, live-model averaging against the partner's published
+    /// snapshot (the asynchronous degradation of the matching average —
+    /// the snapshot *read* still never blocks the partner).
+    fn gossip_profile(&self) -> Option<GossipProfile> {
+        Some(GossipProfile {
+            local_steps: LocalSteps::Fixed(1),
+            mode: AveragingMode::Blocking,
+        })
     }
 }
 
@@ -112,9 +151,53 @@ mod tests {
         let m = run_serial(&DPsgd, &backend, &spec, &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
+        // phased rounds still report one interaction per round
+        assert_eq!(m.interactions, 300);
+        assert_eq!(m.local_steps, 300 * n as u64);
         // models stay concentrated (gossip mixing)
         let gamma_last = m.curve.last().unwrap().gamma;
         assert!(gamma_last.is_finite());
         assert!(gamma_last < 5.0, "gamma={gamma_last}");
+    }
+
+    #[test]
+    fn phased_schedule_shape_per_round() {
+        // each round: n computes + one gossip event per matching edge + one
+        // whole-cluster barrier, all on the round's tick
+        let n = 8;
+        let mut rng = Pcg64::seed(4);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        let mut srng = Pcg64::seed(9);
+        let s = DPsgd.schedule(n, 5, &graph, &mut srng);
+        assert_eq!(s.ticks, 5);
+        let mut cursor = 0usize;
+        for round in 0..5u64 {
+            // n compute events
+            for k in 0..n {
+                let ev = &s.events[cursor + k];
+                assert_eq!(ev.kind, EventKind::Compute);
+                assert_eq!(ev.nodes, vec![k]);
+                assert_eq!(ev.tick, round);
+            }
+            cursor += n;
+            // matching edges (complete graph on even n: perfect matching)
+            let mut matched = 0usize;
+            while s.events[cursor].kind == EventKind::Gossip {
+                let ev = &s.events[cursor];
+                assert_eq!(ev.nodes.len(), 2);
+                assert_eq!(ev.h, vec![0, 0]);
+                assert_eq!(ev.tick, round);
+                matched += 2;
+                cursor += 1;
+            }
+            assert!(matched > 0 && matched <= n);
+            // whole-cluster barrier closes the round
+            let mix = &s.events[cursor];
+            assert_eq!(mix.kind, EventKind::Mix);
+            assert_eq!(mix.nodes, (0..n).collect::<Vec<_>>());
+            assert_eq!(mix.tick, round);
+            cursor += 1;
+        }
+        assert_eq!(cursor, s.events.len());
     }
 }

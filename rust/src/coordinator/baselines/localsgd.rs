@@ -2,11 +2,13 @@
 //! global model average (the paper's comparison point communicates every
 //! 5 steps, following Lin et al. [29]).
 //!
-//! One [`Algorithm`] event = one communication round (`h` local steps per
-//! node + one allreduce barrier).
+//! Under the phased-event contract one communication round is `n`
+//! single-node [`EventKind::Compute`] events (`h` local steps each, all
+//! randomness from the node's private stream — these spread across every
+//! worker) plus one whole-cluster [`EventKind::Mix`] allreduce barrier.
 
 use crate::coordinator::algorithm::{
-    barrier_all, local_phase, mean_params, Algorithm, Event, EventOutcome,
+    barrier_all, local_phase, mean_params, Algorithm, Event, EventKind, EventOutcome,
     InteractionSchedule, NodeState, StepCtx,
 };
 use crate::rngx::Pcg64;
@@ -30,11 +32,12 @@ impl Algorithm for LocalSgd {
         _graph: &Graph,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
-        assert!(self.h >= 1);
+        assert!(self.h >= 1, "localsgd needs h >= 1 (the factory rejects h=0)");
         let mut s = InteractionSchedule::new(n);
+        let h = vec![self.h; n];
         for _ in 0..events {
             let seed = rng.next_u64();
-            s.push((0..n).collect(), vec![self.h; n], seed);
+            s.push_round(&h, seed);
         }
         s
     }
@@ -46,25 +49,37 @@ impl Algorithm for LocalSgd {
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
-        let n = parts.len();
-        let bytes = ctx.cost.wire_bytes(ctx.dim);
-        // h local steps per node, each node on its own stream (the shared
-        // burst + per-step compute-charge rule)
-        for (k, st) in parts.iter_mut().enumerate() {
-            local_phase(ctx, ev.nodes[k], st, ev.h[k]);
+        match ev.kind {
+            // h local steps on one node, on its own stream (the shared
+            // burst + per-step compute-charge rule)
+            EventKind::Compute => {
+                local_phase(ctx, ev.nodes[0], &mut *parts[0], ev.h[0]);
+                EventOutcome::default()
+            }
+            // global model average (shared f64 node-order accumulation) +
+            // the allreduce barrier
+            EventKind::Mix => {
+                let n = parts.len();
+                // the node-order accumulation requires the identity-ordered
+                // whole-cluster mix this schedule emits
+                debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+                let bytes = ctx.cost.wire_bytes(ctx.dim);
+                let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+                for st in parts.iter_mut() {
+                    st.params.copy_from_slice(&mu);
+                    st.comm.copy_from_slice(&mu);
+                    st.interactions += 1;
+                }
+                barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+                EventOutcome { bits: 2 * 8 * bytes * n as u64, fallbacks: 0 }
+            }
+            EventKind::Gossip => {
+                unreachable!("localsgd schedules phased compute+mix rounds only")
+            }
         }
-        // global model average (shared f64 node-order accumulation)
-        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
-        for st in parts.iter_mut() {
-            st.params.copy_from_slice(&mu);
-            st.comm.copy_from_slice(&mu);
-            st.interactions += 1;
-        }
-        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
-        EventOutcome { bits: 2 * 8 * bytes * n as u64, fallbacks: 0 }
     }
 
-    /// Synchronous rounds: one event advances parallel time by 1.
+    /// Synchronous rounds: one tick is one round of parallel time.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
     }
@@ -105,6 +120,8 @@ mod tests {
         assert!(gap < 0.1, "normalized gap {gap}");
         // 60 rounds × 5 steps × 4 nodes local steps
         assert_eq!(m.local_steps, 60 * 5 * 4);
+        // phased rounds still report one interaction per round
+        assert_eq!(m.interactions, 60);
         // after the final average all models agree
         let gamma_last = m.curve.last().unwrap().gamma;
         assert!(gamma_last < 1e-9, "gamma={gamma_last}");

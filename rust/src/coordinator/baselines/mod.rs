@@ -1,21 +1,25 @@
 //! The comparison systems of the paper's §5 evaluation, each an
 //! [`crate::coordinator::Algorithm`] plug-in to the shared executors:
 //!
-//! | module        | paper baseline                | event shape                  |
-//! |---------------|-------------------------------|------------------------------|
-//! | [`allreduce`] | (large-batch) data-parallel SGD [16] | whole-cluster round   |
-//! | [`localsgd`]  | Local SGD [38, 29]            | whole-cluster round (h steps)|
-//! | [`dpsgd`]     | D-PSGD [27]                   | whole-cluster round + matching|
-//! | [`adpsgd`]    | AD-PSGD [28]                  | pairwise gossip event        |
-//! | [`sgp`]       | SGP (push-sum) [5]            | whole-cluster push round     |
+//! | module        | paper baseline                | event shape (per tick)              |
+//! |---------------|-------------------------------|-------------------------------------|
+//! | [`allreduce`] | (large-batch) data-parallel SGD [16] | n computes + mix barrier     |
+//! | [`localsgd`]  | Local SGD [38, 29]            | n computes (h steps) + mix barrier  |
+//! | [`dpsgd`]     | D-PSGD [27]                   | n computes + per-edge gossip + mix  |
+//! | [`adpsgd`]    | AD-PSGD [28]                  | one pairwise gossip event           |
+//! | [`sgp`]       | SGP (push-sum) [5]            | n computes + push-sum mix barrier   |
 //!
 //! All evaluate on the same cadence as SwarmSGD and charge time from the
 //! same [`crate::netmodel::CostModel`] through the per-node clocks in
 //! [`crate::coordinator::NodeState`] — so loss-vs-time and time-per-batch
-//! comparisons are apples-to-apples, on either executor. The asynchronous
-//! baselines (AD-PSGD) schedule 2-node events and genuinely parallelize on
-//! `--executor parallel`; the synchronous ones schedule whole-cluster
-//! events, because their semantics IS a global barrier per round.
+//! comparisons are apples-to-apples, on either executor. Since the
+//! phased-event redesign *every* baseline genuinely parallelizes on
+//! `--executor parallel`: the asynchronous ones (AD-PSGD) as 2-node gossip
+//! events, the synchronous ones as per-node compute events that spread
+//! across all workers, with only the round-closing mix event acting as the
+//! barrier their semantics requires — and the metrics stay bit-identical
+//! to the monolithic whole-cluster rounds they replaced. D-PSGD's
+//! per-edge mixing additionally makes it freerun-eligible.
 
 mod adpsgd;
 mod allreduce;

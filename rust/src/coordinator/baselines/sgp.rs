@@ -8,15 +8,21 @@
 //! push-sum's defining invariant (tested below).  Run with overlap factor 1
 //! as the paper configures SGP.
 //!
-//! One [`Algorithm`] event = one synchronous push-sum round. The push
-//! targets are drawn from the event seed; each node's inbox is its `inbox`
-//! scratch, so the round allocates only the n-vector of weight shares.
+//! Under the phased-event contract one round is `n` single-node
+//! [`EventKind::Compute`] events (the de-biased SGD step, all randomness
+//! from the node's private stream) plus one whole-cluster
+//! [`EventKind::Mix`] event that performs the push phase. SGP charges the
+//! round *max* compute time to everyone (synchronous rounds), so each
+//! compute event parks its drawn time in [`NodeState::pending_compute`]
+//! and the mix barrier settles it. The push targets are drawn from the
+//! round seed; each node's inbox is its `inbox` scratch, so the round
+//! allocates only the n-vector of weight shares.
 //! [`Algorithm::round_metrics`] is overridden: curves evaluate the
 //! de-biased consensus Σx/Σw, and the individual model is z = x/w.
 
 use crate::coordinator::algorithm::{
-    barrier_all, pair_at, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState,
-    RoundModels, StepCtx,
+    barrier_all, pair_at, Algorithm, Event, EventKind, EventOutcome, InteractionSchedule,
+    NodeState, RoundModels, StepCtx,
 };
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
@@ -37,9 +43,10 @@ impl Algorithm for Sgp {
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         let mut s = InteractionSchedule::new(n);
+        let h = vec![1; n];
         for _ in 0..events {
             let seed = rng.next_u64();
-            s.push((0..n).collect(), vec![1; n], seed);
+            s.push_round(&h, seed);
         }
         s
     }
@@ -51,64 +58,79 @@ impl Algorithm for Sgp {
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
-        let n = parts.len();
-        // the push targets below index `parts` by node id, which requires
-        // the identity-ordered whole-cluster events this schedule emits
-        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
-        let bytes = ctx.cost.wire_bytes(ctx.dim);
-        let mut er = Pcg64::seed(ev.seed);
-        // SGD step on the de-biased model z = x/w, then re-bias the update;
-        // the round is synchronous: everyone is charged the slowest step
-        let mut max_comp: f64 = 0.0;
-        for (k, st) in parts.iter_mut().enumerate() {
-            let agent = ev.nodes[k];
-            let w = st.weight as f32;
-            for (z, &x) in st.snap.iter_mut().zip(&st.params) {
-                *z = x / w;
+        match ev.kind {
+            // SGD step on the de-biased model z = x/w, then re-bias the
+            // update. The compute-time draw is parked: the round is
+            // synchronous, so everyone pays the round max at the barrier.
+            EventKind::Compute => {
+                let st = &mut *parts[0];
+                let agent = ev.nodes[0];
+                let w = st.weight as f32;
+                for (z, &x) in st.snap.iter_mut().zip(&st.params) {
+                    *z = x / w;
+                }
+                st.last_loss =
+                    ctx.backend.step(agent, &mut st.snap, &mut st.mom, ctx.lr, &mut st.rng);
+                st.steps += 1;
+                for (x, &z) in st.params.iter_mut().zip(&st.snap) {
+                    *x = z * w;
+                }
+                st.pending_compute = ctx.cost.compute_time(&mut st.rng);
+                EventOutcome::default()
             }
-            st.last_loss =
-                ctx.backend.step(agent, &mut st.snap, &mut st.mom, ctx.lr, &mut st.rng);
-            st.steps += 1;
-            for (x, &z) in st.params.iter_mut().zip(&st.snap) {
-                *x = z * w;
+            // the push-sum phase: settle the round-max compute charge,
+            // halve-and-push to one random out-neighbor each, absorb,
+            // barrier on the p2p cost
+            EventKind::Mix => {
+                let n = parts.len();
+                // the push targets below index `parts` by node id, which
+                // requires the identity-ordered whole-cluster mix this
+                // schedule emits
+                debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+                let bytes = ctx.cost.wire_bytes(ctx.dim);
+                let mut er = Pcg64::seed(ev.seed);
+                let max_comp =
+                    parts.iter().map(|s| s.pending_compute).fold(0.0, f64::max);
+                for st in parts.iter_mut() {
+                    st.time += max_comp;
+                    st.compute += max_comp;
+                    st.pending_compute = 0.0;
+                }
+                // push phase: halve and send to one random out-neighbor;
+                // inboxes are the receivers' `inbox` scratch buffers
+                for st in parts.iter_mut() {
+                    st.inbox.iter_mut().for_each(|v| *v = 0.0);
+                }
+                let mut inbox_w = vec![0.0f64; n];
+                let mut bits = 0u64;
+                for k in 0..n {
+                    let dst = ctx.graph.sample_neighbor(ev.nodes[k], &mut er);
+                    inbox_w[dst] += 0.5 * parts[k].weight;
+                    let (src, dstst) = pair_at(parts, k, dst);
+                    for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
+                        *s += 0.5 * v;
+                    }
+                    bits += 8 * bytes + 64; // x halves + weight scalar
+                }
+                // absorb: x ← x/2 + inbox, w ← w/2 + inbox_w
+                for (k, st) in parts.iter_mut().enumerate() {
+                    for (x, &add) in st.params.iter_mut().zip(&st.inbox) {
+                        *x = 0.5 * *x + add;
+                    }
+                    st.weight = 0.5 * st.weight + inbox_w[k];
+                    st.comm.copy_from_slice(&st.params);
+                    st.interactions += 1;
+                }
+                barrier_all(parts, ctx.cost.p2p_time(bytes));
+                EventOutcome { bits, fallbacks: 0 }
             }
-            let dt = ctx.cost.compute_time(&mut st.rng);
-            max_comp = max_comp.max(dt);
-        }
-        for st in parts.iter_mut() {
-            st.time += max_comp;
-            st.compute += max_comp;
-        }
-        // push phase: halve and send to one random out-neighbor; inboxes
-        // are the receivers' `inbox` scratch buffers
-        for st in parts.iter_mut() {
-            st.inbox.iter_mut().for_each(|v| *v = 0.0);
-        }
-        let mut inbox_w = vec![0.0f64; n];
-        let mut bits = 0u64;
-        for k in 0..n {
-            let dst = ctx.graph.sample_neighbor(ev.nodes[k], &mut er);
-            inbox_w[dst] += 0.5 * parts[k].weight;
-            let (src, dstst) = pair_at(parts, k, dst);
-            for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
-                *s += 0.5 * v;
+            EventKind::Gossip => {
+                unreachable!("sgp schedules phased compute+mix rounds only")
             }
-            bits += 8 * bytes + 64; // x halves + weight scalar
         }
-        // absorb: x ← x/2 + inbox, w ← w/2 + inbox_w
-        for (k, st) in parts.iter_mut().enumerate() {
-            for (x, &add) in st.params.iter_mut().zip(&st.inbox) {
-                *x = 0.5 * *x + add;
-            }
-            st.weight = 0.5 * st.weight + inbox_w[k];
-            st.comm.copy_from_slice(&st.params);
-            st.interactions += 1;
-        }
-        barrier_all(parts, ctx.cost.p2p_time(bytes));
-        EventOutcome { bits, fallbacks: 0 }
     }
 
-    /// Synchronous rounds: one event advances parallel time by 1.
+    /// Synchronous rounds: one tick is one round of parallel time.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
     }
@@ -189,5 +211,8 @@ mod tests {
         let m = run_serial(&Sgp, &backend, &spec(n, 300, 0.05), &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
+        // phased rounds: interactions still count rounds, steps count nodes
+        assert_eq!(m.interactions, 300);
+        assert_eq!(m.local_steps, 300 * n as u64);
     }
 }

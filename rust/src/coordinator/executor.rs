@@ -11,6 +11,18 @@
 //!   dependency order**: event t runs only after each participant has
 //!   finished all of its earlier scheduled events.
 //!
+//! Dispatch is by [`EventKind`], exhaustively — `Gossip` events take the
+//! allocation-free two-lock fast path, `Compute` events take one lock, and
+//! `Mix` barriers lock all participants in ascending node order. Because
+//! round-based algorithms schedule *phased* rounds (n single-node compute
+//! events + a mix barrier per round, `seq`-ordered compute → mix), their
+//! compute phases spread across all K workers; only the mixing step
+//! serializes. Schedules are measured in logical **ticks** ([`Event::tick`]:
+//! gossip interactions or synchronous rounds) — the lr schedule, eval
+//! milestones, and the reported interaction count all count ticks, so a
+//! phased round costs one tick exactly like the monolithic round it
+//! replaced.
+//!
 //! # Replay determinism
 //!
 //! A parallel run is **bit-identical** to the serial run of the same seed,
@@ -30,14 +42,16 @@
 //!
 //! `tests/parallel_executor.rs` asserts metric-for-metric bit equality
 //! between the two executors for SwarmSGD (all three averaging modes,
-//! quadratic and softmax oracles) and AD-PSGD, and CI enforces it on every
-//! push/PR.
+//! quadratic and softmax oracles), AD-PSGD, and the four phased round-based
+//! baselines (dpsgd/sgp/localsgd/allreduce at 1/2/4/8 threads) — plus bit
+//! equality of the phased schedules against the pre-redesign monolithic
+//! rounds — and CI enforces it on every push/PR.
 //!
 //! Deadlock freedom: ordered lock acquisition within an event, plus the
 //! induction that the lowest unfinished schedule index always has all of
 //! its dependencies satisfied.
 
-use super::algorithm::{Algorithm, Event, NodeState, StepCtx};
+use super::algorithm::{Algorithm, Event, EventKind, NodeState, StepCtx};
 use super::metrics::{CurvePoint, RunMetrics};
 use super::LrSchedule;
 use crate::analysis::gamma_potential;
@@ -176,14 +190,18 @@ fn run_schedule(
     };
     let mut eval_rng = Pcg64::stream(spec.seed, STREAM_EVAL);
     let mut m = RunMetrics::new(&spec.name);
-    let total = schedule.events.len() as u64;
-    for end in milestones(total, spec.eval_every) {
+    // milestones are in logical ticks (gossip interactions / synchronous
+    // rounds); each maps to the event-index boundary where its last tick's
+    // events end, so evaluation always happens at a round barrier
+    let total = schedule.ticks;
+    for mark in milestones(total, spec.eval_every) {
+        let end = tick_boundary(&schedule.events, mark);
         if threads == 1 {
             chunk_serial(&sh, end);
         } else {
             chunk_parallel(&sh, end, threads);
         }
-        record_point(&sh, end, &mut eval_rng, spec.track_gamma, &mut m);
+        record_point(&sh, mark, &mut eval_rng, spec.track_gamma, &mut m);
     }
     let Shared { nodes, bits, fallbacks, .. } = sh;
     let states: Vec<NodeState> = nodes
@@ -202,9 +220,17 @@ fn run_schedule(
     m
 }
 
-/// Chunk ends: every multiple of `eval_every` in `(0, total)`, then `total`.
-/// (Shared with the free-running executor, which records all but the final
-/// mark from live slot snapshots.)
+/// Index of the first event past logical tick `tick - 1`: the schedule
+/// prefix `[0, boundary)` contains exactly the events of ticks `< tick`.
+/// Events are appended in non-decreasing tick order, so the predicate is
+/// partition-monotone.
+fn tick_boundary(events: &[Event], tick: u64) -> u64 {
+    events.partition_point(|e| e.tick < tick) as u64
+}
+
+/// Milestone ticks: every multiple of `eval_every` in `(0, total)`, then
+/// `total`. (Shared with the free-running executor, which records all but
+/// the final mark from live slot snapshots.)
 pub(super) fn milestones(total: u64, eval_every: u64) -> Vec<u64> {
     let mut v = Vec::new();
     if total == 0 {
@@ -236,7 +262,7 @@ fn chunk_parallel(sh: &Shared<'_>, end: u64, threads: usize) {
                     if !wait_deps(sh, ev) {
                         break;
                     }
-                    execute_event(sh, t, ev);
+                    execute_event(sh, ev);
                     // this worker is the unique owner of all participants
                     for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
                         sh.done[k].store(s + 1, Ordering::Release);
@@ -260,7 +286,7 @@ fn chunk_serial(sh: &Shared<'_>, end: u64) {
         sh.cursor.store(t + 1, Ordering::Relaxed);
         let ev = &sh.events[t as usize];
         // program order trivially satisfies the dependency order
-        execute_event(sh, t, ev);
+        execute_event(sh, ev);
         for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
             sh.done[k].store(s + 1, Ordering::Relaxed);
         }
@@ -292,52 +318,66 @@ fn wait_deps(sh: &Shared<'_>, ev: &Event) -> bool {
     }
 }
 
-/// Execute one scheduled event: take the participants' locks in ascending
-/// node order, hand exclusive borrows to the algorithm in role order,
-/// merge the wire accounting.
-fn execute_event(sh: &Shared<'_>, t: u64, ev: &Event) {
+/// Execute one scheduled event: dispatch on its [`EventKind`] (never on
+/// participant arity — a new kind is a compile error here, not a silent
+/// misroute), take the participants' locks in ascending node order, hand
+/// exclusive borrows to the algorithm in role order, merge the wire
+/// accounting.
+fn execute_event(sh: &Shared<'_>, ev: &Event) {
     let ctx = StepCtx {
         backend: sh.backend,
         cost: sh.cost,
         graph: sh.graph,
-        // the paper numbers interactions from 1
-        lr: sh.lr.at(t + 1),
+        // the paper numbers interactions/rounds from 1
+        lr: sh.lr.at(ev.tick + 1),
         dim: sh.dim,
         n: sh.n,
     };
-    let outcome = if ev.nodes.len() == 2 {
-        // gossip fast path: two ordered locks, no allocation
-        let (i, j) = (ev.nodes[0], ev.nodes[1]);
-        let (lo, hi) = (i.min(j), i.max(j));
-        let mut g_lo = sh.nodes[lo].lock().expect("node lock poisoned");
-        let mut g_hi = sh.nodes[hi].lock().expect("node lock poisoned");
-        let (a, b) = if lo == i {
-            (&mut *g_lo, &mut *g_hi)
-        } else {
-            (&mut *g_hi, &mut *g_lo)
-        };
-        let mut parts = [a, b];
-        sh.algo.interact(t, ev, &mut parts, &ctx)
-    } else {
-        // general path: lock all participants in ascending node order,
-        // then re-borrow in the event's role order
-        let mut order: Vec<usize> = ev.nodes.clone();
-        order.sort_unstable();
-        let mut guards: Vec<MutexGuard<'_, NodeState>> = order
-            .iter()
-            .map(|&k| sh.nodes[k].lock().expect("node lock poisoned"))
-            .collect();
-        let mut slots: Vec<Option<&mut NodeState>> =
-            guards.iter_mut().map(|g| Some(&mut **g)).collect();
-        let mut parts: Vec<&mut NodeState> = ev
-            .nodes
-            .iter()
-            .map(|&k| {
-                let rank = order.binary_search(&k).expect("participant not locked");
-                slots[rank].take().expect("duplicate participant")
-            })
-            .collect();
-        sh.algo.interact(t, ev, &mut parts, &ctx)
+    let outcome = match ev.kind {
+        EventKind::Gossip => {
+            // pairwise fast path: two ordered locks, no allocation
+            debug_assert_eq!(ev.nodes.len(), 2, "gossip events are 2-node");
+            let (i, j) = (ev.nodes[0], ev.nodes[1]);
+            let (lo, hi) = (i.min(j), i.max(j));
+            let mut g_lo = sh.nodes[lo].lock().expect("node lock poisoned");
+            let mut g_hi = sh.nodes[hi].lock().expect("node lock poisoned");
+            let (a, b) = if lo == i {
+                (&mut *g_lo, &mut *g_hi)
+            } else {
+                (&mut *g_hi, &mut *g_lo)
+            };
+            let mut parts = [a, b];
+            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+        }
+        EventKind::Compute => {
+            // single-node local phase: one lock, no peers — phased rounds
+            // spread n of these per round across all workers
+            debug_assert_eq!(ev.nodes.len(), 1, "compute events are 1-node");
+            let mut g = sh.nodes[ev.nodes[0]].lock().expect("node lock poisoned");
+            let mut parts = [&mut *g];
+            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+        }
+        EventKind::Mix => {
+            // mixing barrier: lock all participants in ascending node
+            // order, then re-borrow in the event's role order
+            let mut order: Vec<usize> = ev.nodes.clone();
+            order.sort_unstable();
+            let mut guards: Vec<MutexGuard<'_, NodeState>> = order
+                .iter()
+                .map(|&k| sh.nodes[k].lock().expect("node lock poisoned"))
+                .collect();
+            let mut slots: Vec<Option<&mut NodeState>> =
+                guards.iter_mut().map(|g| Some(&mut **g)).collect();
+            let mut parts: Vec<&mut NodeState> = ev
+                .nodes
+                .iter()
+                .map(|&k| {
+                    let rank = order.binary_search(&k).expect("participant not locked");
+                    slots[rank].take().expect("duplicate participant")
+                })
+                .collect();
+            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+        }
     };
     if outcome.bits > 0 {
         sh.bits.fetch_add(outcome.bits, Ordering::Relaxed);
@@ -523,5 +563,20 @@ mod tests {
         assert_eq!(milestones(10, 4), vec![4, 8, 10]);
         assert_eq!(milestones(8, 4), vec![4, 8]);
         assert!(milestones(0, 4).is_empty());
+    }
+
+    #[test]
+    fn tick_boundary_maps_ticks_to_event_ends() {
+        use crate::coordinator::InteractionSchedule;
+        let mut s = InteractionSchedule::new(4);
+        s.push_round(&[1; 4], 1); // events 0..=4, tick 0
+        s.push_gossip(0, 1, 2, 2, 2); // event 5, tick 1
+        s.push_round(&[1; 4], 3); // events 6..=10, tick 2
+        assert_eq!(s.ticks, 3);
+        assert_eq!(tick_boundary(&s.events, 0), 0);
+        assert_eq!(tick_boundary(&s.events, 1), 5);
+        assert_eq!(tick_boundary(&s.events, 2), 6);
+        assert_eq!(tick_boundary(&s.events, 3), 11);
+        assert_eq!(tick_boundary(&s.events, 99), 11);
     }
 }

@@ -42,11 +42,12 @@
 //! seqlock retry counts, and per-worker busy/wait splits, surfaced in
 //! [`RunMetrics::freerun`].
 //!
-//! Only algorithms that schedule 2-node events run here — those advertise
-//! an initiator-side [`GossipProfile`] via
-//! [`Algorithm::gossip_profile`] (`swarm`, `poisson`, `adpsgd`); the
-//! synchronous round-based baselines are whole-cluster barriers by
-//! definition and refuse.
+//! Only algorithms whose mixing decomposes into pairwise events run here —
+//! those advertise an initiator-side [`GossipProfile`] via
+//! [`Algorithm::gossip_profile`] (`swarm`, `poisson`, `adpsgd`, and —
+//! since the phased-event redesign scheduled its matching average as
+//! per-edge events — `dpsgd`); baselines with irreducibly global mixing
+//! (sgp's push-sum, localsgd's and allreduce's global mean) refuse.
 
 use super::algorithm::{local_phase, mean_params, Algorithm, GossipProfile, NodeState, StepCtx};
 use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
@@ -215,8 +216,8 @@ struct WorkerResult {
 /// # Panics
 ///
 /// Panics if the algorithm does not advertise a [`GossipProfile`]
-/// (round-based baselines schedule whole-cluster barriers, which have no
-/// free-running semantics). The CLI checks this up front.
+/// (baselines with irreducibly global mixing — sgp, localsgd, allreduce —
+/// have no free-running semantics). The CLI checks this up front.
 pub fn run_freerun(
     algo: &dyn Algorithm,
     backend: &dyn Backend,
@@ -228,8 +229,8 @@ pub fn run_freerun(
 ) -> RunMetrics {
     let profile = algo.gossip_profile().unwrap_or_else(|| {
         panic!(
-            "--executor freerun requires a gossip algorithm (2-node events); \
-             '{}' schedules whole-cluster rounds",
+            "--executor freerun requires pairwise mixing (a GossipProfile); \
+             '{}' mixes globally per round",
             algo.name()
         )
     });

@@ -4,15 +4,21 @@
 //!
 //! * [`algorithm`] — the object-safe [`Algorithm`] trait ( `schedule` /
 //!   `interact` / `round_metrics`), [`NodeState`], the pre-drawn
-//!   [`InteractionSchedule`], and the [`make_algorithm`] factory behind the
-//!   CLI's `--algorithm` selector.
+//!   [`InteractionSchedule`] of typed [`EventKind`] events (`Gossip` /
+//!   `Compute` / `Mix` — synchronous rounds are *phased* into per-node
+//!   compute events plus a mix barrier, so every algorithm parallelizes),
+//!   and the [`make_algorithm`] factory behind the CLI's `--algorithm`
+//!   selector.
 //! * [`swarm`] — SwarmSGD: Algorithm 1 (blocking), Algorithm 2
 //!   (non-blocking, Appendix F) and the quantized variant (Appendix G),
 //!   with fixed or geometric local-step counts.
 //! * [`poisson`] — the same process scheduled by literal Poisson clocks
 //!   (paper §2's equivalence, testable on the schedule).
 //! * [`baselines`] — the comparison systems of §5: AD-PSGD, D-PSGD, SGP,
-//!   local SGD, and (large-batch) allreduce SGD.
+//!   local SGD, and (large-batch) allreduce SGD — the round-based four
+//!   schedule phased rounds (per-node `Compute` events + a `Mix` barrier;
+//!   D-PSGD additionally decomposes its matching average into per-edge
+//!   gossip events, which makes it freerun-eligible).
 //! * [`executor`] — [`run_serial`] (program-order reference) and
 //!   [`run_parallel`] (shared-memory worker threads), generic over
 //!   `&dyn Algorithm × &dyn Backend`, with the PR-1 replay-determinism
@@ -42,8 +48,8 @@ pub mod telemetry;
 
 pub use algorithm::{
     barrier_all, local_phase, make_algorithm, mean_model, mean_params, pair_at, step_once,
-    AlgoOptions, Algorithm, Event, EventOutcome, GossipProfile, InteractionSchedule, NodeState,
-    RoundModels, StepCtx, ALGORITHM_NAMES,
+    AlgoOptions, Algorithm, Event, EventKind, EventOutcome, GossipProfile, InteractionSchedule,
+    NodeState, RoundModels, StepCtx, ALGORITHM_NAMES,
 };
 pub use cluster::{average_into_both, midpoint, nonblocking_update, quantized_transfer};
 pub use engine::NodeClocks;

@@ -76,7 +76,7 @@ impl Algorithm for PoissonSwarm {
             let hi = self.inner.local_steps.sample(rng);
             let hj = self.inner.local_steps.sample(rng);
             let seed = rng.next_u64();
-            s.push(vec![i, j], vec![hi, hj], seed);
+            s.push_gossip(i, j, hi, hj, seed);
             // re-arm i's Poisson clock
             let dt = rng.exponential(1.0);
             heap.push(Reverse(Ring { at: at + dt, node: i }));

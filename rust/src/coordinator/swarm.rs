@@ -181,7 +181,7 @@ impl Algorithm for SwarmSgd {
             let hi = self.local_steps.sample(rng);
             let hj = self.local_steps.sample(rng);
             let seed = rng.next_u64();
-            s.push(vec![i, j], vec![hi, hj], seed);
+            s.push_gossip(i, j, hi, hj, seed);
         }
         s
     }

@@ -28,7 +28,17 @@
 //!   baselines `adpsgd | dpsgd | sgp | localsgd | allreduce`. An algorithm
 //!   pre-draws an event schedule (`schedule`), executes one event over its
 //!   participants' [`coordinator::NodeState`]s (`interact`), and maps
-//!   states to the evaluated models (`round_metrics`).
+//!   states to the evaluated models (`round_metrics`). Events are typed
+//!   ([`coordinator::EventKind`]): gossip algorithms schedule 2-node
+//!   `Gossip` events; the round-based baselines schedule **phased rounds**
+//!   — `n` single-node `Compute` events (each node's local SGD phase, on
+//!   its private RNG stream) closed by a `Mix` barrier, with `seq`
+//!   dependency tokens wiring compute → mix — so *every* algorithm's
+//!   per-node work spreads across all parallel workers, and only the
+//!   mixing step is the barrier its semantics requires. One phased round
+//!   costs one logical tick, so lr schedules, eval cadence, and reported
+//!   interaction counts are unchanged from the monolithic rounds — and the
+//!   metrics are bit-identical to them (golden-tested).
 //! * **Backend** ([`backend::Backend`], config `preset=`): the quadratic /
 //!   softmax / logistic gradient oracles and the PJRT-compiled models. One
 //!   `&self + Sync` trait; all stochasticity comes from the caller's
@@ -61,17 +71,24 @@
 //! (`tests/freerun_executor.rs`), never bit-equality.
 //!
 //! `tests/parallel_executor.rs` asserts the replay contract for SwarmSGD
-//! (all averaging modes, quadratic and softmax oracles) and AD-PSGD, and
-//! `.github/workflows/ci.yml` runs both suites (plus fmt/clippy/doc gates
-//! and non-blocking throughput benches that append algorithm-tagged
+//! (all averaging modes, quadratic and softmax oracles), AD-PSGD, and the
+//! four phased round-based baselines at threads {1, 2, 4, 8} — plus a
+//! golden test pinning the phased schedules to the pre-redesign monolithic
+//! rounds bit-for-bit — and `.github/workflows/ci.yml` runs both suites
+//! (plus fmt/clippy/doc gates, a `cargo bench --no-run` compile gate, and
+//! non-blocking throughput benches that append algorithm-tagged
 //! `BENCH_parallel.json` / `BENCH_freerun.json` rows to the committed
 //! perf trajectory) on every push and PR.
 //!
-//! Gossip algorithms (swarm, poisson, adpsgd) schedule 2-node events,
-//! genuinely parallelize, and advertise the [`coordinator::GossipProfile`]
-//! that admits them to the free-running executor; the synchronous
-//! baselines schedule whole-cluster events — a global barrier per round is
-//! their semantics, executed faithfully on the replay executors only.
+//! Freerun eligibility follows from *pairwise mixing*, not from being a
+//! gossip algorithm per se: swarm, poisson, and adpsgd schedule 2-node
+//! `Gossip` events, and dpsgd's per-round matching average decomposes into
+//! per-edge `Gossip` events — all four advertise the
+//! [`coordinator::GossipProfile`] that admits them to the free-running
+//! executor. sgp (push-sum), localsgd, and allreduce (global mean) mix
+//! over the whole cluster at once; they parallelize on the replay
+//! executors through their phased compute events but have no free-running
+//! semantics and refuse `--executor freerun`.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

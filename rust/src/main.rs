@@ -6,8 +6,11 @@
 //! the `preset` key picks the compute backend (gradient oracles or the
 //! PJRT path), and `--executor serial|parallel|freerun` picks the driver.
 //! serial/parallel replay the pre-drawn schedule and agree bit-for-bit per
-//! seed; freerun is the free-running sharded runtime (gossip algorithms
-//! only) that trades replayability for real contention/staleness telemetry.
+//! seed — since the phased-event redesign that includes the round-based
+//! baselines, whose per-node compute events spread across all workers;
+//! freerun is the free-running sharded runtime (pairwise-mixing algorithms:
+//! swarm, poisson, adpsgd, dpsgd) that trades replayability for real
+//! contention/staleness telemetry.
 
 use std::path::Path;
 use swarm_sgd::backend::Backend;
@@ -115,12 +118,14 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     }
     println!("config: {cfg:?}\n");
 
+    // no silent clamp: h=0 (or negative h) reaches the factory as 0, which
+    // rejects it for localsgd with an actionable error
     let algo: Box<dyn Algorithm> = make_algorithm(
         &cfg.algo,
         &AlgoOptions {
             local_steps: cfg.local_steps(),
             mode: cfg.averaging_mode()?,
-            h_localsgd: cfg.h.round().max(1.0) as u64,
+            h_localsgd: cfg.h.round().max(0.0) as u64,
         },
     )?;
     let backend = build_backend(&cfg)?;
@@ -157,8 +162,9 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         "freerun" => {
             if algo.gossip_profile().is_none() {
                 return Err(format!(
-                    "--executor freerun requires a gossip algorithm (2-node events); \
-                     '{}' schedules whole-cluster rounds — use --executor serial|parallel",
+                    "--executor freerun requires pairwise mixing (freerun-eligible: \
+                     swarm, poisson, adpsgd, dpsgd); '{}' mixes globally per round — \
+                     use --executor serial|parallel",
                     cfg.algo
                 ));
             }

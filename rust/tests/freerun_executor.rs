@@ -4,9 +4,11 @@
 //! so unlike `tests/parallel_executor.rs` nothing here asserts bit
 //! equality — the contract is statistical:
 //!
-//! 1. **Coverage**: every gossip algorithm (swarm, poisson, adpsgd) runs
-//!    end-to-end with `n ≥ 8×` the thread count, and the round-based
-//!    baselines refuse (no [`GossipProfile`]).
+//! 1. **Coverage**: every pairwise-mixing algorithm (swarm, poisson,
+//!    adpsgd, and — since the phased-event redesign decomposed its
+//!    matching average into per-edge events — dpsgd) runs end-to-end with
+//!    `n ≥ 8×` the thread count, and the globally-mixing baselines refuse
+//!    (no [`GossipProfile`]).
 //! 2. **Telemetry**: the run reports nonzero staleness, real
 //!    interactions/sec, and per-worker accounting that sums to the total.
 //! 3. **Convergence sanity**: a quadratic-oracle freerun run lands in the
@@ -52,7 +54,7 @@ fn freerun_runs_every_gossip_algorithm_with_sharded_nodes() {
     let n = 32;
     let threads = 4;
     let t = 600u64;
-    for name in ["swarm", "poisson", "adpsgd"] {
+    for name in ["swarm", "poisson", "adpsgd", "dpsgd"] {
         let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
         assert!(algo.gossip_profile().is_some(), "{name} must be freerun-capable");
         let backend = quad(n, 32, 0.1);
@@ -88,14 +90,64 @@ fn freerun_runs_every_gossip_algorithm_with_sharded_nodes() {
 }
 
 #[test]
-fn round_based_algorithms_refuse_freerun() {
-    for name in ["dpsgd", "sgp", "localsgd", "allreduce"] {
+fn globally_mixing_algorithms_refuse_freerun() {
+    // sgp (push-sum), localsgd and allreduce (global mean) mix over the
+    // whole cluster at once — no pairwise decomposition, so no profile.
+    // dpsgd is deliberately NOT in this list anymore: its matching average
+    // decomposed into per-edge events, making it the fourth
+    // freerun-eligible algorithm.
+    for name in ["sgp", "localsgd", "allreduce"] {
         let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
         assert!(
             algo.gossip_profile().is_none(),
-            "{name} schedules whole-cluster rounds; it must not advertise a gossip profile"
+            "{name} mixes globally per round; it must not advertise a gossip profile"
         );
     }
+    assert!(
+        make_algorithm("dpsgd", &AlgoOptions::default())
+            .unwrap()
+            .gossip_profile()
+            .is_some(),
+        "dpsgd's per-edge mixing makes it freerun-eligible"
+    );
+}
+
+#[test]
+fn freerun_dpsgd_convergence_matches_serial_ballpark() {
+    // the redesign's payoff scenario: --executor freerun --algorithm dpsgd
+    // runs (no refusal) and lands in the same loss ballpark as the serial
+    // reference. Budgets are step-matched: the serial reference runs
+    // t/n phased rounds (n steps each), freerun runs t pairwise
+    // interactions (1 step each).
+    let n = 16;
+    let t = 2400u64;
+    let backend = quad(n, 16, 0.1);
+    let f_star = backend.f_star();
+    let gap0 = {
+        let (p, _) = backend.init();
+        backend.eval(&p).loss - f_star
+    };
+    let algo = make_algorithm("dpsgd", &AlgoOptions::default()).unwrap();
+    let cost = CostModel::deterministic(0.4);
+    let g = graph(n);
+    let serial = run_serial(
+        algo.as_ref(),
+        &backend,
+        &spec(n, t / n as u64, 50),
+        &g,
+        &cost,
+    );
+    let free = run_freerun(algo.as_ref(), &backend, &spec(n, t, 500), &g, &cost, 4, 8);
+    assert_eq!(free.executor, "freerun");
+    assert_eq!(free.interactions, t);
+    let gap_serial = (serial.final_eval_loss - f_star) / gap0;
+    let gap_free = (free.final_eval_loss - f_star) / gap0;
+    assert!(gap_serial < 0.1, "serial dpsgd reference off the rails: {gap_serial}");
+    assert!(
+        gap_free < 0.15,
+        "freerun dpsgd normalized gap {gap_free} vs serial {gap_serial} — \
+         the initiator-driven degradation diverged"
+    );
 }
 
 #[test]

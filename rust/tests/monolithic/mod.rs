@@ -1,0 +1,279 @@
+//! The **pre-redesign monolithic-round baselines**, preserved verbatim as
+//! the golden reference for the phased-event redesign.
+//!
+//! Before the `EventKind` API, each synchronous round of
+//! dpsgd/sgp/localsgd/allreduce was one whole-cluster event whose interact
+//! body did everything: per-node SGD steps, the mixing step, and the
+//! barrier time accounting. These structs keep those interact bodies
+//! bit-for-bit (scheduled as a single whole-cluster `Mix` event per round,
+//! which is exactly how the old executor ran them: all locks, role order
+//! `0..n`). `parallel_executor.rs` asserts that the new phased schedules
+//! (n per-node `Compute` events + per-edge/whole-cluster mixing) reproduce
+//! these references metric-for-metric, bit-for-bit, on the same seed —
+//! the golden acceptance criterion of the redesign.
+
+use swarm_sgd::coordinator::{
+    average_into_both, barrier_all, local_phase, mean_params, pair_at, step_once, Algorithm,
+    Event, EventOutcome, InteractionSchedule, NodeState, RoundModels, StepCtx,
+};
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::Graph;
+
+/// One whole-cluster event per round — the pre-redesign schedule shape
+/// shared by all four monolithic references.
+fn monolithic_schedule(n: usize, events: u64, rng: &mut Pcg64) -> InteractionSchedule {
+    let mut s = InteractionSchedule::new(n);
+    for _ in 0..events {
+        let seed = rng.next_u64();
+        s.push_mix((0..n).collect(), seed);
+        s.seal_round();
+    }
+    s
+}
+
+/// Pre-redesign D-PSGD: step all nodes, average along a random matching
+/// drawn from the event seed, barrier on one exchange.
+pub struct MonoDPsgd;
+
+impl Algorithm for MonoDPsgd {
+    fn name(&self) -> &'static str {
+        "dpsgd-monolithic"
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        monolithic_schedule(n, events, rng)
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        for (k, st) in parts.iter_mut().enumerate() {
+            step_once(ctx, ev.nodes[k], st);
+        }
+        let mut er = Pcg64::seed(ev.seed);
+        let matching = ctx.graph.random_matching(&mut er);
+        let mut bits = 0u64;
+        for &(u, v) in &matching {
+            let (a, b) = pair_at(parts, u, v);
+            average_into_both(&mut a.params, &mut b.params);
+            a.comm.copy_from_slice(&a.params);
+            b.comm.copy_from_slice(&b.params);
+            a.interactions += 1;
+            b.interactions += 1;
+            bits += 2 * 8 * bytes;
+        }
+        barrier_all(parts, ctx.cost.exchange_time(bytes));
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
+    }
+}
+
+/// Pre-redesign SGP: de-biased steps with the round-max compute charge,
+/// push-sum halve-and-push, absorb, barrier on the p2p cost.
+pub struct MonoSgp;
+
+impl Algorithm for MonoSgp {
+    fn name(&self) -> &'static str {
+        "sgp-monolithic"
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        monolithic_schedule(n, events, rng)
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        let mut er = Pcg64::seed(ev.seed);
+        let mut max_comp: f64 = 0.0;
+        for (k, st) in parts.iter_mut().enumerate() {
+            let agent = ev.nodes[k];
+            let w = st.weight as f32;
+            for (z, &x) in st.snap.iter_mut().zip(&st.params) {
+                *z = x / w;
+            }
+            st.last_loss =
+                ctx.backend.step(agent, &mut st.snap, &mut st.mom, ctx.lr, &mut st.rng);
+            st.steps += 1;
+            for (x, &z) in st.params.iter_mut().zip(&st.snap) {
+                *x = z * w;
+            }
+            let dt = ctx.cost.compute_time(&mut st.rng);
+            max_comp = max_comp.max(dt);
+        }
+        for st in parts.iter_mut() {
+            st.time += max_comp;
+            st.compute += max_comp;
+        }
+        for st in parts.iter_mut() {
+            st.inbox.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let mut inbox_w = vec![0.0f64; n];
+        let mut bits = 0u64;
+        for k in 0..n {
+            let dst = ctx.graph.sample_neighbor(ev.nodes[k], &mut er);
+            inbox_w[dst] += 0.5 * parts[k].weight;
+            let (src, dstst) = pair_at(parts, k, dst);
+            for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
+                *s += 0.5 * v;
+            }
+            bits += 8 * bytes + 64;
+        }
+        for (k, st) in parts.iter_mut().enumerate() {
+            for (x, &add) in st.params.iter_mut().zip(&st.inbox) {
+                *x = 0.5 * *x + add;
+            }
+            st.weight = 0.5 * st.weight + inbox_w[k];
+            st.comm.copy_from_slice(&st.params);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.p2p_time(bytes));
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
+    }
+
+    fn round_metrics(&self, states: &[&NodeState], pick: usize) -> RoundModels {
+        let wsum: f64 = states.iter().map(|s| s.weight).sum();
+        let dim = states.first().map_or(0, |s| s.params.len());
+        let mut acc = vec![0.0f64; dim];
+        for s in states {
+            for (a, &v) in acc.iter_mut().zip(&s.params) {
+                *a += v as f64;
+            }
+        }
+        let consensus = acc.into_iter().map(|v| (v / wsum) as f32).collect();
+        let w = states[pick].weight as f32;
+        let individual = states[pick].params.iter().map(|&v| v / w).collect();
+        RoundModels { consensus, individual }
+    }
+}
+
+/// Pre-redesign local SGD: h local steps per node, global mean, allreduce
+/// barrier. (The old whole-cluster event carried `h` per node in `ev.h`;
+/// the constant lives on the struct here, which is the same value.)
+pub struct MonoLocalSgd {
+    pub h: u64,
+}
+
+impl Algorithm for MonoLocalSgd {
+    fn name(&self) -> &'static str {
+        "localsgd-monolithic"
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        assert!(self.h >= 1);
+        monolithic_schedule(n, events, rng)
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        for (k, st) in parts.iter_mut().enumerate() {
+            local_phase(ctx, ev.nodes[k], st, self.h);
+        }
+        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+        for st in parts.iter_mut() {
+            st.params.copy_from_slice(&mu);
+            st.comm.copy_from_slice(&mu);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+        EventOutcome { bits: 2 * 8 * bytes * n as u64, fallbacks: 0 }
+    }
+
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
+    }
+}
+
+/// Pre-redesign allreduce SGD: one step per node, global mean, ring
+/// allreduce barrier.
+pub struct MonoAllReduce;
+
+impl Algorithm for MonoAllReduce {
+    fn name(&self) -> &'static str {
+        "allreduce-monolithic"
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        _graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        monolithic_schedule(n, events, rng)
+    }
+
+    fn interact(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let n = parts.len();
+        debug_assert!(ev.nodes.iter().enumerate().all(|(k, &v)| k == v));
+        let bytes = ctx.cost.wire_bytes(ctx.dim);
+        for (k, st) in parts.iter_mut().enumerate() {
+            step_once(ctx, ev.nodes[k], st);
+        }
+        let mu = mean_params(parts.iter().map(|s| s.params.as_slice()), ctx.dim, n);
+        for st in parts.iter_mut() {
+            st.params.copy_from_slice(&mu);
+            st.comm.copy_from_slice(&mu);
+            st.interactions += 1;
+        }
+        barrier_all(parts, ctx.cost.allreduce_time(n, bytes));
+        let bits = (2 * (n as u64 - 1) / n as u64).max(1) * 8 * bytes * n as u64;
+        EventOutcome { bits, fallbacks: 0 }
+    }
+
+    fn parallel_time(&self, t: u64, _n: usize) -> f64 {
+        t as f64
+    }
+}

@@ -3,18 +3,24 @@
 //! 1. **Replay determinism** (the CI-enforced contract): a run on N worker
 //!    threads is bit-identical, metric for metric, to the serial run of the
 //!    same seed — for SwarmSGD across blocking, non-blocking, and quantized
-//!    averaging; for AD-PSGD (the asynchronous baseline); and for SwarmSGD
-//!    on the softmax oracle (caller-RNG batch draws).
-//! 2. **Coverage**: all six `--algorithm` selections run on BOTH executors
-//!    and agree bit-for-bit — the acceptance criterion of the API redesign.
-//! 3. **Stress**: a larger quantized non-blocking run (n=64, 4 threads)
+//!    averaging; for AD-PSGD (the asynchronous baseline); for SwarmSGD
+//!    on the softmax oracle (caller-RNG batch draws); and for all four
+//!    phased round-based baselines at every thread count in {1, 2, 4, 8}.
+//! 2. **Coverage**: all seven `--algorithm` selections run on BOTH
+//!    executors and agree bit-for-bit — the acceptance criterion of the
+//!    API redesign.
+//! 3. **Golden**: the phased schedules (per-node `Compute` events + `Mix`
+//!    barrier per round) reproduce the *pre-redesign monolithic rounds*
+//!    bit-for-bit — the monolithic interact bodies are preserved verbatim
+//!    in `tests/monolithic/mod.rs` as the golden reference.
+//! 4. **Stress**: a larger quantized non-blocking run (n=64, 4 threads)
 //!    completes without deadlock or poisoned locks, and its decode-fallback
 //!    counter matches the serial run.
 //!
 //! Caveat on (1): serial and parallel share the per-event code, so bit
 //! equality proves *interleaving independence* (the concurrency contract),
 //! not the update rule itself — that is what the per-algorithm unit tests
-//! cover.
+//! and the monolithic golden references cover.
 
 use swarm_sgd::backend::Backend;
 use swarm_sgd::coordinator::{
@@ -25,6 +31,8 @@ use swarm_sgd::grad::{QuadraticOracle, SoftmaxOracle};
 use swarm_sgd::netmodel::CostModel;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::{Graph, Topology};
+
+mod monolithic;
 
 fn quad(n: usize, dim: usize, sigma: f64, seed: u64) -> QuadraticOracle {
     QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, seed)
@@ -156,6 +164,64 @@ fn softmax_oracle_swarm_replay_is_bit_identical() {
     for threads in [2, 4] {
         let par = run_parallel(&algo, &backend, &s, &g, &cost, threads);
         assert_replay_identical(&serial, &par);
+    }
+}
+
+#[test]
+fn round_baselines_parallel_bit_identical_at_threads_1_2_4_8() {
+    // the phased-event acceptance criterion: every round-based baseline
+    // (n per-node compute events + mix barrier per round) is bit-identical
+    // between run_serial and run_parallel at every thread count — under a
+    // jittery cost model, so per-node RNG stream alignment is exercised too
+    let n = 8;
+    let g = graph(n);
+    let backend = quad(n, 16, 0.2, 19);
+    let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
+    for name in ["dpsgd", "sgp", "localsgd", "allreduce"] {
+        let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+        let s = spec(n, 80, 0x9A5E, 20, true);
+        let serial = run_serial(algo.as_ref(), &backend, &s, &g, &cost);
+        // phased rounds still count one interaction per round
+        assert_eq!(serial.interactions, 80, "{name}");
+        assert!(serial.final_eval_loss.is_finite(), "{name}");
+        for threads in [1usize, 2, 4, 8] {
+            let par = run_parallel(algo.as_ref(), &backend, &s, &g, &cost, threads);
+            assert_eq!(par.threads, threads, "{name}");
+            assert_replay_identical(&serial, &par);
+        }
+    }
+}
+
+#[test]
+fn phased_rounds_match_pre_redesign_monolithic_golden() {
+    // the golden test: the phased schedules must reproduce the
+    // pre-redesign monolithic whole-cluster rounds bit-for-bit on a fixed
+    // seed. The monolithic interact bodies are preserved verbatim in
+    // tests/monolithic/mod.rs; a StepDecay lr schedule pins
+    // the tick-based lr semantics (lr depends on the *round*, not on the
+    // expanded event index), and the jittery cost model pins per-node
+    // stream alignment. Checked on the serial executor AND on 4 worker
+    // threads (phased parallel ≡ monolithic serial, transitively).
+    let n = 8;
+    let g = graph(n);
+    let backend = quad(n, 16, 0.2, 43);
+    let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
+    let opts = AlgoOptions { h_localsgd: 5, ..AlgoOptions::default() };
+    let golden: Vec<(&str, Box<dyn swarm_sgd::coordinator::Algorithm>)> = vec![
+        ("dpsgd", Box::new(monolithic::MonoDPsgd)),
+        ("sgp", Box::new(monolithic::MonoSgp)),
+        ("localsgd", Box::new(monolithic::MonoLocalSgd { h: 5 })),
+        ("allreduce", Box::new(monolithic::MonoAllReduce)),
+    ];
+    for (name, mono) in golden {
+        let phased = make_algorithm(name, &opts).unwrap();
+        let mut s = spec(n, 60, 0x601D, 15, true);
+        s.lr = LrSchedule::StepDecay { base: 0.05, total: 60 };
+        let reference = run_serial(mono.as_ref(), &backend, &s, &g, &cost);
+        let serial = run_serial(phased.as_ref(), &backend, &s, &g, &cost);
+        assert_replay_identical(&reference, &serial);
+        let par = run_parallel(phased.as_ref(), &backend, &s, &g, &cost, 4);
+        assert_replay_identical(&reference, &par);
     }
 }
 
