@@ -1,7 +1,10 @@
 //! Free-running executor smoke bench: *real* interactions/second and
 //! staleness quantiles vs worker-thread count, for the two gossip
-//! algorithms the paper races (SwarmSGD and AD-PSGD), on an `n ≫ threads`
-//! sharded quadratic workload.
+//! algorithms the paper races (SwarmSGD and AD-PSGD) plus SGP over the
+//! weighted push-sum slots the `MixPolicy` redesign admitted, on an
+//! `n ≫ threads` sharded quadratic workload — and one **paper-scale** row
+//! (n=256 nodes, `model_bytes=45e6` ResNet18 wire simulation, matching
+//! `examples/freerun_paper_scale.rs`).
 //!
 //! Unlike `bench_parallel` this does not wrap runs in the timing harness:
 //! the free-running executor measures its own wall-clock throughput
@@ -21,6 +24,36 @@ use swarm_sgd::topology::{Graph, Topology};
 
 const N: usize = 64;
 
+fn complete_graph(n: usize) -> Graph {
+    let mut rng = Pcg64::seed(5);
+    Graph::build(Topology::Complete, n, &mut rng)
+}
+
+fn row_json(
+    name: &str,
+    threads: usize,
+    shards: usize,
+    n: usize,
+    fr: &swarm_sgd::coordinator::FreerunStats,
+) -> String {
+    format!(
+        "    {{\"algorithm\": \"{name}\", \"threads\": {threads}, \
+         \"shards\": {shards}, \"n\": {n}, \"codec\": \"{}\", \
+         \"interactions_per_sec\": {:.1}, \
+         \"staleness_p50\": {}, \"staleness_p99\": {}, \
+         \"staleness_mean\": {:.2}, \"slot_read_retries\": {}, \
+         \"slot_publish_retries\": {}, \"slot_push_conflicts\": {}}}",
+        fr.codec,
+        fr.interactions_per_sec,
+        fr.staleness.p50(),
+        fr.staleness.p99(),
+        fr.staleness.mean(),
+        fr.slot_read_retries,
+        fr.slot_publish_retries,
+        fr.slot_push_conflicts,
+    )
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
     let (dim, t) = if smoke { (256, 4_000u64) } else { (2048, 40_000) };
@@ -28,10 +61,7 @@ fn main() {
 
     // σ=0: draw-free oracle, so the numbers measure runtime + slot traffic
     let backend = QuadraticOracle::new(dim, N, 1.0, 0.5, 2.0, 0.0, 3);
-    let graph = {
-        let mut rng = Pcg64::seed(5);
-        Graph::build(Topology::Complete, N, &mut rng)
-    };
+    let graph = complete_graph(N);
     let cost = CostModel::deterministic(0.4);
     let spec = RunSpec {
         n: N,
@@ -50,10 +80,13 @@ fn main() {
             AlgoOptions {
                 local_steps: LocalSteps::Fixed(4),
                 mode: AveragingMode::NonBlocking,
-                h_localsgd: 5,
+                ..AlgoOptions::default()
             },
         ),
         ("adpsgd", AlgoOptions::default()),
+        // the MixPolicy redesign's payoff: SGP freeruns over weighted
+        // (x, w) push-sum slots
+        ("sgp", AlgoOptions::default()),
     ] {
         let algo = make_algorithm(name, &opts).expect("known algorithm");
         for threads in [1usize, 2, 4] {
@@ -70,21 +103,51 @@ fn main() {
                 fr.slot_read_retries,
                 fr.slot_push_conflicts,
             );
-            rows.push(format!(
-                "    {{\"algorithm\": \"{name}\", \"threads\": {threads}, \
-                 \"shards\": {shards}, \"interactions_per_sec\": {:.1}, \
-                 \"staleness_p50\": {}, \"staleness_p99\": {}, \
-                 \"staleness_mean\": {:.2}, \"slot_read_retries\": {}, \
-                 \"slot_publish_retries\": {}, \"slot_push_conflicts\": {}}}",
-                fr.interactions_per_sec,
-                fr.staleness.p50(),
-                fr.staleness.p99(),
-                fr.staleness.mean(),
-                fr.slot_read_retries,
-                fr.slot_publish_retries,
-                fr.slot_push_conflicts,
-            ));
+            rows.push(row_json(name, threads, shards, N, fr));
         }
+    }
+
+    // paper-scale freerun row: n=256 nodes sharded over 4 workers, with
+    // the cost model simulating ResNet18's 45 MB wire size on CSCS-like
+    // p2p parameters (the examples/freerun_paper_scale.rs preset). The
+    // compute stays a small quadratic stand-in; the *wire accounting*
+    // and sharding pressure are what this row tracks.
+    {
+        let n_paper = 256;
+        let (dim_p, t_p) = if smoke { (64, 4_000u64) } else { (256, 40_000) };
+        let backend = QuadraticOracle::new(dim_p, n_paper, 1.0, 0.5, 2.0, 0.0, 3);
+        let graph = complete_graph(n_paper);
+        let cost = CostModel {
+            batch_time: 1e-4,
+            jitter: 0.0,
+            straggler_prob: 0.0,
+            straggle_factor: 1.0,
+            latency: 1e-4,
+            bandwidth: 10.0e9,
+            model_bytes_override: Some(45_000_000),
+        };
+        let spec = RunSpec {
+            n: n_paper,
+            events: t_p,
+            lr: LrSchedule::Constant(0.02),
+            seed: 1,
+            name: "bench-freerun-paper".into(),
+            eval_every: 0,
+            track_gamma: false,
+        };
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).expect("known algorithm");
+        let (threads, shards) = (4usize, 32usize);
+        let m = run_freerun(algo.as_ref(), &backend, &spec, &graph, &cost, threads, shards);
+        let fr = m.freerun.as_ref().expect("freerun telemetry");
+        println!(
+            "paper-scale swarm x{threads} ({shards} shards, n={n_paper}, 45 MB wire): \
+             {:>9.0} interactions/s  staleness p50={} p99={}  simulated wire={:.1} GB",
+            fr.interactions_per_sec,
+            fr.staleness.p50(),
+            fr.staleness.p99(),
+            m.total_bits as f64 / 8e9,
+        );
+        rows.push(row_json("swarm-paper-scale", threads, shards, n_paper, fr));
     }
 
     let json = format!(

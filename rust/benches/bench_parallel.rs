@@ -48,7 +48,7 @@ fn graph() -> Graph {
 }
 
 fn opts(h: u64, mode: AveragingMode) -> AlgoOptions {
-    AlgoOptions { local_steps: LocalSteps::Fixed(h), mode, h_localsgd: 5 }
+    AlgoOptions { local_steps: LocalSteps::Fixed(h), mode, h_localsgd: 5, ..Default::default() }
 }
 
 fn run_algo(name: &str, dim: usize, t: u64, threads: usize, o: &AlgoOptions) -> f64 {

@@ -92,8 +92,9 @@ USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
                 [--algorithm swarm|poisson|adpsgd|dpsgd|sgp|localsgd|allreduce]
                 [--executor serial|parallel|freerun] [--threads K] [--shards S]
+                [--wire lattice|f32]
                 train one algorithm on one backend; keys: algo, preset, n,
-                topology, interactions, h, geometric, mode, quant_bits,
+                topology, interactions, h, geometric, mode, wire, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
                 shard, data_per_agent, artifacts_dir, batch_time, jitter,
                 straggler_prob, straggle_factor, latency, bandwidth,
@@ -110,14 +111,25 @@ USAGE:
                 any thread count (the replay-determinism contract; the
                 PJRT path's fused-step heuristic is wall-clock-raced, so
                 it is excluded).
-                --executor freerun (pairwise-mixing algorithms: swarm,
-                poisson, adpsgd, dpsgd) drops the schedule: K workers own
-                S node shards (omit --shards for one per worker; n >>
-                cores supported), ring live Poisson clocks, and average
-                against non-blocking seqlock model slots. Non-replayable
-                by contract — in exchange it measures real interactions/s,
-                per-interaction staleness (version lag), seqlock
-                contention, and worker busy/wait.
+                --executor freerun (algorithms with a MixPolicy: swarm,
+                poisson, adpsgd, dpsgd, and sgp via weighted push-sum
+                slots) drops the schedule: K workers own S node shards
+                (omit --shards for one per worker; n >> cores supported),
+                ring live Poisson clocks, and merge against non-blocking
+                seqlock slot payloads per the algorithm's policy.
+                Non-replayable by contract — in exchange it measures real
+                interactions/s, per-interaction staleness (version lag),
+                seqlock contention, worker busy/wait, and the wire codec's
+                bit/fallback attribution. localsgd/allreduce mix through
+                an irreducible global mean and refuse freerun.
+                --wire lattice|f32 picks the wire codec on EVERY executor:
+                lattice sends model payloads through the Appendix-G
+                lattice quantizer (quant_bits/quant_eps; decode fallbacks
+                counted), f32 is full precision. mode=quantized is the
+                swarm/poisson spelling of nonblocking+lattice and takes
+                precedence over --wire f32 (the default) — to run full
+                precision, set mode=nonblocking. localsgd and allreduce
+                (full-precision collectives) reject lattice.
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]
@@ -135,6 +147,8 @@ EXAMPLES:
               --set preset=oracle:softmax,n=8,interactions=200
   swarm train --algorithm swarm --executor freerun --threads 4 --shards 16 \\
               --set preset=oracle:quadratic,n=64,interactions=20000
+  swarm train --algorithm sgp --executor freerun --threads 4 --wire lattice \\
+              --set preset=oracle:quadratic,n=32,interactions=5000
   swarm train --set preset=oracle:quadratic,model_bytes=45000000,latency=1e-4
   swarm figure --id table1 --quick
   swarm figure --id all --out results

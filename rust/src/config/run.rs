@@ -1,7 +1,7 @@
 //! Typed run configuration + parsing from INI files / CLI overrides.
 
 use super::ini::parse_ini;
-use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule};
+use crate::coordinator::{AveragingMode, LocalSteps, LrSchedule, WireCodec};
 use crate::netmodel::CostModel;
 use crate::topology::Topology;
 
@@ -41,6 +41,13 @@ pub struct RunConfig {
     pub geometric: bool,
     /// blocking | nonblocking | quantized
     pub mode: String,
+    /// f32 | lattice — the wire codec (`--wire`): whether model payloads
+    /// cross the simulated wire at full precision or lattice-quantized
+    /// (`quant_bits` / `quant_eps`), on every executor. `mode = quantized`
+    /// implies the lattice codec for swarm/poisson and takes precedence
+    /// over the default `wire = f32`; full precision is `mode =
+    /// nonblocking`.
+    pub wire: String,
     pub quant_bits: u32,
     pub quant_eps: f32,
     pub lr: f32,
@@ -70,10 +77,13 @@ pub struct RunConfig {
     /// serial | parallel | freerun — which executor runs the algorithm.
     /// `serial`/`parallel` drain the pre-drawn schedule (bit-replayable);
     /// `freerun` is the free-running sharded runtime (throughput-faithful,
-    /// non-replayable, pairwise-mixing algorithms only: swarm, poisson,
-    /// adpsgd, dpsgd)
+    /// non-replayable, algorithms with a `MixPolicy`: swarm, poisson,
+    /// adpsgd, dpsgd, and — via weighted slots — sgp)
     pub executor: String,
-    /// worker threads for the parallel/freerun executors (0 = one per core)
+    /// worker threads for the parallel/freerun executors. 0 is the
+    /// *internal* "auto" default (one per core); explicitly setting
+    /// `threads=0` is rejected at parse time with an actionable error,
+    /// mirroring the `shards` treatment
     pub threads: usize,
     /// node shards for the freerun executor. 0 is the *internal* "auto"
     /// default (one shard per worker); explicitly setting `shards=0` is
@@ -92,6 +102,7 @@ impl Default for RunConfig {
             h: 2.0,
             geometric: false,
             mode: "nonblocking".into(),
+            wire: "f32".into(),
             quant_bits: 8,
             quant_eps: 1e-3,
             lr: 0.05,
@@ -154,6 +165,14 @@ impl RunConfig {
             "h" | "local_steps" => self.h = value.parse().map_err(|_| bad(key, value))?,
             "geometric" => self.geometric = value.parse().map_err(|_| bad(key, value))?,
             "mode" => self.mode = value.into(),
+            "wire" => match value {
+                "f32" | "lattice" => self.wire = value.into(),
+                _ => {
+                    return Err(format!(
+                        "bad value '{value}' for key 'wire' (want f32 or lattice)"
+                    ))
+                }
+            },
             "quant_bits" => self.quant_bits = value.parse().map_err(|_| bad(key, value))?,
             "quant_eps" => self.quant_eps = value.parse().map_err(|_| bad(key, value))?,
             "lr" => self.lr = value.parse().map_err(|_| bad(key, value))?,
@@ -198,7 +217,17 @@ impl RunConfig {
                 "serial" | "parallel" | "freerun" => self.executor = value.into(),
                 _ => return Err(bad(key, value)),
             },
-            "threads" => self.threads = value.parse().map_err(|_| bad(key, value))?,
+            "threads" => {
+                let t: usize = value.parse().map_err(|_| bad(key, value))?;
+                if t == 0 {
+                    return Err(
+                        "threads must be >= 1; omit the key (or the --threads flag) \
+                         to default to one worker per core"
+                            .to_string(),
+                    );
+                }
+                self.threads = t;
+            }
             "shards" => {
                 let s: usize = value.parse().map_err(|_| bad(key, value))?;
                 if s == 0 {
@@ -248,6 +277,16 @@ impl RunConfig {
                 eps: self.quant_eps,
             },
             m => return Err(format!("unknown averaging mode '{m}'")),
+        })
+    }
+
+    /// The wire codec (`--wire`): lattice quantization draws its `bits` /
+    /// `eps` from the `quant_bits` / `quant_eps` keys.
+    pub fn wire_codec(&self) -> Result<WireCodec, String> {
+        Ok(match self.wire.as_str() {
+            "f32" => WireCodec::F32,
+            "lattice" => WireCodec::Lattice { bits: self.quant_bits, eps: self.quant_eps },
+            w => return Err(format!("unknown wire codec '{w}' (want f32 or lattice)")),
         })
     }
 
@@ -372,8 +411,42 @@ mod tests {
         assert_eq!(c.effective_threads(), 4);
         assert!(c.set("executor", "gpu").is_err());
         assert!(c.set("threads", "many").is_err());
-        c.set("threads", "0").unwrap();
-        assert!(c.effective_threads() >= 1);
+        // the unset default (0) still means auto — one worker per core
+        assert!(RunConfig::default().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn explicit_zero_threads_is_an_actionable_error() {
+        // mirrors the shards=0 treatment: 0 is only the internal "auto"
+        // default; writing it explicitly (CLI --threads 0 or INI
+        // threads = 0) is rejected, and the prior value is left untouched
+        let mut c = RunConfig::default();
+        c.set("threads", "4").unwrap();
+        let err = c.set("threads", "0").unwrap_err();
+        assert!(err.contains("threads must be >= 1"), "unhelpful error: {err}");
+        assert_eq!(c.threads, 4);
+        let err = RunConfig::from_ini("[run]\nthreads = 0\n").unwrap_err();
+        assert!(err.contains("threads must be >= 1"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn wire_codec_key_parses_and_validates() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.wire, "f32");
+        assert_eq!(c.wire_codec().unwrap(), WireCodec::F32);
+        c.set("wire", "lattice").unwrap();
+        c.set("quant_bits", "6").unwrap();
+        c.set("quant_eps", "0.01").unwrap();
+        match c.wire_codec().unwrap() {
+            WireCodec::Lattice { bits, eps } => {
+                assert_eq!(bits, 6);
+                assert!((eps - 0.01).abs() < 1e-9);
+            }
+            w => panic!("wrong codec {w:?}"),
+        }
+        let err = c.set("wire", "fp16").unwrap_err();
+        assert!(err.contains("f32 or lattice"), "unhelpful error: {err}");
+        assert_eq!(c.wire, "lattice", "bad value must not clobber the setting");
     }
 
     #[test]

@@ -294,28 +294,6 @@ pub struct EventOutcome {
     pub fallbacks: u64,
 }
 
-/// How the free-running executor ([`super::run_freerun`]) drives one
-/// initiator-side interaction for a gossip algorithm: how many local SGD
-/// steps the initiator runs, and which averaging rule it applies against
-/// the partner's published (possibly stale) slot snapshot.
-///
-/// An algorithm advertises one iff its mixing decomposes into pairwise
-/// events: the gossip algorithms (swarm, poisson, adpsgd), and — since the
-/// phased-event redesign — D-PSGD, whose per-round matching average is
-/// scheduled as per-edge events and degrades gracefully to initiator-driven
-/// pairwise averaging. Algorithms whose mixing is irreducibly global (SGP's
-/// push-sum, local SGD's and allreduce's global mean) return `None` from
-/// [`Algorithm::gossip_profile`].
-#[derive(Clone, Copy, Debug)]
-pub struct GossipProfile {
-    /// local SGD steps per interaction (fixed H or geometric with mean H)
-    pub local_steps: super::LocalSteps,
-    /// averaging rule against the partner snapshot. `Blocking` means
-    /// live-model averaging (the AD-PSGD rule) — in the free-running
-    /// executor the snapshot *read* still never blocks anyone.
-    pub mode: super::AveragingMode,
-}
-
 /// The models an evaluation barrier measures.
 pub struct RoundModels {
     /// consensus model evaluated as μ_t (mean by default; SGP: Σx/Σw)
@@ -372,11 +350,14 @@ pub trait Algorithm: Sync {
         }
     }
 
-    /// Free-running gossip profile: `Some` iff the algorithm's mixing
-    /// decomposes into pairwise events, so it can run initiator-driven on
-    /// [`super::run_freerun`] (swarm, poisson, adpsgd, dpsgd). Default
-    /// `None` (irreducibly global mixing).
-    fn gossip_profile(&self) -> Option<GossipProfile> {
+    /// Free-running mix policy: `Some` iff the algorithm has free-running
+    /// semantics on [`super::run_freerun`] — its mixing decomposes into
+    /// initiator-driven interactions against published slot payloads. The
+    /// pairwise gossip algorithms (swarm, poisson, adpsgd, dpsgd) return a
+    /// plain-model [`super::PairwisePolicy`]; SGP returns the weighted-slot
+    /// [`super::PushSumPolicy`] (push-sum `(x, w)` pairs). Default `None`
+    /// (irreducibly global mixing: localsgd's and allreduce's global mean).
+    fn mix_policy(&self) -> Option<Box<dyn super::MixPolicy>> {
         None
     }
 }
@@ -477,6 +458,11 @@ pub struct AlgoOptions {
     pub mode: super::AveragingMode,
     /// Local-SGD communication period
     pub h_localsgd: u64,
+    /// wire codec (`--wire lattice|f32`) — how model payloads cross the
+    /// simulated wire, on every executor. `mode = quantized` implies the
+    /// lattice codec for swarm/poisson; for the other pairwise-mixing
+    /// algorithms this is the only quantization switch.
+    pub wire: super::WireCodec,
 }
 
 impl Default for AlgoOptions {
@@ -485,6 +471,7 @@ impl Default for AlgoOptions {
             local_steps: super::LocalSteps::Fixed(2),
             mode: super::AveragingMode::NonBlocking,
             h_localsgd: 5,
+            wire: super::WireCodec::F32,
         }
     }
 }
@@ -493,17 +480,56 @@ impl Default for AlgoOptions {
 pub const ALGORITHM_NAMES: &[&str] =
     &["swarm", "poisson", "adpsgd", "dpsgd", "sgp", "localsgd", "allreduce"];
 
+/// SwarmSGD's effective averaging mode once the wire-codec axis is folded
+/// in: `--wire lattice` turns the non-blocking merge into the quantized
+/// variant (which *is* non-blocking + lattice wire), and is rejected for
+/// the blocking rendezvous, whose live-model average has no snapshot to
+/// quantize against. Precedence: `mode=quantized` keeps the lattice codec
+/// even under the default `wire=f32` (the two spell the same thing, and
+/// an explicit `--wire f32` is indistinguishable from the default) — full
+/// precision is selected with `mode=nonblocking`, as documented in the
+/// CLI usage.
+fn swarm_mode(opts: &AlgoOptions) -> Result<super::AveragingMode, String> {
+    use super::{AveragingMode, WireCodec};
+    match (opts.mode, opts.wire) {
+        (m, WireCodec::F32) => Ok(m),
+        (AveragingMode::Blocking, WireCodec::Lattice { .. }) => Err(
+            "--wire lattice pairs with the non-blocking merge (mode=blocking \
+             averages live models at a rendezvous, with no snapshot to decode \
+             against): use mode=nonblocking, or drop --wire lattice"
+                .to_string(),
+        ),
+        (_, WireCodec::Lattice { bits, eps }) => Ok(AveragingMode::Quantized { bits, eps }),
+    }
+}
+
+/// Actionable rejection for `--wire lattice` on algorithms whose mixing is
+/// a full-precision collective rather than a pairwise exchange.
+fn reject_lattice(name: &str, opts: &AlgoOptions) -> Result<(), String> {
+    if let super::WireCodec::Lattice { .. } = opts.wire {
+        return Err(format!(
+            "{name} mixes through a full-precision collective (global mean), \
+             so the lattice wire codec does not apply: drop --wire lattice, \
+             or pick a pairwise-mixing algorithm (swarm|poisson|adpsgd|dpsgd|sgp)"
+        ));
+    }
+    Ok(())
+}
+
 /// Build an algorithm by its `--algorithm` selector name.
 pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorithm>, String> {
     use super::baselines::{AdPsgd, AllReduce, DPsgd, LocalSgd, Sgp};
     use super::{PoissonSwarm, SwarmSgd};
     Ok(match name {
-        "swarm" => Box::new(SwarmSgd { local_steps: opts.local_steps, mode: opts.mode }),
-        "poisson" => Box::new(PoissonSwarm::new(opts.local_steps, opts.mode)),
-        "adpsgd" => Box::new(AdPsgd),
-        "dpsgd" => Box::new(DPsgd),
-        "sgp" => Box::new(Sgp),
+        "swarm" => {
+            Box::new(SwarmSgd { local_steps: opts.local_steps, mode: swarm_mode(opts)? })
+        }
+        "poisson" => Box::new(PoissonSwarm::new(opts.local_steps, swarm_mode(opts)?)),
+        "adpsgd" => Box::new(AdPsgd { wire: opts.wire }),
+        "dpsgd" => Box::new(DPsgd { wire: opts.wire }),
+        "sgp" => Box::new(Sgp { wire: opts.wire }),
         "localsgd" => {
+            reject_lattice("localsgd", opts)?;
             if opts.h_localsgd == 0 {
                 return Err(
                     "localsgd needs a communication period h >= 1 (got h=0): \
@@ -514,7 +540,10 @@ pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorith
             }
             Box::new(LocalSgd { h: opts.h_localsgd })
         }
-        "allreduce" => Box::new(AllReduce),
+        "allreduce" => {
+            reject_lattice("allreduce", opts)?;
+            Box::new(AllReduce)
+        }
         other => {
             return Err(format!(
                 "unknown algorithm '{other}' (known: {})",
@@ -644,6 +673,34 @@ mod tests {
             assert_eq!(a.name(), *name);
         }
         assert!(make_algorithm("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn factory_folds_wire_codec_into_the_algorithms() {
+        use crate::coordinator::{AveragingMode, WireCodec};
+        let lattice = AlgoOptions {
+            wire: WireCodec::Lattice { bits: 6, eps: 1e-2 },
+            ..AlgoOptions::default()
+        };
+        // pairwise-mixing algorithms accept the lattice wire
+        for name in ["swarm", "poisson", "adpsgd", "dpsgd", "sgp"] {
+            assert!(make_algorithm(name, &lattice).is_ok(), "{name}");
+        }
+        // full-precision-collective baselines reject it with an actionable
+        // message
+        for name in ["localsgd", "allreduce"] {
+            let err = make_algorithm(name, &lattice).unwrap_err();
+            assert!(err.contains("drop --wire lattice"), "{name}: unhelpful error: {err}");
+        }
+        // blocking rendezvous averaging has no snapshot to quantize against
+        let blocking_lattice =
+            AlgoOptions { mode: AveragingMode::Blocking, ..lattice };
+        let err = make_algorithm("swarm", &blocking_lattice).unwrap_err();
+        assert!(err.contains("mode=nonblocking"), "unhelpful error: {err}");
+        // f32 wire (the default) never restricts anything
+        for name in ALGORITHM_NAMES {
+            assert!(make_algorithm(name, &AlgoOptions::default()).is_ok(), "{name}");
+        }
     }
 
     #[test]

@@ -10,16 +10,27 @@
 //! SwarmSGD — the paper's async-baseline comparison on real threads.
 
 use crate::coordinator::algorithm::{
-    pair, step_once, Algorithm, Event, EventOutcome, GossipProfile, InteractionSchedule,
-    NodeState, StepCtx,
+    pair, step_once, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
 };
 use crate::coordinator::cluster::average_into_both;
-use crate::coordinator::{AveragingMode, LocalSteps};
+use crate::coordinator::{
+    codec_exchange_average, LocalSteps, MixPolicy, PairMerge, PairwisePolicy, WireCodec,
+};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
-#[derive(Clone, Copy, Debug, Default)]
-pub struct AdPsgd;
+#[derive(Clone, Copy, Debug)]
+pub struct AdPsgd {
+    /// wire codec for the pairwise exchange (`--wire lattice|f32`);
+    /// `F32` reproduces the paper baseline exactly
+    pub wire: WireCodec,
+}
+
+impl Default for AdPsgd {
+    fn default() -> Self {
+        Self { wire: WireCodec::F32 }
+    }
+}
 
 impl Algorithm for AdPsgd {
     fn name(&self) -> &'static str {
@@ -57,16 +68,26 @@ impl Algorithm for AdPsgd {
         step_once(ctx, ev.nodes[1], nj);
         // averaging every step; the averaging blocks both endpoints
         // (paper Appx B): every iteration pays compute + exchange
-        average_into_both(&mut ni.params, &mut nj.params);
+        let (bits, fallbacks, exch) = match self.wire {
+            WireCodec::F32 => {
+                average_into_both(&mut ni.params, &mut nj.params);
+                (2 * 8 * bytes, 0, ctx.cost.exchange_time(bytes))
+            }
+            codec => {
+                let mut er = Pcg64::seed(ev.seed);
+                let (raw, fb) = codec_exchange_average(ni, nj, codec, &mut er);
+                let wire = ctx.cost.scale_bits(raw, ctx.dim);
+                (wire, fb, ctx.cost.exchange_time(wire.div_ceil(8)))
+            }
+        };
         ni.comm.copy_from_slice(&ni.params);
         nj.comm.copy_from_slice(&nj.params);
-        let exch = ctx.cost.exchange_time(bytes);
         for st in [ni, nj] {
             st.time += exch;
             st.comm_time += exch;
             st.interactions += 1;
         }
-        EventOutcome { bits: 2 * 8 * bytes, fallbacks: 0 }
+        EventOutcome { bits, fallbacks }
     }
 
     /// AD-PSGD counts its t axis in interactions, plotted per round like
@@ -75,14 +96,15 @@ impl Algorithm for AdPsgd {
         t as f64
     }
 
-    /// Free-running profile: one step per interaction, live-model averaging
-    /// against the partner's published snapshot. The snapshot read never
-    /// blocks the partner — the `Blocking` tag names the averaging rule.
-    fn gossip_profile(&self) -> Option<GossipProfile> {
-        Some(GossipProfile {
-            local_steps: LocalSteps::Fixed(1),
-            mode: AveragingMode::Blocking,
-        })
+    /// Free-running policy: one step per interaction, live-model averaging
+    /// against the partner's published snapshot (the snapshot *read* never
+    /// blocks the partner), over the algorithm's wire codec.
+    fn mix_policy(&self) -> Option<Box<dyn MixPolicy>> {
+        Some(Box::new(PairwisePolicy {
+            steps: LocalSteps::Fixed(1),
+            merge: PairMerge::Live,
+            wire: self.wire,
+        }))
     }
 }
 
@@ -119,10 +141,40 @@ mod tests {
         let mut rng = Pcg64::seed(4);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let cost = CostModel::deterministic(0.1);
-        let m = run_serial(&AdPsgd, &backend, &spec(n, 800, 100), &graph, &cost);
+        let m = run_serial(&AdPsgd::default(), &backend, &spec(n, 800, 100), &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
         assert_eq!(m.local_steps, 2 * 800); // one step per endpoint
+    }
+
+    #[test]
+    fn adpsgd_lattice_wire_replays_bit_identically_and_saves_bits() {
+        // the per-edge lattice exchange is driven entirely by the event
+        // seed, so serial and parallel replay to the bit — and it moves
+        // fewer bits than the f32 wire (live models stay within eps)
+        use crate::coordinator::run_parallel;
+        let n = 8;
+        let backend = QuadraticOracle::new(256, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let mut rng = Pcg64::seed(4);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        let cost = CostModel::deterministic(0.1);
+        let s = spec(n, 300, 100);
+        let lattice = AdPsgd { wire: WireCodec::Lattice { bits: 8, eps: 1e-2 } };
+        let serial = run_serial(&lattice, &backend, &s, &graph, &cost);
+        let par = run_parallel(&lattice, &backend, &s, &graph, &cost, 4);
+        assert_eq!(serial.final_eval_loss.to_bits(), par.final_eval_loss.to_bits());
+        assert_eq!(serial.total_bits, par.total_bits);
+        assert_eq!(serial.quant_fallbacks, par.quant_fallbacks);
+        assert_eq!(serial.sim_time.to_bits(), par.sim_time.to_bits());
+        assert!(serial.final_eval_loss.is_finite());
+        let full = run_serial(&AdPsgd::default(), &backend, &s, &graph, &cost);
+        assert!(
+            (serial.total_bits as f64) < 0.5 * full.total_bits as f64,
+            "lattice {} bits vs f32 {} bits (fallbacks {})",
+            serial.total_bits,
+            full.total_bits,
+            serial.quant_fallbacks
+        );
     }
 
     #[test]
@@ -140,7 +192,7 @@ mod tests {
             bandwidth: 1e3, // 1 KB/s: 64*4 B takes .256 s
             ..CostModel::default()
         };
-        let m = run_serial(&AdPsgd, &backend, &spec(n, 100, 0), &graph, &cost);
+        let m = run_serial(&AdPsgd::default(), &backend, &spec(n, 100, 0), &graph, &cost);
         // ~100 interactions × 0.256 s spread over 4 nodes ≥ ~6 s at the max
         assert!(m.sim_time > 1.0, "sim_time={}", m.sim_time);
     }

@@ -18,22 +18,33 @@
 //!    one exchange latency).
 //!
 //! The per-edge decomposition is also what makes D-PSGD freerun-eligible:
-//! its mixing is pairwise, so it advertises a [`GossipProfile`] (one step
-//! per interaction, live-model averaging) and runs on
-//! [`run_freerun`](crate::coordinator::run_freerun) as the asynchronous
-//! matching-free degradation of the same update rule.
+//! its mixing is pairwise, so it advertises a live-merge
+//! [`PairwisePolicy`] (one step per interaction, live-model averaging) and
+//! runs on [`run_freerun`](crate::coordinator::run_freerun) as the
+//! asynchronous matching-free degradation of the same update rule.
 
 use crate::coordinator::algorithm::{
-    barrier_all, pair, step_once, Algorithm, Event, EventKind, EventOutcome, GossipProfile,
+    barrier_all, pair, step_once, Algorithm, Event, EventKind, EventOutcome,
     InteractionSchedule, NodeState, StepCtx,
 };
 use crate::coordinator::cluster::average_into_both;
-use crate::coordinator::{AveragingMode, LocalSteps};
+use crate::coordinator::{
+    codec_exchange_average, LocalSteps, MixPolicy, PairMerge, PairwisePolicy, WireCodec,
+};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
-#[derive(Clone, Copy, Debug, Default)]
-pub struct DPsgd;
+#[derive(Clone, Copy, Debug)]
+pub struct DPsgd {
+    /// wire codec for the per-edge matching exchange (`--wire lattice|f32`)
+    pub wire: WireCodec,
+}
+
+impl Default for DPsgd {
+    fn default() -> Self {
+        Self { wire: WireCodec::F32 }
+    }
+}
 
 impl Algorithm for DPsgd {
     fn name(&self) -> &'static str {
@@ -85,12 +96,27 @@ impl Algorithm for DPsgd {
             // charge is settled at the round barrier
             EventKind::Gossip => {
                 let (a, b) = pair(parts);
-                average_into_both(&mut a.params, &mut b.params);
+                let (bits, fallbacks) = match self.wire {
+                    WireCodec::F32 => {
+                        average_into_both(&mut a.params, &mut b.params);
+                        (2 * 8 * bytes, 0)
+                    }
+                    codec => {
+                        // both directions of the edge cross the codec; the
+                        // decode seeds derive from the round seed plus the
+                        // edge's endpoints so every edge is distinct
+                        let mut er = Pcg64::seed(
+                            ev.seed ^ ((ev.nodes[0] as u64) << 32) ^ (ev.nodes[1] as u64),
+                        );
+                        let (raw, fb) = codec_exchange_average(a, b, codec, &mut er);
+                        (ctx.cost.scale_bits(raw, ctx.dim), fb)
+                    }
+                };
                 a.comm.copy_from_slice(&a.params);
                 b.comm.copy_from_slice(&b.params);
                 a.interactions += 1;
                 b.interactions += 1;
-                EventOutcome { bits: 2 * 8 * bytes, fallbacks: 0 }
+                EventOutcome { bits, fallbacks }
             }
             // round barrier: the round is synchronous — everyone advances
             // to the slowest node, then pays one exchange latency together
@@ -110,11 +136,12 @@ impl Algorithm for DPsgd {
     /// interaction, live-model averaging against the partner's published
     /// snapshot (the asynchronous degradation of the matching average —
     /// the snapshot *read* still never blocks the partner).
-    fn gossip_profile(&self) -> Option<GossipProfile> {
-        Some(GossipProfile {
-            local_steps: LocalSteps::Fixed(1),
-            mode: AveragingMode::Blocking,
-        })
+    fn mix_policy(&self) -> Option<Box<dyn MixPolicy>> {
+        Some(Box::new(PairwisePolicy {
+            steps: LocalSteps::Fixed(1),
+            merge: PairMerge::Live,
+            wire: self.wire,
+        }))
     }
 }
 
@@ -148,7 +175,7 @@ mod tests {
             eval_every: 50,
             track_gamma: true,
         };
-        let m = run_serial(&DPsgd, &backend, &spec, &graph, &cost);
+        let m = run_serial(&DPsgd::default(), &backend, &spec, &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
         // phased rounds still report one interaction per round
@@ -161,6 +188,45 @@ mod tests {
     }
 
     #[test]
+    fn dpsgd_lattice_wire_replays_bit_identically_and_saves_bits() {
+        // per-edge decode seeds derive from the round seed + the edge's
+        // endpoints, so the lattice path replays bit-for-bit at any thread
+        // count; matching averages keep neighbors within eps, so it also
+        // beats the f32 wire on bits
+        use crate::coordinator::{run_parallel, WireCodec};
+        let n = 8;
+        let backend = QuadraticOracle::new(256, n, 1.0, 0.5, 2.0, 0.05, 3);
+        let mut rng = Pcg64::seed(2);
+        let graph = Graph::build(Topology::Complete, n, &mut rng);
+        let cost = CostModel::deterministic(0.1);
+        let spec = RunSpec {
+            n,
+            events: 80,
+            lr: LrSchedule::Constant(0.05),
+            seed: 2,
+            name: "dpsgd-lattice".into(),
+            eval_every: 20,
+            track_gamma: false,
+        };
+        let lattice = DPsgd { wire: WireCodec::Lattice { bits: 8, eps: 1e-2 } };
+        let serial = run_serial(&lattice, &backend, &spec, &graph, &cost);
+        let par = run_parallel(&lattice, &backend, &spec, &graph, &cost, 4);
+        assert_eq!(serial.final_eval_loss.to_bits(), par.final_eval_loss.to_bits());
+        assert_eq!(serial.total_bits, par.total_bits);
+        assert_eq!(serial.quant_fallbacks, par.quant_fallbacks);
+        assert_eq!(serial.sim_time.to_bits(), par.sim_time.to_bits());
+        assert!(serial.final_eval_loss.is_finite());
+        let full = run_serial(&DPsgd::default(), &backend, &spec, &graph, &cost);
+        assert!(
+            (serial.total_bits as f64) < 0.5 * full.total_bits as f64,
+            "lattice {} bits vs f32 {} bits (fallbacks {})",
+            serial.total_bits,
+            full.total_bits,
+            serial.quant_fallbacks
+        );
+    }
+
+    #[test]
     fn phased_schedule_shape_per_round() {
         // each round: n computes + one gossip event per matching edge + one
         // whole-cluster barrier, all on the round's tick
@@ -168,7 +234,7 @@ mod tests {
         let mut rng = Pcg64::seed(4);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let mut srng = Pcg64::seed(9);
-        let s = DPsgd.schedule(n, 5, &graph, &mut srng);
+        let s = DPsgd::default().schedule(n, 5, &graph, &mut srng);
         assert_eq!(s.ticks, 5);
         let mut cursor = 0usize;
         for round in 0..5u64 {

@@ -19,7 +19,13 @@
 //! across all workers, with only the round-closing mix event acting as the
 //! barrier their semantics requires — and the metrics stay bit-identical
 //! to the monolithic whole-cluster rounds they replaced. D-PSGD's
-//! per-edge mixing additionally makes it freerun-eligible.
+//! per-edge mixing makes it freerun-eligible (a live-merge
+//! [`crate::coordinator::PairwisePolicy`]), and SGP freeruns through the
+//! weighted-slot [`crate::coordinator::PushSumPolicy`] — push-sum `(x, w)`
+//! pairs in the seqlock slots. The pairwise exchanges of adpsgd/dpsgd/sgp
+//! honor the [`crate::coordinator::WireCodec`] axis (`--wire lattice|f32`);
+//! localsgd/allreduce mix through full-precision collectives and reject
+//! the lattice codec with an actionable error.
 
 mod adpsgd;
 mod allreduce;

@@ -24,11 +24,21 @@ use crate::coordinator::algorithm::{
     barrier_all, pair_at, Algorithm, Event, EventKind, EventOutcome, InteractionSchedule,
     NodeState, RoundModels, StepCtx,
 };
+use crate::coordinator::{LocalSteps, MixPolicy, PushSumPolicy, WireCodec};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
-#[derive(Clone, Copy, Debug, Default)]
-pub struct Sgp;
+#[derive(Clone, Copy, Debug)]
+pub struct Sgp {
+    /// wire codec the pushed halves cross (`--wire lattice|f32`)
+    pub wire: WireCodec,
+}
+
+impl Default for Sgp {
+    fn default() -> Self {
+        Self { wire: WireCodec::F32 }
+    }
+}
 
 impl Algorithm for Sgp {
     fn name(&self) -> &'static str {
@@ -103,14 +113,38 @@ impl Algorithm for Sgp {
                 }
                 let mut inbox_w = vec![0.0f64; n];
                 let mut bits = 0u64;
+                let mut fallbacks = 0u64;
+                // codec seeds come from a sibling stream so the F32 path's
+                // push-target draws stay bit-identical to the golden rounds
+                let mut cr = Pcg64::seed(ev.seed ^ 0x5EED_C0DE_C0DE_0001);
                 for k in 0..n {
                     let dst = ctx.graph.sample_neighbor(ev.nodes[k], &mut er);
                     inbox_w[dst] += 0.5 * parts[k].weight;
                     let (src, dstst) = pair_at(parts, k, dst);
-                    for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
-                        *s += 0.5 * v;
+                    match self.wire {
+                        WireCodec::F32 => {
+                            for (s, &v) in dstst.inbox.iter_mut().zip(&src.params) {
+                                *s += 0.5 * v;
+                            }
+                            bits += 8 * bytes + 64; // x halves + weight scalar
+                        }
+                        codec => {
+                            // the pushed x crosses the codec, decoded
+                            // against the receiver's own x (snap is free
+                            // scratch after the compute phase)
+                            dstst.snap.copy_from_slice(&src.params);
+                            let (b, fb) = codec.decode_in_place(
+                                &mut dstst.snap,
+                                &dstst.params,
+                                cr.next_u32(),
+                            );
+                            for (s, &v) in dstst.inbox.iter_mut().zip(&dstst.snap) {
+                                *s += 0.5 * v;
+                            }
+                            bits += ctx.cost.scale_bits(b, ctx.dim) + 64;
+                            fallbacks += fb as u64;
+                        }
                     }
-                    bits += 8 * bytes + 64; // x halves + weight scalar
                 }
                 // absorb: x ← x/2 + inbox, w ← w/2 + inbox_w
                 for (k, st) in parts.iter_mut().enumerate() {
@@ -122,7 +156,7 @@ impl Algorithm for Sgp {
                     st.interactions += 1;
                 }
                 barrier_all(parts, ctx.cost.p2p_time(bytes));
-                EventOutcome { bits, fallbacks: 0 }
+                EventOutcome { bits, fallbacks }
             }
             EventKind::Gossip => {
                 unreachable!("sgp schedules phased compute+mix rounds only")
@@ -133,6 +167,18 @@ impl Algorithm for Sgp {
     /// Synchronous rounds: one tick is one round of parallel time.
     fn parallel_time(&self, t: u64, _n: usize) -> f64 {
         t as f64
+    }
+
+    /// Push-sum *does* freerun — through weighted slots: every node
+    /// publishes its `(x, w)` pair, the initiator runs one de-biased SGD
+    /// step on `z = x/w` and takes half of the partner's published offer
+    /// on both lanes (cross-writing the remaining half back). Because `x`
+    /// and `w` always undergo the same linear ops, `Σx/Σw` stays a
+    /// consistent consensus estimate under staleness and dropped
+    /// cross-writes — the policy that moves SGP off the freerun refusal
+    /// list.
+    fn mix_policy(&self) -> Option<Box<dyn MixPolicy>> {
+        Some(Box::new(PushSumPolicy { steps: LocalSteps::Fixed(1), wire: self.wire }))
     }
 
     /// Curves evaluate push-sum's de-biased quantities: the weighted
@@ -190,13 +236,35 @@ mod tests {
         let (backend, graph, cost) = setup(n);
         let (p0, _) = backend.init();
         let init_loss = backend.eval(&p0).loss;
-        let m = run_serial(&Sgp, &backend, &spec(n, 50, 0.0), &graph, &cost);
+        let m = run_serial(&Sgp::default(), &backend, &spec(n, 50, 0.0), &graph, &cost);
         // with no gradient steps, Σx/Σw stays the common x₀ forever
         let final_loss = m.final_eval_loss;
         assert!(
             (final_loss - init_loss).abs() < 1e-6 * init_loss.abs().max(1.0),
             "consensus drifted: {init_loss} -> {final_loss}"
         );
+    }
+
+    #[test]
+    fn sgp_lattice_wire_replays_bit_identically() {
+        // push decode seeds come from a per-round sibling stream, so the
+        // lattice push phase replays bit-for-bit at any thread count. (No
+        // bit-savings assertion: pushed halves are decoded against the
+        // receiver's x, whose push-sum weight may differ, so fallbacks are
+        // workload-dependent — they are counted, and must replay exactly.)
+        use crate::coordinator::run_parallel;
+        let n = 8;
+        let (backend, graph, cost) = setup(n);
+        let lattice = Sgp { wire: crate::coordinator::WireCodec::Lattice { bits: 8, eps: 1e-2 } };
+        let s = spec(n, 120, 0.05);
+        let serial = run_serial(&lattice, &backend, &s, &graph, &cost);
+        let par = run_parallel(&lattice, &backend, &s, &graph, &cost, 4);
+        assert_eq!(serial.final_eval_loss.to_bits(), par.final_eval_loss.to_bits());
+        assert_eq!(serial.total_bits, par.total_bits);
+        assert_eq!(serial.quant_fallbacks, par.quant_fallbacks);
+        assert_eq!(serial.sim_time.to_bits(), par.sim_time.to_bits());
+        assert!(serial.final_eval_loss.is_finite());
+        assert!(serial.total_bits > 0);
     }
 
     #[test]
@@ -208,7 +276,7 @@ mod tests {
             let (p, _) = backend.init();
             backend.full_loss(&p) - f_star
         };
-        let m = run_serial(&Sgp, &backend, &spec(n, 300, 0.05), &graph, &cost);
+        let m = run_serial(&Sgp::default(), &backend, &spec(n, 300, 0.05), &graph, &cost);
         let gap = (m.final_eval_loss - f_star) / gap0;
         assert!(gap < 0.15, "normalized gap {gap}");
         // phased rounds: interactions still count rounds, steps count nodes

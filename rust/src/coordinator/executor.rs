@@ -142,7 +142,10 @@ pub fn run_parallel(
     cost: &CostModel,
     threads: usize,
 ) -> RunMetrics {
-    run_schedule(algo, backend, spec, graph, cost, threads.max(1), "parallel")
+    // no silent clamp: the config layer rejects an explicit threads=0 with
+    // an actionable error, so a zero reaching this far is a caller bug
+    assert!(threads >= 1, "run_parallel needs at least one worker thread");
+    run_schedule(algo, backend, spec, graph, cost, threads, "parallel")
 }
 
 fn run_schedule(

@@ -19,16 +19,22 @@
 //!   replayed. Each worker executes an event quota proportional to the
 //!   nodes it owns, so per-node initiation rates stay uniform even when
 //!   the shard deal is uneven or workers run at different speeds.
-//! * **Non-blocking model slots** — every node publishes its communication
-//!   copy X' into a seqlock-style versioned double buffer (`ModelSlot`).
-//!   An initiator seqlock-reads the partner's slot (a possibly-stale
-//!   snapshot; the partner is **never** delayed), applies the algorithm's
-//!   averaging rule on its own side, republishes its own slot, and
-//!   best-effort cross-writes the pair average into the partner's slot
-//!   (Algorithm 2's symmetric X' update) — if that CAS loses a race it is
-//!   *dropped and counted*, not waited on. In quantized mode the snapshot
-//!   crosses the simulated wire through the lattice codec
-//!   ([`super::quantized_transfer`]), decode-fallbacks included.
+//! * **Non-blocking model slots** — every node publishes its
+//!   [`SlotPayload`] into a seqlock-style versioned double buffer
+//!   (`ModelSlot`, generic over the payload: [`PlainModel`] snapshots
+//!   for the pairwise policies, push-sum `(x, w)` [`PushSumWeighted`]
+//!   pairs for SGP). An initiator seqlock-reads the partner's slot (a
+//!   possibly-stale snapshot; the partner is **never** delayed), hands it
+//!   to its algorithm's [`MixPolicy`] — which decodes the model lanes
+//!   through its [`WireCodec`](super::WireCodec) (`--wire lattice|f32`),
+//!   applies its merge rule, and produces two payloads: one republished
+//!   into the initiator's own slot, one best-effort cross-written into
+//!   the partner's slot (the pair average under the symmetric policies —
+//!   Algorithm 2's X' update — or the remaining half-offer under
+//!   push-sum's take-half flow). If the cross-write CAS loses a race it
+//!   is *dropped and counted*, not waited on. Policies whose cross-writes
+//!   mutate the published value (push-sum) re-absorb their own slot at
+//!   ring time, so the slot is the canonical pair between rings.
 //!
 //! # Contract split
 //!
@@ -39,21 +45,20 @@
 //! invariants), never bit-equality. What freerun gives back is telemetry
 //! the replay executors cannot produce ([`super::telemetry`]): real
 //! interactions/sec, per-interaction staleness (version-lag) histograms,
-//! seqlock retry counts, and per-worker busy/wait splits, surfaced in
-//! [`RunMetrics::freerun`].
+//! seqlock retry counts, per-worker busy/wait splits, and the codec's
+//! wire-bit/fallback attribution, surfaced in [`RunMetrics::freerun`].
 //!
-//! Only algorithms whose mixing decomposes into pairwise events run here —
-//! those advertise an initiator-side [`GossipProfile`] via
-//! [`Algorithm::gossip_profile`] (`swarm`, `poisson`, `adpsgd`, and —
-//! since the phased-event redesign scheduled its matching average as
-//! per-edge events — `dpsgd`); baselines with irreducibly global mixing
-//! (sgp's push-sum, localsgd's and allreduce's global mean) refuse.
+//! Only algorithms with free-running semantics run here — those return a
+//! [`MixPolicy`] from [`Algorithm::mix_policy`]: the pairwise-mixing
+//! algorithms (`swarm`, `poisson`, `adpsgd`, `dpsgd`) over plain-model
+//! slots, and — since the `MixPolicy` redesign — `sgp` over weighted
+//! `(x, w)` slots. Baselines whose mixing is an irreducible global mean
+//! (`localsgd`, `allreduce`) refuse.
 
-use super::algorithm::{local_phase, mean_params, Algorithm, GossipProfile, NodeState, StepCtx};
-use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
+use super::algorithm::{Algorithm, NodeState, StepCtx};
 use super::executor::{milestones, RunSpec};
 use super::metrics::{CurvePoint, RunMetrics};
-use super::swarm::AveragingMode;
+use super::policy::{MixPolicy, PayloadKind, PlainModel, PushSumWeighted, SlotPayload};
 use super::telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
 use super::LrSchedule;
 use crate::analysis::gamma_potential;
@@ -64,6 +69,7 @@ use crate::topology::Graph;
 use std::cell::UnsafeCell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::marker::PhantomData;
 use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -74,17 +80,20 @@ const STREAM_WORKER_BASE: u64 = 0x5EED_F4EE_0000_0010;
 const STREAM_NODE_BASE: u64 = 0x5EED_F4EE_0000_1000;
 
 /// Seqlock-style versioned double buffer holding one node's published
-/// communication copy plus the global interaction count at publish time
-/// (the staleness stamp). Readers never block writers and vice versa;
-/// multiple writers are arbitrated by a CAS on the odd bit, and the
-/// best-effort cross-write path simply gives up (and is counted) when it
-/// loses that race.
-struct ModelSlot {
+/// [`SlotPayload`] plus the global interaction count at publish time (the
+/// staleness stamp). Generic over the payload, so the slot layout (plain
+/// `dim`-lane models vs `dim + 1`-lane push-sum pairs) is part of the
+/// policy contract rather than a hardcoded model snapshot. Readers never
+/// block writers and vice versa; multiple writers are arbitrated by a CAS
+/// on the odd bit, and the best-effort cross-write path simply gives up
+/// (and is counted) when it loses that race.
+struct ModelSlot<P: SlotPayload> {
     /// odd = write in progress; `(seq >> 1) & 1` = active buffer index
     seq: AtomicU64,
     buf: [UnsafeCell<Vec<f32>>; 2],
     /// global interaction count at publish, aligned with `buf`
     stamp: [AtomicU64; 2],
+    _payload: PhantomData<P>,
 }
 
 // Safety: a buffer is only written while the writer holds the odd seq mark
@@ -92,14 +101,19 @@ struct ModelSlot {
 // counter around their copy, retrying on any change; the seq stores and
 // fences provide the release/acquire edges. Same protocol as PR 1's
 // CommSlot, extended with CAS writer arbitration and a publish stamp.
-unsafe impl Sync for ModelSlot {}
+unsafe impl<P: SlotPayload> Sync for ModelSlot<P> {}
 
-impl ModelSlot {
-    fn new(init: &[f32]) -> Self {
+impl<P: SlotPayload> ModelSlot<P> {
+    /// Slot initialized with the payload encoding of the common init model
+    /// (push-sum weight 1).
+    fn new(params: &[f32]) -> Self {
+        let mut lanes = vec![0.0f32; P::lanes(params.len())];
+        P::encode(params, 1.0, &mut lanes);
         Self {
             seq: AtomicU64::new(0),
-            buf: [UnsafeCell::new(init.to_vec()), UnsafeCell::new(init.to_vec())],
+            buf: [UnsafeCell::new(lanes.clone()), UnsafeCell::new(lanes)],
             stamp: [AtomicU64::new(0), AtomicU64::new(0)],
+            _payload: PhantomData,
         }
     }
 
@@ -134,7 +148,7 @@ impl ModelSlot {
         retries
     }
 
-    /// Seqlock read of the current copy into `out`; returns the publish
+    /// Seqlock read of the current payload into `out`; returns the publish
     /// stamp and the retries burned racing concurrent writes.
     fn read_into(&self, out: &mut [f32]) -> (u64, u64) {
         let mut retries = 0;
@@ -159,13 +173,13 @@ impl ModelSlot {
 }
 
 /// Shared run state visible to every worker and the evaluation monitor.
-struct FreeShared<'a> {
+struct FreeShared<'a, P: SlotPayload> {
     backend: &'a dyn Backend,
     cost: &'a CostModel,
     graph: &'a Graph,
     lr: LrSchedule,
-    profile: GossipProfile,
-    slots: Vec<ModelSlot>,
+    policy: &'a dyn MixPolicy,
+    slots: Vec<ModelSlot<P>>,
     /// next unclaimed global event index
     claimed: AtomicU64,
     /// completed interactions — the staleness clock
@@ -215,8 +229,8 @@ struct WorkerResult {
 ///
 /// # Panics
 ///
-/// Panics if the algorithm does not advertise a [`GossipProfile`]
-/// (baselines with irreducibly global mixing — sgp, localsgd, allreduce —
+/// Panics if the algorithm does not return a [`MixPolicy`] (baselines
+/// whose mixing is an irreducible global mean — localsgd, allreduce —
 /// have no free-running semantics). The CLI checks this up front.
 pub fn run_freerun(
     algo: &dyn Algorithm,
@@ -227,16 +241,52 @@ pub fn run_freerun(
     threads: usize,
     shards: usize,
 ) -> RunMetrics {
-    let profile = algo.gossip_profile().unwrap_or_else(|| {
+    let policy = algo.mix_policy().unwrap_or_else(|| {
         panic!(
-            "--executor freerun requires pairwise mixing (a GossipProfile); \
-             '{}' mixes globally per round",
+            "--executor freerun requires a MixPolicy (freerun-eligible: swarm, \
+             poisson, adpsgd, dpsgd, sgp); '{}' mixes through an irreducible \
+             global mean",
             algo.name()
         )
     });
+    // the slot machinery is monomorphized per payload layout
+    match policy.payload() {
+        PayloadKind::Plain => freerun_with::<PlainModel>(
+            algo,
+            policy.as_ref(),
+            backend,
+            spec,
+            graph,
+            cost,
+            threads,
+            shards,
+        ),
+        PayloadKind::PushSumWeighted => freerun_with::<PushSumWeighted>(
+            algo,
+            policy.as_ref(),
+            backend,
+            spec,
+            graph,
+            cost,
+            threads,
+            shards,
+        ),
+    }
+}
+
+fn freerun_with<P: SlotPayload>(
+    algo: &dyn Algorithm,
+    policy: &dyn MixPolicy,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+    threads: usize,
+    shards: usize,
+) -> RunMetrics {
     assert!(spec.n >= 2, "gossip needs n >= 2");
     assert_eq!(spec.n, graph.n(), "spec n must match graph");
-    let threads = threads.max(1);
+    assert!(threads >= 1, "freerun needs at least one worker thread");
     let shards = shards.clamp(1, spec.n);
     let n = spec.n;
     let dim = backend.dim();
@@ -258,8 +308,8 @@ pub fn run_freerun(
         cost,
         graph,
         lr: spec.lr,
-        profile,
-        slots: (0..n).map(|_| ModelSlot::new(&p0)).collect(),
+        policy,
+        slots: (0..n).map(|_| ModelSlot::<P>::new(&p0)).collect(),
         claimed: AtomicU64::new(0),
         done: AtomicU64::new(0),
         bits: AtomicU64::new(0),
@@ -403,6 +453,9 @@ pub fn run_freerun(
         shards,
         wall_secs,
         interactions_per_sec: spec.events as f64 / wall_secs.max(1e-9),
+        codec: policy.wire().name().to_string(),
+        wire_bits: total_bits,
+        wire_fallbacks: quant_fallbacks,
         slot_read_retries: read_retries,
         slot_publish_retries: publish_retries,
         slot_push_conflicts: push_conflicts,
@@ -414,12 +467,13 @@ pub fn run_freerun(
 
 /// One worker: execute its event quota (proportional to the nodes it
 /// owns), ringing own nodes off the local Poisson heap and running
-/// initiator-side interactions against slot snapshots. The global
-/// `claimed` counter only sequences event indices (for the lr schedule);
-/// it never redistributes work, so per-node initiation rates stay uniform
-/// regardless of worker speed or shard-deal imbalance.
-fn worker_loop(
-    sh: &FreeShared<'_>,
+/// initiator-side interactions against slot snapshots through the
+/// algorithm's [`MixPolicy`]. The global `claimed` counter only sequences
+/// event indices (for the lr schedule); it never redistributes work, so
+/// per-node initiation rates stay uniform regardless of worker speed or
+/// shard-deal imbalance.
+fn worker_loop<P: SlotPayload>(
+    sh: &FreeShared<'_, P>,
     mut owned: Vec<(usize, NodeState)>,
     wid: usize,
     seed: u64,
@@ -443,6 +497,17 @@ fn worker_loop(
     for ix in 0..owned.len() {
         heap.push(Reverse(Tick { at: rng.exponential(1.0), ix }));
     }
+    let lanes = P::lanes(sh.dim);
+    // worker-local payload scratch: the node's own published payload, the
+    // partner snapshot, and the two payloads the policy produces (its own
+    // republish and the partner cross-write)
+    let mut own = vec![0.0f32; lanes];
+    let mut snapshot = vec![0.0f32; lanes];
+    let mut publish = vec![0.0f32; lanes];
+    let mut cross = vec![0.0f32; lanes];
+    // only slot-canonical policies (push-sum takes) pay the own-slot read;
+    // plain-model policies keep the PR 3 hot path and telemetry semantics
+    let sync_own = sh.policy.needs_own_slot_sync();
     for _ in 0..quota {
         let t = sh.claimed.fetch_add(1, Ordering::Relaxed);
         debug_assert!(t < sh.total, "worker quotas must sum to the event budget");
@@ -451,9 +516,18 @@ fn worker_loop(
         let Reverse(Tick { at, ix }) = heap.pop().expect("non-empty worker heap");
         let node = owned[ix].0;
         let st = &mut owned[ix].1;
-        // the node rings: pick a partner *now* and draw the local phase
+        // the node rings: sync from its own published slot (canonical for
+        // policies whose cross-writes mutate it — push-sum takes), then
+        // pick a partner *now* and draw the local phase
+        if sync_own {
+            let t0 = Instant::now();
+            let (_, own_retries) = sh.slots[node].read_into(&mut own);
+            sync_secs += t0.elapsed().as_secs_f64();
+            res.read_retries += own_retries;
+            sh.policy.absorb_own_slot(st, &own, sh.dim);
+        }
         let partner = sh.graph.sample_neighbor(node, &mut rng);
-        let h = sh.profile.local_steps.sample(&mut rng);
+        let h = sh.policy.draw_steps(&mut rng);
         let ctx = StepCtx {
             backend: sh.backend,
             cost: sh.cost,
@@ -462,53 +536,31 @@ fn worker_loop(
             dim: sh.dim,
             n: sh.n,
         };
-        local_phase(&ctx, node, st, h);
-        // non-blocking snapshot of the partner's published copy
+        sh.policy.local_phase(&ctx, node, st, h);
+        // non-blocking snapshot of the partner's published payload
         let t0 = Instant::now();
-        let (stamp, retries) = sh.slots[partner].read_into(&mut st.inbox);
+        let (stamp, retries) = sh.slots[partner].read_into(&mut snapshot);
         sync_secs += t0.elapsed().as_secs_f64();
         res.read_retries += retries;
         res.staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
-        // the algorithm's averaging rule, initiator side only — the partner
-        // is never touched, let alone delayed
-        let full_bytes = sh.cost.wire_bytes(sh.dim);
-        let (exch, wire_bits) = match sh.profile.mode {
-            AveragingMode::Blocking => {
-                // live-model averaging (AD-PSGD-style); the *read* still
-                // never blocks — "blocking" is the averaging rule, not the
-                // synchronization
-                average_into_both(&mut st.params, &mut st.inbox);
-                st.comm.copy_from_slice(&st.params);
-                (sh.cost.exchange_time(full_bytes), 2 * 8 * full_bytes)
-            }
-            AveragingMode::NonBlocking => {
-                nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
-                (sh.cost.exchange_time(full_bytes), 2 * 8 * full_bytes)
-            }
-            AveragingMode::Quantized { bits, eps } => {
-                let tr = quantized_transfer(&st.inbox, &st.snap, eps, bits, rng.next_u32());
-                if tr.fell_back {
-                    sh.fallbacks.fetch_add(1, Ordering::Relaxed);
-                }
-                st.inbox.copy_from_slice(&tr.decoded);
-                nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
-                // quantized pull + the symmetric cross-write payload
-                let push_bits = sh.dim as u64 * bits as u64 + 160;
-                let wire = sh.cost.scale_bits(tr.bits + push_bits, sh.dim);
-                (sh.cost.exchange_time(wire.div_ceil(8)), wire)
-            }
-        };
-        st.time += exch;
-        st.comm_time += exch;
+        // the policy's merge rule, initiator side only — the partner is
+        // never touched, let alone delayed. The wire codec's accounting
+        // comes back through the EventOutcome.
+        let outcome =
+            sh.policy.merge(&ctx, node, st, &mut snapshot, &mut publish, &mut cross, &mut rng);
         st.interactions += 1;
-        sh.bits.fetch_add(wire_bits, Ordering::Relaxed);
-        // republish our copy; best-effort cross-write of the pair average
-        // (st.comm IS the pair average under every mode above) into the
-        // partner's slot — dropped and counted if the slot is held
+        sh.bits.fetch_add(outcome.bits, Ordering::Relaxed);
+        if outcome.fallbacks > 0 {
+            sh.fallbacks.fetch_add(outcome.fallbacks, Ordering::Relaxed);
+        }
+        // republish our payload; best-effort cross-write of the policy's
+        // partner payload (the pair average for symmetric policies, the
+        // remaining half-offer for push-sum takes) into the partner's
+        // slot — dropped and counted if the slot is held
         let stamp_now = sh.done.load(Ordering::Relaxed);
         let t1 = Instant::now();
-        res.publish_retries += sh.slots[node].publish(&st.comm, stamp_now);
-        if !sh.slots[partner].try_publish(&st.comm, stamp_now) {
+        res.publish_retries += sh.slots[node].publish(&publish, stamp_now);
+        if !sh.slots[partner].try_publish(&cross, stamp_now) {
             res.push_conflicts += 1;
         }
         sync_secs += t1.elapsed().as_secs_f64();
@@ -524,27 +576,35 @@ fn worker_loop(
     res
 }
 
-/// A live curve point from non-blocking slot snapshots: consensus/individual
-/// models come from the *published* copies (the workers are not stopped, so
-/// per-node clocks and losses are unavailable — those fields are NaN).
-fn slot_point(
-    sh: &FreeShared<'_>,
+/// A live curve point from non-blocking slot snapshots: consensus and
+/// individual models are decoded from the *published* payloads through the
+/// [`SlotPayload`] hooks (push-sum slots de-bias by Σx/Σw); the workers
+/// are not stopped, so per-node clocks and losses are unavailable — those
+/// fields are NaN.
+fn slot_point<P: SlotPayload>(
+    sh: &FreeShared<'_, P>,
     algo: &dyn Algorithm,
     t: u64,
     track_gamma: bool,
     eval_rng: &mut Pcg64,
 ) -> CurvePoint {
     let mut snaps: Vec<Vec<f32>> = Vec::with_capacity(sh.n);
-    let mut buf = vec![0.0f32; sh.dim];
+    let mut buf = vec![0.0f32; P::lanes(sh.dim)];
     for slot in &sh.slots {
         slot.read_into(&mut buf);
         snaps.push(buf.clone());
     }
-    let consensus = mean_params(snaps.iter().map(|v| v.as_slice()), sh.dim, sh.n);
+    let consensus = P::consensus(&snaps, sh.dim);
     let pick = eval_rng.below_usize(sh.n);
     let ev = sh.backend.eval(&consensus);
-    let ind = sh.backend.eval(&snaps[pick]);
-    let gamma = if track_gamma { gamma_potential(&snaps) } else { f64::NAN };
+    let ind = sh.backend.eval(&P::individual(&snaps[pick], sh.dim));
+    let gamma = if track_gamma {
+        let models: Vec<Vec<f32>> =
+            snaps.iter().map(|s| P::individual(s, sh.dim)).collect();
+        gamma_potential(&models)
+    } else {
+        f64::NAN
+    };
     CurvePoint {
         t,
         parallel_time: algo.parallel_time(t, sh.n),
@@ -565,7 +625,7 @@ mod tests {
 
     #[test]
     fn slot_roundtrips_data_and_stamp() {
-        let s = ModelSlot::new(&[1.0, 2.0]);
+        let s = ModelSlot::<PlainModel>::new(&[1.0, 2.0]);
         let mut out = vec![0.0f32; 2];
         let (stamp, _) = s.read_into(&mut out);
         assert_eq!(out, vec![1.0, 2.0]);
@@ -578,7 +638,7 @@ mod tests {
 
     #[test]
     fn slot_sequential_publishes_always_succeed() {
-        let s = ModelSlot::new(&[0.0]);
+        let s = ModelSlot::<PlainModel>::new(&[0.0]);
         assert!(s.try_publish(&[1.0], 1));
         assert!(s.try_publish(&[2.0], 2));
         let mut out = vec![0.0f32];
@@ -588,11 +648,27 @@ mod tests {
     }
 
     #[test]
+    fn weighted_slot_carries_the_weight_lane() {
+        // a push-sum slot is dim + 1 lanes; a fresh one encodes weight 1
+        let s = ModelSlot::<PushSumWeighted>::new(&[2.0, 4.0]);
+        let mut out = vec![0.0f32; 3];
+        let (stamp, _) = s.read_into(&mut out);
+        assert_eq!(out, vec![2.0, 4.0, 1.0]);
+        assert_eq!(stamp, 0);
+        // publishing a halved pair round-trips intact
+        assert!(s.try_publish(&[1.0, 2.0, 0.5], 3));
+        let (stamp, _) = s.read_into(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 0.5]);
+        assert_eq!(stamp, 3);
+        assert_eq!(PushSumWeighted::individual(&out, 2), vec![2.0, 4.0]);
+    }
+
+    #[test]
     fn slot_concurrent_reads_see_consistent_pairs() {
         // hammer one slot from a writer and several readers: every read
         // must return one of the published (data, stamp) pairs intact
         let dim = 64;
-        let s = ModelSlot::new(&vec![0.0f32; dim]);
+        let s = ModelSlot::<PlainModel>::new(&vec![0.0f32; dim]);
         let writes = 2_000u64;
         std::thread::scope(|scope| {
             let sref = &s;

@@ -28,8 +28,16 @@
 //!   non-blocking seqlock model slots — throughput-faithful, measured, and
 //!   deliberately **non-replayable** (the contract split is documented in
 //!   that module and in `lib.rs`).
+//! * [`policy`] — the open free-running capability API: the object-safe
+//!   [`MixPolicy`] trait ([`Algorithm::mix_policy`]) owning the slot
+//!   payload ([`SlotPayload`]: plain models or push-sum `(x, w)` pairs),
+//!   the merge rule, the local-step policy, and the first-class
+//!   [`WireCodec`] quantization axis (`--wire lattice|f32`, honored on all
+//!   three executors). Replaced PR 3's closed `GossipProfile` struct and
+//!   admitted SGP to freerun via weighted slots.
 //! * [`telemetry`] — what only the free-running executor can measure:
-//!   staleness histograms, seqlock retry counts, per-worker busy/wait.
+//!   staleness histograms, seqlock retry counts, per-worker busy/wait,
+//!   and the codec's wire-bit/fallback attribution.
 //! * [`cluster`] — pairwise averaging primitives shared by the algorithms.
 //! * [`engine`] — per-node simulated clocks merged into the paper's time
 //!   axes.
@@ -43,13 +51,14 @@ mod executor;
 pub mod freerun;
 mod metrics;
 mod poisson;
+pub mod policy;
 mod swarm;
 pub mod telemetry;
 
 pub use algorithm::{
     barrier_all, local_phase, make_algorithm, mean_model, mean_params, pair_at, step_once,
-    AlgoOptions, Algorithm, Event, EventKind, EventOutcome, GossipProfile, InteractionSchedule,
-    NodeState, RoundModels, StepCtx, ALGORITHM_NAMES,
+    AlgoOptions, Algorithm, Event, EventKind, EventOutcome, InteractionSchedule, NodeState,
+    RoundModels, StepCtx, ALGORITHM_NAMES,
 };
 pub use cluster::{average_into_both, midpoint, nonblocking_update, quantized_transfer};
 pub use engine::NodeClocks;
@@ -57,6 +66,10 @@ pub use executor::{run_parallel, run_serial, RunSpec};
 pub use freerun::run_freerun;
 pub use metrics::{CurvePoint, RunMetrics};
 pub use poisson::PoissonSwarm;
+pub use policy::{
+    codec_exchange_average, MixPolicy, PairMerge, PairwisePolicy, PayloadKind, PlainModel,
+    PushSumPolicy, PushSumWeighted, SlotPayload, WireCodec,
+};
 pub use swarm::{AveragingMode, LocalSteps, SwarmSgd};
 pub use telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
 

@@ -94,10 +94,10 @@ impl Algorithm for PoissonSwarm {
         self.inner.interact_pair(ev, parts, ctx)
     }
 
-    /// Same profile as [`SwarmSgd`] — the free-running executor *is* the
+    /// Same policy as [`SwarmSgd`] — the free-running executor *is* the
     /// literal per-node Poisson-clock runtime this scheduler simulates.
-    fn gossip_profile(&self) -> Option<super::GossipProfile> {
-        self.inner.gossip_profile()
+    fn mix_policy(&self) -> Option<Box<dyn super::MixPolicy>> {
+        self.inner.mix_policy()
     }
 }
 

@@ -1,0 +1,737 @@
+//! The open free-running capability API: [`MixPolicy`], [`SlotPayload`],
+//! and the first-class [`WireCodec`] axis.
+//!
+//! PR 3 admitted algorithms to the free-running executor through a closed
+//! two-field `GossipProfile` struct (local-step distribution + averaging
+//! mode), which hardcoded three orthogonal decisions at once: what a node
+//! *publishes* (always a plain model snapshot), how an initiator *merges*
+//! a stale partner snapshot (one of the three SwarmSGD averaging modes),
+//! and whether the snapshot crosses the simulated wire *quantized* (an
+//! executor-level constant keyed off the averaging mode). That closed
+//! struct is why SGP's push-sum was locked out of freerun: push-sum's
+//! published value is a weighted pair `(x, w)`, not a model.
+//!
+//! This module replaces the struct with an object-safe trait an algorithm
+//! returns from [`Algorithm::mix_policy`]. A policy owns four axes:
+//!
+//! 1. **Slot payload** ([`SlotPayload`], selected via [`PayloadKind`]) —
+//!    the value a node publishes into its seqlock slot: [`PlainModel`]
+//!    (`dim` lanes) or [`PushSumWeighted`] (`dim + 1` lanes, push-sum
+//!    weight in the last lane). The payload trait carries the
+//!    encode/decode/merge hooks the executor and policies share, and
+//!    `ModelSlot` in [`super::freerun`] is generic over it.
+//! 2. **Merge rule** ([`MixPolicy::merge`]) — what the initiator does with
+//!    a possibly-stale partner snapshot. Subsumes the old `AveragingMode`
+//!    dispatch: live averaging, the Appendix-F non-blocking update, or
+//!    push-sum's take-half weight flow.
+//! 3. **Local-step policy** ([`MixPolicy::draw_steps`] +
+//!    [`MixPolicy::local_phase`]) — how much local work one interaction
+//!    performs, and on which model view (SGP steps on the de-biased
+//!    `z = x/w`).
+//! 4. **Wire codec** ([`WireCodec`]) — whether model lanes cross the
+//!    simulated wire lattice-quantized or at full precision. CLI-selectable
+//!    per algorithm (`--wire lattice|f32`) and honored by *all three*
+//!    executors; bits and decode-fallbacks are attributed through
+//!    [`EventOutcome`] and `FreerunStats`.
+//!
+//! # Implementing a toy policy
+//!
+//! Any object-safe implementation admits an algorithm to
+//! [`run_freerun`](super::run_freerun). A minimal policy that performs no
+//! local work and pulls the initiator 25% toward the partner snapshot:
+//!
+//! ```
+//! use swarm_sgd::coordinator::{
+//!     EventOutcome, MixPolicy, NodeState, PayloadKind, StepCtx, WireCodec,
+//! };
+//! use swarm_sgd::rngx::Pcg64;
+//!
+//! struct PullQuarter;
+//!
+//! impl MixPolicy for PullQuarter {
+//!     fn payload(&self) -> PayloadKind {
+//!         PayloadKind::Plain
+//!     }
+//!     fn wire(&self) -> WireCodec {
+//!         WireCodec::F32
+//!     }
+//!     fn draw_steps(&self, _rng: &mut Pcg64) -> u64 {
+//!         0
+//!     }
+//!     fn local_phase(&self, _ctx: &StepCtx<'_>, _node: usize, _st: &mut NodeState, _h: u64) {}
+//!     fn merge(
+//!         &self,
+//!         _ctx: &StepCtx<'_>,
+//!         _node: usize,
+//!         st: &mut NodeState,
+//!         snapshot: &mut [f32],
+//!         publish: &mut [f32],
+//!         cross: &mut [f32],
+//!         _rng: &mut Pcg64,
+//!     ) -> EventOutcome {
+//!         for (p, &s) in st.params.iter_mut().zip(snapshot.iter()) {
+//!             *p += 0.25 * (s - *p);
+//!         }
+//!         st.comm.copy_from_slice(&st.params);
+//!         publish.copy_from_slice(&st.params);
+//!         cross.copy_from_slice(&st.params);
+//!         EventOutcome { bits: 32 * publish.len() as u64, fallbacks: 0 }
+//!     }
+//! }
+//! ```
+//!
+//! [`Algorithm::mix_policy`]: super::Algorithm::mix_policy
+
+use super::algorithm::{local_phase, EventOutcome, NodeState, StepCtx};
+use super::cluster::quantized_transfer;
+use super::swarm::LocalSteps;
+use crate::rngx::Pcg64;
+
+/// How model lanes cross the simulated wire — the quantization axis,
+/// CLI-selectable per algorithm (`--wire lattice|f32`) and honored by all
+/// three executors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WireCodec {
+    /// full-precision f32 lanes
+    F32,
+    /// lattice-quantized lanes (Appendix G): `bits` per coordinate against
+    /// an `eps`-grid, with a counted full-precision fallback when the
+    /// decode distance criterion fails
+    Lattice { bits: u32, eps: f32 },
+}
+
+impl WireCodec {
+    /// Selector name, as written on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCodec::F32 => "f32",
+            WireCodec::Lattice { .. } => "lattice",
+        }
+    }
+
+    /// Decode `model` lanes in place, as received by a node holding
+    /// `reference`; returns `(raw wire bits, fell_back)`. `F32` is the
+    /// identity at 32 bits/lane; `Lattice` round-trips the lattice codec
+    /// (fallback bits included when the decode fails). Raw bits are before
+    /// any `CostModel::scale_bits` wire-size override scaling.
+    pub fn decode_in_place(
+        &self,
+        model: &mut [f32],
+        reference: &[f32],
+        seed: u32,
+    ) -> (u64, bool) {
+        match *self {
+            WireCodec::F32 => (32 * model.len() as u64, false),
+            WireCodec::Lattice { bits, eps } => {
+                let tr = quantized_transfer(model, reference, eps, bits, seed);
+                model.copy_from_slice(&tr.decoded);
+                (tr.bits, tr.fell_back)
+            }
+        }
+    }
+}
+
+/// Two-way codec exchange + live averaging for one gossip edge — the
+/// shared lattice path of the AD-PSGD and D-PSGD replay interact bodies:
+/// both incoming copies cross the codec (each decoded against the
+/// receiver's live model), then each endpoint averages with what it
+/// decoded. Returns raw (pre-`scale_bits`) wire bits and the fallback
+/// count. Callers derive `er` deterministically from the event seed so
+/// the exchange replays bit-identically on any executor.
+pub fn codec_exchange_average(
+    a: &mut NodeState,
+    b: &mut NodeState,
+    codec: WireCodec,
+    er: &mut Pcg64,
+) -> (u64, u64) {
+    a.inbox.copy_from_slice(&b.params);
+    b.inbox.copy_from_slice(&a.params);
+    let (b1, f1) = codec.decode_in_place(&mut a.inbox, &a.params, er.next_u32());
+    let (b2, f2) = codec.decode_in_place(&mut b.inbox, &b.params, er.next_u32());
+    for st in [&mut *a, &mut *b] {
+        for (p, &inc) in st.params.iter_mut().zip(&st.inbox) {
+            *p = 0.5 * (*p + inc);
+        }
+    }
+    (b1 + b2, (f1 as u64) + (f2 as u64))
+}
+
+/// Which [`SlotPayload`] layout a policy publishes — the executor
+/// dispatches its generic slot machinery on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// [`PlainModel`]: `dim` lanes
+    Plain,
+    /// [`PushSumWeighted`]: `dim + 1` lanes (weight in the last lane)
+    PushSumWeighted,
+}
+
+/// The value one freerun model slot publishes, as flat f32 lanes, with the
+/// encode/decode/merge hooks the executor and policies share. `ModelSlot`
+/// in [`super::freerun`] is generic over this trait, so the slot layout is
+/// part of the policy contract rather than a hardcoded `Vec<f32>` model
+/// snapshot.
+pub trait SlotPayload: Send + Sync + 'static {
+    /// lanes beyond the model (0 for plain models, 1 for the push-sum
+    /// weight)
+    const AUX_LANES: usize;
+
+    /// total f32 lanes one payload occupies at model dimension `dim`
+    fn lanes(dim: usize) -> usize {
+        dim + Self::AUX_LANES
+    }
+
+    /// **encode**: a node's publishable value from its live model view and
+    /// push-sum weight
+    fn encode(params: &[f32], weight: f64, out: &mut [f32]);
+
+    /// **merge**: lane-wise payload-algebra midpoint `into ← (into+other)/2`
+    /// — the symmetric pairwise mixing step in payload space (for weighted
+    /// pairs this merges `x` and `w` by the *same* linear rule, which is
+    /// push-sum's defining invariant)
+    fn mix_into(into: &mut [f32], other: &[f32]) {
+        debug_assert_eq!(into.len(), other.len());
+        for (a, &b) in into.iter_mut().zip(other) {
+            *a = 0.5 * (*a + b);
+        }
+    }
+
+    /// **decode**: the consensus model an evaluation snapshot of raw
+    /// payloads represents (mean model, or push-sum's de-biased Σx/Σw)
+    fn consensus(snaps: &[Vec<f32>], dim: usize) -> Vec<f32>;
+
+    /// **decode**: one payload's individual (de-biased) model
+    fn individual(payload: &[f32], dim: usize) -> Vec<f32>;
+}
+
+/// Plain-model payload: the node's communication copy, `dim` lanes.
+#[derive(Clone, Copy, Debug)]
+pub struct PlainModel;
+
+impl SlotPayload for PlainModel {
+    const AUX_LANES: usize = 0;
+
+    fn encode(params: &[f32], _weight: f64, out: &mut [f32]) {
+        out.copy_from_slice(params);
+    }
+
+    fn consensus(snaps: &[Vec<f32>], dim: usize) -> Vec<f32> {
+        super::algorithm::mean_params(snaps.iter().map(|v| &v[..dim]), dim, snaps.len())
+    }
+
+    fn individual(payload: &[f32], dim: usize) -> Vec<f32> {
+        payload[..dim].to_vec()
+    }
+}
+
+/// Push-sum weighted pair `(x, w)`: `dim` model lanes plus the weight in
+/// the last lane. Because `x` and `w` always undergo the *same* linear
+/// ops — halving takes, absorbs, or lane-wise midpoints
+/// ([`SlotPayload::mix_into`]) — the de-biased ratio `x/w` stays a
+/// consistent consensus estimate even when best-effort cross-writes drop
+/// — the property that admits SGP to the free-running executor.
+#[derive(Clone, Copy, Debug)]
+pub struct PushSumWeighted;
+
+impl SlotPayload for PushSumWeighted {
+    const AUX_LANES: usize = 1;
+
+    fn encode(params: &[f32], weight: f64, out: &mut [f32]) {
+        let (model, aux) = out.split_at_mut(params.len());
+        model.copy_from_slice(params);
+        aux[0] = weight as f32;
+    }
+
+    /// De-biased weighted consensus Σx/Σw over the published pairs.
+    fn consensus(snaps: &[Vec<f32>], dim: usize) -> Vec<f32> {
+        let wsum: f64 = snaps.iter().map(|s| s[dim] as f64).sum();
+        let mut acc = vec![0.0f64; dim];
+        for s in snaps {
+            for (a, &v) in acc.iter_mut().zip(&s[..dim]) {
+                *a += v as f64;
+            }
+        }
+        acc.into_iter().map(|v| (v / wsum) as f32).collect()
+    }
+
+    fn individual(payload: &[f32], dim: usize) -> Vec<f32> {
+        let w = payload[dim];
+        payload[..dim].iter().map(|&x| x / w).collect()
+    }
+}
+
+/// How the free-running executor drives one initiator-side interaction.
+/// Object-safe; returned by [`Algorithm::mix_policy`](super::Algorithm::mix_policy)
+/// iff the algorithm has free-running (initiator-decomposable) semantics.
+///
+/// The executor's per-interaction protocol is fixed; the policy fills in
+/// the four axes (see the [module docs](self)):
+///
+/// 1. iff [`MixPolicy::needs_own_slot_sync`], the executor seqlock-reads
+///    the initiator's *own* slot and hands it to
+///    [`MixPolicy::absorb_own_slot`] — policies whose slot is the
+///    canonical value between rings (push-sum: cross-writers take mass
+///    out of it) sync their state here; plain-model policies skip the
+///    read entirely (their state is canonical);
+/// 2. `h = draw_steps(rng)` — pre-draw the local-step count;
+/// 3. `local_phase(ctx, node, st, h)` — the initiator's local work;
+/// 4. the executor seqlock-reads the partner's slot (never blocking the
+///    partner) into a scratch payload;
+/// 5. `merge(ctx, node, st, snapshot, publish, cross, rng)` — decode the
+///    snapshot through [`MixPolicy::wire`], apply the merge rule to the
+///    initiator's state, fill `publish` (the payload for the initiator's
+///    own slot) and `cross` (the payload for the partner's slot), and
+///    return the wire accounting;
+/// 6. the executor publishes `publish` into the initiator's slot and
+///    best-effort cross-writes `cross` into the partner's slot (dropped
+///    and counted on conflict — nobody ever waits).
+pub trait MixPolicy: Send + Sync {
+    /// Slot payload layout this policy publishes.
+    fn payload(&self) -> PayloadKind;
+
+    /// The codec model lanes cross the simulated wire through.
+    fn wire(&self) -> WireCodec;
+
+    /// Pre-draw the initiator's local-step count for one interaction.
+    fn draw_steps(&self, rng: &mut Pcg64) -> u64;
+
+    /// Whether the executor must read the initiator's own slot and call
+    /// [`MixPolicy::absorb_own_slot`] before each interaction. Policies
+    /// whose cross-writes mutate the published value (push-sum takes)
+    /// return true; plain-model policies default to false and keep the
+    /// own-read off the hot path (so their slot-read telemetry stays
+    /// comparable to the pre-`MixPolicy` executor).
+    fn needs_own_slot_sync(&self) -> bool {
+        false
+    }
+
+    /// Sync the initiator's state from its own published slot at ring
+    /// time. A node's state only changes during its own rings, so for
+    /// policies whose cross-writes *mutate* the published value (push-sum
+    /// takes), the slot is the canonical pair and must be absorbed before
+    /// the local phase. Only called when [`MixPolicy::needs_own_slot_sync`]
+    /// is true; the default is a no-op.
+    fn absorb_own_slot(&self, st: &mut NodeState, own: &[f32], dim: usize) {
+        let _ = (st, own, dim);
+    }
+
+    /// The initiator's local phase: `h` pre-drawn SGD steps on whatever
+    /// model view the policy steps (plain params, or SGP's de-biased
+    /// `z = x/w`), charging compute time to the state's clock.
+    fn local_phase(&self, ctx: &StepCtx<'_>, node: usize, st: &mut NodeState, h: u64);
+
+    /// The merge rule against the partner's possibly-stale payload
+    /// `snapshot` (scratch-owned, `lanes` long — the policy may decode in
+    /// place). Must update the initiator's state, fill `publish` (the
+    /// payload republished into the initiator's slot) and `cross` (the
+    /// payload best-effort cross-written into the partner's slot — the
+    /// pair average for symmetric policies, the remaining half-offer for
+    /// push-sum takes), charge exchange time, and return the wire
+    /// bits/fallbacks (the codec's accounting).
+    fn merge(
+        &self,
+        ctx: &StepCtx<'_>,
+        node: usize,
+        st: &mut NodeState,
+        snapshot: &mut [f32],
+        publish: &mut [f32],
+        cross: &mut [f32],
+        rng: &mut Pcg64,
+    ) -> EventOutcome;
+}
+
+/// Merge rule of a plain-model pairwise policy — what `AveragingMode`
+/// meant to the free-running executor, minus the quantization axis (now
+/// [`WireCodec`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairMerge {
+    /// average live models (the AD-PSGD / Algorithm-1 rule; the snapshot
+    /// *read* still never blocks anyone)
+    Live,
+    /// the Appendix-F non-blocking update against the pre-phase snapshot
+    NonBlocking,
+}
+
+/// The pairwise-gossip policy family: plain-model slots, configurable
+/// local steps, live or non-blocking merge, any wire codec. Covers swarm,
+/// poisson, adpsgd, and dpsgd's freerun degradation.
+#[derive(Clone, Copy, Debug)]
+pub struct PairwisePolicy {
+    pub steps: LocalSteps,
+    pub merge: PairMerge,
+    pub wire: WireCodec,
+}
+
+impl MixPolicy for PairwisePolicy {
+    fn payload(&self) -> PayloadKind {
+        PayloadKind::Plain
+    }
+
+    fn wire(&self) -> WireCodec {
+        self.wire
+    }
+
+    fn draw_steps(&self, rng: &mut Pcg64) -> u64 {
+        self.steps.sample(rng)
+    }
+
+    fn local_phase(&self, ctx: &StepCtx<'_>, node: usize, st: &mut NodeState, h: u64) {
+        local_phase(ctx, node, st, h);
+    }
+
+    fn merge(
+        &self,
+        ctx: &StepCtx<'_>,
+        _node: usize,
+        st: &mut NodeState,
+        snapshot: &mut [f32],
+        publish: &mut [f32],
+        cross: &mut [f32],
+        rng: &mut Pcg64,
+    ) -> EventOutcome {
+        let full_bytes = ctx.cost.wire_bytes(ctx.dim);
+        // decode the incoming model lanes through the wire codec; the
+        // lattice reference is the merge rule's own local view
+        let reference = match self.merge {
+            PairMerge::Live => &st.params,
+            PairMerge::NonBlocking => &st.snap,
+        };
+        let (raw_bits, fell_back) =
+            self.wire.decode_in_place(snapshot, reference, rng.next_u32());
+        let (exch, bits) = match self.wire {
+            WireCodec::F32 => (ctx.cost.exchange_time(full_bytes), 2 * 8 * full_bytes),
+            WireCodec::Lattice { bits, .. } => {
+                // quantized pull + the symmetric cross-write payload
+                let push_bits = ctx.dim as u64 * bits as u64 + 160;
+                let wire = ctx.cost.scale_bits(raw_bits + push_bits, ctx.dim);
+                (ctx.cost.exchange_time(wire.div_ceil(8)), wire)
+            }
+        };
+        match self.merge {
+            PairMerge::Live => {
+                PlainModel::encode(&st.params, 1.0, publish);
+                PlainModel::mix_into(publish, snapshot);
+                st.params.copy_from_slice(publish);
+            }
+            PairMerge::NonBlocking => {
+                // comm ← (S + inc)/2, params ← comm + (params − S)
+                PlainModel::encode(&st.snap, 1.0, publish);
+                PlainModel::mix_into(publish, snapshot);
+                for k in 0..ctx.dim {
+                    st.params[k] = publish[k] + (st.params[k] - st.snap[k]);
+                }
+            }
+        }
+        st.comm.copy_from_slice(publish);
+        // symmetric policy: the cross-write ships the same pair average
+        // (Algorithm 2's X' update on both endpoints)
+        cross.copy_from_slice(publish);
+        st.time += exch;
+        st.comm_time += exch;
+        EventOutcome { bits, fallbacks: fell_back as u64 }
+    }
+}
+
+/// SGP's weighted-slot policy — the asynchronous **take-half** analogue of
+/// push-sum that admits SGP to the free-running executor:
+///
+/// * every slot publishes a push-sum pair `(x, w)` ([`PushSumWeighted`]);
+///   between a node's own rings, initiators *take mass out of* its slot,
+///   so the slot is the canonical pair and the owner re-absorbs it at
+///   ring time ([`MixPolicy::absorb_own_slot`]);
+/// * one interaction: the initiator runs its de-biased SGD step(s) on
+///   `z = x/w`, reads the partner's offer `(x', w')`, keeps half of it —
+///   `(x, w) ← (x + x'/2, w + w'/2)` — and cross-writes the remaining
+///   half `(x'/2, w'/2)` back into the partner's slot.
+///
+/// Mass `(Σx, Σw)` is conserved exactly when the cross-write lands; when
+/// it drops (or races a republish) both lanes distort *identically*, so
+/// every pair remains a nonnegative combination of the initial pairs with
+/// equal coefficients on `x` and `w` — the push-sum invariant that keeps
+/// the de-biased `Σx/Σw` (and each `z = x/w`) a consistent consensus
+/// estimate under staleness, drops, and arbitrary interleaving. Unlike a
+/// symmetric midpoint rule (under which every weight would stay pinned at
+/// exactly 1 and the weighted machinery would be vacuous), the take-half
+/// flow makes the weights genuinely non-trivial, as in the synchronous
+/// push phase.
+#[derive(Clone, Copy, Debug)]
+pub struct PushSumPolicy {
+    pub steps: LocalSteps,
+    pub wire: WireCodec,
+}
+
+impl MixPolicy for PushSumPolicy {
+    fn payload(&self) -> PayloadKind {
+        PayloadKind::PushSumWeighted
+    }
+
+    fn wire(&self) -> WireCodec {
+        self.wire
+    }
+
+    fn draw_steps(&self, rng: &mut Pcg64) -> u64 {
+        self.steps.sample(rng)
+    }
+
+    /// Takes mutate the published pair in place, so the slot is canonical
+    /// between rings and the owner must re-absorb it.
+    fn needs_own_slot_sync(&self) -> bool {
+        true
+    }
+
+    /// The slot is canonical between rings (takes halve it in place), so
+    /// the owner syncs its state from it before doing any local work.
+    fn absorb_own_slot(&self, st: &mut NodeState, own: &[f32], dim: usize) {
+        st.params.copy_from_slice(&own[..dim]);
+        st.weight = own[dim] as f64;
+    }
+
+    /// SGD on the de-biased model `z = x/w`, then re-bias — SGP's compute
+    /// rule, charged immediately (freerun has no round barrier to park
+    /// compute time against).
+    fn local_phase(&self, ctx: &StepCtx<'_>, node: usize, st: &mut NodeState, h: u64) {
+        let w = st.weight as f32;
+        for (z, &x) in st.snap.iter_mut().zip(&st.params) {
+            *z = x / w;
+        }
+        st.last_loss =
+            ctx.backend.step_burst(node, &mut st.snap, &mut st.mom, ctx.lr, h, &mut st.rng);
+        st.steps += h;
+        for (x, &z) in st.params.iter_mut().zip(&st.snap) {
+            *x = z * w;
+        }
+        let mut comp = 0.0;
+        for _ in 0..h {
+            comp += ctx.cost.compute_time(&mut st.rng);
+        }
+        st.time += comp;
+        st.compute += comp;
+    }
+
+    fn merge(
+        &self,
+        ctx: &StepCtx<'_>,
+        _node: usize,
+        st: &mut NodeState,
+        snapshot: &mut [f32],
+        publish: &mut [f32],
+        cross: &mut [f32],
+        rng: &mut Pcg64,
+    ) -> EventOutcome {
+        let dim = ctx.dim;
+        let full_bytes = ctx.cost.wire_bytes(dim);
+        // the offer's model lanes cross the codec (x-scale against
+        // x-scale); the weight lane is a full-precision scalar either way
+        let (model, _aux) = snapshot.split_at_mut(dim);
+        let (raw_bits, fell_back) =
+            self.wire.decode_in_place(model, &st.params, rng.next_u32());
+        let (exch, bits) = match self.wire {
+            // pulled offer + returned half-offer: one model each way plus
+            // the weight scalars
+            WireCodec::F32 => {
+                (ctx.cost.exchange_time(full_bytes + 8), 2 * (8 * full_bytes + 64))
+            }
+            WireCodec::Lattice { bits, .. } => {
+                let push_bits = dim as u64 * bits as u64 + 160;
+                let wire = ctx.cost.scale_bits(raw_bits + push_bits, dim) + 2 * 64;
+                (ctx.cost.exchange_time(wire.div_ceil(8)), wire)
+            }
+        };
+        // take half of the offer on both lanes; the remaining half goes
+        // back into the partner's slot as the cross-write
+        for (c, &s) in cross.iter_mut().zip(snapshot.iter()) {
+            *c = 0.5 * s;
+        }
+        for (x, &half) in st.params.iter_mut().zip(&cross[..dim]) {
+            *x += half;
+        }
+        st.weight += cross[dim] as f64;
+        PushSumWeighted::encode(&st.params, st.weight, publish);
+        st.comm.copy_from_slice(&st.params);
+        st.time += exch;
+        st.comm_time += exch;
+        EventOutcome { bits, fallbacks: fell_back as u64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_names_and_f32_identity() {
+        assert_eq!(WireCodec::F32.name(), "f32");
+        assert_eq!(WireCodec::Lattice { bits: 8, eps: 1e-2 }.name(), "lattice");
+        let mut model = vec![1.0f32, -2.0, 3.0];
+        let reference = vec![0.0f32; 3];
+        let (bits, fb) = WireCodec::F32.decode_in_place(&mut model, &reference, 7);
+        assert_eq!(model, vec![1.0, -2.0, 3.0]);
+        assert_eq!(bits, 96);
+        assert!(!fb);
+    }
+
+    #[test]
+    fn lattice_codec_roundtrips_close_models() {
+        let remote: Vec<f32> = (0..512).map(|i| i as f32 * 1e-4).collect();
+        let reference: Vec<f32> = remote.iter().map(|v| v + 0.01).collect();
+        let mut lanes = remote.clone();
+        let codec = WireCodec::Lattice { bits: 8, eps: 1e-3 };
+        let (bits, fb) = codec.decode_in_place(&mut lanes, &reference, 9);
+        assert!(!fb);
+        assert_eq!(bits, 8 * 512 + 160);
+        for (d, r) in lanes.iter().zip(&remote) {
+            assert!((d - r).abs() <= 1e-3 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn plain_payload_encode_consensus_individual() {
+        assert_eq!(PlainModel::lanes(4), 4);
+        let mut out = vec![0.0f32; 2];
+        PlainModel::encode(&[1.0, 3.0], 99.0, &mut out); // weight ignored
+        assert_eq!(out, vec![1.0, 3.0]);
+        let snaps = vec![vec![0.0f32, 2.0], vec![4.0, 0.0]];
+        assert_eq!(PlainModel::consensus(&snaps, 2), vec![2.0, 1.0]);
+        assert_eq!(PlainModel::individual(&snaps[1], 2), vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn weighted_payload_debiases_by_the_weight_lane() {
+        assert_eq!(PushSumWeighted::lanes(4), 5);
+        let mut out = vec![0.0f32; 3];
+        PushSumWeighted::encode(&[2.0, 4.0], 0.5, &mut out);
+        assert_eq!(out, vec![2.0, 4.0, 0.5]);
+        // individual de-biases: x/w
+        assert_eq!(PushSumWeighted::individual(&out, 2), vec![4.0, 8.0]);
+        // consensus: Σx/Σw — two pairs encoding the same z must agree
+        let snaps = vec![vec![2.0f32, 4.0, 0.5], vec![6.0, 12.0, 1.5]];
+        assert_eq!(PushSumWeighted::consensus(&snaps, 2), vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn mix_into_is_lanewise_midpoint_for_both_payloads() {
+        let mut a = vec![1.0f32, 3.0, 1.0];
+        let b = vec![3.0f32, -1.0, 0.5];
+        PushSumWeighted::mix_into(&mut a, &b);
+        assert_eq!(a, vec![2.0, 1.0, 0.75]);
+        let mut p = vec![0.0f32, 2.0];
+        PlainModel::mix_into(&mut p, &[4.0, 2.0]);
+        assert_eq!(p, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn pairwise_policy_reports_its_axes() {
+        let p = PairwisePolicy {
+            steps: LocalSteps::Fixed(3),
+            merge: PairMerge::NonBlocking,
+            wire: WireCodec::Lattice { bits: 8, eps: 1e-2 },
+        };
+        assert_eq!(p.payload(), PayloadKind::Plain);
+        assert_eq!(p.wire().name(), "lattice");
+        let mut rng = Pcg64::seed(1);
+        assert_eq!(p.draw_steps(&mut rng), 3);
+        let ps = PushSumPolicy { steps: LocalSteps::Fixed(1), wire: WireCodec::F32 };
+        assert_eq!(ps.payload(), PayloadKind::PushSumWeighted);
+        assert_eq!(ps.wire().name(), "f32");
+    }
+
+    /// A minimal merge context over the deterministic quadratic oracle.
+    fn ctx_fixture(
+        dim: usize,
+        n: usize,
+    ) -> (crate::grad::QuadraticOracle, crate::topology::Graph, crate::netmodel::CostModel)
+    {
+        let backend = crate::grad::QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.0, 3);
+        let mut rng = Pcg64::seed(5);
+        let graph =
+            crate::topology::Graph::build(crate::topology::Topology::Complete, n, &mut rng);
+        (backend, graph, crate::netmodel::CostModel::deterministic(0.1))
+    }
+
+    #[test]
+    fn push_sum_take_half_merge_conserves_paired_mass() {
+        let (dim, n) = (2, 4);
+        let (backend, graph, cost) = ctx_fixture(dim, n);
+        let ctx = StepCtx { backend: &backend, cost: &cost, graph: &graph, lr: 0.0, dim, n };
+        let policy = PushSumPolicy { steps: LocalSteps::Fixed(1), wire: WireCodec::F32 };
+        let mut st = NodeState::new(vec![2.0, 4.0], vec![0.0; 2], Pcg64::seed(1));
+        // partner offer (x', w') = ([4, 8], 2) — same de-biased z as ours
+        let mut snapshot = vec![4.0f32, 8.0, 2.0];
+        let mut publish = vec![0.0f32; 3];
+        let mut cross = vec![0.0f32; 3];
+        let mut rng = Pcg64::seed(9);
+        let before = st.time;
+        let out =
+            policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        // the initiator keeps half the offer on BOTH lanes...
+        assert_eq!(st.params, vec![4.0, 8.0]); // 2 + 4/2, 4 + 8/2
+        assert!((st.weight - 2.0).abs() < 1e-9); // 1 + 2/2
+        assert_eq!(publish, vec![4.0, 8.0, 2.0]);
+        // ...and returns the remaining half-offer as the cross-write
+        assert_eq!(cross, vec![2.0, 4.0, 1.0]);
+        // mass before (own + offer) == mass after (publish + cross), lanes
+        // paired — and the de-biased z is unchanged (offer had the same z)
+        assert_eq!(PushSumWeighted::individual(&publish, dim), vec![2.0, 4.0]);
+        assert_eq!(PushSumWeighted::individual(&cross, dim), vec![2.0, 4.0]);
+        assert!(out.bits > 0);
+        assert_eq!(out.fallbacks, 0);
+        assert!(st.time > before, "exchange time must be charged");
+    }
+
+    #[test]
+    fn push_sum_absorb_own_slot_syncs_state_from_the_canonical_pair() {
+        let policy = PushSumPolicy { steps: LocalSteps::Fixed(1), wire: WireCodec::F32 };
+        let mut st = NodeState::new(vec![9.0, 9.0], vec![0.0; 2], Pcg64::seed(1));
+        // an initiator took mass from our slot since our last ring
+        let own = vec![1.0f32, 2.0, 0.25];
+        policy.absorb_own_slot(&mut st, &own, 2);
+        assert_eq!(st.params, vec![1.0, 2.0]);
+        assert!((st.weight - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pairwise_nonblocking_merge_matches_the_appendix_f_update() {
+        // same scenario as cluster::nonblocking_update's unit test:
+        // S = [0, 0], params = S + delta with delta = [1, 1], inc = [2, 4]
+        let (dim, n) = (2, 4);
+        let (backend, graph, cost) = ctx_fixture(dim, n);
+        let ctx = StepCtx { backend: &backend, cost: &cost, graph: &graph, lr: 0.0, dim, n };
+        let policy = PairwisePolicy {
+            steps: LocalSteps::Fixed(1),
+            merge: PairMerge::NonBlocking,
+            wire: WireCodec::F32,
+        };
+        let mut st = NodeState::new(vec![1.0, 1.0], vec![0.0; 2], Pcg64::seed(1));
+        st.snap.copy_from_slice(&[0.0, 0.0]);
+        let mut snapshot = vec![2.0f32, 4.0];
+        let mut publish = vec![0.0f32; 2];
+        let mut cross = vec![0.0f32; 2];
+        let mut rng = Pcg64::seed(9);
+        policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        assert_eq!(publish, vec![1.0, 2.0]); // (S + inc)/2
+        assert_eq!(st.comm, vec![1.0, 2.0]);
+        assert_eq!(st.params, vec![2.0, 3.0]); // (S + inc)/2 + delta
+        assert_eq!(cross, publish, "symmetric policy cross-writes the pair average");
+    }
+
+    #[test]
+    fn pairwise_live_merge_averages_live_models() {
+        let (dim, n) = (2, 4);
+        let (backend, graph, cost) = ctx_fixture(dim, n);
+        let ctx = StepCtx { backend: &backend, cost: &cost, graph: &graph, lr: 0.0, dim, n };
+        let policy = PairwisePolicy {
+            steps: LocalSteps::Fixed(1),
+            merge: PairMerge::Live,
+            wire: WireCodec::F32,
+        };
+        let mut st = NodeState::new(vec![1.0, 3.0], vec![0.0; 2], Pcg64::seed(1));
+        let mut snapshot = vec![3.0f32, -1.0];
+        let mut publish = vec![0.0f32; 2];
+        let mut cross = vec![0.0f32; 2];
+        let mut rng = Pcg64::seed(9);
+        policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        assert_eq!(st.params, vec![2.0, 1.0]);
+        assert_eq!(publish, vec![2.0, 1.0]);
+        assert_eq!(cross, publish);
+    }
+}

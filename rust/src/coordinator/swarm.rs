@@ -196,8 +196,19 @@ impl Algorithm for SwarmSgd {
         self.interact_pair(ev, parts, ctx)
     }
 
-    fn gossip_profile(&self) -> Option<super::GossipProfile> {
-        Some(super::GossipProfile { local_steps: self.local_steps, mode: self.mode })
+    /// All three averaging modes have free-running semantics: plain-model
+    /// slots, with the quantized variant decomposed into its two real axes
+    /// (non-blocking merge + lattice wire codec).
+    fn mix_policy(&self) -> Option<Box<dyn super::MixPolicy>> {
+        use super::{PairMerge, PairwisePolicy, WireCodec};
+        let (merge, wire) = match self.mode {
+            AveragingMode::Blocking => (PairMerge::Live, WireCodec::F32),
+            AveragingMode::NonBlocking => (PairMerge::NonBlocking, WireCodec::F32),
+            AveragingMode::Quantized { bits, eps } => {
+                (PairMerge::NonBlocking, WireCodec::Lattice { bits, eps })
+            }
+        };
+        Some(Box::new(PairwisePolicy { steps: self.local_steps, merge, wire }))
     }
 }
 

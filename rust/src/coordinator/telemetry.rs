@@ -134,6 +134,14 @@ pub struct FreerunStats {
     /// real (wall-clock) interactions per second — the throughput number
     /// the paper's non-blocking claim is about
     pub interactions_per_sec: f64,
+    /// wire codec the run's mix policy used (`"f32"` | `"lattice"`)
+    pub codec: String,
+    /// bits the codec put on the simulated wire (the freerun attribution
+    /// of `RunMetrics::total_bits`)
+    pub wire_bits: u64,
+    /// lattice decode failures that fell back to full precision (the
+    /// freerun attribution of `RunMetrics::quant_fallbacks`)
+    pub wire_fallbacks: u64,
     /// seqlock read retries (reader raced a concurrent slot write)
     pub slot_read_retries: u64,
     /// publish CAS retries by slot owners (racing a cross-write)
@@ -217,12 +225,93 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_every_quantile_is_zero() {
+        // a worker that executed no interactions merges an empty histogram;
+        // every quantile (including the clamped out-of-range ones) must be
+        // the 0 sentinel, never a panic or an overflow-bucket max
+        let h = StalenessHistogram::new(4);
+        for q in [-1.0, 0.0, 0.25, 0.5, 0.99, 1.0, 2.0] {
+            assert_eq!(h.quantile(q), 0, "q={q}");
+        }
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[test]
+    fn single_sample_histogram_reports_that_sample_at_every_quantile() {
+        // one observation: rank arithmetic degenerates to (count-1)=0, so
+        // every quantile must return the single value — both in the exact
+        // range and from the overflow bucket
+        for v in [0u64, 3, 500] {
+            let mut h = StalenessHistogram::new(8);
+            h.record(v);
+            assert_eq!(h.count(), 1);
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(h.quantile(q), v, "v={v} q={q}");
+            }
+            assert_eq!(h.max_observed(), v);
+            assert!((h.mean() - v as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative_across_workers() {
+        // the executor folds per-worker histograms in worker order; the
+        // result must not depend on that order or grouping, even with
+        // mismatched capacities (overflow vs exact buckets)
+        let mk = |cap: usize, vals: &[u64]| {
+            let mut h = StalenessHistogram::new(cap);
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = || mk(4, &[0, 1, 9]); // 9 overflows cap 4
+        let b = || mk(16, &[2, 9, 30]);
+        let c = || mk(2, &[1, 1, 700]);
+        // (a ⊕ b) ⊕ c
+        let mut left = a();
+        left.merge(&b());
+        left.merge(&c());
+        // a ⊕ (b ⊕ c)
+        let mut bc = b();
+        bc.merge(&c());
+        let mut right = a();
+        right.merge(&bc);
+        // c ⊕ (a ⊕ b): commuted outer order
+        let mut ab = a();
+        ab.merge(&b());
+        let mut comm = c();
+        comm.merge(&ab);
+        for h in [&left, &right, &comm] {
+            assert_eq!(h.count(), 9);
+            assert_eq!(h.max_observed(), 700);
+            assert!((h.mean() - (0 + 1 + 9 + 2 + 9 + 30 + 1 + 1 + 700) as f64 / 9.0).abs()
+                < 1e-12);
+        }
+        for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), right.quantile(q), "q={q}");
+            assert_eq!(left.quantile(q), comm.quantile(q), "q={q}");
+        }
+        // merging an empty histogram is the identity
+        let mut with_empty = a();
+        with_empty.merge(&StalenessHistogram::new(64));
+        let base = a();
+        assert_eq!(with_empty.count(), base.count());
+        assert_eq!(with_empty.p50(), base.p50());
+        assert_eq!(with_empty.max_observed(), base.max_observed());
+    }
+
+    #[test]
     fn stats_totals_sum_workers() {
         let s = FreerunStats {
             threads: 2,
             shards: 4,
             wall_secs: 1.0,
             interactions_per_sec: 100.0,
+            codec: "f32".into(),
+            wire_bits: 0,
+            wire_fallbacks: 0,
             slot_read_retries: 0,
             slot_publish_retries: 0,
             slot_push_conflicts: 0,

@@ -141,6 +141,7 @@ pub fn run_arm(
             local_steps: arm.local_steps,
             mode: arm.mode,
             h_localsgd: arm.h_localsgd,
+            ..AlgoOptions::default()
         },
     )?;
     let run = RunSpec {

@@ -43,6 +43,15 @@
 //!   softmax / logistic gradient oracles and the PJRT-compiled models. One
 //!   `&self + Sync` trait; all stochasticity comes from the caller's
 //!   [`rngx::Pcg64`] stream.
+//! * **Wire codec** ([`coordinator::WireCodec`], CLI `--wire lattice|f32`):
+//!   whether model payloads cross the simulated wire lattice-quantized
+//!   (Appendix G; `quant_bits`/`quant_eps`) or at full precision — a
+//!   per-algorithm axis honored by *all three* executors, with bits and
+//!   decode-fallbacks attributed through [`coordinator::EventOutcome`] and
+//!   the freerun telemetry. (`mode=quantized` is the swarm/poisson
+//!   spelling of non-blocking merge + lattice wire; localsgd/allreduce mix
+//!   through full-precision collectives and reject `--wire lattice` with
+//!   an actionable error.)
 //! * **Executor** (CLI `--executor serial|parallel|freerun --threads K
 //!   [--shards S]`): three generic drivers over
 //!   `&dyn Algorithm × &dyn Backend`, split into two contract classes:
@@ -80,15 +89,23 @@
 //! `BENCH_parallel.json` / `BENCH_freerun.json` rows to the committed
 //! perf trajectory) on every push and PR.
 //!
-//! Freerun eligibility follows from *pairwise mixing*, not from being a
-//! gossip algorithm per se: swarm, poisson, and adpsgd schedule 2-node
-//! `Gossip` events, and dpsgd's per-round matching average decomposes into
-//! per-edge `Gossip` events — all four advertise the
-//! [`coordinator::GossipProfile`] that admits them to the free-running
-//! executor. sgp (push-sum), localsgd, and allreduce (global mean) mix
-//! over the whole cluster at once; they parallelize on the replay
-//! executors through their phased compute events but have no free-running
-//! semantics and refuse `--executor freerun`.
+//! Freerun eligibility is an open API: an algorithm is admitted by
+//! returning an object-safe [`coordinator::MixPolicy`] from
+//! [`Algorithm::mix_policy`](coordinator::Algorithm::mix_policy). A policy
+//! owns the slot payload it publishes ([`coordinator::SlotPayload`]:
+//! [`coordinator::PlainModel`] snapshots, or [`coordinator::PushSumWeighted`]
+//! `(x, w)` pairs — the seqlock `ModelSlot` is generic over the layout),
+//! the merge rule the initiator applies to a possibly-stale partner
+//! snapshot, the local-step policy per interaction, and the wire codec.
+//! swarm, poisson, adpsgd, and dpsgd use the plain-model
+//! [`coordinator::PairwisePolicy`]; sgp — formerly refused for its global
+//! push-sum — freeruns through the weighted-slot
+//! [`coordinator::PushSumPolicy`]: `x` and `w` cross the wire and merge by
+//! the same linear rule, so the de-biased `Σx/Σw` consensus stays correct
+//! under staleness and dropped cross-writes. localsgd and allreduce mix
+//! through an irreducible global mean; they parallelize on the replay
+//! executors through their phased compute events but return no policy and
+//! refuse `--executor freerun` with an actionable error.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

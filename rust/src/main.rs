@@ -8,9 +8,11 @@
 //! serial/parallel replay the pre-drawn schedule and agree bit-for-bit per
 //! seed — since the phased-event redesign that includes the round-based
 //! baselines, whose per-node compute events spread across all workers;
-//! freerun is the free-running sharded runtime (pairwise-mixing algorithms:
-//! swarm, poisson, adpsgd, dpsgd) that trades replayability for real
-//! contention/staleness telemetry.
+//! freerun is the free-running sharded runtime (algorithms with a
+//! `MixPolicy`: swarm, poisson, adpsgd, dpsgd, and sgp via weighted
+//! push-sum slots) that trades replayability for real contention/staleness
+//! telemetry. `--wire lattice|f32` selects the wire codec on every
+//! executor.
 
 use std::path::Path;
 use swarm_sgd::backend::Backend;
@@ -108,7 +110,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in ["algorithm", "executor", "threads", "shards"] {
+    for key in ["algorithm", "executor", "threads", "shards", "wire"] {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
@@ -126,6 +128,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
             local_steps: cfg.local_steps(),
             mode: cfg.averaging_mode()?,
             h_localsgd: cfg.h.round().max(0.0) as u64,
+            wire: cfg.wire_codec()?,
         },
     )?;
     let backend = build_backend(&cfg)?;
@@ -160,11 +163,12 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
             run_parallel(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads)
         }
         "freerun" => {
-            if algo.gossip_profile().is_none() {
+            if algo.mix_policy().is_none() {
                 return Err(format!(
-                    "--executor freerun requires pairwise mixing (freerun-eligible: \
-                     swarm, poisson, adpsgd, dpsgd); '{}' mixes globally per round — \
-                     use --executor serial|parallel",
+                    "--executor freerun requires a free-running MixPolicy \
+                     (freerun-eligible: swarm, poisson, adpsgd, dpsgd, and sgp via \
+                     weighted push-sum slots); '{}' mixes through an irreducible \
+                     global mean — use --executor serial|parallel",
                     cfg.algo
                 ));
             }
@@ -226,6 +230,7 @@ fn report_run(
         println!(
             "\nfreerun telemetry ({} thread(s) × {} shard(s), wall {:.2}s):\n\
              real throughput  : {:.0} interactions/s\n\
+             wire codec       : {} ({:.3} GB on the wire, {} decode fallbacks)\n\
              staleness (events): p50={} p99={} max={} mean={:.1}\n\
              slot contention  : {} read retries, {} publish retries, \
              {} dropped cross-writes\n\
@@ -234,6 +239,9 @@ fn report_run(
             fr.shards,
             fr.wall_secs,
             fr.interactions_per_sec,
+            fr.codec,
+            fr.wire_bits as f64 / 8e9,
+            fr.wire_fallbacks,
             fr.staleness.p50(),
             fr.staleness.p99(),
             fr.staleness.max_observed(),

@@ -4,23 +4,26 @@
 //! so unlike `tests/parallel_executor.rs` nothing here asserts bit
 //! equality — the contract is statistical:
 //!
-//! 1. **Coverage**: every pairwise-mixing algorithm (swarm, poisson,
-//!    adpsgd, and — since the phased-event redesign decomposed its
-//!    matching average into per-edge events — dpsgd) runs end-to-end with
-//!    `n ≥ 8×` the thread count, and the globally-mixing baselines refuse
-//!    (no [`GossipProfile`]).
+//! 1. **Coverage**: every algorithm with a [`MixPolicy`] runs end-to-end
+//!    with `n ≥ 8×` the thread count — the pairwise-mixing four (swarm,
+//!    poisson, adpsgd, dpsgd) over plain-model slots AND, since the
+//!    `MixPolicy` redesign, sgp over weighted push-sum `(x, w)` slots —
+//!    while the globally-mixing baselines (localsgd, allreduce) refuse
+//!    (no policy).
 //! 2. **Telemetry**: the run reports nonzero staleness, real
-//!    interactions/sec, and per-worker accounting that sums to the total.
-//! 3. **Convergence sanity**: a quadratic-oracle freerun run lands in the
-//!    same loss ballpark as `run_serial` (tolerance-based), guarding
-//!    against silent divergence in the lock-free slot path.
+//!    interactions/sec, per-worker accounting that sums to the total, and
+//!    the wire codec's bit/fallback attribution.
+//! 3. **Convergence sanity**: quadratic-oracle freerun runs (swarm, dpsgd,
+//!    and sgp's Σx/Σw de-biased consensus) land in the same loss ballpark
+//!    as `run_serial` (tolerance-based), guarding against silent
+//!    divergence in the lock-free slot path.
 //!
-//! [`GossipProfile`]: swarm_sgd::coordinator::GossipProfile
+//! [`MixPolicy`]: swarm_sgd::coordinator::MixPolicy
 
 use swarm_sgd::backend::Backend;
 use swarm_sgd::coordinator::{
     make_algorithm, run_freerun, run_serial, AlgoOptions, Algorithm, AveragingMode, LocalSteps,
-    LrSchedule, RunSpec, SwarmSgd,
+    LrSchedule, MixPolicy, PayloadKind, RunSpec, SwarmSgd, WireCodec,
 };
 use swarm_sgd::grad::QuadraticOracle;
 use swarm_sgd::netmodel::CostModel;
@@ -49,14 +52,21 @@ fn spec(n: usize, t: u64, eval_every: u64) -> RunSpec {
 }
 
 #[test]
-fn freerun_runs_every_gossip_algorithm_with_sharded_nodes() {
-    // n = 8 × threads: node-sharding must carry n >> cores
+fn freerun_runs_every_policy_algorithm_with_sharded_nodes() {
+    // n = 8 × threads: node-sharding must carry n >> cores. sgp is in the
+    // loop — the MixPolicy redesign's acceptance criterion — running over
+    // weighted (x, w) slots rather than plain model snapshots.
     let n = 32;
     let threads = 4;
     let t = 600u64;
-    for name in ["swarm", "poisson", "adpsgd", "dpsgd"] {
+    for name in ["swarm", "poisson", "adpsgd", "dpsgd", "sgp"] {
         let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
-        assert!(algo.gossip_profile().is_some(), "{name} must be freerun-capable");
+        let policy = algo.mix_policy().expect("must be freerun-capable");
+        if name == "sgp" {
+            assert_eq!(policy.payload(), PayloadKind::PushSumWeighted, "{name}");
+        } else {
+            assert_eq!(policy.payload(), PayloadKind::Plain, "{name}");
+        }
         let backend = quad(n, 32, 0.1);
         let cost = CostModel::deterministic(0.4);
         let m =
@@ -86,39 +96,111 @@ fn freerun_runs_every_gossip_algorithm_with_sharded_nodes() {
             "{name}: per-worker interaction counts must sum to the total"
         );
         assert!(fr.busy_total() > 0.0);
+        // wire attribution: the default policies run the f32 codec, and
+        // the freerun stats carry the full bit/fallback attribution
+        assert_eq!(fr.codec, "f32", "{name}");
+        assert_eq!(fr.wire_bits, m.total_bits, "{name}");
+        assert_eq!(fr.wire_fallbacks, m.quant_fallbacks, "{name}");
+        assert!(fr.wire_bits > 0, "{name}: nothing crossed the wire");
     }
 }
 
 #[test]
 fn globally_mixing_algorithms_refuse_freerun() {
-    // sgp (push-sum), localsgd and allreduce (global mean) mix over the
-    // whole cluster at once — no pairwise decomposition, so no profile.
-    // dpsgd is deliberately NOT in this list anymore: its matching average
-    // decomposed into per-edge events, making it the fourth
-    // freerun-eligible algorithm.
-    for name in ["sgp", "localsgd", "allreduce"] {
+    // localsgd and allreduce mix through an irreducible global mean — no
+    // initiator-driven decomposition, so no MixPolicy. sgp is deliberately
+    // NOT in this list anymore: weighted (x, w) slots gave push-sum a
+    // free-running policy.
+    for name in ["localsgd", "allreduce"] {
         let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
         assert!(
-            algo.gossip_profile().is_none(),
-            "{name} mixes globally per round; it must not advertise a gossip profile"
+            algo.mix_policy().is_none(),
+            "{name} mixes through a global mean; it must not return a mix policy"
         );
     }
+    for name in ["swarm", "poisson", "adpsgd", "dpsgd", "sgp"] {
+        assert!(
+            make_algorithm(name, &AlgoOptions::default())
+                .unwrap()
+                .mix_policy()
+                .is_some(),
+            "{name} must be freerun-eligible"
+        );
+    }
+}
+
+#[test]
+fn freerun_sgp_conserves_debiased_mass_at_lr_zero() {
+    // push-sum's defining invariant, surviving the weighted-slot freerun:
+    // with lr = 0 every (x, w) pair anywhere (state or slot) stays
+    // (c·x0, c) for a scalar c — takes halve, absorbs sum, always the SAME
+    // linear ops on both lanes — so the de-biased consensus Σx/Σw (and
+    // every individual z = x/w) equals the common init model up to f32
+    // rounding, regardless of staleness, interleaving, or dropped
+    // cross-writes.
+    let n = 16;
+    let backend = quad(n, 16, 0.1);
+    let (p0, _) = backend.init();
+    let init_loss = backend.eval(&p0).loss;
+    let algo = make_algorithm("sgp", &AlgoOptions::default()).unwrap();
+    let cost = CostModel::deterministic(0.1);
+    let mut s = spec(n, 1500, 300);
+    s.lr = LrSchedule::Constant(0.0);
+    let m = run_freerun(algo.as_ref(), &backend, &s, &graph(n), &cost, 4, 8);
+    assert_eq!(m.interactions, 1500);
+    let final_loss = m.final_eval_loss;
     assert!(
-        make_algorithm("dpsgd", &AlgoOptions::default())
-            .unwrap()
-            .gossip_profile()
-            .is_some(),
-        "dpsgd's per-edge mixing makes it freerun-eligible"
+        (final_loss - init_loss).abs() < 1e-3 * init_loss.abs().max(1.0),
+        "weighted-slot consensus drifted at lr=0: {init_loss} -> {final_loss}"
     );
 }
 
 #[test]
+fn freerun_sgp_convergence_matches_serial_ballpark() {
+    // the redesign's payoff scenario: --algorithm sgp --executor freerun
+    // runs end-to-end via weighted slots and its Σx/Σw de-biased consensus
+    // lands in the same loss ballpark as the serial push-sum reference.
+    // Budgets are step-matched: serial runs t/n synchronous rounds (n
+    // de-biased steps each), freerun runs t interactions (1 step each).
+    let n = 16;
+    let t = 4800u64; // 300 serial rounds (sgp needs more rounds than dpsgd)
+    let backend = quad(n, 16, 0.1);
+    let f_star = backend.f_star();
+    let gap0 = {
+        let (p, _) = backend.init();
+        backend.eval(&p).loss - f_star
+    };
+    let algo = make_algorithm("sgp", &AlgoOptions::default()).unwrap();
+    let cost = CostModel::deterministic(0.4);
+    let g = graph(n);
+    let serial = run_serial(
+        algo.as_ref(),
+        &backend,
+        &spec(n, t / n as u64, 50),
+        &g,
+        &cost,
+    );
+    let free = run_freerun(algo.as_ref(), &backend, &spec(n, t, 1000), &g, &cost, 4, 8);
+    assert_eq!(free.executor, "freerun");
+    assert_eq!(free.interactions, t);
+    let gap_serial = (serial.final_eval_loss - f_star) / gap0;
+    let gap_free = (free.final_eval_loss - f_star) / gap0;
+    assert!(gap_serial < 0.15, "serial sgp reference off the rails: {gap_serial}");
+    assert!(
+        gap_free < 0.2,
+        "freerun sgp normalized gap {gap_free} vs serial {gap_serial} — \
+         the weighted-slot de-biasing diverged"
+    );
+    let fr = free.freerun.as_ref().unwrap();
+    assert_eq!(fr.staleness.count(), t);
+}
+
+#[test]
 fn freerun_dpsgd_convergence_matches_serial_ballpark() {
-    // the redesign's payoff scenario: --executor freerun --algorithm dpsgd
-    // runs (no refusal) and lands in the same loss ballpark as the serial
-    // reference. Budgets are step-matched: the serial reference runs
-    // t/n phased rounds (n steps each), freerun runs t pairwise
-    // interactions (1 step each).
+    // --executor freerun --algorithm dpsgd runs (no refusal) and lands in
+    // the same loss ballpark as the serial reference. Budgets are
+    // step-matched: the serial reference runs t/n phased rounds (n steps
+    // each), freerun runs t pairwise interactions (1 step each).
     let n = 16;
     let t = 2400u64;
     let backend = quad(n, 16, 0.1);
@@ -182,7 +264,42 @@ fn freerun_convergence_matches_serial_ballpark() {
 }
 
 #[test]
+fn freerun_lattice_wire_saves_bits_and_is_attributed() {
+    // the wire-codec axis on the free-running executor: the same merge
+    // rule over the lattice codec moves < 50% of the full-precision bits,
+    // and the codec's accounting reaches FreerunStats
+    let n = 16;
+    let t = 500u64;
+    let g = graph(n);
+    let cost = CostModel::deterministic(0.4);
+    let run = |wire: WireCodec| {
+        let backend = quad(n, 256, 0.05);
+        let algo = make_algorithm("swarm", &AlgoOptions { wire, ..AlgoOptions::default() })
+            .unwrap();
+        run_freerun(algo.as_ref(), &backend, &spec(n, t, 0), &g, &cost, 2, 0)
+    };
+    let mq = run(WireCodec::Lattice { bits: 8, eps: 1e-2 });
+    let mf = run(WireCodec::F32);
+    assert!(mq.final_eval_loss.is_finite());
+    assert!(mq.total_bits > 0);
+    assert!(
+        (mq.total_bits as f64) < 0.5 * mf.total_bits as f64,
+        "lattice slots {} bits vs full-precision {} bits (fallbacks {})",
+        mq.total_bits,
+        mf.total_bits,
+        mq.quant_fallbacks
+    );
+    let frq = mq.freerun.as_ref().unwrap();
+    assert_eq!(frq.codec, "lattice");
+    assert_eq!(frq.wire_bits, mq.total_bits);
+    assert_eq!(frq.wire_fallbacks, mq.quant_fallbacks);
+    assert_eq!(mf.freerun.as_ref().unwrap().codec, "f32");
+}
+
+#[test]
 fn freerun_quantized_mode_saves_wire_bits() {
+    // mode=quantized (the swarm/poisson spelling of nonblocking + lattice
+    // wire) keeps working through the policy mapping
     let n = 16;
     let t = 500u64;
     let g = graph(n);
@@ -203,6 +320,7 @@ fn freerun_quantized_mode_saves_wire_bits() {
         mf.total_bits,
         mq.quant_fallbacks
     );
+    assert_eq!(mq.freerun.as_ref().unwrap().codec, "lattice");
 }
 
 #[test]
