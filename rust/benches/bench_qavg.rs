@@ -1,0 +1,115 @@
+//! Fused quantize-average microbench: per-element cost of the merge inner
+//! loop, two-pass reference vs the fused kernels (`--kernel scalar|simd`),
+//! on both wire paths.
+//!
+//! * **f32**: copy the partner snapshot + separate midpoint sweep (two
+//!   traversals, the pre-fusion shape) vs `kernels::avg_into` (one).
+//! * **lattice**: `quantized_transfer` (encode → pack → unpack → decode,
+//!   allocating the decoded vector) + separate midpoint sweep vs
+//!   `kernels::lattice_qavg_into` (decode + average in one traversal into
+//!   a caller buffer, zero allocation).
+//!
+//! All variants produce bit-identical outputs (pinned by
+//! `tests/fused_kernels.rs`), so the rows compare cost only. Rows are
+//! kernel-tagged and appended to `BENCH_qavg.json`; CI compiles this bench
+//! as a blocking gate and records the JSON non-blockingly. `-- --test`
+//! runs the reduced smoke configuration.
+
+use std::io::Write;
+use swarm_sgd::bench::Bench;
+use swarm_sgd::coordinator::quantized_transfer;
+use swarm_sgd::kernels::{avg_into, lattice_qavg_into, Kernel};
+use swarm_sgd::rngx::Pcg64;
+
+fn row_json(path: &str, implname: &str, kernel: &str, dim: usize, median_ns: u128) -> String {
+    let per_elem = median_ns as f64 / dim as f64;
+    format!(
+        "    {{\"path\": \"{path}\", \"impl\": \"{implname}\", \"kernel\": \"{kernel}\", \
+         \"dim\": {dim}, \"median_ns\": {median_ns}, \"ns_per_elem\": {per_elem:.4}}}"
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let mut b = if smoke { Bench::quick() } else { Bench::default() };
+    let d: usize = if smoke { 1 << 14 } else { 1 << 20 };
+    let (eps, bits, seed) = (1e-3f32, 8u32, 7u32);
+
+    // close pair: the checksum criterion holds, so no run falls back and
+    // every variant times the quantized fast path
+    let mut rng = Pcg64::seed(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<f32> = x.iter().map(|v| v + 0.001).collect();
+    let mut out = vec![0.0f32; d];
+
+    println!("== fused quantize-average (d = {d} coords, 8-bit lattice) ==");
+
+    let mut rows: Vec<String> = Vec::new();
+
+    // ---- f32 path -------------------------------------------------------
+    let r = b
+        .run_elems("f32 two-pass (copy + midpoint)", d as u64, || {
+            out.copy_from_slice(&x);
+            for (o, &l) in out.iter_mut().zip(&y) {
+                *o = 0.5 * (l + *o);
+            }
+            out[0]
+        })
+        .median
+        .as_nanos();
+    rows.push(row_json("f32", "two-pass", "-", d, r));
+    for kern in [Kernel::Scalar, Kernel::Simd] {
+        let r = b
+            .run_elems(&format!("f32 fused avg_into [{}]", kern.name()), d as u64, || {
+                avg_into(kern, &x, &y, &mut out);
+                out[0]
+            })
+            .median
+            .as_nanos();
+        rows.push(row_json("f32", "fused", kern.name(), d, r));
+    }
+
+    // ---- lattice path ---------------------------------------------------
+    let tr = quantized_transfer(&x, &y, eps, bits, seed);
+    assert!(!tr.fell_back, "bench workload must stay on the quantized path");
+    let r = b
+        .run_elems("lattice two-pass (transfer + midpoint)", d as u64, || {
+            let tr = quantized_transfer(&x, &y, eps, bits, seed);
+            for (o, (&l, &dec)) in out.iter_mut().zip(y.iter().zip(&tr.decoded)) {
+                *o = 0.5 * (l + dec);
+            }
+            out[0]
+        })
+        .median
+        .as_nanos();
+    rows.push(row_json("lattice", "two-pass", "-", d, r));
+    for kern in [Kernel::Scalar, Kernel::Simd] {
+        let r = b
+            .run_elems(
+                &format!("lattice fused qavg_into [{}]", kern.name()),
+                d as u64,
+                || {
+                    let (bits, fb) = lattice_qavg_into(kern, &x, &y, eps, bits, seed, &mut out);
+                    assert!(!fb);
+                    bits
+                },
+            )
+            .median
+            .as_nanos();
+        rows.push(row_json("lattice", "fused", kern.name(), d, r));
+    }
+
+    b.write_csv("results/bench_qavg.csv").ok();
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_qavg\",\n  \"workload\": \
+         {{\"dim\": {d}, \"bits\": {bits}, \"eps\": {eps}, \"smoke\": {smoke}}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::File::create("BENCH_qavg.json").and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("wrote BENCH_qavg.json"),
+        Err(e) => eprintln!("could not write BENCH_qavg.json: {e}"),
+    }
+}

@@ -92,13 +92,13 @@ USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
                 [--algorithm swarm|poisson|adpsgd|dpsgd|sgp|localsgd|allreduce]
                 [--executor serial|parallel|freerun] [--threads K] [--shards S]
-                [--wire lattice|f32]
+                [--wire lattice|f32] [--kernel scalar|simd]
                 train one algorithm on one backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, wire, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
                 shard, data_per_agent, artifacts_dir, batch_time, jitter,
                 straggler_prob, straggle_factor, latency, bandwidth,
-                model_bytes, out_csv, executor, threads, shards
+                model_bytes, out_csv, executor, threads, shards, kernel
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
@@ -130,6 +130,13 @@ USAGE:
                 precedence over --wire f32 (the default) — to run full
                 precision, set mode=nonblocking. localsgd and allreduce
                 (full-precision collectives) reject lattice.
+                --kernel scalar|simd picks the fused quantize-average
+                merge-kernel implementation on every executor: scalar is
+                the one-element-at-a-time reference, simd processes
+                8-element chunks the compiler auto-vectorizes. Both are
+                bit-exact (identical per-lane math, checksums folded in
+                element order), so this is a pure performance axis; the
+                choice is tagged in the run summary and bench rows.
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]

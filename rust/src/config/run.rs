@@ -89,6 +89,10 @@ pub struct RunConfig {
     /// default (one shard per worker); explicitly setting `shards=0` is
     /// rejected at parse time with an actionable error
     pub shards: usize,
+    /// scalar | simd — which fused merge-kernel implementation every
+    /// interaction dispatches to (`--kernel`). Both are bit-exact, so this
+    /// is a pure performance axis; `scalar` is the reference default.
+    pub kernel: String,
 }
 
 impl Default for RunConfig {
@@ -124,6 +128,7 @@ impl Default for RunConfig {
             executor: "serial".into(),
             threads: 0,
             shards: 0,
+            kernel: "scalar".into(),
         }
     }
 }
@@ -239,6 +244,14 @@ impl RunConfig {
                 }
                 self.shards = s;
             }
+            "kernel" => match value {
+                "scalar" | "simd" => self.kernel = value.into(),
+                _ => {
+                    return Err(format!(
+                        "bad value '{value}' for key 'kernel' (want scalar or simd)"
+                    ))
+                }
+            },
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -288,6 +301,11 @@ impl RunConfig {
             "lattice" => WireCodec::Lattice { bits: self.quant_bits, eps: self.quant_eps },
             w => return Err(format!("unknown wire codec '{w}' (want f32 or lattice)")),
         })
+    }
+
+    /// The fused merge-kernel selector (`--kernel scalar|simd`).
+    pub fn kernel_enum(&self) -> Result<crate::kernels::Kernel, String> {
+        crate::kernels::Kernel::parse(&self.kernel)
     }
 
     pub fn lr_schedule_enum(&self) -> Result<LrSchedule, String> {
@@ -447,6 +465,22 @@ mod tests {
         let err = c.set("wire", "fp16").unwrap_err();
         assert!(err.contains("f32 or lattice"), "unhelpful error: {err}");
         assert_eq!(c.wire, "lattice", "bad value must not clobber the setting");
+    }
+
+    #[test]
+    fn kernel_key_parses_and_validates() {
+        use crate::kernels::Kernel;
+        let mut c = RunConfig::default();
+        assert_eq!(c.kernel, "scalar");
+        assert_eq!(c.kernel_enum().unwrap(), Kernel::Scalar);
+        c.set("kernel", "simd").unwrap();
+        assert_eq!(c.kernel_enum().unwrap(), Kernel::Simd);
+        let err = c.set("kernel", "avx1024").unwrap_err();
+        assert!(err.contains("scalar or simd"), "unhelpful error: {err}");
+        assert_eq!(c.kernel, "simd", "bad value must not clobber the setting");
+        let c = RunConfig::from_ini("[run]\nkernel = scalar\n").unwrap();
+        assert_eq!(c.kernel_enum().unwrap(), Kernel::Scalar);
+        assert!(RunConfig::from_ini("[run]\nkernel = gpu\n").is_err());
     }
 
     #[test]

@@ -335,6 +335,34 @@ pub trait Algorithm: Sync {
         ctx: &StepCtx<'_>,
     ) -> EventOutcome;
 
+    /// [`Algorithm::interact`] with a caller-provided per-worker
+    /// [`super::MergeScratch`] — the allocation-free entry point every
+    /// executor calls. The default forwards to [`Algorithm::interact`]
+    /// (correct for algorithms whose interact bodies never touch the
+    /// scratch); the quantized-merge algorithms override this with their
+    /// real body and turn `interact` into a compatibility wrapper that
+    /// builds a transient scratch.
+    fn interact_with(
+        &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+        scratch: &mut super::MergeScratch,
+    ) -> EventOutcome {
+        let _ = scratch;
+        self.interact(t, ev, parts, ctx)
+    }
+
+    /// The fused merge kernel this algorithm's interactions dispatch to —
+    /// the `--kernel` axis. Default scalar; [`make_algorithm`] wraps the
+    /// algorithm when another kernel is selected, and the executors read
+    /// this once per run to size their per-worker
+    /// [`super::MergeScratch`]es and tag [`super::RunMetrics`].
+    fn kernel(&self) -> crate::kernels::Kernel {
+        crate::kernels::Kernel::Scalar
+    }
+
     /// The paper's parallel-time axis for event count `t`: gossip events
     /// advance it by 1/n (default); synchronous rounds by 1.
     fn parallel_time(&self, t: u64, n: usize) -> f64 {
@@ -463,6 +491,10 @@ pub struct AlgoOptions {
     /// lattice codec for swarm/poisson; for the other pairwise-mixing
     /// algorithms this is the only quantization switch.
     pub wire: super::WireCodec,
+    /// fused merge kernel (`--kernel scalar|simd`) — which implementation
+    /// the decode + merge traversals dispatch to. Both are bit-exact, so
+    /// this is a pure performance axis, valid on every executor.
+    pub kernel: crate::kernels::Kernel,
 }
 
 impl Default for AlgoOptions {
@@ -472,6 +504,7 @@ impl Default for AlgoOptions {
             mode: super::AveragingMode::NonBlocking,
             h_localsgd: 5,
             wire: super::WireCodec::F32,
+            kernel: crate::kernels::Kernel::Scalar,
         }
     }
 }
@@ -516,11 +549,74 @@ fn reject_lattice(name: &str, opts: &AlgoOptions) -> Result<(), String> {
     Ok(())
 }
 
+/// Delegating wrapper [`make_algorithm`] applies when a non-default kernel
+/// is selected, so the algorithm structs themselves stay kernel-free (their
+/// literal constructors — used all over the tests — don't change). Only
+/// [`Algorithm::kernel`] is overridden; everything else forwards.
+struct WithKernel {
+    inner: Box<dyn Algorithm>,
+    kernel: crate::kernels::Kernel,
+}
+
+impl Algorithm for WithKernel {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn schedule(
+        &self,
+        n: usize,
+        events: u64,
+        graph: &Graph,
+        rng: &mut Pcg64,
+    ) -> InteractionSchedule {
+        self.inner.schedule(n, events, graph, rng)
+    }
+
+    fn interact(
+        &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let mut scratch = super::MergeScratch::with_kernel(ctx.dim, self.kernel);
+        self.inner.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+        scratch: &mut super::MergeScratch,
+    ) -> EventOutcome {
+        self.inner.interact_with(t, ev, parts, ctx, scratch)
+    }
+
+    fn kernel(&self) -> crate::kernels::Kernel {
+        self.kernel
+    }
+
+    fn parallel_time(&self, t: u64, n: usize) -> f64 {
+        self.inner.parallel_time(t, n)
+    }
+
+    fn round_metrics(&self, states: &[&NodeState], pick: usize) -> RoundModels {
+        self.inner.round_metrics(states, pick)
+    }
+
+    fn mix_policy(&self) -> Option<Box<dyn super::MixPolicy>> {
+        self.inner.mix_policy()
+    }
+}
+
 /// Build an algorithm by its `--algorithm` selector name.
 pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorithm>, String> {
     use super::baselines::{AdPsgd, AllReduce, DPsgd, LocalSgd, Sgp};
     use super::{PoissonSwarm, SwarmSgd};
-    Ok(match name {
+    let algo: Box<dyn Algorithm> = match name {
         "swarm" => {
             Box::new(SwarmSgd { local_steps: opts.local_steps, mode: swarm_mode(opts)? })
         }
@@ -550,6 +646,11 @@ pub fn make_algorithm(name: &str, opts: &AlgoOptions) -> Result<Box<dyn Algorith
                 ALGORITHM_NAMES.join("|")
             ))
         }
+    };
+    Ok(if opts.kernel == crate::kernels::Kernel::Scalar {
+        algo
+    } else {
+        Box::new(WithKernel { inner: algo, kernel: opts.kernel })
     })
 }
 
@@ -700,6 +801,22 @@ mod tests {
         // f32 wire (the default) never restricts anything
         for name in ALGORITHM_NAMES {
             assert!(make_algorithm(name, &AlgoOptions::default()).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn factory_wraps_non_default_kernels_transparently() {
+        use crate::kernels::Kernel;
+        let opts = AlgoOptions::default();
+        for name in ALGORITHM_NAMES {
+            let a = make_algorithm(name, &opts).unwrap();
+            assert_eq!(a.kernel(), Kernel::Scalar, "{name}");
+        }
+        let simd = AlgoOptions { kernel: Kernel::Simd, ..AlgoOptions::default() };
+        for name in ALGORITHM_NAMES {
+            let a = make_algorithm(name, &simd).unwrap();
+            assert_eq!(a.kernel(), Kernel::Simd, "{name}");
+            assert_eq!(a.name(), *name, "the kernel wrapper must stay transparent");
         }
     }
 

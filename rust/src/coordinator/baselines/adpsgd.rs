@@ -12,10 +12,11 @@
 use crate::coordinator::algorithm::{
     pair, step_once, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
 };
-use crate::coordinator::cluster::average_into_both;
 use crate::coordinator::{
-    codec_exchange_average, LocalSteps, MixPolicy, PairMerge, PairwisePolicy, WireCodec,
+    codec_exchange_average, LocalSteps, MergeScratch, MixPolicy, PairMerge, PairwisePolicy,
+    WireCodec,
 };
+use crate::kernels;
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -56,10 +57,22 @@ impl Algorithm for AdPsgd {
 
     fn interact(
         &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let mut scratch = MergeScratch::with_kernel(ctx.dim, self.kernel());
+        self.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
         _t: u64,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
+        scratch: &mut MergeScratch,
     ) -> EventOutcome {
         let bytes = ctx.cost.wire_bytes(ctx.dim);
         let (ni, nj) = pair(parts);
@@ -70,12 +83,12 @@ impl Algorithm for AdPsgd {
         // (paper Appx B): every iteration pays compute + exchange
         let (bits, fallbacks, exch) = match self.wire {
             WireCodec::F32 => {
-                average_into_both(&mut ni.params, &mut nj.params);
+                kernels::avg_into_both(scratch.kernel, &mut ni.params, &mut nj.params);
                 (2 * 8 * bytes, 0, ctx.cost.exchange_time(bytes))
             }
             codec => {
                 let mut er = Pcg64::seed(ev.seed);
-                let (raw, fb) = codec_exchange_average(ni, nj, codec, &mut er);
+                let (raw, fb) = codec_exchange_average(ni, nj, codec, &mut er, scratch);
                 let wire = ctx.cost.scale_bits(raw, ctx.dim);
                 (wire, fb, ctx.cost.exchange_time(wire.div_ceil(8)))
             }

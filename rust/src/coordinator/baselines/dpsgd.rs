@@ -27,10 +27,11 @@ use crate::coordinator::algorithm::{
     barrier_all, pair, step_once, Algorithm, Event, EventKind, EventOutcome,
     InteractionSchedule, NodeState, StepCtx,
 };
-use crate::coordinator::cluster::average_into_both;
 use crate::coordinator::{
-    codec_exchange_average, LocalSteps, MixPolicy, PairMerge, PairwisePolicy, WireCodec,
+    codec_exchange_average, LocalSteps, MergeScratch, MixPolicy, PairMerge, PairwisePolicy,
+    WireCodec,
 };
+use crate::kernels;
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -79,10 +80,22 @@ impl Algorithm for DPsgd {
 
     fn interact(
         &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let mut scratch = MergeScratch::with_kernel(ctx.dim, self.kernel());
+        self.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
         _t: u64,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
+        scratch: &mut MergeScratch,
     ) -> EventOutcome {
         let bytes = ctx.cost.wire_bytes(ctx.dim);
         match ev.kind {
@@ -98,7 +111,7 @@ impl Algorithm for DPsgd {
                 let (a, b) = pair(parts);
                 let (bits, fallbacks) = match self.wire {
                     WireCodec::F32 => {
-                        average_into_both(&mut a.params, &mut b.params);
+                        kernels::avg_into_both(scratch.kernel, &mut a.params, &mut b.params);
                         (2 * 8 * bytes, 0)
                     }
                     codec => {
@@ -108,7 +121,7 @@ impl Algorithm for DPsgd {
                         let mut er = Pcg64::seed(
                             ev.seed ^ ((ev.nodes[0] as u64) << 32) ^ (ev.nodes[1] as u64),
                         );
-                        let (raw, fb) = codec_exchange_average(a, b, codec, &mut er);
+                        let (raw, fb) = codec_exchange_average(a, b, codec, &mut er, scratch);
                         (ctx.cost.scale_bits(raw, ctx.dim), fb)
                     }
                 };

@@ -24,7 +24,8 @@ use crate::coordinator::algorithm::{
     barrier_all, pair_at, Algorithm, Event, EventKind, EventOutcome, InteractionSchedule,
     NodeState, RoundModels, StepCtx,
 };
-use crate::coordinator::{LocalSteps, MixPolicy, PushSumPolicy, WireCodec};
+use crate::coordinator::{LocalSteps, MergeScratch, MixPolicy, PushSumPolicy, WireCodec};
+use crate::kernels;
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -63,10 +64,22 @@ impl Algorithm for Sgp {
 
     fn interact(
         &self,
+        t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+    ) -> EventOutcome {
+        let mut scratch = MergeScratch::with_kernel(ctx.dim, self.kernel());
+        self.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
         _t: u64,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
+        scratch: &mut MergeScratch,
     ) -> EventOutcome {
         match ev.kind {
             // SGD step on the de-biased model z = x/w, then re-bias the
@@ -128,18 +141,23 @@ impl Algorithm for Sgp {
                             }
                             bits += 8 * bytes + 64; // x halves + weight scalar
                         }
-                        codec => {
+                        WireCodec::Lattice { bits: qbits, eps } => {
                             // the pushed x crosses the codec, decoded
-                            // against the receiver's own x (snap is free
-                            // scratch after the compute phase)
-                            dstst.snap.copy_from_slice(&src.params);
-                            let (b, fb) = codec.decode_in_place(
-                                &mut dstst.snap,
+                            // against the receiver's own x and pre-halved,
+                            // in one fused traversal into the scratch buffer
+                            let (b, fb) = kernels::lattice_take_half_into(
+                                scratch.kernel,
+                                &src.params,
                                 &dstst.params,
+                                eps,
+                                qbits,
                                 cr.next_u32(),
+                                &mut scratch.publish[..ctx.dim],
                             );
-                            for (s, &v) in dstst.inbox.iter_mut().zip(&dstst.snap) {
-                                *s += 0.5 * v;
+                            for (s, &v) in
+                                dstst.inbox.iter_mut().zip(&scratch.publish[..ctx.dim])
+                            {
+                                *s += v;
                             }
                             bits += ctx.cost.scale_bits(b, ctx.dim) + 64;
                             fallbacks += fb as u64;

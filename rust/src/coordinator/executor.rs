@@ -53,6 +53,7 @@
 
 use super::algorithm::{Algorithm, Event, EventKind, NodeState, StepCtx};
 use super::metrics::{CurvePoint, RunMetrics};
+use super::policy::MergeScratch;
 use super::LrSchedule;
 use crate::analysis::gamma_potential;
 use crate::backend::Backend;
@@ -219,6 +220,7 @@ fn run_schedule(
         fallbacks.into_inner(),
         label,
         threads,
+        algo.kernel().name(),
     );
     m
 }
@@ -256,6 +258,9 @@ fn chunk_parallel(sh: &Shared<'_>, end: u64, threads: usize) {
         for _ in 0..threads {
             scope.spawn(|| {
                 let _guard = AbortGuard(&sh.abort);
+                // one merge scratch per worker, reused for every event it
+                // claims — the hot path allocates nothing per interaction
+                let mut scratch = MergeScratch::with_kernel(sh.dim, sh.algo.kernel());
                 loop {
                     let t = sh.cursor.fetch_add(1, Ordering::Relaxed);
                     if t >= end {
@@ -265,7 +270,7 @@ fn chunk_parallel(sh: &Shared<'_>, end: u64, threads: usize) {
                     if !wait_deps(sh, ev) {
                         break;
                     }
-                    execute_event(sh, ev);
+                    execute_event(sh, ev, &mut scratch);
                     // this worker is the unique owner of all participants
                     for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
                         sh.done[k].store(s + 1, Ordering::Release);
@@ -281,6 +286,7 @@ fn chunk_parallel(sh: &Shared<'_>, end: u64, threads: usize) {
 
 /// The single-thread path: plain program order, no spawning.
 fn chunk_serial(sh: &Shared<'_>, end: u64) {
+    let mut scratch = MergeScratch::with_kernel(sh.dim, sh.algo.kernel());
     loop {
         let t = sh.cursor.load(Ordering::Relaxed);
         if t >= end {
@@ -289,7 +295,7 @@ fn chunk_serial(sh: &Shared<'_>, end: u64) {
         sh.cursor.store(t + 1, Ordering::Relaxed);
         let ev = &sh.events[t as usize];
         // program order trivially satisfies the dependency order
-        execute_event(sh, ev);
+        execute_event(sh, ev, &mut scratch);
         for (&k, &s) in ev.nodes.iter().zip(&ev.seq) {
             sh.done[k].store(s + 1, Ordering::Relaxed);
         }
@@ -326,7 +332,7 @@ fn wait_deps(sh: &Shared<'_>, ev: &Event) -> bool {
 /// misroute), take the participants' locks in ascending node order, hand
 /// exclusive borrows to the algorithm in role order, merge the wire
 /// accounting.
-fn execute_event(sh: &Shared<'_>, ev: &Event) {
+fn execute_event(sh: &Shared<'_>, ev: &Event, scratch: &mut MergeScratch) {
     let ctx = StepCtx {
         backend: sh.backend,
         cost: sh.cost,
@@ -350,7 +356,7 @@ fn execute_event(sh: &Shared<'_>, ev: &Event) {
                 (&mut *g_hi, &mut *g_lo)
             };
             let mut parts = [a, b];
-            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+            sh.algo.interact_with(ev.tick, ev, &mut parts, &ctx, scratch)
         }
         EventKind::Compute => {
             // single-node local phase: one lock, no peers — phased rounds
@@ -358,7 +364,7 @@ fn execute_event(sh: &Shared<'_>, ev: &Event) {
             debug_assert_eq!(ev.nodes.len(), 1, "compute events are 1-node");
             let mut g = sh.nodes[ev.nodes[0]].lock().expect("node lock poisoned");
             let mut parts = [&mut *g];
-            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+            sh.algo.interact_with(ev.tick, ev, &mut parts, &ctx, scratch)
         }
         EventKind::Mix => {
             // mixing barrier: lock all participants in ascending node
@@ -379,7 +385,7 @@ fn execute_event(sh: &Shared<'_>, ev: &Event) {
                     slots[rank].take().expect("duplicate participant")
                 })
                 .collect();
-            sh.algo.interact(ev.tick, ev, &mut parts, &ctx)
+            sh.algo.interact_with(ev.tick, ev, &mut parts, &ctx, scratch)
         }
     };
     if outcome.bits > 0 {

@@ -58,7 +58,7 @@
 use super::algorithm::{Algorithm, NodeState, StepCtx};
 use super::executor::{milestones, RunSpec};
 use super::metrics::{CurvePoint, RunMetrics};
-use super::policy::{MixPolicy, PayloadKind, PlainModel, PushSumWeighted, SlotPayload};
+use super::policy::{MergeScratch, MixPolicy, PayloadKind, PlainModel, PushSumWeighted, SlotPayload};
 use super::telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
 use super::LrSchedule;
 use crate::analysis::gamma_potential;
@@ -179,6 +179,8 @@ struct FreeShared<'a, P: SlotPayload> {
     graph: &'a Graph,
     lr: LrSchedule,
     policy: &'a dyn MixPolicy,
+    /// fused merge-kernel implementation every worker's scratch dispatches to
+    kernel: crate::kernels::Kernel,
     slots: Vec<ModelSlot<P>>,
     /// next unclaimed global event index
     claimed: AtomicU64,
@@ -309,6 +311,7 @@ fn freerun_with<P: SlotPayload>(
         graph,
         lr: spec.lr,
         policy,
+        kernel: algo.kernel(),
         slots: (0..n).map(|_| ModelSlot::<P>::new(&p0)).collect(),
         claimed: AtomicU64::new(0),
         done: AtomicU64::new(0),
@@ -447,13 +450,23 @@ fn freerun_with<P: SlotPayload>(
 
     let total_bits = sh.bits.into_inner();
     let quant_fallbacks = sh.fallbacks.into_inner();
-    m.finalize(&states, backend, spec.events, total_bits, quant_fallbacks, "freerun", threads);
+    m.finalize(
+        &states,
+        backend,
+        spec.events,
+        total_bits,
+        quant_fallbacks,
+        "freerun",
+        threads,
+        algo.kernel().name(),
+    );
     m.freerun = Some(FreerunStats {
         threads,
         shards,
         wall_secs,
         interactions_per_sec: spec.events as f64 / wall_secs.max(1e-9),
         codec: policy.wire().name().to_string(),
+        kernel: algo.kernel().name().to_string(),
         wire_bits: total_bits,
         wire_fallbacks: quant_fallbacks,
         slot_read_retries: read_retries,
@@ -498,13 +511,11 @@ fn worker_loop<P: SlotPayload>(
         heap.push(Reverse(Tick { at: rng.exponential(1.0), ix }));
     }
     let lanes = P::lanes(sh.dim);
-    // worker-local payload scratch: the node's own published payload, the
+    // worker-local merge scratch: the node's own published payload, the
     // partner snapshot, and the two payloads the policy produces (its own
-    // republish and the partner cross-write)
-    let mut own = vec![0.0f32; lanes];
-    let mut snapshot = vec![0.0f32; lanes];
-    let mut publish = vec![0.0f32; lanes];
-    let mut cross = vec![0.0f32; lanes];
+    // republish and the partner cross-write) — one bundle, allocated once,
+    // reused for every interaction this worker runs
+    let mut scratch = MergeScratch::with_kernel(lanes, sh.kernel);
     // only slot-canonical policies (push-sum takes) pay the own-slot read;
     // plain-model policies keep the PR 3 hot path and telemetry semantics
     let sync_own = sh.policy.needs_own_slot_sync();
@@ -521,10 +532,10 @@ fn worker_loop<P: SlotPayload>(
         // pick a partner *now* and draw the local phase
         if sync_own {
             let t0 = Instant::now();
-            let (_, own_retries) = sh.slots[node].read_into(&mut own);
+            let (_, own_retries) = sh.slots[node].read_into(&mut scratch.own);
             sync_secs += t0.elapsed().as_secs_f64();
             res.read_retries += own_retries;
-            sh.policy.absorb_own_slot(st, &own, sh.dim);
+            sh.policy.absorb_own_slot(st, &scratch.own, sh.dim);
         }
         let partner = sh.graph.sample_neighbor(node, &mut rng);
         let h = sh.policy.draw_steps(&mut rng);
@@ -539,15 +550,14 @@ fn worker_loop<P: SlotPayload>(
         sh.policy.local_phase(&ctx, node, st, h);
         // non-blocking snapshot of the partner's published payload
         let t0 = Instant::now();
-        let (stamp, retries) = sh.slots[partner].read_into(&mut snapshot);
+        let (stamp, retries) = sh.slots[partner].read_into(&mut scratch.snapshot);
         sync_secs += t0.elapsed().as_secs_f64();
         res.read_retries += retries;
         res.staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
         // the policy's merge rule, initiator side only — the partner is
         // never touched, let alone delayed. The wire codec's accounting
         // comes back through the EventOutcome.
-        let outcome =
-            sh.policy.merge(&ctx, node, st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        let outcome = sh.policy.merge(&ctx, node, st, &mut scratch, &mut rng);
         st.interactions += 1;
         sh.bits.fetch_add(outcome.bits, Ordering::Relaxed);
         if outcome.fallbacks > 0 {
@@ -559,8 +569,8 @@ fn worker_loop<P: SlotPayload>(
         // slot — dropped and counted if the slot is held
         let stamp_now = sh.done.load(Ordering::Relaxed);
         let t1 = Instant::now();
-        res.publish_retries += sh.slots[node].publish(&publish, stamp_now);
-        if !sh.slots[partner].try_publish(&cross, stamp_now) {
+        res.publish_retries += sh.slots[node].publish(&scratch.publish, stamp_now);
+        if !sh.slots[partner].try_publish(&scratch.cross, stamp_now) {
             res.push_conflicts += 1;
         }
         sync_secs += t1.elapsed().as_secs_f64();

@@ -57,6 +57,9 @@ pub struct RunMetrics {
     pub executor: String,
     /// worker threads the executor ran with (serial runs report 1)
     pub threads: usize,
+    /// fused merge-kernel implementation the run dispatched to
+    /// ("scalar" | "simd") — tags bench rows with the `--kernel` axis
+    pub kernel: String,
     /// contention/staleness telemetry — only the free-running executor
     /// produces it; `None` for the replay executors
     pub freerun: Option<FreerunStats>,
@@ -74,8 +77,8 @@ impl RunMetrics {
     /// Fill the aggregate tail every executor shares, from the final node
     /// states: totals (steps, bits, fallbacks), per-node f64 clock
     /// reductions in node-index order (bit-identical across executors),
-    /// epochs, the executor tag, and the final eval from the last curve
-    /// point. Call after the last curve point is pushed.
+    /// epochs, the executor and kernel tags, and the final eval from the
+    /// last curve point. Call after the last curve point is pushed.
     pub(super) fn finalize(
         &mut self,
         states: &[NodeState],
@@ -85,6 +88,7 @@ impl RunMetrics {
         quant_fallbacks: u64,
         executor: &str,
         threads: usize,
+        kernel: &str,
     ) {
         let clocks = NodeClocks::from_parts(
             states.iter().map(|s| s.time).collect(),
@@ -106,6 +110,7 @@ impl RunMetrics {
             / states.len().max(1) as f64;
         self.executor = executor.to_string();
         self.threads = threads;
+        self.kernel = kernel.to_string();
         if let Some(p) = self.curve.last() {
             self.final_eval_loss = p.eval_loss;
             self.final_eval_acc = p.eval_acc;

@@ -34,7 +34,10 @@
 //!   the merge rule, the local-step policy, and the first-class
 //!   [`WireCodec`] quantization axis (`--wire lattice|f32`, honored on all
 //!   three executors). Replaced PR 3's closed `GossipProfile` struct and
-//!   admitted SGP to freerun via weighted slots.
+//!   admitted SGP to freerun via weighted slots. Merge bodies run through
+//!   the fused quantize-average kernels of [`crate::kernels`]
+//!   (`--kernel scalar|simd`), fed by a per-worker allocation-free
+//!   [`MergeScratch`].
 //! * [`telemetry`] — what only the free-running executor can measure:
 //!   staleness histograms, seqlock retry counts, per-worker busy/wait,
 //!   and the codec's wire-bit/fallback attribution.
@@ -66,9 +69,10 @@ pub use executor::{run_parallel, run_serial, RunSpec};
 pub use freerun::run_freerun;
 pub use metrics::{CurvePoint, RunMetrics};
 pub use poisson::PoissonSwarm;
+pub use crate::kernels::Kernel;
 pub use policy::{
-    codec_exchange_average, MixPolicy, PairMerge, PairwisePolicy, PayloadKind, PlainModel,
-    PushSumPolicy, PushSumWeighted, SlotPayload, WireCodec,
+    codec_exchange_average, MergeScratch, MixPolicy, PairMerge, PairwisePolicy, PayloadKind,
+    PlainModel, PushSumPolicy, PushSumWeighted, SlotPayload, WireCodec,
 };
 pub use swarm::{AveragingMode, LocalSteps, SwarmSgd};
 pub use telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};

@@ -86,12 +86,24 @@ impl Algorithm for PoissonSwarm {
 
     fn interact(
         &self,
-        _t: u64,
+        t: u64,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
-        self.inner.interact_pair(ev, parts, ctx)
+        let mut scratch = super::MergeScratch::with_kernel(ctx.dim, self.kernel());
+        self.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+        scratch: &mut super::MergeScratch,
+    ) -> EventOutcome {
+        self.inner.interact_pair(ev, parts, ctx, scratch)
     }
 
     /// Same policy as [`SwarmSgd`] — the free-running executor *is* the

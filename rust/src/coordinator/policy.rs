@@ -42,7 +42,8 @@
 //!
 //! ```
 //! use swarm_sgd::coordinator::{
-//!     EventOutcome, MixPolicy, NodeState, PayloadKind, StepCtx, WireCodec,
+//!     EventOutcome, MergeScratch, MixPolicy, NodeState, PayloadKind, StepCtx,
+//!     WireCodec,
 //! };
 //! use swarm_sgd::rngx::Pcg64;
 //!
@@ -64,18 +65,16 @@
 //!         _ctx: &StepCtx<'_>,
 //!         _node: usize,
 //!         st: &mut NodeState,
-//!         snapshot: &mut [f32],
-//!         publish: &mut [f32],
-//!         cross: &mut [f32],
+//!         scratch: &mut MergeScratch,
 //!         _rng: &mut Pcg64,
 //!     ) -> EventOutcome {
-//!         for (p, &s) in st.params.iter_mut().zip(snapshot.iter()) {
+//!         for (p, &s) in st.params.iter_mut().zip(scratch.snapshot.iter()) {
 //!             *p += 0.25 * (s - *p);
 //!         }
 //!         st.comm.copy_from_slice(&st.params);
-//!         publish.copy_from_slice(&st.params);
-//!         cross.copy_from_slice(&st.params);
-//!         EventOutcome { bits: 32 * publish.len() as u64, fallbacks: 0 }
+//!         scratch.publish.copy_from_slice(&st.params);
+//!         scratch.cross.copy_from_slice(&st.params);
+//!         EventOutcome { bits: 32 * scratch.publish.len() as u64, fallbacks: 0 }
 //!     }
 //! }
 //! ```
@@ -85,6 +84,7 @@
 use super::algorithm::{local_phase, EventOutcome, NodeState, StepCtx};
 use super::cluster::quantized_transfer;
 use super::swarm::LocalSteps;
+use crate::kernels::{self, Kernel};
 use crate::rngx::Pcg64;
 
 /// How model lanes cross the simulated wire — the quantization axis,
@@ -129,30 +129,148 @@ impl WireCodec {
             }
         }
     }
+
+    /// Allocation-free [`WireCodec::decode_in_place`]: decode `remote` as
+    /// received by a node holding `reference` into `out` through the fused
+    /// kernel path (one traversal, no `Vec`). Bit-identical to the
+    /// two-pass `decode_in_place` on both codecs and both kernels.
+    pub fn decode_into(
+        &self,
+        kernel: Kernel,
+        remote: &[f32],
+        reference: &[f32],
+        seed: u32,
+        out: &mut [f32],
+    ) -> (u64, bool) {
+        match *self {
+            WireCodec::F32 => {
+                out.copy_from_slice(remote);
+                (32 * remote.len() as u64, false)
+            }
+            WireCodec::Lattice { bits, eps } => {
+                kernels::lattice_decode_into(kernel, remote, reference, eps, bits, seed, out)
+            }
+        }
+    }
+}
+
+/// Per-worker reusable merge buffers — the allocation-free path into the
+/// fused kernels ([`crate::kernels`]).
+///
+/// One scratch is created per executor worker (or per serial run), sized to
+/// the policy's payload lanes, and threaded through every
+/// [`MixPolicy::merge`] / [`Algorithm::interact_with`] call so the merge
+/// hot path allocates **zero** per interaction (asserted by
+/// `tests/merge_no_alloc.rs`). It also carries the selected [`Kernel`] so
+/// merge bodies dispatch without re-plumbing an extra argument.
+///
+/// ```
+/// use swarm_sgd::coordinator::MergeScratch;
+/// use swarm_sgd::kernels::Kernel;
+///
+/// let mut s = MergeScratch::with_kernel(4, Kernel::Simd);
+/// assert_eq!(s.publish.len(), 4);
+/// assert_eq!(s.kernel, Kernel::Simd);
+/// s.ensure(6); // grows for a larger payload, never shrinks
+/// assert_eq!(s.snapshot.len(), 6);
+/// ```
+///
+/// [`Algorithm::interact_with`]: super::Algorithm::interact_with
+#[derive(Clone, Debug)]
+pub struct MergeScratch {
+    /// the initiator's own published payload (own-slot sync reads land
+    /// here for [`MixPolicy::absorb_own_slot`])
+    pub own: Vec<f32>,
+    /// the partner's possibly-stale payload snapshot
+    pub snapshot: Vec<f32>,
+    /// the payload republished into the initiator's slot
+    pub publish: Vec<f32>,
+    /// the payload best-effort cross-written into the partner's slot
+    pub cross: Vec<f32>,
+    /// the fused-kernel implementation merges dispatch to
+    pub kernel: Kernel,
+}
+
+impl MergeScratch {
+    /// Scratch for `lanes`-wide payloads with the default scalar kernel.
+    pub fn new(lanes: usize) -> Self {
+        Self::with_kernel(lanes, Kernel::Scalar)
+    }
+
+    /// Scratch for `lanes`-wide payloads dispatching to `kernel`.
+    pub fn with_kernel(lanes: usize, kernel: Kernel) -> Self {
+        MergeScratch {
+            own: vec![0.0; lanes],
+            snapshot: vec![0.0; lanes],
+            publish: vec![0.0; lanes],
+            cross: vec![0.0; lanes],
+            kernel,
+        }
+    }
+
+    /// Grow all buffers to at least `lanes` (no-op when already large
+    /// enough — the amortized-zero-allocation reuse path).
+    pub fn ensure(&mut self, lanes: usize) {
+        if self.snapshot.len() < lanes {
+            self.own.resize(lanes, 0.0);
+            self.snapshot.resize(lanes, 0.0);
+            self.publish.resize(lanes, 0.0);
+            self.cross.resize(lanes, 0.0);
+        }
+    }
+}
+
+/// One endpoint of a codec exchange, fused: average `mine` with the
+/// decoded `remote` into `out` in a single traversal. `F32` averages the
+/// models directly; `Lattice` runs the fused quantize-average kernel.
+/// The operand order (`0.5 * (mine + decoded)`) matches the historical
+/// per-endpoint update exactly.
+fn fused_codec_avg(
+    codec: WireCodec,
+    kernel: Kernel,
+    remote: &[f32],
+    mine: &[f32],
+    seed: u32,
+    out: &mut [f32],
+) -> (u64, bool) {
+    match codec {
+        WireCodec::F32 => {
+            kernels::avg_into(kernel, mine, remote, out);
+            (32 * remote.len() as u64, false)
+        }
+        WireCodec::Lattice { bits, eps } => {
+            kernels::lattice_qavg_into(kernel, remote, mine, eps, bits, seed, out)
+        }
+    }
 }
 
 /// Two-way codec exchange + live averaging for one gossip edge — the
 /// shared lattice path of the AD-PSGD and D-PSGD replay interact bodies:
 /// both incoming copies cross the codec (each decoded against the
 /// receiver's live model), then each endpoint averages with what it
-/// decoded. Returns raw (pre-`scale_bits`) wire bits and the fallback
-/// count. Callers derive `er` deterministically from the event seed so
-/// the exchange replays bit-identically on any executor.
+/// decoded — fused into one traversal per endpoint through `scratch`.
+/// Returns raw (pre-`scale_bits`) wire bits and the fallback count.
+/// Callers derive `er` deterministically from the event seed so the
+/// exchange replays bit-identically on any executor.
 pub fn codec_exchange_average(
     a: &mut NodeState,
     b: &mut NodeState,
     codec: WireCodec,
     er: &mut Pcg64,
+    scratch: &mut MergeScratch,
 ) -> (u64, u64) {
-    a.inbox.copy_from_slice(&b.params);
-    b.inbox.copy_from_slice(&a.params);
-    let (b1, f1) = codec.decode_in_place(&mut a.inbox, &a.params, er.next_u32());
-    let (b2, f2) = codec.decode_in_place(&mut b.inbox, &b.params, er.next_u32());
-    for st in [&mut *a, &mut *b] {
-        for (p, &inc) in st.params.iter_mut().zip(&st.inbox) {
-            *p = 0.5 * (*p + inc);
-        }
-    }
+    // seeds drawn unconditionally, in the historical order, before any
+    // codec dispatch — the replay RNG stream must not depend on the codec
+    let seed_a = er.next_u32();
+    let seed_b = er.next_u32();
+    let kern = scratch.kernel;
+    let dim = a.params.len();
+    let (b1, f1) =
+        fused_codec_avg(codec, kern, &b.params, &a.params, seed_a, &mut scratch.publish[..dim]);
+    let (b2, f2) =
+        fused_codec_avg(codec, kern, &a.params, &b.params, seed_b, &mut scratch.cross[..dim]);
+    a.params.copy_from_slice(&scratch.publish[..dim]);
+    b.params.copy_from_slice(&scratch.cross[..dim]);
     (b1 + b2, (f1 as u64) + (f2 as u64))
 }
 
@@ -268,7 +386,7 @@ impl SlotPayload for PushSumWeighted {
 /// the four axes (see the [module docs](self)):
 ///
 /// 1. iff [`MixPolicy::needs_own_slot_sync`], the executor seqlock-reads
-///    the initiator's *own* slot and hands it to
+///    the initiator's *own* slot into `scratch.own` and hands it to
 ///    [`MixPolicy::absorb_own_slot`] — policies whose slot is the
 ///    canonical value between rings (push-sum: cross-writers take mass
 ///    out of it) sync their state here; plain-model policies skip the
@@ -276,15 +394,19 @@ impl SlotPayload for PushSumWeighted {
 /// 2. `h = draw_steps(rng)` — pre-draw the local-step count;
 /// 3. `local_phase(ctx, node, st, h)` — the initiator's local work;
 /// 4. the executor seqlock-reads the partner's slot (never blocking the
-///    partner) into a scratch payload;
-/// 5. `merge(ctx, node, st, snapshot, publish, cross, rng)` — decode the
-///    snapshot through [`MixPolicy::wire`], apply the merge rule to the
-///    initiator's state, fill `publish` (the payload for the initiator's
-///    own slot) and `cross` (the payload for the partner's slot), and
-///    return the wire accounting;
-/// 6. the executor publishes `publish` into the initiator's slot and
-///    best-effort cross-writes `cross` into the partner's slot (dropped
-///    and counted on conflict — nobody ever waits).
+///    partner) into `scratch.snapshot`;
+/// 5. `merge(ctx, node, st, scratch, rng)` — decode `scratch.snapshot`
+///    through [`MixPolicy::wire`] and apply the merge rule to the
+///    initiator's state via the fused kernels (`scratch.kernel`), fill
+///    `scratch.publish` (the payload for the initiator's own slot) and
+///    `scratch.cross` (the payload for the partner's slot), and return
+///    the wire accounting;
+/// 6. the executor publishes `scratch.publish` into the initiator's slot
+///    and best-effort cross-writes `scratch.cross` into the partner's
+///    slot (dropped and counted on conflict — nobody ever waits).
+///
+/// All buffers live in one per-worker [`MergeScratch`], so the protocol
+/// allocates nothing per interaction.
 pub trait MixPolicy: Send + Sync {
     /// Slot payload layout this policy publishes.
     fn payload(&self) -> PayloadKind;
@@ -320,22 +442,21 @@ pub trait MixPolicy: Send + Sync {
     /// `z = x/w`), charging compute time to the state's clock.
     fn local_phase(&self, ctx: &StepCtx<'_>, node: usize, st: &mut NodeState, h: u64);
 
-    /// The merge rule against the partner's possibly-stale payload
-    /// `snapshot` (scratch-owned, `lanes` long — the policy may decode in
-    /// place). Must update the initiator's state, fill `publish` (the
-    /// payload republished into the initiator's slot) and `cross` (the
-    /// payload best-effort cross-written into the partner's slot — the
-    /// pair average for symmetric policies, the remaining half-offer for
-    /// push-sum takes), charge exchange time, and return the wire
-    /// bits/fallbacks (the codec's accounting).
+    /// The merge rule against the partner's possibly-stale payload in
+    /// `scratch.snapshot` (`lanes` long). Must update the initiator's
+    /// state, fill `scratch.publish` (the payload republished into the
+    /// initiator's slot) and `scratch.cross` (the payload best-effort
+    /// cross-written into the partner's slot — the pair average for
+    /// symmetric policies, the remaining half-offer for push-sum takes),
+    /// charge exchange time, and return the wire bits/fallbacks (the
+    /// codec's accounting). Implementations dispatch the decode + merge
+    /// traversal to the fused kernels selected by `scratch.kernel`.
     fn merge(
         &self,
         ctx: &StepCtx<'_>,
         node: usize,
         st: &mut NodeState,
-        snapshot: &mut [f32],
-        publish: &mut [f32],
-        cross: &mut [f32],
+        scratch: &mut MergeScratch,
         rng: &mut Pcg64,
     ) -> EventOutcome;
 }
@@ -384,48 +505,59 @@ impl MixPolicy for PairwisePolicy {
         ctx: &StepCtx<'_>,
         _node: usize,
         st: &mut NodeState,
-        snapshot: &mut [f32],
-        publish: &mut [f32],
-        cross: &mut [f32],
+        scratch: &mut MergeScratch,
         rng: &mut Pcg64,
     ) -> EventOutcome {
-        let full_bytes = ctx.cost.wire_bytes(ctx.dim);
-        // decode the incoming model lanes through the wire codec; the
-        // lattice reference is the merge rule's own local view
-        let reference = match self.merge {
+        let dim = ctx.dim;
+        let full_bytes = ctx.cost.wire_bytes(dim);
+        // seed drawn unconditionally before codec dispatch (replay streams
+        // must not depend on the codec)
+        let seed = rng.next_u32();
+        let kern = scratch.kernel;
+        let MergeScratch { snapshot, publish, cross, .. } = scratch;
+        // fused decode + pair-average in one traversal; the lattice
+        // reference is the merge rule's own local view
+        let reference: &[f32] = match self.merge {
             PairMerge::Live => &st.params,
             PairMerge::NonBlocking => &st.snap,
         };
-        let (raw_bits, fell_back) =
-            self.wire.decode_in_place(snapshot, reference, rng.next_u32());
+        let (raw_bits, fell_back) = match self.wire {
+            WireCodec::F32 => {
+                kernels::avg_into(kern, reference, &snapshot[..dim], &mut publish[..dim]);
+                (32 * dim as u64, false)
+            }
+            WireCodec::Lattice { bits, eps } => kernels::lattice_qavg_into(
+                kern,
+                &snapshot[..dim],
+                reference,
+                eps,
+                bits,
+                seed,
+                &mut publish[..dim],
+            ),
+        };
         let (exch, bits) = match self.wire {
             WireCodec::F32 => (ctx.cost.exchange_time(full_bytes), 2 * 8 * full_bytes),
             WireCodec::Lattice { bits, .. } => {
                 // quantized pull + the symmetric cross-write payload
-                let push_bits = ctx.dim as u64 * bits as u64 + 160;
-                let wire = ctx.cost.scale_bits(raw_bits + push_bits, ctx.dim);
+                let push_bits = dim as u64 * bits as u64 + 160;
+                let wire = ctx.cost.scale_bits(raw_bits + push_bits, dim);
                 (ctx.cost.exchange_time(wire.div_ceil(8)), wire)
             }
         };
         match self.merge {
-            PairMerge::Live => {
-                PlainModel::encode(&st.params, 1.0, publish);
-                PlainModel::mix_into(publish, snapshot);
-                st.params.copy_from_slice(publish);
-            }
+            PairMerge::Live => st.params.copy_from_slice(&publish[..dim]),
             PairMerge::NonBlocking => {
                 // comm ← (S + inc)/2, params ← comm + (params − S)
-                PlainModel::encode(&st.snap, 1.0, publish);
-                PlainModel::mix_into(publish, snapshot);
-                for k in 0..ctx.dim {
+                for k in 0..dim {
                     st.params[k] = publish[k] + (st.params[k] - st.snap[k]);
                 }
             }
         }
-        st.comm.copy_from_slice(publish);
+        st.comm.copy_from_slice(&publish[..dim]);
         // symmetric policy: the cross-write ships the same pair average
         // (Algorithm 2's X' update on both endpoints)
-        cross.copy_from_slice(publish);
+        cross[..dim].copy_from_slice(&publish[..dim]);
         st.time += exch;
         st.comm_time += exch;
         EventOutcome { bits, fallbacks: fell_back as u64 }
@@ -513,18 +645,34 @@ impl MixPolicy for PushSumPolicy {
         ctx: &StepCtx<'_>,
         _node: usize,
         st: &mut NodeState,
-        snapshot: &mut [f32],
-        publish: &mut [f32],
-        cross: &mut [f32],
+        scratch: &mut MergeScratch,
         rng: &mut Pcg64,
     ) -> EventOutcome {
         let dim = ctx.dim;
         let full_bytes = ctx.cost.wire_bytes(dim);
-        // the offer's model lanes cross the codec (x-scale against
-        // x-scale); the weight lane is a full-precision scalar either way
-        let (model, _aux) = snapshot.split_at_mut(dim);
-        let (raw_bits, fell_back) =
-            self.wire.decode_in_place(model, &st.params, rng.next_u32());
+        // seed drawn unconditionally before codec dispatch
+        let seed = rng.next_u32();
+        let kern = scratch.kernel;
+        let MergeScratch { snapshot, publish, cross, .. } = scratch;
+        // fused decode + take-half in one traversal: the offer's model
+        // lanes cross the codec (x-scale against x-scale, decoded against
+        // the initiator's params); the weight lane is a full-precision
+        // scalar either way
+        let (raw_bits, fell_back) = match self.wire {
+            WireCodec::F32 => {
+                kernels::half_into(kern, &snapshot[..dim], &mut cross[..dim]);
+                (32 * dim as u64, false)
+            }
+            WireCodec::Lattice { bits, eps } => kernels::lattice_take_half_into(
+                kern,
+                &snapshot[..dim],
+                &st.params,
+                eps,
+                bits,
+                seed,
+                &mut cross[..dim],
+            ),
+        };
         let (exch, bits) = match self.wire {
             // pulled offer + returned half-offer: one model each way plus
             // the weight scalars
@@ -537,16 +685,14 @@ impl MixPolicy for PushSumPolicy {
                 (ctx.cost.exchange_time(wire.div_ceil(8)), wire)
             }
         };
-        // take half of the offer on both lanes; the remaining half goes
-        // back into the partner's slot as the cross-write
-        for (c, &s) in cross.iter_mut().zip(snapshot.iter()) {
-            *c = 0.5 * s;
-        }
+        // the kernel already halved the model lanes into `cross`; halve
+        // the weight lane, keep the half-offer, and cross-write the rest
+        cross[dim] = 0.5 * snapshot[dim];
         for (x, &half) in st.params.iter_mut().zip(&cross[..dim]) {
             *x += half;
         }
         st.weight += cross[dim] as f64;
-        PushSumWeighted::encode(&st.params, st.weight, publish);
+        PushSumWeighted::encode(&st.params, st.weight, &mut publish[..dim + 1]);
         st.comm.copy_from_slice(&st.params);
         st.time += exch;
         st.comm_time += exch;
@@ -656,23 +802,21 @@ mod tests {
         let policy = PushSumPolicy { steps: LocalSteps::Fixed(1), wire: WireCodec::F32 };
         let mut st = NodeState::new(vec![2.0, 4.0], vec![0.0; 2], Pcg64::seed(1));
         // partner offer (x', w') = ([4, 8], 2) — same de-biased z as ours
-        let mut snapshot = vec![4.0f32, 8.0, 2.0];
-        let mut publish = vec![0.0f32; 3];
-        let mut cross = vec![0.0f32; 3];
+        let mut scratch = MergeScratch::new(3);
+        scratch.snapshot.copy_from_slice(&[4.0, 8.0, 2.0]);
         let mut rng = Pcg64::seed(9);
         let before = st.time;
-        let out =
-            policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        let out = policy.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
         // the initiator keeps half the offer on BOTH lanes...
         assert_eq!(st.params, vec![4.0, 8.0]); // 2 + 4/2, 4 + 8/2
         assert!((st.weight - 2.0).abs() < 1e-9); // 1 + 2/2
-        assert_eq!(publish, vec![4.0, 8.0, 2.0]);
+        assert_eq!(scratch.publish, vec![4.0, 8.0, 2.0]);
         // ...and returns the remaining half-offer as the cross-write
-        assert_eq!(cross, vec![2.0, 4.0, 1.0]);
+        assert_eq!(scratch.cross, vec![2.0, 4.0, 1.0]);
         // mass before (own + offer) == mass after (publish + cross), lanes
         // paired — and the de-biased z is unchanged (offer had the same z)
-        assert_eq!(PushSumWeighted::individual(&publish, dim), vec![2.0, 4.0]);
-        assert_eq!(PushSumWeighted::individual(&cross, dim), vec![2.0, 4.0]);
+        assert_eq!(PushSumWeighted::individual(&scratch.publish, dim), vec![2.0, 4.0]);
+        assert_eq!(PushSumWeighted::individual(&scratch.cross, dim), vec![2.0, 4.0]);
         assert!(out.bits > 0);
         assert_eq!(out.fallbacks, 0);
         assert!(st.time > before, "exchange time must be charged");
@@ -703,15 +847,17 @@ mod tests {
         };
         let mut st = NodeState::new(vec![1.0, 1.0], vec![0.0; 2], Pcg64::seed(1));
         st.snap.copy_from_slice(&[0.0, 0.0]);
-        let mut snapshot = vec![2.0f32, 4.0];
-        let mut publish = vec![0.0f32; 2];
-        let mut cross = vec![0.0f32; 2];
+        let mut scratch = MergeScratch::new(2);
+        scratch.snapshot.copy_from_slice(&[2.0, 4.0]);
         let mut rng = Pcg64::seed(9);
-        policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
-        assert_eq!(publish, vec![1.0, 2.0]); // (S + inc)/2
+        policy.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+        assert_eq!(scratch.publish, vec![1.0, 2.0]); // (S + inc)/2
         assert_eq!(st.comm, vec![1.0, 2.0]);
         assert_eq!(st.params, vec![2.0, 3.0]); // (S + inc)/2 + delta
-        assert_eq!(cross, publish, "symmetric policy cross-writes the pair average");
+        assert_eq!(
+            scratch.cross, scratch.publish,
+            "symmetric policy cross-writes the pair average"
+        );
     }
 
     #[test]
@@ -725,13 +871,55 @@ mod tests {
             wire: WireCodec::F32,
         };
         let mut st = NodeState::new(vec![1.0, 3.0], vec![0.0; 2], Pcg64::seed(1));
-        let mut snapshot = vec![3.0f32, -1.0];
-        let mut publish = vec![0.0f32; 2];
-        let mut cross = vec![0.0f32; 2];
+        let mut scratch = MergeScratch::new(2);
+        scratch.snapshot.copy_from_slice(&[3.0, -1.0]);
         let mut rng = Pcg64::seed(9);
-        policy.merge(&ctx, 0, &mut st, &mut snapshot, &mut publish, &mut cross, &mut rng);
+        policy.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
         assert_eq!(st.params, vec![2.0, 1.0]);
-        assert_eq!(publish, vec![2.0, 1.0]);
-        assert_eq!(cross, publish);
+        assert_eq!(scratch.publish, vec![2.0, 1.0]);
+        assert_eq!(scratch.cross, scratch.publish);
+    }
+
+    #[test]
+    fn decode_into_matches_decode_in_place_on_both_codecs() {
+        let remote: Vec<f32> = (0..300).map(|i| i as f32 * 1e-4).collect();
+        let reference: Vec<f32> = remote.iter().map(|v| v + 0.01).collect();
+        for codec in [WireCodec::F32, WireCodec::Lattice { bits: 8, eps: 1e-3 }] {
+            let mut in_place = remote.clone();
+            let want = codec.decode_in_place(&mut in_place, &reference, 11);
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let mut out = vec![0.0f32; remote.len()];
+                let got = codec.decode_into(kernel, &remote, &reference, 11, &mut out);
+                assert_eq!(out, in_place, "{codec:?} {kernel:?}");
+                assert_eq!(got, want, "{codec:?} {kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_bit_identical_across_kernels() {
+        // the same merge through scalar and simd scratches must agree
+        // exactly — the property that lets replay executors select simd
+        let (dim, n) = (67, 4); // not a multiple of the lane width
+        let (backend, graph, cost) = ctx_fixture(dim, n);
+        let ctx = StepCtx { backend: &backend, cost: &cost, graph: &graph, lr: 0.0, dim, n };
+        let policy = PairwisePolicy {
+            steps: LocalSteps::Fixed(1),
+            merge: PairMerge::NonBlocking,
+            wire: WireCodec::Lattice { bits: 8, eps: 1e-2 },
+        };
+        let params: Vec<f32> = (0..dim).map(|i| i as f32 * 1e-3).collect();
+        let offer: Vec<f32> = params.iter().map(|v| v + 5e-3).collect();
+        let mut results = Vec::new();
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let mut st = NodeState::new(params.clone(), vec![0.0; dim], Pcg64::seed(1));
+            st.snap.copy_from_slice(&params);
+            let mut scratch = MergeScratch::with_kernel(dim, kernel);
+            scratch.snapshot.copy_from_slice(&offer);
+            let mut rng = Pcg64::seed(9);
+            let out = policy.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+            results.push((st.params.clone(), scratch.publish.clone(), out.bits));
+        }
+        assert_eq!(results[0], results[1]);
     }
 }

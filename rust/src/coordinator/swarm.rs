@@ -24,7 +24,8 @@
 use super::algorithm::{
     local_phase, pair, Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx,
 };
-use super::cluster::{average_into_both, nonblocking_update, quantized_transfer};
+use super::policy::MergeScratch;
+use crate::kernels;
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 
@@ -78,20 +79,25 @@ impl SwarmSgd {
     }
 
     /// The pairwise interaction body, shared with [`super::PoissonSwarm`]
-    /// (which differs only in how the edge sequence is scheduled).
+    /// (which differs only in how the edge sequence is scheduled). The
+    /// decode + average traversals run through the fused kernels selected
+    /// by `scratch.kernel`, with `scratch.publish` as the per-endpoint
+    /// average buffer — zero allocation per interaction.
     pub(crate) fn interact_pair(
         &self,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
+        scratch: &mut MergeScratch,
     ) -> EventOutcome {
         let (ni, nj) = pair(parts);
         local_phase(ctx, ev.nodes[0], ni, ev.h[0]);
         local_phase(ctx, ev.nodes[1], nj, ev.h[1]);
         let full_bytes = ctx.cost.wire_bytes(ctx.dim);
+        let kern = scratch.kernel;
         let outcome = match self.mode {
             AveragingMode::Blocking => {
-                average_into_both(&mut ni.params, &mut nj.params);
+                kernels::avg_into_both(kern, &mut ni.params, &mut nj.params);
                 ni.comm.copy_from_slice(&ni.params);
                 nj.comm.copy_from_slice(&nj.params);
                 // rendezvous: both wait for the later endpoint, both pay
@@ -117,8 +123,21 @@ impl SwarmSgd {
                 let seed_i = er.next_u32(); // for i's incoming (from j)
                 let seed_j = er.next_u32(); // for j's incoming (from i)
                 let mut fallbacks = 0u64;
-                let wire = endpoint_update(ni, quant, seed_i, &mut fallbacks)
-                    + endpoint_update(nj, quant, seed_j, &mut fallbacks);
+                let wire = endpoint_update(
+                    ni,
+                    quant,
+                    seed_i,
+                    &mut fallbacks,
+                    kern,
+                    &mut scratch.publish[..ctx.dim],
+                ) + endpoint_update(
+                    nj,
+                    quant,
+                    seed_j,
+                    &mut fallbacks,
+                    kern,
+                    &mut scratch.publish[..ctx.dim],
+                );
                 // time/bit accounting: the initiator pays the exchange;
                 // the partner is not delayed (the "nobody waits" property)
                 let (exch, bits) = match quant {
@@ -139,26 +158,38 @@ impl SwarmSgd {
     }
 }
 
-/// Apply the Appendix-F update to one endpoint: optional lattice decode of
-/// the incoming copy (in `st.inbox`) against the node's snapshot, the
-/// averaging rule, then refresh the communication copy. Returns wire bits
+/// Apply the Appendix-F update to one endpoint in a single fused traversal:
+/// decode the incoming copy (in `st.inbox`) against the node's snapshot and
+/// average it with the snapshot into `avg` (`(S + X')/2`, one pass through
+/// the selected kernel), then replay the delta rule — `X' ← avg`,
+/// `X ← avg + (X − S)` — bit-identically to the historical
+/// `quantized_transfer` + `nonblocking_update` pair. Returns wire bits
 /// consumed (0 when not quantizing).
 fn endpoint_update(
     st: &mut NodeState,
     quant: Option<(u32, f32)>,
     seed: u32,
     fallbacks: &mut u64,
+    kern: kernels::Kernel,
+    avg: &mut [f32],
 ) -> u64 {
     let mut wire = 0u64;
-    if let Some((bits, eps)) = quant {
-        let tr = quantized_transfer(&st.inbox, &st.snap, eps, bits, seed);
-        wire = tr.bits;
-        if tr.fell_back {
-            *fallbacks += 1;
+    match quant {
+        None => kernels::avg_into(kern, &st.snap, &st.inbox, avg),
+        Some((bits, eps)) => {
+            let (b, fb) =
+                kernels::lattice_qavg_into(kern, &st.inbox, &st.snap, eps, bits, seed, avg);
+            wire = b;
+            if fb {
+                *fallbacks += 1;
+            }
         }
-        st.inbox.copy_from_slice(&tr.decoded);
     }
-    nonblocking_update(&mut st.params, &mut st.comm, &st.snap, &st.inbox);
+    for k in 0..avg.len() {
+        let delta = st.params[k] - st.snap[k];
+        st.comm[k] = avg[k];
+        st.params[k] = avg[k] + delta;
+    }
     wire
 }
 
@@ -188,12 +219,24 @@ impl Algorithm for SwarmSgd {
 
     fn interact(
         &self,
-        _t: u64,
+        t: u64,
         ev: &Event,
         parts: &mut [&mut NodeState],
         ctx: &StepCtx<'_>,
     ) -> EventOutcome {
-        self.interact_pair(ev, parts, ctx)
+        let mut scratch = MergeScratch::with_kernel(ctx.dim, self.kernel());
+        self.interact_with(t, ev, parts, ctx, &mut scratch)
+    }
+
+    fn interact_with(
+        &self,
+        _t: u64,
+        ev: &Event,
+        parts: &mut [&mut NodeState],
+        ctx: &StepCtx<'_>,
+        scratch: &mut MergeScratch,
+    ) -> EventOutcome {
+        self.interact_pair(ev, parts, ctx, scratch)
     }
 
     /// All three averaging modes have free-running semantics: plain-model

@@ -136,6 +136,9 @@ pub struct FreerunStats {
     pub interactions_per_sec: f64,
     /// wire codec the run's mix policy used (`"f32"` | `"lattice"`)
     pub codec: String,
+    /// fused merge-kernel implementation the workers' scratch dispatched to
+    /// (`"scalar"` | `"simd"`)
+    pub kernel: String,
     /// bits the codec put on the simulated wire (the freerun attribution
     /// of `RunMetrics::total_bits`)
     pub wire_bits: u64,
@@ -310,6 +313,7 @@ mod tests {
             wall_secs: 1.0,
             interactions_per_sec: 100.0,
             codec: "f32".into(),
+            kernel: "scalar".into(),
             wire_bits: 0,
             wire_fallbacks: 0,
             slot_read_retries: 0,

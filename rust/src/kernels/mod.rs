@@ -1,0 +1,491 @@
+//! Runtime-selected fused merge kernels — the one-pass quantize-average
+//! primitive behind every merge path (ROADMAP item 2).
+//!
+//! Every interaction in every executor runs the same inner loop: decode the
+//! partner's lattice payload, combine it with the local model under the
+//! policy's rule, and hand the result back for publication. The two-pass
+//! reference ([`crate::coordinator::quantized_transfer`] followed by a
+//! separate averaging sweep) walks the model twice and allocates the decoded
+//! vector; the fused kernels here do decode + merge in a **single traversal**
+//! writing into a caller-provided buffer, with zero allocation.
+//!
+//! Two implementations are selectable at runtime via `--kernel` (INI
+//! `kernel=`, default `scalar`):
+//!
+//! - [`Kernel::Scalar`] — the reference loop, element at a time, folding the
+//!   checksums in element order. This is *definitionally* bit-identical to
+//!   the two-pass `encode → pack → unpack → decode → merge` path: packing is
+//!   lossless for residues in `[0, 2^bits)` and the per-element arithmetic
+//!   is the same operations in the same order.
+//! - [`Kernel::Simd`] — processes f32 lanes in chunks of 8 through
+//!   fixed-size array temporaries that LLVM auto-vectorizes (stable Rust;
+//!   `std::simd` is still nightly-only). All lane math is elementwise with
+//!   no reduction-order change, and the checksums are folded scalar-wise in
+//!   element order after each chunk, so this path is **bit-exact** with the
+//!   scalar kernel — which is why the replay executors may select it too
+//!   without breaking the parallel ≡ serial contract. The property tests in
+//!   `tests/fused_kernels.rs` pin this equivalence.
+//!
+//! The kernels are reached through [`crate::coordinator::MergeScratch`]
+//! (per-worker reusable buffers) so the hot path allocates nothing per
+//! interaction.
+//!
+//! # Example
+//!
+//! Fused quantize-average versus the two-pass reference:
+//!
+//! ```
+//! use swarm_sgd::coordinator::quantized_transfer;
+//! use swarm_sgd::kernels::{lattice_qavg_into, Kernel};
+//!
+//! let remote: Vec<f32> = (0..64).map(|i| i as f32 * 1e-3).collect();
+//! let local: Vec<f32> = remote.iter().map(|v| v + 5e-3).collect();
+//! let (eps, bits, seed) = (1e-3, 8, 42);
+//!
+//! // two passes: decode the remote model, then average separately
+//! let tr = quantized_transfer(&remote, &local, eps, bits, seed);
+//! let want: Vec<f32> =
+//!     local.iter().zip(&tr.decoded).map(|(l, d)| 0.5 * (l + d)).collect();
+//!
+//! // one pass: decode + average fused, into a caller buffer
+//! let mut out = vec![0.0f32; remote.len()];
+//! let (wire, fell_back) =
+//!     lattice_qavg_into(Kernel::Scalar, &remote, &local, eps, bits, seed, &mut out);
+//!
+//! assert_eq!(out, want);
+//! assert_eq!(wire, tr.bits);
+//! assert!(!fell_back && !tr.fell_back);
+//! ```
+
+use crate::quant::{checksum_step, uniform01, CHECKSUM_INIT};
+
+/// Valid `--kernel` values, in the order the CLI lists them.
+pub const KERNEL_NAMES: &[&str] = &["scalar", "simd"];
+
+/// Chunk width of the vectorized lane path (f32x8 ≙ one AVX2 register).
+const LANES: usize = 8;
+
+/// Which fused-kernel implementation the merge paths dispatch to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Kernel {
+    /// Element-at-a-time reference loop (the default).
+    #[default]
+    Scalar,
+    /// Chunk-of-8 lane path; bit-exact with `Scalar` (see module docs).
+    Simd,
+}
+
+impl Kernel {
+    /// The wire/config name (`scalar` / `simd`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
+    }
+
+    /// Parse a `kernel=`/`--kernel` value, listing valid options on error.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(Kernel::Scalar),
+            "simd" => Ok(Kernel::Simd),
+            other => Err(format!(
+                "unknown kernel '{other}' (known: {})",
+                KERNEL_NAMES.join("|")
+            )),
+        }
+    }
+}
+
+/// out ← (a + b)/2, elementwise.
+pub fn avg_into(kernel: Kernel, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    match kernel {
+        Kernel::Scalar => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = 0.5 * (x + y);
+            }
+        }
+        Kernel::Simd => {
+            let n = a.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let mut va = [0.0f32; LANES];
+                let mut vb = [0.0f32; LANES];
+                va.copy_from_slice(&a[i..i + LANES]);
+                vb.copy_from_slice(&b[i..i + LANES]);
+                let mut vo = [0.0f32; LANES];
+                for l in 0..LANES {
+                    vo[l] = 0.5 * (va[l] + vb[l]);
+                }
+                out[i..i + LANES].copy_from_slice(&vo);
+                i += LANES;
+            }
+            for k in i..n {
+                out[k] = 0.5 * (a[k] + b[k]);
+            }
+        }
+    }
+}
+
+/// out ← b/2, elementwise (the push-sum "take half" rule).
+pub fn half_into(kernel: Kernel, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(b.len(), out.len());
+    match kernel {
+        Kernel::Scalar => {
+            for (o, &y) in out.iter_mut().zip(b) {
+                *o = 0.5 * y;
+            }
+        }
+        Kernel::Simd => {
+            let n = b.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let mut vb = [0.0f32; LANES];
+                vb.copy_from_slice(&b[i..i + LANES]);
+                let mut vo = [0.0f32; LANES];
+                for l in 0..LANES {
+                    vo[l] = 0.5 * vb[l];
+                }
+                out[i..i + LANES].copy_from_slice(&vo);
+                i += LANES;
+            }
+            for k in i..n {
+                out[k] = 0.5 * b[k];
+            }
+        }
+    }
+}
+
+/// In-place midpoint of both operands: a ← b ← (a+b)/2 — the kernelized
+/// [`crate::coordinator::average_into_both`], bit-identical on both paths.
+pub fn avg_into_both(kernel: Kernel, a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    match kernel {
+        Kernel::Scalar => {
+            for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                let m = 0.5 * (*x + *y);
+                *x = m;
+                *y = m;
+            }
+        }
+        Kernel::Simd => {
+            let n = a.len();
+            let mut i = 0;
+            while i + LANES <= n {
+                let mut va = [0.0f32; LANES];
+                let mut vb = [0.0f32; LANES];
+                va.copy_from_slice(&a[i..i + LANES]);
+                vb.copy_from_slice(&b[i..i + LANES]);
+                let mut vm = [0.0f32; LANES];
+                for l in 0..LANES {
+                    vm[l] = 0.5 * (va[l] + vb[l]);
+                }
+                a[i..i + LANES].copy_from_slice(&vm);
+                b[i..i + LANES].copy_from_slice(&vm);
+                i += LANES;
+            }
+            for k in i..n {
+                let m = 0.5 * (a[k] + b[k]);
+                a[k] = m;
+                b[k] = m;
+            }
+        }
+    }
+}
+
+/// What the fused lattice traversal does with each decoded coordinate.
+#[derive(Clone, Copy)]
+enum FuseRule {
+    /// out ← (reference + decoded)/2 — pair averaging.
+    Qavg,
+    /// out ← decoded/2 — push-sum take-half.
+    TakeHalf,
+    /// out ← decoded — plain decode (the `decode_into` codec entry point).
+    Decode,
+}
+
+#[inline(always)]
+fn fuse(rule: FuseRule, reference: f32, dec: f32) -> f32 {
+    match rule {
+        FuseRule::Qavg => 0.5 * (reference + dec),
+        FuseRule::TakeHalf => 0.5 * dec,
+        FuseRule::Decode => dec,
+    }
+}
+
+/// One element of the fused traversal: the sender's true lattice coordinate
+/// of `x` and the receiver's nearest-representative reconstruction against
+/// `y` — exactly `encode` + `decode` without the pack/unpack round (lossless
+/// for residues `< 2^bits`, so bit-identical).
+#[inline(always)]
+fn lattice_coords(x: f32, y: f32, eps: f32, u: f32, m: i64, half: i64) -> (i64, i64) {
+    let c = (x / eps + u).floor() as i64;
+    let r = c.rem_euclid(m);
+    let yc = (y / eps + u).floor() as i64;
+    let mut diff = (r - yc.rem_euclid(m)) % m;
+    if diff >= half {
+        diff -= m;
+    } else if diff < -half {
+        diff += m;
+    }
+    (c, yc + diff)
+}
+
+/// Shared core of the fused lattice kernels: quantize `remote`, decode it
+/// against `reference`, apply `rule`, all in one traversal. Returns
+/// `(wire_bits, fell_back)` with the exact accounting of the two-pass path
+/// ([`crate::coordinator::quantized_transfer`]): on checksum mismatch the
+/// result is recomputed from the full-precision `remote` and the failed
+/// attempt plus the 32-bit/coord resend are both charged.
+fn lattice_fused(
+    kernel: Kernel,
+    rule: FuseRule,
+    remote: &[f32],
+    reference: &[f32],
+    eps: f32,
+    bits: u32,
+    seed: u32,
+    out: &mut [f32],
+) -> (u64, bool) {
+    assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+    debug_assert_eq!(remote.len(), reference.len());
+    debug_assert_eq!(remote.len(), out.len());
+    let n = remote.len();
+    let m = 1i64 << bits;
+    let half = m / 2;
+    let mut cs_send: u64 = CHECKSUM_INIT;
+    let mut cs_recv: u64 = CHECKSUM_INIT;
+    match kernel {
+        Kernel::Scalar => {
+            for i in 0..n {
+                let u = uniform01(i as u32, seed);
+                let (c, rc) = lattice_coords(remote[i], reference[i], eps, u, m, half);
+                cs_send = checksum_step(cs_send, c);
+                cs_recv = checksum_step(cs_recv, rc);
+                out[i] = fuse(rule, reference[i], rc as f32 * eps);
+            }
+        }
+        Kernel::Simd => {
+            let mut i = 0;
+            while i + LANES <= n {
+                let mut cs = [0i64; LANES];
+                let mut rcs = [0i64; LANES];
+                let mut dec = [0.0f32; LANES];
+                for l in 0..LANES {
+                    let idx = i + l;
+                    let u = uniform01(idx as u32, seed);
+                    let (c, rc) =
+                        lattice_coords(remote[idx], reference[idx], eps, u, m, half);
+                    cs[l] = c;
+                    rcs[l] = rc;
+                    dec[l] = rc as f32 * eps;
+                }
+                // checksums fold scalar-wise in element order: bit-exact
+                // with the scalar kernel (no reduction-order change)
+                for l in 0..LANES {
+                    cs_send = checksum_step(cs_send, cs[l]);
+                    cs_recv = checksum_step(cs_recv, rcs[l]);
+                }
+                for l in 0..LANES {
+                    out[i + l] = fuse(rule, reference[i + l], dec[l]);
+                }
+                i += LANES;
+            }
+            for k in i..n {
+                let u = uniform01(k as u32, seed);
+                let (c, rc) = lattice_coords(remote[k], reference[k], eps, u, m, half);
+                cs_send = checksum_step(cs_send, c);
+                cs_recv = checksum_step(cs_recv, rc);
+                out[k] = fuse(rule, reference[k], rc as f32 * eps);
+            }
+        }
+    }
+    // wire accounting mirrors QuantizedMsg::wire_bits(): payload + 64-bit
+    // checksum + 96-bit header
+    let wire = n as u64 * bits as u64 + 160;
+    if cs_send == cs_recv {
+        (wire, false)
+    } else {
+        // fallback: full-precision resend — the decoded value becomes the
+        // remote model verbatim, matching quantized_transfer
+        for i in 0..n {
+            out[i] = fuse(rule, reference[i], remote[i]);
+        }
+        (wire + 32 * n as u64, true)
+    }
+}
+
+/// Fused quantize-average: `out ← (reference + decode(encode(remote)))/2`
+/// in one traversal. Returns `(wire_bits, fell_back)`.
+pub fn lattice_qavg_into(
+    kernel: Kernel,
+    remote: &[f32],
+    reference: &[f32],
+    eps: f32,
+    bits: u32,
+    seed: u32,
+    out: &mut [f32],
+) -> (u64, bool) {
+    lattice_fused(kernel, FuseRule::Qavg, remote, reference, eps, bits, seed, out)
+}
+
+/// Fused quantize-take-half: `out ← decode(encode(remote))/2` — the
+/// push-sum halve-and-push payload. Returns `(wire_bits, fell_back)`.
+pub fn lattice_take_half_into(
+    kernel: Kernel,
+    remote: &[f32],
+    reference: &[f32],
+    eps: f32,
+    bits: u32,
+    seed: u32,
+    out: &mut [f32],
+) -> (u64, bool) {
+    lattice_fused(kernel, FuseRule::TakeHalf, remote, reference, eps, bits, seed, out)
+}
+
+/// Fused quantize-decode without a merge rule: `out ← decode(encode(remote))`
+/// against `reference` — the allocation-free codec decode entry point.
+/// Returns `(wire_bits, fell_back)`.
+pub fn lattice_decode_into(
+    kernel: Kernel,
+    remote: &[f32],
+    reference: &[f32],
+    eps: f32,
+    bits: u32,
+    seed: u32,
+    out: &mut [f32],
+) -> (u64, bool) {
+    lattice_fused(kernel, FuseRule::Decode, remote, reference, eps, bits, seed, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::quantized_transfer;
+    use crate::rngx::Pcg64;
+
+    fn close_pair(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seed(seed);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.3).collect();
+        let y: Vec<f32> = x.iter().map(|v| v + 0.01 * rng.normal() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn kernel_names_and_parse() {
+        assert_eq!(Kernel::parse("scalar"), Ok(Kernel::Scalar));
+        assert_eq!(Kernel::parse("simd"), Ok(Kernel::Simd));
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Simd.name(), "simd");
+        assert_eq!(Kernel::default(), Kernel::Scalar);
+        let err = Kernel::parse("avx-512").unwrap_err();
+        assert!(err.contains("unknown kernel 'avx-512'"), "{err}");
+        assert!(err.contains("scalar|simd"), "{err}");
+    }
+
+    #[test]
+    fn fused_scalar_matches_two_pass_lattice() {
+        // fused qavg == quantized_transfer + separate midpoint, bit for bit,
+        // across the full lattice bit-width range
+        for bits in 2..=16u32 {
+            let (x, y) = close_pair(301, bits as u64);
+            let eps = 2e-3f32;
+            let tr = quantized_transfer(&x, &y, eps, bits, 77);
+            let want: Vec<f32> =
+                y.iter().zip(&tr.decoded).map(|(a, d)| 0.5 * (a + d)).collect();
+            let mut out = vec![0.0f32; x.len()];
+            let (b, fb) =
+                lattice_qavg_into(Kernel::Scalar, &x, &y, eps, bits, 77, &mut out);
+            assert_eq!(out, want, "bits={bits}");
+            assert_eq!(b, tr.bits, "bits={bits}");
+            assert_eq!(fb, tr.fell_back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fused_fallback_matches_two_pass() {
+        // models far apart: checksum fires, both paths resend full precision
+        let x = vec![0.0f32; 130];
+        let y = vec![10.0f32; 130];
+        let tr = quantized_transfer(&x, &y, 1e-3, 4, 5);
+        assert!(tr.fell_back);
+        let want: Vec<f32> =
+            y.iter().zip(&tr.decoded).map(|(a, d)| 0.5 * (a + d)).collect();
+        let mut out = vec![0.0f32; x.len()];
+        let (b, fb) = lattice_qavg_into(Kernel::Scalar, &x, &y, 1e-3, 4, 5, &mut out);
+        assert!(fb);
+        assert_eq!(b, tr.bits);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn decode_rule_matches_quantized_transfer() {
+        let (x, y) = close_pair(257, 9);
+        let tr = quantized_transfer(&x, &y, 1e-3, 8, 3);
+        let mut out = vec![0.0f32; x.len()];
+        let (b, fb) = lattice_decode_into(Kernel::Scalar, &x, &y, 1e-3, 8, 3, &mut out);
+        assert_eq!(out, tr.decoded);
+        assert_eq!((b, fb), (tr.bits, tr.fell_back));
+    }
+
+    #[test]
+    fn take_half_is_half_of_decode() {
+        let (x, y) = close_pair(100, 11);
+        let mut dec = vec![0.0f32; x.len()];
+        let mut hlf = vec![0.0f32; x.len()];
+        lattice_decode_into(Kernel::Scalar, &x, &y, 1e-3, 8, 2, &mut dec);
+        lattice_take_half_into(Kernel::Scalar, &x, &y, 1e-3, 8, 2, &mut hlf);
+        let want: Vec<f32> = dec.iter().map(|v| 0.5 * v).collect();
+        assert_eq!(hlf, want);
+    }
+
+    #[test]
+    fn simd_is_bit_exact_with_scalar() {
+        // length deliberately not a multiple of the lane width
+        let (x, y) = close_pair(1021, 21);
+        for (name, f) in [
+            ("qavg", lattice_qavg_into as fn(_, &[f32], &[f32], _, _, _, &mut [f32]) -> _),
+            ("half", lattice_take_half_into),
+            ("decode", lattice_decode_into),
+        ] {
+            let mut a = vec![0.0f32; x.len()];
+            let mut b = vec![0.0f32; x.len()];
+            let ra = f(Kernel::Scalar, &x, &y, 1e-3, 8, 13, &mut a);
+            let rb = f(Kernel::Simd, &x, &y, 1e-3, 8, 13, &mut b);
+            assert_eq!(a, b, "{name}");
+            assert_eq!(ra, rb, "{name}");
+        }
+        let mut oa = vec![0.0f32; x.len()];
+        let mut ob = vec![0.0f32; x.len()];
+        avg_into(Kernel::Scalar, &x, &y, &mut oa);
+        avg_into(Kernel::Simd, &x, &y, &mut ob);
+        assert_eq!(oa, ob);
+        half_into(Kernel::Scalar, &y, &mut oa);
+        half_into(Kernel::Simd, &y, &mut ob);
+        assert_eq!(oa, ob);
+        let (mut a1, mut b1) = (x.clone(), y.clone());
+        let (mut a2, mut b2) = (x.clone(), y.clone());
+        avg_into_both(Kernel::Scalar, &mut a1, &mut b1);
+        avg_into_both(Kernel::Simd, &mut a2, &mut b2);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn f32_kernels_match_reference_ops() {
+        let (x, y) = close_pair(37, 4);
+        let mut out = vec![0.0f32; x.len()];
+        avg_into(Kernel::Scalar, &x, &y, &mut out);
+        for ((o, &a), &b) in out.iter().zip(&x).zip(&y) {
+            assert_eq!(*o, 0.5 * (a + b));
+        }
+        let (mut a, mut b) = (x.clone(), y.clone());
+        let (mut a2, mut b2) = (x.clone(), y.clone());
+        avg_into_both(Kernel::Scalar, &mut a, &mut b);
+        crate::coordinator::average_into_both(&mut a2, &mut b2);
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+}

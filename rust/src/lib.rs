@@ -52,6 +52,17 @@
 //!   spelling of non-blocking merge + lattice wire; localsgd/allreduce mix
 //!   through full-precision collectives and reject `--wire lattice` with
 //!   an actionable error.)
+//! * **Kernel** ([`kernels::Kernel`], CLI `--kernel scalar|simd`, INI
+//!   `kernel=`, default `scalar`): which fused merge-kernel implementation
+//!   every interaction's decode + merge + publish traversal dispatches to.
+//!   `scalar` is the element-at-a-time reference; `simd` processes f32
+//!   lanes in chunks of 8 (auto-vectorized fixed-size arrays). Both are
+//!   **bit-exact** with the historical two-pass path — lane math is
+//!   elementwise and checksums fold in element order — so the axis is
+//!   honored by all three executors without weakening the replay contract,
+//!   and the selected kernel is surfaced in
+//!   [`coordinator::RunMetrics::kernel`] / freerun telemetry for
+//!   kernel-tagged bench rows (`benches/bench_qavg.rs`).
 //! * **Executor** (CLI `--executor serial|parallel|freerun --threads K
 //!   [--shards S]`): three generic drivers over
 //!   `&dyn Algorithm × &dyn Backend`, split into two contract classes:
@@ -119,6 +130,7 @@ pub mod coordinator;
 pub mod data;
 pub mod figures;
 pub mod grad;
+pub mod kernels;
 pub mod netmodel;
 pub mod output;
 pub mod quant;

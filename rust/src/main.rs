@@ -12,7 +12,8 @@
 //! `MixPolicy`: swarm, poisson, adpsgd, dpsgd, and sgp via weighted
 //! push-sum slots) that trades replayability for real contention/staleness
 //! telemetry. `--wire lattice|f32` selects the wire codec on every
-//! executor.
+//! executor, and `--kernel scalar|simd` selects the (bit-exact) fused
+//! merge-kernel implementation every interaction dispatches to.
 
 use std::path::Path;
 use swarm_sgd::backend::Backend;
@@ -110,7 +111,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in ["algorithm", "executor", "threads", "shards", "wire"] {
+    for key in ["algorithm", "executor", "threads", "shards", "wire", "kernel"] {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
@@ -129,6 +130,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
             mode: cfg.averaging_mode()?,
             h_localsgd: cfg.h.round().max(0.0) as u64,
             wire: cfg.wire_codec()?,
+            kernel: cfg.kernel_enum()?,
         },
     )?;
     let backend = build_backend(&cfg)?;
@@ -215,7 +217,7 @@ fn report_run(
     println!(
         "\nsummary: interactions={} local_steps={} epochs/agent={:.2}\n\
          sim_time={:.1}s (compute {:.1}s, comm {:.1}s)  wire={:.3} GB  \
-         quant_fallbacks={}\nwall-clock: {:.1}s",
+         quant_fallbacks={}  kernel={}\nwall-clock: {:.1}s",
         metrics.interactions,
         metrics.local_steps,
         metrics.epochs,
@@ -224,6 +226,7 @@ fn report_run(
         metrics.comm_time_total,
         metrics.total_bits as f64 / 8e9,
         metrics.quant_fallbacks,
+        metrics.kernel,
         wall.as_secs_f64(),
     );
     if let Some(fr) = &metrics.freerun {
@@ -231,6 +234,7 @@ fn report_run(
             "\nfreerun telemetry ({} thread(s) × {} shard(s), wall {:.2}s):\n\
              real throughput  : {:.0} interactions/s\n\
              wire codec       : {} ({:.3} GB on the wire, {} decode fallbacks)\n\
+             merge kernel     : {}\n\
              staleness (events): p50={} p99={} max={} mean={:.1}\n\
              slot contention  : {} read retries, {} publish retries, \
              {} dropped cross-writes\n\
@@ -242,6 +246,7 @@ fn report_run(
             fr.codec,
             fr.wire_bits as f64 / 8e9,
             fr.wire_fallbacks,
+            fr.kernel,
             fr.staleness.p50(),
             fr.staleness.p99(),
             fr.staleness.max_observed(),

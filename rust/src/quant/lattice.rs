@@ -1,7 +1,11 @@
 //! The cubic-lattice codec: stochastic rounding, modulo wire encoding,
 //! nearest-representative decoding, checksum failure detection.
 
-use super::packing::{pack_bits, unpack_bits};
+use super::packing::unpack_bits;
+
+/// Initial state of the coordinate checksum (FNV-1a offset basis). Shared
+/// with the fused kernels so their checksums match the wire format exactly.
+pub(crate) const CHECKSUM_INIT: u64 = 0xcbf29ce484222325;
 
 /// lowbias32-style avalanche hash — **bit-identical** to
 /// `python/compile/kernels/qavg.py::_hash_u32` and `ref.py::hash_u32_ref`.
@@ -36,7 +40,7 @@ pub fn quantize_unbiased(x: &[f32], eps: f32, seed: u32) -> Vec<f32> {
 /// One multiply-xor round per coordinate (splitmix-style), ~8x faster than
 /// byte-wise FNV at the same detection power for this use.
 #[inline]
-fn checksum_step(h: u64, c: i64) -> u64 {
+pub(crate) fn checksum_step(h: u64, c: i64) -> u64 {
     let mut z = h ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z ^ (z >> 27)
@@ -45,7 +49,7 @@ fn checksum_step(h: u64, c: i64) -> u64 {
 /// Checksum of a full coordinate slice (tests + external verification).
 #[allow(dead_code)]
 pub(crate) fn coord_checksum(coords: &[i64]) -> u64 {
-    coords.iter().fold(0xcbf29ce484222325, |h, &c| checksum_step(h, c))
+    coords.iter().fold(CHECKSUM_INIT, |h, &c| checksum_step(h, c))
 }
 
 /// A quantized model on the wire.
@@ -99,25 +103,60 @@ impl std::error::Error for QuantError {}
 
 /// Encode `x` for a receiver whose model is (expected to be) within the
 /// distance criterion of `x`.
+///
+/// Thin allocating wrapper over [`encode_into`] for callers that don't
+/// reuse buffers; the executor hot paths go through the fused kernels
+/// ([`crate::kernels`]) or [`encode_into`] instead.
 pub fn encode(x: &[f32], eps: f32, bits: u32, seed: u32) -> QuantizedMsg {
+    let mut payload = Vec::new();
+    let checksum = encode_into(x, eps, bits, seed, &mut payload);
+    QuantizedMsg { bits, eps, seed, len: x.len(), payload, checksum }
+}
+
+/// Caller-buffer encode: quantize, checksum, and bit-pack `x` into
+/// `payload` in a single streaming pass (no intermediate coordinate
+/// buffer), returning the coordinate checksum. `payload` is cleared and
+/// resized — once it has capacity, repeated calls allocate nothing.
+///
+/// ```
+/// use swarm_sgd::quant::{encode, encode_into};
+/// let x = [0.25f32, -1.5, 3.0];
+/// let msg = encode(&x, 1e-2, 8, 7);
+/// let mut buf = Vec::new();
+/// let checksum = encode_into(&x, 1e-2, 8, 7, &mut buf);
+/// assert_eq!(buf, msg.payload);
+/// assert_eq!(checksum, msg.checksum);
+/// ```
+pub fn encode_into(x: &[f32], eps: f32, bits: u32, seed: u32, payload: &mut Vec<u8>) -> u64 {
     assert!((2..=16).contains(&bits), "bits must be in 2..=16");
     let m = 1i64 << bits;
-    // single pass: coordinate -> (checksum, residue); no i64 buffer
-    let mut checksum: u64 = 0xcbf29ce484222325;
-    let mut reduced: Vec<u32> = Vec::with_capacity(x.len());
+    let total_bits = x.len() * bits as usize;
+    payload.clear();
+    payload.resize(total_bits.div_ceil(8), 0);
+    // single fused pass: coordinate -> checksum -> residue -> packed bits,
+    // with the same little-endian accumulator as packing::pack_bits so the
+    // payload is byte-identical
+    let mut checksum: u64 = CHECKSUM_INIT;
+    let mask = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut byte = 0usize;
     for (i, &v) in x.iter().enumerate() {
         let c = (v / eps + uniform01(i as u32, seed)).floor() as i64;
         checksum = checksum_step(checksum, c);
-        reduced.push(c.rem_euclid(m) as u32);
+        acc |= ((c.rem_euclid(m) as u64) & mask) << acc_bits;
+        acc_bits += bits;
+        while acc_bits >= 8 {
+            payload[byte] = (acc & 0xFF) as u8;
+            byte += 1;
+            acc >>= 8;
+            acc_bits -= 8;
+        }
     }
-    QuantizedMsg {
-        bits,
-        eps,
-        seed,
-        len: x.len(),
-        payload: pack_bits(&reduced, bits),
-        checksum,
+    if acc_bits > 0 {
+        payload[byte] = (acc & 0xFF) as u8;
     }
+    checksum
 }
 
 /// Decode against the receiver's own model `reference`: each coordinate is
@@ -125,18 +164,45 @@ pub fn encode(x: &[f32], eps: f32, bits: u32, seed: u32) -> QuantizedMsg {
 /// Exact whenever the distance criterion held at encode time; otherwise the
 /// checksum fires.
 pub fn decode(msg: &QuantizedMsg, reference: &[f32]) -> Result<Vec<f32>, QuantError> {
+    let mut out = vec![0.0f32; msg.len];
+    decode_into(msg, reference, &mut out)?;
+    Ok(out)
+}
+
+/// Caller-buffer decode: like [`decode`] but writing into `out`
+/// (`out.len() == msg.len`) so hot paths allocate nothing. On
+/// `Err(ChecksumMismatch)` the contents of `out` are unspecified (the
+/// traversal has already written the mis-decoded representatives); callers
+/// fall back to the sender's full-precision model as usual.
+///
+/// ```
+/// use swarm_sgd::quant::{decode, decode_into, encode};
+/// let x = [0.5f32, 1.5, -0.25];
+/// let msg = encode(&x, 1e-2, 8, 3);
+/// let reference = [0.49f32, 1.52, -0.26];
+/// let mut out = [0.0f32; 3];
+/// decode_into(&msg, &reference, &mut out).unwrap();
+/// assert_eq!(out.to_vec(), decode(&msg, &reference).unwrap());
+/// ```
+pub fn decode_into(
+    msg: &QuantizedMsg,
+    reference: &[f32],
+    out: &mut [f32],
+) -> Result<(), QuantError> {
     if reference.len() != msg.len {
         return Err(QuantError::LengthMismatch {
             expected: msg.len,
             got: reference.len(),
         });
     }
+    assert_eq!(out.len(), msg.len, "decode_into: output buffer length");
     let m = 1i64 << msg.bits;
     let half = m / 2;
     let reduced = unpack_bits(&msg.payload, msg.bits, msg.len);
-    let mut checksum: u64 = 0xcbf29ce484222325;
-    let mut out = Vec::with_capacity(msg.len);
-    for (i, (&r, &y)) in reduced.iter().zip(reference).enumerate() {
+    let mut checksum: u64 = CHECKSUM_INIT;
+    for (i, ((&r, &y), o)) in
+        reduced.iter().zip(reference).zip(out.iter_mut()).enumerate()
+    {
         // receiver's own (deterministic, same-seed) lattice coordinate
         let yc = (y / msg.eps + uniform01(i as u32, msg.seed)).floor() as i64;
         // signed difference of residues in [-M/2, M/2)
@@ -148,12 +214,12 @@ pub fn decode(msg: &QuantizedMsg, reference: &[f32]) -> Result<Vec<f32>, QuantEr
         }
         let c = yc + diff;
         checksum = checksum_step(checksum, c);
-        out.push(c as f32 * msg.eps);
+        *o = c as f32 * msg.eps;
     }
     if checksum != msg.checksum {
         return Err(QuantError::ChecksumMismatch);
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -23,8 +23,12 @@ mod packing;
 mod qsgd;
 
 pub use lattice::{
-    decode, encode, hash_u32, quantize_unbiased, uniform01, QuantError,
-    QuantizedMsg,
+    decode, decode_into, encode, encode_into, hash_u32, quantize_unbiased,
+    uniform01, QuantError, QuantizedMsg,
 };
-pub use packing::{pack_bits, unpack_bits};
-pub use qsgd::{qsgd_decode, qsgd_encode, QsgdMsg};
+pub use packing::{pack_bits, pack_bits_into, unpack_bits, unpack_bits_into};
+pub use qsgd::{
+    qsgd_decode, qsgd_decode_into, qsgd_encode, qsgd_encode_into, QsgdMsg,
+};
+
+pub(crate) use lattice::{checksum_step, CHECKSUM_INIT};

@@ -1,10 +1,29 @@
 //! Dense bit packing for lattice coordinates (1..=16 bits per value).
 
 /// Pack the low `bits` of each value into a dense little-endian bit stream.
+///
+/// Thin allocating wrapper over [`pack_bits_into`].
 pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_bits_into(values, bits, &mut out);
+    out
+}
+
+/// Caller-buffer [`pack_bits`]: `out` is cleared and resized to the packed
+/// length — once it has capacity, repeated calls allocate nothing.
+///
+/// ```
+/// use swarm_sgd::quant::{pack_bits, pack_bits_into};
+/// let vals = [3u32, 1, 2];
+/// let mut buf = Vec::new();
+/// pack_bits_into(&vals, 2, &mut buf);
+/// assert_eq!(buf, pack_bits(&vals, 2));
+/// ```
+pub fn pack_bits_into(values: &[u32], bits: u32, out: &mut Vec<u8>) {
     assert!((1..=16).contains(&bits), "bits must be in 1..=16");
     let total_bits = values.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    out.clear();
+    out.resize(total_bits.div_ceil(8), 0);
     let mask = (1u64 << bits) - 1;
     let mut acc: u64 = 0;
     let mut acc_bits: u32 = 0;
@@ -22,13 +41,23 @@ pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
     if acc_bits > 0 {
         out[byte] = (acc & 0xFF) as u8;
     }
-    out
 }
 
 /// Inverse of [`pack_bits`]; `count` values of width `bits`.
+///
+/// Thin allocating wrapper over [`unpack_bits_into`].
 pub fn unpack_bits(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    unpack_bits_into(bytes, bits, count, &mut out);
+    out
+}
+
+/// Caller-buffer [`unpack_bits`]: `out` is cleared then filled with `count`
+/// values — once it has capacity, repeated calls allocate nothing.
+pub fn unpack_bits_into(bytes: &[u8], bits: u32, count: usize, out: &mut Vec<u32>) {
     assert!((1..=16).contains(&bits));
-    let mut out = Vec::with_capacity(count);
+    out.clear();
+    out.reserve(count);
     let mask = (1u64 << bits) - 1;
     let mut acc: u64 = 0;
     let mut acc_bits: u32 = 0;
@@ -44,7 +73,6 @@ pub fn unpack_bits(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
         acc >>= bits;
         acc_bits -= bits;
     }
-    out
 }
 
 #[cfg(test)]
@@ -63,6 +91,21 @@ mod tests {
             assert_eq!(packed.len(), (257 * bits as usize).div_ceil(8));
             let got = unpack_bits(&packed, bits, vals.len());
             assert_eq!(got, vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_wrappers_with_reused_buffers() {
+        let mut rng = Pcg64::seed(9);
+        let mut packed = Vec::new();
+        let mut vals_out = Vec::new();
+        for bits in 1..=16u32 {
+            let mask = (1u32 << bits) - 1;
+            let vals: Vec<u32> = (0..119).map(|_| rng.next_u32() & mask).collect();
+            pack_bits_into(&vals, bits, &mut packed);
+            assert_eq!(packed, pack_bits(&vals, bits), "bits={bits}");
+            unpack_bits_into(&packed, bits, vals.len(), &mut vals_out);
+            assert_eq!(vals_out, vals, "bits={bits}");
         }
     }
 

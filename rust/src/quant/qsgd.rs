@@ -34,37 +34,56 @@ impl QsgdMsg {
 }
 
 /// Quantize with `bits` per coordinate (1 sign bit + level bits).
+///
+/// Thin allocating wrapper over [`qsgd_encode_into`].
 pub fn qsgd_encode(x: &[f32], bits: u32, rng: &mut Pcg64) -> QsgdMsg {
-    assert!((2..=16).contains(&bits));
-    let s = (1u32 << (bits - 1)) - 1; // levels
-    let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
-    let levels = x
-        .iter()
-        .map(|&v| {
-            if norm == 0.0 {
-                return 0u32;
-            }
-            let r = v.abs() / norm * s as f32;
-            let lo = r.floor();
-            let level = lo as u32 + u32::from(rng.f32() < (r - lo));
-            let sign = u32::from(v < 0.0);
-            (level << 1) | sign
-        })
-        .collect();
+    let mut levels = Vec::new();
+    let norm = qsgd_encode_into(x, bits, rng, &mut levels);
     QsgdMsg { norm, levels, bits, len: x.len() }
 }
 
+/// Caller-buffer [`qsgd_encode`]: writes the packed sign+level values into
+/// `levels` (cleared first, so reuse allocates nothing once capacity
+/// exists) and returns the L2 norm.
+pub fn qsgd_encode_into(x: &[f32], bits: u32, rng: &mut Pcg64, levels: &mut Vec<u32>) -> f32 {
+    assert!((2..=16).contains(&bits));
+    let s = (1u32 << (bits - 1)) - 1; // levels
+    let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+    levels.clear();
+    levels.reserve(x.len());
+    for &v in x {
+        if norm == 0.0 {
+            levels.push(0u32);
+            continue;
+        }
+        let r = v.abs() / norm * s as f32;
+        let lo = r.floor();
+        let level = lo as u32 + u32::from(rng.f32() < (r - lo));
+        let sign = u32::from(v < 0.0);
+        levels.push((level << 1) | sign);
+    }
+    norm
+}
+
 /// Dequantize.
+///
+/// Thin allocating wrapper over [`qsgd_decode_into`].
 pub fn qsgd_decode(msg: &QsgdMsg) -> Vec<f32> {
+    let mut out = vec![0.0f32; msg.levels.len()];
+    qsgd_decode_into(msg, &mut out);
+    out
+}
+
+/// Caller-buffer [`qsgd_decode`]: writes into `out`
+/// (`out.len() == msg.levels.len()`).
+pub fn qsgd_decode_into(msg: &QsgdMsg, out: &mut [f32]) {
+    assert_eq!(out.len(), msg.levels.len(), "qsgd_decode_into: buffer length");
     let s = (1u32 << (msg.bits - 1)) - 1;
-    msg.levels
-        .iter()
-        .map(|&lv| {
-            let sign = if lv & 1 == 1 { -1.0f32 } else { 1.0 };
-            let level = (lv >> 1) as f32;
-            sign * msg.norm * level / s.max(1) as f32
-        })
-        .collect()
+    for (o, &lv) in out.iter_mut().zip(&msg.levels) {
+        let sign = if lv & 1 == 1 { -1.0f32 } else { 1.0 };
+        let level = (lv >> 1) as f32;
+        *o = sign * msg.norm * level / s.max(1) as f32;
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,239 @@
+//! Property tests for the fused quantize-average kernels (`--kernel`):
+//!
+//! 1. **Fused ≡ two-pass** (the crate's core contract): the one-traversal
+//!    scalar kernel is bit-identical to the legacy `encode → pack → unpack
+//!    → decode → merge` path, on the f32 and lattice paths, across the
+//!    codec's full bit-width range. (Bit width 1 is outside the lattice
+//!    codec's domain — the encoder has always asserted `2..=16` — so the
+//!    fused kernels pin the same rejection rather than inventing a wider
+//!    domain.)
+//! 2. **SIMD ≡ scalar**: the chunk-of-8 lane path is bit-exact with the
+//!    scalar reference (elementwise math, checksums folded in element
+//!    order), across lengths that do and don't divide the lane width.
+//! 3. **Run-level**: switching `--kernel` must not change a single metric
+//!    bit on the replay executors — serial and parallel, every
+//!    freerun-eligible algorithm, lattice and f32 wires. This is what lets
+//!    the replay-determinism contract hold with the kernel axis open.
+//! 4. **Tagging**: the selected kernel is surfaced through
+//!    `RunMetrics::kernel` (and `FreerunStats::kernel`) so bench rows are
+//!    kernel-tagged.
+
+use swarm_sgd::coordinator::{
+    make_algorithm, quantized_transfer, run_freerun, run_parallel, run_serial, AlgoOptions,
+    Kernel, LrSchedule, RunMetrics, RunSpec, WireCodec,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::kernels::{
+    avg_into, avg_into_both, half_into, lattice_qavg_into, lattice_take_half_into,
+};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+fn close_pair(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::seed(seed);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<f32> = x.iter().map(|v| v + 0.01 * rng.normal() as f32).collect();
+    (x, y)
+}
+
+#[test]
+fn fused_scalar_equals_two_pass_across_bit_widths() {
+    // qavg and take-half vs the two-pass reference (quantized_transfer +
+    // a separate merge sweep), bit for bit, at every valid lattice width
+    for bits in 2..=16u32 {
+        for (dim, seed) in [(97usize, 3u32), (256, 9), (1021, 31)] {
+            let (x, y) = close_pair(dim, bits as u64 * 1000 + dim as u64);
+            let eps = 2e-3f32;
+            let tr = quantized_transfer(&x, &y, eps, bits, seed);
+
+            let want_avg: Vec<f32> =
+                y.iter().zip(&tr.decoded).map(|(a, d)| 0.5 * (a + d)).collect();
+            let mut avg = vec![0.0f32; dim];
+            let (b, fb) = lattice_qavg_into(Kernel::Scalar, &x, &y, eps, bits, seed, &mut avg);
+            assert_eq!(avg, want_avg, "qavg bits={bits} dim={dim}");
+            assert_eq!((b, fb), (tr.bits, tr.fell_back), "qavg bits={bits} dim={dim}");
+
+            let want_half: Vec<f32> = tr.decoded.iter().map(|d| 0.5 * d).collect();
+            let mut half = vec![0.0f32; dim];
+            let (b, fb) =
+                lattice_take_half_into(Kernel::Scalar, &x, &y, eps, bits, seed, &mut half);
+            assert_eq!(half, want_half, "half bits={bits} dim={dim}");
+            assert_eq!((b, fb), (tr.bits, tr.fell_back), "half bits={bits} dim={dim}");
+        }
+    }
+}
+
+#[test]
+fn fused_scalar_equals_two_pass_on_f32_path() {
+    // the full-precision path: fused avg == copy + separate midpoint sweep
+    let (x, y) = close_pair(513, 7);
+    let want: Vec<f32> = x.iter().zip(&y).map(|(a, b)| 0.5 * (a + b)).collect();
+    let mut out = vec![0.0f32; x.len()];
+    avg_into(Kernel::Scalar, &x, &y, &mut out);
+    assert_eq!(out, want);
+    half_into(Kernel::Scalar, &y, &mut out);
+    let want_half: Vec<f32> = y.iter().map(|v| 0.5 * v).collect();
+    assert_eq!(out, want_half);
+}
+
+#[test]
+#[should_panic(expected = "bits must be in 2..=16")]
+fn fused_kernel_pins_the_codec_bit_width_domain() {
+    // bit width 1 has never been in the lattice codec's domain; the fused
+    // kernel rejects it with the same assertion instead of widening it
+    let (x, y) = close_pair(8, 1);
+    let mut out = vec![0.0f32; 8];
+    lattice_qavg_into(Kernel::Scalar, &x, &y, 1e-3, 1, 0, &mut out);
+}
+
+#[test]
+fn simd_equals_scalar_across_lengths_and_widths() {
+    // bit-exactness of the lane path, including lengths below, at, and off
+    // multiples of the 8-wide chunk
+    for dim in [1usize, 7, 8, 9, 16, 63, 64, 65, 300, 1021] {
+        for bits in [2u32, 5, 8, 12, 16] {
+            let (x, y) = close_pair(dim, dim as u64 * 77 + bits as u64);
+            let mut a = vec![0.0f32; dim];
+            let mut b = vec![0.0f32; dim];
+            let ra = lattice_qavg_into(Kernel::Scalar, &x, &y, 1e-3, bits, 5, &mut a);
+            let rb = lattice_qavg_into(Kernel::Simd, &x, &y, 1e-3, bits, 5, &mut b);
+            assert_eq!(a, b, "qavg dim={dim} bits={bits}");
+            assert_eq!(ra, rb, "qavg dim={dim} bits={bits}");
+            let ra = lattice_take_half_into(Kernel::Scalar, &x, &y, 1e-3, bits, 5, &mut a);
+            let rb = lattice_take_half_into(Kernel::Simd, &x, &y, 1e-3, bits, 5, &mut b);
+            assert_eq!(a, b, "half dim={dim} bits={bits}");
+            assert_eq!(ra, rb, "half dim={dim} bits={bits}");
+        }
+        let (x, y) = close_pair(dim, dim as u64);
+        let mut a = vec![0.0f32; dim];
+        let mut b = vec![0.0f32; dim];
+        avg_into(Kernel::Scalar, &x, &y, &mut a);
+        avg_into(Kernel::Simd, &x, &y, &mut b);
+        assert_eq!(a, b, "avg dim={dim}");
+        let (mut xa, mut ya) = (x.clone(), y.clone());
+        let (mut xb, mut yb) = (x.clone(), y.clone());
+        avg_into_both(Kernel::Scalar, &mut xa, &mut ya);
+        avg_into_both(Kernel::Simd, &mut xb, &mut yb);
+        assert_eq!(xa, xb, "both dim={dim}");
+        assert_eq!(ya, yb, "both dim={dim}");
+    }
+}
+
+fn quad(n: usize, dim: usize, seed: u64) -> QuadraticOracle {
+    QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.2, seed)
+}
+
+fn graph(n: usize) -> Graph {
+    let mut rng = Pcg64::seed(5);
+    Graph::build(Topology::Complete, n, &mut rng)
+}
+
+fn spec(n: usize, t: u64, seed: u64) -> RunSpec {
+    RunSpec {
+        n,
+        events: t,
+        lr: LrSchedule::Constant(0.05),
+        seed,
+        name: "fused-it".into(),
+        eval_every: t / 4,
+        track_gamma: true,
+    }
+}
+
+/// Every externally observable metric must agree to the bit.
+fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, tag: &str) {
+    assert_eq!(a.curve.len(), b.curve.len(), "{tag}");
+    for (p, q) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(p.t, q.t, "{tag}");
+        assert_eq!(p.eval_loss.to_bits(), q.eval_loss.to_bits(), "{tag} eval t={}", p.t);
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits(), "{tag} train t={}", p.t);
+        assert_eq!(p.gamma.to_bits(), q.gamma.to_bits(), "{tag} gamma t={}", p.t);
+        assert_eq!(p.sim_time.to_bits(), q.sim_time.to_bits(), "{tag} time t={}", p.t);
+        assert_eq!(p.bits, q.bits, "{tag} bits t={}", p.t);
+    }
+    assert_eq!(a.final_eval_loss.to_bits(), b.final_eval_loss.to_bits(), "{tag}");
+    assert_eq!(a.total_bits, b.total_bits, "{tag}");
+    assert_eq!(a.quant_fallbacks, b.quant_fallbacks, "{tag}");
+    assert_eq!(a.local_steps, b.local_steps, "{tag}");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{tag}");
+    assert_eq!(a.final_model, b.final_model, "{tag}");
+}
+
+#[test]
+fn kernel_axis_is_bit_invariant_on_replay_executors() {
+    // --kernel simd must not move a single bit on serial OR parallel, for
+    // every freerun-eligible algorithm on both wires (the quantized merge
+    // is where the fused lattice kernel actually runs), under a jittery
+    // cost model so time accounting is pinned too
+    let n = 8;
+    let g = graph(n);
+    let backend = quad(n, 37, 17); // dim off the 8-lane multiple on purpose
+    let cost = CostModel { jitter: 0.05, straggler_prob: 0.01, ..CostModel::default() };
+    for wire in [WireCodec::F32, WireCodec::Lattice { bits: 8, eps: 1e-2 }] {
+        for name in ["swarm", "poisson", "adpsgd", "dpsgd", "sgp"] {
+            let s = spec(n, 240, 0xF15E);
+            let scalar = make_algorithm(
+                name,
+                &AlgoOptions { wire, kernel: Kernel::Scalar, ..AlgoOptions::default() },
+            )
+            .unwrap();
+            let simd = make_algorithm(
+                name,
+                &AlgoOptions { wire, kernel: Kernel::Simd, ..AlgoOptions::default() },
+            )
+            .unwrap();
+            let tag = format!("{name}/{}", wire.name());
+            let base = run_serial(scalar.as_ref(), &backend, &s, &g, &cost);
+            let serial_simd = run_serial(simd.as_ref(), &backend, &s, &g, &cost);
+            assert_bit_identical(&base, &serial_simd, &tag);
+            for threads in [2, 4] {
+                let par = run_parallel(simd.as_ref(), &backend, &s, &g, &cost, threads);
+                assert_bit_identical(&base, &par, &format!("{tag}/threads={threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_tag_is_surfaced_in_run_metrics() {
+    let n = 8;
+    let g = graph(n);
+    let backend = quad(n, 16, 3);
+    let cost = CostModel::deterministic(0.2);
+    let s = spec(n, 80, 0x7A6);
+    let scalar = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+    let simd = make_algorithm(
+        "swarm",
+        &AlgoOptions { kernel: Kernel::Simd, ..AlgoOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(run_serial(scalar.as_ref(), &backend, &s, &g, &cost).kernel, "scalar");
+    assert_eq!(run_serial(simd.as_ref(), &backend, &s, &g, &cost).kernel, "simd");
+    assert_eq!(run_parallel(simd.as_ref(), &backend, &s, &g, &cost, 2).kernel, "simd");
+}
+
+#[test]
+fn freerun_runs_on_the_simd_kernel_and_tags_its_stats() {
+    // freerun is non-replayable, so assert liveness + tagging, not bits
+    let n = 16;
+    let g = graph(n);
+    let backend = quad(n, 32, 11);
+    let cost = CostModel::deterministic(0.1);
+    let s = spec(n, 2000, 0xFEE);
+    let algo = make_algorithm(
+        "sgp",
+        &AlgoOptions {
+            wire: WireCodec::Lattice { bits: 8, eps: 1e-2 },
+            kernel: Kernel::Simd,
+            ..AlgoOptions::default()
+        },
+    )
+    .unwrap();
+    let m = run_freerun(algo.as_ref(), &backend, &s, &g, &cost, 2, 4);
+    assert_eq!(m.kernel, "simd");
+    let fr = m.freerun.expect("freerun stats");
+    assert_eq!(fr.kernel, "simd");
+    assert!(m.final_eval_loss.is_finite());
+    assert!(m.interactions > 0);
+}

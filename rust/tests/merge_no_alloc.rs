@@ -1,0 +1,92 @@
+//! Zero-allocation smoke test for the scratch-threaded merge path.
+//!
+//! The API-redesign contract: once a worker owns a warmed-up
+//! [`MergeScratch`], running merges through it allocates **nothing** per
+//! interaction — the fused kernels write into the scratch buffers and the
+//! policies never materialize a `Vec`. Pinned with a counting global
+//! allocator; this file holds exactly one test so no concurrent test body
+//! can pollute the counter inside the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use swarm_sgd::coordinator::{
+    LocalSteps, MergeScratch, MixPolicy, NodeState, PairMerge, PairwisePolicy, PushSumPolicy,
+    PushSumWeighted, SlotPayload, StepCtx, WireCodec,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::topology::{Graph, Topology};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+#[test]
+fn merges_through_a_warm_scratch_do_not_allocate() {
+    let n = 4;
+    let dim = 64;
+    let backend = QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, 0.2, 7);
+    let mut grng = Pcg64::seed(5);
+    let graph = Graph::build(Topology::Complete, n, &mut grng);
+    let cost = CostModel::deterministic(0.1);
+    let ctx = StepCtx { backend: &backend, cost: &cost, graph: &graph, lr: 0.05, dim, n };
+    let mut rng = Pcg64::seed(11);
+
+    // a pairwise (plain-model) policy on the lattice wire — the fused
+    // qavg kernel — and the push-sum take-half policy on dim+1 lanes
+    let pairwise = PairwisePolicy {
+        steps: LocalSteps::Fixed(2),
+        merge: PairMerge::NonBlocking,
+        wire: WireCodec::Lattice { bits: 8, eps: 1e-2 },
+    };
+    let pushsum = PushSumPolicy {
+        steps: LocalSteps::Fixed(2),
+        wire: WireCodec::Lattice { bits: 8, eps: 1e-2 },
+    };
+
+    let mut st = NodeState::new(vec![0.1; dim], vec![0.0; dim], Pcg64::seed(3));
+    let mut scratch = MergeScratch::new(dim + 1); // widest payload in play
+    for (i, v) in scratch.snapshot.iter_mut().enumerate() {
+        *v = 0.1 + 1e-3 * i as f32;
+    }
+    st.snap.copy_from_slice(&st.params);
+
+    // warm-up: first merges touch everything once
+    pairwise.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+    PushSumWeighted::encode(&st.params, st.weight, &mut scratch.publish[..dim + 1]);
+    pushsum.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        pairwise.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+        pushsum.merge(&ctx, 0, &mut st, &mut scratch, &mut rng);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "scratch-threaded merges allocated {} times in 200 interactions",
+        after - before
+    );
+}
