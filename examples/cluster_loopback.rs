@@ -1,0 +1,140 @@
+//! Loopback cluster demo: one coordinator + two workers as real OS
+//! processes on 127.0.0.1, gossiping lattice-quantized model payloads over
+//! TCP — the smallest end-to-end run of `--executor cluster`.
+//!
+//! The example re-execs itself for the child roles, so a single
+//! `cargo run --release --example cluster_loopback` is the whole cluster:
+//!
+//! * parent: spawns the coordinator, parses its stdout for the ephemeral
+//!   port, spawns two workers pointed at it, relays output, and appends an
+//!   interactions/sec row to `BENCH_cluster.json` (merged into the
+//!   committed perf trajectory by the CI cluster-smoke job);
+//! * `coordinator` arg: runs [`swarm_sgd::cluster::run_coordinator`];
+//! * `worker ADDR` arg: runs [`swarm_sgd::cluster::run_worker`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Command, Stdio};
+
+use swarm_sgd::cluster;
+use swarm_sgd::config::RunConfig;
+
+const WORKERS: usize = 2;
+const N: usize = 16;
+const INTERACTIONS: u64 = 1500;
+
+fn run_config() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    for (k, v) in [
+        ("algo", "swarm"),
+        ("preset", "oracle:quadratic"),
+        ("executor", "cluster"),
+        ("n", "16"),
+        ("interactions", "1500"),
+        ("wire", "lattice"),
+        ("workers", "2"),
+        ("heartbeat_timeout", "10"),
+        ("eval_every", "0"),
+    ] {
+        cfg.set(k, v).expect("static config");
+    }
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(|s| s.as_str()) {
+        Some("coordinator") => child_coordinator(),
+        Some("worker") => {
+            let addr = args.get(1).expect("usage: cluster_loopback worker ADDR");
+            cluster::run_worker(addr, 0)
+        }
+        _ => parent(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn child_coordinator() -> Result<(), String> {
+    let cfg = run_config();
+    let dir = std::env::temp_dir().join("swarm_cluster_loopback");
+    std::fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    cluster::run_coordinator(&cfg, "127.0.0.1:0", &dir).map(|_| ())
+}
+
+fn parent() -> Result<(), String> {
+    let me = std::env::current_exe().map_err(|e| e.to_string())?;
+    println!(
+        "cluster loopback: 1 coordinator + {WORKERS} workers on 127.0.0.1 \
+         (swarm, n={N}, {INTERACTIONS} interactions, lattice wire)\n"
+    );
+    let mut coord = Command::new(&me)
+        .arg("coordinator")
+        .stdout(Stdio::piped())
+        .spawn()
+        .map_err(|e| format!("spawn coordinator: {e}"))?;
+    let stdout = coord.stdout.take().expect("piped stdout");
+    let mut lines = BufReader::new(stdout).lines();
+
+    // the coordinator prints "cluster coordinator listening on ADDR (...)"
+    let mut addr = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| e.to_string())?;
+        println!("[coord] {line}");
+        if let Some(rest) = line.strip_prefix("cluster coordinator listening on ") {
+            addr = rest.split_whitespace().next().map(str::to_string);
+            break;
+        }
+    }
+    let addr = addr.ok_or("coordinator exited before printing its address")?;
+
+    let workers: Vec<_> = (0..WORKERS)
+        .map(|_| Command::new(&me).args(["worker", &addr]).spawn())
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("spawn worker: {e}"))?;
+
+    // relay the rest of the coordinator's report, harvesting the numbers
+    let mut throughput = 0.0f64;
+    let mut final_line = String::new();
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        println!("[coord] {line}");
+        if let Some(rest) = line.trim().strip_prefix("real throughput") {
+            if let Some(v) = rest.trim_start_matches([':', ' ']).split_whitespace().next() {
+                throughput = v.parse().unwrap_or(0.0);
+            }
+        }
+        if line.starts_with("cluster: final ") {
+            final_line = line;
+        }
+    }
+    let status = coord.wait().map_err(|e| e.to_string())?;
+    for mut w in workers {
+        let ws = w.wait().map_err(|e| e.to_string())?;
+        if !ws.success() {
+            return Err(format!("worker exited with {ws}"));
+        }
+    }
+    if !status.success() {
+        return Err(format!("coordinator exited with {status}"));
+    }
+    if final_line.is_empty() {
+        return Err("coordinator never printed its final report".into());
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"cluster_loopback\",\n  \"workload\": \
+         {{\"n\": {N}, \"workers\": {WORKERS}, \"interactions\": {INTERACTIONS}, \
+         \"backend\": \"quadratic\", \"wire\": \"lattice\"}},\n  \"results\": [\n    \
+         {{\"label\": \"loopback-tcp\", \"interactions_per_sec\": {throughput:.1}, \
+         \"report\": \"{final_line}\"}}\n  ]\n}}\n",
+    );
+    let written = std::fs::File::create("BENCH_cluster.json")
+        .and_then(|mut f| f.write_all(json.as_bytes()));
+    match written {
+        Ok(()) => println!("\nwrote BENCH_cluster.json"),
+        Err(e) => eprintln!("could not write BENCH_cluster.json: {e}"),
+    }
+    Ok(())
+}

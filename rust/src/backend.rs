@@ -100,3 +100,55 @@ pub trait Backend: Sync {
 
 #[allow(dead_code)]
 fn _assert_backend_object_safe(_: &dyn Backend) {}
+
+/// The `oracle:quadratic` preset — single definition (dim 64, σ = 0.2) so
+/// every executor, every cluster process role, and the integration tests
+/// train the *identical* objective for a given `(n, seed)`.
+pub fn quadratic_preset(cfg: &crate::config::RunConfig) -> crate::grad::QuadraticOracle {
+    crate::grad::QuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
+}
+
+/// Build the backend a config names: an `oracle:*` gradient oracle or the
+/// PJRT artifact path. Lives in the library (not the CLI binary) because
+/// the cluster executor's worker processes rebuild their backend from a
+/// config received over the wire.
+pub fn build_backend(
+    cfg: &crate::config::RunConfig,
+) -> Result<Box<dyn Backend>, String> {
+    use crate::runtime::{XlaBackend, XlaBackendConfig};
+    if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
+        return Ok(match kind {
+            "quadratic" => Box::new(quadratic_preset(cfg)),
+            "softmax" => Box::new(crate::grad::SoftmaxOracle::synthetic(
+                cfg.data_per_agent * cfg.n,
+                32,
+                10,
+                cfg.n,
+                32,
+                4.0,
+                cfg.seed,
+            )),
+            "logistic" => Box::new(crate::grad::LogisticOracle::synthetic(
+                cfg.data_per_agent * cfg.n,
+                16,
+                cfg.n,
+                32,
+                cfg.shard == crate::config::ShardMode::Iid,
+                cfg.seed,
+            )),
+            k => return Err(format!("unknown oracle '{k}'")),
+        });
+    }
+    let xcfg = XlaBackendConfig {
+        agents: cfg.n,
+        data_per_agent: cfg.data_per_agent,
+        shard: cfg.shard,
+        separation: 3.0,
+        seed: cfg.seed,
+        eval_batches: 2,
+    };
+    Ok(Box::new(
+        XlaBackend::load(std::path::Path::new(&cfg.artifacts_dir), &cfg.preset, xcfg)
+            .map_err(|e| format!("{e:#}"))?,
+    ))
+}

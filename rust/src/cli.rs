@@ -91,14 +91,19 @@ swarm — SwarmSGD: decentralized SGD with asynchronous, local & quantized updat
 USAGE:
   swarm train   [--config run.ini] [--set k=v,k=v] [--quick]
                 [--algorithm swarm|poisson|adpsgd|dpsgd|sgp|localsgd|allreduce]
-                [--executor serial|parallel|freerun] [--threads K] [--shards S]
+                [--executor serial|parallel|freerun|cluster]
+                [--threads K] [--shards S]
                 [--wire lattice|f32] [--kernel scalar|simd]
+                [--role coordinator|worker] [--listen HOST:PORT]
+                [--connect HOST:PORT] [--workers W] [--heartbeat-timeout S]
+                [--checkpoint-dir DIR] [--throttle-us U]
                 train one algorithm on one backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, wire, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
                 shard, data_per_agent, artifacts_dir, batch_time, jitter,
                 straggler_prob, straggle_factor, latency, bandwidth,
-                model_bytes, out_csv, executor, threads, shards, kernel
+                model_bytes, out_csv, executor, threads, shards, kernel,
+                workers, heartbeat_timeout
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
@@ -122,6 +127,20 @@ USAGE:
                 seqlock contention, worker busy/wait, and the wire codec's
                 bit/fallback attribution. localsgd/allreduce mix through
                 an irreducible global mean and refuse freerun.
+                --executor cluster runs the freerun protocol across OS
+                processes: start ONE coordinator (--role coordinator
+                --listen HOST:PORT; PORT 0 picks an ephemeral port, printed
+                on stdout), then `workers` workers (--role worker --connect
+                HOST:PORT). The coordinator assigns node shards, ships the
+                run config over the wire (worker-side --set is ignored),
+                aggregates streamed progress, checkpoints to
+                --checkpoint-dir, and on a missed --heartbeat-timeout (s)
+                reassigns the dead worker's shard from its last checkpoint.
+                Workers gossip WireCodec-encoded payloads peer-to-peer over
+                TCP, so wire bits are MEASURED from the socket — the
+                simulated-wire knobs (latency, bandwidth, model_bytes) are
+                ignored with a warning. Same eligibility as freerun;
+                non-replayable, statistical assertions only.
                 --wire lattice|f32 picks the wire codec on EVERY executor:
                 lattice sends model payloads through the Appendix-G
                 lattice quantizer (quant_bits/quant_eps; decode fallbacks
@@ -157,6 +176,9 @@ EXAMPLES:
   swarm train --algorithm sgp --executor freerun --threads 4 --wire lattice \\
               --set preset=oracle:quadratic,n=32,interactions=5000
   swarm train --set preset=oracle:quadratic,model_bytes=45000000,latency=1e-4
+  swarm train --executor cluster --role coordinator --listen 127.0.0.1:0 \\
+              --workers 2 --set preset=oracle:quadratic,n=16,interactions=2000
+  swarm train --executor cluster --role worker --connect 127.0.0.1:7000
   swarm figure --id table1 --quick
   swarm figure --id all --out results
 ";

@@ -1,0 +1,463 @@
+//! The cluster coordinator process: registration, shard assignment, config
+//! distribution, telemetry aggregation, checkpointing, failure recovery,
+//! and the final report.
+//!
+//! The coordinator never touches the gossip plane — workers exchange model
+//! payloads peer-to-peer. Its control plane carries five things:
+//!
+//! 1. **Assign** — rank, the full run config (as INI text, the same format
+//!    `--config` reads), the node shard, and every peer's gossip address;
+//! 2. **Progress** — cumulative counters, streamed as heartbeats; the sum
+//!    of the latest snapshots decides when the interaction target is hit;
+//! 3. **Checkpoint** — each worker's owned slots, persisted periodically
+//!    via [`output::checkpoint`](crate::output::checkpoint) so a dead
+//!    worker's shard can be reassigned from its last published state;
+//! 4. **Adopt** — the recovery broadcast: every live worker updates its
+//!    owner map, the adopter additionally resumes the orphaned nodes;
+//! 5. **Done/Shutdown** — the drain handshake at the interaction target.
+//!
+//! Failure detection is heartbeat-based: a worker whose last `Progress` is
+//! older than `heartbeat_timeout` seconds (or whose socket drops) is
+//! declared dead and its shard moves to the lowest live rank.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::proto::{done_staleness, Msg, NodeLanes, PeerAddr, ProgressBody};
+use super::transport::{send_msg, FrameConn};
+use crate::backend::{build_backend, Backend};
+use crate::config::RunConfig;
+use crate::coordinator::{
+    Algorithm, PayloadKind, PlainModel, PushSumWeighted, SlotPayload, StalenessHistogram,
+};
+use crate::output::checkpoint::save_npy;
+
+/// What the coordinator reports when the cluster run completes.
+#[derive(Debug)]
+pub struct ClusterReport {
+    /// total interactions across all workers (from final Done counters)
+    pub events: u64,
+    pub wall_secs: f64,
+    /// real socket bits on the gossip plane, summed over workers
+    pub wire_bits: u64,
+    /// shard reassignments performed after heartbeat-timeout detections
+    pub recoveries: u32,
+    /// consensus-model loss on the coordinator's own backend
+    pub final_eval_loss: f64,
+    pub interactions_per_sec: f64,
+}
+
+/// Per-worker bookkeeping on the coordinator.
+struct WorkerSlot {
+    rank: u32,
+    stream: TcpStream,
+    alive: bool,
+    done: bool,
+    last_seen: Instant,
+    progress: ProgressBody,
+    /// the worker's last checkpointed shard (node → lanes)
+    checkpoint: Vec<NodeLanes>,
+}
+
+enum Event {
+    Msg(u32, Msg),
+    Gone(u32),
+}
+
+/// Run the coordinator: listen on `listen`, register `cfg.workers` workers,
+/// drive the run to `cfg.interactions` total interactions, and report.
+/// `checkpoint_dir` receives `cluster_ckpt.npy` (periodic) and, when
+/// `cfg.out_npy` behavior is wanted, the final consensus model.
+pub fn run_coordinator(
+    cfg: &RunConfig,
+    listen: &str,
+    checkpoint_dir: &Path,
+) -> Result<ClusterReport, String> {
+    let algo = crate::coordinator::make_algorithm(
+        &cfg.algo,
+        &crate::coordinator::AlgoOptions {
+            local_steps: cfg.local_steps(),
+            mode: cfg.averaging_mode()?,
+            h_localsgd: cfg.h.round().max(0.0) as u64,
+            wire: cfg.wire_codec()?,
+            kernel: cfg.kernel_enum()?,
+        },
+    )?;
+    let policy = algo.mix_policy().ok_or_else(|| {
+        format!(
+            "--executor cluster requires a free-running MixPolicy \
+             (cluster-eligible: swarm, poisson, adpsgd, dpsgd, and sgp via \
+             weighted push-sum slots); '{}' mixes through an irreducible \
+             global mean — use --executor serial|parallel",
+            cfg.algo
+        )
+    })?;
+    let backend = build_backend(cfg)?;
+    match policy.payload() {
+        PayloadKind::Plain => {
+            coordinate::<PlainModel>(cfg, algo.as_ref(), backend.as_ref(), listen, checkpoint_dir)
+        }
+        PayloadKind::PushSumWeighted => coordinate::<PushSumWeighted>(
+            cfg,
+            algo.as_ref(),
+            backend.as_ref(),
+            listen,
+            checkpoint_dir,
+        ),
+    }
+}
+
+fn coordinate<P: SlotPayload>(
+    cfg: &RunConfig,
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    listen: &str,
+    checkpoint_dir: &Path,
+) -> Result<ClusterReport, String> {
+    let io = |e: std::io::Error| format!("cluster coordinator: {e}");
+    let workers = cfg.workers as u32;
+    let n = cfg.n;
+    let dim = backend.dim();
+    let lanes = P::lanes(dim);
+    let (p0, _) = backend.init();
+
+    let listener = TcpListener::bind(listen).map_err(io)?;
+    let local = listener.local_addr().map_err(io)?;
+    // tests and operators parse this exact line to learn the bound port
+    println!("cluster coordinator listening on {local} (waiting for {workers} workers)");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+
+    // ---- registration: accept Hellos, learn gossip addresses ----
+    let mut conns: Vec<(FrameConn, String)> = Vec::new();
+    while conns.len() < workers as usize {
+        let (stream, peer) = listener.accept().map_err(io)?;
+        stream.set_nodelay(true).ok();
+        let mut conn = FrameConn::new(stream);
+        match conn.read_msg().map_err(io)? {
+            Some(Msg::Hello { gossip_port }) => {
+                let gossip = format!("{}:{}", peer.ip(), gossip_port);
+                println!("cluster: worker {} registered (gossip {gossip})", conns.len());
+                conns.push((conn, gossip));
+            }
+            m => return Err(format!("cluster coordinator: expected Hello, got {m:?}")),
+        }
+    }
+    let peers: Vec<PeerAddr> = conns
+        .iter()
+        .enumerate()
+        .map(|(r, (_, addr))| PeerAddr { rank: r as u32, addr: addr.clone() })
+        .collect();
+
+    // ---- assignment: node k lives on rank k mod W; ship the config ----
+    let config_ini = cfg.to_ini();
+    let mut slots: Vec<WorkerSlot> = Vec::new();
+    let mut readers: Vec<FrameConn> = Vec::new();
+    for (rank, (conn, _)) in conns.into_iter().enumerate() {
+        let rank = rank as u32;
+        let owned: Vec<u32> = (0..n as u32).filter(|k| k % workers == rank).collect();
+        let mut stream = conn.stream.try_clone().map_err(io)?;
+        send_msg(
+            &mut stream,
+            &Msg::Assign {
+                rank,
+                workers,
+                config_ini: config_ini.clone(),
+                owned,
+                peers: peers.clone(),
+            },
+        )
+        .map_err(io)?;
+        slots.push(WorkerSlot {
+            rank,
+            stream,
+            alive: true,
+            done: false,
+            last_seen: Instant::now(),
+            progress: ProgressBody::default(),
+            checkpoint: Vec::new(),
+        });
+        readers.push(conn);
+    }
+    let (tx, rx) = mpsc::channel::<Event>();
+    for (rank, mut conn) in readers.into_iter().enumerate() {
+        let rank = rank as u32;
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match conn.read_msg() {
+                Ok(Some(m)) => {
+                    if tx.send(Event::Msg(rank, m)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    let _ = tx.send(Event::Gone(rank));
+                    return;
+                }
+            }
+        });
+    }
+    drop(tx);
+
+    let started = Instant::now();
+    let timeout = Duration::from_secs_f64(cfg.heartbeat_timeout);
+    let ckpt_path: PathBuf = checkpoint_dir.join("cluster_ckpt.npy");
+    let mut last_ckpt_write = Instant::now();
+    let mut recoveries = 0u32;
+    let mut shutting_down = false;
+    let mut final_entries: Vec<NodeLanes> = Vec::new();
+    let mut staleness = StalenessHistogram::new((8 * n).max(1024));
+
+    loop {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Event::Msg(rank, msg)) => {
+                if let Msg::Done { .. } = &msg {
+                    if let Some(h) = done_staleness(&msg) {
+                        staleness.merge(&h);
+                    }
+                }
+                let slot = &mut slots[rank as usize];
+                slot.last_seen = Instant::now();
+                match msg {
+                    Msg::Progress(p) => slot.progress = p,
+                    Msg::Checkpoint { events, entries } => {
+                        slot.checkpoint = entries;
+                        if last_ckpt_write.elapsed() >= Duration::from_millis(500) {
+                            last_ckpt_write = Instant::now();
+                            write_checkpoint::<P>(&ckpt_path, &slots, n, lanes, &p0);
+                            // the kill test watches for this line before
+                            // injecting a failure
+                            println!("cluster: checkpoint at {events} events (worker {rank})");
+                            std::io::stdout().flush().ok();
+                        }
+                    }
+                    Msg::Done { entries, progress, .. } => {
+                        slot.progress = progress;
+                        slot.done = true;
+                        final_entries.extend(entries);
+                    }
+                    m => {
+                        eprintln!("cluster coordinator: unexpected {m:?} from worker {rank}")
+                    }
+                }
+            }
+            Ok(Event::Gone(rank)) => {
+                let slot = &mut slots[rank as usize];
+                if slot.alive && !slot.done && !shutting_down {
+                    slot.alive = false;
+                    recover::<P>(&mut slots, rank, n, workers, dim, &p0, &mut recoveries)?;
+                } else {
+                    slot.alive = false;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !shutting_down {
+                    return Err("cluster coordinator: all workers disconnected".into());
+                }
+            }
+        }
+
+        // heartbeat scan (skipped once draining: workers stop heartbeating
+        // after Done)
+        if !shutting_down {
+            let dead: Vec<u32> = slots
+                .iter()
+                .filter(|s| s.alive && !s.done && s.last_seen.elapsed() > timeout)
+                .map(|s| s.rank)
+                .collect();
+            for rank in dead {
+                slots[rank as usize].alive = false;
+                println!(
+                    "cluster: worker {rank} missed heartbeats for {:.1}s — declaring dead",
+                    slots[rank as usize].last_seen.elapsed().as_secs_f64()
+                );
+                recover::<P>(&mut slots, rank, n, workers, dim, &p0, &mut recoveries)?;
+            }
+        }
+
+        if slots.iter().all(|s| !s.alive && !s.done) {
+            return Err(format!(
+                "cluster coordinator: every worker died before reaching \
+                 {} interactions",
+                cfg.interactions
+            ));
+        }
+
+        // target check: the sum of the latest cumulative counters
+        let total: u64 = slots.iter().map(|s| s.progress.events).sum();
+        if !shutting_down && total >= cfg.interactions {
+            shutting_down = true;
+            println!(
+                "cluster: target reached ({total} ≥ {} events) — draining",
+                cfg.interactions
+            );
+            for slot in slots.iter_mut().filter(|s| s.alive) {
+                let _ = send_msg(
+                    &mut slot.stream,
+                    &Msg::Shutdown { reason: "interaction target reached".into() },
+                );
+            }
+        }
+        if shutting_down && slots.iter().all(|s| s.done || !s.alive) {
+            break;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    // aggregate the last cumulative counter snapshot of every worker
+    // (Done supersedes the final Progress heartbeat; dead workers
+    // contribute whatever they last reported)
+    let mut final_progress = ProgressBody::default();
+    for s in &slots {
+        final_progress.add(&s.progress);
+    }
+
+    // ---- final consensus: Done entries first, checkpoint fill for shards
+    // whose worker died mid-drain, init fill as the last resort ----
+    let mut by_node: Vec<Option<Vec<f32>>> = vec![None; n];
+    for e in &final_entries {
+        if (e.node as usize) < n && e.lanes.len() == lanes {
+            by_node[e.node as usize] = Some(e.lanes.clone());
+        }
+    }
+    for s in &slots {
+        for e in &s.checkpoint {
+            let ix = e.node as usize;
+            if ix < n && e.lanes.len() == lanes && by_node[ix].is_none() {
+                by_node[ix] = Some(e.lanes.clone());
+            }
+        }
+    }
+    let mut init = vec![0.0f32; lanes];
+    P::encode(&p0, 1.0, &mut init);
+    let snaps: Vec<Vec<f32>> =
+        by_node.into_iter().map(|o| o.unwrap_or_else(|| init.clone())).collect();
+    let consensus = P::consensus(&snaps, dim);
+    let eval = backend.eval(&consensus);
+    let final_path = checkpoint_dir.join("cluster_final.npy");
+    save_npy(&final_path, &consensus).map_err(io)?;
+
+    let events = final_progress.events;
+    let report = ClusterReport {
+        events,
+        wall_secs: wall,
+        wire_bits: final_progress.wire_bits,
+        recoveries,
+        final_eval_loss: eval.loss,
+        interactions_per_sec: events as f64 / wall.max(1e-9),
+    };
+    println!(
+        "\ncluster telemetry ({workers} worker(s) over sockets, wall {wall:.2}s):\n\
+         real throughput  : {:.0} interactions/s\n\
+         wire codec       : {} ({:.3} GB on the wire, {} decode fallbacks)\n\
+         merge kernel     : {:?}\n\
+         staleness (events): p50={} p99={} max={} mean={:.1}\n\
+         slot contention  : {} read retries, {} publish retries, \
+         {} dropped cross-writes\n\
+         worker activity  : {:.2}s busy / {:.3}s wire-sync across workers\n\
+         recoveries       : {recoveries} shard reassignment(s)\n\
+         model written to : {}",
+        report.interactions_per_sec,
+        cfg.wire,
+        report.wire_bits as f64 / 8e9,
+        final_progress.wire_fallbacks,
+        algo.kernel(),
+        staleness.p50(),
+        staleness.p99(),
+        staleness.max_observed(),
+        staleness.mean(),
+        final_progress.read_retries,
+        final_progress.publish_retries,
+        final_progress.push_conflicts,
+        final_progress.busy_us as f64 / 1e6,
+        final_progress.wait_us as f64 / 1e6,
+        final_path.display(),
+    );
+    // tests parse this line: loss, events, recoveries in one place
+    println!(
+        "cluster: final eval_loss={:.6} events={events} recoveries={recoveries} \
+         wire_bits={}",
+        eval.loss, report.wire_bits
+    );
+    std::io::stdout().flush().ok();
+    Ok(report)
+}
+
+/// Reassign a dead worker's shard to the lowest live rank, seeding the
+/// adopter from the dead worker's last checkpoint (init params when it died
+/// before ever checkpointing). Broadcast to ALL live workers so every
+/// owner map converges.
+fn recover<P: SlotPayload>(
+    slots: &mut [WorkerSlot],
+    dead: u32,
+    n: usize,
+    workers: u32,
+    dim: usize,
+    p0: &[f32],
+    recoveries: &mut u32,
+) -> Result<(), String> {
+    let adopter = match slots.iter().find(|s| s.alive && !s.done) {
+        Some(s) => s.rank,
+        None => return Ok(()), // terminal-state check elsewhere reports this
+    };
+    let lanes = P::lanes(dim);
+    let mut init = vec![0.0f32; lanes];
+    P::encode(p0, 1.0, &mut init);
+    let ckpt = &slots[dead as usize].checkpoint;
+    let entries: Vec<NodeLanes> = (0..n as u32)
+        .filter(|k| k % workers == dead)
+        .map(|k| {
+            ckpt.iter()
+                .find(|e| e.node == k)
+                .cloned()
+                .unwrap_or_else(|| NodeLanes { node: k, lanes: init.clone() })
+        })
+        .collect();
+    *recoveries += 1;
+    println!(
+        "cluster: recovery #{recoveries} — worker {dead} dead, {} node(s) \
+         adopted by worker {adopter} from checkpoint",
+        entries.len()
+    );
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    let msg = Msg::Adopt { to_rank: adopter, from_rank: dead, entries };
+    for slot in slots.iter_mut().filter(|s| s.alive) {
+        if send_msg(&mut slot.stream, &msg).is_err() {
+            // the Gone event / heartbeat scan will pick this worker up
+            eprintln!("cluster: could not notify worker {} of the adoption", slot.rank);
+        }
+    }
+    Ok(())
+}
+
+/// Persist the union of every worker's last checkpoint as one flat
+/// `[n × lanes]` npy (versioned trailer via `output::checkpoint`). Nodes
+/// never checkpointed yet are filled with the init params.
+fn write_checkpoint<P: SlotPayload>(
+    path: &Path,
+    slots: &[WorkerSlot],
+    n: usize,
+    lanes: usize,
+    p0: &[f32],
+) {
+    let mut init = vec![0.0f32; lanes];
+    P::encode(p0, 1.0, &mut init);
+    let mut flat = vec![0.0f32; n * lanes];
+    for node in 0..n {
+        flat[node * lanes..(node + 1) * lanes].copy_from_slice(&init);
+    }
+    for s in slots {
+        for e in &s.checkpoint {
+            let ix = e.node as usize;
+            if ix < n && e.lanes.len() == lanes {
+                flat[ix * lanes..(ix + 1) * lanes].copy_from_slice(&e.lanes);
+            }
+        }
+    }
+    if let Err(e) = save_npy(path, &flat) {
+        eprintln!("cluster: checkpoint write failed: {e}");
+    }
+}

@@ -1,0 +1,207 @@
+//! `--executor cluster` — the coordinator/worker cluster executor that
+//! makes the wire real.
+//!
+//! The serial/parallel executors *simulate* the network through
+//! [`CostModel`](crate::netmodel::CostModel); the freerun executor makes
+//! contention and staleness real but keeps everything in one address
+//! space. This module is the last step: separate OS processes gossiping
+//! `WireCodec`-encoded model payloads over `std::net::TcpStream`, so
+//! "bits on the wire" is measured from the socket, not modeled.
+//!
+//! Topology of a run:
+//!
+//! * one **coordinator** (`--role coordinator --listen ADDR`): registers
+//!   `workers` workers, assigns each a node shard, ships the full
+//!   [`RunConfig`](crate::config::RunConfig) as INI text, aggregates
+//!   streamed progress, persists checkpoints, detects dead workers by
+//!   heartbeat timeout and reassigns their shard, prints the final report;
+//! * `workers` **workers** (`--role worker --connect ADDR`): run the
+//!   freerun protocol over their shard, with cross-shard gossip over a
+//!   full TCP mesh (hand-rolled length-prefixed, versioned, checksummed
+//!   frames — see [`proto`]; zero new dependencies).
+//!
+//! The executor is throughput-faithful and non-replayable, like freerun:
+//! assertions about it must be statistical (convergence bands, counter
+//! positivity), never bit-exact.
+
+pub mod coordinator;
+pub mod proto;
+pub mod transport;
+pub mod worker;
+
+pub use coordinator::{run_coordinator, ClusterReport};
+pub use worker::run_worker;
+
+use crate::cli::Cli;
+use crate::config::RunConfig;
+
+/// Which side of the cluster this process is.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// `--role coordinator --listen ADDR`
+    Coordinator { listen: String },
+    /// `--role worker --connect ADDR`
+    Worker { connect: String },
+}
+
+/// Validated cluster-mode options parsed off the command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterOpts {
+    pub role: Role,
+    /// per-interaction worker sleep in µs (a test/debug knob: slows the
+    /// run down enough that mid-run failures are injectable)
+    pub throttle_us: u64,
+    /// where the coordinator writes `cluster_ckpt.npy` / `cluster_final.npy`
+    pub checkpoint_dir: std::path::PathBuf,
+}
+
+/// Parse and validate the cluster flags against the run config, mirroring
+/// the style of the config-side validators (reject early, name the flag,
+/// say what was expected). Returns `Ok(None)` when the run is not a
+/// cluster run and no cluster flag was passed.
+pub fn from_cli(cli: &Cli, cfg: &RunConfig) -> Result<Option<ClusterOpts>, String> {
+    let is_cluster = cfg.executor == "cluster";
+    let role = cli.get("role");
+    if !is_cluster {
+        if let Some(r) = role {
+            return Err(format!(
+                "--role {r} only applies to --executor cluster (got executor '{}')",
+                cfg.executor
+            ));
+        }
+        for flag in ["listen", "connect", "throttle-us", "checkpoint-dir"] {
+            if cli.has(flag) {
+                return Err(format!(
+                    "--{flag} only applies to --executor cluster (got executor '{}')",
+                    cfg.executor
+                ));
+            }
+        }
+        return Ok(None);
+    }
+    let role = match role {
+        Some("coordinator") => {
+            if cli.has("connect") {
+                return Err("--connect is a worker flag; the coordinator takes --listen".into());
+            }
+            let listen = cli
+                .get("listen")
+                .ok_or("--role coordinator requires --listen HOST:PORT (PORT 0 = ephemeral)")?;
+            Role::Coordinator { listen: listen.to_string() }
+        }
+        Some("worker") => {
+            if cli.has("listen") {
+                return Err("--listen is a coordinator flag; workers take --connect".into());
+            }
+            let connect = cli
+                .get("connect")
+                .ok_or("--role worker requires --connect HOST:PORT (the coordinator address)")?;
+            Role::Worker { connect: connect.to_string() }
+        }
+        Some(other) => {
+            return Err(format!("unknown --role '{other}' (expected coordinator|worker)"))
+        }
+        None => {
+            return Err(
+                "--executor cluster requires --role coordinator|worker: start one \
+                 coordinator process (--role coordinator --listen HOST:PORT), then \
+                 `workers` worker processes (--role worker --connect HOST:PORT)"
+                    .into(),
+            )
+        }
+    };
+    let throttle_us = cli.parse_flag::<u64>("throttle-us")?.unwrap_or(0);
+    let checkpoint_dir = match cli.get("checkpoint-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join("swarm_cluster"),
+    };
+    Ok(Some(ClusterOpts { role, throttle_us, checkpoint_dir }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(args: &[&str]) -> Cli {
+        Cli::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    fn cluster_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.set("executor", "cluster").unwrap();
+        cfg
+    }
+
+    #[test]
+    fn non_cluster_run_without_flags_is_none() {
+        let cfg = RunConfig::default();
+        assert_eq!(from_cli(&cli(&["train"]), &cfg), Ok(None));
+    }
+
+    #[test]
+    fn role_without_cluster_executor_is_rejected() {
+        let cfg = RunConfig::default(); // executor=serial
+        let err = from_cli(&cli(&["train", "--role", "worker"]), &cfg).unwrap_err();
+        assert!(err.contains("--executor cluster"), "unhelpful error: {err}");
+        // stray address flags are caught too
+        let err = from_cli(&cli(&["train", "--listen", "x:1"]), &cfg).unwrap_err();
+        assert!(err.contains("--listen"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn cluster_without_role_is_rejected_with_a_recipe() {
+        let err = from_cli(&cli(&["train"]), &cluster_cfg()).unwrap_err();
+        assert!(err.contains("--role coordinator|worker"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn coordinator_requires_listen_and_rejects_connect() {
+        let c = cluster_cfg();
+        let err = from_cli(&cli(&["train", "--role", "coordinator"]), &c).unwrap_err();
+        assert!(err.contains("--listen"), "unhelpful error: {err}");
+        let err = from_cli(
+            &cli(&["train", "--role", "coordinator", "--connect", "h:1"]),
+            &c,
+        )
+        .unwrap_err();
+        assert!(err.contains("--connect is a worker flag"), "unhelpful error: {err}");
+        let opts = from_cli(
+            &cli(&["train", "--role", "coordinator", "--listen", "127.0.0.1:0"]),
+            &c,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(opts.role, Role::Coordinator { listen: "127.0.0.1:0".into() });
+    }
+
+    #[test]
+    fn worker_requires_connect_and_rejects_listen() {
+        let c = cluster_cfg();
+        let err = from_cli(&cli(&["train", "--role", "worker"]), &c).unwrap_err();
+        assert!(err.contains("--connect"), "unhelpful error: {err}");
+        let err =
+            from_cli(&cli(&["train", "--role", "worker", "--listen", "h:1"]), &c).unwrap_err();
+        assert!(err.contains("--listen is a coordinator flag"), "unhelpful error: {err}");
+        let opts = from_cli(
+            &cli(&["train", "--role", "worker", "--connect", "127.0.0.1:9"]),
+            &c,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(opts.role, Role::Worker { connect: "127.0.0.1:9".into() });
+        assert_eq!(opts.throttle_us, 0);
+    }
+
+    #[test]
+    fn unknown_role_and_bad_throttle_are_rejected() {
+        let c = cluster_cfg();
+        let err = from_cli(&cli(&["train", "--role", "boss"]), &c).unwrap_err();
+        assert!(err.contains("coordinator|worker"), "unhelpful error: {err}");
+        let err = from_cli(
+            &cli(&["train", "--role", "worker", "--connect", "h:1", "--throttle-us", "xyz"]),
+            &c,
+        )
+        .unwrap_err();
+        assert!(err.contains("throttle-us"), "unhelpful error: {err}");
+    }
+}

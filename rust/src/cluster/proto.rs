@@ -1,0 +1,886 @@
+//! Wire protocol for the cluster executor: hand-rolled length-prefixed
+//! binary framing (zero dependencies), versioned and checksummed.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! [0..4)    magic  b"SWRM"
+//! [4..6)    protocol version, u16 LE   (PROTO_VERSION)
+//! [6..7)    message kind, u8           (see the Msg enum)
+//! [7..8)    reserved, 0
+//! [8..12)   payload length, u32 LE
+//! [12..12+len)       payload bytes
+//! [12+len..20+len)   FNV-1a checksum over header + payload, u64 LE
+//! ```
+//!
+//! The checksum is a transport-integrity guard (torn writes, crossed
+//! streams), *not* cryptographic authentication — multi-host auth/TLS is
+//! explicitly out of scope for the loopback MVP (see ROADMAP item 3).
+//!
+//! [`FrameDecoder`] is an incremental state machine fed arbitrary byte
+//! chunks (whatever `read()` returned); it yields complete frames and
+//! keeps partial ones buffered, so framing is testable without any
+//! sockets. All integers are little-endian. Any [`FrameError`] is fatal
+//! for the connection that produced it: the stream offset is unknowable
+//! after corruption, so callers drop the peer rather than resync.
+
+use crate::coordinator::StalenessHistogram;
+
+/// Frame magic.
+pub const MAGIC: [u8; 4] = *b"SWRM";
+/// Protocol version; peers with a different version are rejected at the
+/// first frame.
+pub const PROTO_VERSION: u16 = 1;
+/// Frame header length (magic + version + kind + reserved + payload len).
+pub const HEADER_LEN: usize = 12;
+/// Trailing checksum length.
+pub const CHECKSUM_LEN: usize = 8;
+/// Upper bound on one frame's payload — far above any real message (the
+/// largest is a checkpoint of every node's lanes), so hitting it means a
+/// corrupt or hostile length prefix, not a big model.
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+/// FNV-1a over `bytes` (same function as the checkpoint trailer's).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Why a byte stream stopped being a frame stream. All variants are fatal
+/// for the connection (see the module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// first four bytes were not [`MAGIC`]
+    BadMagic,
+    /// peer speaks a different protocol version
+    VersionMismatch { got: u16 },
+    /// length prefix exceeds [`MAX_PAYLOAD`]
+    TooLarge { len: usize },
+    /// frame checksum did not match its header + payload
+    ChecksumMismatch,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic => write!(f, "bad frame magic (not a swarm cluster peer?)"),
+            FrameError::VersionMismatch { got } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{got}, this build v{PROTO_VERSION}"
+            ),
+            FrameError::TooLarge { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            FrameError::ChecksumMismatch => write!(f, "frame checksum mismatch"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One complete decoded frame: the raw kind byte plus its payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Encode one frame (header + payload + checksum) ready for a socket
+/// write.
+pub fn encode_frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Incremental frame decoder: [`feed`](Self::feed) raw bytes in any
+/// chunking, pull complete frames with [`next_frame`](Self::next_frame).
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// consumed prefix of `buf` (compacted lazily)
+    off: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append bytes read off the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact before growing so the buffer stays bounded by one frame
+        if self.off > 0 && (self.off >= self.buf.len() || self.off > MAX_PAYLOAD) {
+            self.buf.drain(..self.off);
+            self.off = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// Try to decode the next complete frame. `Ok(None)` means "need more
+    /// bytes" (partial-read resumption); an `Err` is fatal for the
+    /// connection.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, FrameError> {
+        let avail = &self.buf[self.off..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        if avail[..4] != MAGIC {
+            return Err(FrameError::BadMagic);
+        }
+        let version = u16::from_le_bytes([avail[4], avail[5]]);
+        if version != PROTO_VERSION {
+            return Err(FrameError::VersionMismatch { got: version });
+        }
+        let kind = avail[6];
+        let len = u32::from_le_bytes([avail[8], avail[9], avail[10], avail[11]]) as usize;
+        if len > MAX_PAYLOAD {
+            return Err(FrameError::TooLarge { len });
+        }
+        let total = HEADER_LEN + len + CHECKSUM_LEN;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let body = &avail[..HEADER_LEN + len];
+        let want = u64::from_le_bytes(avail[HEADER_LEN + len..total].try_into().unwrap());
+        if fnv1a(body) != want {
+            return Err(FrameError::ChecksumMismatch);
+        }
+        let payload = avail[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.off += total;
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// payload (de)serialization helpers
+// ---------------------------------------------------------------------------
+
+struct Wr(Vec<u8>);
+
+impl Wr {
+    fn new() -> Self {
+        Wr(Vec::new())
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+    fn u64s(&mut self, vs: &[u64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+    fn bytes(&mut self, vs: &[u8]) {
+        self.u32(vs.len() as u32);
+        self.0.extend_from_slice(vs);
+    }
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+struct Rd<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, off: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.off + n > self.buf.len() {
+            return Err(format!(
+                "message payload truncated: wanted {n} bytes at offset {}, have {}",
+                self.off,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn len_prefix(&mut self) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        // each element is at least one byte; an oversized count is a
+        // protocol error, not an allocation request
+        if n > self.buf.len() {
+            return Err(format!("length prefix {n} exceeds the payload size"));
+        }
+        Ok(n)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.len_prefix()?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn u64s(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.len_prefix()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.len_prefix()?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn str(&mut self) -> Result<String, String> {
+        String::from_utf8(self.bytes()?).map_err(|_| "invalid utf-8 in string field".into())
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.off != self.buf.len() {
+            return Err(format!("{} trailing bytes after message body", self.buf.len() - self.off));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// One worker's gossip endpoint as the coordinator advertises it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PeerAddr {
+    pub rank: u32,
+    pub addr: String,
+}
+
+/// One node's payload lanes (checkpoint / adoption / final-state entries).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeLanes {
+    pub node: u32,
+    pub lanes: Vec<f32>,
+}
+
+/// Scalar counters a worker streams to the coordinator on every heartbeat
+/// — the wire form of the per-worker [`FreerunStats`] slice.
+///
+/// [`FreerunStats`]: crate::coordinator::FreerunStats
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProgressBody {
+    /// interactions this worker has initiated
+    pub events: u64,
+    /// local SGD steps performed
+    pub steps: u64,
+    /// bits this worker actually wrote to peer sockets (real bytes × 8)
+    pub wire_bits: u64,
+    /// lattice publishes that fell back to f32 + receiver-side decode drops
+    pub wire_fallbacks: u64,
+    pub read_retries: u64,
+    pub publish_retries: u64,
+    pub push_conflicts: u64,
+    /// wall-clock busy/wait split, in microseconds
+    pub busy_us: u64,
+    pub wait_us: u64,
+}
+
+impl ProgressBody {
+    fn write(&self, w: &mut Wr) {
+        w.u64(self.events);
+        w.u64(self.steps);
+        w.u64(self.wire_bits);
+        w.u64(self.wire_fallbacks);
+        w.u64(self.read_retries);
+        w.u64(self.publish_retries);
+        w.u64(self.push_conflicts);
+        w.u64(self.busy_us);
+        w.u64(self.wait_us);
+    }
+
+    fn read(r: &mut Rd<'_>) -> Result<Self, String> {
+        Ok(ProgressBody {
+            events: r.u64()?,
+            steps: r.u64()?,
+            wire_bits: r.u64()?,
+            wire_fallbacks: r.u64()?,
+            read_retries: r.u64()?,
+            publish_retries: r.u64()?,
+            push_conflicts: r.u64()?,
+            busy_us: r.u64()?,
+            wait_us: r.u64()?,
+        })
+    }
+
+    /// Field-wise sum (coordinator-side aggregation across workers).
+    pub fn add(&mut self, o: &ProgressBody) {
+        self.events += o.events;
+        self.steps += o.steps;
+        self.wire_bits += o.wire_bits;
+        self.wire_fallbacks += o.wire_fallbacks;
+        self.read_retries += o.read_retries;
+        self.publish_retries += o.publish_retries;
+        self.push_conflicts += o.push_conflicts;
+        self.busy_us += o.busy_us;
+        self.wait_us += o.wait_us;
+    }
+}
+
+/// How one published payload crosses the wire: raw f32 lanes, or the
+/// lattice codec's packed coordinates (model lanes) plus raw aux lanes
+/// (push-sum weight). The lattice branch is [`crate::quant::encode_into`]
+/// output verbatim — the coordinates the receiver decodes against its
+/// mirror of the sender's previous broadcast.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PayloadEnc {
+    F32 { lanes: Vec<f32> },
+    Lattice {
+        bits: u32,
+        eps: f32,
+        seed: u32,
+        len: u32,
+        checksum: u64,
+        packed: Vec<u8>,
+        aux: Vec<f32>,
+    },
+}
+
+fn write_node_lanes(w: &mut Wr, entries: &[NodeLanes]) {
+    w.u32(entries.len() as u32);
+    for e in entries {
+        w.u32(e.node);
+        w.f32s(&e.lanes);
+    }
+}
+
+fn read_node_lanes(r: &mut Rd<'_>) -> Result<Vec<NodeLanes>, String> {
+    let n = r.len_prefix()?;
+    (0..n)
+        .map(|_| Ok(NodeLanes { node: r.u32()?, lanes: r.f32s()? }))
+        .collect()
+}
+
+/// Every message the cluster control and gossip planes exchange. Kind
+/// bytes are part of the protocol; renumbering is a version bump.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// worker → coordinator, first frame: the port the worker's gossip
+    /// listener bound
+    Hello { gossip_port: u16 },
+    /// coordinator → worker: rank, total worker count, the full run config
+    /// (INI text), this worker's initial node shard, and every worker's
+    /// gossip endpoint
+    Assign { rank: u32, workers: u32, config_ini: String, owned: Vec<u32>, peers: Vec<PeerAddr> },
+    /// worker → coordinator heartbeat + streamed stats
+    Progress(ProgressBody),
+    /// worker → coordinator: current payload lanes of its owned nodes (the
+    /// recovery source), stamped with the worker's event count
+    Checkpoint { events: u64, entries: Vec<NodeLanes> },
+    /// coordinator → every worker: nodes of `from_rank` (declared dead)
+    /// move to `to_rank`; entries carry the last-checkpoint lanes the
+    /// adopter restarts them from
+    Adopt { to_rank: u32, from_rank: u32, entries: Vec<NodeLanes> },
+    /// worker → coordinator on shutdown: final payload lanes + final
+    /// counters + the staleness histogram raw parts
+    Done {
+        entries: Vec<NodeLanes>,
+        progress: ProgressBody,
+        stale_buckets: Vec<u64>,
+        stale_overflow: u64,
+        stale_count: u64,
+        stale_sum: u128,
+        stale_max: u64,
+    },
+    /// coordinator → worker: stop gossiping, send `Done`
+    Shutdown { reason: String },
+    /// worker ↔ worker: one node's published payload (broadcast on ring)
+    Publish { node: u32, enc: PayloadEnc },
+    /// worker → owning worker: best-effort cross-write payload for a
+    /// remote partner (applied via `try_publish`, dropped + counted on
+    /// conflict — nobody ever waits)
+    Cross { node: u32, lanes: Vec<f32> },
+    /// worker ↔ worker, first frame on a gossip connection
+    PeerHello { rank: u32 },
+}
+
+const K_HELLO: u8 = 1;
+const K_ASSIGN: u8 = 2;
+const K_PROGRESS: u8 = 3;
+const K_CHECKPOINT: u8 = 4;
+const K_ADOPT: u8 = 5;
+const K_DONE: u8 = 6;
+const K_SHUTDOWN: u8 = 7;
+const K_PUBLISH: u8 = 8;
+const K_CROSS: u8 = 9;
+const K_PEER_HELLO: u8 = 10;
+
+impl Msg {
+    /// Serialize to one complete frame (header + payload + checksum).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut w = Wr::new();
+        let kind = match self {
+            Msg::Hello { gossip_port } => {
+                w.u16(*gossip_port);
+                K_HELLO
+            }
+            Msg::Assign { rank, workers, config_ini, owned, peers } => {
+                w.u32(*rank);
+                w.u32(*workers);
+                w.str(config_ini);
+                w.u32(owned.len() as u32);
+                for &k in owned {
+                    w.u32(k);
+                }
+                w.u32(peers.len() as u32);
+                for p in peers {
+                    w.u32(p.rank);
+                    w.str(&p.addr);
+                }
+                K_ASSIGN
+            }
+            Msg::Progress(p) => {
+                p.write(&mut w);
+                K_PROGRESS
+            }
+            Msg::Checkpoint { events, entries } => {
+                w.u64(*events);
+                write_node_lanes(&mut w, entries);
+                K_CHECKPOINT
+            }
+            Msg::Adopt { to_rank, from_rank, entries } => {
+                w.u32(*to_rank);
+                w.u32(*from_rank);
+                write_node_lanes(&mut w, entries);
+                K_ADOPT
+            }
+            Msg::Done {
+                entries,
+                progress,
+                stale_buckets,
+                stale_overflow,
+                stale_count,
+                stale_sum,
+                stale_max,
+            } => {
+                write_node_lanes(&mut w, entries);
+                progress.write(&mut w);
+                w.u64s(stale_buckets);
+                w.u64(*stale_overflow);
+                w.u64(*stale_count);
+                w.u64((*stale_sum >> 64) as u64);
+                w.u64(*stale_sum as u64);
+                w.u64(*stale_max);
+                K_DONE
+            }
+            Msg::Shutdown { reason } => {
+                w.str(reason);
+                K_SHUTDOWN
+            }
+            Msg::Publish { node, enc } => {
+                w.u32(*node);
+                match enc {
+                    PayloadEnc::F32 { lanes } => {
+                        w.u8(0);
+                        w.f32s(lanes);
+                    }
+                    PayloadEnc::Lattice { bits, eps, seed, len, checksum, packed, aux } => {
+                        w.u8(1);
+                        w.u32(*bits);
+                        w.f32(*eps);
+                        w.u32(*seed);
+                        w.u32(*len);
+                        w.u64(*checksum);
+                        w.bytes(packed);
+                        w.f32s(aux);
+                    }
+                }
+                K_PUBLISH
+            }
+            Msg::Cross { node, lanes } => {
+                w.u32(*node);
+                w.f32s(lanes);
+                K_CROSS
+            }
+            Msg::PeerHello { rank } => {
+                w.u32(*rank);
+                K_PEER_HELLO
+            }
+        };
+        encode_frame(kind, &w.0)
+    }
+
+    /// Decode a complete frame back into a message.
+    pub fn from_frame(frame: &Frame) -> Result<Msg, String> {
+        let mut r = Rd::new(&frame.payload);
+        let msg = match frame.kind {
+            K_HELLO => Msg::Hello { gossip_port: r.u16()? },
+            K_ASSIGN => {
+                let rank = r.u32()?;
+                let workers = r.u32()?;
+                let config_ini = r.str()?;
+                let owned = (0..r.len_prefix()?).map(|_| r.u32()).collect::<Result<_, _>>()?;
+                let peers = (0..r.len_prefix()?)
+                    .map(|_| Ok(PeerAddr { rank: r.u32()?, addr: r.str()? }))
+                    .collect::<Result<_, String>>()?;
+                Msg::Assign { rank, workers, config_ini, owned, peers }
+            }
+            K_PROGRESS => Msg::Progress(ProgressBody::read(&mut r)?),
+            K_CHECKPOINT => {
+                Msg::Checkpoint { events: r.u64()?, entries: read_node_lanes(&mut r)? }
+            }
+            K_ADOPT => Msg::Adopt {
+                to_rank: r.u32()?,
+                from_rank: r.u32()?,
+                entries: read_node_lanes(&mut r)?,
+            },
+            K_DONE => {
+                let entries = read_node_lanes(&mut r)?;
+                let progress = ProgressBody::read(&mut r)?;
+                let stale_buckets = r.u64s()?;
+                let stale_overflow = r.u64()?;
+                let stale_count = r.u64()?;
+                let hi = r.u64()?;
+                let lo = r.u64()?;
+                let stale_max = r.u64()?;
+                Msg::Done {
+                    entries,
+                    progress,
+                    stale_buckets,
+                    stale_overflow,
+                    stale_count,
+                    stale_sum: ((hi as u128) << 64) | lo as u128,
+                    stale_max,
+                }
+            }
+            K_SHUTDOWN => Msg::Shutdown { reason: r.str()? },
+            K_PUBLISH => {
+                let node = r.u32()?;
+                let enc = match r.u8()? {
+                    0 => PayloadEnc::F32 { lanes: r.f32s()? },
+                    1 => PayloadEnc::Lattice {
+                        bits: r.u32()?,
+                        eps: r.f32()?,
+                        seed: r.u32()?,
+                        len: r.u32()?,
+                        checksum: r.u64()?,
+                        packed: r.bytes()?,
+                        aux: r.f32s()?,
+                    },
+                    t => return Err(format!("unknown payload encoding tag {t}")),
+                };
+                Msg::Publish { node, enc }
+            }
+            K_CROSS => Msg::Cross { node: r.u32()?, lanes: r.f32s()? },
+            K_PEER_HELLO => Msg::PeerHello { rank: r.u32()? },
+            k => return Err(format!("unknown message kind {k}")),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+
+    /// Build a `Done` message from final states + a histogram.
+    pub fn done(
+        entries: Vec<NodeLanes>,
+        progress: ProgressBody,
+        staleness: &StalenessHistogram,
+    ) -> Msg {
+        let (buckets, overflow, count, sum, max) = staleness.raw_parts();
+        Msg::Done {
+            entries,
+            progress,
+            stale_buckets: buckets.to_vec(),
+            stale_overflow: overflow,
+            stale_count: count,
+            stale_sum: sum,
+            stale_max: max,
+        }
+    }
+}
+
+/// Reassemble the staleness histogram a `Done` message carries.
+pub fn done_staleness(msg: &Msg) -> Option<StalenessHistogram> {
+    match msg {
+        Msg::Done { stale_buckets, stale_overflow, stale_count, stale_sum, stale_max, .. } => {
+            Some(StalenessHistogram::from_raw(
+                stale_buckets.clone(),
+                *stale_overflow,
+                *stale_count,
+                *stale_sum,
+                *stale_max,
+            ))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    fn sample_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Hello { gossip_port: 40123 },
+            Msg::Assign {
+                rank: 1,
+                workers: 3,
+                config_ini: "[run]\nn = 16\nalgo = swarm\n".into(),
+                owned: vec![1, 4, 7],
+                peers: vec![
+                    PeerAddr { rank: 0, addr: "127.0.0.1:9000".into() },
+                    PeerAddr { rank: 1, addr: "127.0.0.1:9001".into() },
+                ],
+            },
+            Msg::Progress(ProgressBody {
+                events: 123,
+                steps: 246,
+                wire_bits: 9_999,
+                wire_fallbacks: 1,
+                read_retries: 2,
+                publish_retries: 3,
+                push_conflicts: 4,
+                busy_us: 5_000,
+                wait_us: 70,
+            }),
+            Msg::Checkpoint {
+                events: 55,
+                entries: vec![
+                    NodeLanes { node: 0, lanes: vec![1.0, -2.5, f32::NAN] },
+                    NodeLanes { node: 9, lanes: vec![] },
+                ],
+            },
+            Msg::Adopt {
+                to_rank: 0,
+                from_rank: 2,
+                entries: vec![NodeLanes { node: 5, lanes: vec![0.25; 8] }],
+            },
+            Msg::Done {
+                entries: vec![NodeLanes { node: 3, lanes: vec![9.0; 4] }],
+                progress: ProgressBody { events: 7, ..Default::default() },
+                stale_buckets: vec![4, 0, 2],
+                stale_overflow: 1,
+                stale_count: 7,
+                stale_sum: (3u128 << 64) | 17,
+                stale_max: 900,
+            },
+            Msg::Shutdown { reason: "job complete".into() },
+            Msg::Publish {
+                node: 12,
+                enc: PayloadEnc::Lattice {
+                    bits: 8,
+                    eps: 1e-3,
+                    seed: 77,
+                    len: 5,
+                    checksum: 0xdead_beef,
+                    packed: vec![1, 2, 3, 4, 5],
+                    aux: vec![0.5],
+                },
+            },
+            Msg::Publish { node: 0, enc: PayloadEnc::F32 { lanes: vec![1.0, 2.0] } },
+            Msg::Cross { node: 2, lanes: vec![-1.0, 1.0] },
+            Msg::PeerHello { rank: 2 },
+        ]
+    }
+
+    fn roundtrip(m: &Msg) -> Msg {
+        let bytes = m.to_frame();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        let frame = dec.next_frame().unwrap().expect("complete frame");
+        assert_eq!(dec.pending(), 0);
+        Msg::from_frame(&frame).unwrap()
+    }
+
+    fn msgs_eq(a: &Msg, b: &Msg) {
+        // NaN lanes make derived PartialEq false; compare via Debug (which
+        // prints NaN stably) so checkpoint frames with NaN lanes round-trip
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for m in sample_msgs() {
+            msgs_eq(&roundtrip(&m), &m);
+        }
+    }
+
+    #[test]
+    fn frame_layout_has_the_documented_length_prefix() {
+        let payload = vec![7u8; 33];
+        let bytes = encode_frame(K_CROSS, &payload);
+        assert_eq!(bytes.len(), HEADER_LEN + 33 + CHECKSUM_LEN);
+        assert_eq!(&bytes[..4], &MAGIC);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), PROTO_VERSION);
+        assert_eq!(bytes[6], K_CROSS);
+        assert_eq!(u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]), 33);
+        assert_eq!(&bytes[HEADER_LEN..HEADER_LEN + 33], &payload[..]);
+    }
+
+    #[test]
+    fn partial_reads_resume_at_any_split_point() {
+        // feed a multi-message byte stream one irregular chunk at a time;
+        // the decoder must yield exactly the original messages, in order,
+        // regardless of where the chunk boundaries fall
+        let msgs = sample_msgs();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&m.to_frame());
+        }
+        let mut rng = Pcg64::seed(42);
+        for _ in 0..20 {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < stream.len() {
+                let chunk = (rng.below_usize(23) + 1).min(stream.len() - i);
+                dec.feed(&stream[i..i + chunk]);
+                i += chunk;
+                while let Some(f) = dec.next_frame().unwrap() {
+                    got.push(Msg::from_frame(&f).unwrap());
+                }
+            }
+            assert_eq!(got.len(), msgs.len());
+            for (g, m) in got.iter().zip(&msgs) {
+                msgs_eq(g, m);
+            }
+            assert_eq!(dec.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = Msg::Hello { gossip_port: 1 }.to_frame();
+        bytes[4] = 99; // version lane
+        // checksum covers the header, so recompute it to isolate the
+        // version check from the checksum check
+        let body_len = bytes.len() - CHECKSUM_LEN;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        assert_eq!(dec.next_frame(), Err(FrameError::VersionMismatch { got: 99 }));
+    }
+
+    #[test]
+    fn corruption_anywhere_is_detected() {
+        let bytes = Msg::Cross { node: 3, lanes: vec![1.0, 2.0, 3.0] }.to_frame();
+        // flip one bit at every single position: every corruption must be
+        // rejected (magic, version, checksum...), never decoded as valid
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x04;
+            let mut dec = FrameDecoder::new();
+            dec.feed(&bad);
+            match dec.next_frame() {
+                Err(_) => {}
+                Ok(None) => {} // corrupt length prefix now promises more bytes
+                Ok(Some(f)) => panic!("bit-flip at byte {i} decoded as valid frame {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut bytes = encode_frame(K_HELLO, &[0, 0]);
+        bytes[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        assert!(matches!(dec.next_frame(), Err(FrameError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn bad_magic_is_rejected_immediately() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(b"HTTP/1.1 200 OK\r\n");
+        assert_eq!(dec.next_frame(), Err(FrameError::BadMagic));
+    }
+
+    #[test]
+    fn decoder_compacts_consumed_prefix() {
+        // many frames through one decoder: the internal buffer must not
+        // grow with the total byte count (compaction on feed)
+        let frame = Msg::PeerHello { rank: 7 }.to_frame();
+        let mut dec = FrameDecoder::new();
+        for _ in 0..10_000 {
+            dec.feed(&frame);
+            assert!(dec.next_frame().unwrap().is_some());
+        }
+        assert_eq!(dec.pending(), 0);
+        assert!(dec.buf.len() < 4 * frame.len(), "buffer grew: {}", dec.buf.len());
+    }
+
+    #[test]
+    fn done_staleness_reassembles_the_histogram() {
+        let mut h = StalenessHistogram::new(8);
+        for v in [0u64, 2, 2, 50] {
+            h.record(v);
+        }
+        let m = Msg::done(vec![], ProgressBody::default(), &h);
+        let m = roundtrip(&m);
+        let back = done_staleness(&m).unwrap();
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.p50(), h.p50());
+        assert_eq!(back.max_observed(), h.max_observed());
+        assert!((back.mean() - h.mean()).abs() < 1e-12);
+        assert_eq!(done_staleness(&Msg::Hello { gossip_port: 0 }), None);
+    }
+
+    #[test]
+    fn truncated_message_payload_is_an_error_not_a_panic() {
+        let frame = Msg::Assign {
+            rank: 0,
+            workers: 2,
+            config_ini: "[run]\n".into(),
+            owned: vec![0, 2],
+            peers: vec![],
+        }
+        .to_frame();
+        // re-frame a truncated payload (valid frame, short message body)
+        let payload = &frame[HEADER_LEN..frame.len() - CHECKSUM_LEN];
+        for cut in 0..payload.len() {
+            let bytes = encode_frame(K_ASSIGN, &payload[..cut]);
+            let mut dec = FrameDecoder::new();
+            dec.feed(&bytes);
+            let f = dec.next_frame().unwrap().unwrap();
+            assert!(Msg::from_frame(&f).is_err(), "cut at {cut} decoded");
+        }
+    }
+}

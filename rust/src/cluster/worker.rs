@@ -1,0 +1,694 @@
+//! The cluster worker process: the freerun loop over a node shard, with
+//! cross-shard gossip over real sockets.
+//!
+//! A worker holds a [`ModelSlot`] for **all** `n` nodes — its own shard's
+//! slots are authoritative, the rest are *mirrors* of the owning peers'
+//! latest broadcasts. The compute loop is the freerun protocol verbatim
+//! (ring → own-slot sync → local phase → partner snapshot → `MixPolicy::
+//! merge` → publish + best-effort cross-write); it cannot tell whether a
+//! partner is local or remote, because both are just slots. The only
+//! difference is what happens *after* a publish:
+//!
+//! * a **dirty flag** marks the node; a dedicated sender thread picks it
+//!   up, encodes the slot's latest payload once
+//!   ([`WireCodec`](crate::coordinator::WireCodec) — the lattice codec
+//!   finally encodes onto a real wire), and broadcasts it to
+//!   every peer. The flag is latest-wins: if the compute loop publishes
+//!   three times before the sender gets there, one frame ships carrying
+//!   the newest payload — the double-buffered non-blocking outbound of the
+//!   paper's communication model (compute never waits for the network);
+//! * a **cross-write to a remote partner** becomes a `Cross` frame to the
+//!   owner, applied there via `try_publish` — dropped and counted on
+//!   conflict, exactly like the in-process path.
+//!
+//! # Lattice reference consistency
+//!
+//! Lattice decoding needs a reference both ends agree on. The wire
+//! invariant: a node's mirror on every peer always holds the sender's
+//! *previous broadcast* (TCP orders frames; `Publish` is broadcast to all
+//! peers; only `Publish` frames write mirrors). So the sender encodes
+//! against its own record of that broadcast (`last_pub`), self-decodes to
+//! stay exact, and receivers decode against their mirror. First publishes,
+//! decode-distance failures, and adoption hand-offs fall back to f32
+//! (counted), which resets every replica of the reference; a periodic f32
+//! refresh bounds any divergence window.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::proto::{Msg, NodeLanes, PayloadEnc, ProgressBody};
+use super::transport::{connect_with_retry, send_msg, FrameConn};
+use crate::backend::{build_backend, Backend};
+use crate::config::RunConfig;
+use crate::coordinator::freerun::ModelSlot;
+use crate::coordinator::{
+    make_algorithm, AlgoOptions, Algorithm, MergeScratch, MixPolicy, NodeState, PayloadKind,
+    PlainModel, PushSumWeighted, SlotPayload, StalenessHistogram, StepCtx,
+};
+use crate::quant::{self, QuantizedMsg};
+use crate::rngx::Pcg64;
+use crate::topology::Graph;
+
+/// Stream tags for the cluster executor's sub-RNGs (disjoint from the
+/// serial/parallel/freerun tags).
+const STREAM_NODE_BASE: u64 = 0x5EED_C1A5_0000_1000;
+const STREAM_WORKER_BASE: u64 = 0x5EED_C1A5_0000_0010;
+
+/// Heartbeat cadence — must be comfortably inside any sane
+/// `heartbeat_timeout` (validation floors the timeout at > 0; default 5s).
+const PROGRESS_EVERY: Duration = Duration::from_millis(200);
+/// Checkpoint cadence (the coordinator's recovery granularity).
+const CHECKPOINT_EVERY: Duration = Duration::from_millis(400);
+/// Every k-th broadcast of a node ships f32 even under the lattice codec —
+/// bounds the divergence window if a receiver ever dropped a frame.
+const F32_REFRESH_EVERY: u64 = 64;
+
+/// Cross-thread counters streamed to the coordinator as [`ProgressBody`].
+#[derive(Default)]
+struct Counters {
+    events: AtomicU64,
+    steps: AtomicU64,
+    wire_bits: AtomicU64,
+    wire_fallbacks: AtomicU64,
+    read_retries: AtomicU64,
+    publish_retries: AtomicU64,
+    push_conflicts: AtomicU64,
+    busy_us: AtomicU64,
+    wait_us: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ProgressBody {
+        ProgressBody {
+            events: self.events.load(Ordering::Relaxed),
+            steps: self.steps.load(Ordering::Relaxed),
+            wire_bits: self.wire_bits.load(Ordering::Relaxed),
+            wire_fallbacks: self.wire_fallbacks.load(Ordering::Relaxed),
+            read_retries: self.read_retries.load(Ordering::Relaxed),
+            publish_retries: self.publish_retries.load(Ordering::Relaxed),
+            push_conflicts: self.push_conflicts.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            wait_us: self.wait_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// State shared between the compute loop, the sender, and the receiver
+/// threads of one worker process.
+struct Shared<P: SlotPayload> {
+    /// slots for ALL n nodes: owned shard + mirrors of every peer's nodes
+    slots: Vec<ModelSlot<P>>,
+    /// current owner rank of each node (updated on `Adopt` broadcasts)
+    owner: Vec<AtomicU32>,
+    /// owned nodes whose slot changed since the sender's last broadcast
+    dirty: Vec<AtomicBool>,
+    /// local interaction count — the staleness/stamp clock of this process
+    done: AtomicU64,
+    stop: AtomicBool,
+    counters: Counters,
+    rank: u32,
+    dim: usize,
+}
+
+/// Run one worker process: register with the coordinator at `connect`,
+/// receive the shard assignment + run config, gossip until `Shutdown`.
+/// `throttle_us` adds a per-interaction sleep (a debug/test knob that makes
+/// mid-run failures injectable before the job drains).
+pub fn run_worker(connect: &str, throttle_us: u64) -> Result<(), String> {
+    let io = |e: std::io::Error| format!("cluster worker: {e}");
+    // gossip listener first, so the Hello can advertise its port
+    let listener = TcpListener::bind("127.0.0.1:0").map_err(io)?;
+    let gossip_port = listener.local_addr().map_err(io)?.port();
+
+    let coord = connect_with_retry(connect, Duration::from_secs(10)).map_err(io)?;
+    let mut coord_writer = coord.try_clone().map_err(io)?;
+    send_msg(&mut coord_writer, &Msg::Hello { gossip_port }).map_err(io)?;
+    let mut coord_conn = FrameConn::new(coord);
+    let assign = coord_conn
+        .read_msg()
+        .map_err(io)?
+        .ok_or("cluster worker: coordinator closed before assigning a shard")?;
+    let (rank, workers, config_ini, owned, peers) = match assign {
+        Msg::Assign { rank, workers, config_ini, owned, peers } => {
+            (rank, workers, config_ini, owned, peers)
+        }
+        m => return Err(format!("cluster worker: expected Assign, got {m:?}")),
+    };
+    let cfg = RunConfig::from_ini(&config_ini)
+        .map_err(|e| format!("cluster worker: bad config from coordinator: {e}"))?;
+    eprintln!(
+        "cluster worker {rank}/{workers}: {} node(s) of n={} (algorithm={}, wire={})",
+        owned.len(),
+        cfg.n,
+        cfg.algo,
+        cfg.wire
+    );
+
+    let algo = make_algorithm(
+        &cfg.algo,
+        &AlgoOptions {
+            local_steps: cfg.local_steps(),
+            mode: cfg.averaging_mode()?,
+            h_localsgd: cfg.h.round().max(0.0) as u64,
+            wire: cfg.wire_codec()?,
+            kernel: cfg.kernel_enum()?,
+        },
+    )?;
+    let policy = algo.mix_policy().ok_or_else(|| {
+        format!(
+            "cluster worker: algorithm '{}' has no free-running MixPolicy \
+             (the coordinator should have rejected this job)",
+            cfg.algo
+        )
+    })?;
+    let backend = build_backend(&cfg)?;
+
+    // full-mesh gossip: dial every lower rank, accept every higher rank.
+    // Each connection splits into a read half (a FrameConn that keeps any
+    // decoder state from the handshake — discarding it could drop or shear
+    // a frame the peer sent right behind its PeerHello) and a write half.
+    let mut peer_readers: Vec<Option<FrameConn>> = (0..workers).map(|_| None).collect();
+    let mut peer_writers: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+    // gossip writes are best-effort: a short write timeout keeps a frozen
+    // peer (full TCP buffer, stopped process) from stalling the sender
+    // thread — a timed-out write drops the peer, and the coordinator's
+    // heartbeat scan owns declaring it dead
+    const GOSSIP_WRITE_TIMEOUT: Duration = Duration::from_millis(250);
+    for p in &peers {
+        if p.rank < rank {
+            let mut s = connect_with_retry(&p.addr, Duration::from_secs(10)).map_err(io)?;
+            s.set_write_timeout(Some(GOSSIP_WRITE_TIMEOUT)).map_err(io)?;
+            send_msg(&mut s, &Msg::PeerHello { rank }).map_err(io)?;
+            peer_readers[p.rank as usize] = Some(FrameConn::new(s.try_clone().map_err(io)?));
+            peer_writers[p.rank as usize] = Some(s);
+        }
+    }
+    let expect_accepts = peers.iter().filter(|p| p.rank > rank).count();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    listener.set_nonblocking(true).map_err(io)?;
+    let mut accepted = 0;
+    while accepted < expect_accepts {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nodelay(true).ok();
+                let mut conn = FrameConn::new(s);
+                match conn.read_msg().map_err(io)? {
+                    Some(Msg::PeerHello { rank: r }) if (r as usize) < peer_writers.len() => {
+                        let w = conn.stream.try_clone().map_err(io)?;
+                        w.set_write_timeout(Some(GOSSIP_WRITE_TIMEOUT)).map_err(io)?;
+                        peer_writers[r as usize] = Some(w);
+                        peer_readers[r as usize] = Some(conn);
+                        accepted += 1;
+                    }
+                    m => return Err(format!("cluster worker: bad gossip handshake: {m:?}")),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(format!(
+                        "cluster worker {rank}: only {accepted}/{expect_accepts} peers \
+                         connected within 30s"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(io(e)),
+        }
+    }
+
+    match policy.payload() {
+        PayloadKind::Plain => worker_with::<PlainModel>(
+            &cfg,
+            algo.as_ref(),
+            policy.as_ref(),
+            backend.as_ref(),
+            rank,
+            workers,
+            &owned,
+            peer_readers,
+            peer_writers,
+            coord_conn,
+            coord_writer,
+            throttle_us,
+        ),
+        PayloadKind::PushSumWeighted => worker_with::<PushSumWeighted>(
+            &cfg,
+            algo.as_ref(),
+            policy.as_ref(),
+            backend.as_ref(),
+            rank,
+            workers,
+            &owned,
+            peer_readers,
+            peer_writers,
+            coord_conn,
+            coord_writer,
+            throttle_us,
+        ),
+    }
+}
+
+/// Decode lanes arriving in an `Adopt`/checkpoint entry back into a fresh
+/// node state (push-sum restores the weight lane; momentum restarts cold).
+fn state_from_lanes<P: SlotPayload>(
+    lanes: &[f32],
+    dim: usize,
+    node: usize,
+    seed: u64,
+) -> NodeState {
+    let mut st = NodeState::new(
+        lanes[..dim].to_vec(),
+        vec![0.0; dim],
+        Pcg64::stream(seed, STREAM_NODE_BASE + node as u64),
+    );
+    if P::AUX_LANES == 1 {
+        st.weight = lanes[dim] as f64;
+    }
+    st
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_with<P: SlotPayload>(
+    cfg: &RunConfig,
+    algo: &dyn Algorithm,
+    policy: &dyn MixPolicy,
+    backend: &dyn Backend,
+    rank: u32,
+    workers: u32,
+    owned: &[u32],
+    peer_readers: Vec<Option<FrameConn>>,
+    peer_writers: Vec<Option<TcpStream>>,
+    coord_conn: FrameConn,
+    coord_writer: TcpStream,
+    throttle_us: u64,
+) -> Result<(), String> {
+    let n = cfg.n;
+    let dim = backend.dim();
+    let (p0, m0) = backend.init();
+    let mut rng = Pcg64::seed(cfg.seed);
+    let graph = Graph::build(cfg.topology_enum()?, n, &mut rng);
+
+    let sh = Arc::new(Shared::<P> {
+        slots: (0..n).map(|_| ModelSlot::<P>::new(&p0)).collect(),
+        owner: (0..n).map(|k| AtomicU32::new(k as u32 % workers)).collect(),
+        dirty: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        done: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        counters: Counters::default(),
+        rank,
+        dim,
+    });
+
+    let (cross_tx, cross_rx) = mpsc::channel::<(u32, Vec<f32>)>();
+    let (adopt_tx, adopt_rx) = mpsc::channel::<Vec<NodeLanes>>();
+    let (final_tx, final_rx) = mpsc::channel::<Msg>();
+
+    // coordinator reader: owner-map updates on Adopt, stop on Shutdown.
+    // Detached by design — it blocks in read and dies with the process.
+    {
+        let sh = Arc::clone(&sh);
+        let mut conn = coord_conn;
+        std::thread::spawn(move || loop {
+            match conn.read_msg() {
+                Ok(Some(Msg::Adopt { to_rank, entries, .. })) => {
+                    for e in &entries {
+                        sh.owner[e.node as usize].store(to_rank, Ordering::Release);
+                    }
+                    if to_rank == sh.rank {
+                        let _ = adopt_tx.send(entries);
+                    }
+                }
+                Ok(Some(Msg::Shutdown { .. })) | Ok(None) => {
+                    sh.stop.store(true, Ordering::Release);
+                    return;
+                }
+                Ok(Some(_)) => {}
+                Err(_) => {
+                    sh.stop.store(true, Ordering::Release);
+                    return;
+                }
+            }
+        });
+    }
+
+    // one receiver thread per peer connection (also detached)
+    for (peer, conn) in peer_readers.into_iter().enumerate() {
+        let Some(conn) = conn else { continue };
+        let sh = Arc::clone(&sh);
+        std::thread::spawn(move || receive_loop::<P>(sh, conn, peer));
+    }
+
+    // the sender thread owns every outbound socket
+    let sender = {
+        let sh = Arc::clone(&sh);
+        let codec = policy.wire();
+        std::thread::spawn(move || {
+            send_loop::<P>(sh, peer_writers, coord_writer, codec, cross_rx, final_rx)
+        })
+    };
+
+    // ---- the compute loop: freerun's worker protocol over the shard ----
+    let lr = cfg.lr_schedule_enum()?;
+    let cost = cfg.cost_model();
+    let mut states: Vec<(usize, NodeState)> = owned
+        .iter()
+        .map(|&k| {
+            let st = NodeState::new(
+                p0.clone(),
+                m0.clone(),
+                Pcg64::stream(cfg.seed, STREAM_NODE_BASE + k as u64),
+            );
+            (k as usize, st)
+        })
+        .collect();
+    let mut wrng = Pcg64::stream(cfg.seed, STREAM_WORKER_BASE + rank as u64);
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
+        std::collections::BinaryHeap::new();
+    // integer clock keys (exponential times scaled to µ-ticks) keep the
+    // heap Ord without the f64 wrapper
+    let clock = |r: &mut Pcg64| (r.exponential(1.0) * 1e6) as u64;
+    for ix in 0..states.len() {
+        let at = clock(&mut wrng);
+        heap.push(std::cmp::Reverse((at, ix)));
+    }
+    let lanes = P::lanes(dim);
+    let mut scratch = MergeScratch::with_kernel(lanes, algo.kernel());
+    let mut staleness = StalenessHistogram::new((8 * n).max(1024));
+    let sync_own = policy.needs_own_slot_sync();
+    let mut local_events = 0u64;
+
+    while !sh.stop.load(Ordering::Acquire) {
+        // integrate adopted nodes (dead peer's shard, from the coordinator)
+        while let Ok(entries) = adopt_rx.try_recv() {
+            let base = heap.peek().map(|std::cmp::Reverse((at, _))| *at).unwrap_or(0);
+            for e in entries {
+                let node = e.node as usize;
+                let st = state_from_lanes::<P>(&e.lanes, dim, node, cfg.seed);
+                sh.slots[node].publish(&e.lanes, sh.done.load(Ordering::Relaxed));
+                sh.dirty[node].store(true, Ordering::Release);
+                let ix = states.len();
+                states.push((node, st));
+                heap.push(std::cmp::Reverse((base + clock(&mut wrng), ix)));
+                eprintln!("cluster worker {rank}: adopted node {node}");
+            }
+        }
+        let Some(std::cmp::Reverse((at, ix))) = heap.pop() else {
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        };
+        let started = Instant::now();
+        let mut sync_secs = 0.0f64;
+        let (node, st) = &mut states[ix];
+        let node = *node;
+        if sync_own {
+            let t0 = Instant::now();
+            let (_, r) = sh.slots[node].read_into(&mut scratch.own);
+            sync_secs += t0.elapsed().as_secs_f64();
+            sh.counters.read_retries.fetch_add(r, Ordering::Relaxed);
+            policy.absorb_own_slot(st, &scratch.own, dim);
+        }
+        let partner = graph.sample_neighbor(node, &mut wrng);
+        let h = policy.draw_steps(&mut wrng);
+        // the lr schedule wants a global event index; without a global
+        // counter, rank-striped local counts are an unbiased monotone proxy
+        let t_global = local_events * workers as u64 + rank as u64;
+        let ctx = StepCtx { backend, cost: &cost, graph: &graph, lr: lr.at(t_global + 1), dim, n };
+        policy.local_phase(&ctx, node, st, h);
+        sh.counters.steps.fetch_add(h, Ordering::Relaxed);
+        // partner snapshot: a local slot or a peer mirror — same read
+        let t0 = Instant::now();
+        let (stamp, r) = sh.slots[partner].read_into(&mut scratch.snapshot);
+        sync_secs += t0.elapsed().as_secs_f64();
+        sh.counters.read_retries.fetch_add(r, Ordering::Relaxed);
+        staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
+        // merge accounting note: the policy's EventOutcome models the
+        // simulated wire; the cluster reports *real* socket bytes instead,
+        // so only the fallback count is taken from the outcome here
+        let outcome = policy.merge(&ctx, node, st, &mut scratch, &mut wrng);
+        if outcome.fallbacks > 0 {
+            sh.counters.wire_fallbacks.fetch_add(outcome.fallbacks, Ordering::Relaxed);
+        }
+        st.interactions += 1;
+        let stamp_now = sh.done.load(Ordering::Relaxed);
+        let t1 = Instant::now();
+        let pub_retries = sh.slots[node].publish(&scratch.publish, stamp_now);
+        sh.counters.publish_retries.fetch_add(pub_retries, Ordering::Relaxed);
+        sh.dirty[node].store(true, Ordering::Release);
+        let p_owner = sh.owner[partner].load(Ordering::Acquire);
+        if p_owner == rank {
+            if !sh.slots[partner].try_publish(&scratch.cross, stamp_now) {
+                sh.counters.push_conflicts.fetch_add(1, Ordering::Relaxed);
+            }
+            sh.dirty[partner].store(true, Ordering::Release);
+        } else {
+            // remote partner: the cross-write crosses the wire instead
+            let _ = cross_tx.send((partner as u32, scratch.cross.clone()));
+        }
+        sync_secs += t1.elapsed().as_secs_f64();
+        heap.push(std::cmp::Reverse((at + clock(&mut wrng), ix)));
+        local_events += 1;
+        sh.done.fetch_add(1, Ordering::Release);
+        sh.counters.events.fetch_add(1, Ordering::Relaxed);
+        let dt = started.elapsed().as_secs_f64();
+        let busy = ((dt - sync_secs).max(0.0) * 1e6) as u64;
+        sh.counters.busy_us.fetch_add(busy, Ordering::Relaxed);
+        sh.counters.wait_us.fetch_add((sync_secs * 1e6) as u64, Ordering::Relaxed);
+        if throttle_us > 0 {
+            std::thread::sleep(Duration::from_micros(throttle_us));
+        }
+    }
+
+    // final report: every owned slot's latest payload + counters + staleness
+    let mut entries = Vec::new();
+    let mut buf = vec![0.0f32; lanes];
+    for &(node, _) in &states {
+        if sh.owner[node].load(Ordering::Acquire) == rank {
+            sh.slots[node].read_into(&mut buf);
+            entries.push(NodeLanes { node: node as u32, lanes: buf.clone() });
+        }
+    }
+    let done_msg = Msg::done(entries, sh.counters.snapshot(), &staleness);
+    final_tx
+        .send(done_msg)
+        .map_err(|_| "cluster worker: sender thread died before the final report".to_string())?;
+    sender
+        .join()
+        .map_err(|_| "cluster worker: sender thread panicked".to_string())?
+        .map_err(|e| format!("cluster worker: {e}"))?;
+    eprintln!("cluster worker {rank}: done ({local_events} interactions)");
+    Ok(())
+}
+
+/// Receiver thread for one peer connection: peers' `Publish` broadcasts
+/// land in mirror slots (lattice frames decoded against the mirror — the
+/// previous broadcast), `Cross` frames are best-effort applied to owned
+/// slots. Exits on EOF/socket error (peer death is the coordinator's
+/// problem, not ours).
+fn receive_loop<P: SlotPayload>(sh: Arc<Shared<P>>, mut conn: FrameConn, _peer: usize) {
+    let dim = sh.dim;
+    let lanes = P::lanes(dim);
+    let mut refbuf = vec![0.0f32; lanes];
+    loop {
+        let msg = match conn.read_msg() {
+            Ok(Some(m)) => m,
+            Ok(None) | Err(_) => return,
+        };
+        match msg {
+            Msg::Publish { node, enc } => {
+                let node = node as usize;
+                if node >= sh.slots.len() || sh.owner[node].load(Ordering::Acquire) == sh.rank {
+                    continue; // stale broadcast across an adoption hand-off
+                }
+                let stamp = sh.done.load(Ordering::Relaxed);
+                match enc {
+                    PayloadEnc::F32 { lanes: data } => {
+                        if data.len() == lanes {
+                            sh.slots[node].publish(&data, stamp);
+                        }
+                    }
+                    PayloadEnc::Lattice { bits, eps, seed, len, checksum, packed, aux } => {
+                        if len as usize != dim || aux.len() != lanes - dim {
+                            sh.counters.wire_fallbacks.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        sh.slots[node].read_into(&mut refbuf);
+                        let msg = QuantizedMsg {
+                            bits,
+                            eps,
+                            seed,
+                            len: len as usize,
+                            payload: packed,
+                            checksum,
+                        };
+                        match quant::decode(&msg, &refbuf[..dim]) {
+                            Ok(mut decoded) => {
+                                decoded.extend_from_slice(&aux);
+                                sh.slots[node].publish(&decoded, stamp);
+                            }
+                            Err(_) => {
+                                // reference diverged: drop, count, wait for
+                                // the sender's periodic f32 refresh
+                                sh.counters.wire_fallbacks.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+            Msg::Cross { node, lanes: data } => {
+                let node = node as usize;
+                if node >= sh.slots.len()
+                    || sh.owner[node].load(Ordering::Acquire) != sh.rank
+                    || data.len() != lanes
+                {
+                    continue; // raced an adoption; best-effort semantics
+                }
+                let stamp = sh.done.load(Ordering::Relaxed);
+                if !sh.slots[node].try_publish(&data, stamp) {
+                    sh.counters.push_conflicts.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    sh.dirty[node].store(true, Ordering::Release);
+                }
+            }
+            _ => { /* peers only gossip */ }
+        }
+    }
+}
+
+/// The sender thread: owns every outbound socket. Scans dirty flags
+/// (latest-wins outbound snapshots), encodes each publish **once** against
+/// `last_pub`, broadcasts to all live peers, forwards queued cross-writes,
+/// heartbeats `Progress`, streams `Checkpoint`s, and finally forwards the
+/// compute loop's `Done`.
+fn send_loop<P: SlotPayload>(
+    sh: Arc<Shared<P>>,
+    mut peers: Vec<Option<TcpStream>>,
+    mut coord: TcpStream,
+    codec: crate::coordinator::WireCodec,
+    cross_rx: mpsc::Receiver<(u32, Vec<f32>)>,
+    final_rx: mpsc::Receiver<Msg>,
+) -> std::io::Result<()> {
+    let dim = sh.dim;
+    let lanes = P::lanes(dim);
+    let mut buf = vec![0.0f32; lanes];
+    // the sender's record of each node's previous broadcast, as decoded by
+    // every receiver — the lattice reference (None → f32 resync)
+    let mut last_pub: Vec<Option<Vec<f32>>> = vec![None; sh.slots.len()];
+    let mut pub_seq: Vec<u64> = vec![0; sh.slots.len()];
+    let mut hb = Instant::now();
+    let mut cp = Instant::now();
+    let n = sh.slots.len();
+
+    let broadcast = |peers: &mut Vec<Option<TcpStream>>, sh: &Shared<P>, msg: &Msg| {
+        for slot in peers.iter_mut() {
+            if let Some(s) = slot {
+                match send_msg(s, msg) {
+                    Ok(b) => {
+                        sh.counters.wire_bits.fetch_add(8 * b as u64, Ordering::Relaxed);
+                    }
+                    Err(_) => *slot = None, // dead peer; coordinator recovers
+                }
+            }
+        }
+    };
+
+    loop {
+        let mut idle = true;
+        // the compute loop's final report ends this thread
+        if let Ok(done) = final_rx.try_recv() {
+            send_msg(&mut coord, &done)?;
+            return Ok(());
+        }
+        // queued cross-writes to remote owners
+        while let Ok((node, data)) = cross_rx.try_recv() {
+            idle = false;
+            let owner = sh.owner[node as usize].load(Ordering::Acquire) as usize;
+            if owner < peers.len() {
+                if let Some(s) = peers[owner].as_mut() {
+                    match send_msg(s, &Msg::Cross { node, lanes: data }) {
+                        Ok(b) => {
+                            sh.counters.wire_bits.fetch_add(8 * b as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => peers[owner] = None,
+                    }
+                }
+            }
+        }
+        // latest-wins publish broadcast of every dirty owned node
+        for node in 0..n {
+            if sh.owner[node].load(Ordering::Acquire) != sh.rank {
+                continue;
+            }
+            if !sh.dirty[node].swap(false, Ordering::AcqRel) {
+                continue;
+            }
+            idle = false;
+            sh.slots[node].read_into(&mut buf);
+            pub_seq[node] += 1;
+            let enc = encode_publish(codec, &buf, dim, &mut last_pub[node], pub_seq[node], &sh);
+            broadcast(&mut peers, &sh, &Msg::Publish { node: node as u32, enc });
+        }
+        if hb.elapsed() >= PROGRESS_EVERY {
+            hb = Instant::now();
+            send_msg(&mut coord, &Msg::Progress(sh.counters.snapshot()))?;
+        }
+        if cp.elapsed() >= CHECKPOINT_EVERY {
+            cp = Instant::now();
+            let mut entries = Vec::new();
+            for node in 0..n {
+                if sh.owner[node].load(Ordering::Acquire) == sh.rank {
+                    sh.slots[node].read_into(&mut buf);
+                    entries.push(NodeLanes { node: node as u32, lanes: buf.clone() });
+                }
+            }
+            let events = sh.counters.events.load(Ordering::Relaxed);
+            send_msg(&mut coord, &Msg::Checkpoint { events, entries })?;
+        }
+        if idle {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+/// Encode one outbound publish, once, against the node's previous
+/// broadcast. Falls back to f32 (resetting the shared reference) on first
+/// publish, on the periodic refresh, and when the self-decode distance
+/// criterion fails — the counted fallback path of the lattice scheme.
+fn encode_publish<P: SlotPayload>(
+    codec: crate::coordinator::WireCodec,
+    buf: &[f32],
+    dim: usize,
+    last_pub: &mut Option<Vec<f32>>,
+    seq: u64,
+    sh: &Shared<P>,
+) -> PayloadEnc {
+    use crate::coordinator::WireCodec;
+    let model = &buf[..dim];
+    if let WireCodec::Lattice { bits, eps } = codec {
+        if seq % F32_REFRESH_EVERY != 0 {
+            if let Some(reference) = last_pub.as_deref() {
+                let qm = quant::encode(model, eps, bits, seq as u32);
+                match quant::decode(&qm, reference) {
+                    Ok(decoded) => {
+                        *last_pub = Some(decoded);
+                        return PayloadEnc::Lattice {
+                            bits,
+                            eps,
+                            seed: qm.seed,
+                            len: qm.len as u32,
+                            checksum: qm.checksum,
+                            packed: qm.payload,
+                            aux: buf[dim..].to_vec(),
+                        };
+                    }
+                    Err(_) => {
+                        sh.counters.wire_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+    *last_pub = Some(model.to_vec());
+    PayloadEnc::F32 { lanes: buf.to_vec() }
+}

@@ -74,11 +74,13 @@ pub struct RunConfig {
     pub model_bytes: u64,
     /// results CSV path ("" = don't write)
     pub out_csv: String,
-    /// serial | parallel | freerun — which executor runs the algorithm.
-    /// `serial`/`parallel` drain the pre-drawn schedule (bit-replayable);
-    /// `freerun` is the free-running sharded runtime (throughput-faithful,
-    /// non-replayable, algorithms with a `MixPolicy`: swarm, poisson,
-    /// adpsgd, dpsgd, and — via weighted slots — sgp)
+    /// serial | parallel | freerun | cluster — which executor runs the
+    /// algorithm. `serial`/`parallel` drain the pre-drawn schedule
+    /// (bit-replayable); `freerun` is the free-running sharded runtime
+    /// (throughput-faithful, non-replayable, algorithms with a
+    /// `MixPolicy`: swarm, poisson, adpsgd, dpsgd, and — via weighted
+    /// slots — sgp); `cluster` is the multi-process flavor of freerun
+    /// (coordinator + socket-gossiping workers, `--role` required)
     pub executor: String,
     /// worker threads for the parallel/freerun executors. 0 is the
     /// *internal* "auto" default (one per core); explicitly setting
@@ -93,6 +95,12 @@ pub struct RunConfig {
     /// interaction dispatches to (`--kernel`). Both are bit-exact, so this
     /// is a pure performance axis; `scalar` is the reference default.
     pub kernel: String,
+    /// worker *processes* the cluster executor's coordinator registers
+    /// before starting the job (`--workers`); unrelated to `threads`
+    pub workers: usize,
+    /// seconds without a heartbeat before the cluster coordinator declares
+    /// a worker dead and reassigns its shard from the last checkpoint
+    pub heartbeat_timeout: f64,
 }
 
 impl Default for RunConfig {
@@ -129,6 +137,8 @@ impl Default for RunConfig {
             threads: 0,
             shards: 0,
             kernel: "scalar".into(),
+            workers: 2,
+            heartbeat_timeout: 5.0,
         }
     }
 }
@@ -219,8 +229,13 @@ impl RunConfig {
             }
             "out_csv" => self.out_csv = value.into(),
             "executor" => match value {
-                "serial" | "parallel" | "freerun" => self.executor = value.into(),
-                _ => return Err(bad(key, value)),
+                "serial" | "parallel" | "freerun" | "cluster" => self.executor = value.into(),
+                _ => {
+                    return Err(format!(
+                        "bad value '{value}' for key 'executor' \
+                         (want serial, parallel, freerun, or cluster)"
+                    ))
+                }
             },
             "threads" => {
                 let t: usize = value.parse().map_err(|_| bad(key, value))?;
@@ -252,6 +267,27 @@ impl RunConfig {
                     ))
                 }
             },
+            "workers" => {
+                let w: usize = value.parse().map_err(|_| bad(key, value))?;
+                if w == 0 {
+                    return Err(
+                        "workers must be >= 1; omit the key (or the --workers flag) \
+                         to default to 2 cluster worker processes"
+                            .to_string(),
+                    );
+                }
+                self.workers = w;
+            }
+            "heartbeat_timeout" | "heartbeat-timeout" => {
+                let t: f64 = value.parse().map_err(|_| bad(key, value))?;
+                if !t.is_finite() || t <= 0.0 {
+                    return Err(format!(
+                        "heartbeat_timeout must be a positive number of seconds \
+                         (got '{value}'); omit the key to default to 5"
+                    ));
+                }
+                self.heartbeat_timeout = t;
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -333,6 +369,87 @@ impl RunConfig {
                 None
             },
         }
+    }
+
+    /// Serialize to INI text that [`RunConfig::from_ini`] parses back to an
+    /// identical config — how the cluster coordinator distributes the run
+    /// config to its workers (one frame, no shared filesystem assumed).
+    pub fn to_ini(&self) -> String {
+        let shard = match self.shard {
+            ShardMode::Iid => "iid".to_string(),
+            ShardMode::ByLabel => "label".to_string(),
+            ShardMode::Dirichlet(a) => format!("dirichlet:{a}"),
+        };
+        let mut out = String::from("[run]\n");
+        let mut put = |k: &str, v: String| {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v);
+            out.push('\n');
+        };
+        put("algo", self.algo.clone());
+        put("preset", self.preset.clone());
+        put("n", self.n.to_string());
+        put("topology", self.topology.clone());
+        put("interactions", self.interactions.to_string());
+        put("h", self.h.to_string());
+        put("geometric", self.geometric.to_string());
+        put("mode", self.mode.clone());
+        put("wire", self.wire.clone());
+        put("quant_bits", self.quant_bits.to_string());
+        put("quant_eps", self.quant_eps.to_string());
+        put("lr", self.lr.to_string());
+        put("lr_schedule", self.lr_schedule.clone());
+        put("seed", self.seed.to_string());
+        put("eval_every", self.eval_every.to_string());
+        put("track_gamma", self.track_gamma.to_string());
+        put("shard", shard);
+        put("data_per_agent", self.data_per_agent.to_string());
+        put("artifacts_dir", self.artifacts_dir.clone());
+        put("batch_time", self.batch_time.to_string());
+        put("jitter", self.jitter.to_string());
+        put("straggler_prob", self.straggler_prob.to_string());
+        put("straggle_factor", self.straggle_factor.to_string());
+        put("latency", self.latency.to_string());
+        put("bandwidth", self.bandwidth.to_string());
+        put("model_bytes", self.model_bytes.to_string());
+        put("executor", self.executor.clone());
+        // threads/shards 0 is the internal auto default that set() rejects
+        // as an explicit value, so only non-default values are written
+        if self.threads > 0 {
+            put("threads", self.threads.to_string());
+        }
+        if self.shards > 0 {
+            put("shards", self.shards.to_string());
+        }
+        put("kernel", self.kernel.clone());
+        put("workers", self.workers.to_string());
+        put("heartbeat_timeout", self.heartbeat_timeout.to_string());
+        if !self.out_csv.is_empty() {
+            put("out_csv", self.out_csv.clone());
+        }
+        out
+    }
+
+    /// Simulated-wire knobs that were explicitly moved off their defaults —
+    /// the ones the cluster executor *ignores* (its gossip crosses real
+    /// sockets, so `latency`/`bandwidth`/`model_bytes` have nothing to
+    /// scale). The CLI prints a one-line warning naming these when
+    /// `--executor cluster` runs; compute-side knobs (`batch_time`,
+    /// `jitter`, stragglers) still apply everywhere.
+    pub fn simulated_wire_overrides(&self) -> Vec<&'static str> {
+        let d = Self::default();
+        let mut over = Vec::new();
+        if self.latency != d.latency {
+            over.push("latency");
+        }
+        if self.bandwidth != d.bandwidth {
+            over.push("bandwidth");
+        }
+        if self.model_bytes != d.model_bytes {
+            over.push("model_bytes");
+        }
+        over
     }
 
     pub fn is_oracle(&self) -> bool {
@@ -498,6 +615,105 @@ mod tests {
         let err = c.set("shards", "0").unwrap_err();
         assert!(err.contains("shards must be >= 1"), "unhelpful error: {err}");
         assert_eq!(c.shards, 16);
+    }
+
+    #[test]
+    fn cluster_executor_value_parses() {
+        let mut c = RunConfig::default();
+        c.set("executor", "cluster").unwrap();
+        assert_eq!(c.executor, "cluster");
+        let err = RunConfig::default().set("executor", "mpi").unwrap_err();
+        assert!(err.contains("cluster"), "error should list the cluster value: {err}");
+    }
+
+    #[test]
+    fn workers_key_validates_like_threads() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.workers, 2);
+        c.set("workers", "3").unwrap();
+        assert_eq!(c.workers, 3);
+        // explicit workers=0 is rejected with an actionable message and
+        // must not clobber the prior value — mirrors threads=0/shards=0
+        let err = c.set("workers", "0").unwrap_err();
+        assert!(err.contains("workers must be >= 1"), "unhelpful error: {err}");
+        assert_eq!(c.workers, 3);
+        assert!(c.set("workers", "many").is_err());
+        let err = RunConfig::from_ini("[run]\nworkers = 0\n").unwrap_err();
+        assert!(err.contains("workers must be >= 1"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn heartbeat_timeout_rejects_nonpositive_and_nonfinite() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.heartbeat_timeout, 5.0);
+        c.set("heartbeat_timeout", "1.5").unwrap();
+        assert_eq!(c.heartbeat_timeout, 1.5);
+        // the hyphenated CLI spelling maps to the same key
+        c.set("heartbeat-timeout", "2").unwrap();
+        assert_eq!(c.heartbeat_timeout, 2.0);
+        for bad in ["0", "-1", "nan", "inf", "soon"] {
+            let err = c.set("heartbeat_timeout", bad).unwrap_err();
+            assert!(
+                err.contains("heartbeat_timeout") || err.contains("bad value"),
+                "unhelpful error for '{bad}': {err}"
+            );
+            assert_eq!(c.heartbeat_timeout, 2.0, "bad '{bad}' must not clobber");
+        }
+    }
+
+    #[test]
+    fn to_ini_roundtrips_every_field() {
+        let mut c = RunConfig::default();
+        for (k, v) in [
+            ("algo", "sgp"),
+            ("preset", "oracle:quadratic"),
+            ("n", "24"),
+            ("topology", "random4"),
+            ("interactions", "1234"),
+            ("h", "2.5"),
+            ("geometric", "true"),
+            ("mode", "quantized"),
+            ("wire", "lattice"),
+            ("quant_bits", "6"),
+            ("quant_eps", "0.002"),
+            ("lr", "0.07"),
+            ("lr_schedule", "step"),
+            ("seed", "77"),
+            ("eval_every", "100"),
+            ("track_gamma", "true"),
+            ("shard", "dirichlet:0.3"),
+            ("data_per_agent", "64"),
+            ("batch_time", "0.1"),
+            ("latency", "0.0001"),
+            ("executor", "cluster"),
+            ("threads", "3"),
+            ("shards", "6"),
+            ("kernel", "simd"),
+            ("workers", "3"),
+            ("heartbeat_timeout", "1.5"),
+        ] {
+            c.set(k, v).unwrap();
+        }
+        let back = RunConfig::from_ini(&c.to_ini()).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{c:?}"));
+        // defaults round-trip too (threads/shards stay at the auto 0)
+        let d = RunConfig::default();
+        let back = RunConfig::from_ini(&d.to_ini()).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{d:?}"));
+        assert_eq!(back.threads, 0);
+    }
+
+    #[test]
+    fn simulated_wire_overrides_name_only_moved_knobs() {
+        let mut c = RunConfig::default();
+        assert!(c.simulated_wire_overrides().is_empty());
+        c.set("latency", "1e-4").unwrap();
+        c.set("model_bytes", "45000000").unwrap();
+        assert_eq!(c.simulated_wire_overrides(), vec!["latency", "model_bytes"]);
+        // compute-side knobs are not wire knobs — they still apply on the
+        // cluster executor and must not be flagged
+        c.set("batch_time", "0.01").unwrap();
+        assert_eq!(c.simulated_wire_overrides(), vec!["latency", "model_bytes"]);
     }
 
     #[test]

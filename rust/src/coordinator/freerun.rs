@@ -86,8 +86,11 @@ const STREAM_NODE_BASE: u64 = 0x5EED_F4EE_0000_1000;
 /// policy contract rather than a hardcoded model snapshot. Readers never
 /// block writers and vice versa; multiple writers are arbitrated by a CAS
 /// on the odd bit, and the best-effort cross-write path simply gives up
-/// (and is counted) when it loses that race.
-struct ModelSlot<P: SlotPayload> {
+/// (and is counted) when it loses that race. Crate-visible: the cluster
+/// executor ([`crate::cluster`]) reuses the same slot for its per-process
+/// node mirrors, so in-process and cross-process gossip share one
+/// publish/read protocol.
+pub(crate) struct ModelSlot<P: SlotPayload> {
     /// odd = write in progress; `(seq >> 1) & 1` = active buffer index
     seq: AtomicU64,
     buf: [UnsafeCell<Vec<f32>>; 2],
@@ -106,7 +109,7 @@ unsafe impl<P: SlotPayload> Sync for ModelSlot<P> {}
 impl<P: SlotPayload> ModelSlot<P> {
     /// Slot initialized with the payload encoding of the common init model
     /// (push-sum weight 1).
-    fn new(params: &[f32]) -> Self {
+    pub(crate) fn new(params: &[f32]) -> Self {
         let mut lanes = vec![0.0f32; P::lanes(params.len())];
         P::encode(params, 1.0, &mut lanes);
         Self {
@@ -118,7 +121,7 @@ impl<P: SlotPayload> ModelSlot<P> {
     }
 
     /// One publish attempt; false if another writer holds the slot.
-    fn try_publish(&self, data: &[f32], stamp: u64) -> bool {
+    pub(crate) fn try_publish(&self, data: &[f32], stamp: u64) -> bool {
         let s = self.seq.load(Ordering::Relaxed);
         if s & 1 == 1 {
             return false;
@@ -139,7 +142,7 @@ impl<P: SlotPayload> ModelSlot<P> {
 
     /// Publish, spinning out any concurrent cross-writer (owners must
     /// succeed). Returns the CAS retries burned.
-    fn publish(&self, data: &[f32], stamp: u64) -> u64 {
+    pub(crate) fn publish(&self, data: &[f32], stamp: u64) -> u64 {
         let mut retries = 0;
         while !self.try_publish(data, stamp) {
             retries += 1;
@@ -150,7 +153,7 @@ impl<P: SlotPayload> ModelSlot<P> {
 
     /// Seqlock read of the current payload into `out`; returns the publish
     /// stamp and the retries burned racing concurrent writes.
-    fn read_into(&self, out: &mut [f32]) -> (u64, u64) {
+    pub(crate) fn read_into(&self, out: &mut [f32]) -> (u64, u64) {
         let mut retries = 0;
         loop {
             let s1 = self.seq.load(Ordering::Acquire);

@@ -106,6 +106,23 @@ impl StalenessHistogram {
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
+
+    /// Raw parts `(buckets, overflow, count, sum, max)` — what a cluster
+    /// worker serializes onto the wire so the coordinator can
+    /// [`merge`](Self::merge) histograms across processes exactly.
+    pub fn raw_parts(&self) -> (&[u64], u64, u64, u128, u64) {
+        (&self.buckets, self.overflow, self.count, self.sum, self.max)
+    }
+
+    /// Rebuild from [`raw_parts`](Self::raw_parts) output (the receiving
+    /// end of the wire serialization).
+    pub fn from_raw(buckets: Vec<u64>, overflow: u64, count: u64, sum: u128, max: u64) -> Self {
+        let mut buckets = buckets;
+        if buckets.is_empty() {
+            buckets.push(0);
+        }
+        Self { buckets, overflow, count, sum, max }
+    }
 }
 
 /// One worker's wall-clock activity split: `busy` is time inside
@@ -303,6 +320,31 @@ mod tests {
         assert_eq!(with_empty.count(), base.count());
         assert_eq!(with_empty.p50(), base.p50());
         assert_eq!(with_empty.max_observed(), base.max_observed());
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_preserves_every_quantile() {
+        let mut h = StalenessHistogram::new(8);
+        for v in [0u64, 1, 1, 3, 40] {
+            h.record(v);
+        }
+        let (buckets, overflow, count, sum, max) = h.raw_parts();
+        let back = StalenessHistogram::from_raw(buckets.to_vec(), overflow, count, sum, max);
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.max_observed(), h.max_observed());
+        assert!((back.mean() - h.mean()).abs() < 1e-12);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(back.quantile(q), h.quantile(q), "q={q}");
+        }
+        // merging a reconstructed histogram behaves like the original
+        let mut a = StalenessHistogram::new(4);
+        a.record(2);
+        a.merge(&back);
+        assert_eq!(a.count(), 6);
+        // empty-bucket reconstruction clamps to the ≥1 capacity invariant
+        let e = StalenessHistogram::from_raw(Vec::new(), 0, 0, 0, 0);
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(0.5), 0);
     }
 
     #[test]

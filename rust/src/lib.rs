@@ -63,8 +63,8 @@
 //!   and the selected kernel is surfaced in
 //!   [`coordinator::RunMetrics::kernel`] / freerun telemetry for
 //!   kernel-tagged bench rows (`benches/bench_qavg.rs`).
-//! * **Executor** (CLI `--executor serial|parallel|freerun --threads K
-//!   [--shards S]`): three generic drivers over
+//! * **Executor** (CLI `--executor serial|parallel|freerun|cluster
+//!   --threads K [--shards S]`): four generic drivers over
 //!   `&dyn Algorithm × &dyn Backend`, split into two contract classes:
 //!
 //!   | executor | mechanism | contract |
@@ -72,6 +72,7 @@
 //!   | [`coordinator::run_serial`] | pre-drawn schedule, program order | **bit-replayable** (the reference) |
 //!   | [`coordinator::run_parallel`] | same schedule, K workers, per-node locks, dependency-order commits | **bit-replayable** (≡ serial at any K) |
 //!   | [`coordinator::run_freerun`] | **no schedule**: K workers own S node shards, live Poisson clocks pick partners on the fly, seqlock model slots, initiator never blocks the partner | **throughput-faithful, non-replayable** (statistical assertions only) |
+//!   | [`cluster::run_coordinator`] / [`cluster::run_worker`] | freerun's protocol across **OS processes**: a coordinator assigns node shards, workers gossip `WireCodec`-encoded payloads over TCP ([`cluster::proto`] frames), heartbeat-timeout failover reassigns dead shards from checkpoints | **throughput-faithful, non-replayable** — and `wire_bits` is measured from the socket, not modeled |
 //!
 //! **The contract split.** `serial`/`parallel` exist to *simulate*
 //! faithfully: the schedule (participants, local-step counts, event seeds)
@@ -125,6 +126,7 @@ pub mod analysis;
 pub mod backend;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

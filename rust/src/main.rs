@@ -4,30 +4,33 @@
 //! Training dispatch is the Algorithm × Backend × Executor matrix:
 //! `--algorithm` picks the training process (SwarmSGD or any §5 baseline),
 //! the `preset` key picks the compute backend (gradient oracles or the
-//! PJRT path), and `--executor serial|parallel|freerun` picks the driver.
+//! PJRT path), and `--executor serial|parallel|freerun|cluster` picks the
+//! driver.
 //! serial/parallel replay the pre-drawn schedule and agree bit-for-bit per
 //! seed — since the phased-event redesign that includes the round-based
 //! baselines, whose per-node compute events spread across all workers;
 //! freerun is the free-running sharded runtime (algorithms with a
 //! `MixPolicy`: swarm, poisson, adpsgd, dpsgd, and sgp via weighted
 //! push-sum slots) that trades replayability for real contention/staleness
-//! telemetry. `--wire lattice|f32` selects the wire codec on every
+//! telemetry; cluster runs the same protocol across OS processes gossiping
+//! over TCP (`--role coordinator|worker`), so wire bits are measured from
+//! the socket. `--wire lattice|f32` selects the wire codec on every
 //! executor, and `--kernel scalar|simd` selects the (bit-exact) fused
 //! merge-kernel implementation every interaction dispatches to.
 
 use std::path::Path;
-use swarm_sgd::backend::Backend;
+use swarm_sgd::backend::build_backend;
 use swarm_sgd::cli::{Cli, USAGE};
+use swarm_sgd::cluster::{self, ClusterOpts, Role};
 use swarm_sgd::config::RunConfig;
 use swarm_sgd::coordinator::{
     make_algorithm, run_freerun, run_parallel, run_serial, AlgoOptions, Algorithm, RunMetrics,
     RunSpec,
 };
 use swarm_sgd::figures::{run_figure, write_curves};
-use swarm_sgd::grad::{LogisticOracle, QuadraticOracle, SoftmaxOracle};
 use swarm_sgd::output::Table;
 use swarm_sgd::rngx::Pcg64;
-use swarm_sgd::runtime::{load_manifest, XlaBackend, XlaBackendConfig};
+use swarm_sgd::runtime::load_manifest;
 use swarm_sgd::topology::Graph;
 
 fn main() {
@@ -56,50 +59,6 @@ fn main() {
     }
 }
 
-/// The `oracle:quadratic` preset — single definition so every executor and
-/// algorithm trains the identical objective.
-fn quadratic_preset(cfg: &RunConfig) -> QuadraticOracle {
-    QuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
-}
-
-fn build_backend(cfg: &RunConfig) -> Result<Box<dyn Backend>, String> {
-    if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
-        return Ok(match kind {
-            "quadratic" => Box::new(quadratic_preset(cfg)),
-            "softmax" => Box::new(SoftmaxOracle::synthetic(
-                cfg.data_per_agent * cfg.n,
-                32,
-                10,
-                cfg.n,
-                32,
-                4.0,
-                cfg.seed,
-            )),
-            "logistic" => Box::new(LogisticOracle::synthetic(
-                cfg.data_per_agent * cfg.n,
-                16,
-                cfg.n,
-                32,
-                cfg.shard == swarm_sgd::config::ShardMode::Iid,
-                cfg.seed,
-            )),
-            k => return Err(format!("unknown oracle '{k}'")),
-        });
-    }
-    let xcfg = XlaBackendConfig {
-        agents: cfg.n,
-        data_per_agent: cfg.data_per_agent,
-        shard: cfg.shard,
-        separation: 3.0,
-        seed: cfg.seed,
-        eval_batches: 2,
-    };
-    Ok(Box::new(
-        XlaBackend::load(Path::new(&cfg.artifacts_dir), &cfg.preset, xcfg)
-            .map_err(|e| format!("{e:#}"))?,
-    ))
-}
-
 fn cmd_train(cli: &Cli) -> Result<(), String> {
     let mut cfg = match cli.get("config") {
         Some(path) => {
@@ -111,13 +70,24 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in ["algorithm", "executor", "threads", "shards", "wire", "kernel"] {
+    for key in
+        ["algorithm", "executor", "threads", "shards", "wire", "kernel", "workers"]
+    {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
     }
+    if let Some(v) = cli.get("heartbeat-timeout") {
+        cfg.set("heartbeat_timeout", v)?;
+    }
     if cli.has("quick") {
         cfg.interactions = cfg.interactions.min(100);
+    }
+    // the cluster executor dispatches before any single-process setup:
+    // workers receive the config from the coordinator over the wire, and
+    // the coordinator validates algorithm eligibility itself
+    if let Some(opts) = cluster::from_cli(cli, &cfg)? {
+        return cmd_cluster(&cfg, &opts);
     }
     println!("config: {cfg:?}\n");
 
@@ -192,6 +162,38 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         metrics.executor
     );
     report_run(&cfg, metrics, wall)
+}
+
+/// The `--executor cluster` entry point: one process per role.
+fn cmd_cluster(cfg: &RunConfig, opts: &ClusterOpts) -> Result<(), String> {
+    match &opts.role {
+        Role::Coordinator { listen } => {
+            // the gossip plane crosses real sockets, so the simulated-wire
+            // knobs have nothing to scale — flag any that were moved
+            let ignored = cfg.simulated_wire_overrides();
+            if !ignored.is_empty() {
+                eprintln!(
+                    "warning: --executor cluster measures the wire instead of \
+                     simulating it; ignoring {} (compute-side knobs like \
+                     batch_time/jitter/stragglers still apply)",
+                    ignored.join(", ")
+                );
+            }
+            std::fs::create_dir_all(&opts.checkpoint_dir)
+                .map_err(|e| format!("{}: {e}", opts.checkpoint_dir.display()))?;
+            println!("config: {cfg:?}\n");
+            let report = cluster::run_coordinator(cfg, listen, &opts.checkpoint_dir)?;
+            println!(
+                "throughput: {:.0} events/s wall-clock (cluster executor, \
+                 {} recoveries)",
+                report.interactions_per_sec, report.recoveries
+            );
+            Ok(())
+        }
+        // workers take everything (config included) from the coordinator;
+        // local --set/--config values only seed the connection itself
+        Role::Worker { connect } => cluster::run_worker(connect, opts.throttle_us),
+    }
 }
 
 fn report_run(

@@ -14,6 +14,21 @@
 //!   full duplex → one transfer time), plus a handshake latency.
 //!
 //! All values are configurable; figures sweep them where the paper does.
+//!
+//! # Simulated vs. real wire
+//!
+//! This model prices the wire for the **in-process** executors (serial,
+//! parallel, freerun): their `sim_time` axes come from these formulas, and
+//! `latency`/`bandwidth`/`model_bytes` scale them. The **cluster** executor
+//! ([`crate::cluster`]) is the other side of that split — its gossip
+//! crosses real TCP sockets, so nothing here applies to its communication:
+//! `wire_bits` is counted from actual socket writes and transfer time is
+//! whatever the kernel delivers. Setting a wire knob off its default under
+//! `--executor cluster` earns a one-line warning naming the ignored keys
+//! ([`crate::config::RunConfig::simulated_wire_overrides`]). The
+//! *compute-side* knobs (`batch_time`, `jitter`, `straggler_prob`,
+//! `straggle_factor`) stay meaningful everywhere: cluster workers charge
+//! them inside the local SGD phase exactly like freerun workers.
 
 use crate::rngx::Pcg64;
 

@@ -1,11 +1,43 @@
 //! Model checkpointing: flat parameter vectors as `.npy` files (v1.0,
 //! little-endian f32, 1-D) — loadable by numpy/JAX for offline analysis,
 //! and reloadable by the coordinator to resume or evaluate.
+//!
+//! # Integrity trailer
+//!
+//! `save_npy` appends a 24-byte versioned trailer **after** the npy
+//! payload: magic `SWCK`, a format version, the element count, and an
+//! FNV-1a checksum of the payload bytes. numpy readers stop at the shape
+//! declared in the header, so the trailer is invisible to them; `load_npy`
+//! verifies it so a truncated or bit-rotted checkpoint is rejected with an
+//! actionable error instead of silently feeding garbage lanes into a
+//! restart (the cluster executor reassigns dead-worker shards from these
+//! files). Files written by plain numpy (no trailer) still load — only the
+//! header-declared length is then enforced.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-/// Write a flat f32 vector as a 1-D `.npy` (format 1.0).
+/// Trailer magic — "SWCK" (SwarmSGD checkpoint).
+const TRAILER_MAGIC: &[u8; 4] = b"SWCK";
+/// Trailer format version; bump on layout changes.
+const TRAILER_VERSION: u16 = 1;
+
+/// FNV-1a over the raw little-endian payload bytes.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn bad(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Write a flat f32 vector as a 1-D `.npy` (format 1.0) with the SWCK
+/// integrity trailer.
 pub fn save_npy(path: &Path, data: &[f32]) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -26,19 +58,44 @@ pub fn save_npy(path: &Path, data: &[f32]) -> std::io::Result<()> {
     for v in data {
         buf.extend_from_slice(&v.to_le_bytes());
     }
-    f.write_all(&buf)
+    f.write_all(&buf)?;
+    // trailer: magic + version + reserved + element count + payload checksum
+    f.write_all(TRAILER_MAGIC)?;
+    f.write_all(&TRAILER_VERSION.to_le_bytes())?;
+    f.write_all(&0u16.to_le_bytes())?;
+    f.write_all(&(data.len() as u64).to_le_bytes())?;
+    f.write_all(&fnv1a(&buf).to_le_bytes())
+}
+
+/// Parse the element count out of the npy header dict's `'shape': (N,)`.
+fn header_count(header: &str) -> std::io::Result<usize> {
+    let after = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split([',', ')']).next())
+        .map(str::trim)
+        .ok_or_else(|| bad(format!("npy header has no parsable shape: {header}")))?;
+    if after.is_empty() {
+        // numpy writes a 0-d scalar as '()'; we only ever write 1-D
+        return Err(bad(format!("expected 1-D shape, header: {header}")));
+    }
+    after
+        .parse()
+        .map_err(|_| bad(format!("bad element count '{after}' in npy header")))
 }
 
 /// Read a 1-D little-endian f32 `.npy` written by [`save_npy`] (or numpy).
+///
+/// The header-declared element count is always enforced (a truncated file
+/// is an error, not a short vector); when the SWCK trailer is present its
+/// version, count, and checksum are verified too.
 pub fn load_npy(path: &Path) -> std::io::Result<Vec<f32>> {
     let mut f = std::fs::File::open(path)?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic[..6] != b"\x93NUMPY" {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "not an npy file",
-        ));
+        return Err(bad("not an npy file".into()));
     }
     let mut hlen = [0u8; 2];
     f.read_exact(&mut hlen)?;
@@ -47,18 +104,68 @@ pub fn load_npy(path: &Path) -> std::io::Result<Vec<f32>> {
     f.read_exact(&mut header)?;
     let header = String::from_utf8_lossy(&header);
     if !header.contains("'<f4'") {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("expected <f4 dtype, header: {header}"),
-        ));
+        return Err(bad(format!("expected <f4 dtype, header: {header}")));
     }
-    let mut raw = Vec::new();
-    f.read_to_end(&mut raw)?;
-    if raw.len() % 4 != 0 {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "payload not a multiple of 4 bytes",
-        ));
+    let count = header_count(&header)?;
+    let mut raw = vec![0u8; count * 4];
+    f.read_exact(&mut raw).map_err(|e| {
+        bad(format!(
+            "checkpoint truncated: header declares {count} f32 elements \
+             ({} payload bytes) but the file ends early ({e}); \
+             re-save or restore from an earlier checkpoint",
+            count * 4
+        ))
+    })?;
+    let mut trailer = [0u8; 24];
+    match f.read_exact(&mut trailer) {
+        Ok(()) => {
+            if &trailer[..4] != TRAILER_MAGIC {
+                return Err(bad(
+                    "unexpected bytes after the npy payload (not an SWCK trailer); \
+                     file may be corrupt or not 1-D"
+                        .into(),
+                ));
+            }
+            let version = u16::from_le_bytes([trailer[4], trailer[5]]);
+            if version != TRAILER_VERSION {
+                return Err(bad(format!(
+                    "unsupported checkpoint trailer version {version} \
+                     (this build reads version {TRAILER_VERSION})"
+                )));
+            }
+            let tcount = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+            if tcount != count as u64 {
+                return Err(bad(format!(
+                    "checkpoint corrupt: trailer element count {tcount} \
+                     disagrees with the npy header ({count})"
+                )));
+            }
+            let want = u64::from_le_bytes(trailer[16..24].try_into().unwrap());
+            let got = fnv1a(&raw);
+            if got != want {
+                return Err(bad(format!(
+                    "checkpoint corrupt: payload checksum {got:#018x} does not \
+                     match the trailer's {want:#018x}; restore from an earlier \
+                     checkpoint"
+                )));
+            }
+        }
+        // plain numpy file: no trailer at all is fine (length was enforced
+        // above); a *partial* trailer means the file was cut mid-write.
+        // read_exact's buffer contents are unspecified on EOF, so the two
+        // cases are told apart by total file length.
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            let total = std::fs::metadata(path)?.len();
+            let payload_end = (10 + hlen + count * 4) as u64;
+            if total != payload_end {
+                return Err(bad(format!(
+                    "checkpoint truncated: {} trailing bytes after the payload \
+                     (a complete SWCK trailer is 24); the file was cut mid-write",
+                    total.saturating_sub(payload_end)
+                )));
+            }
+        }
+        Err(e) => return Err(e),
     }
     Ok(raw
         .chunks_exact(4)
@@ -70,10 +177,15 @@ pub fn load_npy(path: &Path) -> std::io::Result<Vec<f32>> {
 mod tests {
     use super::*;
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("swarm_npy_{}_{}", name, std::process::id()))
+            .join("model.npy")
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join(format!("swarm_npy_{}", std::process::id()));
-        let path = dir.join("model.npy");
+        let path = tmp("rt");
         let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
         save_npy(&path, &data).unwrap();
         let back = load_npy(&path).unwrap();
@@ -82,30 +194,92 @@ mod tests {
 
     #[test]
     fn header_is_64_aligned() {
-        let dir = std::env::temp_dir().join(format!("swarm_npy2_{}", std::process::id()));
-        let path = dir.join("m.npy");
+        let path = tmp("align");
         save_npy(&path, &[1.0, 2.0]).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
         assert_eq!((10 + hlen) % 64, 0);
-        // payload
-        assert_eq!(&bytes[10 + hlen..], &[0, 0, 128, 63, 0, 0, 0, 64]);
+        // payload precedes the 24-byte trailer
+        let payload = &bytes[10 + hlen..bytes.len() - 24];
+        assert_eq!(payload, &[0, 0, 128, 63, 0, 0, 0, 64]);
+        assert_eq!(&bytes[bytes.len() - 24..bytes.len() - 20], b"SWCK");
     }
 
     #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join(format!("swarm_npy3_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.npy");
+        let path = tmp("garbage");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, b"not an npy at all").unwrap();
         assert!(load_npy(&path).is_err());
     }
 
     #[test]
-    fn empty_vector() {
-        let dir = std::env::temp_dir().join(format!("swarm_npy4_{}", std::process::id()));
-        let path = dir.join("empty.npy");
+    fn empty_vector_roundtrips() {
+        let path = tmp("empty");
         save_npy(&path, &[]).unwrap();
         assert!(load_npy(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_lanes_roundtrip_bit_exactly() {
+        let path = tmp("nonfinite");
+        let data = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-42];
+        save_npy(&path, &data).unwrap();
+        let back = load_npy(&path).unwrap();
+        assert_eq!(back.len(), data.len());
+        for (b, d) in back.iter().zip(&data) {
+            assert_eq!(b.to_bits(), d.to_bits(), "lanes must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected_with_an_actionable_error() {
+        let path = tmp("trunc");
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        save_npy(&path, &data).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut the file inside the payload: the header still promises 64
+        std::fs::write(&path, &bytes[..bytes.len() - 24 - 40]).unwrap();
+        let err = load_npy(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("truncated"), "unhelpful error: {msg}");
+        assert!(msg.contains("64"), "should name the declared count: {msg}");
+    }
+
+    #[test]
+    fn torn_trailer_is_rejected() {
+        let path = tmp("torn");
+        save_npy(&path, &[1.0, 2.0, 3.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // keep the payload intact but cut the trailer in half
+        std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+        let err = load_npy(&path).unwrap_err();
+        assert!(err.to_string().contains("trailer"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_checksum() {
+        let path = tmp("corrupt");
+        let data: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        save_npy(&path, &data).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload bit (well inside the data region)
+        let mid = bytes.len() - 24 - 17;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_npy(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("checksum"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn plain_numpy_file_without_trailer_still_loads() {
+        // a foreign file written by numpy itself has no SWCK trailer; the
+        // header-declared length is still enforced
+        let path = tmp("foreign");
+        save_npy(&path, &[4.0, 5.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 24]).unwrap();
+        assert_eq!(load_npy(&path).unwrap(), vec![4.0, 5.0]);
     }
 }

@@ -1,0 +1,238 @@
+//! End-to-end tests of `--executor cluster`: real OS processes, real
+//! sockets, real failures.
+//!
+//! The cluster executor inherits freerun's non-replayability and adds OS
+//! scheduling and TCP on top, so — like `tests/freerun_executor.rs` — the
+//! contract here is statistical, never bit-exact:
+//!
+//! 1. **Convergence**: 1 coordinator + 2 workers over loopback on the
+//!    quadratic oracle land inside the same normalized-gap band as the
+//!    in-process executors, with nonzero *measured* wire traffic under the
+//!    lattice codec, zero recoveries, and clean exits all around.
+//! 2. **Recovery**: freezing a worker mid-run (SIGSTOP — the socket stays
+//!    open, so only the heartbeat timer can notice) makes the coordinator
+//!    declare it dead, reassign its shard from the last checkpoint, and
+//!    still drive the job to completion with `recoveries ≥ 1`.
+//!
+//! Both tests drive the real binary via `CARGO_BIN_EXE_swarm` and parse
+//! the stdout lines the coordinator prints for exactly this purpose.
+
+#![cfg(unix)] // SIGSTOP/loopback-process orchestration; CI runs Linux
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use swarm_sgd::backend::{build_backend, quadratic_preset, Backend};
+use swarm_sgd::config::RunConfig;
+
+const BIN: &str = env!("CARGO_BIN_EXE_swarm");
+
+/// Kill-on-drop child guard so a failed assertion can't leak processes
+/// that keep the test runner (and CI) hanging.
+struct Proc(Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl Proc {
+    fn wait_success(&mut self, what: &str, deadline: Duration) {
+        let end = Instant::now() + deadline;
+        loop {
+            match self.0.try_wait().expect("try_wait") {
+                Some(status) => {
+                    assert!(status.success(), "{what} exited with {status}");
+                    return;
+                }
+                None if Instant::now() > end => panic!("{what} still running after {deadline:?}"),
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+}
+
+/// Pump a child's stdout into a channel from a thread, so every wait can
+/// carry a deadline (a blocked read can't hang the test).
+fn pump_lines(out: ChildStdout) -> mpsc::Receiver<String> {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(out).lines() {
+            let Ok(line) = line else { return };
+            if tx.send(line).is_err() {
+                return;
+            }
+        }
+    });
+    rx
+}
+
+/// Relay coordinator lines until one matches, with a hard deadline.
+fn await_line(
+    rx: &mpsc::Receiver<String>,
+    what: &str,
+    deadline: Duration,
+    pred: impl Fn(&str) -> bool,
+) -> String {
+    let end = Instant::now() + deadline;
+    loop {
+        let left = end.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(line) => {
+                println!("[coord] {line}");
+                if pred(&line) {
+                    return line;
+                }
+            }
+            Err(_) => panic!("timed out after {deadline:?} waiting for {what}"),
+        }
+    }
+}
+
+/// Pull `key=value` off the coordinator's machine-readable final line.
+fn parse_kv(line: &str, key: &str) -> f64 {
+    let prefix = format!("{key}=");
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&prefix))
+        .unwrap_or_else(|| panic!("no {key}= in {line:?}"))
+        .parse()
+        .unwrap_or_else(|e| panic!("bad {key} in {line:?}: {e}"))
+}
+
+fn spawn_coordinator(
+    dir: &std::path::Path,
+    extra: &[&str],
+    set: &str,
+) -> (Proc, mpsc::Receiver<String>) {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "train",
+        "--executor",
+        "cluster",
+        "--role",
+        "coordinator",
+        "--listen",
+        "127.0.0.1:0",
+        "--workers",
+        "2",
+        "--checkpoint-dir",
+    ])
+    .arg(dir)
+    .args(extra)
+    .args(["--set", set])
+    .stdout(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn coordinator");
+    let rx = pump_lines(child.stdout.take().expect("piped stdout"));
+    (Proc(child), rx)
+}
+
+fn spawn_worker(addr: &str, extra: &[&str]) -> Proc {
+    let child = Command::new(BIN)
+        .args(["train", "--executor", "cluster", "--role", "worker", "--connect", addr])
+        .args(extra)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn worker");
+    Proc(child)
+}
+
+fn listen_addr(rx: &mpsc::Receiver<String>) -> String {
+    let line = await_line(rx, "the coordinator's listen line", Duration::from_secs(30), |l| {
+        l.starts_with("cluster coordinator listening on ")
+    });
+    line.strip_prefix("cluster coordinator listening on ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .expect("address token")
+        .to_string()
+}
+
+/// The convergence band, normalized the same way as the freerun tests:
+/// `(loss − f*) / (loss(init) − f*)` on the coordinator's own oracle.
+fn normalized_gap(cfg: &RunConfig, final_loss: f64) -> f64 {
+    let backend = build_backend(cfg).expect("backend");
+    let f_star = quadratic_preset(cfg).f_star();
+    let (p0, _) = backend.init();
+    let gap0 = backend.eval(&p0).loss - f_star;
+    (final_loss - f_star) / gap0
+}
+
+#[test]
+fn cluster_loopback_run_converges_with_real_wire_bits() {
+    let dir = std::env::temp_dir().join(format!("swarm_cluster_conv_{}", std::process::id()));
+    let set = "algo=swarm,preset=oracle:quadratic,n=16,interactions=2500,eval_every=0";
+    let (mut coord, rx) =
+        spawn_coordinator(&dir, &["--wire", "lattice", "--heartbeat-timeout", "10"], set);
+    let addr = listen_addr(&rx);
+    let mut w0 = spawn_worker(&addr, &[]);
+    let mut w1 = spawn_worker(&addr, &[]);
+
+    let final_line = await_line(&rx, "the final report", Duration::from_secs(120), |l| {
+        l.starts_with("cluster: final ")
+    });
+    coord.wait_success("coordinator", Duration::from_secs(30));
+    w0.wait_success("worker 0", Duration::from_secs(30));
+    w1.wait_success("worker 1", Duration::from_secs(30));
+
+    let events = parse_kv(&final_line, "events");
+    let recoveries = parse_kv(&final_line, "recoveries");
+    let wire_bits = parse_kv(&final_line, "wire_bits");
+    assert!(events >= 2500.0, "stopped short of the target: {final_line}");
+    assert_eq!(recoveries, 0.0, "healthy run recovered: {final_line}");
+    assert!(wire_bits > 0.0, "lattice gossip put nothing on the wire: {final_line}");
+
+    let mut cfg = RunConfig::default();
+    cfg.set("preset", "oracle:quadratic").unwrap();
+    cfg.set("n", "16").unwrap();
+    let gap = normalized_gap(&cfg, parse_kv(&final_line, "eval_loss"));
+    assert!(gap < 0.15, "cluster run off the convergence band: normalized gap {gap}");
+}
+
+#[test]
+fn cluster_recovers_a_frozen_worker_from_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("swarm_cluster_reco_{}", std::process::id()));
+    // throttled workers (~1k interactions/s each) with a target far enough
+    // out that the surviving worker alone needs well over the heartbeat
+    // timeout to finish — the freeze must be *detected*, not outrun
+    let set = "algo=swarm,preset=oracle:quadratic,n=16,interactions=8000,eval_every=0";
+    let (mut coord, rx) = spawn_coordinator(&dir, &["--heartbeat-timeout", "2"], set);
+    let addr = listen_addr(&rx);
+    let mut w0 = spawn_worker(&addr, &["--throttle-us", "1000"]);
+    let mut w1 = spawn_worker(&addr, &["--throttle-us", "1000"]);
+
+    // let the cluster checkpoint first, so the adoption has state to resume
+    await_line(&rx, "the first checkpoint", Duration::from_secs(60), |l| {
+        l.starts_with("cluster: checkpoint at ")
+    });
+
+    // SIGSTOP keeps worker 0's sockets open: no EOF anywhere, so only the
+    // heartbeat timer can notice. (Peers survive its full TCP buffers via
+    // the gossip write timeout.)
+    let stop = Command::new("kill")
+        .args(["-STOP", &w0.0.id().to_string()])
+        .status()
+        .expect("send SIGSTOP");
+    assert!(stop.success(), "kill -STOP failed");
+
+    await_line(&rx, "the recovery announcement", Duration::from_secs(60), |l| {
+        l.starts_with("cluster: recovery #")
+    });
+    let final_line = await_line(&rx, "the final report", Duration::from_secs(120), |l| {
+        l.starts_with("cluster: final ")
+    });
+    coord.wait_success("coordinator", Duration::from_secs(30));
+    w1.wait_success("surviving worker", Duration::from_secs(30));
+    let _ = w0.0.kill(); // SIGKILL the frozen worker; Drop reaps it
+
+    assert!(
+        parse_kv(&final_line, "recoveries") >= 1.0,
+        "no shard reassignment reported: {final_line}"
+    );
+    assert!(
+        parse_kv(&final_line, "events") >= 8000.0,
+        "job did not complete after the recovery: {final_line}"
+    );
+}
