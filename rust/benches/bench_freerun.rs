@@ -15,10 +15,12 @@
 
 use std::io::Write;
 use swarm_sgd::coordinator::{
-    make_algorithm, run_freerun, AlgoOptions, AveragingMode, LocalSteps, LrSchedule, RunSpec,
+    make_algorithm, run_freerun, run_freerun_with_obs, AlgoOptions, AveragingMode, LocalSteps,
+    LrSchedule, RunSpec,
 };
 use swarm_sgd::grad::QuadraticOracle;
 use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::obs::ObsOptions;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::topology::{Graph, Topology};
 
@@ -150,10 +152,56 @@ fn main() {
         rows.push(row_json("swarm-paper-scale", threads, shards, n_paper, fr));
     }
 
+    // tracing on vs off: the same swarm ×4 workload twice through the obs
+    // entry point — the obs acceptance bar is that full-sampling tracing
+    // stays within a few percent of the untraced run
+    let overhead_pct = {
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).expect("known algorithm");
+        let (threads, shards) = (4usize, 8usize);
+        let configs = [
+            ("swarm-trace-off", ObsOptions::default()),
+            (
+                "swarm-trace-on",
+                ObsOptions {
+                    trace_capacity: swarm_sgd::obs::DEFAULT_TRACE_CAPACITY,
+                    trace_sample: 1.0,
+                    metrics_out: None,
+                },
+            ),
+        ];
+        let mut ips = [0.0f64; 2];
+        for (i, (tag, obs)) in configs.iter().enumerate() {
+            let m = run_freerun_with_obs(
+                algo.as_ref(),
+                &backend,
+                &spec,
+                &graph,
+                &cost,
+                threads,
+                shards,
+                obs,
+            );
+            let fr = m.freerun.as_ref().expect("freerun telemetry");
+            ips[i] = fr.interactions_per_sec;
+            println!(
+                "{tag:<15} x{threads} ({shards} shards): {:>9.0} interactions/s",
+                fr.interactions_per_sec
+            );
+            rows.push(row_json(tag, threads, shards, N, fr));
+            if i == 1 {
+                let tr = m.trace.as_ref().expect("tracing-on run drains a trace");
+                println!("  traced {} event(s), {} dropped", tr.events.len(), tr.dropped);
+            }
+        }
+        100.0 * (ips[0] - ips[1]) / ips[0].max(1e-9)
+    };
+    println!("tracing overhead: {overhead_pct:.1}% (positive = tracing-on slower)");
+
     let json = format!(
         "{{\n  \"bench\": \"bench_freerun\",\n  \"workload\": \
          {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \
-         \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \
+         \"tracing_overhead_pct\": {overhead_pct:.1},\n  \"results\": [\n{}\n  ]\n}}\n",
         rows.join(",\n")
     );
     match std::fs::File::create("BENCH_freerun.json")

@@ -97,13 +97,17 @@ USAGE:
                 [--role coordinator|worker] [--listen HOST:PORT]
                 [--connect HOST:PORT] [--workers W] [--heartbeat-timeout S]
                 [--checkpoint-dir DIR] [--throttle-us U]
+                [--trace-out F.json] [--trace-sample P] [--metrics-out F]
+                [--metrics-addr HOST:PORT]
+                [--log-level error|warn|info|debug]
                 train one algorithm on one backend; keys: algo, preset, n,
                 topology, interactions, h, geometric, mode, wire, quant_bits,
                 quant_eps, lr, lr_schedule, seed, eval_every, track_gamma,
                 shard, data_per_agent, artifacts_dir, batch_time, jitter,
                 straggler_prob, straggle_factor, latency, bandwidth,
                 model_bytes, out_csv, executor, threads, shards, kernel,
-                workers, heartbeat_timeout
+                workers, heartbeat_timeout, trace_out, trace_sample,
+                metrics_out, metrics_addr, log_level
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
@@ -156,6 +160,23 @@ USAGE:
                 bit-exact (identical per-lane math, checksums folded in
                 element order), so this is a pure performance axis; the
                 choice is tagged in the run summary and bench rows.
+                Observability (freerun + cluster): --trace-out writes a
+                Chrome trace-event JSON (chrome://tracing / Perfetto) of
+                per-worker compute/merge/publish/retry/gossip spans, drained
+                from lock-free rings after the run (cluster workers write
+                F.rank<R>.json); --trace-sample P traces each interaction
+                with probability P in (0, 1] (deterministic per worker;
+                default 1 = every interaction). --metrics-out appends
+                Prometheus text snapshots (throughput, staleness p50/p99,
+                wire bits, contention) every 500ms. --metrics-addr serves
+                the cluster coordinator's live introspection endpoint over
+                plain HTTP/1.1 (GET /metrics Prometheus text, /status JSON
+                with per-worker shard/liveness/heartbeat-RTT/progress-age,
+                /trace drain-so-far; no auth/TLS — bind loopback). The
+                chosen address is printed on stdout as
+                'cluster metrics serving on HOST:PORT'. --log-level gates
+                the leveled stderr diagnostics (default info); stdout
+                protocol lines are never filtered.
   swarm figure  --id <table1|table2|fig1a|fig1b|fig2a|fig2b|fig3a|fig5|
                       fig6a|fig6b|fig7|fig8a|fig8b|gamma|all>
                 [--quick] [--out results]
@@ -176,6 +197,9 @@ EXAMPLES:
   swarm train --algorithm sgp --executor freerun --threads 4 --wire lattice \\
               --set preset=oracle:quadratic,n=32,interactions=5000
   swarm train --set preset=oracle:quadratic,model_bytes=45000000,latency=1e-4
+  swarm train --algorithm swarm --executor freerun --threads 4 \\
+              --trace-out trace.json --metrics-out metrics.prom \\
+              --set preset=oracle:quadratic,n=32,interactions=10000
   swarm train --executor cluster --role coordinator --listen 127.0.0.1:0 \\
               --workers 2 --set preset=oracle:quadratic,n=16,interactions=2000
   swarm train --executor cluster --role worker --connect 127.0.0.1:7000

@@ -23,6 +23,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::proto::{done_staleness, Msg, NodeLanes, PeerAddr, ProgressBody};
@@ -31,6 +32,9 @@ use crate::backend::{build_backend, Backend};
 use crate::config::RunConfig;
 use crate::coordinator::{
     Algorithm, PayloadKind, PlainModel, PushSumWeighted, SlotPayload, StalenessHistogram,
+};
+use crate::obs::{
+    self, HttpServer, MetricsRegistry, Response, Router, SpanKind, TraceDrain, TraceRing,
 };
 use crate::output::checkpoint::save_npy;
 
@@ -59,6 +63,11 @@ struct WorkerSlot {
     progress: ProgressBody,
     /// the worker's last checkpointed shard (node → lanes)
     checkpoint: Vec<NodeLanes>,
+    /// nodes currently owned (moves on adoption)
+    shard: usize,
+    /// last measured control-plane ping round-trip, µs (None until the
+    /// first Pong lands)
+    rtt_us: Option<f64>,
 }
 
 enum Event {
@@ -130,6 +139,62 @@ fn coordinate<P: SlotPayload>(
     use std::io::Write;
     std::io::stdout().flush().ok();
 
+    // ---- live introspection endpoint (--metrics-addr) ----
+    // the registry and status document are refreshed by the control loop
+    // each cadence; the HTTP thread only ever renders/clones them, so the
+    // endpoint can never block the control plane
+    let registry = MetricsRegistry::new();
+    let g_workers = registry.gauge("swarm_cluster_workers", "registered workers");
+    let g_alive = registry.gauge("swarm_cluster_workers_alive", "workers currently alive");
+    let g_ips = registry.gauge("swarm_interactions_per_sec", "throughput over the last cadence");
+    let g_rtt = registry.gauge("swarm_heartbeat_rtt_us_mean", "mean control-plane ping RTT (us)");
+    let g_age =
+        registry.gauge("swarm_worker_progress_age_sec_max", "oldest last-progress age (s)");
+    let c_events = registry.counter("swarm_interactions_total", "interactions across workers");
+    let c_bits = registry.counter("swarm_wire_bits_total", "real socket bits, gossip plane");
+    let c_fallbacks = registry.counter("swarm_wire_fallbacks_total", "codec decode fallbacks");
+    let c_conflicts =
+        registry.counter("swarm_push_conflicts_total", "cross-writes dropped to a held slot");
+    let status: Arc<Mutex<String>> = Arc::new(Mutex::new("{}".to_string()));
+    // control-plane trace: one Heartbeat event per Progress receipt, served
+    // as a best-effort drain-so-far by /trace (enabled with the endpoint)
+    let ctl_trace = Arc::new(TraceRing::new(if cfg.metrics_addr.is_empty() {
+        0
+    } else {
+        obs::DEFAULT_TRACE_CAPACITY
+    }));
+    let _http = if cfg.metrics_addr.is_empty() {
+        None
+    } else {
+        let reg = registry.clone();
+        let st = status.clone();
+        let tr = ctl_trace.clone();
+        let router = Router::new()
+            .route("/metrics", move || Response::text(200, reg.render()))
+            .route("/status", move || Response::json(st.lock().unwrap().clone()))
+            .route("/trace", move || {
+                Response::json(TraceDrain::from_rings([&*tr]).to_chrome_json())
+            });
+        let srv = HttpServer::spawn(&cfg.metrics_addr, router).map_err(io)?;
+        // tests parse this exact line to learn the bound port
+        println!("cluster metrics serving on {}", srv.addr());
+        std::io::stdout().flush().ok();
+        Some(srv)
+    };
+    let mut metrics_file = match cfg.metrics_out.as_str() {
+        "" => None,
+        path => match std::fs::File::create(path) {
+            Ok(f) => Some(f),
+            Err(e) => {
+                obs::log::warn(
+                    "cluster",
+                    format_args!("cannot create metrics file '{path}': {e}; export disabled"),
+                );
+                None
+            }
+        },
+    };
+
     // ---- registration: accept Hellos, learn gossip addresses ----
     let mut conns: Vec<(FrameConn, String)> = Vec::new();
     while conns.len() < workers as usize {
@@ -158,6 +223,7 @@ fn coordinate<P: SlotPayload>(
     for (rank, (conn, _)) in conns.into_iter().enumerate() {
         let rank = rank as u32;
         let owned: Vec<u32> = (0..n as u32).filter(|k| k % workers == rank).collect();
+        let shard = owned.len();
         let mut stream = conn.stream.try_clone().map_err(io)?;
         send_msg(
             &mut stream,
@@ -178,6 +244,8 @@ fn coordinate<P: SlotPayload>(
             last_seen: Instant::now(),
             progress: ProgressBody::default(),
             checkpoint: Vec::new(),
+            shard,
+            rtt_us: None,
         });
         readers.push(conn);
     }
@@ -209,6 +277,12 @@ fn coordinate<P: SlotPayload>(
     let mut shutting_down = false;
     let mut final_entries: Vec<NodeLanes> = Vec::new();
     let mut staleness = StalenessHistogram::new((8 * n).max(1024));
+    // RTT probes carry this monotonic clock's ns; it never leaves the
+    // coordinator, so nothing needs to be synchronized across machines
+    let ping_epoch = Instant::now();
+    let now_ns = move || ping_epoch.elapsed().as_nanos() as u64;
+    let mut last_sweep = Instant::now();
+    let mut last_sweep_events = 0u64;
 
     loop {
         match rx.recv_timeout(Duration::from_millis(100)) {
@@ -221,7 +295,16 @@ fn coordinate<P: SlotPayload>(
                 let slot = &mut slots[rank as usize];
                 slot.last_seen = Instant::now();
                 match msg {
-                    Msg::Progress(p) => slot.progress = p,
+                    Msg::Progress(p) => {
+                        if ctl_trace.enabled() {
+                            let t = ctl_trace.now_ns();
+                            ctl_trace.record(SpanKind::Heartbeat, rank, t, 0, p.events);
+                        }
+                        slot.progress = p;
+                    }
+                    Msg::Pong { t_ns } => {
+                        slot.rtt_us = Some(now_ns().saturating_sub(t_ns) as f64 / 1_000.0);
+                    }
                     Msg::Checkpoint { events, entries } => {
                         slot.checkpoint = entries;
                         if last_ckpt_write.elapsed() >= Duration::from_millis(500) {
@@ -238,9 +321,10 @@ fn coordinate<P: SlotPayload>(
                         slot.done = true;
                         final_entries.extend(entries);
                     }
-                    m => {
-                        eprintln!("cluster coordinator: unexpected {m:?} from worker {rank}")
-                    }
+                    m => obs::log::warn(
+                        "cluster",
+                        format_args!("coordinator: unexpected {m:?} from worker {rank}"),
+                    ),
                 }
             }
             Ok(Event::Gone(rank)) => {
@@ -256,6 +340,47 @@ fn coordinate<P: SlotPayload>(
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 if !shutting_down {
                     return Err("cluster coordinator: all workers disconnected".into());
+                }
+            }
+        }
+
+        // observability sweep: RTT probes out, registry + /status refresh
+        if last_sweep.elapsed() >= obs::METRICS_CADENCE {
+            let dt = last_sweep.elapsed().as_secs_f64().max(1e-9);
+            last_sweep = Instant::now();
+            for slot in slots.iter_mut().filter(|s| s.alive && !s.done) {
+                let _ = send_msg(&mut slot.stream, &Msg::Ping { t_ns: now_ns() });
+            }
+            let total: u64 = slots.iter().map(|s| s.progress.events).sum();
+            g_workers.set(workers as f64);
+            g_alive.set(slots.iter().filter(|s| s.alive).count() as f64);
+            g_ips.set(total.saturating_sub(last_sweep_events) as f64 / dt);
+            last_sweep_events = total;
+            let rtts: Vec<f64> = slots.iter().filter_map(|s| s.rtt_us).collect();
+            if !rtts.is_empty() {
+                g_rtt.set(rtts.iter().sum::<f64>() / rtts.len() as f64);
+            }
+            g_age.set(
+                slots
+                    .iter()
+                    .filter(|s| s.alive && !s.done)
+                    .map(|s| s.last_seen.elapsed().as_secs_f64())
+                    .fold(0.0, f64::max),
+            );
+            c_events.set(total);
+            c_bits.set(slots.iter().map(|s| s.progress.wire_bits).sum());
+            c_fallbacks.set(slots.iter().map(|s| s.progress.wire_fallbacks).sum());
+            c_conflicts.set(slots.iter().map(|s| s.progress.push_conflicts).sum());
+            *status.lock().unwrap() = status_json(
+                &slots,
+                cfg.interactions,
+                total,
+                started.elapsed().as_secs_f64(),
+                shutting_down,
+            );
+            if let Some(f) = metrics_file.as_mut() {
+                if let Err(e) = obs::metrics::append_snapshot(f, &registry) {
+                    obs::log::warn("cluster", format_args!("metrics append failed: {e}"));
                 }
             }
         }
@@ -348,6 +473,14 @@ fn coordinate<P: SlotPayload>(
         final_eval_loss: eval.loss,
         interactions_per_sec: events as f64 / wall.max(1e-9),
     };
+    let rtts: Vec<f64> = slots.iter().filter_map(|s| s.rtt_us).collect();
+    let rtt_mean = if rtts.is_empty() {
+        f64::NAN
+    } else {
+        rtts.iter().sum::<f64>() / rtts.len() as f64
+    };
+    let age_max =
+        slots.iter().map(|s| s.last_seen.elapsed().as_secs_f64()).fold(0.0, f64::max);
     println!(
         "\ncluster telemetry ({workers} worker(s) over sockets, wall {wall:.2}s):\n\
          real throughput  : {:.0} interactions/s\n\
@@ -357,6 +490,8 @@ fn coordinate<P: SlotPayload>(
          slot contention  : {} read retries, {} publish retries, \
          {} dropped cross-writes\n\
          worker activity  : {:.2}s busy / {:.3}s wire-sync across workers\n\
+         heartbeat rtt    : mean {:.0}µs over {} worker(s) with probes\n\
+         progress age     : max {:.2}s at drain\n\
          recoveries       : {recoveries} shard reassignment(s)\n\
          model written to : {}",
         report.interactions_per_sec,
@@ -373,8 +508,14 @@ fn coordinate<P: SlotPayload>(
         final_progress.push_conflicts,
         final_progress.busy_us as f64 / 1e6,
         final_progress.wait_us as f64 / 1e6,
+        rtt_mean,
+        rtts.len(),
+        age_max,
         final_path.display(),
     );
+    // leave a final status snapshot for any scraper still attached
+    *status.lock().unwrap() =
+        status_json(&slots, cfg.interactions, events, wall, true);
     // tests parse this line: loss, events, recoveries in one place
     println!(
         "cluster: final eval_loss={:.6} events={events} recoveries={recoveries} \
@@ -383,6 +524,49 @@ fn coordinate<P: SlotPayload>(
     );
     std::io::stdout().flush().ok();
     Ok(report)
+}
+
+/// The `/status` JSON document: run-level aggregates plus one entry per
+/// worker (shard size, liveness, heartbeat RTT, last-progress age).
+/// Hand-rolled like everything on this plane; every value is a JSON
+/// number, bool, or null, so any parser handles it.
+fn status_json(
+    slots: &[WorkerSlot],
+    target: u64,
+    events: u64,
+    wall: f64,
+    draining: bool,
+) -> String {
+    let mut out = String::with_capacity(256 + slots.len() * 160);
+    out.push_str(&format!(
+        "{{\"workers\":{},\"alive\":{},\"target\":{target},\"events\":{events},\
+         \"interactions_per_sec\":{:.1},\"wall_secs\":{wall:.3},\"draining\":{draining},\
+         \"per_worker\":[",
+        slots.len(),
+        slots.iter().filter(|s| s.alive).count(),
+        events as f64 / wall.max(1e-9),
+    ));
+    for (i, s) in slots.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let rtt = match s.rtt_us {
+            Some(r) => format!("{r:.1}"),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "{{\"rank\":{},\"alive\":{},\"done\":{},\"shard_nodes\":{},\"events\":{},\
+             \"last_progress_age_sec\":{:.3},\"rtt_us\":{rtt}}}",
+            s.rank,
+            s.alive,
+            s.done,
+            s.shard,
+            s.progress.events,
+            s.last_seen.elapsed().as_secs_f64(),
+        ));
+    }
+    out.push_str("]}");
+    out
 }
 
 /// Reassign a dead worker's shard to the lowest live rank, seeding the
@@ -423,11 +607,18 @@ fn recover<P: SlotPayload>(
     );
     use std::io::Write;
     std::io::stdout().flush().ok();
+    // shard bookkeeping for /status: the nodes move with the adoption
+    let moved = entries.len();
+    slots[dead as usize].shard = 0;
+    slots[adopter as usize].shard += moved;
     let msg = Msg::Adopt { to_rank: adopter, from_rank: dead, entries };
     for slot in slots.iter_mut().filter(|s| s.alive) {
         if send_msg(&mut slot.stream, &msg).is_err() {
             // the Gone event / heartbeat scan will pick this worker up
-            eprintln!("cluster: could not notify worker {} of the adoption", slot.rank);
+            obs::log::warn(
+                "cluster",
+                format_args!("could not notify worker {} of the adoption", slot.rank),
+            );
         }
     }
     Ok(())
@@ -458,6 +649,6 @@ fn write_checkpoint<P: SlotPayload>(
         }
     }
     if let Err(e) = save_npy(path, &flat) {
-        eprintln!("cluster: checkpoint write failed: {e}");
+        obs::log::error("cluster", format_args!("checkpoint write failed: {e}"));
     }
 }

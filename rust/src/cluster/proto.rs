@@ -29,8 +29,8 @@ use crate::coordinator::StalenessHistogram;
 /// Frame magic.
 pub const MAGIC: [u8; 4] = *b"SWRM";
 /// Protocol version; peers with a different version are rejected at the
-/// first frame.
-pub const PROTO_VERSION: u16 = 1;
+/// first frame. v2 added the Ping/Pong heartbeat-RTT probes.
+pub const PROTO_VERSION: u16 = 2;
 /// Frame header length (magic + version + kind + reserved + payload len).
 pub const HEADER_LEN: usize = 12;
 /// Trailing checksum length.
@@ -439,6 +439,13 @@ pub enum Msg {
     Cross { node: u32, lanes: Vec<f32> },
     /// worker ↔ worker, first frame on a gossip connection
     PeerHello { rank: u32 },
+    /// coordinator → worker round-trip-time probe; `t_ns` is the
+    /// coordinator's monotonic send time, echoed back verbatim in `Pong`
+    /// (the clock never crosses machines, so no synchronization is needed)
+    Ping { t_ns: u64 },
+    /// worker → coordinator: `Ping.t_ns` echoed; RTT = now − t_ns at the
+    /// coordinator
+    Pong { t_ns: u64 },
 }
 
 const K_HELLO: u8 = 1;
@@ -451,6 +458,8 @@ const K_SHUTDOWN: u8 = 7;
 const K_PUBLISH: u8 = 8;
 const K_CROSS: u8 = 9;
 const K_PEER_HELLO: u8 = 10;
+const K_PING: u8 = 11;
+const K_PONG: u8 = 12;
 
 impl Msg {
     /// Serialize to one complete frame (header + payload + checksum).
@@ -543,6 +552,14 @@ impl Msg {
                 w.u32(*rank);
                 K_PEER_HELLO
             }
+            Msg::Ping { t_ns } => {
+                w.u64(*t_ns);
+                K_PING
+            }
+            Msg::Pong { t_ns } => {
+                w.u64(*t_ns);
+                K_PONG
+            }
         };
         encode_frame(kind, &w.0)
     }
@@ -610,6 +627,8 @@ impl Msg {
             }
             K_CROSS => Msg::Cross { node: r.u32()?, lanes: r.f32s()? },
             K_PEER_HELLO => Msg::PeerHello { rank: r.u32()? },
+            K_PING => Msg::Ping { t_ns: r.u64()? },
+            K_PONG => Msg::Pong { t_ns: r.u64()? },
             k => return Err(format!("unknown message kind {k}")),
         };
         r.done()?;
@@ -717,6 +736,8 @@ mod tests {
             Msg::Publish { node: 0, enc: PayloadEnc::F32 { lanes: vec![1.0, 2.0] } },
             Msg::Cross { node: 2, lanes: vec![-1.0, 1.0] },
             Msg::PeerHello { rank: 2 },
+            Msg::Ping { t_ns: 123_456_789 },
+            Msg::Pong { t_ns: u64::MAX },
         ]
     }
 

@@ -47,6 +47,7 @@ use crate::coordinator::{
     make_algorithm, AlgoOptions, Algorithm, MergeScratch, MixPolicy, NodeState, PayloadKind,
     PlainModel, PushSumWeighted, SlotPayload, StalenessHistogram, StepCtx,
 };
+use crate::obs::{self, Sampler, SpanKind, TraceDrain, TraceRing};
 use crate::quant::{self, QuantizedMsg};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
@@ -108,6 +109,10 @@ struct Shared<P: SlotPayload> {
     done: AtomicU64,
     stop: AtomicBool,
     counters: Counters,
+    /// one ring shared by the compute, sender, and receiver threads (the
+    /// concurrent-writer case the slot layout is designed for); capacity 0
+    /// (no `--trace-out`) disables it
+    trace: TraceRing,
     rank: u32,
     dim: usize,
 }
@@ -138,12 +143,17 @@ pub fn run_worker(connect: &str, throttle_us: u64) -> Result<(), String> {
     };
     let cfg = RunConfig::from_ini(&config_ini)
         .map_err(|e| format!("cluster worker: bad config from coordinator: {e}"))?;
-    eprintln!(
-        "cluster worker {rank}/{workers}: {} node(s) of n={} (algorithm={}, wire={})",
-        owned.len(),
-        cfg.n,
-        cfg.algo,
-        cfg.wire
+    // the shipped config carries the coordinator's --log-level
+    obs::log::set_level(obs::log::Level::parse(&cfg.log_level)?);
+    obs::log::info(
+        "cluster",
+        format_args!(
+            "worker {rank}/{workers}: {} node(s) of n={} (algorithm={}, wire={})",
+            owned.len(),
+            cfg.n,
+            cfg.algo,
+            cfg.wire
+        ),
     );
 
     let algo = make_algorithm(
@@ -289,6 +299,7 @@ fn worker_with<P: SlotPayload>(
     let (p0, m0) = backend.init();
     let mut rng = Pcg64::seed(cfg.seed);
     let graph = Graph::build(cfg.topology_enum()?, n, &mut rng);
+    let obs_opts = cfg.obs_options();
 
     let sh = Arc::new(Shared::<P> {
         slots: (0..n).map(|_| ModelSlot::<P>::new(&p0)).collect(),
@@ -297,12 +308,14 @@ fn worker_with<P: SlotPayload>(
         done: AtomicU64::new(0),
         stop: AtomicBool::new(false),
         counters: Counters::default(),
+        trace: TraceRing::new(obs_opts.trace_capacity),
         rank,
         dim,
     });
 
     let (cross_tx, cross_rx) = mpsc::channel::<(u32, Vec<f32>)>();
     let (adopt_tx, adopt_rx) = mpsc::channel::<Vec<NodeLanes>>();
+    let (pong_tx, pong_rx) = mpsc::channel::<u64>();
     let (final_tx, final_rx) = mpsc::channel::<Msg>();
 
     // coordinator reader: owner-map updates on Adopt, stop on Shutdown.
@@ -323,6 +336,10 @@ fn worker_with<P: SlotPayload>(
                 Ok(Some(Msg::Shutdown { .. })) | Ok(None) => {
                     sh.stop.store(true, Ordering::Release);
                     return;
+                }
+                // RTT probe: the sender thread echoes the timestamp back
+                Ok(Some(Msg::Ping { t_ns })) => {
+                    let _ = pong_tx.send(t_ns);
                 }
                 Ok(Some(_)) => {}
                 Err(_) => {
@@ -345,7 +362,7 @@ fn worker_with<P: SlotPayload>(
         let sh = Arc::clone(&sh);
         let codec = policy.wire();
         std::thread::spawn(move || {
-            send_loop::<P>(sh, peer_writers, coord_writer, codec, cross_rx, final_rx)
+            send_loop::<P>(sh, peer_writers, coord_writer, codec, cross_rx, pong_rx, final_rx)
         })
     };
 
@@ -378,6 +395,8 @@ fn worker_with<P: SlotPayload>(
     let mut staleness = StalenessHistogram::new((8 * n).max(1024));
     let sync_own = policy.needs_own_slot_sync();
     let mut local_events = 0u64;
+    let tracing = sh.trace.enabled();
+    let mut sampler = Sampler::new(obs_opts.sample_rate(), cfg.seed.wrapping_add(rank as u64));
 
     while !sh.stop.load(Ordering::Acquire) {
         // integrate adopted nodes (dead peer's shard, from the coordinator)
@@ -391,7 +410,7 @@ fn worker_with<P: SlotPayload>(
                 let ix = states.len();
                 states.push((node, st));
                 heap.push(std::cmp::Reverse((base + clock(&mut wrng), ix)));
-                eprintln!("cluster worker {rank}: adopted node {node}");
+                obs::log::info("cluster", format_args!("worker {rank}: adopted node {node}"));
             }
         }
         let Some(std::cmp::Reverse((at, ix))) = heap.pop() else {
@@ -399,6 +418,7 @@ fn worker_with<P: SlotPayload>(
             continue;
         };
         let started = Instant::now();
+        let traced = tracing && sampler.hit();
         let mut sync_secs = 0.0f64;
         let (node, st) = &mut states[ix];
         let node = *node;
@@ -415,23 +435,36 @@ fn worker_with<P: SlotPayload>(
         // counter, rank-striped local counts are an unbiased monotone proxy
         let t_global = local_events * workers as u64 + rank as u64;
         let ctx = StepCtx { backend, cost: &cost, graph: &graph, lr: lr.at(t_global + 1), dim, n };
+        let tc = if traced { sh.trace.now_ns() } else { 0 };
         policy.local_phase(&ctx, node, st, h);
+        if traced {
+            sh.trace.span(SpanKind::Compute, rank, tc, h);
+        }
         sh.counters.steps.fetch_add(h, Ordering::Relaxed);
         // partner snapshot: a local slot or a peer mirror — same read
         let t0 = Instant::now();
         let (stamp, r) = sh.slots[partner].read_into(&mut scratch.snapshot);
         sync_secs += t0.elapsed().as_secs_f64();
         sh.counters.read_retries.fetch_add(r, Ordering::Relaxed);
+        if traced && r > 0 {
+            let t = sh.trace.now_ns();
+            sh.trace.record(SpanKind::SlotRetry, rank, t, 0, r);
+        }
         staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
         // merge accounting note: the policy's EventOutcome models the
         // simulated wire; the cluster reports *real* socket bytes instead,
         // so only the fallback count is taken from the outcome here
+        let tm = if traced { sh.trace.now_ns() } else { 0 };
         let outcome = policy.merge(&ctx, node, st, &mut scratch, &mut wrng);
+        if traced {
+            sh.trace.span(SpanKind::Merge, rank, tm, outcome.fallbacks);
+        }
         if outcome.fallbacks > 0 {
             sh.counters.wire_fallbacks.fetch_add(outcome.fallbacks, Ordering::Relaxed);
         }
         st.interactions += 1;
         let stamp_now = sh.done.load(Ordering::Relaxed);
+        let tp = if traced { sh.trace.now_ns() } else { 0 };
         let t1 = Instant::now();
         let pub_retries = sh.slots[node].publish(&scratch.publish, stamp_now);
         sh.counters.publish_retries.fetch_add(pub_retries, Ordering::Relaxed);
@@ -447,6 +480,13 @@ fn worker_with<P: SlotPayload>(
             let _ = cross_tx.send((partner as u32, scratch.cross.clone()));
         }
         sync_secs += t1.elapsed().as_secs_f64();
+        if traced {
+            sh.trace.span(SpanKind::Publish, rank, tp, partner as u64);
+            if pub_retries > 0 {
+                let t = sh.trace.now_ns();
+                sh.trace.record(SpanKind::SlotRetry, rank, t, 0, pub_retries);
+            }
+        }
         heap.push(std::cmp::Reverse((at + clock(&mut wrng), ix)));
         local_events += 1;
         sh.done.fetch_add(1, Ordering::Release);
@@ -477,8 +517,34 @@ fn worker_with<P: SlotPayload>(
         .join()
         .map_err(|_| "cluster worker: sender thread panicked".to_string())?
         .map_err(|e| format!("cluster worker: {e}"))?;
-    eprintln!("cluster worker {rank}: done ({local_events} interactions)");
+    if !cfg.trace_out.is_empty() && sh.trace.enabled() {
+        let drain = TraceDrain::from_rings([&sh.trace]);
+        let path = rank_trace_path(&cfg.trace_out, rank);
+        match std::fs::write(&path, drain.to_chrome_json()) {
+            Ok(()) => obs::log::info(
+                "cluster",
+                format_args!(
+                    "worker {rank}: trace written to {path} ({} events, {} dropped)",
+                    drain.events.len(),
+                    drain.dropped
+                ),
+            ),
+            Err(e) => {
+                obs::log::warn("cluster", format_args!("worker {rank}: trace write failed: {e}"))
+            }
+        }
+    }
+    obs::log::info("cluster", format_args!("worker {rank}: done ({local_events} interactions)"));
     Ok(())
+}
+
+/// `--trace-out trace.json` on a cluster worker becomes
+/// `trace.rank<R>.json`, so concurrent ranks don't clobber one file.
+fn rank_trace_path(path: &str, rank: u32) -> String {
+    match path.rsplit_once('.') {
+        Some((stem, ext)) if !ext.contains('/') => format!("{stem}.rank{rank}.{ext}"),
+        _ => format!("{path}.rank{rank}"),
+    }
 }
 
 /// Receiver thread for one peer connection: peers' `Publish` broadcasts
@@ -489,6 +555,7 @@ fn worker_with<P: SlotPayload>(
 fn receive_loop<P: SlotPayload>(sh: Arc<Shared<P>>, mut conn: FrameConn, _peer: usize) {
     let dim = sh.dim;
     let lanes = P::lanes(dim);
+    let tracing = sh.trace.enabled();
     let mut refbuf = vec![0.0f32; lanes];
     loop {
         let msg = match conn.read_msg() {
@@ -497,6 +564,16 @@ fn receive_loop<P: SlotPayload>(sh: Arc<Shared<P>>, mut conn: FrameConn, _peer: 
         };
         match msg {
             Msg::Publish { node, enc } => {
+                if tracing {
+                    let bytes = match &enc {
+                        PayloadEnc::F32 { lanes } => 4 * lanes.len() as u64,
+                        PayloadEnc::Lattice { packed, aux, .. } => {
+                            (packed.len() + 4 * aux.len()) as u64
+                        }
+                    };
+                    let t = sh.trace.now_ns();
+                    sh.trace.record(SpanKind::GossipRx, sh.rank, t, 0, bytes);
+                }
                 let node = node as usize;
                 if node >= sh.slots.len() || sh.owner[node].load(Ordering::Acquire) == sh.rank {
                     continue; // stale broadcast across an adoption hand-off
@@ -537,6 +614,10 @@ fn receive_loop<P: SlotPayload>(sh: Arc<Shared<P>>, mut conn: FrameConn, _peer: 
                 }
             }
             Msg::Cross { node, lanes: data } => {
+                if tracing {
+                    let t = sh.trace.now_ns();
+                    sh.trace.record(SpanKind::GossipRx, sh.rank, t, 0, 4 * data.len() as u64);
+                }
                 let node = node as usize;
                 if node >= sh.slots.len()
                     || sh.owner[node].load(Ordering::Acquire) != sh.rank
@@ -567,6 +648,7 @@ fn send_loop<P: SlotPayload>(
     mut coord: TcpStream,
     codec: crate::coordinator::WireCodec,
     cross_rx: mpsc::Receiver<(u32, Vec<f32>)>,
+    pong_rx: mpsc::Receiver<u64>,
     final_rx: mpsc::Receiver<Msg>,
 ) -> std::io::Result<()> {
     let dim = sh.dim;
@@ -583,9 +665,13 @@ fn send_loop<P: SlotPayload>(
     let broadcast = |peers: &mut Vec<Option<TcpStream>>, sh: &Shared<P>, msg: &Msg| {
         for slot in peers.iter_mut() {
             if let Some(s) = slot {
+                let t0 = if sh.trace.enabled() { sh.trace.now_ns() } else { 0 };
                 match send_msg(s, msg) {
                     Ok(b) => {
                         sh.counters.wire_bits.fetch_add(8 * b as u64, Ordering::Relaxed);
+                        if sh.trace.enabled() {
+                            sh.trace.span(SpanKind::GossipTx, sh.rank, t0, b as u64);
+                        }
                     }
                     Err(_) => *slot = None, // dead peer; coordinator recovers
                 }
@@ -600,15 +686,24 @@ fn send_loop<P: SlotPayload>(
             send_msg(&mut coord, &done)?;
             return Ok(());
         }
+        // heartbeat-RTT probes: echo the coordinator's timestamp verbatim
+        while let Ok(t_ns) = pong_rx.try_recv() {
+            idle = false;
+            send_msg(&mut coord, &Msg::Pong { t_ns })?;
+        }
         // queued cross-writes to remote owners
         while let Ok((node, data)) = cross_rx.try_recv() {
             idle = false;
             let owner = sh.owner[node as usize].load(Ordering::Acquire) as usize;
             if owner < peers.len() {
                 if let Some(s) = peers[owner].as_mut() {
+                    let t0 = if sh.trace.enabled() { sh.trace.now_ns() } else { 0 };
                     match send_msg(s, &Msg::Cross { node, lanes: data }) {
                         Ok(b) => {
                             sh.counters.wire_bits.fetch_add(8 * b as u64, Ordering::Relaxed);
+                            if sh.trace.enabled() {
+                                sh.trace.span(SpanKind::GossipTx, sh.rank, t0, b as u64);
+                            }
                         }
                         Err(_) => peers[owner] = None,
                     }
@@ -632,6 +727,11 @@ fn send_loop<P: SlotPayload>(
         if hb.elapsed() >= PROGRESS_EVERY {
             hb = Instant::now();
             send_msg(&mut coord, &Msg::Progress(sh.counters.snapshot()))?;
+            if sh.trace.enabled() {
+                let t = sh.trace.now_ns();
+                let ev = sh.counters.events.load(Ordering::Relaxed);
+                sh.trace.record(SpanKind::Heartbeat, sh.rank, t, 0, ev);
+            }
         }
         if cp.elapsed() >= CHECKPOINT_EVERY {
             cp = Instant::now();
@@ -691,4 +791,17 @@ fn encode_publish<P: SlotPayload>(
     }
     *last_pub = Some(model.to_vec());
     PayloadEnc::F32 { lanes: buf.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_trace_path_inserts_before_the_extension() {
+        assert_eq!(rank_trace_path("trace.json", 2), "trace.rank2.json");
+        assert_eq!(rank_trace_path("out/t.json", 0), "out/t.rank0.json");
+        assert_eq!(rank_trace_path("trace", 1), "trace.rank1");
+        assert_eq!(rank_trace_path("out.d/trace", 3), "out.d/trace.rank3");
+    }
 }

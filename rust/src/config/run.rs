@@ -101,6 +101,22 @@ pub struct RunConfig {
     /// seconds without a heartbeat before the cluster coordinator declares
     /// a worker dead and reassigns its shard from the last checkpoint
     pub heartbeat_timeout: f64,
+    /// Chrome trace-event JSON output path (`--trace-out`; "" = tracing
+    /// off). Cluster workers suffix their rank before the extension.
+    pub trace_out: String,
+    /// fraction of interactions traced, in (0, 1] (`--trace-sample`);
+    /// sampled deterministically per worker
+    pub trace_sample: f64,
+    /// Prometheus text snapshot path (`--metrics-out`; "" = off); snapshots
+    /// append at a fixed cadence, giving a time series instead of run-end
+    /// totals
+    pub metrics_out: String,
+    /// HOST:PORT for the cluster coordinator's live introspection endpoint
+    /// (`--metrics-addr`; "" = off) serving /metrics, /status, /trace
+    pub metrics_addr: String,
+    /// error | warn | info | debug (`--log-level`): the [`crate::obs::log`]
+    /// threshold every diagnostic routes through
+    pub log_level: String,
 }
 
 impl Default for RunConfig {
@@ -139,6 +155,11 @@ impl Default for RunConfig {
             kernel: "scalar".into(),
             workers: 2,
             heartbeat_timeout: 5.0,
+            trace_out: String::new(),
+            trace_sample: 1.0,
+            metrics_out: String::new(),
+            metrics_addr: String::new(),
+            log_level: "info".into(),
         }
     }
 }
@@ -288,6 +309,24 @@ impl RunConfig {
                 }
                 self.heartbeat_timeout = t;
             }
+            "trace_out" | "trace-out" => self.trace_out = value.into(),
+            "trace_sample" | "trace-sample" => {
+                let s: f64 = value.parse().map_err(|_| bad(key, value))?;
+                if !s.is_finite() || s <= 0.0 || s > 1.0 {
+                    return Err(format!(
+                        "trace_sample must be in (0, 1] (got '{value}'); \
+                         omit the key to trace every interaction"
+                    ));
+                }
+                self.trace_sample = s;
+            }
+            "metrics_out" | "metrics-out" => self.metrics_out = value.into(),
+            "metrics_addr" | "metrics-addr" => self.metrics_addr = value.into(),
+            "log_level" | "log-level" => {
+                // normalize through the parser so aliases ("warning")
+                // serialize canonically and bad values never clobber
+                self.log_level = crate::obs::log::Level::parse(value)?.name().into();
+            }
             _ => return Err(format!("unknown config key '{key}'")),
         }
         Ok(())
@@ -425,10 +464,43 @@ impl RunConfig {
         put("kernel", self.kernel.clone());
         put("workers", self.workers.to_string());
         put("heartbeat_timeout", self.heartbeat_timeout.to_string());
+        put("trace_sample", self.trace_sample.to_string());
+        put("log_level", self.log_level.clone());
         if !self.out_csv.is_empty() {
             put("out_csv", self.out_csv.clone());
         }
+        // path/addr keys follow the out_csv pattern: "" means off, and an
+        // empty value is never written (set() treats presence as intent)
+        if !self.trace_out.is_empty() {
+            put("trace_out", self.trace_out.clone());
+        }
+        if !self.metrics_out.is_empty() {
+            put("metrics_out", self.metrics_out.clone());
+        }
+        if !self.metrics_addr.is_empty() {
+            put("metrics_addr", self.metrics_addr.clone());
+        }
         out
+    }
+
+    /// The observability switches this config implies — the one place
+    /// `trace_out`/`trace_sample`/`metrics_out` become executor options
+    /// (used by `main` for in-process runs and by cluster workers, which
+    /// receive this config over the wire).
+    pub fn obs_options(&self) -> crate::obs::ObsOptions {
+        crate::obs::ObsOptions {
+            trace_capacity: if self.trace_out.is_empty() {
+                0
+            } else {
+                crate::obs::DEFAULT_TRACE_CAPACITY
+            },
+            trace_sample: self.trace_sample,
+            metrics_out: if self.metrics_out.is_empty() {
+                None
+            } else {
+                Some(self.metrics_out.clone())
+            },
+        }
     }
 
     /// Simulated-wire knobs that were explicitly moved off their defaults —
@@ -691,6 +763,11 @@ mod tests {
             ("kernel", "simd"),
             ("workers", "3"),
             ("heartbeat_timeout", "1.5"),
+            ("trace_out", "trace.json"),
+            ("trace_sample", "0.25"),
+            ("metrics_out", "metrics.prom"),
+            ("metrics_addr", "127.0.0.1:9090"),
+            ("log_level", "debug"),
         ] {
             c.set(k, v).unwrap();
         }
@@ -701,6 +778,40 @@ mod tests {
         let back = RunConfig::from_ini(&d.to_ini()).unwrap();
         assert_eq!(format!("{back:?}"), format!("{d:?}"));
         assert_eq!(back.threads, 0);
+    }
+
+    #[test]
+    fn obs_keys_parse_validate_and_map_to_options() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.log_level, "info");
+        assert_eq!(c.trace_sample, 1.0);
+        let opts = c.obs_options();
+        assert_eq!(opts.trace_capacity, 0, "no trace_out means tracing off");
+        assert!(opts.metrics_out.is_none());
+
+        c.set("trace-out", "trace.json").unwrap();
+        c.set("trace_sample", "0.5").unwrap();
+        c.set("metrics-out", "m.prom").unwrap();
+        c.set("metrics_addr", "127.0.0.1:0").unwrap();
+        c.set("log-level", "warning").unwrap();
+        assert_eq!(c.log_level, "warn", "aliases normalize");
+        let opts = c.obs_options();
+        assert_eq!(opts.trace_capacity, crate::obs::DEFAULT_TRACE_CAPACITY);
+        assert_eq!(opts.sample_rate(), 0.5);
+        assert_eq!(opts.metrics_out.as_deref(), Some("m.prom"));
+
+        // bad values are actionable and never clobber
+        for bad in ["0", "-0.1", "1.5", "nan", "lots"] {
+            let err = c.set("trace_sample", bad).unwrap_err();
+            assert!(
+                err.contains("trace_sample") || err.contains("bad value"),
+                "unhelpful error for '{bad}': {err}"
+            );
+            assert_eq!(c.trace_sample, 0.5, "bad '{bad}' must not clobber");
+        }
+        let err = c.set("log_level", "verbose").unwrap_err();
+        assert!(err.contains("error | warn | info | debug"), "unhelpful: {err}");
+        assert_eq!(c.log_level, "warn");
     }
 
     #[test]

@@ -64,6 +64,7 @@ use super::LrSchedule;
 use crate::analysis::gamma_potential;
 use crate::backend::Backend;
 use crate::netmodel::CostModel;
+use crate::obs::{self, ObsOptions, Sampler, SpanKind, TraceDrain, TraceRing};
 use crate::rngx::Pcg64;
 use crate::topology::Graph;
 use std::cell::UnsafeCell;
@@ -194,6 +195,21 @@ struct FreeShared<'a, P: SlotPayload> {
     total: u64,
     dim: usize,
     n: usize,
+    /// live-metrics sinks, allocated only when `--metrics-out` is active
+    /// (the hot loop pays one branch when absent)
+    live: Option<LiveStats>,
+}
+
+/// Shared wait-free sinks the workers publish into when live metrics are
+/// on: a log2 staleness histogram for p50/p99 gauges plus contention
+/// counters. The *exact* per-worker [`StalenessHistogram`]s still merge at
+/// join — this is the coarser live view, not a replacement.
+#[derive(Default)]
+struct LiveStats {
+    staleness: obs::AtomicHistogram,
+    read_retries: AtomicU64,
+    publish_retries: AtomicU64,
+    push_conflicts: AtomicU64,
 }
 
 /// f64-ordered clock-heap entry (same shape as the Poisson scheduler's).
@@ -226,6 +242,77 @@ struct WorkerResult {
     staleness: StalenessHistogram,
 }
 
+/// Periodic Prometheus snapshot writer for `--metrics-out`: run-level
+/// series re-derived from the shared atomics and appended to the file at
+/// [`obs::METRICS_CADENCE`] by the evaluation monitor thread.
+struct FreerunMetricsExport {
+    file: std::fs::File,
+    registry: obs::MetricsRegistry,
+    ips: obs::Gauge,
+    p50: obs::Gauge,
+    p99: obs::Gauge,
+    interactions: obs::Counter,
+    bits: obs::Counter,
+    fallbacks: obs::Counter,
+    read_retries: obs::Counter,
+    publish_retries: obs::Counter,
+    push_conflicts: obs::Counter,
+    last: Instant,
+    last_done: u64,
+}
+
+impl FreerunMetricsExport {
+    fn create(path: &str) -> Result<FreerunMetricsExport, String> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("cannot create metrics file '{path}': {e}"))?;
+        let registry = obs::MetricsRegistry::new();
+        Ok(FreerunMetricsExport {
+            ips: registry.gauge("swarm_interactions_per_sec", "throughput over the last cadence"),
+            p50: registry.gauge("swarm_staleness_p50", "live staleness p50 (log2 bucket bound)"),
+            p99: registry.gauge("swarm_staleness_p99", "live staleness p99 (log2 bucket bound)"),
+            interactions: registry.counter("swarm_interactions_total", "interactions completed"),
+            bits: registry.counter("swarm_wire_bits_total", "cumulative bits on the wire"),
+            fallbacks: registry.counter("swarm_wire_fallbacks_total", "codec fallbacks"),
+            read_retries: registry.counter("swarm_slot_read_retries_total", "seqlock read retries"),
+            publish_retries: registry
+                .counter("swarm_slot_publish_retries_total", "slot publish retries"),
+            push_conflicts: registry
+                .counter("swarm_push_conflicts_total", "cross-writes dropped to a held slot"),
+            file,
+            registry,
+            last: Instant::now(),
+            last_done: 0,
+        })
+    }
+
+    /// Refresh the registry from the shared run state and append one
+    /// snapshot, rate-limited to the cadence unless `force`d (final flush).
+    fn tick<P: SlotPayload>(&mut self, sh: &FreeShared<'_, P>, force: bool) {
+        if !force && self.last.elapsed() < obs::METRICS_CADENCE {
+            return;
+        }
+        let now = Instant::now();
+        let done = sh.done.load(Ordering::Relaxed);
+        let dt = now.duration_since(self.last).as_secs_f64().max(1e-9);
+        self.ips.set(done.saturating_sub(self.last_done) as f64 / dt);
+        self.interactions.set(done);
+        self.bits.set(sh.bits.load(Ordering::Relaxed));
+        self.fallbacks.set(sh.fallbacks.load(Ordering::Relaxed));
+        if let Some(lv) = &sh.live {
+            self.p50.set(lv.staleness.quantile(0.5) as f64);
+            self.p99.set(lv.staleness.quantile(0.99) as f64);
+            self.read_retries.set(lv.read_retries.load(Ordering::Relaxed));
+            self.publish_retries.set(lv.publish_retries.load(Ordering::Relaxed));
+            self.push_conflicts.set(lv.push_conflicts.load(Ordering::Relaxed));
+        }
+        self.last = now;
+        self.last_done = done;
+        if let Err(e) = obs::metrics::append_snapshot(&mut self.file, &self.registry) {
+            obs::log::warn("freerun", format_args!("metrics append failed: {e}"));
+        }
+    }
+}
+
 /// Run `spec.events` free-running gossip interactions on `threads` workers
 /// over `shards` node shards (`--executor freerun --threads K --shards S`).
 ///
@@ -246,6 +333,23 @@ pub fn run_freerun(
     threads: usize,
     shards: usize,
 ) -> RunMetrics {
+    run_freerun_with_obs(algo, backend, spec, graph, cost, threads, shards, &ObsOptions::default())
+}
+
+/// [`run_freerun`] with observability switches: per-worker trace rings
+/// (drained into [`RunMetrics::trace`]) and periodic Prometheus snapshots
+/// to `obs.metrics_out`. `ObsOptions::default()` is everything-off and
+/// byte-for-byte the [`run_freerun`] hot path.
+pub fn run_freerun_with_obs(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    graph: &Graph,
+    cost: &CostModel,
+    threads: usize,
+    shards: usize,
+    obs: &ObsOptions,
+) -> RunMetrics {
     let policy = algo.mix_policy().unwrap_or_else(|| {
         panic!(
             "--executor freerun requires a MixPolicy (freerun-eligible: swarm, \
@@ -265,6 +369,7 @@ pub fn run_freerun(
             cost,
             threads,
             shards,
+            obs,
         ),
         PayloadKind::PushSumWeighted => freerun_with::<PushSumWeighted>(
             algo,
@@ -275,6 +380,7 @@ pub fn run_freerun(
             cost,
             threads,
             shards,
+            obs,
         ),
     }
 }
@@ -288,6 +394,7 @@ fn freerun_with<P: SlotPayload>(
     cost: &CostModel,
     threads: usize,
     shards: usize,
+    obs: &ObsOptions,
 ) -> RunMetrics {
     assert!(spec.n >= 2, "gossip needs n >= 2");
     assert_eq!(spec.n, graph.n(), "spec n must match graph");
@@ -323,6 +430,7 @@ fn freerun_with<P: SlotPayload>(
         total: spec.events,
         dim,
         n,
+        live: obs.metrics_out.as_ref().map(|_| LiveStats::default()),
     };
     // staleness is measured in global interaction counts; lags beyond a few
     // multiples of n land in the overflow bucket (quantiles then report max)
@@ -357,16 +465,47 @@ fn freerun_with<P: SlotPayload>(
     // snapshots; the final point is computed exactly from the joined states
     let live_marks = &marks[..marks.len().saturating_sub(1)];
 
+    // observability: one trace ring per worker (empty when tracing is off —
+    // `record` is then a single branch), plus the periodic Prometheus
+    // snapshot writer for `--metrics-out`
+    let trace_epoch = Instant::now();
+    let rings: Vec<TraceRing> =
+        (0..threads).map(|_| TraceRing::with_epoch(obs.trace_capacity, trace_epoch)).collect();
+    let sample_rate = obs.sample_rate();
+    let mut export = match &obs.metrics_out {
+        Some(path) => match FreerunMetricsExport::create(path) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                obs::log::warn("freerun", format_args!("{err}; live metrics disabled"));
+                None
+            }
+        },
+        None => None,
+    };
+
     let started = Instant::now();
     let results: Vec<WorkerResult> = std::thread::scope(|scope| {
         let shref = &sh;
         let seed = spec.seed;
+        let ringref = &rings;
         let handles: Vec<_> = owned
             .into_iter()
             .enumerate()
             .map(|(wid, nodes)| {
                 let quota = quotas[wid];
-                scope.spawn(move || worker_loop(shref, nodes, wid, seed, staleness_cap, quota))
+                let sampler = Sampler::new(sample_rate, seed.wrapping_add(wid as u64));
+                scope.spawn(move || {
+                    worker_loop(
+                        shref,
+                        nodes,
+                        wid,
+                        seed,
+                        staleness_cap,
+                        quota,
+                        &ringref[wid],
+                        sampler,
+                    )
+                })
             })
             .collect();
         // evaluation monitor: snapshots the published slots without ever
@@ -377,6 +516,9 @@ fn freerun_with<P: SlotPayload>(
         // (the exact final point covers the end).
         let mut next = 0usize;
         while !handles.iter().all(|h| h.is_finished()) {
+            if let Some(ex) = export.as_mut() {
+                ex.tick(&sh, false);
+            }
             let d = sh.done.load(Ordering::Acquire);
             if next < live_marks.len() && d >= live_marks[next] && d < sh.total {
                 m.push(slot_point(&sh, algo, d, spec.track_gamma, &mut eval_rng));
@@ -393,6 +535,12 @@ fn freerun_with<P: SlotPayload>(
             .collect()
     });
     let wall_secs = started.elapsed().as_secs_f64();
+    if let Some(ex) = export.as_mut() {
+        ex.tick(&sh, true);
+    }
+    if obs.tracing() {
+        m.trace = Some(TraceDrain::from_rings(&rings));
+    }
 
     // merge worker-local telemetry and reassemble the node states
     let mut staleness = StalenessHistogram::new(staleness_cap);
@@ -495,6 +643,8 @@ fn worker_loop<P: SlotPayload>(
     seed: u64,
     staleness_cap: usize,
     quota: u64,
+    ring: &TraceRing,
+    mut sampler: Sampler,
 ) -> WorkerResult {
     let mut res = WorkerResult {
         states: Vec::new(),
@@ -522,9 +672,13 @@ fn worker_loop<P: SlotPayload>(
     // only slot-canonical policies (push-sum takes) pay the own-slot read;
     // plain-model policies keep the PR 3 hot path and telemetry semantics
     let sync_own = sh.policy.needs_own_slot_sync();
+    let tracing = ring.enabled();
     for _ in 0..quota {
         let t = sh.claimed.fetch_add(1, Ordering::Relaxed);
         debug_assert!(t < sh.total, "worker quotas must sum to the event budget");
+        // sampling decision up front so a skipped interaction costs one
+        // branch, not a clock read
+        let traced = tracing && sampler.hit();
         let started = Instant::now();
         let mut sync_secs = 0.0f64;
         let Reverse(Tick { at, ix }) = heap.pop().expect("non-empty worker heap");
@@ -550,17 +704,29 @@ fn worker_loop<P: SlotPayload>(
             dim: sh.dim,
             n: sh.n,
         };
+        let tc = if traced { ring.now_ns() } else { 0 };
         sh.policy.local_phase(&ctx, node, st, h);
+        if traced {
+            ring.span(SpanKind::Compute, wid as u32, tc, h);
+        }
         // non-blocking snapshot of the partner's published payload
         let t0 = Instant::now();
         let (stamp, retries) = sh.slots[partner].read_into(&mut scratch.snapshot);
         sync_secs += t0.elapsed().as_secs_f64();
         res.read_retries += retries;
-        res.staleness.record(sh.done.load(Ordering::Relaxed).saturating_sub(stamp));
+        if traced && retries > 0 {
+            ring.record(SpanKind::SlotRetry, wid as u32, ring.now_ns(), 0, retries);
+        }
+        let lag = sh.done.load(Ordering::Relaxed).saturating_sub(stamp);
+        res.staleness.record(lag);
         // the policy's merge rule, initiator side only — the partner is
         // never touched, let alone delayed. The wire codec's accounting
         // comes back through the EventOutcome.
+        let tm = if traced { ring.now_ns() } else { 0 };
         let outcome = sh.policy.merge(&ctx, node, st, &mut scratch, &mut rng);
+        if traced {
+            ring.span(SpanKind::Merge, wid as u32, tm, outcome.bits);
+        }
         st.interactions += 1;
         sh.bits.fetch_add(outcome.bits, Ordering::Relaxed);
         if outcome.fallbacks > 0 {
@@ -572,11 +738,32 @@ fn worker_loop<P: SlotPayload>(
         // slot — dropped and counted if the slot is held
         let stamp_now = sh.done.load(Ordering::Relaxed);
         let t1 = Instant::now();
-        res.publish_retries += sh.slots[node].publish(&scratch.publish, stamp_now);
-        if !sh.slots[partner].try_publish(&scratch.cross, stamp_now) {
+        let tp = if traced { ring.now_ns() } else { 0 };
+        let pub_retries = sh.slots[node].publish(&scratch.publish, stamp_now);
+        res.publish_retries += pub_retries;
+        let conflicted = !sh.slots[partner].try_publish(&scratch.cross, stamp_now);
+        if conflicted {
             res.push_conflicts += 1;
         }
+        if traced {
+            ring.span(SpanKind::Publish, wid as u32, tp, partner as u64);
+            if pub_retries > 0 {
+                ring.record(SpanKind::SlotRetry, wid as u32, ring.now_ns(), 0, pub_retries);
+            }
+        }
         sync_secs += t1.elapsed().as_secs_f64();
+        if let Some(lv) = &sh.live {
+            lv.staleness.record(lag);
+            if retries > 0 {
+                lv.read_retries.fetch_add(retries, Ordering::Relaxed);
+            }
+            if pub_retries > 0 {
+                lv.publish_retries.fetch_add(pub_retries, Ordering::Relaxed);
+            }
+            if conflicted {
+                lv.push_conflicts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         // re-arm this node's Poisson clock
         heap.push(Reverse(Tick { at: at + rng.exponential(1.0), ix }));
         sh.done.fetch_add(1, Ordering::Release);

@@ -63,6 +63,10 @@ pub struct RunMetrics {
     /// contention/staleness telemetry — only the free-running executor
     /// produces it; `None` for the replay executors
     pub freerun: Option<FreerunStats>,
+    /// drained trace events when the run executed with tracing enabled
+    /// (`--trace-out` via [`crate::obs::ObsOptions`]); the CLI serializes
+    /// this into Chrome trace-event JSON
+    pub trace: Option<crate::obs::TraceDrain>,
 }
 
 impl RunMetrics {

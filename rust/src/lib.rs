@@ -119,6 +119,34 @@
 //! executors through their phased compute events but return no policy and
 //! refuse `--executor freerun` with an actionable error.
 //!
+//! # Observability
+//!
+//! The [`obs`] module is the cross-cutting layer that makes a run's
+//! wall-clock behavior visible *while it happens* (zero new dependencies,
+//! hand-rolled like [`cluster::proto`]):
+//!
+//! * **Event tracing** — `--trace-out trace.json` records typed spans
+//!   (compute, merge, publish, seqlock retry, gossip tx/rx, heartbeat)
+//!   into per-worker lock-free ring buffers ([`obs::TraceRing`]) and
+//!   drains them post-run into Chrome trace-event JSON loadable in
+//!   `chrome://tracing` / Perfetto. `--trace-sample R` traces a
+//!   deterministic R-fraction of interactions; overhead at full sampling
+//!   is pinned within a few percent by a `BENCH_freerun.json` comparison
+//!   row (`cargo bench --bench bench_freerun`).
+//! * **Metrics export** — `--metrics-out metrics.prom` appends Prometheus
+//!   text snapshots ([`obs::MetricsRegistry`]) at a fixed cadence:
+//!   interactions/sec, staleness p50/p99, wire bits, conflict counts as
+//!   time series instead of run-end totals.
+//! * **Live introspection** — `--metrics-addr HOST:PORT` on a cluster
+//!   coordinator serves `/metrics` (Prometheus text), `/status` (JSON:
+//!   per-worker shards, liveness, last-progress age, heartbeat RTT) and
+//!   `/trace` (drain-so-far) over hand-rolled HTTP/1.1 while the run
+//!   executes. Unauthenticated loopback-grade plumbing — auth/TLS for
+//!   multi-host deployments remains open (ROADMAP item 3).
+//! * **Leveled logging** — every diagnostic routes through [`obs::log`];
+//!   `--log-level error|warn|info|debug` (default `info`) gates the
+//!   chatter. Machine-parsed protocol lines stay on stdout, unleveled.
+//!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -134,6 +162,7 @@ pub mod figures;
 pub mod grad;
 pub mod kernels;
 pub mod netmodel;
+pub mod obs;
 pub mod output;
 pub mod quant;
 pub mod rngx;

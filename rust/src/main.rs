@@ -24,10 +24,11 @@ use swarm_sgd::cli::{Cli, USAGE};
 use swarm_sgd::cluster::{self, ClusterOpts, Role};
 use swarm_sgd::config::RunConfig;
 use swarm_sgd::coordinator::{
-    make_algorithm, run_freerun, run_parallel, run_serial, AlgoOptions, Algorithm, RunMetrics,
-    RunSpec,
+    make_algorithm, run_freerun_with_obs, run_parallel, run_serial, AlgoOptions, Algorithm,
+    RunMetrics, RunSpec,
 };
 use swarm_sgd::figures::{run_figure, write_curves};
+use swarm_sgd::obs;
 use swarm_sgd::output::Table;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::runtime::load_manifest;
@@ -38,7 +39,8 @@ fn main() {
     let cli = match Cli::parse(&args) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("error: {e}\n\n{USAGE}");
+            obs::log::error("cli", format_args!("{e}"));
+            eprintln!("\n{USAGE}");
             std::process::exit(2);
         }
     };
@@ -54,7 +56,7 @@ fn main() {
         other => Err(format!("unknown subcommand '{other}'\n\n{USAGE}")),
     };
     if let Err(e) = result {
-        eprintln!("error: {e}");
+        obs::log::error("swarm", format_args!("{e}"));
         std::process::exit(1);
     }
 }
@@ -70,9 +72,20 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     for (k, v) in cli.overrides() {
         cfg.set(&k, &v)?;
     }
-    for key in
-        ["algorithm", "executor", "threads", "shards", "wire", "kernel", "workers"]
-    {
+    for key in [
+        "algorithm",
+        "executor",
+        "threads",
+        "shards",
+        "wire",
+        "kernel",
+        "workers",
+        "trace-out",
+        "trace-sample",
+        "metrics-out",
+        "metrics-addr",
+        "log-level",
+    ] {
         if let Some(v) = cli.get(key) {
             cfg.set(key, v)?;
         }
@@ -83,11 +96,22 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     if cli.has("quick") {
         cfg.interactions = cfg.interactions.min(100);
     }
+    // the level gates every leveled diagnostic from here on; protocol
+    // lines on stdout are never filtered
+    obs::log::set_level(obs::log::Level::parse(&cfg.log_level)?);
     // the cluster executor dispatches before any single-process setup:
     // workers receive the config from the coordinator over the wire, and
     // the coordinator validates algorithm eligibility itself
     if let Some(opts) = cluster::from_cli(cli, &cfg)? {
         return cmd_cluster(&cfg, &opts);
+    }
+    if !cfg.metrics_addr.is_empty() {
+        return Err(
+            "--metrics-addr serves the cluster coordinator's live introspection \
+             endpoint; this is a single-process run — use --executor cluster \
+             --role coordinator, or --metrics-out for file snapshots"
+                .into(),
+        );
     }
     println!("config: {cfg:?}\n");
 
@@ -124,6 +148,16 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         track_gamma: cfg.track_gamma,
     };
 
+    if (!cfg.trace_out.is_empty() || !cfg.metrics_out.is_empty()) && cfg.executor != "freerun" {
+        obs::log::warn(
+            "train",
+            format_args!(
+                "tracing/metrics export cover the freerun and cluster executors; \
+                 the '{}' executor ignores them",
+                cfg.executor
+            ),
+        );
+    }
     let started = std::time::Instant::now();
     let metrics = match cfg.executor.as_str() {
         "parallel" => {
@@ -151,7 +185,16 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
                  algorithm={} n={} topology={} (non-replayable)",
                 threads, shards, cfg.algo, cfg.n, cfg.topology
             );
-            run_freerun(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads, shards)
+            run_freerun_with_obs(
+                algo.as_ref(),
+                backend.as_ref(),
+                &spec,
+                &graph,
+                &cost,
+                threads,
+                shards,
+                &cfg.obs_options(),
+            )
         }
         _ => run_serial(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost),
     };
@@ -172,11 +215,14 @@ fn cmd_cluster(cfg: &RunConfig, opts: &ClusterOpts) -> Result<(), String> {
             // knobs have nothing to scale — flag any that were moved
             let ignored = cfg.simulated_wire_overrides();
             if !ignored.is_empty() {
-                eprintln!(
-                    "warning: --executor cluster measures the wire instead of \
-                     simulating it; ignoring {} (compute-side knobs like \
-                     batch_time/jitter/stragglers still apply)",
-                    ignored.join(", ")
+                obs::log::warn(
+                    "cluster",
+                    format_args!(
+                        "--executor cluster measures the wire instead of \
+                         simulating it; ignoring {} (compute-side knobs like \
+                         batch_time/jitter/stragglers still apply)",
+                        ignored.join(", ")
+                    ),
                 );
             }
             std::fs::create_dir_all(&opts.checkpoint_dir)
@@ -259,6 +305,21 @@ fn report_run(
             fr.busy_total(),
             fr.wait_total(),
         );
+    }
+    if !cfg.trace_out.is_empty() {
+        if let Some(tr) = &metrics.trace {
+            std::fs::write(&cfg.trace_out, tr.to_chrome_json())
+                .map_err(|e| format!("{}: {e}", cfg.trace_out))?;
+            println!(
+                "trace written to {} ({} events, {} dropped)",
+                cfg.trace_out,
+                tr.events.len(),
+                tr.dropped
+            );
+        }
+    }
+    if !cfg.metrics_out.is_empty() && metrics.freerun.is_some() {
+        println!("metrics snapshots appended to {}", cfg.metrics_out);
     }
     if !cfg.out_csv.is_empty() {
         write_curves(Path::new(&cfg.out_csv), &[metrics]).map_err(|e| e.to_string())?;

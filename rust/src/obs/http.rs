@@ -1,0 +1,239 @@
+//! Hand-rolled HTTP/1.1 introspection server (zero dependencies, same
+//! ethos as `cluster/proto.rs`): enough of the protocol for `curl` and a
+//! Prometheus scraper — GET, fixed routes, `Content-Length`,
+//! `Connection: close`. One connection is handled at a time; every
+//! response here is tiny and the coordinator's control loop never blocks
+//! on this thread.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One HTTP response: status + content type + body.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into().into() }
+    }
+
+    pub fn json(body: impl Into<String>) -> Response {
+        Response { status: 200, content_type: "application/json", body: body.into().into() }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            _ => "Error",
+        }
+    }
+}
+
+type Handler = Box<dyn Fn() -> Response + Send + Sync>;
+
+/// Fixed route table, built once before the server spawns.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<(String, Handler)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register `path` (exact match, query string ignored) → handler.
+    pub fn route(mut self, path: &str, f: impl Fn() -> Response + Send + Sync + 'static) -> Router {
+        self.routes.push((path.to_string(), Box::new(f)));
+        self
+    }
+
+    fn dispatch(&self, method: &str, path: &str) -> Response {
+        if method != "GET" {
+            return Response::text(405, "only GET is supported\n");
+        }
+        let path = path.split('?').next().unwrap_or("");
+        match self.routes.iter().find(|(p, _)| p == path) {
+            Some((_, h)) => h(),
+            None => {
+                let known: Vec<&str> = self.routes.iter().map(|(p, _)| p.as_str()).collect();
+                Response::text(404, format!("no route {path}; try {}\n", known.join(" ")))
+            }
+        }
+    }
+}
+
+/// A running introspection server. Dropping (or calling
+/// [`shutdown`](HttpServer::shutdown)) stops the accept loop and joins its
+/// thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read the real one
+    /// back from [`addr`](HttpServer::addr)) and serve `router` on a
+    /// background thread.
+    pub fn spawn(addr: &str, router: Router) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        // non-blocking accept so the loop can observe the stop flag
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("obs-http".into())
+            .spawn(move || accept_loop(listener, router, flag))
+            .expect("spawn obs-http thread");
+        Ok(HttpServer { addr, stop, join: Some(join) })
+    }
+
+    /// The actually-bound address (resolves `:0` requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, router: Router, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // best-effort: a broken client connection must not take
+                // down the introspection thread
+                let _ = handle(stream, &router);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, router: &Router) -> std::io::Result<()> {
+    // accepted sockets inherit the listener's non-blocking mode on some
+    // platforms; force blocking with a deadline for the header read
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf = Vec::with_capacity(512);
+    let mut tmp = [0u8; 512];
+    // read until the end of the header block; bodies are ignored (GET)
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 8192 {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let mut line = text.lines().next().unwrap_or("").split_whitespace();
+    let method = line.next().unwrap_or("");
+    let path = line.next().unwrap_or("/");
+    let resp = router.dispatch(method, path);
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal test client: one GET, returns (status line, body).
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        (head.lines().next().unwrap_or("").to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_routes_and_404s_unknown_paths() {
+        let srv = HttpServer::spawn(
+            "127.0.0.1:0",
+            Router::new()
+                .route("/metrics", || Response::text(200, "swarm_up 1\n"))
+                .route("/status", || Response::json("{\"ok\":true}")),
+        )
+        .unwrap();
+        let addr = srv.addr();
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "swarm_up 1\n");
+        let (head, body) = get(addr, "/status");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "{\"ok\":true}");
+        let (head, body) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        assert!(body.contains("/metrics") && body.contains("/status"), "{body}");
+        // query strings route to the bare path
+        let (head, _) = get(addr, "/metrics?format=prometheus");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn non_get_methods_are_rejected() {
+        let srv = HttpServer::spawn(
+            "127.0.0.1:0",
+            Router::new().route("/metrics", || Response::text(200, "x")),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nContent-Length: 0\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+    }
+
+    #[test]
+    fn shutdown_joins_the_server_thread() {
+        let srv =
+            HttpServer::spawn("127.0.0.1:0", Router::new().route("/", || Response::text(200, "")))
+                .unwrap();
+        let addr = srv.addr();
+        srv.shutdown();
+        // after shutdown the port stops accepting (connect may succeed
+        // briefly on some platforms' backlog, but a fresh bind must work)
+        let rebind = TcpListener::bind(addr);
+        assert!(rebind.is_ok(), "port still held after shutdown");
+    }
+}

@@ -1,0 +1,145 @@
+//! Leveled structured event log: the one chokepoint every diagnostic in
+//! the crate routes through, so `--log-level warn` can silence info-level
+//! chatter in CI runs without touching call sites.
+//!
+//! Zero dependencies and zero allocation on the disabled path: callers
+//! pass `format_args!(..)`, so a filtered-out message never formats.
+//! Output goes to stderr — stdout stays reserved for the machine-parsed
+//! protocol lines (coordinator address, checkpoint markers, final report).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severities, most severe first. The active level admits itself and
+/// everything more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a CLI/config spelling. The error names every accepted value.
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (expected error | warn | info | debug)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // f.pad (not write_str) so the `{level:5}` column format in `log`
+        // actually pads
+        f.pad(self.name())
+    }
+}
+
+/// Process-global active level (default `info`, matching the pre-obs
+/// behavior where every diagnostic printed unconditionally).
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the active level (normally once, from `--log-level`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// The currently active level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a message at `l` be emitted right now?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Monotonic epoch for the relative timestamps (first use wins, so all
+/// threads share one origin).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Emit one structured line: `[  12.345s level target] message`.
+pub fn log(l: Level, target: &str, msg: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = epoch().elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {l:5} {target}] {msg}");
+}
+
+pub fn error(target: &str, msg: fmt::Arguments<'_>) {
+    log(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: fmt::Arguments<'_>) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: fmt::Arguments<'_>) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: fmt::Arguments<'_>) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_roundtrip() {
+        for (s, l) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("warning", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+        ] {
+            assert_eq!(Level::parse(s).unwrap(), l);
+        }
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.name()).unwrap(), l);
+        }
+        let err = Level::parse("verbose").unwrap_err();
+        assert!(err.contains("verbose") && err.contains("debug"), "{err}");
+    }
+
+    #[test]
+    fn severity_ordering_gates_enabled() {
+        // Error is admitted at every level; Debug only at Debug. Uses the
+        // Ord on Level directly rather than mutating the global level,
+        // which other tests in the process may be relying on.
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

@@ -1,0 +1,275 @@
+//! In-process metrics registry with Prometheus text exposition.
+//!
+//! Hot paths hold a [`Counter`] or [`Gauge`] handle (one `Arc<AtomicU64>`
+//! each — updates are a relaxed atomic op, no lock); the registry mutex is
+//! only taken at registration and render time. [`MetricsRegistry::render`]
+//! emits the Prometheus text format (`# HELP` / `# TYPE` / sample lines),
+//! served live by the coordinator's `/metrics` endpoint and appended
+//! periodically to `--metrics-out` as a poor man's time series.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter. Clone freely — clones share the cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Counters are monotone on the wire, but the publishers here re-derive
+    /// totals from executor state each cadence — `set` keeps that cheap.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge storing an `f64` as its bit pattern.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    kind: Kind,
+    cell: Arc<AtomicU64>,
+}
+
+/// Named-metric registry. Clones share the underlying table, so the
+/// executor, its monitor thread, and an HTTP server can all hold one.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Vec<Entry>>>,
+}
+
+/// Gauge sample formatting: integral values render without a fraction,
+/// which keeps the text diff-friendly and parseable either way.
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Prometheus metric-name grammar: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn valid_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, kind: Kind) -> Arc<AtomicU64> {
+        assert!(valid_name(name), "invalid metric name '{name}'");
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.iter().find(|e| e.name == name) {
+            assert!(e.kind == kind, "metric '{name}' re-registered with a different type");
+            return e.cell.clone();
+        }
+        let cell = Arc::new(AtomicU64::new(0));
+        inner.push(Entry { name: name.into(), help: help.into(), kind, cell: cell.clone() });
+        cell
+    }
+
+    /// Register (or look up) a counter. Same name twice returns the same
+    /// cell; same name as a gauge panics — that's a programming error.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        Counter(self.register(name, help, Kind::Counter))
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        Gauge(self.register(name, help, Kind::Gauge))
+    }
+
+    /// Render every metric in Prometheus text exposition format, in
+    /// registration order.
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for e in inner.iter() {
+            if !e.help.is_empty() {
+                out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            }
+            let (ty, value) = match e.kind {
+                Kind::Counter => ("counter", e.cell.load(Ordering::Relaxed).to_string()),
+                Kind::Gauge => ("gauge", fmt_value(f64::from_bits(e.cell.load(Ordering::Relaxed)))),
+            };
+            out.push_str(&format!("# TYPE {} {ty}\n{} {value}\n", e.name, e.name));
+        }
+        out
+    }
+}
+
+/// Append one rendered snapshot to `f`, preceded by a scrape-separator
+/// comment carrying the unix timestamp in milliseconds — a `--metrics-out`
+/// file is a sequence of these blocks, a poor man's time series that stays
+/// parseable as Prometheus text (separators are comments).
+pub fn append_snapshot(f: &mut std::fs::File, registry: &MetricsRegistry) -> std::io::Result<()> {
+    use std::io::Write;
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    write!(f, "# scrape ts_ms={ts}\n{}", registry.render())
+}
+
+/// Lock-free log2-bucketed histogram for *live* quantile gauges: exact
+/// counts, power-of-two value resolution. The executors' exact
+/// [`crate::coordinator::StalenessHistogram`]s stay worker-local and merge
+/// at join; this one is shared and written concurrently, trading value
+/// resolution for a wait-free `record`.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    /// bucket `b` holds values in `[2^(b-1), 2^b)`; bucket 0 holds 0
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for AtomicHistogram {
+    // std's array Default stops at 32 elements, so spelled out
+    fn default() -> AtomicHistogram {
+        AtomicHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        let b = (64 - v.leading_zeros()).min(63) as usize;
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile: the upper bound of the bucket where the
+    /// cumulative count crosses `q` (so the true value is ≤ the answer,
+    /// within a factor of 2). Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_prometheus_text() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("swarm_interactions_total", "interactions completed");
+        let g = reg.gauge("swarm_staleness_p99", "p99 staleness in interactions");
+        c.add(41);
+        c.inc();
+        g.set(7.5);
+        let text = reg.render();
+        assert!(text.contains("# TYPE swarm_interactions_total counter"), "{text}");
+        assert!(text.contains("swarm_interactions_total 42"), "{text}");
+        assert!(text.contains("# TYPE swarm_staleness_p99 gauge"), "{text}");
+        assert!(text.contains("swarm_staleness_p99 7.5"), "{text}");
+        // every non-comment line is exactly `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut it = line.split_whitespace();
+            assert!(valid_name(it.next().unwrap()), "{line}");
+            assert!(it.next().unwrap().parse::<f64>().is_ok(), "{line}");
+            assert!(it.next().is_none(), "{line}");
+        }
+    }
+
+    #[test]
+    fn reregistration_returns_the_same_cell() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("swarm_x", "");
+        let b = reg.counter("swarm_x", "ignored on re-register");
+        a.add(3);
+        assert_eq!(b.get(), 3);
+        assert_eq!(reg.render().matches("# TYPE swarm_x").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn kind_conflict_panics() {
+        let reg = MetricsRegistry::new();
+        let _c = reg.counter("swarm_y", "");
+        let _g = reg.gauge("swarm_y", "");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn invalid_name_panics() {
+        MetricsRegistry::new().counter("9starts-with-digit", "");
+    }
+
+    #[test]
+    fn integral_gauges_render_without_fraction() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("swarm_workers", "").set(3.0);
+        assert!(reg.render().contains("swarm_workers 3\n"));
+    }
+
+    #[test]
+    fn atomic_histogram_quantiles_bound_the_true_value() {
+        let h = AtomicHistogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        for v in [0u64, 1, 1, 2, 3, 4, 7, 8, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.quantile(0.5);
+        // the true p50 is 3; the log2 bucket upper bound for [2,4) is 3
+        assert!((3..=7).contains(&p50), "p50 bucket bound was {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= 1000 && p99 < 2048, "p99 bucket bound was {p99}");
+        assert_eq!(h.quantile(0.0), 0, "q=0 lands in the lowest bucket");
+    }
+}

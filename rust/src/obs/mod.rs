@@ -1,0 +1,66 @@
+//! Observability: low-overhead event tracing, metrics export, leveled
+//! logging, and a live HTTP introspection endpoint.
+//!
+//! The paper's claims are about *wall-clock behavior* — staleness spikes,
+//! seqlock conflict storms, load imbalance, wire-bit bursts — phenomena
+//! that end-of-run counters average away. This module is the cross-cutting
+//! layer that makes them visible, with zero new dependencies (hand-rolled
+//! like [`crate::cluster::proto`]):
+//!
+//! * [`trace`] — per-worker lock-free ring buffers of typed spans
+//!   (compute, merge, publish, seqlock retry, gossip tx/rx, heartbeat),
+//!   drained post-run into Chrome trace-event JSON (`--trace-out`,
+//!   loadable in Perfetto). Sampling via [`Sampler`] keeps the overhead
+//!   within a few percent at full throughput.
+//! * [`metrics`] — an in-process [`MetricsRegistry`] the executors publish
+//!   into at a fixed cadence; rendered as Prometheus text to
+//!   `--metrics-out` and the coordinator's `/metrics` endpoint.
+//! * [`http`] — a minimal HTTP/1.1 server for the cluster coordinator's
+//!   `/metrics`, `/status`, and `/trace` routes (`--metrics-addr`).
+//! * [`log`] — the leveled event log (`--log-level`) every `eprintln!`
+//!   diagnostic in the crate routes through.
+
+pub mod http;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use http::{HttpServer, Response, Router};
+pub use metrics::{AtomicHistogram, Counter, Gauge, MetricsRegistry};
+pub use trace::{Sampler, SpanKind, TraceDrain, TraceEvent, TraceRing};
+
+/// Default per-worker trace ring capacity when tracing is on: 64Ki events
+/// × 32 bytes = 2 MiB per worker.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// Cadence at which executors publish registry snapshots (and append to
+/// `--metrics-out`).
+pub const METRICS_CADENCE: std::time::Duration = std::time::Duration::from_millis(500);
+
+/// Observability switches threaded into an executor run. `Default` is
+/// everything off — the zero-overhead path.
+#[derive(Clone, Debug, Default)]
+pub struct ObsOptions {
+    /// per-worker trace ring capacity in events; 0 disables tracing
+    pub trace_capacity: usize,
+    /// fraction of interactions traced, in (0, 1]; sampled per worker with
+    /// a seed derived from the worker id (deterministic)
+    pub trace_sample: f64,
+    /// append Prometheus text snapshots here at [`METRICS_CADENCE`]
+    pub metrics_out: Option<String>,
+}
+
+impl ObsOptions {
+    pub fn tracing(&self) -> bool {
+        self.trace_capacity > 0
+    }
+
+    /// The effective sampling rate (an unset 0.0 means "trace everything").
+    pub fn sample_rate(&self) -> f64 {
+        if self.trace_sample <= 0.0 {
+            1.0
+        } else {
+            self.trace_sample.min(1.0)
+        }
+    }
+}

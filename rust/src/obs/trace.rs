@@ -1,0 +1,362 @@
+//! Per-worker lock-free trace ring buffers + Chrome trace-event export.
+//!
+//! A [`TraceRing`] is a fixed-capacity ring of 4-word slots claimed by a
+//! relaxed `fetch_add` on a monotone head counter. Writers never block and
+//! never allocate; when the ring wraps, the oldest events are overwritten
+//! and counted as dropped — nothing is ever silently lost. Each executor
+//! worker gets its own ring (sharing one epoch so timestamps align), and
+//! the cluster worker threads share one ring (the true concurrent-writer
+//! case the slot layout is designed for).
+//!
+//! Slots are plain `AtomicU64`s written with relaxed stores. Two writers
+//! that race on a wrapped slot, or a mid-run drain racing a writer, can
+//! observe a *torn* slot (words from two different events). Post-run
+//! drains happen after the workers quiesce and are exact; the live
+//! `/trace` endpoint is documented best-effort. A kind byte of 0 marks a
+//! never-written slot, so partially filled rings drain cleanly.
+//!
+//! [`TraceDrain::to_chrome_json`] emits the Chrome trace-event format
+//! (`chrome://tracing` / Perfetto): complete `"ph":"X"` events with
+//! microsecond timestamps, `tid` = worker id.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::rngx::Pcg64;
+
+/// What one trace event describes. Discriminants are packed into ring
+/// slots; 0 is reserved for "empty slot", so kinds start at 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// local SGD steps of one interaction (freerun/cluster compute body)
+    Compute = 1,
+    /// pairwise quantize-average merge of two model payloads
+    Merge = 2,
+    /// seqlock publish of a merged payload (duration includes retries)
+    Publish = 3,
+    /// a seqlock read or publish attempt that had to retry; arg = retries
+    SlotRetry = 4,
+    /// one gossip frame written to a peer socket; arg = payload bytes
+    GossipTx = 5,
+    /// one gossip frame decoded off a peer socket; arg = payload bytes
+    GossipRx = 6,
+    /// a progress heartbeat sent to the coordinator
+    Heartbeat = 7,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Merge => "merge",
+            SpanKind::Publish => "publish",
+            SpanKind::SlotRetry => "slot_retry",
+            SpanKind::GossipTx => "gossip_tx",
+            SpanKind::GossipRx => "gossip_rx",
+            SpanKind::Heartbeat => "heartbeat",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            1 => SpanKind::Compute,
+            2 => SpanKind::Merge,
+            3 => SpanKind::Publish,
+            4 => SpanKind::SlotRetry,
+            5 => SpanKind::GossipTx,
+            6 => SpanKind::GossipRx,
+            7 => SpanKind::Heartbeat,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded trace event. Timestamps are nanoseconds since the ring's
+/// epoch (shared across all rings of one run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: SpanKind,
+    /// worker/thread id (`tid` in the Chrome export)
+    pub worker: u32,
+    pub t_start_ns: u64,
+    pub dur_ns: u64,
+    /// kind-specific payload (bytes, retries, partner id, ...)
+    pub arg: u64,
+}
+
+/// One ring slot: kind|worker, start, duration, arg — all relaxed atomics
+/// so concurrent writers and mid-run readers are race-free (if torn).
+#[derive(Default)]
+struct Slot {
+    w: [AtomicU64; 4],
+}
+
+/// Fixed-capacity multi-writer trace ring. Capacity 0 is a fully disabled
+/// ring: `record` is a no-op and `enabled()` lets hot loops skip the
+/// timestamp capture too.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    /// monotone claim counter; `head % cap` is the next slot, anything
+    /// beyond `cap` has overwritten (dropped) the oldest events
+    head: AtomicU64,
+    epoch: Instant,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing::with_epoch(capacity, Instant::now())
+    }
+
+    /// Build a ring against a caller-supplied epoch, so every ring of one
+    /// run reports timestamps on the same axis.
+    pub fn with_epoch(capacity: usize, epoch: Instant) -> TraceRing {
+        let slots = (0..capacity).map(|_| Slot::default()).collect();
+        TraceRing { slots, head: AtomicU64::new(0), epoch }
+    }
+
+    /// False for a capacity-0 ring — check before paying for `Instant`s.
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    /// Nanoseconds since this ring's epoch (the `t_start_ns` clock).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one event. Lock-free, allocation-free, wait-free: one
+    /// `fetch_add` plus four relaxed stores.
+    pub fn record(&self, kind: SpanKind, worker: u32, t_start_ns: u64, dur_ns: u64, arg: u64) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        let s = &self.slots[i];
+        s.w[1].store(t_start_ns, Ordering::Relaxed);
+        s.w[2].store(dur_ns, Ordering::Relaxed);
+        s.w[3].store(arg, Ordering::Relaxed);
+        // kind word last: a drain racing this write classifies the slot by
+        // its kind byte, so stale kinds are likelier than phantom ones
+        s.w[0].store(kind as u64 | (worker as u64) << 8, Ordering::Relaxed);
+    }
+
+    /// Convenience: record a span that started at `t_start_ns` and ends
+    /// now.
+    pub fn span(&self, kind: SpanKind, worker: u32, t_start_ns: u64, arg: u64) {
+        let now = self.now_ns();
+        self.record(kind, worker, t_start_ns, now.saturating_sub(t_start_ns), arg);
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring wraparound so far.
+    pub fn dropped(&self) -> u64 {
+        self.total().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Decode the currently retained events (unordered). Exact after the
+    /// writers quiesce; best-effort while they run.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let retained = (self.total().min(self.slots.len() as u64)) as usize;
+        let mut out = Vec::with_capacity(retained);
+        for s in self.slots.iter() {
+            let w0 = s.w[0].load(Ordering::Relaxed);
+            let Some(kind) = SpanKind::from_u8(w0 as u8) else { continue };
+            out.push(TraceEvent {
+                kind,
+                worker: (w0 >> 8) as u32,
+                t_start_ns: s.w[1].load(Ordering::Relaxed),
+                dur_ns: s.w[2].load(Ordering::Relaxed),
+                arg: s.w[3].load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+}
+
+/// The merged result of draining every ring of a run: time-ordered events
+/// plus the loss accounting (drops are counted, never hidden).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceDrain {
+    /// all retained events, sorted by start time
+    pub events: Vec<TraceEvent>,
+    /// events ever recorded across the rings
+    pub total: u64,
+    /// events lost to wraparound across the rings
+    pub dropped: u64,
+}
+
+impl TraceDrain {
+    /// Drain and merge a set of rings into one time-sorted event list.
+    pub fn from_rings<'a>(rings: impl IntoIterator<Item = &'a TraceRing>) -> TraceDrain {
+        let mut d = TraceDrain::default();
+        for r in rings {
+            d.events.extend(r.events());
+            d.total += r.total();
+            d.dropped += r.dropped();
+        }
+        d.events.sort_by_key(|e| (e.t_start_ns, e.worker));
+        d
+    }
+
+    /// Serialize to Chrome trace-event JSON (the object form, loadable in
+    /// `chrome://tracing` and Perfetto). Timestamps convert to the
+    /// format's microsecond unit.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"otherData\":{\"total\":");
+        out.push_str(&self.total.to_string());
+        out.push_str(",\"dropped\":");
+        out.push_str(&self.dropped.to_string());
+        out.push_str("},\"traceEvents\":[");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"swarm\",\"ph\":\"X\",\"ts\":{:.3},\
+                 \"dur\":{:.3},\"pid\":0,\"tid\":{},\"args\":{{\"v\":{}}}}}",
+                e.kind.name(),
+                e.t_start_ns as f64 / 1_000.0,
+                e.dur_ns as f64 / 1_000.0,
+                e.worker,
+                e.arg,
+            ));
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
+/// Deterministic Bernoulli sampler for the trace-everything-is-too-much
+/// case: `hit()` answers "trace this interaction?" at the configured rate,
+/// reproducibly for a fixed seed (one sampler per worker, seeded from the
+/// worker's id).
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    rng: Pcg64,
+    /// accept when the next draw is below this; `u64::MAX` short-circuits
+    /// the draw entirely (rate 1.0 must not perturb the RNG stream)
+    threshold: u64,
+}
+
+impl Sampler {
+    pub fn new(rate: f64, seed: u64) -> Sampler {
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else if rate <= 0.0 {
+            0
+        } else {
+            (rate * u64::MAX as f64) as u64
+        };
+        Sampler { rng: Pcg64::seed(seed), threshold }
+    }
+
+    pub fn hit(&mut self) -> bool {
+        self.threshold == u64::MAX || self.rng.next_u64() < self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let r = TraceRing::new(8);
+        r.record(SpanKind::Compute, 3, 100, 10, 0);
+        r.record(SpanKind::Publish, 3, 200, 5, 2);
+        let d = TraceDrain::from_rings([&r]);
+        assert_eq!(d.total, 2);
+        assert_eq!(d.dropped, 0);
+        assert_eq!(d.events.len(), 2);
+        assert_eq!(d.events[0].kind, SpanKind::Compute);
+        assert_eq!(d.events[1].t_start_ns, 200);
+        assert_eq!(d.events[1].worker, 3);
+    }
+
+    #[test]
+    fn wraparound_counts_drops_instead_of_losing_them() {
+        let r = TraceRing::new(4);
+        for i in 0..10u64 {
+            r.record(SpanKind::Merge, 0, i, 1, i);
+        }
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.dropped(), 6);
+        let d = TraceDrain::from_rings([&r]);
+        assert_eq!(d.events.len(), 4, "ring retains exactly its capacity");
+        assert_eq!(d.total, 10);
+        assert_eq!(d.dropped, 6);
+        // the survivors are the newest four
+        let args: Vec<u64> = d.events.iter().map(|e| e.arg).collect();
+        assert_eq!(args, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn disabled_ring_is_a_no_op() {
+        let r = TraceRing::new(0);
+        assert!(!r.enabled());
+        r.record(SpanKind::Compute, 0, 1, 1, 1);
+        assert_eq!(r.total(), 0);
+        assert!(TraceDrain::from_rings([&r]).events.is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_account_for_every_event() {
+        let r = TraceRing::new(1 << 14);
+        const WRITERS: u32 = 4;
+        const EACH: u64 = 1_000;
+        std::thread::scope(|s| {
+            for w in 0..WRITERS {
+                let r = &r;
+                s.spawn(move || {
+                    for i in 0..EACH {
+                        r.record(SpanKind::Compute, w, i, 1, i);
+                    }
+                });
+            }
+        });
+        let d = TraceDrain::from_rings([&r]);
+        assert_eq!(d.total, WRITERS as u64 * EACH);
+        assert_eq!(d.dropped, 0, "ring is large enough to retain everything");
+        assert_eq!(d.events.len(), (WRITERS as u64 * EACH) as usize);
+        // every writer's full sequence must be present (nothing lost)
+        for w in 0..WRITERS {
+            let mut args: Vec<u64> =
+                d.events.iter().filter(|e| e.worker == w).map(|e| e.arg).collect();
+            args.sort_unstable();
+            assert_eq!(args, (0..EACH).collect::<Vec<_>>(), "writer {w}");
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic_for_a_fixed_seed() {
+        let draws = |rate: f64, seed: u64| {
+            let mut s = Sampler::new(rate, seed);
+            (0..256).map(|_| s.hit()).collect::<Vec<bool>>()
+        };
+        assert_eq!(draws(0.25, 7), draws(0.25, 7), "same seed, same decisions");
+        assert_ne!(draws(0.25, 7), draws(0.25, 8), "different seed diverges");
+        assert!(draws(1.0, 1).iter().all(|&b| b), "rate 1.0 always hits");
+        assert!(!draws(0.0, 1).iter().any(|&b| b), "rate 0.0 never hits");
+        let hits = draws(0.25, 42).iter().filter(|&&b| b).count();
+        assert!((32..96).contains(&hits), "rate 0.25 over 256 draws gave {hits}");
+    }
+
+    #[test]
+    fn chrome_json_has_the_trace_event_shape() {
+        let r = TraceRing::new(8);
+        r.record(SpanKind::GossipTx, 1, 1_500, 2_000, 64);
+        let json = TraceDrain::from_rings([&r]).to_chrome_json();
+        assert!(json.contains("\"traceEvents\":["), "{json}");
+        assert!(json.contains("\"name\":\"gossip_tx\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"ts\":1.500"), "µs conversion: {json}");
+        assert!(json.contains("\"dur\":2.000"), "µs conversion: {json}");
+        assert!(json.contains("\"tid\":1"), "{json}");
+    }
+}

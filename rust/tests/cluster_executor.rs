@@ -93,6 +93,27 @@ fn await_line(
     }
 }
 
+/// One raw HTTP/1.1 GET against the coordinator's introspection endpoint
+/// (no client library — the server is hand-rolled, so is the test client).
+fn http_get(addr: &str, path: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("connect introspection endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(5))).expect("read timeout");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .expect("write request");
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+/// The value of one sample line (`name value`) in Prometheus text.
+fn prom_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let mut it = l.split_whitespace();
+        (it.next() == Some(name)).then(|| it.next())??.parse().ok()
+    })
+}
+
 /// Pull `key=value` off the coordinator's machine-readable final line.
 fn parse_kv(line: &str, key: &str) -> f64 {
     let prefix = format!("{key}=");
@@ -163,12 +184,44 @@ fn normalized_gap(cfg: &RunConfig, final_loss: f64) -> f64 {
 #[test]
 fn cluster_loopback_run_converges_with_real_wire_bits() {
     let dir = std::env::temp_dir().join(format!("swarm_cluster_conv_{}", std::process::id()));
+    // throttled workers stretch the run past a couple of metrics-sweep
+    // cadences, so the introspection GETs below land mid-run
     let set = "algo=swarm,preset=oracle:quadratic,n=16,interactions=2500,eval_every=0";
-    let (mut coord, rx) =
-        spawn_coordinator(&dir, &["--wire", "lattice", "--heartbeat-timeout", "10"], set);
+    let (mut coord, rx) = spawn_coordinator(
+        &dir,
+        &["--wire", "lattice", "--heartbeat-timeout", "10", "--metrics-addr", "127.0.0.1:0"],
+        set,
+    );
     let addr = listen_addr(&rx);
-    let mut w0 = spawn_worker(&addr, &[]);
-    let mut w1 = spawn_worker(&addr, &[]);
+    let metrics_addr = await_line(&rx, "the metrics serving line", Duration::from_secs(30), |l| {
+        l.starts_with("cluster metrics serving on ")
+    })
+    .strip_prefix("cluster metrics serving on ")
+    .expect("serving address")
+    .trim()
+    .to_string();
+    let mut w0 = spawn_worker(&addr, &["--throttle-us", "1000"]);
+    let mut w1 = spawn_worker(&addr, &["--throttle-us", "1000"]);
+
+    // live introspection while the job is in flight: poll until a sweep has
+    // published both workers alive with nonzero progress, pre-drain
+    let poll_end = Instant::now() + Duration::from_secs(60);
+    let (status, metrics) = loop {
+        assert!(Instant::now() < poll_end, "introspection never showed 2 live workers mid-run");
+        let status = http_get(&metrics_addr, "/status");
+        let metrics = http_get(&metrics_addr, "/metrics");
+        if status.contains("\"alive\":2")
+            && status.contains("\"draining\":false")
+            && prom_value(&metrics, "swarm_interactions_total").unwrap_or(0.0) > 0.0
+        {
+            break (status, metrics);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.contains("\"workers\":2"), "status: {status}");
+    assert!(status.contains("\"rank\":0") && status.contains("\"rank\":1"), "status: {status}");
+    assert_eq!(prom_value(&metrics, "swarm_cluster_workers_alive"), Some(2.0), "{metrics}");
+    assert!(metrics.contains("# TYPE swarm_interactions_total counter"), "{metrics}");
 
     let final_line = await_line(&rx, "the final report", Duration::from_secs(120), |l| {
         l.starts_with("cluster: final ")

@@ -1,0 +1,311 @@
+//! Integration tests of the obs subsystem's exported artifacts: the
+//! Chrome trace-event JSON written by `--trace-out` and the Prometheus
+//! text exposition served by `/metrics` and appended to `--metrics-out`.
+//!
+//! The golden contract here is *parseability by the real consumers*: the
+//! trace JSON must survive an actual JSON parse (a minimal hand-rolled
+//! recursive-descent parser below — the crate has no JSON dependency, and
+//! neither does its test suite) and round-trip its event count, and every
+//! metrics sample line must tokenize as `name value`.
+
+use swarm_sgd::obs::{metrics, MetricsRegistry, SpanKind, TraceDrain, TraceRing};
+
+/// A parsed JSON value — just enough structure to navigate the exports.
+#[derive(Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> &Json {
+        match self {
+            Json::Obj(kvs) => kvs
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .unwrap_or_else(|| panic!("no key {key:?} in {self:?}")),
+            _ => panic!("not an object: {self:?}"),
+        }
+    }
+
+    fn num(&self) -> f64 {
+        match self {
+            Json::Num(v) => *v,
+            _ => panic!("not a number: {self:?}"),
+        }
+    }
+
+    fn str_(&self) -> &str {
+        match self {
+            Json::Str(s) => s,
+            _ => panic!("not a string: {self:?}"),
+        }
+    }
+
+    fn arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(v) => v,
+            _ => panic!("not an array: {self:?}"),
+        }
+    }
+}
+
+/// Minimal strict JSON parser (ASCII payloads; the exporters emit nothing
+/// else). Rejects trailing garbage, unterminated strings, and bad commas —
+/// exactly the malformations string-concatenation serializers produce.
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing bytes at {}", p.i));
+    }
+    Ok(v)
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.s.get(self.i).is_some_and(|b| b.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        self.ws();
+        if self.s.get(self.i) == Some(&b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.s.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.s.get(self.i) {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    // the exporters never emit escapes beyond \" and \\
+                    self.i += 1;
+                    out.push(*self.s.get(self.i).ok_or("truncated escape")? as char);
+                    self.i += 1;
+                }
+                Some(&b) => {
+                    out.push(b as char);
+                    self.i += 1;
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.s.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.s.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("bad array separator at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.s.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            out.push((key, self.value()?));
+            self.ws();
+            match self.s.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("bad object separator at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+const SPAN_NAMES: &[&str] = &[
+    "compute",
+    "merge",
+    "publish",
+    "slot_retry",
+    "gossip_tx",
+    "gossip_rx",
+    "heartbeat",
+];
+
+#[test]
+fn chrome_trace_json_parses_and_round_trips_its_event_count() {
+    // three workers' rings on one epoch, mixed span kinds, no wraparound
+    let epoch = std::time::Instant::now();
+    let rings: Vec<TraceRing> = (0..3).map(|_| TraceRing::with_epoch(256, epoch)).collect();
+    for (w, ring) in rings.iter().enumerate() {
+        for i in 0..10 * (w as u64 + 1) {
+            ring.record(SpanKind::Compute, w as u32, i * 1_000, 500, i);
+            ring.record(SpanKind::Merge, w as u32, i * 1_000 + 500, 250, 96);
+        }
+        ring.record(SpanKind::GossipTx, w as u32, 99_000, 10, 64);
+        ring.record(SpanKind::Heartbeat, w as u32, 100_000, 0, 1);
+    }
+    let drain = TraceDrain::from_rings(&rings);
+    assert_eq!(drain.total, 2 * (10 + 20 + 30) + 6);
+    assert_eq!(drain.dropped, 0);
+
+    let doc = parse_json(&drain.to_chrome_json()).expect("trace JSON parses");
+    let events = doc.get("traceEvents").arr();
+    assert_eq!(events.len(), drain.events.len(), "event count round-trips");
+    assert_eq!(doc.get("otherData").get("total").num() as u64, drain.total);
+    assert_eq!(doc.get("otherData").get("dropped").num() as u64, drain.dropped);
+    for e in events {
+        assert!(SPAN_NAMES.contains(&e.get("name").str_()), "unknown span {e:?}");
+        assert_eq!(e.get("ph").str_(), "X", "complete events only");
+        assert_eq!(e.get("cat").str_(), "swarm");
+        assert!(e.get("ts").num() >= 0.0 && e.get("dur").num() >= 0.0, "{e:?}");
+        assert!((0.0..3.0).contains(&e.get("tid").num()), "worker id range: {e:?}");
+        e.get("args").get("v").num();
+    }
+    // the drain is time-sorted, and the export must preserve that
+    let ts: Vec<f64> = events.iter().map(|e| e.get("ts").num()).collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "events out of order");
+}
+
+#[test]
+fn wrapped_and_empty_rings_still_export_valid_json() {
+    let wrapped = TraceRing::new(4);
+    for i in 0..9 {
+        wrapped.record(SpanKind::Publish, 0, i, 1, i);
+    }
+    let doc = parse_json(&TraceDrain::from_rings([&wrapped]).to_chrome_json()).unwrap();
+    assert_eq!(doc.get("traceEvents").arr().len(), 4, "capacity bounds retention");
+    assert_eq!(doc.get("otherData").get("total").num(), 9.0);
+    assert_eq!(doc.get("otherData").get("dropped").num(), 5.0, "drops are accounted");
+
+    let empty = TraceDrain::from_rings([&TraceRing::new(8)]);
+    let doc = parse_json(&empty.to_chrome_json()).unwrap();
+    assert!(doc.get("traceEvents").arr().is_empty());
+}
+
+#[test]
+fn prometheus_exposition_tokenizes_as_name_value_samples() {
+    let reg = MetricsRegistry::new();
+    reg.counter("swarm_interactions_total", "interactions completed").set(1234);
+    reg.gauge("swarm_interactions_per_sec", "throughput").set(8123.25);
+    reg.gauge("swarm_staleness_p99", "p99 staleness").set(17.0);
+    let text = reg.render();
+    let mut samples = 0;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            assert!(
+                line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                "unknown comment: {line}"
+            );
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().expect("metric name");
+        assert!(name.starts_with("swarm_"), "namespace: {line}");
+        it.next().expect("sample value").parse::<f64>().expect("numeric value");
+        assert!(it.next().is_none(), "extra tokens: {line}");
+        samples += 1;
+    }
+    assert_eq!(samples, 3);
+    assert!(text.contains("swarm_interactions_total 1234\n"), "{text}");
+    assert!(text.contains("swarm_interactions_per_sec 8123.25\n"), "{text}");
+    assert!(text.contains("swarm_staleness_p99 17\n"), "integral gauges: {text}");
+}
+
+#[test]
+fn metrics_out_snapshots_append_as_separated_scrapes() {
+    let path = std::env::temp_dir().join(format!("swarm_obs_snap_{}.prom", std::process::id()));
+    let reg = MetricsRegistry::new();
+    let c = reg.counter("swarm_interactions_total", "interactions completed");
+    {
+        let mut f = std::fs::File::create(&path).unwrap();
+        c.set(10);
+        metrics::append_snapshot(&mut f, &reg).unwrap();
+        c.set(25);
+        metrics::append_snapshot(&mut f, &reg).unwrap();
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(text.matches("# scrape ts_ms=").count(), 2, "{text}");
+    assert!(text.contains("swarm_interactions_total 10\n"), "{text}");
+    assert!(text.contains("swarm_interactions_total 25\n"), "{text}");
+}
