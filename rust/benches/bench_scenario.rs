@@ -1,0 +1,135 @@
+//! Scenario-matrix smoke bench: convergence vs staleness vs spectral gap
+//! across topology families, on the free-running executor.
+//!
+//! The paper's convergence bound degrades with the gossip matrix's
+//! spectral gap; this bench makes that trade-off *observable* in one
+//! table — for each topology × algorithm cell it records the graph's
+//! `spectral_gap`, the freerun staleness quantiles that topology induces,
+//! and the normalized loss gap actually reached. Two heterogeneity rows
+//! (bimodal speed classes on the sparse graphs) track how structural
+//! stragglers stretch the staleness tail.
+//!
+//! Like `bench_freerun`, rows are runner-dependent and non-replayable —
+//! CI records `BENCH_scenario.json` in a non-blocking job, it never gates
+//! on the numbers. `-- --test` runs the reduced smoke configuration.
+
+use std::io::Write;
+use swarm_sgd::backend::Backend;
+use swarm_sgd::config::RunConfig;
+use swarm_sgd::coordinator::{
+    make_algorithm, run_freerun_scenario, AlgoOptions, LrSchedule, RunSpec,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::obs::ObsOptions;
+use swarm_sgd::scenario::Scenario;
+use swarm_sgd::topology::spectral_gap;
+
+const N: usize = 64;
+
+fn scenario(topology: &str, speeds: &str) -> Scenario {
+    let mut cfg = RunConfig::default();
+    cfg.set("topology", topology).expect("valid topology");
+    cfg.set("n", &N.to_string()).expect("valid n");
+    cfg.set("seed", "7").expect("valid seed");
+    cfg.set("speeds", speeds).expect("valid speeds");
+    Scenario::from_config(&cfg).expect("feasible scenario")
+}
+
+fn row_json(
+    topology: &str,
+    speeds: &str,
+    algorithm: &str,
+    gap: f64,
+    norm_gap: f64,
+    fr: &swarm_sgd::coordinator::FreerunStats,
+) -> String {
+    format!(
+        "    {{\"topology\": \"{topology}\", \"speeds\": \"{speeds}\", \
+         \"algorithm\": \"{algorithm}\", \"n\": {N}, \
+         \"spectral_gap\": {gap:.6}, \"norm_loss_gap\": {norm_gap:.4}, \
+         \"staleness_p50\": {}, \"staleness_p99\": {}, \
+         \"staleness_mean\": {:.2}, \"interactions_per_sec\": {:.1}}}",
+        fr.staleness.p50(),
+        fr.staleness.p99(),
+        fr.staleness.mean(),
+        fr.interactions_per_sec,
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let (dim, t) = if smoke { (64, 6_000u64) } else { (512, 40_000) };
+    println!("== scenario matrix (n={N}, d={dim}, T={t}, quadratic oracle) ==");
+
+    let backend = QuadraticOracle::new(dim, N, 1.0, 0.5, 2.0, 0.1, 3);
+    let f_star = backend.f_star();
+    let gap0 = {
+        let (p, _) = backend.init();
+        backend.eval(&p).loss - f_star
+    };
+    let cost = CostModel::deterministic(0.4);
+    let spec = RunSpec {
+        n: N,
+        events: t,
+        lr: LrSchedule::Constant(0.05),
+        seed: 1,
+        name: "bench-scenario".into(),
+        eval_every: 0,
+        track_gamma: false,
+    };
+
+    // the matrix: dense baseline + the three sparse families the paper's
+    // spectral-gap factor actually bites on, × the two gossip algorithms
+    // with distinct mixing (pairwise averaging vs directed-capable
+    // push-sum), + bimodal straggler rows on the sparse graphs
+    let mut cells: Vec<(&str, &str, &str)> = Vec::new();
+    for topo in ["complete", "ring", "torus", "regular4"] {
+        for algo in ["swarm", "sgp"] {
+            cells.push((topo, "uniform", algo));
+        }
+    }
+    cells.push(("ring", "bimodal:0.25:4", "swarm"));
+    cells.push(("torus", "bimodal:0.25:4", "swarm"));
+
+    let mut rows: Vec<String> = Vec::new();
+    for (topo, speeds, name) in cells {
+        let scn = scenario(topo, speeds);
+        let gap = spectral_gap(scn.graph0());
+        let algo = make_algorithm(name, &AlgoOptions::default()).expect("known algorithm");
+        let m = run_freerun_scenario(
+            algo.as_ref(),
+            &backend,
+            &spec,
+            &scn,
+            &cost,
+            4,
+            8,
+            &ObsOptions::default(),
+        );
+        let fr = m.freerun.as_ref().expect("freerun telemetry");
+        let norm_gap = (m.final_eval_loss - f_star) / gap0;
+        println!(
+            "{topo:<9} {name:<6} {speeds:<15} spectral_gap={gap:.4}  \
+             norm_loss_gap={norm_gap:.4}  staleness p50={} p99={}  {:>9.0} int/s",
+            fr.staleness.p50(),
+            fr.staleness.p99(),
+            fr.interactions_per_sec,
+        );
+        rows.push(row_json(topo, speeds, name, gap, norm_gap, fr));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_scenario\",\n  \"workload\": \
+         {{\"n\": {N}, \"dim\": {dim}, \"interactions\": {t}, \
+         \"backend\": \"quadratic\", \"smoke\": {smoke}}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::File::create("BENCH_scenario.json")
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("wrote BENCH_scenario.json"),
+        Err(e) => eprintln!("could not write BENCH_scenario.json: {e}"),
+    }
+}

@@ -94,6 +94,10 @@ USAGE:
                 [--executor serial|parallel|freerun|cluster]
                 [--threads K] [--shards S]
                 [--wire lattice|f32] [--kernel scalar|simd]
+                [--topology complete|ring|torus|hypercube|regular<r>|powerlaw[<m>]]
+                [--speeds uniform|bimodal:<frac>:<slowdown>|pareto:<alpha>]
+                [--dirichlet ALPHA] [--directed]
+                [--topology-schedule topo@0,topo@T1,...]
                 [--role coordinator|worker] [--listen HOST:PORT]
                 [--connect HOST:PORT] [--workers W] [--heartbeat-timeout S]
                 [--checkpoint-dir DIR] [--throttle-us U]
@@ -107,7 +111,8 @@ USAGE:
                 straggler_prob, straggle_factor, latency, bandwidth,
                 model_bytes, out_csv, executor, threads, shards, kernel,
                 workers, heartbeat_timeout, trace_out, trace_sample,
-                metrics_out, metrics_addr, log_level
+                metrics_out, metrics_addr, log_level, speeds, directed,
+                dirichlet, topology_schedule
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
@@ -153,6 +158,27 @@ USAGE:
                 precedence over --wire f32 (the default) — to run full
                 precision, set mode=nonblocking. localsgd and allreduce
                 (full-precision collectives) reject lattice.
+                The scenario axis shapes the run environment on EVERY
+                executor. --topology constrains partner sampling to a
+                graph family: complete, ring, torus (square n), hypercube
+                (power-of-two n), regular<r> (random r-regular, n*r even),
+                powerlaw[<m>] (connected preferential attachment, m edges
+                per new node, default 2); infeasible topology/n combos are
+                rejected up front with an actionable error. --speeds maps
+                per-node speed classes onto the Poisson clock rates:
+                bimodal:<frac>:<slowdown> slows round(n*frac) nodes by
+                <slowdown> (>= 1), pareto:<alpha> draws heavy-tailed
+                slowdowns — structural stragglers whose staleness the
+                freerun/cluster telemetry measures. --dirichlet ALPHA is
+                shorthand for shard=dirichlet:<alpha> (label-skewed data
+                assignment; small alpha = near single-label nodes).
+                --directed (sgp only, complete|ring|torus) orients the
+                gossip graph so push targets follow arcs.
+                --topology-schedule ring@0,torus@5000,... switches the
+                graph at event-index boundaries (first stage at @0,
+                strictly increasing). The default scenario (uniform
+                speeds, one static undirected graph) is bit-identical to
+                the legacy path, so serial/parallel replay goldens hold.
                 --kernel scalar|simd picks the fused quantize-average
                 merge-kernel implementation on every executor: scalar is
                 the one-element-at-a-time reference, simd processes
@@ -183,8 +209,11 @@ USAGE:
                 regenerate a paper table/figure (prints rows + writes CSV)
   swarm inspect [--artifacts artifacts]
                 list compiled artifacts and their metadata
-  swarm topo    --n <n> [--topology complete|ring|torus|hypercube|random<r>]
-                print graph stats (degree, lambda2, theory factors)
+  swarm topo    --n <n> [--topology complete|ring|torus|hypercube|random<r>|
+                         regular<r>|powerlaw[<m>]]
+                print graph stats (degree, edges, connectivity, lambda2,
+                spectral gap, theory factors); validates topology/n
+                feasibility with the same errors train uses
   swarm help    show this message
 
 EXAMPLES:
@@ -202,6 +231,12 @@ EXAMPLES:
               --set preset=oracle:quadratic,n=32,interactions=10000
   swarm train --executor cluster --role coordinator --listen 127.0.0.1:0 \\
               --workers 2 --set preset=oracle:quadratic,n=16,interactions=2000
+  swarm train --algorithm swarm --topology torus --speeds bimodal:0.25:8 \\
+              --set preset=oracle:quadratic,n=64,interactions=20000
+  swarm train --algorithm sgp --topology ring --directed \\
+              --dirichlet 0.1 --set preset=oracle:softmax,n=16
+  swarm train --topology-schedule ring@0,torus@10000 \\
+              --set preset=oracle:quadratic,n=64,interactions=20000
   swarm train --executor cluster --role worker --connect 127.0.0.1:7000
   swarm figure --id table1 --quick
   swarm figure --id all --out results

@@ -103,6 +103,10 @@ pub fn run_coordinator(
             cfg.algo
         )
     })?;
+    // resolve the scenario once up front: an infeasible topology/n combo,
+    // a bad speed spec, or an invalid graph schedule fails here with the
+    // actionable config error — before any worker is handed the job
+    crate::scenario::Scenario::from_config(cfg)?;
     let backend = build_backend(cfg)?;
     match policy.payload() {
         PayloadKind::Plain => {

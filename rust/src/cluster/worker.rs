@@ -50,7 +50,7 @@ use crate::coordinator::{
 use crate::obs::{self, Sampler, SpanKind, TraceDrain, TraceRing};
 use crate::quant::{self, QuantizedMsg};
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 /// Stream tags for the cluster executor's sub-RNGs (disjoint from the
 /// serial/parallel/freerun tags).
@@ -297,8 +297,9 @@ fn worker_with<P: SlotPayload>(
     let n = cfg.n;
     let dim = backend.dim();
     let (p0, m0) = backend.init();
-    let mut rng = Pcg64::seed(cfg.seed);
-    let graph = Graph::build(cfg.topology_enum()?, n, &mut rng);
+    // every rank resolves the identical scenario from the shipped config
+    // (same seed → same graph stages and per-node rates on all processes)
+    let scn = Scenario::from_config(cfg)?;
     let obs_opts = cfg.obs_options();
 
     let sh = Arc::new(Shared::<P> {
@@ -384,10 +385,11 @@ fn worker_with<P: SlotPayload>(
     let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>> =
         std::collections::BinaryHeap::new();
     // integer clock keys (exponential times scaled to µ-ticks) keep the
-    // heap Ord without the f64 wrapper
-    let clock = |r: &mut Pcg64| (r.exponential(1.0) * 1e6) as u64;
+    // heap Ord without the f64 wrapper; each node's clock runs at its
+    // scenario rate (1.0 under uniform speeds)
+    let clock = |r: &mut Pcg64, rate: f64| (r.exponential(rate) * 1e6) as u64;
     for ix in 0..states.len() {
-        let at = clock(&mut wrng);
+        let at = clock(&mut wrng, scn.rate(states[ix].0));
         heap.push(std::cmp::Reverse((at, ix)));
     }
     let lanes = P::lanes(dim);
@@ -409,7 +411,7 @@ fn worker_with<P: SlotPayload>(
                 sh.dirty[node].store(true, Ordering::Release);
                 let ix = states.len();
                 states.push((node, st));
-                heap.push(std::cmp::Reverse((base + clock(&mut wrng), ix)));
+                heap.push(std::cmp::Reverse((base + clock(&mut wrng, scn.rate(node)), ix)));
                 obs::log::info("cluster", format_args!("worker {rank}: adopted node {node}"));
             }
         }
@@ -429,12 +431,14 @@ fn worker_with<P: SlotPayload>(
             sh.counters.read_retries.fetch_add(r, Ordering::Relaxed);
             policy.absorb_own_slot(st, &scratch.own, dim);
         }
+        // the lr schedule and the scenario's graph stages want a global
+        // event index; without a global counter, rank-striped local counts
+        // are an unbiased monotone proxy
+        let t_global = local_events * workers as u64 + rank as u64;
+        let graph = scn.graph_at(t_global);
         let partner = graph.sample_neighbor(node, &mut wrng);
         let h = policy.draw_steps(&mut wrng);
-        // the lr schedule wants a global event index; without a global
-        // counter, rank-striped local counts are an unbiased monotone proxy
-        let t_global = local_events * workers as u64 + rank as u64;
-        let ctx = StepCtx { backend, cost: &cost, graph: &graph, lr: lr.at(t_global + 1), dim, n };
+        let ctx = StepCtx { backend, cost: &cost, graph, lr: lr.at(t_global + 1), dim, n };
         let tc = if traced { sh.trace.now_ns() } else { 0 };
         policy.local_phase(&ctx, node, st, h);
         if traced {
@@ -487,7 +491,7 @@ fn worker_with<P: SlotPayload>(
                 sh.trace.record(SpanKind::SlotRetry, rank, t, 0, pub_retries);
             }
         }
-        heap.push(std::cmp::Reverse((at + clock(&mut wrng), ix)));
+        heap.push(std::cmp::Reverse((at + clock(&mut wrng, scn.rate(node)), ix)));
         local_events += 1;
         sh.done.fetch_add(1, Ordering::Release);
         sh.counters.events.fetch_add(1, Ordering::Relaxed);

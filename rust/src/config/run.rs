@@ -31,8 +31,24 @@ pub struct RunConfig {
     /// or oracle:quadratic / oracle:softmax / oracle:logistic
     pub preset: String,
     pub n: usize,
-    /// complete | ring | torus | hypercube | random<r> (e.g. random4)
+    /// complete | ring | torus | hypercube | random<r> | regular<r> |
+    /// powerlaw | powerlaw<m> (`regular<r>` is an alias of `random<r>`;
+    /// bare `powerlaw` uses attachment degree m=2)
     pub topology: String,
+    /// uniform | bimodal:<frac>:<slowdown> | pareto:<alpha> — per-node
+    /// speed classes mapped onto Poisson clock rates (`--speeds`):
+    /// `bimodal:0.25:4` makes a quarter of the nodes 4× slower;
+    /// `pareto:2.5` draws heavy-tailed per-node slowdowns. Stragglers are
+    /// *structural* (fixed per node for the whole run), unlike the i.i.d.
+    /// per-step `straggler_prob` of the cost model.
+    pub speeds: String,
+    /// directed graph orientation for push-sum (`--directed`): sgp-only,
+    /// on the orientable families (ring, torus, complete)
+    pub directed: bool,
+    /// time-varying topology: comma-separated `<topology>@<tick>` stages
+    /// ("" = static `topology` for the whole run). The first stage must
+    /// start at tick 0, e.g. `ring@0,torus@5000,complete@20000`.
+    pub topology_schedule: String,
     /// total pairwise interactions (gossip) or rounds (synchronous)
     pub interactions: u64,
     /// mean local steps H
@@ -126,6 +142,9 @@ impl Default for RunConfig {
             preset: "mlp_s".into(),
             n: 8,
             topology: "complete".into(),
+            speeds: "uniform".into(),
+            directed: false,
+            topology_schedule: String::new(),
             interactions: 400,
             h: 2.0,
             geometric: false,
@@ -194,7 +213,33 @@ impl RunConfig {
             }
             "preset" => self.preset = value.into(),
             "n" => self.n = value.parse().map_err(|_| bad(key, value))?,
-            "topology" => self.topology = value.into(),
+            "topology" => {
+                // parse eagerly so a typo'd family name errors here (with
+                // the known names) instead of deep in run setup, and never
+                // clobbers the prior value
+                Topology::parse(value)?;
+                self.topology = value.into();
+            }
+            "speeds" => {
+                crate::scenario::SpeedClass::parse(value)?;
+                self.speeds = value.into();
+            }
+            "directed" => self.directed = value.parse().map_err(|_| bad(key, value))?,
+            "topology_schedule" | "topology-schedule" => {
+                crate::scenario::parse_topology_schedule(value)?;
+                self.topology_schedule = value.into();
+            }
+            "dirichlet" => {
+                // CLI sugar: `--dirichlet 0.3` == `shard=dirichlet:0.3`
+                let a: f64 = value.parse().map_err(|_| bad(key, value))?;
+                if !a.is_finite() || a <= 0.0 {
+                    return Err(format!(
+                        "dirichlet alpha must be a positive number (got '{value}'); \
+                         small alpha = heavy label skew, large alpha = ~iid"
+                    ));
+                }
+                self.shard = ShardMode::Dirichlet(a);
+            }
             "interactions" | "rounds" => {
                 self.interactions = value.parse().map_err(|_| bad(key, value))?
             }
@@ -333,19 +378,7 @@ impl RunConfig {
     }
 
     pub fn topology_enum(&self) -> Result<Topology, String> {
-        Ok(match self.topology.as_str() {
-            "complete" => Topology::Complete,
-            "ring" => Topology::Ring,
-            "torus" => Topology::Torus,
-            "hypercube" => Topology::Hypercube,
-            t if t.starts_with("random") => {
-                let r = t["random".len()..]
-                    .parse()
-                    .map_err(|_| format!("bad topology '{t}' (want e.g. random4)"))?;
-                Topology::RandomRegular(r)
-            }
-            t => return Err(format!("unknown topology '{t}'")),
-        })
+        Topology::parse(&self.topology)
     }
 
     pub fn local_steps(&self) -> LocalSteps {
@@ -430,6 +463,8 @@ impl RunConfig {
         put("preset", self.preset.clone());
         put("n", self.n.to_string());
         put("topology", self.topology.clone());
+        put("speeds", self.speeds.clone());
+        put("directed", self.directed.to_string());
         put("interactions", self.interactions.to_string());
         put("h", self.h.to_string());
         put("geometric", self.geometric.to_string());
@@ -471,6 +506,9 @@ impl RunConfig {
         }
         // path/addr keys follow the out_csv pattern: "" means off, and an
         // empty value is never written (set() treats presence as intent)
+        if !self.topology_schedule.is_empty() {
+            put("topology_schedule", self.topology_schedule.clone());
+        }
         if !self.trace_out.is_empty() {
             put("trace_out", self.trace_out.clone());
         }
@@ -741,6 +779,9 @@ mod tests {
             ("preset", "oracle:quadratic"),
             ("n", "24"),
             ("topology", "random4"),
+            ("speeds", "bimodal:0.25:4"),
+            ("directed", "false"),
+            ("topology_schedule", "ring@0,torus@500"),
             ("interactions", "1234"),
             ("h", "2.5"),
             ("geometric", "true"),
@@ -778,6 +819,59 @@ mod tests {
         let back = RunConfig::from_ini(&d.to_ini()).unwrap();
         assert_eq!(format!("{back:?}"), format!("{d:?}"));
         assert_eq!(back.threads, 0);
+    }
+
+    #[test]
+    fn topology_key_validates_aliases_and_never_clobbers() {
+        let mut c = RunConfig::default();
+        c.set("topology", "regular4").unwrap();
+        assert_eq!(c.topology_enum().unwrap(), Topology::RandomRegular(4));
+        c.set("topology", "powerlaw").unwrap();
+        assert_eq!(c.topology_enum().unwrap(), Topology::PowerLaw(2));
+        c.set("topology", "powerlaw3").unwrap();
+        assert_eq!(c.topology_enum().unwrap(), Topology::PowerLaw(3));
+        let err = c.set("topology", "smallworld").unwrap_err();
+        assert!(err.contains("powerlaw"), "error should list known families: {err}");
+        assert_eq!(c.topology, "powerlaw3", "bad value must not clobber");
+    }
+
+    #[test]
+    fn speeds_key_validates_and_never_clobbers() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.speeds, "uniform");
+        c.set("speeds", "bimodal:0.25:4").unwrap();
+        assert_eq!(c.speeds, "bimodal:0.25:4");
+        c.set("speeds", "pareto:2.5").unwrap();
+        for bad in ["warp", "bimodal:2:4", "bimodal:0.5:0", "pareto:-1", "pareto:x"] {
+            let err = c.set("speeds", bad).unwrap_err();
+            assert!(
+                err.contains("speeds") || err.contains("bimodal") || err.contains("pareto"),
+                "unhelpful error for '{bad}': {err}"
+            );
+            assert_eq!(c.speeds, "pareto:2.5", "bad '{bad}' must not clobber");
+        }
+    }
+
+    #[test]
+    fn topology_schedule_key_validates_format() {
+        let mut c = RunConfig::default();
+        c.set("topology_schedule", "ring@0,torus@500").unwrap();
+        assert_eq!(c.topology_schedule, "ring@0,torus@500");
+        for bad in ["ring@5", "ring", "ring@0,torus@0", "nope@0", "torus@500,ring@0"] {
+            assert!(c.set("topology_schedule", bad).is_err(), "'{bad}' should be rejected");
+            assert_eq!(c.topology_schedule, "ring@0,torus@500");
+        }
+    }
+
+    #[test]
+    fn dirichlet_key_is_shard_sugar() {
+        let mut c = RunConfig::default();
+        c.set("dirichlet", "0.3").unwrap();
+        assert_eq!(c.shard, ShardMode::Dirichlet(0.3));
+        for bad in ["0", "-1", "nan", "skewed"] {
+            assert!(c.set("dirichlet", bad).is_err(), "'{bad}' should be rejected");
+            assert_eq!(c.shard, ShardMode::Dirichlet(0.3));
+        }
     }
 
     #[test]

@@ -36,6 +36,7 @@
 use crate::backend::Backend;
 use crate::netmodel::CostModel;
 use crate::rngx::Pcg64;
+use crate::scenario::Scenario;
 use crate::topology::Graph;
 
 /// The scheduling/locking class of one [`Event`] — what the executors
@@ -312,12 +313,17 @@ pub trait Algorithm: Sync {
 
     /// Pre-draw the complete event sequence for a run of `events` events on
     /// `n` nodes. All randomness must come from `rng` (the executor hands a
-    /// dedicated schedule stream), never from global state.
+    /// dedicated schedule stream), never from global state. Gossip pairs
+    /// come from the scenario ([`Scenario::sample_pair`] /
+    /// [`Scenario::sample_partner`] at the event's tick), so partner draws
+    /// honor the configured topology, its time schedule, and the per-node
+    /// speed classes — and under the default scenario they consume `rng`
+    /// byte-identically to the historical uniform-complete draws.
     fn schedule(
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule;
 
@@ -567,10 +573,10 @@ impl Algorithm for WithKernel {
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
-        self.inner.schedule(n, events, graph, rng)
+        self.inner.schedule(n, events, scn, rng)
     }
 
     fn interact(

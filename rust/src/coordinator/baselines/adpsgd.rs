@@ -18,7 +18,7 @@ use crate::coordinator::{
 };
 use crate::kernels;
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 #[derive(Clone, Copy, Debug)]
 pub struct AdPsgd {
@@ -42,13 +42,13 @@ impl Algorithm for AdPsgd {
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         assert!(n >= 2, "gossip needs n >= 2");
         let mut s = InteractionSchedule::new(n);
-        for _ in 0..events {
-            let (i, j) = graph.sample_edge(rng);
+        for t in 0..events {
+            let (i, j) = scn.sample_pair(t, rng);
             let seed = rng.next_u64();
             s.push_gossip(i, j, 1, 1, seed);
         }
@@ -128,7 +128,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     fn spec(n: usize, t: u64, eval_every: u64) -> RunSpec {
         RunSpec {

@@ -14,7 +14,7 @@ use crate::coordinator::algorithm::{
     InteractionSchedule, NodeState, StepCtx,
 };
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AllReduce;
@@ -28,7 +28,7 @@ impl Algorithm for AllReduce {
         &self,
         n: usize,
         events: u64,
-        _graph: &Graph,
+        _scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         let mut s = InteractionSchedule::new(n);
@@ -89,7 +89,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     #[test]
     fn allreduce_keeps_models_identical_and_converges() {

@@ -33,7 +33,7 @@ use crate::coordinator::{
 };
 use crate::kernels;
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 #[derive(Clone, Copy, Debug)]
 pub struct DPsgd {
@@ -56,20 +56,21 @@ impl Algorithm for DPsgd {
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         let mut s = InteractionSchedule::new(n);
-        for _ in 0..events {
+        for round in 0..events {
             let seed = rng.next_u64();
             for k in 0..n {
                 s.push_compute(k, 1, seed);
             }
             // pre-draw the matching from the round seed — bit-for-bit the
             // draw the monolithic round used to make at interact time, so
-            // phased schedules replay the identical mixing sequence
+            // phased schedules replay the identical mixing sequence — over
+            // the graph in force at this round's tick
             let mut er = Pcg64::seed(seed);
-            for &(u, v) in &graph.random_matching(&mut er) {
+            for &(u, v) in &scn.graph_at(round).random_matching(&mut er) {
                 s.push_pair_mix(u, v, seed);
             }
             s.push_mix((0..n).collect(), seed);
@@ -165,7 +166,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     #[test]
     fn dpsgd_converges_on_quadratic() {
@@ -247,7 +248,8 @@ mod tests {
         let mut rng = Pcg64::seed(4);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let mut srng = Pcg64::seed(9);
-        let s = DPsgd::default().schedule(n, 5, &graph, &mut srng);
+        let scn = Scenario::static_graph(graph);
+        let s = DPsgd::default().schedule(n, 5, &scn, &mut srng);
         assert_eq!(s.ticks, 5);
         let mut cursor = 0usize;
         for round in 0..5u64 {

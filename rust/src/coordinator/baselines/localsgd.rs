@@ -12,7 +12,7 @@ use crate::coordinator::algorithm::{
     InteractionSchedule, NodeState, StepCtx,
 };
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 #[derive(Clone, Copy, Debug)]
 pub struct LocalSgd {
@@ -29,7 +29,7 @@ impl Algorithm for LocalSgd {
         &self,
         n: usize,
         events: u64,
-        _graph: &Graph,
+        _scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         assert!(self.h >= 1, "localsgd needs h >= 1 (the factory rejects h=0)");
@@ -92,7 +92,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     #[test]
     fn localsgd_converges_and_communicates_less() {

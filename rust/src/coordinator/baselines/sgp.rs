@@ -27,7 +27,7 @@ use crate::coordinator::algorithm::{
 use crate::coordinator::{LocalSteps, MergeScratch, MixPolicy, PushSumPolicy, WireCodec};
 use crate::kernels;
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Sgp {
@@ -50,9 +50,13 @@ impl Algorithm for Sgp {
         &self,
         n: usize,
         events: u64,
-        _graph: &Graph,
+        _scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
+        // the push targets are graph-constrained at interact time
+        // (`ctx.graph.sample_neighbor` in the Mix phase — an out-neighbor
+        // draw on directed scenarios), so the schedule itself is just the
+        // round skeleton
         let mut s = InteractionSchedule::new(n);
         let h = vec![1; n];
         for _ in 0..events {
@@ -224,7 +228,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     fn setup(n: usize) -> (QuadraticOracle, Graph, CostModel) {
         let backend = QuadraticOracle::new(8, n, 1.0, 0.5, 2.0, 0.05, 3);

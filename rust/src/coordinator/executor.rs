@@ -59,6 +59,7 @@ use crate::analysis::gamma_potential;
 use crate::backend::Backend;
 use crate::netmodel::CostModel;
 use crate::rngx::Pcg64;
+use crate::scenario::Scenario;
 use crate::topology::Graph;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
@@ -92,7 +93,7 @@ struct Shared<'a> {
     algo: &'a dyn Algorithm,
     backend: &'a dyn Backend,
     cost: &'a CostModel,
-    graph: &'a Graph,
+    scn: &'a Scenario,
     lr: LrSchedule,
     events: &'a [Event],
     nodes: Vec<Mutex<NodeState>>,
@@ -121,7 +122,8 @@ impl Drop for AbortGuard<'_> {
 }
 
 /// Execute the run's schedule in program order on the calling thread — the
-/// discrete-event reference executor (`--executor serial`).
+/// discrete-event reference executor (`--executor serial`). Static-graph
+/// convenience wrapper over [`run_serial_scenario`].
 pub fn run_serial(
     algo: &dyn Algorithm,
     backend: &dyn Backend,
@@ -129,12 +131,13 @@ pub fn run_serial(
     graph: &Graph,
     cost: &CostModel,
 ) -> RunMetrics {
-    run_schedule(algo, backend, spec, graph, cost, 1, "serial")
+    run_serial_scenario(algo, backend, spec, &Scenario::static_graph(graph.clone()), cost)
 }
 
 /// Drain the identical schedule on `threads` shared-memory worker threads
 /// (`--executor parallel --threads K`). Metrics are bit-identical to
-/// [`run_serial`] at any thread count.
+/// [`run_serial`] at any thread count. Static-graph convenience wrapper
+/// over [`run_parallel_scenario`].
 pub fn run_parallel(
     algo: &dyn Algorithm,
     backend: &dyn Backend,
@@ -143,26 +146,61 @@ pub fn run_parallel(
     cost: &CostModel,
     threads: usize,
 ) -> RunMetrics {
+    run_parallel_scenario(
+        algo,
+        backend,
+        spec,
+        &Scenario::static_graph(graph.clone()),
+        cost,
+        threads,
+    )
+}
+
+/// [`run_serial`] under a full [`Scenario`] (graph schedule + speed
+/// classes). The default scenario reproduces the static-graph wrappers
+/// bit-for-bit.
+pub fn run_serial_scenario(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    scn: &Scenario,
+    cost: &CostModel,
+) -> RunMetrics {
+    run_schedule(algo, backend, spec, scn, cost, 1, "serial")
+}
+
+/// [`run_parallel`] under a full [`Scenario`]. Bit-identical to
+/// [`run_serial_scenario`] at any thread count for every scenario — the
+/// schedule (including its graph-constrained pairs) is pre-drawn before
+/// any thread starts.
+pub fn run_parallel_scenario(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    scn: &Scenario,
+    cost: &CostModel,
+    threads: usize,
+) -> RunMetrics {
     // no silent clamp: the config layer rejects an explicit threads=0 with
     // an actionable error, so a zero reaching this far is a caller bug
     assert!(threads >= 1, "run_parallel needs at least one worker thread");
-    run_schedule(algo, backend, spec, graph, cost, threads, "parallel")
+    run_schedule(algo, backend, spec, scn, cost, threads, "parallel")
 }
 
 fn run_schedule(
     algo: &dyn Algorithm,
     backend: &dyn Backend,
     spec: &RunSpec,
-    graph: &Graph,
+    scn: &Scenario,
     cost: &CostModel,
     threads: usize,
     label: &str,
 ) -> RunMetrics {
     assert!(spec.n >= 1, "need at least one node");
-    assert_eq!(spec.n, graph.n(), "spec n must match graph");
+    assert_eq!(spec.n, scn.n(), "spec n must match the scenario graph");
     let schedule = {
         let mut srng = Pcg64::stream(spec.seed, STREAM_SCHEDULE);
-        algo.schedule(spec.n, spec.events, graph, &mut srng)
+        algo.schedule(spec.n, spec.events, scn, &mut srng)
     };
     let dim = backend.dim();
     let (p0, m0) = backend.init();
@@ -180,7 +218,7 @@ fn run_schedule(
         algo,
         backend,
         cost,
-        graph,
+        scn,
         lr: spec.lr,
         events: &schedule.events,
         nodes,
@@ -336,7 +374,9 @@ fn execute_event(sh: &Shared<'_>, ev: &Event, scratch: &mut MergeScratch) {
     let ctx = StepCtx {
         backend: sh.backend,
         cost: sh.cost,
-        graph: sh.graph,
+        // interact-time neighbor draws (SGP's push targets) see the graph
+        // in force at the event's tick
+        graph: sh.scn.graph_at(ev.tick),
         // the paper numbers interactions/rounds from 1
         lr: sh.lr.at(ev.tick + 1),
         dim: sh.dim,
@@ -485,10 +525,11 @@ mod tests {
     fn schedule_is_deterministic_and_sequenced() {
         let algo = swarm(AveragingMode::NonBlocking);
         let g = graph(8);
+        let scn = Scenario::static_graph(g);
         let mut r1 = Pcg64::stream(9, STREAM_SCHEDULE);
         let mut r2 = Pcg64::stream(9, STREAM_SCHEDULE);
-        let a = algo.schedule(8, 500, &g, &mut r1);
-        let b = algo.schedule(8, 500, &g, &mut r2);
+        let a = algo.schedule(8, 500, &scn, &mut r1);
+        let b = algo.schedule(8, 500, &scn, &mut r2);
         assert_eq!(a.events, b.events);
         assert_eq!(a.per_node, b.per_node);
         // seq tokens count each node's events in order

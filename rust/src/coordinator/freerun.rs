@@ -13,12 +13,14 @@
 //!   (no locks on node state, ever); everything cross-worker flows through
 //!   the slots.
 //! * **Live Poisson clocks** — each worker keeps a clock heap over its own
-//!   nodes (rate-1 exponential inter-arrival, the paper's §2 model). When a
-//!   node rings, the worker picks a uniform random neighbor *at that
-//!   moment* and runs the interaction — partners are chosen on the fly, not
-//!   replayed. Each worker executes an event quota proportional to the
-//!   nodes it owns, so per-node initiation rates stay uniform even when
-//!   the shard deal is uneven or workers run at different speeds.
+//!   nodes (exponential inter-arrival at the node's [`Scenario`] rate;
+//!   rate 1 under uniform speeds, the paper's §2 model). When a node
+//!   rings, the worker picks a uniform random neighbor in the scenario's
+//!   active graph stage *at that moment* and runs the interaction —
+//!   partners are chosen on the fly, not replayed. Each worker executes
+//!   an event quota proportional to the nodes it owns, so per-node
+//!   initiation rates follow the scenario's speed model even when the
+//!   shard deal is uneven or workers run at different speeds.
 //! * **Non-blocking model slots** — every node publishes its
 //!   [`SlotPayload`] into a seqlock-style versioned double buffer
 //!   (`ModelSlot`, generic over the payload: [`PlainModel`] snapshots
@@ -66,6 +68,7 @@ use crate::backend::Backend;
 use crate::netmodel::CostModel;
 use crate::obs::{self, ObsOptions, Sampler, SpanKind, TraceDrain, TraceRing};
 use crate::rngx::Pcg64;
+use crate::scenario::Scenario;
 use crate::topology::Graph;
 use std::cell::UnsafeCell;
 use std::cmp::Reverse;
@@ -180,7 +183,7 @@ impl<P: SlotPayload> ModelSlot<P> {
 struct FreeShared<'a, P: SlotPayload> {
     backend: &'a dyn Backend,
     cost: &'a CostModel,
-    graph: &'a Graph,
+    scn: &'a Scenario,
     lr: LrSchedule,
     policy: &'a dyn MixPolicy,
     /// fused merge-kernel implementation every worker's scratch dispatches to
@@ -350,6 +353,29 @@ pub fn run_freerun_with_obs(
     shards: usize,
     obs: &ObsOptions,
 ) -> RunMetrics {
+    let scn = Scenario::static_graph(graph.clone());
+    run_freerun_scenario(algo, backend, spec, &scn, cost, threads, shards, obs)
+}
+
+/// Scenario-aware free-running entry point: like [`run_freerun_with_obs`]
+/// but taking the whole [`Scenario`] (topology stages, per-node speed
+/// classes) instead of a single static graph. Partner draws honor the
+/// graph stage active at each event's global index, and each node's
+/// Poisson clock runs at its scenario rate, so speed classes turn into
+/// *structural* stragglers: slow nodes ring less often, their slots go
+/// stale, and the staleness histogram shows it. A uniform static-graph
+/// scenario is byte-for-byte the [`run_freerun_with_obs`] hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_freerun_scenario(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    scn: &Scenario,
+    cost: &CostModel,
+    threads: usize,
+    shards: usize,
+    obs: &ObsOptions,
+) -> RunMetrics {
     let policy = algo.mix_policy().unwrap_or_else(|| {
         panic!(
             "--executor freerun requires a MixPolicy (freerun-eligible: swarm, \
@@ -365,7 +391,7 @@ pub fn run_freerun_with_obs(
             policy.as_ref(),
             backend,
             spec,
-            graph,
+            scn,
             cost,
             threads,
             shards,
@@ -376,7 +402,7 @@ pub fn run_freerun_with_obs(
             policy.as_ref(),
             backend,
             spec,
-            graph,
+            scn,
             cost,
             threads,
             shards,
@@ -385,19 +411,20 @@ pub fn run_freerun_with_obs(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn freerun_with<P: SlotPayload>(
     algo: &dyn Algorithm,
     policy: &dyn MixPolicy,
     backend: &dyn Backend,
     spec: &RunSpec,
-    graph: &Graph,
+    scn: &Scenario,
     cost: &CostModel,
     threads: usize,
     shards: usize,
     obs: &ObsOptions,
 ) -> RunMetrics {
     assert!(spec.n >= 2, "gossip needs n >= 2");
-    assert_eq!(spec.n, graph.n(), "spec n must match graph");
+    assert_eq!(spec.n, scn.n(), "spec n must match the scenario's graph");
     assert!(threads >= 1, "freerun needs at least one worker thread");
     let shards = shards.clamp(1, spec.n);
     let n = spec.n;
@@ -418,7 +445,7 @@ fn freerun_with<P: SlotPayload>(
     let sh = FreeShared {
         backend,
         cost,
-        graph,
+        scn,
         lr: spec.lr,
         policy,
         kernel: algo.kernel(),
@@ -659,9 +686,11 @@ fn worker_loop<P: SlotPayload>(
         return res;
     }
     let mut rng = Pcg64::stream(seed, STREAM_WORKER_BASE + wid as u64);
+    // each owned node's clock runs at its scenario rate (1.0 under uniform
+    // speeds — the legacy rate-1 Poisson model, byte-identical draws)
     let mut heap: BinaryHeap<Reverse<Tick>> = BinaryHeap::new();
     for ix in 0..owned.len() {
-        heap.push(Reverse(Tick { at: rng.exponential(1.0), ix }));
+        heap.push(Reverse(Tick { at: rng.exponential(sh.scn.rate(owned[ix].0)), ix }));
     }
     let lanes = P::lanes(sh.dim);
     // worker-local merge scratch: the node's own published payload, the
@@ -694,12 +723,15 @@ fn worker_loop<P: SlotPayload>(
             res.read_retries += own_retries;
             sh.policy.absorb_own_slot(st, &scratch.own, sh.dim);
         }
-        let partner = sh.graph.sample_neighbor(node, &mut rng);
+        // partner draw honors the graph stage active at this event's
+        // global index (static scenarios resolve to the one graph)
+        let graph = sh.scn.graph_at(t);
+        let partner = graph.sample_neighbor(node, &mut rng);
         let h = sh.policy.draw_steps(&mut rng);
         let ctx = StepCtx {
             backend: sh.backend,
             cost: sh.cost,
-            graph: sh.graph,
+            graph,
             lr: sh.lr.at(t + 1),
             dim: sh.dim,
             n: sh.n,
@@ -764,8 +796,8 @@ fn worker_loop<P: SlotPayload>(
                 lv.push_conflicts.fetch_add(1, Ordering::Relaxed);
             }
         }
-        // re-arm this node's Poisson clock
-        heap.push(Reverse(Tick { at: at + rng.exponential(1.0), ix }));
+        // re-arm this node's Poisson clock at its scenario rate
+        heap.push(Reverse(Tick { at: at + rng.exponential(sh.scn.rate(node)), ix }));
         sh.done.fetch_add(1, Ordering::Release);
         let dt = started.elapsed().as_secs_f64();
         res.activity.busy_secs += (dt - sync_secs).max(0.0);

@@ -65,8 +65,10 @@ pub use algorithm::{
 };
 pub use cluster::{average_into_both, midpoint, nonblocking_update, quantized_transfer};
 pub use engine::NodeClocks;
-pub use executor::{run_parallel, run_serial, RunSpec};
-pub use freerun::{run_freerun, run_freerun_with_obs};
+pub use executor::{
+    run_parallel, run_parallel_scenario, run_serial, run_serial_scenario, RunSpec,
+};
+pub use freerun::{run_freerun, run_freerun_scenario, run_freerun_with_obs};
 pub use metrics::{CurvePoint, RunMetrics};
 pub use poisson::PoissonSwarm;
 pub use crate::kernels::Kernel;

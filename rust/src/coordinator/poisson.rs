@@ -14,7 +14,7 @@
 use super::algorithm::{Algorithm, Event, EventOutcome, InteractionSchedule, NodeState, StepCtx};
 use super::swarm::{AveragingMode, LocalSteps, SwarmSgd};
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -58,27 +58,31 @@ impl Algorithm for PoissonSwarm {
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         assert!(n >= 2, "gossip needs n >= 2");
         let mut s = InteractionSchedule::new(n);
         let mut heap: BinaryHeap<Reverse<Ring>> = BinaryHeap::new();
-        // every node's clock rings at rate 1 (arbitrary time unit)
+        // every node's clock rings at its scenario rate (1 under uniform
+        // speeds — the same exponential(1.0) draw as always, bit-for-bit;
+        // a speed class makes stragglers *structural*: a slow node's clock
+        // is slow for the whole run)
         for node in 0..n {
-            let dt = rng.exponential(1.0);
+            let dt = rng.exponential(scn.rate(node));
             heap.push(Reverse(Ring { at: dt, node }));
         }
-        for _ in 0..events {
+        for t in 0..events {
             let Reverse(Ring { at, node: i }) = heap.pop().expect("heap never empty");
-            // initiator wakes and picks a uniform random neighbor
-            let j = graph.sample_neighbor(i, rng);
+            // initiator wakes and picks a uniform random neighbor in the
+            // graph in force at this tick
+            let j = scn.sample_partner(i, t, rng);
             let hi = self.inner.local_steps.sample(rng);
             let hj = self.inner.local_steps.sample(rng);
             let seed = rng.next_u64();
             s.push_gossip(i, j, hi, hj, seed);
             // re-arm i's Poisson clock
-            let dt = rng.exponential(1.0);
+            let dt = rng.exponential(scn.rate(i));
             heap.push(Reverse(Ring { at: at + dt, node: i }));
         }
         s
@@ -119,7 +123,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec, SwarmSgd};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     fn algo() -> PoissonSwarm {
         PoissonSwarm::new(LocalSteps::Fixed(2), AveragingMode::NonBlocking)
@@ -134,7 +138,8 @@ mod tests {
         let mut rng = Pcg64::seed(5);
         let graph = Graph::build(Topology::Complete, n, &mut rng);
         let mut srng = Pcg64::stream(1, 77);
-        let sched = algo().schedule(n, 28_000, &graph, &mut srng);
+        let scn = Scenario::static_graph(graph.clone());
+        let sched = algo().schedule(n, 28_000, &scn, &mut srng);
         let mut counts = std::collections::HashMap::new();
         for ev in &sched.events {
             let (i, j) = (ev.nodes[0], ev.nodes[1]);

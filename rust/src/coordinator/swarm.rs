@@ -27,7 +27,7 @@ use super::algorithm::{
 use super::policy::MergeScratch;
 use crate::kernels;
 use crate::rngx::Pcg64;
-use crate::topology::Graph;
+use crate::scenario::Scenario;
 
 /// Distribution of the number of local SGD steps between interactions.
 #[derive(Clone, Copy, Debug)]
@@ -202,13 +202,16 @@ impl Algorithm for SwarmSgd {
         &self,
         n: usize,
         events: u64,
-        graph: &Graph,
+        scn: &Scenario,
         rng: &mut Pcg64,
     ) -> InteractionSchedule {
         assert!(n >= 2, "gossip needs n >= 2");
         let mut s = InteractionSchedule::new(n);
-        for _ in 0..events {
-            let (i, j) = graph.sample_edge(rng);
+        for t in 0..events {
+            // scenario-constrained pair: the graph in force at tick t, with
+            // rate-weighted initiators under a speed class (the uniform
+            // default is the historical edge draw, bit-for-bit)
+            let (i, j) = scn.sample_pair(t, rng);
             let hi = self.local_steps.sample(rng);
             let hj = self.local_steps.sample(rng);
             let seed = rng.next_u64();
@@ -261,7 +264,7 @@ mod tests {
     use crate::coordinator::{run_serial, LrSchedule, RunSpec};
     use crate::grad::QuadraticOracle;
     use crate::netmodel::CostModel;
-    use crate::topology::Topology;
+    use crate::topology::{Graph, Topology};
 
     fn graph(n: usize) -> Graph {
         let mut rng = Pcg64::seed(5);

@@ -119,6 +119,41 @@
 //! executors through their phased compute events but return no policy and
 //! refuse `--executor freerun` with an actionable error.
 //!
+//! # The Scenario axis
+//!
+//! Every executor runs *under a scenario* ([`scenario::Scenario`]): the
+//! heterogeneity model the paper's analysis actually quantifies over,
+//! resolved once from config and threaded through all four drivers.
+//!
+//! * **Topology** (`--topology complete|ring|torus|hypercube|regular<r>|
+//!   powerlaw`, `--directed` for push-sum orientations): gossip partners
+//!   are sampled from the configured graph's edge set everywhere — the
+//!   replay executors pre-draw graph-constrained pairs (serial ≡ parallel
+//!   stays bit-identical under every topology), freerun workers sample
+//!   neighbors from their private streams, and the cluster gossip plane
+//!   dials only graph edges. Infeasible topology/n combinations (torus
+//!   needs square n, hypercube a power of two, regular n·r even) are
+//!   rejected at config time with actionable errors, and `lambda2`
+//!   reports exactly 0.0 for disconnected graphs.
+//! * **Speed classes** (`--speeds uniform|bimodal:<frac>:<slowdown>|
+//!   pareto:<alpha>`): per-node Poisson clock rates, so stragglers are
+//!   *structural* — the replay executors weight initiator draws by rate,
+//!   freerun/cluster workers scale their clock-arm exponentials — unlike
+//!   the cost model's i.i.d. per-step straggler coin.
+//! * **Data skew** (`--dirichlet <alpha>`, sugar for
+//!   `shard=dirichlet:<alpha>`): Dirichlet-α non-iid label sharding from
+//!   [`data::dirichlet_shards`].
+//! * **Dynamic graphs** (`topology_schedule=ring@0,torus@5000,...`): an
+//!   epoch-indexed graph schedule; each event samples from the graph in
+//!   force at its tick.
+//!
+//! The default scenario (complete graph, uniform speeds, static topology)
+//! consumes RNG streams byte-identically to the pre-scenario executors, so
+//! all committed goldens still pin today's bits.
+//! `benches/bench_scenario.rs` sweeps the topology × algorithm matrix and
+//! emits `BENCH_scenario.json` (convergence vs staleness p99 vs spectral
+//! gap per topology).
+//!
 //! # Observability
 //!
 //! The [`obs`] module is the cross-cutting layer that makes a run's
@@ -167,4 +202,5 @@ pub mod output;
 pub mod quant;
 pub mod rngx;
 pub mod runtime;
+pub mod scenario;
 pub mod topology;

@@ -24,15 +24,16 @@ use swarm_sgd::cli::{Cli, USAGE};
 use swarm_sgd::cluster::{self, ClusterOpts, Role};
 use swarm_sgd::config::RunConfig;
 use swarm_sgd::coordinator::{
-    make_algorithm, run_freerun_with_obs, run_parallel, run_serial, AlgoOptions, Algorithm,
-    RunMetrics, RunSpec,
+    make_algorithm, run_freerun_scenario, run_parallel_scenario, run_serial_scenario,
+    AlgoOptions, Algorithm, RunMetrics, RunSpec,
 };
 use swarm_sgd::figures::{run_figure, write_curves};
 use swarm_sgd::obs;
 use swarm_sgd::output::Table;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::runtime::load_manifest;
-use swarm_sgd::topology::Graph;
+use swarm_sgd::scenario::Scenario;
+use swarm_sgd::topology::{spectral_gap, Graph};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -80,6 +81,11 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         "wire",
         "kernel",
         "workers",
+        "topology",
+        "speeds",
+        "directed",
+        "dirichlet",
+        "topology-schedule",
         "trace-out",
         "trace-sample",
         "metrics-out",
@@ -128,15 +134,30 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         },
     )?;
     let backend = build_backend(&cfg)?;
-    let mut rng = Pcg64::seed(cfg.seed);
-    let graph = Graph::build(cfg.topology_enum()?, cfg.n, &mut rng);
+    // the scenario resolves the whole run environment — topology stages,
+    // per-node speed classes, directedness — and rejects infeasible combos
+    // (torus on a non-square n, hypercube off a power of two, ...) here
+    let scn = Scenario::from_config(&cfg)?;
+    let g0 = scn.graph0();
     println!(
-        "topology: {} n={} degree={:?} lambda2={:.4}",
+        "topology: {} n={} degree={:?} lambda2={:.4} spectral_gap={:.4}{}",
         cfg.topology,
         cfg.n,
-        graph.regular_degree(),
-        graph.lambda2()
+        g0.regular_degree(),
+        g0.lambda2(),
+        spectral_gap(g0),
+        if g0.is_directed() { " (directed)" } else { "" }
     );
+    if scn.is_time_varying() {
+        println!(
+            "topology schedule: {} stage(s) ({})",
+            scn.stages().len(),
+            cfg.topology_schedule
+        );
+    }
+    if !scn.uniform_speeds() {
+        println!("speed classes: {} (rate-weighted Poisson clocks)", cfg.speeds);
+    }
     let cost = cfg.cost_model();
     let spec = RunSpec {
         n: cfg.n,
@@ -166,7 +187,7 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
                 "parallel executor: {} worker thread(s), algorithm={} n={} topology={}",
                 threads, cfg.algo, cfg.n, cfg.topology
             );
-            run_parallel(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost, threads)
+            run_parallel_scenario(algo.as_ref(), backend.as_ref(), &spec, &scn, &cost, threads)
         }
         "freerun" => {
             if algo.mix_policy().is_none() {
@@ -185,18 +206,18 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
                  algorithm={} n={} topology={} (non-replayable)",
                 threads, shards, cfg.algo, cfg.n, cfg.topology
             );
-            run_freerun_with_obs(
+            run_freerun_scenario(
                 algo.as_ref(),
                 backend.as_ref(),
                 &spec,
-                &graph,
+                &scn,
                 &cost,
                 threads,
                 shards,
                 &cfg.obs_options(),
             )
         }
-        _ => run_serial(algo.as_ref(), backend.as_ref(), &spec, &graph, &cost),
+        _ => run_serial_scenario(algo.as_ref(), backend.as_ref(), &spec, &scn, &cost),
     };
     let wall = started.elapsed();
     println!(
@@ -365,14 +386,19 @@ fn cmd_topo(cli: &Cli) -> Result<(), String> {
         topology: cli.get_or("topology", "complete"),
         ..RunConfig::default()
     };
+    let topo = cfg.topology_enum()?;
+    // same feasibility gate the scenario applies before a training run
+    topo.validate(n)?;
     let mut rng = Pcg64::seed(1);
-    let g = Graph::build(cfg.topology_enum()?, n, &mut rng);
+    let g = Graph::build(topo, n, &mut rng);
     let r = g.regular_degree().unwrap_or(0) as f64;
     let l2 = g.lambda2();
     println!("topology {} n={n}", cfg.topology);
-    println!("  degree r        = {r}");
+    println!("  degree r        = {:?}", g.regular_degree());
     println!("  edges           = {}", g.edges().len());
+    println!("  connected       = {}", g.is_connected());
     println!("  lambda2         = {l2:.6}");
+    println!("  spectral gap    = {:.6}  (0 iff disconnected)", spectral_gap(&g));
     println!(
         "  r^2/lambda2^2+1 = {:.4}  (theorem topology factor)",
         r * r / (l2 * l2) + 1.0

@@ -1,0 +1,465 @@
+//! The scenario layer: *which* pairs gossip, *how fast* each node's clock
+//! ticks, and *when* the graph itself changes.
+//!
+//! A [`Scenario`] bundles the three heterogeneity axes the paper's claims
+//! cover but a uniform-pairing simulator cannot exercise:
+//!
+//! * **graph-constrained partner sampling** — gossip pairs are edges of a
+//!   configured topology (`--topology complete|ring|torus|hypercube|
+//!   regular<r>|powerlaw`, plus directed orientations for push-sum),
+//!   optionally **time-varying** via an epoch-indexed graph schedule
+//!   (`topology_schedule = ring@0,torus@5000,...`);
+//! * **per-node speed classes** (`--speeds uniform|bimodal:<frac>:
+//!   <slowdown>|pareto:<alpha>`) mapped onto Poisson clock rates, so
+//!   stragglers are *structural* — a slow node is slow for the whole run —
+//!   rather than the cost model's i.i.d. per-step coin flips;
+//! * **data heterogeneity** rides on the existing `shard` key
+//!   (`--dirichlet <alpha>` is sugar for `shard=dirichlet:<alpha>`), kept
+//!   in [`crate::data::dirichlet_shards`].
+//!
+//! Every executor consumes the same `Scenario`: the replay executors
+//! (serial/parallel) thread it through schedule pre-drawing — and the
+//! **default scenario (uniform speeds, static undirected graph) consumes
+//! the caller's RNG byte-for-byte identically to the legacy direct-graph
+//! path**, which is what keeps the committed monolithic goldens and the
+//! serial ≡ parallel bit-equality contract intact. The freerun and cluster
+//! executors sample partners per worker from their own private streams (no
+//! global RNG bottleneck) and scale their Poisson clocks by the node rate.
+
+use crate::config::RunConfig;
+use crate::rngx::Pcg64;
+use crate::topology::{Graph, Topology};
+
+/// Dedicated stream tag for scenario-level draws (per-node speed rates),
+/// disjoint from the schedule/node/eval/worker stream tags so enabling a
+/// speed class never perturbs any other stream.
+pub const STREAM_SCENARIO: u64 = 0x5EED_5CE0_0000_0004;
+
+/// Per-node speed classes (`--speeds`), resolved to Poisson clock rates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpeedClass {
+    /// every node at rate 1 (the paper's identical-clocks model)
+    Uniform,
+    /// a fraction of nodes runs `slowdown`× slower (rate 1/slowdown)
+    Bimodal { frac: f64, slowdown: f64 },
+    /// heavy-tailed per-node slowdowns: s = (1-u)^(-1/alpha), rate = 1/s
+    Pareto { alpha: f64 },
+}
+
+impl SpeedClass {
+    /// Parse `uniform | bimodal:<frac>:<slowdown> | pareto:<alpha>`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "uniform" {
+            return Ok(SpeedClass::Uniform);
+        }
+        if let Some(rest) = s.strip_prefix("bimodal:") {
+            let (f, sd) = rest
+                .split_once(':')
+                .ok_or_else(|| bimodal_err(s, "missing the slowdown part"))?;
+            let frac: f64 = f.parse().map_err(|_| bimodal_err(s, "bad fraction"))?;
+            let slowdown: f64 = sd.parse().map_err(|_| bimodal_err(s, "bad slowdown"))?;
+            if !(0.0..=1.0).contains(&frac) || !frac.is_finite() {
+                return Err(bimodal_err(s, "fraction must be in [0, 1]"));
+            }
+            if !slowdown.is_finite() || slowdown < 1.0 {
+                return Err(bimodal_err(s, "slowdown must be >= 1"));
+            }
+            return Ok(SpeedClass::Bimodal { frac, slowdown });
+        }
+        if let Some(a) = s.strip_prefix("pareto:") {
+            let alpha: f64 = a
+                .parse()
+                .map_err(|_| format!("bad speeds 'pareto:{a}': alpha must be a number"))?;
+            if !alpha.is_finite() || alpha <= 0.0 {
+                return Err(format!(
+                    "bad speeds '{s}': pareto alpha must be > 0 (smaller alpha = \
+                     heavier straggler tail; try pareto:2.5)"
+                ));
+            }
+            return Ok(SpeedClass::Pareto { alpha });
+        }
+        Err(format!(
+            "unknown speeds '{s}' (want uniform, bimodal:<frac>:<slowdown>, \
+             or pareto:<alpha>)"
+        ))
+    }
+
+    /// Resolve to per-node Poisson clock rates. Non-uniform classes draw
+    /// from `rng` (callers pass the dedicated [`STREAM_SCENARIO`] stream);
+    /// `Uniform` consumes nothing.
+    pub fn rates(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        match *self {
+            SpeedClass::Uniform => vec![1.0; n],
+            SpeedClass::Bimodal { frac, slowdown } => {
+                // structural assignment: a deterministic node *count*, with
+                // membership shuffled so slow nodes land anywhere in the id
+                // (and therefore shard) space
+                let slow = ((n as f64) * frac).round() as usize;
+                let mut ids: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut ids);
+                let mut rates = vec![1.0; n];
+                for &i in ids.iter().take(slow) {
+                    rates[i] = 1.0 / slowdown;
+                }
+                rates
+            }
+            SpeedClass::Pareto { alpha } => (0..n)
+                .map(|_| {
+                    // inverse-CDF Pareto(1, alpha) slowdown
+                    let u = rng.f64();
+                    let slowdown = (1.0 - u).max(1e-12).powf(-1.0 / alpha);
+                    1.0 / slowdown
+                })
+                .collect(),
+        }
+    }
+}
+
+fn bimodal_err(s: &str, why: &str) -> String {
+    format!("bad speeds '{s}': {why} (want bimodal:<frac>:<slowdown>, e.g. bimodal:0.25:4)")
+}
+
+/// Parse a `topology_schedule` value: comma-separated `<topology>@<tick>`
+/// stages, first at tick 0, ticks strictly increasing.
+pub fn parse_topology_schedule(s: &str) -> Result<Vec<(u64, Topology)>, String> {
+    let mut stages = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let (name, tick) = part.split_once('@').ok_or_else(|| {
+            format!(
+                "bad topology_schedule stage '{part}' (want <topology>@<tick>, \
+                 e.g. ring@0,torus@5000)"
+            )
+        })?;
+        let tick: u64 = tick
+            .parse()
+            .map_err(|_| format!("bad topology_schedule tick in '{part}'"))?;
+        stages.push((tick, Topology::parse(name)?));
+    }
+    if stages.is_empty() {
+        return Err("topology_schedule needs at least one <topology>@<tick> stage".into());
+    }
+    if stages[0].0 != 0 {
+        return Err(format!(
+            "topology_schedule must start at tick 0 (first stage starts at \
+             {} — the run would have no graph before it)",
+            stages[0].0
+        ));
+    }
+    if stages.windows(2).any(|w| w[1].0 <= w[0].0) {
+        return Err("topology_schedule ticks must be strictly increasing".into());
+    }
+    Ok(stages)
+}
+
+/// One resolved scenario: the tick-indexed graph schedule plus per-node
+/// clock rates, shared by all four executors.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// graph stages sorted by start tick; the first always starts at 0
+    graphs: Vec<(u64, Graph)>,
+    /// per-node Poisson clock rates (all 1.0 under uniform speeds)
+    rates: Vec<f64>,
+    /// cumulative rate sums for rate-weighted initiator sampling; None
+    /// under uniform speeds (the legacy edge-uniform draw is used instead)
+    cdf: Option<Vec<f64>>,
+    speeds: SpeedClass,
+}
+
+impl Scenario {
+    /// The legacy single-graph scenario: uniform speeds, static topology.
+    /// Wrapping a graph this way reproduces the pre-scenario executors'
+    /// RNG consumption exactly.
+    pub fn static_graph(graph: Graph) -> Self {
+        let n = graph.n();
+        Scenario {
+            graphs: vec![(0, graph)],
+            rates: vec![1.0; n],
+            cdf: None,
+            speeds: SpeedClass::Uniform,
+        }
+    }
+
+    /// Resolve the scenario a config describes: validate topology/n
+    /// feasibility (actionable errors, not panics), build the graph
+    /// schedule, and draw per-node speed rates from the dedicated
+    /// [`STREAM_SCENARIO`] stream of `cfg.seed`.
+    pub fn from_config(cfg: &RunConfig) -> Result<Self, String> {
+        let n = cfg.n;
+        let stages: Vec<(u64, Topology)> = if cfg.topology_schedule.is_empty() {
+            vec![(0, cfg.topology_enum()?)]
+        } else {
+            parse_topology_schedule(&cfg.topology_schedule)?
+        };
+        for &(tick, topo) in &stages {
+            topo.validate(n)
+                .map_err(|e| format!("topology stage at tick {tick}: {e}"))?;
+        }
+        if cfg.directed {
+            if cfg.algo != "sgp" {
+                return Err(format!(
+                    "directed=true needs push-sum (algorithm sgp) — '{}' gossips \
+                     symmetrically and cannot mix over one-way arcs",
+                    cfg.algo
+                ));
+            }
+            for &(tick, topo) in &stages {
+                if !matches!(topo, Topology::Complete | Topology::Ring | Topology::Torus) {
+                    return Err(format!(
+                        "directed=true needs an orientable topology (complete, \
+                         ring, or torus); stage at tick {tick} is {topo:?}"
+                    ));
+                }
+            }
+        }
+        // graph construction consumes Pcg64::seed(cfg.seed) exactly like the
+        // legacy single-graph path, so a one-stage undirected scenario is
+        // bit-identical to the pre-scenario executors
+        let mut grng = Pcg64::seed(cfg.seed);
+        let graphs: Vec<(u64, Graph)> = stages
+            .into_iter()
+            .map(|(tick, topo)| {
+                let g = if cfg.directed {
+                    Graph::build_directed(topo, n)
+                } else {
+                    Graph::build(topo, n, &mut grng)
+                };
+                (tick, g)
+            })
+            .collect();
+        let speeds = SpeedClass::parse(&cfg.speeds)?;
+        let rates = speeds.rates(n, &mut Pcg64::stream(cfg.seed, STREAM_SCENARIO));
+        let cdf = (speeds != SpeedClass::Uniform).then(|| {
+            let mut acc = 0.0;
+            rates
+                .iter()
+                .map(|r| {
+                    acc += r;
+                    acc
+                })
+                .collect()
+        });
+        Ok(Scenario { graphs, rates, cdf, speeds })
+    }
+
+    pub fn n(&self) -> usize {
+        self.graphs[0].1.n()
+    }
+
+    /// The graph in force at logical tick `t` (the last stage whose start
+    /// tick is <= t).
+    pub fn graph_at(&self, t: u64) -> &Graph {
+        let ix = self.graphs.partition_point(|&(start, _)| start <= t);
+        &self.graphs[ix - 1].1
+    }
+
+    /// The initial graph (tick 0) — what run setup prints and what the
+    /// cluster executor's static gossip plane uses.
+    pub fn graph0(&self) -> &Graph {
+        &self.graphs[0].1
+    }
+
+    /// All graph stages, for telemetry/benches.
+    pub fn stages(&self) -> &[(u64, Graph)] {
+        &self.graphs
+    }
+
+    pub fn is_time_varying(&self) -> bool {
+        self.graphs.len() > 1
+    }
+
+    pub fn speeds(&self) -> SpeedClass {
+        self.speeds
+    }
+
+    pub fn uniform_speeds(&self) -> bool {
+        self.cdf.is_none()
+    }
+
+    /// Poisson clock rate of `node` (1.0 under uniform speeds).
+    #[inline]
+    pub fn rate(&self, node: usize) -> f64 {
+        self.rates[node]
+    }
+
+    /// Sample a gossip partner for `node` at tick `t` — a uniform neighbor
+    /// in the graph in force (an out-neighbor on directed graphs).
+    #[inline]
+    pub fn sample_partner(&self, node: usize, t: u64, rng: &mut Pcg64) -> usize {
+        self.graph_at(t).sample_neighbor(node, rng)
+    }
+
+    /// Sample one gossip pair at tick `t`. Under uniform speeds this is
+    /// **exactly** the legacy uniform edge draw (same single RNG call), so
+    /// default scenarios replay bit-identically; under a speed class the
+    /// *initiator* is drawn rate-weighted (fast nodes fire more often —
+    /// the Poisson-clock race the freerun executor realizes physically)
+    /// and the partner uniformly among its neighbors.
+    pub fn sample_pair(&self, t: u64, rng: &mut Pcg64) -> (usize, usize) {
+        let g = self.graph_at(t);
+        match &self.cdf {
+            None => g.sample_edge(rng),
+            Some(cdf) => {
+                let total = *cdf.last().expect("non-empty scenario");
+                let u = rng.f64() * total;
+                let i = cdf.partition_point(|&c| c <= u).min(self.rates.len() - 1);
+                (i, g.sample_neighbor(i, rng))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pairs: &[(&str, &str)]) -> RunConfig {
+        let mut c = RunConfig::default();
+        for (k, v) in pairs {
+            c.set(k, v).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn speed_class_parses() {
+        assert_eq!(SpeedClass::parse("uniform").unwrap(), SpeedClass::Uniform);
+        assert_eq!(
+            SpeedClass::parse("bimodal:0.25:4").unwrap(),
+            SpeedClass::Bimodal { frac: 0.25, slowdown: 4.0 }
+        );
+        assert_eq!(
+            SpeedClass::parse("pareto:2.5").unwrap(),
+            SpeedClass::Pareto { alpha: 2.5 }
+        );
+        for bad in ["fast", "bimodal:0.25", "bimodal:1.5:2", "bimodal:0.5:0.5", "pareto:0"] {
+            assert!(SpeedClass::parse(bad).is_err(), "'{bad}' should fail");
+        }
+    }
+
+    #[test]
+    fn bimodal_rates_have_exact_slow_count() {
+        let mut rng = Pcg64::stream(7, STREAM_SCENARIO);
+        let rates = SpeedClass::Bimodal { frac: 0.25, slowdown: 4.0 }.rates(16, &mut rng);
+        assert_eq!(rates.iter().filter(|&&r| r == 0.25).count(), 4);
+        assert_eq!(rates.iter().filter(|&&r| r == 1.0).count(), 12);
+    }
+
+    #[test]
+    fn pareto_rates_are_heavy_tailed_slowdowns() {
+        let mut rng = Pcg64::stream(7, STREAM_SCENARIO);
+        let rates = SpeedClass::Pareto { alpha: 2.0 }.rates(2000, &mut rng);
+        // all slowdowns >= 1 → all rates in (0, 1]
+        assert!(rates.iter().all(|&r| r > 0.0 && r <= 1.0 + 1e-12));
+        // heavy tail: some node is at least 3x slower
+        assert!(rates.iter().any(|&r| r < 1.0 / 3.0));
+        // ...but the typical node is near full speed (median slowdown 2^(1/α))
+        let near_full = rates.iter().filter(|&&r| r > 0.5).count();
+        assert!(near_full > 1000, "{near_full}");
+    }
+
+    #[test]
+    fn default_scenario_is_bit_compatible_with_legacy_graph_path() {
+        let c = cfg(&[("topology", "ring"), ("n", "16")]);
+        let scn = Scenario::from_config(&c).unwrap();
+        // the legacy path: seed rng, build graph, then keep drawing
+        let mut legacy = Pcg64::seed(c.seed);
+        let g = Graph::build(Topology::Ring, 16, &mut legacy);
+        // identical graph
+        assert_eq!(scn.graph0().edges(), g.edges());
+        // identical pair-draw consumption
+        let mut a = Pcg64::seed(99);
+        let mut b = Pcg64::seed(99);
+        for t in 0..200 {
+            assert_eq!(scn.sample_pair(t, &mut a), g.sample_edge(&mut b));
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "stream positions must agree");
+        assert!(scn.uniform_speeds());
+        assert!(!scn.is_time_varying());
+    }
+
+    #[test]
+    fn from_config_rejects_infeasible_topology_with_actionable_error() {
+        let e = Scenario::from_config(&cfg(&[("topology", "torus"), ("n", "10")])).unwrap_err();
+        assert!(e.contains("square"), "{e}");
+        let e =
+            Scenario::from_config(&cfg(&[("topology", "hypercube"), ("n", "12")])).unwrap_err();
+        assert!(e.contains("power of two"), "{e}");
+        let e =
+            Scenario::from_config(&cfg(&[("topology", "regular3"), ("n", "9")])).unwrap_err();
+        assert!(e.contains("even"), "{e}");
+    }
+
+    #[test]
+    fn directed_is_sgp_only_on_orientable_families() {
+        let e = Scenario::from_config(&cfg(&[("directed", "true")])).unwrap_err();
+        assert!(e.contains("sgp"), "{e}");
+        let e = Scenario::from_config(&cfg(&[
+            ("directed", "true"),
+            ("algorithm", "sgp"),
+            ("topology", "hypercube"),
+            ("n", "16"),
+        ]))
+        .unwrap_err();
+        assert!(e.contains("orientable"), "{e}");
+        let scn = Scenario::from_config(&cfg(&[
+            ("directed", "true"),
+            ("algorithm", "sgp"),
+            ("topology", "ring"),
+            ("n", "8"),
+        ]))
+        .unwrap();
+        assert!(scn.graph0().is_directed());
+        assert!(scn.graph0().is_connected());
+    }
+
+    #[test]
+    fn graph_schedule_switches_at_stage_ticks() {
+        let c = cfg(&[("topology_schedule", "ring@0,torus@100,complete@250"), ("n", "16")]);
+        let scn = Scenario::from_config(&c).unwrap();
+        assert!(scn.is_time_varying());
+        assert_eq!(scn.graph_at(0).regular_degree(), Some(2));
+        assert_eq!(scn.graph_at(99).regular_degree(), Some(2));
+        assert_eq!(scn.graph_at(100).regular_degree(), Some(4));
+        assert_eq!(scn.graph_at(249).regular_degree(), Some(4));
+        assert_eq!(scn.graph_at(250).regular_degree(), Some(15));
+        assert_eq!(scn.graph_at(u64::MAX).regular_degree(), Some(15));
+        // every stage was feasibility-checked against n
+        let c = cfg(&[("n", "10")]);
+        let mut c2 = c.clone();
+        c2.set("topology_schedule", "ring@0,torus@100").unwrap();
+        let e = Scenario::from_config(&c2).unwrap_err();
+        assert!(e.contains("tick 100"), "{e}");
+    }
+
+    #[test]
+    fn rate_weighted_pairs_favor_fast_initiators_and_stay_on_edges() {
+        let c = cfg(&[("topology", "ring"), ("n", "8"), ("speeds", "bimodal:0.5:8")]);
+        let scn = Scenario::from_config(&c).unwrap();
+        assert!(!scn.uniform_speeds());
+        let mut rng = Pcg64::seed(3);
+        let mut fast = 0u64;
+        let mut slow = 0u64;
+        for _ in 0..4000 {
+            let (i, j) = scn.sample_pair(0, &mut rng);
+            assert!(scn.graph0().neighbors(i).contains(&j), "({i},{j}) not an edge");
+            if scn.rate(i) == 1.0 {
+                fast += 1;
+            } else {
+                slow += 1;
+            }
+        }
+        // 4 fast nodes at rate 1 vs 4 slow at rate 1/8 → fast initiate ~8x
+        assert!(fast > 5 * slow, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn scenario_resolution_is_deterministic_per_seed() {
+        let c = cfg(&[("speeds", "pareto:2.0"), ("n", "32")]);
+        let a = Scenario::from_config(&c).unwrap();
+        let b = Scenario::from_config(&c).unwrap();
+        for i in 0..32 {
+            assert_eq!(a.rate(i).to_bits(), b.rate(i).to_bits());
+        }
+    }
+}

@@ -1,9 +1,12 @@
-//! Graph construction: the regular topologies the paper's model assumes.
+//! Graph construction: the regular topologies the paper's model assumes,
+//! the power-law (preferential-attachment) family, and the directed
+//! orientations SGP's push-sum payload supports.
 
 use crate::rngx::Pcg64;
 
-/// Named topology families. All are `r`-regular and connected (the random
-/// regular family retries until connected).
+/// Named topology families. The regular families are connected by
+/// construction (the random regular family retries until connected); the
+/// power-law family grows from a seed clique, so it is connected too.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
     /// Complete graph K_n — the paper's experimental overlay ("fully
@@ -17,14 +20,118 @@ pub enum Topology {
     Hypercube,
     /// Random r-regular graph via the pairing model (connected by retry).
     RandomRegular(usize),
+    /// Barabási–Albert preferential attachment: each new node attaches to
+    /// `m` distinct existing nodes with probability ∝ degree, grown from a
+    /// connected (m+1)-clique — hub-heavy degree distribution, connected
+    /// by construction.
+    PowerLaw(usize),
 }
 
-/// Undirected simple graph stored as an edge list + adjacency lists.
+impl Topology {
+    /// Parse a topology name: `complete | ring | torus | hypercube |
+    /// random<r> | regular<r> | powerlaw | powerlaw<m>` (`regular<r>` is an
+    /// alias of `random<r>`; bare `powerlaw` attaches with m=2).
+    pub fn parse(name: &str) -> Result<Self, String> {
+        let degree = |t: &str, prefix: &str| -> Result<usize, String> {
+            t[prefix.len()..]
+                .parse()
+                .map_err(|_| format!("bad topology '{t}' (want e.g. {prefix}4)"))
+        };
+        Ok(match name {
+            "complete" => Topology::Complete,
+            "ring" => Topology::Ring,
+            "torus" => Topology::Torus,
+            "hypercube" => Topology::Hypercube,
+            "powerlaw" => Topology::PowerLaw(2),
+            t if t.starts_with("random") => Topology::RandomRegular(degree(t, "random")?),
+            t if t.starts_with("regular") => Topology::RandomRegular(degree(t, "regular")?),
+            t if t.starts_with("powerlaw") => Topology::PowerLaw(degree(t, "powerlaw")?),
+            t => {
+                return Err(format!(
+                    "unknown topology '{t}' (known: complete, ring, torus, \
+                     hypercube, random<r>/regular<r>, powerlaw[<m>])"
+                ))
+            }
+        })
+    }
+
+    /// Feasibility of this family at `n` nodes — the config-path twin of
+    /// the constructor asserts, returning actionable errors instead of
+    /// panicking.
+    pub fn validate(self, n: usize) -> Result<(), String> {
+        match self {
+            Topology::Complete => {
+                if n < 1 {
+                    return Err("complete topology needs n >= 1".into());
+                }
+            }
+            Topology::Ring => {
+                if n < 3 {
+                    return Err(format!("ring topology needs n >= 3, got n={n}"));
+                }
+            }
+            Topology::Torus => {
+                let side = (n as f64).sqrt().round() as usize;
+                if side * side != n || side < 3 {
+                    return Err(format!(
+                        "torus topology needs a square n with side >= 3; n={n} is \
+                         not (nearest: {} or {})",
+                        side.max(3) * side.max(3),
+                        (side + 1) * (side + 1)
+                    ));
+                }
+            }
+            Topology::Hypercube => {
+                if n < 2 || !n.is_power_of_two() {
+                    return Err(format!(
+                        "hypercube topology needs n = 2^d (d >= 1); n={n} is not \
+                         a power of two (nearest: {} or {})",
+                        (n.max(2)).next_power_of_two() / 2,
+                        n.max(2).next_power_of_two()
+                    ));
+                }
+            }
+            Topology::RandomRegular(r) => {
+                if r < 2 || r >= n {
+                    return Err(format!(
+                        "regular topology needs degree 2 <= r < n, got r={r} n={n}"
+                    ));
+                }
+                if n * r % 2 != 0 {
+                    return Err(format!(
+                        "regular topology needs n*r even (every graph has an even \
+                         degree sum); n={n} r={r} gives n*r={}",
+                        n * r
+                    ));
+                }
+            }
+            Topology::PowerLaw(m) => {
+                if m < 1 || n < m + 2 {
+                    return Err(format!(
+                        "powerlaw topology needs attachment degree m >= 1 and \
+                         n >= m+2 (an (m+1)-clique seed plus at least one \
+                         attached node), got m={m} n={n}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Simple graph stored as an edge list + adjacency lists.
+///
+/// Undirected by default (every constructor except [`Graph::from_arcs`] and
+/// the `directed_*` orientations): `edges` holds each pair once and `adj`
+/// mirrors both directions. Directed graphs store arcs `(src, dst)` and
+/// `adj[u]` holds **out**-neighbors only, so [`Graph::sample_neighbor`]
+/// samples along arc direction — the push-sum (SGP) send direction.
 #[derive(Clone, Debug)]
 pub struct Graph {
     n: usize,
     edges: Vec<(usize, usize)>,
     adj: Vec<Vec<usize>>,
+    directed: bool,
 }
 
 impl Graph {
@@ -35,6 +142,30 @@ impl Graph {
             Topology::Torus => Self::torus(n),
             Topology::Hypercube => Self::hypercube(n),
             Topology::RandomRegular(r) => Self::random_regular(n, r, rng),
+            Topology::PowerLaw(m) => Self::power_law(n, m, rng),
+        }
+    }
+
+    /// Build the directed orientation of `topo` (ring and torus have
+    /// canonical rotor orientations; complete is symmetric, so its directed
+    /// form keeps all ordered pairs). Other families have no canonical
+    /// orientation — the config layer rejects them before reaching here.
+    pub fn build_directed(topo: Topology, n: usize) -> Self {
+        match topo {
+            Topology::Complete => {
+                let mut arcs = Vec::with_capacity(n * (n - 1));
+                for u in 0..n {
+                    for v in 0..n {
+                        if u != v {
+                            arcs.push((u, v));
+                        }
+                    }
+                }
+                Self::from_arcs(n, arcs)
+            }
+            Topology::Ring => Self::directed_ring(n),
+            Topology::Torus => Self::directed_torus(n),
+            t => panic!("no canonical directed orientation for {t:?}"),
         }
     }
 
@@ -45,7 +176,18 @@ impl Graph {
             adj[u].push(v);
             adj[v].push(u);
         }
-        Self { n, edges, adj }
+        Self { n, edges, adj, directed: false }
+    }
+
+    /// Directed graph from an arc list `(src, dst)`; `adj` holds
+    /// out-neighbors only.
+    pub fn from_arcs(n: usize, arcs: Vec<(usize, usize)>) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in &arcs {
+            assert!(u < n && v < n && u != v, "bad arc ({u},{v}) for n={n}");
+            adj[u].push(v);
+        }
+        Self { n, edges: arcs, adj, directed: true }
     }
 
     pub fn complete(n: usize) -> Self {
@@ -67,6 +209,14 @@ impl Graph {
         Self::from_edges(n, edges)
     }
 
+    /// Directed cycle u → u+1 (mod n): the canonical strongly-connected
+    /// rotor for push-sum.
+    pub fn directed_ring(n: usize) -> Self {
+        assert!(n >= 3, "ring needs n >= 3");
+        let arcs = (0..n).map(|u| (u, (u + 1) % n)).collect();
+        Self::from_arcs(n, arcs)
+    }
+
     pub fn torus(n: usize) -> Self {
         let side = (n as f64).sqrt().round() as usize;
         assert_eq!(side * side, n, "torus needs square n, got {n}");
@@ -80,6 +230,23 @@ impl Graph {
             }
         }
         Self::from_edges(n, edges)
+    }
+
+    /// Directed torus: right + down arcs only (each node out-degree 2) —
+    /// strongly connected, the 2-D rotor orientation.
+    pub fn directed_torus(n: usize) -> Self {
+        let side = (n as f64).sqrt().round() as usize;
+        assert_eq!(side * side, n, "torus needs square n, got {n}");
+        assert!(side >= 3, "torus needs side >= 3 for simple graph");
+        let mut arcs = Vec::new();
+        for r in 0..side {
+            for c in 0..side {
+                let u = r * side + c;
+                arcs.push((u, r * side + (c + 1) % side));
+                arcs.push((u, ((r + 1) % side) * side + c));
+            }
+        }
+        Self::from_arcs(n, arcs)
     }
 
     pub fn hypercube(n: usize) -> Self {
@@ -166,18 +333,63 @@ impl Graph {
         g
     }
 
+    /// Barabási–Albert preferential attachment: start from a complete
+    /// graph on `m+1` nodes, then attach each node `t` in `m+1..n` to `m`
+    /// distinct earlier nodes drawn with probability ∝ current degree
+    /// (sampled from the edge-endpoint multiset, with rejection for
+    /// distinctness). Connected by construction: every node links into the
+    /// connected seed component.
+    pub fn power_law(n: usize, m: usize, rng: &mut Pcg64) -> Self {
+        assert!(m >= 1 && n >= m + 2, "powerlaw needs m >= 1 and n >= m+2");
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        // each endpoint appears once per incident edge — sampling an entry
+        // uniformly IS degree-proportional sampling
+        let mut endpoints: Vec<usize> = Vec::with_capacity(2 * n * m);
+        for u in 0..=m {
+            for v in (u + 1)..=m {
+                edges.push((u, v));
+                endpoints.push(u);
+                endpoints.push(v);
+            }
+        }
+        for t in (m + 1)..n {
+            let mut targets: Vec<usize> = Vec::with_capacity(m);
+            while targets.len() < m {
+                let v = endpoints[rng.below_usize(endpoints.len())];
+                if !targets.contains(&v) {
+                    targets.push(v);
+                }
+            }
+            for &v in &targets {
+                edges.push((t, v));
+                endpoints.push(t);
+                endpoints.push(v);
+            }
+        }
+        let g = Self::from_edges(n, edges);
+        debug_assert!(g.is_connected());
+        g
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Edge pairs for undirected graphs; arcs `(src, dst)` for directed.
     pub fn edges(&self) -> &[(usize, usize)] {
         &self.edges
     }
 
+    pub fn is_directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Neighbors of `u` (out-neighbors for directed graphs).
     pub fn neighbors(&self, u: usize) -> &[usize] {
         &self.adj[u]
     }
 
+    /// Degree of `u` (out-degree for directed graphs).
     pub fn degree(&self, u: usize) -> usize {
         self.adj[u].len()
     }
@@ -188,16 +400,13 @@ impl Graph {
         (1..self.n).all(|u| self.degree(u) == d).then_some(d)
     }
 
-    pub fn is_connected(&self) -> bool {
-        if self.n == 0 {
-            return true;
-        }
+    fn reaches_all(&self, adj: &[Vec<usize>]) -> bool {
         let mut seen = vec![false; self.n];
         let mut stack = vec![0usize];
         seen[0] = true;
         let mut count = 1;
         while let Some(u) = stack.pop() {
-            for &v in &self.adj[u] {
+            for &v in &adj[u] {
                 if !seen[v] {
                     seen[v] = true;
                     count += 1;
@@ -208,21 +417,44 @@ impl Graph {
         count == self.n
     }
 
+    /// Connectivity: plain connectivity for undirected graphs, **strong**
+    /// connectivity for directed ones (forward and reverse reachability
+    /// from node 0 — the condition push-sum needs to mix).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        if !self.reaches_all(&self.adj) {
+            return false;
+        }
+        if self.directed {
+            let mut rev = vec![Vec::new(); self.n];
+            for &(u, v) in &self.edges {
+                rev[v].push(u);
+            }
+            return self.reaches_all(&rev);
+        }
+        true
+    }
+
     /// Sample an edge uniformly at random — one "step" of the paper's model.
+    /// Undirected only: a symmetric gossip pair has no arc orientation.
     #[inline]
     pub fn sample_edge(&self, rng: &mut Pcg64) -> (usize, usize) {
+        assert!(!self.directed, "sample_edge needs an undirected graph");
         self.edges[rng.below_usize(self.edges.len())]
     }
 
-    /// Sample a uniform random neighbor of `u`.
+    /// Sample a uniform random neighbor of `u` (out-neighbor if directed).
     #[inline]
     pub fn sample_neighbor(&self, u: usize, rng: &mut Pcg64) -> usize {
         self.adj[u][rng.below_usize(self.adj[u].len())]
     }
 
     /// Random perfect/near-perfect matching on G (used by D-PSGD rounds):
-    /// greedy over a shuffled edge list.
+    /// greedy over a shuffled edge list. Undirected only.
     pub fn random_matching(&self, rng: &mut Pcg64) -> Vec<(usize, usize)> {
+        assert!(!self.directed, "random_matching needs an undirected graph");
         let mut order: Vec<usize> = (0..self.edges.len()).collect();
         rng.shuffle(&mut order);
         let mut used = vec![false; self.n];
@@ -258,6 +490,7 @@ mod tests {
         assert_eq!(g.edges().len(), 28);
         assert_eq!(g.regular_degree(), Some(7));
         assert!(g.is_connected());
+        assert!(!g.is_directed());
     }
 
     #[test]
@@ -293,6 +526,72 @@ mod tests {
             assert!(g.is_connected());
             assert_eq!(g.edges().len(), n * d / 2);
         }
+    }
+
+    #[test]
+    fn power_law_is_connected_with_exact_edge_count() {
+        let mut r = rng();
+        for (n, m) in [(16, 1), (40, 2), (64, 3)] {
+            let g = Graph::power_law(n, m, &mut r);
+            assert!(g.is_connected(), "n={n} m={m}");
+            // (m+1)-clique + m edges per later node
+            let expect = m * (m + 1) / 2 + (n - m - 1) * m;
+            assert_eq!(g.edges().len(), expect, "n={n} m={m}");
+            // the seed clique tends to become the hub set
+            let max_deg = (0..n).map(|u| g.degree(u)).max().unwrap();
+            assert!(max_deg > m, "hubs should exceed the attachment degree");
+        }
+    }
+
+    #[test]
+    fn directed_ring_and_torus_are_strongly_connected() {
+        let g = Graph::directed_ring(8);
+        assert!(g.is_directed());
+        assert_eq!(g.regular_degree(), Some(1)); // out-degree
+        assert!(g.is_connected());
+        let t = Graph::directed_torus(16);
+        assert_eq!(t.regular_degree(), Some(2));
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn directed_one_way_chain_is_not_strongly_connected() {
+        // 0 → 1 → 2 has no path back to 0
+        let g = Graph::from_arcs(3, vec![(0, 1), (1, 2)]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn directed_sample_neighbor_follows_arcs() {
+        let g = Graph::directed_ring(6);
+        let mut r = rng();
+        for u in 0..6 {
+            assert_eq!(g.sample_neighbor(u, &mut r), (u + 1) % 6);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_edge_rejects_directed() {
+        let g = Graph::directed_ring(4);
+        g.sample_edge(&mut rng());
+    }
+
+    #[test]
+    fn validate_matches_constructor_feasibility() {
+        assert!(Topology::Torus.validate(16).is_ok());
+        assert!(Topology::Torus.validate(10).is_err());
+        assert!(Topology::Hypercube.validate(16).is_ok());
+        assert!(Topology::Hypercube.validate(12).is_err());
+        assert!(Topology::RandomRegular(3).validate(10).is_ok());
+        assert!(Topology::RandomRegular(3).validate(9).is_err()); // n*r odd
+        assert!(Topology::RandomRegular(12).validate(10).is_err()); // r >= n
+        assert!(Topology::Ring.validate(2).is_err());
+        assert!(Topology::PowerLaw(2).validate(3).is_err());
+        assert!(Topology::PowerLaw(2).validate(16).is_ok());
+        // error text names the fix, not just the failure
+        let e = Topology::Torus.validate(10).unwrap_err();
+        assert!(e.contains("square"), "{e}");
     }
 
     #[test]

@@ -7,14 +7,16 @@
 
 use super::Graph;
 
-/// Row-major dense Laplacian L = D − A of `g`.
+/// Row-major dense Laplacian L = D − A of `g`, built per edge incidence —
+/// identical to the degree form for undirected graphs, and for directed
+/// graphs the symmetrized (A + Aᵀ) Laplacian, so the Jacobi solver always
+/// sees a symmetric matrix.
 pub fn laplacian(g: &Graph) -> Vec<f64> {
     let n = g.n();
     let mut l = vec![0.0; n * n];
-    for u in 0..n {
-        l[u * n + u] = g.degree(u) as f64;
-    }
     for &(u, v) in g.edges() {
+        l[u * n + u] += 1.0;
+        l[v * n + v] += 1.0;
         l[u * n + v] -= 1.0;
         l[v * n + u] -= 1.0;
     }
@@ -81,9 +83,18 @@ pub fn jacobi_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
     eig
 }
 
-/// λ₂ — second-smallest Laplacian eigenvalue of `g` (0 for disconnected).
+/// λ₂ — second-smallest Laplacian eigenvalue of `g`.
+///
+/// Disconnected graphs (including directed graphs that are not *strongly*
+/// connected) return exactly 0.0 rather than whatever tiny or garbage
+/// eigenvalue the numerical solve produces — λ₂ = 0 iff disconnected is the
+/// theorem, so the code states it. Single-node graphs have no λ₂; they
+/// also report 0.0.
 pub fn spectral_gap(g: &Graph) -> f64 {
     let n = g.n();
+    if n < 2 || !g.is_connected() {
+        return 0.0;
+    }
     let l = laplacian(g);
     let eig = jacobi_eigenvalues(&l, n);
     eig[1].max(0.0)
@@ -168,6 +179,26 @@ mod tests {
             let g = Graph::random_regular(24, 4, &mut rng);
             assert!(g.lambda2() > 0.05, "λ₂={}", g.lambda2());
         }
+    }
+
+    #[test]
+    fn disconnected_graph_gap_is_exactly_zero() {
+        // two disjoint triangles
+        let g = Graph::from_edges(6, vec![(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)]);
+        assert!(!g.is_connected());
+        assert_eq!(g.lambda2(), 0.0);
+        // a weakly- but not strongly-connected directed graph is "not
+        // connected" for gossip purposes: gap is zero too
+        let d = Graph::from_arcs(3, vec![(0, 1), (1, 2)]);
+        assert_eq!(d.lambda2(), 0.0);
+        // single node: no λ₂ to report
+        assert_eq!(Graph::complete(1).lambda2(), 0.0);
+    }
+
+    #[test]
+    fn directed_ring_gap_matches_symmetrized_undirected_ring() {
+        let expect = 2.0 * (1.0 - (std::f64::consts::TAU / 8.0).cos());
+        assert!(close(Graph::directed_ring(8).lambda2(), expect, 1e-8));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use swarm_sgd::quant::{
     QuantError,
 };
 use swarm_sgd::rngx::Pcg64;
-use swarm_sgd::topology::Graph;
+use swarm_sgd::topology::{spectral_gap, Graph, Topology};
 
 /// Run `f` over `cases` seeded RNGs; panic with the failing seed.
 fn prop(cases: u64, f: impl Fn(&mut Pcg64) -> Result<(), String>) {
@@ -295,6 +295,88 @@ fn prop_lambda2_positive_and_at_most_n() {
 }
 
 #[test]
+fn prop_power_law_connected_with_exact_edge_count_and_even_degree_sum() {
+    // BA growth: an (m+1)-clique seed plus m edges per attached node, so
+    // the edge count is exact and the graph is connected by construction
+    prop(30, |rng| {
+        let m = 1 + rng.below_usize(4); // 1..=4
+        let n = m + 2 + rng.below_usize(120);
+        let g = Graph::power_law(n, m, rng);
+        if !g.is_connected() {
+            return Err(format!("n={n} m={m}: disconnected"));
+        }
+        let want = (m + 1) * m / 2 + (n - m - 1) * m;
+        if g.edges().len() != want {
+            return Err(format!("n={n} m={m}: {} edges != {want}", g.edges().len()));
+        }
+        let degree_sum: usize = (0..n).map(|u| g.degree(u)).sum();
+        if degree_sum != 2 * g.edges().len() {
+            return Err(format!("n={n} m={m}: degree sum {degree_sum} odd-handed"));
+        }
+        if spectral_gap(&g) <= 0.0 {
+            return Err(format!("n={n} m={m}: connected graph with zero gap"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sample_neighbor_lands_on_a_graph_edge_for_every_family() {
+    prop(15, |rng| {
+        let side = 3 + rng.below_usize(3); // torus side 3..=5
+        let d = 2 + rng.below_usize(4); // hypercube dim 2..=5
+        let graphs = [
+            Graph::build(Topology::Complete, 2 + rng.below_usize(20), rng),
+            Graph::build(Topology::Ring, 3 + rng.below_usize(30), rng),
+            Graph::build(Topology::Torus, side * side, rng),
+            Graph::build(Topology::Hypercube, 1 << d, rng),
+            Graph::build(Topology::RandomRegular(4), 6 + 2 * rng.below_usize(20), rng),
+            Graph::build(Topology::PowerLaw(2), 8 + rng.below_usize(40), rng),
+        ];
+        for g in &graphs {
+            for _ in 0..40 {
+                let u = rng.below_usize(g.n());
+                let v = g.sample_neighbor(u, rng);
+                if !g.neighbors(u).contains(&v) {
+                    return Err(format!("n={}: {v} not adjacent to {u}", g.n()));
+                }
+                if v == u {
+                    return Err(format!("n={}: self-loop sampled at {u}", g.n()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spectral_gap_is_zero_exactly_on_disconnected_graphs() {
+    prop(20, |rng| {
+        // two rings with no bridge: disconnected, gap must be exactly 0.0
+        let half = 3 + rng.below_usize(6);
+        let mut edges = Vec::new();
+        for u in 0..half {
+            edges.push((u, (u + 1) % half));
+            edges.push((half + u, half + (u + 1) % half));
+        }
+        let split = Graph::from_edges(2 * half, edges.clone());
+        if split.is_connected() {
+            return Err("two components reported connected".into());
+        }
+        if spectral_gap(&split) != 0.0 {
+            return Err(format!("disconnected gap {} != 0.0", spectral_gap(&split)));
+        }
+        // adding one bridge reconnects it and the gap turns positive
+        edges.push((0, half));
+        let bridged = Graph::from_edges(2 * half, edges);
+        if !bridged.is_connected() || spectral_gap(&bridged) <= 0.0 {
+            return Err("bridged graph should be connected with positive gap".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_matching_is_disjoint_subset_of_edges() {
     prop(30, |rng| {
         let n = 6 + 2 * rng.below_usize(20);
@@ -343,6 +425,46 @@ fn prop_all_shard_modes_partition() {
             if shards.iter().any(|s| s.is_empty()) {
                 return Err(format!("{name}: empty shard"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dirichlet_concentrates_to_a_balanced_split_as_alpha_grows() {
+    // Dirichlet(α) proportions concentrate on the uniform simplex point as
+    // α → ∞, so every agent holds ≈ count(label)/agents of each class; a
+    // small α produces the opposite — heavily skewed per-agent label mixes
+    prop(10, |rng| {
+        let agents = 4;
+        let classes = 5usize;
+        let per_class = 400usize;
+        let labels: Vec<i32> =
+            (0..classes * per_class).map(|i| (i % classes) as i32).collect();
+        let expect = per_class as f64 / agents as f64;
+        let class_counts = |shard: &[usize]| {
+            let mut counts = vec![0usize; classes];
+            for &ix in shard {
+                counts[labels[ix] as usize] += 1;
+            }
+            counts
+        };
+        // α → ∞: every agent/class cell within 25% of the uniform split
+        for shard in &dirichlet_shards(&labels, agents, 1e4, rng) {
+            for (c, &k) in class_counts(shard).iter().enumerate() {
+                let dev = (k as f64 - expect).abs() / expect;
+                if dev > 0.25 {
+                    return Err(format!("alpha=1e4 class {c}: {k} far from {expect}"));
+                }
+            }
+        }
+        // small α: at least one cell deviates grossly (the skew axis works)
+        let skewed = dirichlet_shards(&labels, agents, 0.05, rng)
+            .iter()
+            .flat_map(|s| class_counts(s))
+            .any(|k| (k as f64 - expect).abs() / expect > 0.5);
+        if !skewed {
+            return Err("alpha=0.05 produced a near-uniform split".into());
         }
         Ok(())
     });

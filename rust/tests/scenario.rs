@@ -1,0 +1,322 @@
+//! Scenario-engine integration tests: the heterogeneity axes (topology,
+//! speed classes, time-varying graphs) threaded through the executors.
+//!
+//! 1. **Replay determinism under every topology family** (the tentpole
+//!    acceptance criterion): serial ≡ parallel bit-for-bit on complete,
+//!    ring, torus, hypercube, random-regular, and power-law graphs — the
+//!    graph constraint changes *which* pairs gossip, never the
+//!    interleaving-independence contract.
+//! 2. **Legacy equivalence**: a default scenario (uniform speeds, one
+//!    static undirected graph) resolved from config consumes RNG
+//!    byte-for-byte like the pre-scenario direct-graph path, so the
+//!    committed goldens stay valid.
+//! 3. **Edge membership**: every pre-drawn gossip pair — swarm, poisson,
+//!    adpsgd draws and dpsgd matchings alike — is an edge of the graph in
+//!    force at that event's tick, including across topology-schedule stage
+//!    boundaries.
+//! 4. **Heterogeneous replay**: bimodal/pareto speed classes and epoch-
+//!    indexed graph schedules keep the serial ≡ parallel bit contract.
+//! 5. **Feasibility errors**: infeasible topology/n combos, bad speed
+//!    specs, and malformed schedules fail `Scenario::from_config` with
+//!    actionable messages (never panics).
+//! 6. **Freerun convergence at n=64** on ring and torus: the lock-free
+//!    executor under graph-constrained partner sampling still lands in the
+//!    serial reference's loss ballpark.
+
+use swarm_sgd::backend::Backend;
+use swarm_sgd::config::RunConfig;
+use swarm_sgd::coordinator::{
+    make_algorithm, run_freerun_scenario, run_parallel_scenario, run_serial, run_serial_scenario,
+    AlgoOptions, EventKind, LrSchedule, RunMetrics, RunSpec,
+};
+use swarm_sgd::grad::QuadraticOracle;
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::obs::ObsOptions;
+use swarm_sgd::rngx::Pcg64;
+use swarm_sgd::scenario::Scenario;
+use swarm_sgd::topology::{Graph, Topology};
+
+/// All static families at a size every one of them accepts (16 = 4² = 2⁴).
+const FAMILIES: [&str; 6] = ["complete", "ring", "torus", "hypercube", "regular4", "powerlaw"];
+
+fn cfg(pairs: &[(&str, &str)]) -> RunConfig {
+    let mut c = RunConfig::default();
+    for (k, v) in pairs {
+        c.set(k, v).unwrap_or_else(|e| panic!("set {k}={v}: {e}"));
+    }
+    c
+}
+
+fn scenario(pairs: &[(&str, &str)]) -> Scenario {
+    Scenario::from_config(&cfg(pairs)).expect("feasible scenario")
+}
+
+fn quad(n: usize, dim: usize, sigma: f64, seed: u64) -> QuadraticOracle {
+    QuadraticOracle::new(dim, n, 1.0, 0.5, 2.0, sigma, seed)
+}
+
+fn spec(n: usize, t: u64, seed: u64, eval_every: u64) -> RunSpec {
+    RunSpec {
+        n,
+        events: t,
+        lr: LrSchedule::Constant(0.05),
+        seed,
+        name: "scenario-it".into(),
+        eval_every,
+        track_gamma: false,
+    }
+}
+
+/// Every externally observable metric must agree to the bit (same contract
+/// as `tests/parallel_executor.rs`).
+fn assert_replay_identical(serial: &RunMetrics, parallel: &RunMetrics) {
+    assert_eq!(serial.curve.len(), parallel.curve.len());
+    for (a, b) in serial.curve.iter().zip(&parallel.curve) {
+        assert_eq!(a.t, b.t);
+        assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits(), "eval_loss at t={}", a.t);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "train_loss at t={}", a.t);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "sim_time at t={}", a.t);
+        assert_eq!(a.bits, b.bits, "bits at t={}", a.t);
+    }
+    assert_eq!(serial.final_eval_loss.to_bits(), parallel.final_eval_loss.to_bits());
+    assert_eq!(serial.total_bits, parallel.total_bits);
+    assert_eq!(serial.quant_fallbacks, parallel.quant_fallbacks);
+    assert_eq!(serial.local_steps, parallel.local_steps);
+    assert_eq!(serial.sim_time.to_bits(), parallel.sim_time.to_bits());
+    assert_eq!(serial.compute_time_total.to_bits(), parallel.compute_time_total.to_bits());
+    assert_eq!(serial.comm_time_total.to_bits(), parallel.comm_time_total.to_bits());
+}
+
+#[test]
+fn serial_parallel_replay_is_bit_identical_under_every_topology_family() {
+    let n = 16;
+    let t = 300u64;
+    for topo in FAMILIES {
+        let scn = scenario(&[("topology", topo), ("n", "16"), ("seed", "7")]);
+        for name in ["swarm", "adpsgd"] {
+            let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+            let backend = quad(n, 24, 0.1, 3);
+            let cost = CostModel::deterministic(0.4);
+            let s = spec(n, t, 21, 100);
+            let serial = run_serial_scenario(algo.as_ref(), &backend, &s, &scn, &cost);
+            for threads in [2, 4] {
+                let par =
+                    run_parallel_scenario(algo.as_ref(), &backend, &s, &scn, &cost, threads);
+                assert_eq!(par.threads, threads, "{topo}/{name}");
+                assert_replay_identical(&serial, &par);
+            }
+        }
+    }
+}
+
+#[test]
+fn default_scenario_reproduces_the_legacy_direct_graph_path() {
+    // the bit-compat guarantee: Scenario::from_config with uniform speeds
+    // and one static graph is indistinguishable — graph edges AND executor
+    // RNG consumption — from handing run_serial the graph directly
+    let n = 16;
+    let c = cfg(&[("topology", "random4"), ("n", "16"), ("seed", "7")]);
+    let scn = Scenario::from_config(&c).unwrap();
+    assert!(scn.uniform_speeds());
+    assert!(!scn.is_time_varying());
+
+    // the config path builds its graph from Pcg64::seed(cfg.seed), exactly
+    // like the legacy CLI did
+    let mut grng = Pcg64::seed(7);
+    let legacy_graph = Graph::build(Topology::RandomRegular(4), n, &mut grng);
+    assert_eq!(scn.graph0().edges(), legacy_graph.edges());
+
+    let algo = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+    let backend = quad(n, 24, 0.1, 3);
+    let cost = CostModel::deterministic(0.4);
+    let s = spec(n, 250, 21, 50);
+    let legacy = run_serial(algo.as_ref(), &backend, &s, &legacy_graph, &cost);
+    let scenic = run_serial_scenario(algo.as_ref(), &backend, &s, &scn, &cost);
+    assert_replay_identical(&legacy, &scenic);
+}
+
+#[test]
+fn predrawn_gossip_pairs_are_edges_of_the_graph_in_force() {
+    // every 2-node Gossip event — swarm/poisson/adpsgd partner draws and
+    // dpsgd matching pairs alike — must be an edge of graph_at(ev.tick)
+    let n = 16;
+    let t = 200u64;
+    let mut static_scns: Vec<(String, Scenario)> = FAMILIES
+        .iter()
+        .map(|&f| (f.to_string(), scenario(&[("topology", f), ("n", "16"), ("seed", "7")])))
+        .collect();
+    // a stage boundary mid-run: pairs before tick 100 must be ring edges,
+    // pairs at or after it torus edges
+    static_scns.push((
+        "ring@0,torus@100".into(),
+        scenario(&[("topology-schedule", "ring@0,torus@100"), ("n", "16"), ("seed", "7")]),
+    ));
+    for (label, scn) in &static_scns {
+        for name in ["swarm", "poisson", "adpsgd", "dpsgd"] {
+            let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+            let mut rng = Pcg64::seed(33);
+            let sched = algo.schedule(n, t, scn, &mut rng);
+            let mut gossips = 0usize;
+            for ev in &sched.events {
+                if ev.kind != EventKind::Gossip {
+                    continue;
+                }
+                gossips += 1;
+                let (i, j) = (ev.nodes[0], ev.nodes[1]);
+                let g = scn.graph_at(ev.tick);
+                assert!(
+                    g.neighbors(i).contains(&j),
+                    "{label}/{name}: pre-drawn pair ({i}, {j}) at tick {} is \
+                     not an edge of the graph in force",
+                    ev.tick
+                );
+            }
+            assert!(gossips > 0, "{label}/{name}: schedule drew no gossip pairs");
+        }
+    }
+}
+
+#[test]
+fn speed_classes_and_topology_schedules_keep_the_replay_contract() {
+    // structural stragglers (rate-weighted initiators) and mid-run graph
+    // swaps are still pre-drawn once — serial ≡ parallel stays bit-exact
+    let n = 16;
+    let t = 300u64;
+    let cases: [&[(&str, &str)]; 3] = [
+        &[("topology", "torus"), ("n", "16"), ("seed", "7"), ("speeds", "bimodal:0.25:4")],
+        &[("topology", "ring"), ("n", "16"), ("seed", "7"), ("speeds", "pareto:2.5")],
+        &[
+            ("topology-schedule", "ring@0,torus@150"),
+            ("n", "16"),
+            ("seed", "7"),
+            ("speeds", "bimodal:0.5:8"),
+        ],
+    ];
+    for pairs in cases {
+        let scn = Scenario::from_config(&cfg(pairs)).unwrap();
+        assert!(!scn.uniform_speeds());
+        for name in ["swarm", "poisson"] {
+            let algo = make_algorithm(name, &AlgoOptions::default()).unwrap();
+            let backend = quad(n, 24, 0.1, 3);
+            let cost = CostModel::deterministic(0.4);
+            let s = spec(n, t, 21, 100);
+            let serial = run_serial_scenario(algo.as_ref(), &backend, &s, &scn, &cost);
+            let par = run_parallel_scenario(algo.as_ref(), &backend, &s, &scn, &cost, 4);
+            assert_replay_identical(&serial, &par);
+        }
+    }
+}
+
+#[test]
+fn directed_push_sum_on_a_ring_keeps_the_replay_contract() {
+    // --directed resolves the rotor orientation of the ring; sgp mixes over
+    // one-way arcs and the replay contract must survive
+    let scn = scenario(&[
+        ("topology", "ring"),
+        ("n", "16"),
+        ("seed", "7"),
+        ("directed", "true"),
+        ("algo", "sgp"),
+    ]);
+    assert!(scn.graph0().is_directed());
+    let algo = make_algorithm("sgp", &AlgoOptions::default()).unwrap();
+    let backend = quad(16, 24, 0.1, 3);
+    let cost = CostModel::deterministic(0.4);
+    let s = spec(16, 40, 21, 10);
+    let serial = run_serial_scenario(algo.as_ref(), &backend, &s, &scn, &cost);
+    assert!(serial.final_eval_loss.is_finite());
+    let par = run_parallel_scenario(algo.as_ref(), &backend, &s, &scn, &cost, 4);
+    assert_replay_identical(&serial, &par);
+}
+
+#[test]
+fn infeasible_scenarios_fail_with_actionable_errors() {
+    let expect_err = |pairs: &[(&str, &str)], needle: &str| {
+        let err = Scenario::from_config(&cfg(pairs)).expect_err(&format!("{pairs:?} must fail"));
+        assert!(
+            err.contains(needle),
+            "error for {pairs:?} should mention '{needle}', got: {err}"
+        );
+    };
+    expect_err(&[("topology", "hypercube"), ("n", "12")], "power of two");
+    expect_err(&[("topology", "torus"), ("n", "15")], "square");
+    expect_err(&[("topology", "ring"), ("n", "2")], "n >= 3");
+    expect_err(&[("topology", "regular3"), ("n", "9")], "even");
+    expect_err(&[("topology", "regular16"), ("n", "16")], "2 <= r < n");
+    expect_err(&[("topology", "powerlaw5"), ("n", "6")], "m+2");
+    // a mid-run stage must be feasible too, and the error names the stage
+    expect_err(
+        &[("n", "12"), ("topology-schedule", "ring@0,hypercube@100")],
+        "stage at tick 100",
+    );
+    // directed graphs need push-sum and an orientable family
+    expect_err(&[("topology", "ring"), ("n", "16"), ("directed", "true")], "push-sum");
+    expect_err(
+        &[("topology", "regular4"), ("n", "16"), ("directed", "true"), ("algo", "sgp")],
+        "orientable",
+    );
+
+    // malformed *specs* (as opposed to infeasible topology/n combos) are
+    // caught eagerly at the config layer, before from_config
+    let set_err = |key: &str, value: &str, needle: &str| {
+        let err = RunConfig::default()
+            .set(key, value)
+            .expect_err(&format!("{key}={value} must be rejected at set time"));
+        assert!(
+            err.contains(needle),
+            "error for {key}={value} should mention '{needle}', got: {err}"
+        );
+    };
+    set_err("topology", "smallworld", "unknown topology");
+    set_err("speeds", "gaussian:2", "unknown speeds");
+    set_err("speeds", "bimodal:1.5:4", "[0, 1]");
+    set_err("speeds", "pareto:0", "> 0");
+    set_err("topology-schedule", "ring@5,torus@10", "tick 0");
+    set_err("topology-schedule", "ring@0,torus@0", "strictly increasing");
+    set_err("dirichlet", "-1", "positive");
+}
+
+#[test]
+fn freerun_converges_on_ring_and_torus_at_n_64() {
+    // the acceptance run: graph-constrained partner sampling on the
+    // lock-free executor, n = 64 >> threads, sparse topologies — the
+    // normalized loss gap must land in the serial reference's ballpark
+    let n = 64;
+    let t = 12_000u64;
+    for topo in ["ring", "torus"] {
+        let scn = scenario(&[("topology", topo), ("n", "64"), ("seed", "7")]);
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+        let backend = quad(n, 16, 0.1, 11);
+        let f_star = backend.f_star();
+        let gap0 = {
+            let (p, _) = backend.init();
+            backend.eval(&p).loss - f_star
+        };
+        let cost = CostModel::deterministic(0.4);
+        let s = spec(n, t, 9, 3000);
+        let serial = run_serial_scenario(algo.as_ref(), &backend, &s, &scn, &cost);
+        let free = run_freerun_scenario(
+            algo.as_ref(),
+            &backend,
+            &s,
+            &scn,
+            &cost,
+            4,
+            8,
+            &ObsOptions::default(),
+        );
+        assert_eq!(free.executor, "freerun", "{topo}");
+        assert_eq!(free.interactions, t);
+        let gap_serial = (serial.final_eval_loss - f_star) / gap0;
+        let gap_free = (free.final_eval_loss - f_star) / gap0;
+        assert!(gap_serial < 0.2, "{topo}: serial reference off the rails: {gap_serial}");
+        assert!(
+            gap_free < 0.3,
+            "{topo}: freerun normalized gap {gap_free} vs serial {gap_serial} — \
+             graph-constrained lock-free path diverged"
+        );
+        let fr = free.freerun.as_ref().expect("freerun telemetry");
+        assert_eq!(fr.staleness.count(), t, "{topo}");
+        assert!(fr.staleness.p99() >= fr.staleness.p50(), "{topo}");
+    }
+}
