@@ -1,0 +1,136 @@
+//! Scale-engine bench: interactions/second and resident bytes/node versus
+//! n on the membership subsystem's compact-store executor — the headline
+//! numbers of the scale regime (n ∈ {10k, 100k, 1M} on one box).
+//!
+//! Every row runs SwarmSGD over the procedural expander overlay with the
+//! table-free `ProcQuadraticOracle` backend, so nothing anywhere is
+//! O(n·dim) resident except the `NodeStore` arena itself — which is
+//! exactly what `bytes_per_node` (enforced via `node_budget`) pins. One
+//! additional row turns churn on (`join:0.2, leave:0.4` → stationary live
+//! count n/2) to record what a live roster costs in throughput and how
+//! many partner draws/cross-writes churn collisions drop.
+//!
+//! Like `bench_freerun`, rows are measured wall-clock, non-replayable, and
+//! runner-dependent by contract: CI records them (`BENCH_scale.json`
+//! merged into the committed trajectory), it never gates on them.
+//! `-- --test` runs the reduced smoke configuration (n up to 100k); the
+//! full run adds the n=1M row.
+
+use std::io::Write;
+use swarm_sgd::coordinator::{
+    make_algorithm, AlgoOptions, LrSchedule, MembershipStats, RunSpec,
+};
+use swarm_sgd::grad::ProcQuadraticOracle;
+use swarm_sgd::membership::{run_scale, ChurnSpec, ScaleOptions};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::topology::Topology;
+
+const DIM: usize = 64;
+const THREADS: usize = 4;
+/// Generous ceiling over the d=64 compact record (~212 bytes with the
+/// roster/rate overhead) — every row runs with the budget gate ARMED so a
+/// layout regression fails the bench instead of silently growing.
+const NODE_BUDGET: u64 = 512;
+
+fn row_json(name: &str, n: usize, events: u64, ips: f64, ms: &MembershipStats) -> String {
+    format!(
+        "    {{\"workload\": \"{name}\", \"n\": {n}, \"threads\": {THREADS}, \
+         \"interactions\": {events}, \"interactions_per_sec\": {ips:.1}, \
+         \"bytes_per_node\": {}, \"node_budget\": {}, \
+         \"live_start\": {}, \"live_end\": {}, \"joins\": {}, \"leaves\": {}, \
+         \"rejected_joins\": {}, \"churn_misses\": {}, \"skipped_events\": {}, \
+         \"raw_nodes\": {}, \"decode_failures\": {}}}",
+        ms.bytes_per_node,
+        ms.node_budget,
+        ms.live_start,
+        ms.live_end,
+        ms.joins,
+        ms.leaves,
+        ms.rejected_joins,
+        ms.churn_misses,
+        ms.skipped_events,
+        ms.raw_nodes,
+        ms.decode_failures,
+    )
+}
+
+fn run_row(n: usize, events: u64, churn: ChurnSpec) -> (f64, MembershipStats) {
+    let algo = make_algorithm("swarm", &AlgoOptions::default()).expect("known algorithm");
+    // table-free backend: the bench's resident set is the store arena
+    let backend = ProcQuadraticOracle::new(DIM, n, 1.0, 0.5, 2.0, 0.0, 3);
+    let cost = CostModel::deterministic(0.4);
+    let spec = RunSpec {
+        n,
+        events,
+        lr: LrSchedule::Constant(0.02),
+        seed: 1,
+        name: format!("bench-scale-{n}"),
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let opts = ScaleOptions {
+        threads: THREADS,
+        topology: Topology::Expander(8),
+        churn,
+        node_budget: NODE_BUDGET,
+        ..ScaleOptions::default()
+    };
+    let m = run_scale(algo.as_ref(), &backend, &spec, &cost, &opts).expect("scale run");
+    let fr = m.freerun.expect("scale telemetry");
+    let ms = fr.membership.expect("membership telemetry");
+    (fr.interactions_per_sec, ms)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    println!(
+        "== scale engine (swarm, expander8, d={DIM}, proc-quadratic, \
+         {THREADS} threads, budget {NODE_BUDGET} B/node) =="
+    );
+
+    let mut rows: Vec<String> = Vec::new();
+    let sizes: &[(usize, u64)] = if smoke {
+        &[(10_000, 40_000), (100_000, 100_000)]
+    } else {
+        &[(10_000, 100_000), (100_000, 400_000), (1_000_000, 1_000_000)]
+    };
+    for &(n, events) in sizes {
+        let (ips, ms) = run_row(n, events, ChurnSpec::none());
+        println!(
+            "n={n:<9} fixed roster : {ips:>9.0} interactions/s  \
+             {} bytes/node resident  raw={} decode_failures={}",
+            ms.bytes_per_node, ms.raw_nodes, ms.decode_failures,
+        );
+        assert_eq!(ms.live_end, n as u64, "fixed roster must stay full");
+        rows.push(row_json("fixed", n, events, ips, &ms));
+    }
+
+    // the churn row: join 0.2 / leave 0.4 mean-reverts the live count to
+    // n/2 — records roster-flux throughput cost and collision drops
+    {
+        let (n, events) = if smoke { (10_000, 60_000u64) } else { (100_000, 400_000) };
+        let churn = ChurnSpec { join: 0.2, leave: 0.4 };
+        let (ips, ms) = run_row(n, events, churn);
+        println!(
+            "n={n:<9} churn {churn} : {ips:>9.0} interactions/s  \
+             live {} -> {} ({} joins, {} leaves, {} collision drops)",
+            ms.live_start, ms.live_end, ms.joins, ms.leaves, ms.churn_misses,
+        );
+        assert!(ms.joins > 0 && ms.leaves > 0, "churn row must actually churn");
+        rows.push(row_json("churn", n, events, ips, &ms));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_scale\",\n  \"workload\": \
+         {{\"dim\": {DIM}, \"threads\": {THREADS}, \"topology\": \"expander8\", \
+         \"backend\": \"quadratic-proc\", \"node_budget\": {NODE_BUDGET}, \
+         \"smoke\": {smoke}}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::File::create("BENCH_scale.json")
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("wrote BENCH_scale.json"),
+        Err(e) => eprintln!("could not write BENCH_scale.json: {e}"),
+    }
+}

@@ -108,6 +108,17 @@ pub fn quadratic_preset(cfg: &crate::config::RunConfig) -> crate::grad::Quadrati
     crate::grad::QuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
 }
 
+/// The `oracle:quadratic-proc` preset — the table-free twin of
+/// `oracle:quadratic` with the *same* constants, for the scale regime
+/// where the dense oracle's `d`/`c` tables (agents × dim × 16 bytes —
+/// ~1 GiB at n = 1M) would dominate memory. Same step math; global
+/// statistics are sampled above [`crate::grad::EVAL_AGENT_SAMPLE`] agents.
+pub fn proc_quadratic_preset(
+    cfg: &crate::config::RunConfig,
+) -> crate::grad::ProcQuadraticOracle {
+    crate::grad::ProcQuadraticOracle::new(64, cfg.n, 1.0, 0.5, 2.0, 0.2, cfg.seed)
+}
+
 /// Build the backend a config names: an `oracle:*` gradient oracle or the
 /// PJRT artifact path. Lives in the library (not the CLI binary) because
 /// the cluster executor's worker processes rebuild their backend from a
@@ -119,6 +130,7 @@ pub fn build_backend(
     if let Some(kind) = cfg.preset.strip_prefix("oracle:") {
         return Ok(match kind {
             "quadratic" => Box::new(quadratic_preset(cfg)),
+            "quadratic-proc" => Box::new(proc_quadratic_preset(cfg)),
             "softmax" => Box::new(crate::grad::SoftmaxOracle::synthetic(
                 cfg.data_per_agent * cfg.n,
                 32,
@@ -136,7 +148,12 @@ pub fn build_backend(
                 cfg.shard == crate::config::ShardMode::Iid,
                 cfg.seed,
             )),
-            k => return Err(format!("unknown oracle '{k}'")),
+            k => {
+                return Err(format!(
+                    "unknown oracle '{k}' (known: quadratic, quadratic-proc, \
+                     softmax, logistic)"
+                ))
+            }
         });
     }
     let xcfg = XlaBackendConfig {

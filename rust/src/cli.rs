@@ -94,10 +94,13 @@ USAGE:
                 [--executor serial|parallel|freerun|cluster]
                 [--threads K] [--shards S]
                 [--wire lattice|f32] [--kernel scalar|simd]
-                [--topology complete|ring|torus|hypercube|regular<r>|powerlaw[<m>]]
+                [--topology complete|ring|torus|hypercube|regular<r>|
+                            powerlaw[<m>]|expander[<r>]]
                 [--speeds uniform|bimodal:<frac>:<slowdown>|pareto:<alpha>]
                 [--dirichlet ALPHA] [--directed]
                 [--topology-schedule topo@0,topo@T1,...]
+                [--churn join:<rate>,leave:<rate>]
+                [--node-store auto|dense|compact] [--node-budget BYTES]
                 [--role coordinator|worker] [--listen HOST:PORT]
                 [--connect HOST:PORT] [--workers W] [--heartbeat-timeout S]
                 [--checkpoint-dir DIR] [--throttle-us U]
@@ -112,7 +115,7 @@ USAGE:
                 model_bytes, out_csv, executor, threads, shards, kernel,
                 workers, heartbeat_timeout, trace_out, trace_sample,
                 metrics_out, metrics_addr, log_level, speeds, directed,
-                dirichlet, topology_schedule
+                dirichlet, topology_schedule, churn, node_store, node_budget
                 --algorithm picks the training process (SwarmSGD or any §5
                 baseline) and is orthogonal to --executor: every algorithm
                 runs on the serial discrete-event executor AND on K
@@ -136,6 +139,25 @@ USAGE:
                 seqlock contention, worker busy/wait, and the wire codec's
                 bit/fallback attribution. localsgd/allreduce mix through
                 an irreducible global mean and refuse freerun.
+                THE SCALE REGIME: above 65536 nodes (node_store=auto), on
+                any --churn, or with --node-store compact, freerun routes
+                to the membership scale engine: per-node models rest
+                lattice-encoded in a compact NodeStore (~200 bytes/node at
+                d=64; --node-budget B fails fast, pre-allocation, if the
+                per-node footprint would exceed B bytes), partner draws
+                are procedural (O(1), no materialized graph — complete,
+                ring, torus, hypercube, expander[<r>]), and
+                --churn join:<rate>,leave:<rate> runs a live birth-death
+                roster: leavers' slots recycle under fresh generations,
+                joiners bootstrap from a live neighbor's snapshot, and the
+                stationary live count is n*min(1, join/leave). Rates are
+                per-event weights, >= 0 and finite. Pair with
+                preset=oracle:quadratic-proc (the table-free oracle) to
+                keep the backend O(1)-resident too; n=1,000,000 fits in a
+                few hundred MB. --node-store dense opts back out at any n
+                (but conflicts with --churn). sgp's weighted payloads and
+                --trace-out/--topology-schedule/--directed stay on the
+                dense executors.
                 --executor cluster runs the freerun protocol across OS
                 processes: start ONE coordinator (--role coordinator
                 --listen HOST:PORT; PORT 0 picks an ephemeral port, printed
@@ -163,8 +185,10 @@ USAGE:
                 graph family: complete, ring, torus (square n), hypercube
                 (power-of-two n), regular<r> (random r-regular, n*r even),
                 powerlaw[<m>] (connected preferential attachment, m edges
-                per new node, default 2); infeasible topology/n combos are
-                rejected up front with an actionable error. --speeds maps
+                per new node, default 2), expander[<r>] (random circulant
+                of even degree r, default 8 — spectral-gap-certified at
+                small n, procedural at scale); infeasible topology/n
+                combos are rejected up front with an actionable error. --speeds maps
                 per-node speed classes onto the Poisson clock rates:
                 bimodal:<frac>:<slowdown> slows round(n*frac) nodes by
                 <slowdown> (>= 1), pareto:<alpha> draws heavy-tailed
@@ -191,8 +215,9 @@ USAGE:
                 per-worker compute/merge/publish/retry/gossip spans, drained
                 from lock-free rings after the run (cluster workers write
                 F.rank<R>.json); --trace-sample P traces each interaction
-                with probability P in (0, 1] (deterministic per worker;
-                default 1 = every interaction). --metrics-out appends
+                with probability P in [0, 1] (deterministic per worker;
+                default 1 = every interaction, 0 = tracing off; out-of-range
+                values are rejected). --metrics-out appends
                 Prometheus text snapshots (throughput, staleness p50/p99,
                 wire bits, contention) every 500ms. --metrics-addr serves
                 the cluster coordinator's live introspection endpoint over
@@ -237,6 +262,9 @@ EXAMPLES:
               --dirichlet 0.1 --set preset=oracle:softmax,n=16
   swarm train --topology-schedule ring@0,torus@10000 \\
               --set preset=oracle:quadratic,n=64,interactions=20000
+  swarm train --algorithm swarm --executor freerun --topology expander \\
+              --churn join:0.001,leave:0.001 --node-budget 512 \\
+              --set preset=oracle:quadratic-proc,n=1000000,interactions=2000000
   swarm train --executor cluster --role worker --connect 127.0.0.1:7000
   swarm figure --id table1 --quick
   swarm figure --id all --out results

@@ -65,6 +65,11 @@ struct WorkerSlot {
     checkpoint: Vec<NodeLanes>,
     /// nodes currently owned (moves on adoption)
     shard: usize,
+    /// roster epoch of the worker's current shard: 0 for the initial
+    /// assignment, bumped to the reassignment's epoch whenever nodes move
+    /// to or from this worker (the membership subsystem's generation idea
+    /// applied to shard ownership)
+    epoch: u32,
     /// last measured control-plane ping round-trip, µs (None until the
     /// first Pong lands)
     rtt_us: Option<f64>,
@@ -249,6 +254,7 @@ fn coordinate<P: SlotPayload>(
             progress: ProgressBody::default(),
             checkpoint: Vec::new(),
             shard,
+            epoch: 0,
             rtt_us: None,
         });
         readers.push(conn);
@@ -531,9 +537,11 @@ fn coordinate<P: SlotPayload>(
 }
 
 /// The `/status` JSON document: run-level aggregates plus one entry per
-/// worker (shard size, liveness, heartbeat RTT, last-progress age).
-/// Hand-rolled like everything on this plane; every value is a JSON
-/// number, bool, or null, so any parser handles it.
+/// worker (shard size, liveness, heartbeat RTT, last-progress age, shard
+/// roster epoch). The top-level `roster_epoch` is the current assignment
+/// generation: 0 until the first recovery, then the latest adoption's
+/// epoch. Hand-rolled like everything on this plane; every value is a
+/// JSON number, bool, or null, so any parser handles it.
 fn status_json(
     slots: &[WorkerSlot],
     target: u64,
@@ -543,11 +551,13 @@ fn status_json(
 ) -> String {
     let mut out = String::with_capacity(256 + slots.len() * 160);
     out.push_str(&format!(
-        "{{\"workers\":{},\"alive\":{},\"target\":{target},\"events\":{events},\
+        "{{\"workers\":{},\"alive\":{},\"roster_epoch\":{},\"target\":{target},\
+         \"events\":{events},\
          \"interactions_per_sec\":{:.1},\"wall_secs\":{wall:.3},\"draining\":{draining},\
          \"per_worker\":[",
         slots.len(),
         slots.iter().filter(|s| s.alive).count(),
+        slots.iter().map(|s| s.epoch).max().unwrap_or(0),
         events as f64 / wall.max(1e-9),
     ));
     for (i, s) in slots.iter().enumerate() {
@@ -559,12 +569,14 @@ fn status_json(
             None => "null".to_string(),
         };
         out.push_str(&format!(
-            "{{\"rank\":{},\"alive\":{},\"done\":{},\"shard_nodes\":{},\"events\":{},\
+            "{{\"rank\":{},\"alive\":{},\"done\":{},\"shard_nodes\":{},\"epoch\":{},\
+             \"events\":{},\
              \"last_progress_age_sec\":{:.3},\"rtt_us\":{rtt}}}",
             s.rank,
             s.alive,
             s.done,
             s.shard,
+            s.epoch,
             s.progress.events,
             s.last_seen.elapsed().as_secs_f64(),
         ));
@@ -611,11 +623,15 @@ fn recover<P: SlotPayload>(
     );
     use std::io::Write;
     std::io::stdout().flush().ok();
-    // shard bookkeeping for /status: the nodes move with the adoption
+    // shard bookkeeping for /status: the nodes move with the adoption,
+    // under a fresh roster epoch stamping both ends of the move
     let moved = entries.len();
+    let epoch = *recoveries;
     slots[dead as usize].shard = 0;
+    slots[dead as usize].epoch = epoch;
     slots[adopter as usize].shard += moved;
-    let msg = Msg::Adopt { to_rank: adopter, from_rank: dead, entries };
+    slots[adopter as usize].epoch = epoch;
+    let msg = Msg::Adopt { to_rank: adopter, from_rank: dead, epoch, entries };
     for slot in slots.iter_mut().filter(|s| s.alive) {
         if send_msg(&mut slot.stream, &msg).is_err() {
             // the Gone event / heartbeat scan will pick this worker up

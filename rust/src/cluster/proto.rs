@@ -416,8 +416,11 @@ pub enum Msg {
     Checkpoint { events: u64, entries: Vec<NodeLanes> },
     /// coordinator → every worker: nodes of `from_rank` (declared dead)
     /// move to `to_rank`; entries carry the last-checkpoint lanes the
-    /// adopter restarts them from
-    Adopt { to_rank: u32, from_rank: u32, entries: Vec<NodeLanes> },
+    /// adopter restarts them from. `epoch` is the roster epoch this
+    /// reassignment creates (0 = the initial assignment; each adoption
+    /// bumps it), so owner-map updates are ordered and `/status` can
+    /// report which roster generation every worker's shard belongs to
+    Adopt { to_rank: u32, from_rank: u32, epoch: u32, entries: Vec<NodeLanes> },
     /// worker → coordinator on shutdown: final payload lanes + final
     /// counters + the staleness histogram raw parts
     Done {
@@ -494,9 +497,10 @@ impl Msg {
                 write_node_lanes(&mut w, entries);
                 K_CHECKPOINT
             }
-            Msg::Adopt { to_rank, from_rank, entries } => {
+            Msg::Adopt { to_rank, from_rank, epoch, entries } => {
                 w.u32(*to_rank);
                 w.u32(*from_rank);
+                w.u32(*epoch);
                 write_node_lanes(&mut w, entries);
                 K_ADOPT
             }
@@ -586,6 +590,7 @@ impl Msg {
             K_ADOPT => Msg::Adopt {
                 to_rank: r.u32()?,
                 from_rank: r.u32()?,
+                epoch: r.u32()?,
                 entries: read_node_lanes(&mut r)?,
             },
             K_DONE => {
@@ -709,6 +714,7 @@ mod tests {
             Msg::Adopt {
                 to_rank: 0,
                 from_rank: 2,
+                epoch: 3,
                 entries: vec![NodeLanes { node: 5, lanes: vec![0.25; 8] }],
             },
             Msg::Done {

@@ -28,12 +28,15 @@ pub struct RunConfig {
     /// (the `--algorithm` selector; orthogonal to `executor`)
     pub algo: String,
     /// artifact preset (mlp_s, cnn_s, cnn_m, transformer_s, transformer_m)
-    /// or oracle:quadratic / oracle:softmax / oracle:logistic
+    /// or oracle:quadratic / oracle:quadratic-proc / oracle:softmax /
+    /// oracle:logistic (`quadratic-proc` is the table-free twin for the
+    /// scale regime)
     pub preset: String,
     pub n: usize,
     /// complete | ring | torus | hypercube | random<r> | regular<r> |
-    /// powerlaw | powerlaw<m> (`regular<r>` is an alias of `random<r>`;
-    /// bare `powerlaw` uses attachment degree m=2)
+    /// powerlaw | powerlaw<m> | expander | expander<r> (`regular<r>` is an
+    /// alias of `random<r>`; bare `powerlaw` uses attachment degree m=2;
+    /// bare `expander` is the degree-8 random-circulant preset)
     pub topology: String,
     /// uniform | bimodal:<frac>:<slowdown> | pareto:<alpha> — per-node
     /// speed classes mapped onto Poisson clock rates (`--speeds`):
@@ -120,9 +123,28 @@ pub struct RunConfig {
     /// Chrome trace-event JSON output path (`--trace-out`; "" = tracing
     /// off). Cluster workers suffix their rank before the extension.
     pub trace_out: String,
-    /// fraction of interactions traced, in (0, 1] (`--trace-sample`);
-    /// sampled deterministically per worker
+    /// fraction of interactions traced, in [0, 1] (`--trace-sample`);
+    /// sampled deterministically per worker. 0 disables tracing even when
+    /// `trace_out` is set; values outside [0, 1] are rejected at parse time
     pub trace_sample: f64,
+    /// live-churn process for the freerun scale engine
+    /// (`--churn join:<rate>,leave:<rate>`; "" = fixed roster). Negative or
+    /// non-finite rates are rejected at parse time. Churn implies the
+    /// compact node store and is (for now) incompatible with the cluster
+    /// executor
+    pub churn: String,
+    /// auto | dense | compact — node-state storage for the freerun
+    /// executor (`--node-store`). `dense` is the materialized per-node
+    /// `NodeState` path; `compact` routes through the membership
+    /// subsystem's lattice-encoded [`crate::membership::NodeStore`]; `auto`
+    /// picks dense up to the materialize cutover and compact above it (or
+    /// whenever churn is active)
+    pub node_store: String,
+    /// enforced resident-bytes-per-node budget for the compact store, in
+    /// bytes (`--node-budget`; 0 = the internal "unenforced" default). A
+    /// compact run whose per-node footprint would exceed the budget fails
+    /// fast, before allocating the arena
+    pub node_budget: u64,
     /// Prometheus text snapshot path (`--metrics-out`; "" = off); snapshots
     /// append at a fixed cadence, giving a time series instead of run-end
     /// totals
@@ -176,6 +198,9 @@ impl Default for RunConfig {
             heartbeat_timeout: 5.0,
             trace_out: String::new(),
             trace_sample: 1.0,
+            churn: String::new(),
+            node_store: "auto".into(),
+            node_budget: 0,
             metrics_out: String::new(),
             metrics_addr: String::new(),
             log_level: "info".into(),
@@ -357,13 +382,42 @@ impl RunConfig {
             "trace_out" | "trace-out" => self.trace_out = value.into(),
             "trace_sample" | "trace-sample" => {
                 let s: f64 = value.parse().map_err(|_| bad(key, value))?;
-                if !s.is_finite() || s <= 0.0 || s > 1.0 {
+                if !s.is_finite() || !(0.0..=1.0).contains(&s) {
                     return Err(format!(
-                        "trace_sample must be in (0, 1] (got '{value}'); \
-                         omit the key to trace every interaction"
+                        "trace_sample must be in [0, 1] (got '{value}'); 0 \
+                         disables tracing, omit the key to trace every \
+                         interaction"
                     ));
                 }
                 self.trace_sample = s;
+            }
+            "churn" => {
+                // eager validation, same contract as topology/speeds: a
+                // negative rate or a typo'd part errors here with the
+                // actionable ChurnSpec message and never clobbers
+                crate::membership::ChurnSpec::parse(value)?;
+                self.churn = value.trim().into();
+            }
+            "node_store" | "node-store" => match value {
+                "auto" | "dense" | "compact" => self.node_store = value.into(),
+                _ => {
+                    return Err(format!(
+                        "bad value '{value}' for key 'node_store' \
+                         (want auto, dense, or compact)"
+                    ))
+                }
+            },
+            "node_budget" | "node-budget" => {
+                let b: u64 = value.parse().map_err(|_| bad(key, value))?;
+                if b == 0 {
+                    return Err(
+                        "node_budget must be >= 1 byte; omit the key (or the \
+                         --node-budget flag) to leave the bytes-per-node \
+                         budget unenforced"
+                            .to_string(),
+                    );
+                }
+                self.node_budget = b;
             }
             "metrics_out" | "metrics-out" => self.metrics_out = value.into(),
             "metrics_addr" | "metrics-addr" => self.metrics_addr = value.into(),
@@ -379,6 +433,35 @@ impl RunConfig {
 
     pub fn topology_enum(&self) -> Result<Topology, String> {
         Topology::parse(&self.topology)
+    }
+
+    /// The parsed churn process ("" = the inactive fixed-roster spec).
+    pub fn churn_spec(&self) -> Result<crate::membership::ChurnSpec, String> {
+        crate::membership::ChurnSpec::parse(&self.churn)
+    }
+
+    /// Whether a `freerun` run routes to the membership scale engine
+    /// instead of the dense freerun executor: churn demands the compact
+    /// store, `node_store = compact` forces it, `node_store = dense`
+    /// forbids it (an error when churn is also on), and `auto` switches at
+    /// the materialize cutover
+    /// ([`crate::membership::MATERIALIZE_MAX`] nodes).
+    pub fn scale_engine_selected(&self) -> Result<bool, String> {
+        let churn = self.churn_spec()?.active();
+        Ok(match self.node_store.as_str() {
+            "compact" => true,
+            "dense" => {
+                if churn {
+                    return Err(
+                        "churn requires the compact node store; drop \
+                         node_store=dense (or the --churn flag) to proceed"
+                            .to_string(),
+                    );
+                }
+                false
+            }
+            _ => churn || self.n > crate::membership::MATERIALIZE_MAX,
+        })
     }
 
     pub fn local_steps(&self) -> LocalSteps {
@@ -500,6 +583,15 @@ impl RunConfig {
         put("workers", self.workers.to_string());
         put("heartbeat_timeout", self.heartbeat_timeout.to_string());
         put("trace_sample", self.trace_sample.to_string());
+        put("node_store", self.node_store.clone());
+        // node_budget 0 is the internal "unenforced" default that set()
+        // rejects as an explicit value, mirroring threads/shards
+        if self.node_budget > 0 {
+            put("node_budget", self.node_budget.to_string());
+        }
+        if !self.churn.is_empty() {
+            put("churn", self.churn.clone());
+        }
         put("log_level", self.log_level.clone());
         if !self.out_csv.is_empty() {
             put("out_csv", self.out_csv.clone());
@@ -527,7 +619,10 @@ impl RunConfig {
     /// receive this config over the wire).
     pub fn obs_options(&self) -> crate::obs::ObsOptions {
         crate::obs::ObsOptions {
-            trace_capacity: if self.trace_out.is_empty() {
+            // trace_sample = 0 means "trace nothing" at the config level;
+            // ObsOptions keeps 0.0 as its own unset default, so the off
+            // state maps to a zero-capacity ring rather than rate 0
+            trace_capacity: if self.trace_out.is_empty() || self.trace_sample == 0.0 {
                 0
             } else {
                 crate::obs::DEFAULT_TRACE_CAPACITY
@@ -808,6 +903,9 @@ mod tests {
             ("trace_sample", "0.25"),
             ("metrics_out", "metrics.prom"),
             ("metrics_addr", "127.0.0.1:9090"),
+            ("churn", "join:0.001,leave:0.002"),
+            ("node_store", "compact"),
+            ("node_budget", "512"),
             ("log_level", "debug"),
         ] {
             c.set(k, v).unwrap();
@@ -895,7 +993,7 @@ mod tests {
         assert_eq!(opts.metrics_out.as_deref(), Some("m.prom"));
 
         // bad values are actionable and never clobber
-        for bad in ["0", "-0.1", "1.5", "nan", "lots"] {
+        for bad in ["-0.1", "1.5", "nan", "inf", "lots"] {
             let err = c.set("trace_sample", bad).unwrap_err();
             assert!(
                 err.contains("trace_sample") || err.contains("bad value"),
@@ -903,9 +1001,91 @@ mod tests {
             );
             assert_eq!(c.trace_sample, 0.5, "bad '{bad}' must not clobber");
         }
+        // 0 is *in* range — "trace nothing" — and turns the ring off even
+        // with trace_out set, rather than flipping to ObsOptions' unset
+        // "trace everything" default
+        c.set("trace_sample", "0").unwrap();
+        assert_eq!(c.trace_sample, 0.0);
+        assert_eq!(c.obs_options().trace_capacity, 0);
         let err = c.set("log_level", "verbose").unwrap_err();
         assert!(err.contains("error | warn | info | debug"), "unhelpful: {err}");
         assert_eq!(c.log_level, "warn");
+    }
+
+    #[test]
+    fn churn_key_validates_eagerly_and_never_clobbers() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.churn, "");
+        assert!(!c.churn_spec().unwrap().active());
+        c.set("churn", "join:0.001,leave:0.002").unwrap();
+        let spec = c.churn_spec().unwrap();
+        assert_eq!(spec.join, 0.001);
+        assert_eq!(spec.leave, 0.002);
+        assert!(spec.active());
+        // negative / non-finite / typo'd specs fail with the ChurnSpec
+        // message (">= 0", "--churn", known-parts), mirroring threads=0
+        for bad in ["join:-0.1", "leave:nan", "jion:0.1", "join=0.1", "join:lots"] {
+            let err = c.set("churn", bad).unwrap_err();
+            assert!(
+                err.contains(">= 0")
+                    || err.contains("finite")
+                    || err.contains("churn"),
+                "unhelpful error for '{bad}': {err}"
+            );
+            assert_eq!(c.churn, "join:0.001,leave:0.002", "bad '{bad}' must not clobber");
+        }
+        // the hyphen-free CLI flag spelling and INI key are the same key
+        let parsed = RunConfig::from_ini("[run]\nchurn = leave:0.5\n").unwrap();
+        assert_eq!(parsed.churn_spec().unwrap().leave, 0.5);
+        assert!(RunConfig::from_ini("[run]\nchurn = join:-1\n").is_err());
+    }
+
+    #[test]
+    fn node_store_and_budget_keys_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.node_store, "auto");
+        assert_eq!(c.node_budget, 0);
+        for v in ["dense", "compact", "auto"] {
+            c.set("node_store", v).unwrap();
+            assert_eq!(c.node_store, v);
+        }
+        let err = c.set("node-store", "sparse").unwrap_err();
+        assert!(err.contains("auto, dense, or compact"), "unhelpful: {err}");
+        assert_eq!(c.node_store, "auto", "bad value must not clobber");
+
+        c.set("node-budget", "256").unwrap();
+        assert_eq!(c.node_budget, 256);
+        // explicit 0 is rejected like threads=0: 0 is only the internal
+        // "unenforced" default
+        let err = c.set("node_budget", "0").unwrap_err();
+        assert!(err.contains("node_budget must be >= 1"), "unhelpful: {err}");
+        assert_eq!(c.node_budget, 256);
+        assert!(c.set("node_budget", "lots").is_err());
+    }
+
+    #[test]
+    fn scale_engine_routing_follows_store_churn_and_n() {
+        let mut c = RunConfig::default();
+        // small n, no churn, auto store → dense freerun
+        assert!(!c.scale_engine_selected().unwrap());
+        // above the materialize cutover, auto flips to the scale engine
+        c.n = crate::membership::MATERIALIZE_MAX + 1;
+        assert!(c.scale_engine_selected().unwrap());
+        // dense is an explicit opt-out at any n...
+        c.set("node_store", "dense").unwrap();
+        assert!(!c.scale_engine_selected().unwrap());
+        // ...but conflicts with churn, which needs the compact store
+        c.set("churn", "join:0.01,leave:0.01").unwrap();
+        let err = c.scale_engine_selected().unwrap_err();
+        assert!(err.contains("compact node store"), "unhelpful: {err}");
+        // churn alone selects the engine even at tiny n
+        let mut c = RunConfig::default();
+        c.set("churn", "leave:0.1").unwrap();
+        assert!(c.scale_engine_selected().unwrap());
+        // compact forces the engine at tiny n too
+        let mut c = RunConfig::default();
+        c.set("node_store", "compact").unwrap();
+        assert!(c.scale_engine_selected().unwrap());
     }
 
     #[test]

@@ -652,6 +652,7 @@ fn freerun_with<P: SlotPayload>(
         slot_push_conflicts: push_conflicts,
         staleness,
         workers,
+        membership: None,
     });
     m
 }

@@ -77,7 +77,7 @@ pub use policy::{
     PlainModel, PushSumPolicy, PushSumWeighted, SlotPayload, WireCodec,
 };
 pub use swarm::{AveragingMode, LocalSteps, SwarmSgd};
-pub use telemetry::{FreerunStats, StalenessHistogram, WorkerActivity};
+pub use telemetry::{FreerunStats, MembershipStats, StalenessHistogram, WorkerActivity};
 
 /// Learning-rate schedule (paper §5: identical to sequential SGD per model;
 /// annealed at 1/3 and 2/3 of training for the vision recipes).

@@ -174,6 +174,46 @@ pub struct FreerunStats {
     pub staleness: StalenessHistogram,
     /// per-worker activity, indexed by worker id
     pub workers: Vec<WorkerActivity>,
+    /// roster/storage telemetry of the membership scale engine
+    /// ([`crate::membership::run_scale`]); `None` on the dense freerun path
+    pub membership: Option<MembershipStats>,
+}
+
+/// What the membership scale engine measures on top of the freerun
+/// counters: roster flux (joins/leaves/rejections), partner draws that hit
+/// vacant slots, and the compact node-store's memory accounting — the
+/// bytes-per-node budget the `BENCH_scale` rows track.
+#[derive(Clone, Debug)]
+pub struct MembershipStats {
+    /// roster capacity (slot count) — the configured n
+    pub capacity: usize,
+    /// live nodes when the run started
+    pub live_start: u64,
+    /// live nodes when the run ended
+    pub live_end: u64,
+    /// node arrivals admitted into recycled slots
+    pub joins: u64,
+    /// node departures (slots vacated)
+    pub leaves: u64,
+    /// arrivals dropped because no slot was vacant
+    pub rejected_joins: u64,
+    /// partner draws that hit a vacant (churned-out) slot and re-drew
+    pub churn_misses: u64,
+    /// claimed events abandoned without an interaction (no live initiator
+    /// found, or consumed by a churn transition)
+    pub skipped_events: u64,
+    /// resident bytes per node the engine accounts for (store record +
+    /// per-slot atomics + roster generation + speed rate)
+    pub bytes_per_node: u64,
+    /// configured bytes-per-node ceiling (0 = unenforced)
+    pub node_budget: u64,
+    /// nodes whose models escaped the storage lattice to full-precision
+    /// side buffers
+    pub raw_nodes: u64,
+    /// storage decodes that failed the checksum (reference-filled, counted)
+    pub decode_failures: u64,
+    /// live nodes sampled for the final consensus/loss evaluation
+    pub eval_sample: usize,
 }
 
 impl FreerunStats {
@@ -366,6 +406,7 @@ mod tests {
                 WorkerActivity { busy_secs: 1.0, wait_secs: 0.25, interactions: 10 },
                 WorkerActivity { busy_secs: 2.0, wait_secs: 0.75, interactions: 20 },
             ],
+            membership: None,
         };
         assert!((s.busy_total() - 3.0).abs() < 1e-12);
         assert!((s.wait_total() - 1.0).abs() < 1e-12);

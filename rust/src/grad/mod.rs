@@ -10,9 +10,11 @@
 //! (c) the n=256 scaling figure (paper Fig. 6a) is tractable.
 
 mod logistic;
+mod proc_quadratic;
 mod quadratic;
 mod softmax;
 
 pub use logistic::LogisticOracle;
+pub use proc_quadratic::{ProcQuadraticOracle, EVAL_AGENT_SAMPLE};
 pub use quadratic::QuadraticOracle;
 pub use softmax::SoftmaxOracle;

@@ -1,0 +1,282 @@
+//! Table-free twin of [`super::QuadraticOracle`] for the scale regime.
+//!
+//! The dense oracle materializes `d`/`c` as `agents × dim` f64 tables —
+//! exactly what the paper's assumptions need for small n, but ~1 GiB at
+//! n = 1M, dim 64, which would dwarf the entire compact
+//! [`crate::membership::NodeStore`] arena it sits next to. This variant
+//! stores **nothing per agent**: every curvature `d_ij ~ U[l_min, l_max]`
+//! and optimum coordinate `c_ij ~ N(0, spread²)` is re-derived on access
+//! from a splitmix64 finalizer over `(seed, agent·dim + j)`, so the oracle
+//! is O(1) memory at any n and two instances with the same seed define the
+//! *same* objective in different processes — no tables to ship.
+//!
+//! The trade for statelessness is exactness of the *global* statistics:
+//! `eval`/`full_loss`/`grad_norm_sq` average over a strided sample of
+//! [`EVAL_AGENT_SAMPLE`] agents once n exceeds it (below the cutover they
+//! are exact, matching the dense oracle's contract). Per-agent `step`
+//! math is identical to the dense oracle: `g = d_ij(x − c_ij) + σ·ξ`.
+
+use crate::backend::{Backend, EvalResult};
+use crate::rngx::Pcg64;
+
+/// Agents averaged by `eval`/`full_loss`/`grad_norm_sq`; below this count
+/// the sampled statistics are exact (stride 1). Matches the scale engine's
+/// default model-eval sample so a scale run's loss curve and its oracle
+/// loss are estimated at the same resolution.
+pub const EVAL_AGENT_SAMPLE: usize = 4096;
+
+/// splitmix64 finalizer keyed on `(seed, idx)` — the per-coordinate field
+/// generator. Full-64-bit idx, so any `agents × dim` product is collision-
+/// free (the `quant::hash_u32` path would wrap past 4.29e9 coordinates).
+#[inline]
+fn mix(seed: u64, idx: u64) -> u64 {
+    let mut z = seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Top 53 bits → f64 in [0, 1).
+#[inline]
+fn u01(z: u64) -> f64 {
+    (z >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+}
+
+/// Top 53 bits → f64 in (0, 1] — safe as a log argument in Box–Muller.
+#[inline]
+fn u01_open(z: u64) -> f64 {
+    ((z >> 11) + 1) as f64 * (1.0 / 9_007_199_254_740_992.0)
+}
+
+pub struct ProcQuadraticOracle {
+    pub dim: usize,
+    pub agents: usize,
+    /// heterogeneity scale: c_ij ~ N(0, spread²)
+    pub spread: f64,
+    /// curvature range: d_ij ~ U[l_min, l_max]
+    pub l_min: f64,
+    pub l_max: f64,
+    /// gradient noise stddev (σ of the paper's variance bound)
+    pub sigma: f64,
+    seed: u64,
+}
+
+impl ProcQuadraticOracle {
+    pub fn new(
+        dim: usize,
+        agents: usize,
+        spread: f64,
+        l_min: f64,
+        l_max: f64,
+        sigma: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(l_min > 0.0 && l_max >= l_min);
+        Self { dim, agents, spread, l_min, l_max, sigma, seed }
+    }
+
+    /// Curvature d_ij ∈ [l_min, l_max], re-derived from the hash field.
+    #[inline]
+    pub fn d_at(&self, agent: usize, j: usize) -> f64 {
+        let idx = (agent * self.dim + j) as u64;
+        self.l_min + u01(mix(self.seed, 3 * idx)) * (self.l_max - self.l_min)
+    }
+
+    /// Local optimum coordinate c_ij ~ N(0, spread²), via Box–Muller over
+    /// two independent hash draws.
+    #[inline]
+    pub fn c_at(&self, agent: usize, j: usize) -> f64 {
+        let idx = (agent * self.dim + j) as u64;
+        let u1 = u01_open(mix(self.seed, 3 * idx + 1));
+        let u2 = u01(mix(self.seed, 3 * idx + 2));
+        self.spread * (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Stride of the eval sample: 1 (exact) while agents ≤
+    /// [`EVAL_AGENT_SAMPLE`], else every `agents / EVAL_AGENT_SAMPLE`-th
+    /// agent.
+    #[inline]
+    fn eval_stride(&self) -> usize {
+        (self.agents / EVAL_AGENT_SAMPLE).max(1)
+    }
+
+    /// f(x) averaged over the strided agent sample (exact below the
+    /// cutover — see [`EVAL_AGENT_SAMPLE`]).
+    pub fn sampled_loss(&self, x: &[f64]) -> f64 {
+        let stride = self.eval_stride();
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for i in (0..self.agents).step_by(stride) {
+            for j in 0..self.dim {
+                let dx = x[j] - self.c_at(i, j);
+                acc += 0.5 * self.d_at(i, j) * dx * dx;
+            }
+            count += 1;
+        }
+        acc / count.max(1) as f64
+    }
+
+    /// ∇f(x) over the same strided agent sample.
+    pub fn sampled_grad(&self, x: &[f64]) -> Vec<f64> {
+        let stride = self.eval_stride();
+        let mut g = vec![0.0f64; self.dim];
+        let mut count = 0usize;
+        for i in (0..self.agents).step_by(stride) {
+            for j in 0..self.dim {
+                g[j] += self.d_at(i, j) * (x[j] - self.c_at(i, j));
+            }
+            count += 1;
+        }
+        let inv = 1.0 / count.max(1) as f64;
+        for v in &mut g {
+            *v *= inv;
+        }
+        g
+    }
+}
+
+impl Backend for ProcQuadraticOracle {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init(&self) -> (Vec<f32>, Vec<f32>) {
+        // deterministic start (paper: x_0 = 0^d), same as the dense oracle
+        (vec![0.0; self.dim], vec![0.0; self.dim])
+    }
+
+    fn step(
+        &self,
+        agent: usize,
+        params: &mut [f32],
+        mom: &mut [f32],
+        lr: f32,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        debug_assert!(agent < self.agents);
+        let mut loss = 0.0;
+        for j in 0..self.dim {
+            let x = params[j] as f64;
+            let dij = self.d_at(agent, j);
+            let cij = self.c_at(agent, j);
+            let noise = if self.sigma > 0.0 { rng.normal() * self.sigma } else { 0.0 };
+            let g = dij * (x - cij) + noise;
+            loss += 0.5 * dij * (x - cij) * (x - cij);
+            // plain SGD (mu=0) — the theory setting; momentum unused here
+            mom[j] = g as f32;
+            params[j] = (x - lr as f64 * g) as f32;
+        }
+        loss
+    }
+
+    fn eval(&self, params: &[f32]) -> EvalResult {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        EvalResult { loss: self.sampled_loss(&x), accuracy: f64::NAN }
+    }
+
+    fn full_loss(&self, params: &[f32]) -> f64 {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        self.sampled_loss(&x)
+    }
+
+    fn grad_norm_sq(&self, params: &[f32]) -> Option<f64> {
+        let x: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        Some(self.sampled_grad(&x).iter().map(|g| g * g).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fields_are_in_range_and_seed_deterministic() {
+        let a = ProcQuadraticOracle::new(8, 64, 1.5, 0.5, 2.0, 0.0, 7);
+        let b = ProcQuadraticOracle::new(8, 64, 1.5, 0.5, 2.0, 0.0, 7);
+        let other = ProcQuadraticOracle::new(8, 64, 1.5, 0.5, 2.0, 0.0, 8);
+        let mut differs = false;
+        for i in 0..64 {
+            for j in 0..8 {
+                let d = a.d_at(i, j);
+                assert!((0.5..=2.0).contains(&d), "d out of range: {d}");
+                assert!(a.c_at(i, j).is_finite());
+                assert_eq!(d, b.d_at(i, j));
+                assert_eq!(a.c_at(i, j), b.c_at(i, j));
+                differs |= a.d_at(i, j) != other.d_at(i, j);
+            }
+        }
+        assert!(differs, "seed must change the field");
+    }
+
+    #[test]
+    fn c_field_has_normal_statistics() {
+        // Box–Muller over hash draws: mean ≈ 0, variance ≈ spread² across
+        // a large coordinate population.
+        let spread = 1.3;
+        let o = ProcQuadraticOracle::new(64, 4096, spread, 1.0, 1.0, 0.0, 42);
+        let n = 200_000usize;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for k in 0..n {
+            let c = o.c_at(k / 64, k % 64);
+            s1 += c;
+            s2 += c * c;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var / (spread * spread) - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn noiseless_single_agent_converges_to_its_own_optimum() {
+        // one agent: f(x) = ½Σ d_j (x_j − c_j)², minimized exactly at c
+        let o = ProcQuadraticOracle::new(8, 1, 1.0, 0.5, 2.0, 0.0, 5);
+        let (mut p, mut m) = o.init();
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..500 {
+            o.step(0, &mut p, &mut m, 0.1, &mut rng);
+        }
+        let f = o.full_loss(&p);
+        assert!(f < 1e-6, "f={f}");
+        for j in 0..8 {
+            assert!((p[j] as f64 - o.c_at(0, j)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sampled_eval_is_exact_below_the_cutover() {
+        // agents ≤ EVAL_AGENT_SAMPLE → stride 1 → sampled == brute force
+        let o = ProcQuadraticOracle::new(4, 33, 1.0, 0.5, 2.0, 0.0, 9);
+        let x = vec![0.25f64; 4];
+        let mut exact = 0.0;
+        for i in 0..33 {
+            for j in 0..4 {
+                let dx = x[j] - o.c_at(i, j);
+                exact += 0.5 * o.d_at(i, j) * dx * dx;
+            }
+        }
+        exact /= 33.0;
+        assert!((o.sampled_loss(&x) - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_is_deterministic_in_caller_rng() {
+        let o = ProcQuadraticOracle::new(8, 2, 1.0, 0.5, 2.0, 0.3, 11);
+        let run = || {
+            let (mut p, mut m) = o.init();
+            let mut rng = Pcg64::stream(42, 7);
+            for _ in 0..50 {
+                o.step(1, &mut p, &mut m, 0.05, &mut rng);
+            }
+            p
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn oracle_holds_no_per_agent_state() {
+        // the whole point: n = 1M costs the same bytes as n = 2
+        assert!(std::mem::size_of::<ProcQuadraticOracle>() <= 64);
+        let _big = ProcQuadraticOracle::new(64, 1_000_000, 1.0, 0.5, 2.0, 0.2, 1);
+    }
+}

@@ -154,6 +154,43 @@
 //! emits `BENCH_scenario.json` (convergence vs staleness p99 vs spectral
 //! gap per topology).
 //!
+//! # Scale regime
+//!
+//! The executors above materialize every node densely (five `dim`-wide
+//! vectors per node plus a double-buffered slot), which is the right
+//! trade below ~65k nodes and an impossible one at a million. The
+//! [`membership`] subsystem owns the scale regime:
+//!
+//! * **Compact node state** — [`membership::NodeStore`] parks each node's
+//!   model lattice-encoded against the initial model (the wire codec
+//!   reused as a storage codec: 16 bits/coordinate, ~200 bytes/node at
+//!   d=64 including the RNG/steps header and per-slot atomics), decoded
+//!   into per-worker scratch only while an interaction touches it. A
+//!   sticky full-precision escape catches models that drift out of
+//!   lattice range; `node_budget=` enforces a bytes-per-node ceiling
+//!   *before* allocation.
+//! * **Shard-local sampling** — [`membership::ProcGraph`] resolves
+//!   complete/ring/torus/hypercube/expander overlays to O(1) closed-form
+//!   neighbor draws above the 65 536-node materialize cutover, and every
+//!   worker samples on its private [`rngx::Pcg64`] stream — no global
+//!   RNG, no global edge list.
+//! * **Live churn** — `--churn join:<r>,leave:<r>` runs an open roster
+//!   ([`membership::Roster`]): generation-stamped slots (recycled slots
+//!   never alias departed incarnations), joiners bootstrapping from a
+//!   live neighbor snapshot, stationary live count `n·min(1, join/leave)`
+//!   pinned by statistical tests.
+//!
+//! `--executor freerun` routes to [`membership::run_scale`] when n
+//! exceeds the dense cutover or churn is requested (`node_store=` forces
+//! either path); the engine keeps freerun's checkout → local phase →
+//! snapshot merge → commit semantics and its non-replayable,
+//! throughput-faithful contract, and reports roster/storage telemetry in
+//! [`coordinator::MembershipStats`]. What the compact record does *not*
+//! persist — momentum and per-node simulated clocks — is documented on
+//! [`membership::engine`]. `benches/bench_scale.rs` tracks
+//! interactions/sec and resident bytes/node against n in
+//! `BENCH_scale.json`.
+//!
 //! # Observability
 //!
 //! The [`obs`] module is the cross-cutting layer that makes a run's
@@ -196,6 +233,7 @@ pub mod data;
 pub mod figures;
 pub mod grad;
 pub mod kernels;
+pub mod membership;
 pub mod netmodel;
 pub mod obs;
 pub mod output;

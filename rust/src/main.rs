@@ -19,7 +19,7 @@
 //! merge-kernel implementation every interaction dispatches to.
 
 use std::path::Path;
-use swarm_sgd::backend::build_backend;
+use swarm_sgd::backend::{build_backend, Backend};
 use swarm_sgd::cli::{Cli, USAGE};
 use swarm_sgd::cluster::{self, ClusterOpts, Role};
 use swarm_sgd::config::RunConfig;
@@ -28,11 +28,12 @@ use swarm_sgd::coordinator::{
     AlgoOptions, Algorithm, RunMetrics, RunSpec,
 };
 use swarm_sgd::figures::{run_figure, write_curves};
+use swarm_sgd::membership::{run_scale, ScaleOptions};
 use swarm_sgd::obs;
 use swarm_sgd::output::Table;
 use swarm_sgd::rngx::Pcg64;
 use swarm_sgd::runtime::load_manifest;
-use swarm_sgd::scenario::Scenario;
+use swarm_sgd::scenario::{Scenario, SpeedClass};
 use swarm_sgd::topology::{spectral_gap, Graph};
 
 fn main() {
@@ -86,6 +87,9 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         "directed",
         "dirichlet",
         "topology-schedule",
+        "churn",
+        "node-store",
+        "node-budget",
         "trace-out",
         "trace-sample",
         "metrics-out",
@@ -108,6 +112,15 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
     // the cluster executor dispatches before any single-process setup:
     // workers receive the config from the coordinator over the wire, and
     // the coordinator validates algorithm eligibility itself
+    if cfg.executor == "cluster" && cfg.churn_spec()?.active() {
+        return Err(
+            "--churn is a scale-engine feature of --executor freerun; the \
+             cluster executor keeps a fixed roster (its coordinator tracks \
+             roster epochs for shard reassignment only) — drop the --churn \
+             flag, or run --executor freerun"
+                .into(),
+        );
+    }
     if let Some(opts) = cluster::from_cli(cli, &cfg)? {
         return cmd_cluster(&cfg, &opts);
     }
@@ -134,6 +147,12 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         },
     )?;
     let backend = build_backend(&cfg)?;
+    // the scale regime routes before the Scenario is built: materializing
+    // a million-node graph (or dense per-node states) is exactly what the
+    // membership subsystem exists to avoid
+    if cfg.executor == "freerun" && cfg.scale_engine_selected()? {
+        return cmd_train_scale(&cfg, algo.as_ref(), backend.as_ref());
+    }
     // the scenario resolves the whole run environment — topology stages,
     // per-node speed classes, directedness — and rejects infeasible combos
     // (torus on a non-square n, hypercube off a power of two, ...) here
@@ -226,6 +245,83 @@ fn cmd_train(cli: &Cli) -> Result<(), String> {
         metrics.executor
     );
     report_run(&cfg, metrics, wall)
+}
+
+/// The membership scale-engine path — `--executor freerun` routed here by
+/// [`RunConfig::scale_engine_selected`] (large n under `node_store=auto`,
+/// any active `--churn`, or an explicit `node_store=compact`). Node state
+/// rests lattice-encoded in the compact store and partner draws are
+/// procedural, so nothing here is O(n·dim) resident except the store
+/// arena itself.
+fn cmd_train_scale(
+    cfg: &RunConfig,
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+) -> Result<(), String> {
+    if cfg.directed {
+        return Err(
+            "--directed is push-sum (sgp) machinery; the scale engine carries \
+             plain payloads over undirected procedural graphs — drop \
+             --directed, or run sgp on the dense freerun executor"
+                .into(),
+        );
+    }
+    if !cfg.topology_schedule.is_empty() {
+        return Err(
+            "--topology-schedule is not supported on the scale engine (its \
+             graphs are procedural, not staged); drop the schedule, or stay \
+             below the materialize cutover with node_store=dense"
+                .into(),
+        );
+    }
+    if !cfg.trace_out.is_empty() {
+        return Err(
+            "--trace-out is not supported on the scale engine (per-event \
+             span rings don't scale to millions of nodes); use --metrics-out \
+             for cadenced Prometheus snapshots instead"
+                .into(),
+        );
+    }
+    let opts = ScaleOptions {
+        threads: cfg.threads,
+        topology: cfg.topology_enum()?,
+        speeds: SpeedClass::parse(&cfg.speeds)?,
+        churn: cfg.churn_spec()?,
+        node_budget: cfg.node_budget,
+        eval_sample: 0,
+        metrics_out: if cfg.metrics_out.is_empty() {
+            None
+        } else {
+            Some(cfg.metrics_out.clone())
+        },
+    };
+    let spec = RunSpec {
+        n: cfg.n,
+        events: cfg.interactions,
+        lr: cfg.lr_schedule_enum()?,
+        seed: cfg.seed,
+        name: format!("{}-scale", cfg.algo),
+        eval_every: cfg.eval_every,
+        track_gamma: cfg.track_gamma,
+    };
+    let cost = cfg.cost_model();
+    println!(
+        "scale engine: {} worker thread(s), compact node store, algorithm={} \
+         n={} topology={}{} (non-replayable)",
+        cfg.effective_threads(),
+        cfg.algo,
+        cfg.n,
+        cfg.topology,
+        if opts.churn.active() { format!(" churn={}", opts.churn) } else { String::new() },
+    );
+    let started = std::time::Instant::now();
+    let metrics = run_scale(algo, backend, &spec, &cost, &opts)?;
+    let wall = started.elapsed();
+    println!(
+        "throughput: {:.0} events/s wall-clock (scale engine)",
+        metrics.interactions as f64 / wall.as_secs_f64().max(1e-9),
+    );
+    report_run(cfg, metrics, wall)
 }
 
 /// The `--executor cluster` entry point: one process per role.
@@ -326,6 +422,35 @@ fn report_run(
             fr.busy_total(),
             fr.wait_total(),
         );
+        if let Some(ms) = &fr.membership {
+            println!(
+                "\nmembership (scale engine, roster capacity {}):\n\
+                 live nodes       : {} -> {} ({} joins, {} leaves, \
+                 {} rejected joins)\n\
+                 churn collisions : {} dropped partner/cross-writes, \
+                 {} skipped events\n\
+                 node store       : {} bytes/node resident{}, \
+                 {} raw-escaped node(s), {} decode failure(s)\n\
+                 final eval       : {} live node(s) sampled",
+                ms.capacity,
+                ms.live_start,
+                ms.live_end,
+                ms.joins,
+                ms.leaves,
+                ms.rejected_joins,
+                ms.churn_misses,
+                ms.skipped_events,
+                ms.bytes_per_node,
+                if ms.node_budget > 0 {
+                    format!(" (budget {})", ms.node_budget)
+                } else {
+                    String::new()
+                },
+                ms.raw_nodes,
+                ms.decode_failures,
+                ms.eval_sample,
+            );
+        }
     }
     if !cfg.trace_out.is_empty() {
         if let Some(tr) = &metrics.trace {

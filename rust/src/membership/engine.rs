@@ -1,0 +1,831 @@
+//! The membership scale engine: a free-running executor over the compact
+//! [`NodeStore`] and the live [`Roster`], for node counts the dense
+//! executor cannot hold (n ∈ {10k, 100k, 1M} on one box).
+//!
+//! The dense freerun executor keeps every node's full [`NodeState`] (five
+//! `dim`-wide vectors plus a double-buffered slot) resident — perfect at
+//! thousands of nodes, impossible at a million. This engine inverts the
+//! representation: node state *rests* lattice-encoded in the store
+//! (~200 bytes/node at d=64) and is materialized into one per-worker
+//! [`NodeState`] + [`MergeScratch`] only while an interaction touches it.
+//! The executor protocol is freerun's, re-read through the store:
+//!
+//! 1. the worker claims a global event index and picks a live initiator
+//!    from its own slot range (speed-class rejection sampling — no global
+//!    RNG, no cross-shard contention);
+//! 2. checkout: seqlock-read + decode the initiator's record, resume its
+//!    private RNG via [`Pcg64::from_raw_state`];
+//! 3. the policy's local phase, then a partner draw over the procedural
+//!    graph ([`ProcGraph::sample_neighbor`], O(1)) retried past vacant
+//!    slots, the partner's record snapshot-read, and the policy merge;
+//! 4. commit: re-encode + write back the initiator's record (spinning out
+//!    the rare cross-write race), best-effort cross-write the partner
+//!    (dropped and counted on conflict or churn — nobody ever waits).
+//!
+//! **What is deliberately not persisted per node**: momentum (zeroed at
+//! every checkout — the pairwise policies exchange models only, and the
+//! paper's analysis carries no cross-interaction momentum) and the
+//! simulated per-node clock (compute/comm charges are summed globally, so
+//! throughput and totals survive; the per-node max — `sim_time` — does
+//! not, and is reported as NaN). Both are the price of the ~200-byte
+//! record, stated here and in the stats.
+//!
+//! **Churn** ([`ChurnSpec`]) runs as a per-event birth–death competition
+//! in each worker: before each claimed event, one departure fires with
+//! probability `leave · live_owned/owned` (death rate ∝ live population)
+//! and one arrival with probability `join` (birth rate ∝ capacity, since
+//! events are dealt ∝ owned slots). The stationary live count is therefore
+//! `n · min(1, join/leave)`, mean-reverting — the band the membership
+//! statistical test pins. Joiners take a recycled slot under a fresh
+//! odd [`Roster`] generation, bootstrap their model from a live
+//! neighbor's snapshot (falling back to the initial model), and derive a
+//! fresh RNG stream from `(seed, slot, generation)` so no recycled slot
+//! ever replays a departed node's randomness.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Barrier;
+use std::time::Instant;
+
+use crate::backend::Backend;
+use crate::coordinator::{
+    Algorithm, CurvePoint, FreerunStats, LrSchedule, MembershipStats, MergeScratch,
+    MixPolicy, NodeState, PayloadKind, RunMetrics, RunSpec, StalenessHistogram, StepCtx,
+    WorkerActivity,
+};
+use crate::netmodel::CostModel;
+use crate::obs::metrics::append_snapshot;
+use crate::obs::{MetricsRegistry, METRICS_CADENCE};
+use crate::rngx::Pcg64;
+use crate::scenario::{SpeedClass, STREAM_SCENARIO};
+use crate::topology::{Graph, Topology};
+
+use super::roster::{ChurnSpec, Roster};
+use super::sampling::ProcGraph;
+use super::store::NodeStore;
+
+/// Worker RNG stream tags (`STREAM_SCALE_WORKER + worker_id`).
+const STREAM_SCALE_WORKER: u64 = 0x5EED_3CA1_0000_0100;
+/// Node RNG stream tags (`STREAM_SCALE_NODE + slot`); joiner incarnations
+/// fold the roster generation into the root seed instead, so recycled
+/// slots never replay a departed node's stream.
+const STREAM_SCALE_NODE: u64 = 0x5EED_3CA1_0010_0000;
+
+/// Staleness histogram capacity: exact buckets for lags up to 4096, one
+/// overflow bucket above (the dense executor sizes by `n`, which would be
+/// an 8M-bucket allocation per worker at n=1M).
+const STALENESS_CAP: usize = 4096;
+
+/// Partner re-draws past vacant (churned-out) slots before the event runs
+/// as an isolated local phase.
+const PARTNER_TRIES: usize = 8;
+
+/// Initiator rejection-sampling tries before the event is skipped (only
+/// reachable when a worker's entire range churned out or carries extreme
+/// speed-class skew).
+const INITIATOR_TRIES: usize = 64;
+
+/// Knobs of one scale-engine run, beyond the shared [`RunSpec`].
+#[derive(Clone, Debug)]
+pub struct ScaleOptions {
+    /// worker threads (0 = available parallelism)
+    pub threads: usize,
+    /// overlay family — must be procedural-capable above the materialize
+    /// cutover (see [`ProcGraph::resolve`])
+    pub topology: Topology,
+    /// per-node speed classes (initiation-rate skew)
+    pub speeds: SpeedClass,
+    /// live churn spec (fixed roster when inactive)
+    pub churn: ChurnSpec,
+    /// resident bytes-per-node ceiling, enforced before allocation
+    /// (0 = unenforced)
+    pub node_budget: u64,
+    /// live nodes sampled for the final consensus/loss evaluation
+    /// (0 = min(n, 4096))
+    pub eval_sample: usize,
+    /// Prometheus-text metrics snapshots appended here at the obs cadence
+    pub metrics_out: Option<String>,
+}
+
+impl Default for ScaleOptions {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            topology: Topology::Complete,
+            speeds: SpeedClass::Uniform,
+            churn: ChurnSpec::none(),
+            node_budget: 0,
+            eval_sample: 0,
+            metrics_out: None,
+        }
+    }
+}
+
+/// Shared run state every scale worker sees.
+struct ScaleShared<'a> {
+    backend: &'a dyn Backend,
+    cost: &'a CostModel,
+    policy: &'a dyn MixPolicy,
+    store: &'a NodeStore,
+    roster: &'a Roster,
+    graph: &'a ProcGraph,
+    rates: &'a [f64],
+    max_rate: f64,
+    lr: LrSchedule,
+    churn: ChurnSpec,
+    seed: u64,
+    dim: usize,
+    n: usize,
+    /// interactions completed (the staleness/lr clock, as in freerun)
+    done: AtomicU64,
+    /// global event indices (lr schedule only; never redistributes work)
+    claimed: AtomicU64,
+    bits: AtomicU64,
+    fallbacks: AtomicU64,
+    churn_misses: AtomicU64,
+    skipped: AtomicU64,
+    local_steps: AtomicU64,
+    /// f64 totals flushed once per worker at exit (bit-stable join order
+    /// is irrelevant: these are throughput aggregates, and this executor
+    /// is non-replayable by contract anyway)
+    compute_ns: AtomicU64,
+    comm_ns: AtomicU64,
+    /// placeholder for [`StepCtx::graph`]: the pairwise policies' local
+    /// phase and merge never consult it (partner draws happen here, over
+    /// the procedural graph) — asserted by the engine's policy gate
+    pair_graph: Graph,
+}
+
+/// One worker's private tallies, merged at join.
+struct WorkerOut {
+    activity: WorkerActivity,
+    staleness: StalenessHistogram,
+    read_retries: u64,
+    publish_retries: u64,
+    push_conflicts: u64,
+}
+
+/// Run `algo` free-running over the compact store at roster capacity
+/// `spec.n`. Requires a plain-model [`MixPolicy`] (the same gate as the
+/// dense freerun path, narrowed: push-sum's weighted slots assume
+/// cross-writes mutate canonical state, which the best-effort store
+/// protocol does not guarantee under churn).
+pub fn run_scale(
+    algo: &dyn Algorithm,
+    backend: &dyn Backend,
+    spec: &RunSpec,
+    cost: &CostModel,
+    opts: &ScaleOptions,
+) -> Result<RunMetrics, String> {
+    let n = spec.n;
+    if n < 2 {
+        return Err(format!(
+            "the scale engine needs n >= 2 (got n={n}); pairwise gossip has \
+             no partner to draw at n < 2"
+        ));
+    }
+    let policy = algo.mix_policy().ok_or_else(|| {
+        format!(
+            "algorithm '{}' has no free-running mix policy, so it cannot run \
+             on the scale engine: use swarm|poisson|adpsgd|dpsgd, or a replay \
+             executor at small n",
+            algo.name()
+        )
+    })?;
+    if policy.payload() != PayloadKind::Plain {
+        return Err(format!(
+            "algorithm '{}' publishes weighted (push-sum) slot payloads, \
+             which the compact store does not carry: use \
+             swarm|poisson|adpsgd|dpsgd at scale, or the dense freerun \
+             executor for sgp",
+            algo.name()
+        ));
+    }
+    let graph = ProcGraph::resolve(opts.topology, n, spec.seed)?;
+    let (params0, _mom0) = backend.init();
+    let dim = params0.len();
+
+    // budget gate BEFORE the arena allocation: resident bytes per node =
+    // store record + per-slot atomics + roster generation + speed rate
+    let per_node = (NodeStore::record_bytes(dim) + 4 + 8) as u64;
+    if opts.node_budget > 0 && per_node > opts.node_budget {
+        return Err(format!(
+            "node store needs {per_node} bytes/node at d={dim}, over the \
+             node_budget={} ceiling; raise the budget, shrink the model, or \
+             omit the key (or the --node-budget flag) to run unenforced",
+            opts.node_budget
+        ));
+    }
+
+    let threads = match opts.threads {
+        0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        t => t,
+    }
+    .min(n);
+    let store = NodeStore::new(n, params0.clone());
+    let roster = Roster::new(n, n);
+    let rates =
+        opts.speeds.rates(n, &mut Pcg64::stream(spec.seed, STREAM_SCENARIO));
+    let max_rate = rates.iter().cloned().fold(0.0, f64::max).max(1e-300);
+
+    let sh = ScaleShared {
+        backend,
+        cost,
+        policy: policy.as_ref(),
+        store: &store,
+        roster: &roster,
+        graph: &graph,
+        rates: &rates,
+        max_rate,
+        lr: spec.lr,
+        churn: opts.churn,
+        seed: spec.seed,
+        dim,
+        n,
+        done: AtomicU64::new(0),
+        claimed: AtomicU64::new(0),
+        bits: AtomicU64::new(0),
+        fallbacks: AtomicU64::new(0),
+        churn_misses: AtomicU64::new(0),
+        skipped: AtomicU64::new(0),
+        local_steps: AtomicU64::new(0),
+        compute_ns: AtomicU64::new(0),
+        comm_ns: AtomicU64::new(0),
+        pair_graph: Graph::complete(2),
+    };
+    let kernel = algo.kernel();
+    let barrier = Barrier::new(threads);
+    let stop = AtomicBool::new(false);
+
+    let start = Instant::now();
+    let mut outs: Vec<WorkerOut> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| -> Result<(), String> {
+        let monitor = opts.metrics_out.as_deref().map(|path| {
+            let f = std::fs::File::create(path)
+                .map_err(|e| format!("cannot create metrics file {path}: {e}"))?;
+            let shr = &sh;
+            let stopr = &stop;
+            Ok::<_, String>(scope.spawn(move || monitor_loop(shr, stopr, f, per_node)))
+        });
+        let monitor = match monitor {
+            Some(Err(e)) => return Err(e),
+            Some(Ok(h)) => Some(h),
+            None => None,
+        };
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let shr = &sh;
+                let bar = &barrier;
+                let lo = w * n / threads;
+                let hi = (w + 1) * n / threads;
+                let quota = spec.events * (hi as u64) / (n as u64)
+                    - spec.events * (lo as u64) / (n as u64);
+                scope.spawn(move || scale_worker(shr, kernel, w, lo..hi, quota, bar))
+            })
+            .collect();
+        // join everything and set the stop flag BEFORE propagating any
+        // worker panic, or the monitor loop would spin forever
+        let mut worker_panicked = false;
+        for h in handles {
+            match h.join() {
+                Ok(o) => outs.push(o),
+                Err(_) => worker_panicked = true,
+            }
+        }
+        stop.store(true, Ordering::Release);
+        if let Some(h) = monitor {
+            let _ = h.join();
+        }
+        if worker_panicked {
+            return Err("scale worker panicked".to_string());
+        }
+        Ok(())
+    })?;
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    // merge per-worker tallies in worker order
+    let mut staleness = StalenessHistogram::new(STALENESS_CAP);
+    let (mut read_retries, mut publish_retries, mut push_conflicts) = (0u64, 0u64, 0u64);
+    let mut workers = Vec::with_capacity(outs.len());
+    for o in &outs {
+        staleness.merge(&o.staleness);
+        read_retries += o.read_retries;
+        publish_retries += o.publish_retries;
+        push_conflicts += o.push_conflicts;
+        workers.push(o.activity);
+    }
+
+    // final evaluation over a strided sample of live slots (reading all
+    // n records at 1M would dominate the run; the sample size is surfaced
+    // in the stats so no truncation is silent)
+    let eval_sample = match opts.eval_sample {
+        0 => n.min(4096),
+        k => n.min(k),
+    };
+    let mut acc = vec![0.0f64; dim];
+    let mut buf = vec![0.0f32; dim];
+    let mut payload = vec![0u8; store.payload_len()];
+    let mut individual: Vec<f32> = Vec::new();
+    let (mut sampled, mut loss_sum, mut loss_n, mut steps_sum) = (0usize, 0.0f64, 0u64, 0.0f64);
+    let stride = (n / eval_sample).max(1);
+    let mut slot = 0usize;
+    while slot < n && sampled < eval_sample {
+        if roster.is_live(slot) {
+            let meta = store.read_node(slot, &mut buf, &mut payload);
+            for (a, &v) in acc.iter_mut().zip(&buf) {
+                *a += v as f64;
+            }
+            if individual.is_empty() {
+                individual = buf.clone();
+            }
+            if (meta.last_loss as f64).is_finite() {
+                loss_sum += meta.last_loss as f64;
+                loss_n += 1;
+            }
+            steps_sum += backend.epochs(slot, meta.steps);
+            sampled += 1;
+        }
+        slot += stride;
+    }
+    if sampled == 0 {
+        // every sampled slot churned out: fall back to the initial model
+        individual = params0.clone();
+        acc.iter_mut().zip(&params0).for_each(|(a, &v)| *a = v as f64);
+        sampled = 1;
+    }
+    let consensus: Vec<f32> = acc.into_iter().map(|v| (v / sampled as f64) as f32).collect();
+    let ev = backend.eval(&consensus);
+    let ind = backend.eval(&individual);
+    let train_loss = if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 };
+    let epochs = steps_sum / sampled as f64;
+
+    let total_bits = sh.bits.into_inner();
+    let quant_fallbacks = sh.fallbacks.into_inner();
+    // completed interactions (claimed events minus skips) — the honest
+    // throughput numerator
+    let interactions = sh.done.into_inner();
+    let mut m = RunMetrics::new(&spec.name);
+    m.push(CurvePoint {
+        t: spec.events,
+        parallel_time: algo.parallel_time(spec.events, n),
+        // per-node simulated clocks are not persisted in the compact
+        // record (see module docs): the max-clock axis is undefined here
+        sim_time: f64::NAN,
+        epochs,
+        train_loss,
+        eval_loss: ev.loss,
+        eval_acc: ev.accuracy,
+        indiv_loss: ind.loss,
+        gamma: f64::NAN,
+        bits: total_bits,
+    });
+    m.interactions = interactions;
+    m.local_steps = sh.local_steps.into_inner();
+    m.total_bits = total_bits;
+    m.quant_fallbacks = quant_fallbacks;
+    m.sim_time = f64::NAN;
+    m.compute_time_total = sh.compute_ns.into_inner() as f64 * 1e-9;
+    m.comm_time_total = sh.comm_ns.into_inner() as f64 * 1e-9;
+    m.final_eval_loss = ev.loss;
+    m.final_eval_acc = ev.accuracy;
+    m.final_model = consensus;
+    m.epochs = epochs;
+    m.executor = "freerun".to_string();
+    m.threads = threads;
+    m.kernel = kernel.name().to_string();
+    m.freerun = Some(FreerunStats {
+        threads,
+        // sharding is the contiguous slot-range deal, one shard per worker
+        shards: threads,
+        wall_secs,
+        interactions_per_sec: interactions as f64 / wall_secs.max(1e-9),
+        codec: sh.policy.wire().name().to_string(),
+        kernel: kernel.name().to_string(),
+        wire_bits: total_bits,
+        wire_fallbacks: quant_fallbacks,
+        slot_read_retries: read_retries,
+        slot_publish_retries: publish_retries,
+        slot_push_conflicts: push_conflicts,
+        staleness,
+        workers,
+        membership: Some(MembershipStats {
+            capacity: n,
+            live_start: n as u64,
+            live_end: roster.live_count(),
+            joins: roster.joins(),
+            leaves: roster.leaves(),
+            rejected_joins: roster.rejected_joins(),
+            churn_misses: sh.churn_misses.into_inner(),
+            skipped_events: sh.skipped.into_inner(),
+            bytes_per_node: per_node,
+            node_budget: opts.node_budget,
+            raw_nodes: store.raw_nodes(),
+            decode_failures: store.decode_failures(),
+            eval_sample,
+        }),
+    });
+    Ok(m)
+}
+
+/// One scale worker: seed the owned slot range in-thread (NUMA first
+/// touch), then drain the event quota through the checkout → local phase →
+/// partner merge → commit protocol, interleaving the churn competition.
+fn scale_worker(
+    sh: &ScaleShared<'_>,
+    kernel: crate::kernels::Kernel,
+    wid: usize,
+    range: std::ops::Range<usize>,
+    quota: u64,
+    barrier: &Barrier,
+) -> WorkerOut {
+    let dim = sh.dim;
+    let mut rng = Pcg64::stream(sh.seed, STREAM_SCALE_WORKER + wid as u64);
+    let mut payload = vec![0u8; sh.store.payload_len()];
+    let mut st = NodeState::new(vec![0.0; dim], vec![0.0; dim], Pcg64::seed(0));
+    let mut scratch = MergeScratch::with_kernel(dim, kernel);
+    let mut boot = vec![0.0f32; dim];
+
+    // seed owned records in-thread: every node starts at the shared x0
+    // with its private stream, so first-touch places each record's pages
+    // on the seeding worker's NUMA node
+    for slot in range.clone() {
+        let node_rng = Pcg64::stream(sh.seed, STREAM_SCALE_NODE + slot as u64);
+        sh.store.commit(
+            slot,
+            sh.store.reference(),
+            node_rng.state_raw(),
+            0,
+            f32::NAN,
+            0,
+            rng.next_u32(),
+            &mut payload,
+        );
+    }
+    // owned-range worklists: uniform-index removal keeps both draws exact
+    let mut live: Vec<u32> = range.clone().map(|s| s as u32).collect();
+    let mut free: Vec<u32> = Vec::new();
+    barrier.wait();
+
+    let mut out = WorkerOut {
+        activity: WorkerActivity::default(),
+        staleness: StalenessHistogram::new(STALENESS_CAP),
+        read_retries: 0,
+        publish_retries: 0,
+        push_conflicts: 0,
+    };
+    let owned = range.len().max(1) as f64;
+    let (mut local_steps, mut bits, mut fallbacks) = (0u64, 0u64, 0u64);
+    let (mut compute_secs, mut comm_secs) = (0.0f64, 0.0f64);
+    let mut done_local = 0u64;
+    let wall0 = Instant::now();
+    let mut busy_mark = wall0;
+    while done_local < quota {
+        let t = sh.claimed.fetch_add(1, Ordering::Relaxed);
+        done_local += 1;
+
+        if sh.churn.active() {
+            // birth–death competition (module docs): death ∝ live, birth ∝
+            // capacity — stationary at live = n·min(1, join/leave)
+            if !live.is_empty()
+                && rng.bernoulli((sh.churn.leave * live.len() as f64 / owned).min(1.0))
+            {
+                let idx = rng.below_usize(live.len());
+                let slot = live.swap_remove(idx) as usize;
+                sh.roster.retire(slot);
+                free.push(slot as u32);
+            }
+            if rng.bernoulli(sh.churn.join.min(1.0)) {
+                match free.pop() {
+                    Some(slot32) => {
+                        let slot = slot32 as usize;
+                        let gen = sh.roster.admit(slot);
+                        // bootstrap from a live neighbor's snapshot, else x0
+                        let mut src: &[f32] = sh.store.reference();
+                        for _ in 0..PARTNER_TRIES {
+                            let nb = sh.graph.sample_neighbor(slot, &mut rng);
+                            if sh.roster.is_live(nb) && nb != slot {
+                                sh.store.read_node(nb, &mut boot, &mut payload);
+                                src = &boot;
+                                break;
+                            }
+                            sh.churn_misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let joiner = Pcg64::stream(
+                            sh.seed ^ ((gen as u64) << 32),
+                            STREAM_SCALE_NODE + slot as u64,
+                        );
+                        let boot_vec: Vec<f32> = src.to_vec();
+                        sh.store.commit(
+                            slot,
+                            &boot_vec,
+                            joiner.state_raw(),
+                            0,
+                            f32::NAN,
+                            sh.done.load(Ordering::Relaxed),
+                            rng.next_u32(),
+                            &mut payload,
+                        );
+                        live.push(slot32);
+                    }
+                    None => sh.roster.reject_join(),
+                }
+            }
+        }
+
+        // initiator: uniform live owned slot, speed-class rejection sampling
+        let mut initiator = None;
+        for _ in 0..INITIATOR_TRIES {
+            if live.is_empty() {
+                break;
+            }
+            let slot = live[rng.below_usize(live.len())] as usize;
+            if rng.f64() * sh.max_rate < sh.rates[slot] {
+                initiator = Some(slot);
+                break;
+            }
+        }
+        let Some(slot) = initiator else {
+            sh.skipped.fetch_add(1, Ordering::Relaxed);
+            continue;
+        };
+
+        // checkout: decode the record, resume the node's private stream
+        let sync0 = Instant::now();
+        let meta = sh.store.read_node(slot, &mut st.params, &mut payload);
+        out.read_retries += meta.retries;
+        out.activity.wait_secs += sync0.elapsed().as_secs_f64();
+        st.rng = Pcg64::from_raw_state(meta.rng_state);
+        st.steps = meta.steps;
+        st.last_loss = meta.last_loss as f64;
+        st.mom.fill(0.0); // momentum is not persisted (module docs)
+        st.time = 0.0;
+        st.compute = 0.0;
+        st.comm_time = 0.0;
+
+        let h = sh.policy.draw_steps(&mut rng);
+        let ctx = StepCtx {
+            backend: sh.backend,
+            cost: sh.cost,
+            graph: &sh.pair_graph,
+            lr: sh.lr.at(t + 1),
+            dim,
+            n: sh.n,
+        };
+        sh.policy.local_phase(&ctx, slot, &mut st, h);
+        local_steps += h;
+
+        // partner: O(1) procedural draw, retried past vacant slots
+        let mut partner = None;
+        for _ in 0..PARTNER_TRIES {
+            let nb = sh.graph.sample_neighbor(slot, &mut rng);
+            if sh.roster.is_live(nb) && nb != slot {
+                partner = Some(nb);
+                break;
+            }
+            sh.churn_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(p) = partner {
+            let pgen = sh.roster.generation(p);
+            let sync1 = Instant::now();
+            let pmeta = sh.store.read_node(p, &mut scratch.snapshot[..dim], &mut payload);
+            out.read_retries += pmeta.retries;
+            out.activity.wait_secs += sync1.elapsed().as_secs_f64();
+            let now = sh.done.load(Ordering::Relaxed);
+            out.staleness.record(now.saturating_sub(pmeta.stamp));
+            let o = sh.policy.merge(&ctx, slot, &mut st, &mut scratch, &mut rng);
+            bits += o.bits;
+            fallbacks += o.fallbacks;
+
+            let sync2 = Instant::now();
+            let stamp = sh.done.load(Ordering::Relaxed);
+            out.publish_retries += sh.store.commit(
+                slot,
+                &st.params,
+                st.rng.state_raw(),
+                st.steps,
+                st.last_loss as f32,
+                stamp,
+                rng.next_u32(),
+                &mut payload,
+            );
+            // cross-write the partner iff its incarnation survived the
+            // merge (a recycled slot must not inherit a stale model)
+            if sh.roster.generation(p) == pgen {
+                if !sh.store.try_push(p, &scratch.cross[..dim], stamp, rng.next_u32(), &mut payload)
+                {
+                    out.push_conflicts += 1;
+                }
+            } else {
+                sh.churn_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            out.activity.wait_secs += sync2.elapsed().as_secs_f64();
+        } else {
+            // the whole neighborhood churned out: isolated local phase
+            let sync2 = Instant::now();
+            out.publish_retries += sh.store.commit(
+                slot,
+                &st.params,
+                st.rng.state_raw(),
+                st.steps,
+                st.last_loss as f32,
+                sh.done.load(Ordering::Relaxed),
+                rng.next_u32(),
+                &mut payload,
+            );
+            out.activity.wait_secs += sync2.elapsed().as_secs_f64();
+        }
+        compute_secs += st.compute;
+        comm_secs += st.comm_time;
+        sh.done.fetch_add(1, Ordering::Release);
+        out.activity.interactions += 1;
+        // flush hot-path tallies to the shared counters occasionally so
+        // the metrics monitor sees live values without per-event traffic
+        if done_local % 1024 == 0 {
+            sh.bits.fetch_add(bits, Ordering::Relaxed);
+            sh.fallbacks.fetch_add(fallbacks, Ordering::Relaxed);
+            sh.local_steps.fetch_add(local_steps, Ordering::Relaxed);
+            (bits, fallbacks, local_steps) = (0, 0, 0);
+        }
+        let now = Instant::now();
+        out.activity.busy_secs += now.duration_since(busy_mark).as_secs_f64();
+        busy_mark = now;
+    }
+    out.activity.busy_secs -= out.activity.wait_secs.min(out.activity.busy_secs);
+    sh.bits.fetch_add(bits, Ordering::Relaxed);
+    sh.fallbacks.fetch_add(fallbacks, Ordering::Relaxed);
+    sh.local_steps.fetch_add(local_steps, Ordering::Relaxed);
+    sh.compute_ns.fetch_add((compute_secs * 1e9) as u64, Ordering::Relaxed);
+    sh.comm_ns.fetch_add((comm_secs * 1e9) as u64, Ordering::Relaxed);
+    out
+}
+
+/// Metrics monitor: appends one Prometheus-text snapshot per cadence tick
+/// while the workers run, then one final snapshot.
+fn monitor_loop(
+    sh: &ScaleShared<'_>,
+    stop: &AtomicBool,
+    mut f: std::fs::File,
+    per_node: u64,
+) {
+    let reg = MetricsRegistry::new();
+    let live = reg.gauge("swarm_live_nodes", "live roster slots");
+    let joins = reg.gauge("swarm_joins_total", "admitted node arrivals");
+    let leaves = reg.gauge("swarm_leaves_total", "node departures");
+    let rejected = reg.gauge("swarm_rejected_joins_total", "arrivals with no vacant slot");
+    let bpn = reg.gauge("swarm_bytes_per_node", "resident bytes per node");
+    let raw = reg.gauge("swarm_store_raw_nodes", "nodes escaped to full precision");
+    let ips = reg.gauge("swarm_interactions_per_sec", "wall-clock interaction rate");
+    bpn.set(per_node as f64);
+    let start = Instant::now();
+    loop {
+        let finished = stop.load(Ordering::Acquire);
+        live.set(sh.roster.live_count() as f64);
+        joins.set(sh.roster.joins() as f64);
+        leaves.set(sh.roster.leaves() as f64);
+        rejected.set(sh.roster.rejected_joins() as f64);
+        raw.set(sh.store.raw_nodes() as f64);
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        ips.set(sh.done.load(Ordering::Relaxed) as f64 / secs);
+        let _ = append_snapshot(&mut f, &reg);
+        if finished {
+            return;
+        }
+        std::thread::sleep(METRICS_CADENCE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{make_algorithm, AlgoOptions};
+
+    fn quad(n: usize) -> crate::grad::QuadraticOracle {
+        crate::grad::QuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.2, 3)
+    }
+
+    fn spec(n: usize, events: u64) -> RunSpec {
+        RunSpec {
+            n,
+            events,
+            lr: LrSchedule::Constant(0.05),
+            seed: 11,
+            name: "scale-test".into(),
+            eval_every: 0,
+            track_gamma: false,
+        }
+    }
+
+    #[test]
+    fn scale_run_converges_on_the_quadratic() {
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+        let n = 64;
+        let backend = quad(n);
+        let opts = ScaleOptions { threads: 2, ..ScaleOptions::default() };
+        let m = run_scale(
+            algo.as_ref(),
+            &backend,
+            &spec(n, 4000),
+            &CostModel::deterministic(0.1),
+            &opts,
+        )
+        .unwrap();
+        let x0_loss = backend.eval(&backend.init().0).loss;
+        assert!(
+            m.final_eval_loss < 0.5 * x0_loss,
+            "no progress: {} vs x0 {}",
+            m.final_eval_loss,
+            x0_loss
+        );
+        assert_eq!(m.interactions, 4000);
+        assert!(m.local_steps > 0);
+        assert_eq!(m.executor, "freerun");
+        let fr = m.freerun.as_ref().unwrap();
+        let ms = fr.membership.as_ref().unwrap();
+        assert_eq!(ms.capacity, n);
+        assert_eq!(ms.live_end, n as u64); // no churn configured
+        assert_eq!(ms.joins + ms.leaves, 0);
+        assert!(ms.bytes_per_node > 0);
+        assert_eq!(ms.decode_failures, 0);
+    }
+
+    #[test]
+    fn scale_engine_rejects_weighted_payloads_and_tiny_n() {
+        let sgp = make_algorithm("sgp", &AlgoOptions::default()).unwrap();
+        let backend = quad(4);
+        let e = run_scale(
+            sgp.as_ref(),
+            &backend,
+            &spec(4, 10),
+            &CostModel::deterministic(0.1),
+            &ScaleOptions::default(),
+        )
+        .unwrap_err();
+        assert!(e.contains("dense freerun"), "{e}");
+        let lsgd = make_algorithm("localsgd", &AlgoOptions::default()).unwrap();
+        let e = run_scale(
+            lsgd.as_ref(),
+            &backend,
+            &spec(4, 10),
+            &CostModel::deterministic(0.1),
+            &ScaleOptions::default(),
+        )
+        .unwrap_err();
+        assert!(e.contains("no free-running mix policy"), "{e}");
+        let swarm = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+        let one = quad(1);
+        let e = run_scale(
+            swarm.as_ref(),
+            &one,
+            &spec(1, 10),
+            &CostModel::deterministic(0.1),
+            &ScaleOptions::default(),
+        )
+        .unwrap_err();
+        assert!(e.contains("n >= 2"), "{e}");
+    }
+
+    #[test]
+    fn node_budget_gate_fires_before_allocation() {
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+        let backend = quad(8);
+        let opts = ScaleOptions { node_budget: 16, ..ScaleOptions::default() };
+        let e = run_scale(
+            algo.as_ref(),
+            &backend,
+            &spec(8, 10),
+            &CostModel::deterministic(0.1),
+            &opts,
+        )
+        .unwrap_err();
+        assert!(e.contains("bytes/node"), "{e}");
+        assert!(e.contains("node_budget=16"), "{e}");
+    }
+
+    #[test]
+    fn churn_reaches_the_birth_death_equilibrium_band() {
+        let algo = make_algorithm("swarm", &AlgoOptions::default()).unwrap();
+        let n = 512;
+        let backend = quad(n);
+        // join/leave = 0.5 → stationary live ≈ n/2, mean-reverting
+        let opts = ScaleOptions {
+            threads: 2,
+            churn: ChurnSpec { join: 0.25, leave: 0.5 },
+            ..ScaleOptions::default()
+        };
+        let m = run_scale(
+            algo.as_ref(),
+            &backend,
+            &spec(n, 20_000),
+            &CostModel::deterministic(0.1),
+            &opts,
+        )
+        .unwrap();
+        let ms = m.freerun.as_ref().unwrap().membership.as_ref().unwrap();
+        assert!(ms.joins > 0 && ms.leaves > 0, "churn never fired: {ms:?}");
+        let live = ms.live_end as f64 / n as f64;
+        assert!(
+            (0.3..=0.7).contains(&live),
+            "live fraction {live:.3} outside the n/2 equilibrium band ({ms:?})"
+        );
+        assert!(m.final_eval_loss.is_finite());
+    }
+}

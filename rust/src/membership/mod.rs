@@ -1,0 +1,45 @@
+//! The membership subsystem: node roster, compact node-state storage, and
+//! the free-running **scale engine** that makes n ∈ {10k, 100k, 1M}
+//! runnable on one box.
+//!
+//! The paper's population model is an *open* crowd of cheap, transient
+//! nodes — "scalability to hundreds of nodes, [tolerating] node and
+//! message failures" — but every executor before this subsystem assumed a
+//! fixed roster of densely-materialized node states, which caps n at the
+//! tens of thousands and rules out churn entirely. The subsystem owns the
+//! three pieces that change that, each usable on its own:
+//!
+//! * [`roster`] — **who exists**: a generation-stamped slot roster
+//!   ([`Roster`]) whose parity protocol makes `(slot, generation)` a
+//!   unique incarnation identity (recycled slots never alias departed
+//!   nodes), plus the parsed [`ChurnSpec`] join/leave process.
+//! * [`store`] — **where state lives**: the [`NodeStore`] arena keeps each
+//!   node's model lattice-encoded against the initial model (the same
+//!   codec the wire uses, reused as a *storage* codec — ~200 bytes/node at
+//!   d=64 vs ~1 KB dense), under the freerun seqlock protocol, with a
+//!   sticky full-precision escape for models that drift out of lattice
+//!   range.
+//! * [`sampling`] — **who meets whom**: [`ProcGraph`] resolves the overlay
+//!   to O(1) closed-form neighbor draws above the materialize cutover
+//!   (complete / ring / torus / hypercube / circulant-expander), so
+//!   partner sampling holds no global graph and contends on nothing.
+//! * [`engine`] — the [`run_scale`] executor composing the three: freerun
+//!   semantics (checkout → local phase → snapshot merge → commit) over
+//!   compact records, with live churn, per-worker RNG streams, an
+//!   enforced bytes-per-node budget, and roster/storage telemetry in
+//!   [`MembershipStats`](crate::coordinator::MembershipStats).
+//!
+//! The dense executors are untouched: below the scale regime they remain
+//! the replayable (serial/parallel) and measured (freerun) reference
+//! paths; `lib.rs` documents where the regime boundary sits and the CLI
+//! routes `--executor freerun` here when n or churn demands it.
+
+pub mod engine;
+pub mod roster;
+pub mod sampling;
+pub mod store;
+
+pub use engine::{run_scale, ScaleOptions};
+pub use roster::{ChurnSpec, Roster};
+pub use sampling::{ProcGraph, MATERIALIZE_MAX};
+pub use store::{NodeMeta, NodeStore, STORE_BITS, STORE_EPS};

@@ -1,0 +1,238 @@
+//! The generation-stamped node roster: which slots are live, and which
+//! incarnation of a node occupies each slot.
+//!
+//! A slot's generation is a monotonically increasing counter whose parity
+//! encodes liveness: **odd = live, even = vacant** (the same parity trick
+//! as the model-slot seqlock, but per node lifetime instead of per write).
+//! Every join/leave transition bumps the generation by one, so the pair
+//! `(slot, generation)` uniquely names one incarnation of one node — a
+//! recycled slot can never alias a departed node's identity, which is what
+//! lets joiners derive fresh RNG streams and lets stale cross-writes be
+//! recognized as harmless. Only the worker that owns a slot range
+//! transitions its slots, so transitions need no CAS loops; readers on
+//! other workers see liveness through a single acquire load.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Parsed `--churn join:<rate>,leave:<rate>` spec. Rates are per-node
+/// event weights in the engine's competition sampler: with uniform speeds,
+/// each initiated interaction is accompanied by ~`join` expected node
+/// arrivals and ~`leave` expected departures per live node (small rates;
+/// the exact competition is documented on the scale engine).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChurnSpec {
+    /// arrival weight (new nodes claim recycled slots)
+    pub join: f64,
+    /// departure weight (live nodes vacate their slots)
+    pub leave: f64,
+}
+
+impl ChurnSpec {
+    /// The fixed-roster spec (both rates zero).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Whether any churn process is switched on.
+    pub fn active(&self) -> bool {
+        self.join > 0.0 || self.leave > 0.0
+    }
+
+    /// Parse `join:<rate>,leave:<rate>` (either part optional, any order;
+    /// the empty string is the fixed roster). Negative or non-finite rates
+    /// are rejected with an actionable error.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut spec = Self::none();
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(spec);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, val) = part.split_once(':').ok_or_else(|| {
+                format!(
+                    "bad churn '{s}': each part must be join:<rate> or \
+                     leave:<rate> (e.g. join:0.001,leave:0.001)"
+                )
+            })?;
+            let field = match key.trim() {
+                "join" => &mut spec.join,
+                "leave" => &mut spec.leave,
+                k => {
+                    return Err(format!(
+                        "unknown churn part '{k}' in '{s}' (known: join, leave)"
+                    ))
+                }
+            };
+            let rate: f64 = val.trim().parse().map_err(|_| {
+                format!("bad churn rate '{val}' in '{s}': want a number, e.g. join:0.001")
+            })?;
+            if !rate.is_finite() || rate < 0.0 {
+                return Err(format!(
+                    "churn {} rate must be finite and >= 0, got {val}; omit \
+                     the part (or the --churn flag) to run a fixed roster",
+                    key.trim()
+                ));
+            }
+            *field = rate;
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for ChurnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "join:{},leave:{}", self.join, self.leave)
+    }
+}
+
+/// The roster proper: one generation counter per slot plus global flux
+/// counters. See the module docs for the parity protocol.
+pub struct Roster {
+    gen: Box<[AtomicU32]>,
+    live: AtomicU64,
+    joins: AtomicU64,
+    leaves: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Roster {
+    /// Roster with `capacity` slots, the first `live_prefix` of which start
+    /// live at generation 1 (the initial cohort); the rest start vacant.
+    pub fn new(capacity: usize, live_prefix: usize) -> Self {
+        assert!(live_prefix <= capacity, "live prefix exceeds capacity");
+        let gen = (0..capacity)
+            .map(|i| AtomicU32::new(u32::from(i < live_prefix)))
+            .collect();
+        Self {
+            gen,
+            live: AtomicU64::new(live_prefix as u64),
+            joins: AtomicU64::new(0),
+            leaves: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.gen.len()
+    }
+
+    /// Current generation of `slot` (odd = live).
+    #[inline]
+    pub fn generation(&self, slot: usize) -> u32 {
+        self.gen[slot].load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn is_live(&self, slot: usize) -> bool {
+        self.generation(slot) & 1 == 1
+    }
+
+    /// Owner-only: transition a vacant slot to live. Returns the new (odd)
+    /// generation stamping this incarnation.
+    pub fn admit(&self, slot: usize) -> u32 {
+        let g = self.gen[slot].fetch_add(1, Ordering::AcqRel) + 1;
+        debug_assert!(g & 1 == 1, "admit on an already-live slot {slot}");
+        self.live.fetch_add(1, Ordering::Relaxed);
+        self.joins.fetch_add(1, Ordering::Relaxed);
+        g
+    }
+
+    /// Owner-only: transition a live slot to vacant. Returns the new
+    /// (even) generation.
+    pub fn retire(&self, slot: usize) -> u32 {
+        let g = self.gen[slot].fetch_add(1, Ordering::AcqRel) + 1;
+        debug_assert!(g & 1 == 0, "retire on a vacant slot {slot}");
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.leaves.fetch_add(1, Ordering::Relaxed);
+        g
+    }
+
+    /// Count a join that found no vacant slot (the roster is at capacity).
+    pub fn reject_join(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn live_count(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn joins(&self) -> u64 {
+        self.joins.load(Ordering::Relaxed)
+    }
+
+    pub fn leaves(&self) -> u64 {
+        self.leaves.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_joins(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_parse_accepts_both_orders_and_partial_specs() {
+        assert_eq!(ChurnSpec::parse("").unwrap(), ChurnSpec::none());
+        assert!(!ChurnSpec::parse("").unwrap().active());
+        let c = ChurnSpec::parse("join:0.01,leave:0.02").unwrap();
+        assert_eq!(c, ChurnSpec { join: 0.01, leave: 0.02 });
+        let c = ChurnSpec::parse("leave:0.02, join:0.01").unwrap();
+        assert_eq!(c, ChurnSpec { join: 0.01, leave: 0.02 });
+        let c = ChurnSpec::parse("join:0.5").unwrap();
+        assert_eq!(c, ChurnSpec { join: 0.5, leave: 0.0 });
+        assert!(c.active());
+    }
+
+    #[test]
+    fn churn_parse_rejects_bad_specs_with_actionable_errors() {
+        let e = ChurnSpec::parse("join:-0.1").unwrap_err();
+        assert!(e.contains(">= 0"), "{e}");
+        assert!(e.contains("--churn"), "{e}");
+        let e = ChurnSpec::parse("leave:nan").unwrap_err();
+        assert!(e.contains("finite"), "{e}");
+        let e = ChurnSpec::parse("jion:0.1").unwrap_err();
+        assert!(e.contains("known: join, leave"), "{e}");
+        let e = ChurnSpec::parse("join=0.1").unwrap_err();
+        assert!(e.contains("join:<rate>"), "{e}");
+        let e = ChurnSpec::parse("join:lots").unwrap_err();
+        assert!(e.contains("want a number"), "{e}");
+    }
+
+    #[test]
+    fn roster_transitions_keep_parity_and_counts() {
+        let r = Roster::new(4, 3);
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.live_count(), 3);
+        assert!(r.is_live(0) && r.is_live(2) && !r.is_live(3));
+        let g = r.retire(1);
+        assert_eq!(g, 2);
+        assert!(!r.is_live(1));
+        assert_eq!(r.live_count(), 2);
+        let g = r.admit(1);
+        assert_eq!(g, 3);
+        assert!(r.is_live(1));
+        assert_eq!(r.live_count(), 3);
+        assert_eq!(r.joins(), 1);
+        assert_eq!(r.leaves(), 1);
+        r.reject_join();
+        assert_eq!(r.rejected_joins(), 1);
+    }
+
+    #[test]
+    fn recycled_slots_never_alias_prior_generations() {
+        // (slot, generation) pairs are unique across incarnations: the
+        // generation strictly increases through every retire/admit cycle
+        let r = Roster::new(1, 1);
+        let mut seen = std::collections::HashSet::new();
+        assert!(seen.insert(r.generation(0)));
+        for _ in 0..100 {
+            assert!(seen.insert(r.retire(0)));
+            assert!(seen.insert(r.admit(0)));
+        }
+        assert_eq!(r.generation(0), 201);
+    }
+}

@@ -1,0 +1,258 @@
+//! Shard-local partner sampling: O(1) procedural neighbor draws with no
+//! global graph structure and no shared RNG.
+//!
+//! The scenario engine materializes a [`Graph`] (edge + adjacency lists),
+//! which is exactly right up to tens of thousands of nodes and exactly
+//! wrong at a million: a complete graph's edge list alone is ~2 TB. The
+//! structured families the paper's analysis actually uses (complete, ring,
+//! torus, hypercube) all admit *formula* neighbor sampling, so [`ProcGraph`]
+//! keeps them procedural above [`MATERIALIZE_MAX`] nodes and falls back to
+//! a materialized table below it (where arbitrary families, including the
+//! spectrally-certified expander, stay available). Expanders survive the
+//! procedural cutover as random **circulant** graphs — generator 1 keeps
+//! them connected (a ring layer), the remaining seed-derived generators
+//! spread mass like the random-regular family; the spectral certificate
+//! itself only runs at materialized sizes (see [`Graph::expander`]).
+//!
+//! Every worker samples with its own [`Pcg64`] stream against this shared
+//! read-only structure, so partner draws contend on nothing.
+
+use crate::rngx::Pcg64;
+use crate::topology::{Graph, Topology};
+
+/// Largest n at which a topology is materialized into a [`Graph`] table;
+/// above this only the procedural families resolve.
+pub const MATERIALIZE_MAX: usize = 1 << 16;
+
+/// Stream tag for graph construction (materialized tables and circulant
+/// generator draws), disjoint from the worker/node stream tags.
+const STREAM_MEMBER_GRAPH: u64 = 0x5EED_3CA1_0000_0002;
+
+/// A neighbor sampler that is either a closed-form formula (large n) or a
+/// materialized [`Graph`] table (small n).
+#[derive(Clone, Debug)]
+pub enum ProcGraph {
+    /// K_n: any other node.
+    Complete { n: usize },
+    /// C_n: ±1 around the cycle.
+    Ring { n: usize },
+    /// side × side torus: one of the four grid directions.
+    Torus { side: usize },
+    /// Q_bits: flip one coordinate bit.
+    Hypercube { bits: u32 },
+    /// Circulant graph on Z_n with connection set `gens` ∪ `-gens`
+    /// (the procedural expander surrogate).
+    Circulant { n: usize, gens: Vec<usize> },
+    /// Materialized adjacency table (small n; any family).
+    Table(Graph),
+}
+
+impl ProcGraph {
+    /// Resolve `topo` at `n` nodes. Below [`MATERIALIZE_MAX`] every family
+    /// materializes (seeded from `seed`); above it the structured families
+    /// go procedural and the table-only families (random-regular,
+    /// powerlaw) fail with an actionable error.
+    pub fn resolve(topo: Topology, n: usize, seed: u64) -> Result<Self, String> {
+        topo.validate(n)?;
+        if n <= MATERIALIZE_MAX {
+            let mut rng = Pcg64::stream(seed, STREAM_MEMBER_GRAPH);
+            return Ok(ProcGraph::Table(Graph::build(topo, n, &mut rng)));
+        }
+        Ok(match topo {
+            Topology::Complete => ProcGraph::Complete { n },
+            Topology::Ring => ProcGraph::Ring { n },
+            Topology::Torus => {
+                ProcGraph::Torus { side: (n as f64).sqrt().round() as usize }
+            }
+            Topology::Hypercube => ProcGraph::Hypercube { bits: n.trailing_zeros() },
+            Topology::Expander(r) => {
+                // r/2 circulant generator layers; gens[0] = 1 pins
+                // connectivity, the rest are seed-derived and distinct in
+                // [2, n/2) so g and n-g never coincide
+                let mut rng = Pcg64::stream(seed, STREAM_MEMBER_GRAPH);
+                let layers = (r / 2).max(1);
+                let mut gens = vec![1usize];
+                while gens.len() < layers {
+                    let g = 2 + rng.below_usize(n / 2 - 2);
+                    if !gens.contains(&g) {
+                        gens.push(g);
+                    }
+                }
+                ProcGraph::Circulant { n, gens }
+            }
+            Topology::RandomRegular(_) | Topology::PowerLaw(_) => {
+                return Err(format!(
+                    "topology needs a materialized edge table, which is \
+                     infeasible at n={n} (> {MATERIALIZE_MAX}); use complete, \
+                     ring, torus, hypercube, or expander<r> in the scale regime"
+                ));
+            }
+        })
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        match self {
+            ProcGraph::Complete { n }
+            | ProcGraph::Ring { n }
+            | ProcGraph::Circulant { n, .. } => *n,
+            ProcGraph::Torus { side } => side * side,
+            ProcGraph::Hypercube { bits } => 1usize << bits,
+            ProcGraph::Table(g) => g.n(),
+        }
+    }
+
+    /// Degree of the procedural families (max degree for tables) — sizing
+    /// hint for dead-partner retry budgets.
+    pub fn degree_hint(&self) -> usize {
+        match self {
+            ProcGraph::Complete { n } => n - 1,
+            ProcGraph::Ring { .. } => 2,
+            ProcGraph::Torus { .. } => 4,
+            ProcGraph::Hypercube { bits } => *bits as usize,
+            ProcGraph::Circulant { gens, .. } => 2 * gens.len(),
+            ProcGraph::Table(g) => (0..g.n()).map(|u| g.degree(u)).max().unwrap_or(0),
+        }
+    }
+
+    /// Sample a uniform neighbor of `u`. O(1) for the procedural families;
+    /// table lookup otherwise.
+    #[inline]
+    pub fn sample_neighbor(&self, u: usize, rng: &mut Pcg64) -> usize {
+        match self {
+            ProcGraph::Complete { n } => {
+                let j = rng.below_usize(n - 1);
+                if j >= u {
+                    j + 1
+                } else {
+                    j
+                }
+            }
+            ProcGraph::Ring { n } => {
+                if rng.bernoulli(0.5) {
+                    (u + 1) % n
+                } else {
+                    (u + n - 1) % n
+                }
+            }
+            ProcGraph::Torus { side } => {
+                let (r, c) = (u / side, u % side);
+                match rng.below(4) {
+                    0 => r * side + (c + 1) % side,
+                    1 => r * side + (c + side - 1) % side,
+                    2 => ((r + 1) % side) * side + c,
+                    _ => ((r + side - 1) % side) * side + c,
+                }
+            }
+            ProcGraph::Hypercube { bits } => u ^ (1usize << rng.below(*bits as u64)),
+            ProcGraph::Circulant { n, gens } => {
+                let g = gens[rng.below_usize(gens.len())];
+                if rng.bernoulli(0.5) {
+                    (u + g) % n
+                } else {
+                    (u + n - g) % n
+                }
+            }
+            ProcGraph::Table(g) => g.sample_neighbor(u, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_neighbors(pg: &ProcGraph, samples: usize) {
+        let n = pg.n();
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..samples {
+            let u = rng.below_usize(n);
+            let v = pg.sample_neighbor(u, &mut rng);
+            assert!(v < n, "neighbor {v} out of range (n={n})");
+            assert_ne!(v, u, "self-loop from {u}");
+        }
+    }
+
+    #[test]
+    fn small_n_materializes_a_table() {
+        let pg = ProcGraph::resolve(Topology::Ring, 16, 7).unwrap();
+        assert!(matches!(pg, ProcGraph::Table(_)));
+        assert_eq!(pg.n(), 16);
+        assert_eq!(pg.degree_hint(), 2);
+        check_neighbors(&pg, 200);
+    }
+
+    #[test]
+    fn procedural_families_stay_in_range_above_the_cutover() {
+        let n = MATERIALIZE_MAX * 4; // 262144: square AND a power of two
+        for topo in [
+            Topology::Complete,
+            Topology::Ring,
+            Topology::Torus,
+            Topology::Hypercube,
+            Topology::Expander(8),
+        ] {
+            let pg = ProcGraph::resolve(topo, n, 7).unwrap();
+            assert!(
+                !matches!(pg, ProcGraph::Table(_)),
+                "{topo:?} should be procedural at n={n}"
+            );
+            assert_eq!(pg.n(), n, "{topo:?}");
+            check_neighbors(&pg, 500);
+        }
+    }
+
+    #[test]
+    fn table_only_families_fail_actionably_above_the_cutover() {
+        let e = ProcGraph::resolve(Topology::RandomRegular(4), MATERIALIZE_MAX * 2, 7)
+            .unwrap_err();
+        assert!(e.contains("expander"), "{e}");
+        let e =
+            ProcGraph::resolve(Topology::PowerLaw(2), MATERIALIZE_MAX * 2, 7).unwrap_err();
+        assert!(e.contains("infeasible"), "{e}");
+    }
+
+    #[test]
+    fn complete_neighbor_draw_covers_all_and_skips_self() {
+        let pg = ProcGraph::Complete { n: 8 };
+        let mut rng = Pcg64::seed(1);
+        let mut hit = [0u32; 8];
+        for _ in 0..4000 {
+            hit[pg.sample_neighbor(3, &mut rng)] += 1;
+        }
+        assert_eq!(hit[3], 0);
+        for (v, &h) in hit.iter().enumerate() {
+            if v != 3 {
+                assert!(h > 300, "neighbor {v} undersampled: {h}");
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_uses_its_generator_set() {
+        let pg = ProcGraph::Circulant { n: 1000, gens: vec![1, 17, 243] };
+        assert_eq!(pg.degree_hint(), 6);
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..500 {
+            let v = pg.sample_neighbor(10, &mut rng);
+            let d = (v as i64 - 10).rem_euclid(1000);
+            let d = d.min(1000 - d) as usize;
+            assert!([1, 17, 243].contains(&d), "offset {d} not a generator");
+        }
+    }
+
+    #[test]
+    fn expander_resolution_is_deterministic_per_seed() {
+        let n = MATERIALIZE_MAX * 2;
+        let a = ProcGraph::resolve(Topology::Expander(8), n, 11).unwrap();
+        let b = ProcGraph::resolve(Topology::Expander(8), n, 11).unwrap();
+        let (ProcGraph::Circulant { gens: ga, .. }, ProcGraph::Circulant { gens: gb, .. }) =
+            (&a, &b)
+        else {
+            panic!("expected circulant expander surrogate");
+        };
+        assert_eq!(ga, gb);
+        assert_eq!(ga.len(), 4);
+        assert_eq!(ga[0], 1);
+    }
+}

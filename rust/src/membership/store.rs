@@ -1,0 +1,559 @@
+//! Compact node-state storage: per-node models parked lattice-encoded in
+//! one flat arena, materialized into worker scratch only while touched.
+//!
+//! A dense f32 model at d=64 is 256 bytes/node *per copy*, and the freerun
+//! executor keeps three (params in the worker's `NodeState`, the published
+//! slot's double buffer) — ~1 KB/node before counting momentum. The store
+//! replaces all of that with **one** record per node holding the model as
+//! a 16-bit lattice payload (the same codec the wire uses, reused as a
+//! storage codec against a frozen reference model) plus a small header:
+//!
+//! ```text
+//! offset  field                            width
+//! 0       rng state (Pcg64 raw)            16
+//! 16      payload checksum                 8
+//! 24      local SGD steps                  8
+//! 32      stochastic-rounding seed         4
+//! 36      last minibatch loss (f32)        4
+//! 40      raw-escape flag                  1
+//! 41..48  padding                          —
+//! 48      lattice payload                  ceil(d·16/8)
+//! ```
+//!
+//! At d=64 that is 176 bytes/node (48 + 128), ~200 with the per-slot
+//! seqlock/stamp/escape words — the bytes-per-node budget the scale bench
+//! tracks. Quantization noise from re-encoding on every commit is unbiased
+//! stochastic rounding at `STORE_EPS` (fresh seed per commit), far below
+//! the gradient noise of any workload the paper considers.
+//!
+//! **Concurrency** is the freerun `ModelSlot` seqlock, single-buffered:
+//! an odd sequence number marks a write in progress; readers copy out the
+//! record bytes, then validate the sequence was stable across the copy and
+//! retry otherwise (same protocol and safety argument as `ModelSlot`,
+//! without the double buffer — a torn copy is always detected and
+//! discarded, never decoded). Owners `commit` full records (spinning on
+//! the rare cross-write race); partners `try_push` payload-only updates
+//! best-effort, preserving the owner's RNG/step header fields.
+//!
+//! **Raw escape**: the lattice codec is exact only while the model stays
+//! within `(M/2 − 1)·ε` of the reference in every coordinate (~±32.7 at
+//! the default 16-bit/1e-3 grid). A commit that would violate the
+//! criterion flips the node to a lazily-allocated full-precision side
+//! buffer instead (sticky, counted in [`NodeStore::raw_nodes`]) — nothing
+//! ever decodes garbage, and well-behaved runs never allocate one.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{fence, AtomicPtr, AtomicU64, Ordering};
+
+use crate::quant;
+
+/// Bits per coordinate of the storage lattice (M = 2^16 residues).
+pub const STORE_BITS: u32 = 16;
+/// Storage lattice resolution: ±(M/2−1)·ε ≈ ±32.7 of headroom around the
+/// reference model, quantization error ≤ 1e-3 per coordinate.
+pub const STORE_EPS: f32 = 1e-3;
+
+const OFF_RNG: usize = 0;
+const OFF_CHECKSUM: usize = 16;
+const OFF_STEPS: usize = 24;
+const OFF_SEED: usize = 32;
+const OFF_LOSS: usize = 36;
+const OFF_FLAG: usize = 40;
+const HEADER: usize = 48;
+
+/// Per-coordinate deviation from the reference at which a commit escapes
+/// to the raw side buffer: one grid step inside the decode criterion
+/// `(M/2 − 1)·ε`, so encode-side rounding can never push a stored model
+/// across the exactness boundary.
+const ESCAPE_DEV: f32 = ((1u32 << STORE_BITS) / 2 - 2) as f32 * STORE_EPS;
+
+/// Header fields returned by a node checkout.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeMeta {
+    /// global interaction count at the record's last write (staleness base)
+    pub stamp: u64,
+    /// the node's private RNG stream, resumable via `Pcg64::from_raw_state`
+    pub rng_state: u128,
+    /// local SGD steps performed so far
+    pub steps: u64,
+    /// last observed minibatch loss (NaN until the first local phase)
+    pub last_loss: f32,
+    /// seqlock read retries this checkout paid
+    pub retries: u64,
+}
+
+/// The arena. One record per slot; see module docs for layout and
+/// protocol. Safe to share across worker threads (`Sync` below).
+pub struct NodeStore {
+    arena: UnsafeCell<Box<[u8]>>,
+    seq: Box<[AtomicU64]>,
+    stamp: Box<[AtomicU64]>,
+    /// lazily-allocated full-precision escape buffers (null = lattice)
+    raw: Box<[AtomicPtr<f32>]>,
+    reference: Vec<f32>,
+    dim: usize,
+    stride: usize,
+    payload: usize,
+    raw_nodes: AtomicU64,
+    decode_failures: AtomicU64,
+}
+
+// SAFETY: all arena access goes through the per-slot seqlock (`seq`):
+// writers hold the odd sequence while mutating a record, readers copy the
+// record out and validate the sequence was even and unchanged across the
+// copy, discarding torn snapshots. Raw escape buffers are published once
+// via CAS and mutated only under the same slot's seqlock. This is the
+// `ModelSlot` safety argument with one buffer instead of two.
+unsafe impl Sync for NodeStore {}
+
+impl NodeStore {
+    /// Arena for `capacity` nodes of model dimension `reference.len()`,
+    /// every record zeroed (callers seed real state before first read).
+    /// `reference` is the frozen decode reference — the initial model.
+    pub fn new(capacity: usize, reference: Vec<f32>) -> Self {
+        let dim = reference.len();
+        assert!(dim > 0, "node store needs a non-empty reference model");
+        let payload = quant::payload_bytes(dim, STORE_BITS);
+        let stride = (HEADER + payload).div_ceil(8) * 8;
+        Self {
+            arena: UnsafeCell::new(vec![0u8; capacity * stride].into_boxed_slice()),
+            seq: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            stamp: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            raw: (0..capacity).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            reference,
+            dim,
+            stride,
+            payload,
+            raw_nodes: AtomicU64::new(0),
+            decode_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.seq.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The frozen decode reference (the initial model).
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+
+    /// Packed payload length in bytes — the scratch size
+    /// [`NodeStore::read_node`] / [`NodeStore::commit`] require.
+    pub fn payload_len(&self) -> usize {
+        self.payload
+    }
+
+    /// Resident bytes per node this store accounts for: the record stride
+    /// plus the per-slot seqlock, stamp, and escape-pointer words. (The
+    /// engine adds its own per-node roster/rate overheads on top.)
+    pub fn bytes_per_node(&self) -> usize {
+        Self::record_bytes(self.dim)
+    }
+
+    /// [`NodeStore::bytes_per_node`] without a store — what a budget gate
+    /// checks *before* committing to the arena allocation.
+    pub fn record_bytes(dim: usize) -> usize {
+        let payload = quant::payload_bytes(dim, STORE_BITS);
+        (HEADER + payload).div_ceil(8) * 8 + 8 + 8 + 8
+    }
+
+    /// Total arena bytes (records only).
+    pub fn arena_bytes(&self) -> usize {
+        self.capacity() * self.stride
+    }
+
+    /// Nodes that escaped to full-precision side buffers.
+    pub fn raw_nodes(&self) -> u64 {
+        self.raw_nodes.load(Ordering::Relaxed)
+    }
+
+    /// Checksum-verified decodes that failed (impossible while commits
+    /// respect the escape criterion; counted, reference-filled).
+    pub fn decode_failures(&self) -> u64 {
+        self.decode_failures.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn rec_ptr(&self, slot: usize) -> *mut u8 {
+        debug_assert!(slot < self.capacity(), "slot {slot} out of range");
+        // SAFETY: in-bounds offset into the arena allocation; the returned
+        // pointer is only dereferenced under the slot's seqlock protocol
+        unsafe { (*self.arena.get()).as_mut_ptr().add(slot * self.stride) }
+    }
+
+    /// Consistent snapshot of a record: decoded params into `out`, header
+    /// fields in the returned [`NodeMeta`]. Used both for owner checkouts
+    /// and partner snapshots; never blocks writers, retries torn reads.
+    /// `payload_scratch` must be [`NodeStore::payload_len`] bytes.
+    pub fn read_node(
+        &self,
+        slot: usize,
+        out: &mut [f32],
+        payload_scratch: &mut [u8],
+    ) -> NodeMeta {
+        assert_eq!(out.len(), self.dim, "read_node: output buffer length");
+        assert_eq!(payload_scratch.len(), self.payload, "read_node: payload scratch");
+        let mut header = [0u8; HEADER];
+        let mut retries: u64 = 0;
+        let (stamp, is_raw) = loop {
+            let s1 = self.seq[slot].load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                retries += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            let p = self.rec_ptr(slot);
+            // SAFETY: seqlock-validated copy (see Sync impl note); a torn
+            // copy is detected below and retried
+            unsafe {
+                std::ptr::copy_nonoverlapping(p, header.as_mut_ptr(), HEADER);
+            }
+            let is_raw = header[OFF_FLAG] != 0;
+            if is_raw {
+                let rp = self.raw[slot].load(Ordering::Acquire);
+                debug_assert!(!rp.is_null(), "raw flag set without a buffer");
+                // SAFETY: published once, freed only on drop; contents are
+                // seqlock-consistent like the arena record
+                unsafe {
+                    std::ptr::copy_nonoverlapping(rp, out.as_mut_ptr(), self.dim);
+                }
+            } else {
+                // SAFETY: as above
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        p.add(HEADER),
+                        payload_scratch.as_mut_ptr(),
+                        self.payload,
+                    );
+                }
+            }
+            let st = self.stamp[slot].load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if self.seq[slot].load(Ordering::Relaxed) == s1 {
+                break (st, is_raw);
+            }
+            retries += 1;
+        };
+        let checksum =
+            u64::from_le_bytes(header[OFF_CHECKSUM..OFF_CHECKSUM + 8].try_into().unwrap());
+        let seed = u32::from_le_bytes(header[OFF_SEED..OFF_SEED + 4].try_into().unwrap());
+        if !is_raw {
+            // decode outside the critical window — the copy is consistent
+            let ok = quant::decode_slice(
+                payload_scratch,
+                STORE_BITS,
+                STORE_EPS,
+                seed,
+                checksum,
+                &self.reference,
+                out,
+            )
+            .is_ok();
+            if !ok {
+                self.decode_failures.fetch_add(1, Ordering::Relaxed);
+                out.copy_from_slice(&self.reference);
+            }
+        }
+        NodeMeta {
+            stamp,
+            rng_state: u128::from_le_bytes(header[OFF_RNG..OFF_RNG + 16].try_into().unwrap()),
+            steps: u64::from_le_bytes(header[OFF_STEPS..OFF_STEPS + 8].try_into().unwrap()),
+            last_loss: f32::from_le_bytes(header[OFF_LOSS..OFF_LOSS + 4].try_into().unwrap()),
+            retries,
+        }
+    }
+
+    /// Owner commit: write the full record (params + RNG/steps/loss
+    /// header), spinning out the rare cross-write race. Returns the CAS
+    /// retry count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit(
+        &self,
+        slot: usize,
+        params: &[f32],
+        rng_state: u128,
+        steps: u64,
+        last_loss: f32,
+        stamp: u64,
+        seed: u32,
+        payload_scratch: &mut [u8],
+    ) -> u64 {
+        let mut retries = 0u64;
+        loop {
+            match self.write(
+                slot,
+                params,
+                Some((rng_state, steps, last_loss)),
+                stamp,
+                seed,
+                payload_scratch,
+            ) {
+                true => return retries,
+                false => {
+                    retries += 1;
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+
+    /// Best-effort cross-write of a partner payload: params only, the
+    /// owner's RNG/steps/loss header is preserved. Returns `false`
+    /// (dropping the write, never blocking) when the slot is held.
+    pub fn try_push(
+        &self,
+        slot: usize,
+        params: &[f32],
+        stamp: u64,
+        seed: u32,
+        payload_scratch: &mut [u8],
+    ) -> bool {
+        self.write(slot, params, None, stamp, seed, payload_scratch)
+    }
+
+    /// One seqlock write attempt; `header` carries owner-only fields.
+    fn write(
+        &self,
+        slot: usize,
+        params: &[f32],
+        header: Option<(u128, u64, f32)>,
+        stamp: u64,
+        seed: u32,
+        payload_scratch: &mut [u8],
+    ) -> bool {
+        assert_eq!(params.len(), self.dim, "write: params length");
+        assert_eq!(payload_scratch.len(), self.payload, "write: payload scratch");
+        // escape is sticky: once a node has a raw buffer it stays raw, so
+        // reads never race a lattice↔raw mode flip mid-incarnation
+        let escaped = !self.raw[slot].load(Ordering::Acquire).is_null()
+            || params
+                .iter()
+                .zip(&self.reference)
+                .any(|(x, r)| !(x - r).abs().is_finite() || (x - r).abs() >= ESCAPE_DEV);
+        // encode (or allocate the escape buffer) outside the critical
+        // window, keeping the write hold to a couple of memcpys
+        let (checksum, raw_ptr) = if escaped {
+            (0u64, self.raw_ptr_or_alloc(slot))
+        } else {
+            (
+                quant::encode_slice_into(params, STORE_EPS, STORE_BITS, seed, payload_scratch),
+                std::ptr::null_mut(),
+            )
+        };
+        let s = self.seq[slot].load(Ordering::Relaxed);
+        if s & 1 == 1
+            || self.seq[slot]
+                .compare_exchange(s, s + 1, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            return false;
+        }
+        let p = self.rec_ptr(slot);
+        // SAFETY: we hold the slot's seqlock (odd sequence); no other
+        // writer can enter and readers discard copies torn by us
+        unsafe {
+            if let Some((rng_state, steps, last_loss)) = header {
+                std::ptr::copy_nonoverlapping(
+                    rng_state.to_le_bytes().as_ptr(),
+                    p.add(OFF_RNG),
+                    16,
+                );
+                std::ptr::copy_nonoverlapping(
+                    steps.to_le_bytes().as_ptr(),
+                    p.add(OFF_STEPS),
+                    8,
+                );
+                std::ptr::copy_nonoverlapping(
+                    last_loss.to_le_bytes().as_ptr(),
+                    p.add(OFF_LOSS),
+                    4,
+                );
+            }
+            std::ptr::copy_nonoverlapping(
+                checksum.to_le_bytes().as_ptr(),
+                p.add(OFF_CHECKSUM),
+                8,
+            );
+            std::ptr::copy_nonoverlapping(seed.to_le_bytes().as_ptr(), p.add(OFF_SEED), 4);
+            *p.add(OFF_FLAG) = u8::from(escaped);
+            if escaped {
+                std::ptr::copy_nonoverlapping(params.as_ptr(), raw_ptr, self.dim);
+            } else {
+                std::ptr::copy_nonoverlapping(
+                    payload_scratch.as_ptr(),
+                    p.add(HEADER),
+                    self.payload,
+                );
+            }
+        }
+        self.stamp[slot].store(stamp, Ordering::Relaxed);
+        self.seq[slot].store(s + 2, Ordering::Release);
+        true
+    }
+
+    fn raw_ptr_or_alloc(&self, slot: usize) -> *mut f32 {
+        let cur = self.raw[slot].load(Ordering::Acquire);
+        if !cur.is_null() {
+            return cur;
+        }
+        let b: Box<[f32]> = vec![0.0f32; self.dim].into_boxed_slice();
+        let p = Box::into_raw(b) as *mut f32;
+        match self.raw[slot].compare_exchange(
+            std::ptr::null_mut(),
+            p,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                self.raw_nodes.fetch_add(1, Ordering::Relaxed);
+                p
+            }
+            Err(existing) => {
+                // lost the publish race: free ours, use the winner's
+                // SAFETY: `p` is the box we just leaked and nobody else
+                // has seen it
+                unsafe {
+                    drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(p, self.dim)));
+                }
+                existing
+            }
+        }
+    }
+}
+
+impl Drop for NodeStore {
+    fn drop(&mut self) {
+        for r in self.raw.iter() {
+            let p = r.load(Ordering::Acquire);
+            if !p.is_null() {
+                // SAFETY: published escape buffers are owned by the store
+                // and freed exactly once, here
+                unsafe {
+                    drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(p, self.dim)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg64;
+
+    fn store(dim: usize, cap: usize) -> NodeStore {
+        let reference: Vec<f32> = (0..dim).map(|i| (i as f32) * 0.01).collect();
+        NodeStore::new(cap, reference)
+    }
+
+    #[test]
+    fn commit_then_read_roundtrips_within_eps() {
+        let s = store(33, 4);
+        let mut scratch = vec![0u8; s.payload_len()];
+        let mut rng = Pcg64::seed(3);
+        let params: Vec<f32> =
+            s.reference().iter().map(|r| r + (rng.f32() - 0.5) * 2.0).collect();
+        let retries = s.commit(1, &params, 0xDEAD_BEEF, 7, 0.25, 42, 99, &mut scratch);
+        assert_eq!(retries, 0);
+        let mut out = vec![0.0f32; 33];
+        let meta = s.read_node(1, &mut out, &mut scratch);
+        assert_eq!(meta.stamp, 42);
+        assert_eq!(meta.rng_state, 0xDEAD_BEEF);
+        assert_eq!(meta.steps, 7);
+        assert_eq!(meta.last_loss, 0.25);
+        for (o, p) in out.iter().zip(&params) {
+            assert!((o - p).abs() <= STORE_EPS * 1.0001, "err {}", (o - p).abs());
+        }
+        assert_eq!(s.raw_nodes(), 0);
+        assert_eq!(s.decode_failures(), 0);
+    }
+
+    #[test]
+    fn try_push_preserves_the_owner_header() {
+        let s = store(8, 2);
+        let mut scratch = vec![0u8; s.payload_len()];
+        let own: Vec<f32> = s.reference().to_vec();
+        s.commit(0, &own, 111, 5, 1.5, 10, 1, &mut scratch);
+        let pushed: Vec<f32> = s.reference().iter().map(|r| r + 0.5).collect();
+        assert!(s.try_push(0, &pushed, 20, 2, &mut scratch));
+        let mut out = vec![0.0f32; 8];
+        let meta = s.read_node(0, &mut out, &mut scratch);
+        // params took the push, the RNG/steps/loss header did not
+        assert!((out[0] - pushed[0]).abs() <= STORE_EPS * 1.0001);
+        assert_eq!(meta.rng_state, 111);
+        assert_eq!(meta.steps, 5);
+        assert_eq!(meta.last_loss, 1.5);
+        assert_eq!(meta.stamp, 20);
+    }
+
+    #[test]
+    fn far_models_escape_to_raw_and_stay_exact() {
+        let s = store(16, 2);
+        let mut scratch = vec![0u8; s.payload_len()];
+        let far: Vec<f32> = s.reference().iter().map(|r| r + 100.0).collect();
+        s.commit(0, &far, 1, 1, 0.0, 1, 3, &mut scratch);
+        assert_eq!(s.raw_nodes(), 1);
+        let mut out = vec![0.0f32; 16];
+        s.read_node(0, &mut out, &mut scratch);
+        assert_eq!(out, far, "raw escape must be exact");
+        // sticky: a later in-range commit stays raw (and exact)
+        let near: Vec<f32> = s.reference().to_vec();
+        s.commit(0, &near, 2, 2, 0.0, 2, 4, &mut scratch);
+        assert_eq!(s.raw_nodes(), 1);
+        s.read_node(0, &mut out, &mut scratch);
+        assert_eq!(out, near);
+    }
+
+    #[test]
+    fn bytes_per_node_matches_the_layout() {
+        let s = store(64, 10);
+        // 48-byte header + ceil(64·16/8)=128 payload = 176, already 8-aligned
+        assert_eq!(s.payload_len(), 128);
+        assert_eq!(s.arena_bytes(), 10 * 176);
+        assert_eq!(s.bytes_per_node(), 176 + 24);
+    }
+
+    #[test]
+    fn concurrent_pushes_and_reads_never_tear() {
+        let dim = 32;
+        let s = store(dim, 1);
+        let mut scratch = vec![0u8; s.payload_len()];
+        let base: Vec<f32> = s.reference().to_vec();
+        s.commit(0, &base, 0, 0, 0.0, 0, 0, &mut scratch);
+        let writes = 2_000u64;
+        std::thread::scope(|scope| {
+            let sref = &s;
+            scope.spawn(move || {
+                let mut scratch = vec![0u8; sref.payload_len()];
+                for v in 1..=writes {
+                    // constant vectors: decoded coords must all agree
+                    let val = (v % 30) as f32;
+                    let data = vec![val; dim];
+                    while !sref.try_push(0, &data, v, v as u32, &mut scratch) {
+                        std::hint::spin_loop();
+                    }
+                }
+            });
+            for _ in 0..3 {
+                scope.spawn(move || {
+                    let mut scratch = vec![0u8; sref.payload_len()];
+                    let mut out = vec![0.0f32; dim];
+                    for _ in 0..2_000 {
+                        sref.read_node(0, &mut out, &mut scratch);
+                        let v = out[0];
+                        assert!(
+                            out.iter().all(|&x| (x - v).abs() <= 2.0 * STORE_EPS),
+                            "torn read: {out:?}"
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(s.decode_failures(), 0);
+    }
+}

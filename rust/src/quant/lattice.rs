@@ -1,8 +1,6 @@
 //! The cubic-lattice codec: stochastic rounding, modulo wire encoding,
 //! nearest-representative decoding, checksum failure detection.
 
-use super::packing::unpack_bits;
-
 /// Initial state of the coordinate checksum (FNV-1a offset basis). Shared
 /// with the fused kernels so their checksums match the wire format exactly.
 pub(crate) const CHECKSUM_INIT: u64 = 0xcbf29ce484222325;
@@ -128,11 +126,25 @@ pub fn encode(x: &[f32], eps: f32, bits: u32, seed: u32) -> QuantizedMsg {
 /// assert_eq!(checksum, msg.checksum);
 /// ```
 pub fn encode_into(x: &[f32], eps: f32, bits: u32, seed: u32, payload: &mut Vec<u8>) -> u64 {
-    assert!((2..=16).contains(&bits), "bits must be in 2..=16");
-    let m = 1i64 << bits;
-    let total_bits = x.len() * bits as usize;
     payload.clear();
-    payload.resize(total_bits.div_ceil(8), 0);
+    payload.resize(payload_bytes(x.len(), bits), 0);
+    encode_slice_into(x, eps, bits, seed, payload)
+}
+
+/// Packed payload size in bytes for `len` coordinates at `bits` bits each.
+#[inline]
+pub fn payload_bytes(len: usize, bits: u32) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// Fixed-buffer encode: like [`encode_into`] but into a caller-owned byte
+/// slice of exactly [`payload_bytes`]`(x.len(), bits)` — the variant the
+/// membership `NodeStore` uses to write straight into its arena, with no
+/// `Vec` in sight.
+pub fn encode_slice_into(x: &[f32], eps: f32, bits: u32, seed: u32, payload: &mut [u8]) -> u64 {
+    assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+    assert_eq!(payload.len(), payload_bytes(x.len(), bits), "encode_slice_into: payload size");
+    let m = 1i64 << bits;
     // single fused pass: coordinate -> checksum -> residue -> packed bits,
     // with the same little-endian accumulator as packing::pack_bits so the
     // payload is byte-identical
@@ -195,16 +207,43 @@ pub fn decode_into(
             got: reference.len(),
         });
     }
-    assert_eq!(out.len(), msg.len, "decode_into: output buffer length");
-    let m = 1i64 << msg.bits;
+    decode_slice(&msg.payload, msg.bits, msg.eps, msg.seed, msg.checksum, reference, out)
+}
+
+/// Streaming raw-parts decode: the body of [`decode_into`] without the
+/// [`QuantizedMsg`] wrapper, unpacking bits on the fly (no intermediate
+/// coordinate `Vec`). The membership `NodeStore` decodes arena-resident
+/// payloads through this; `decode_into` delegates here.
+pub fn decode_slice(
+    payload: &[u8],
+    bits: u32,
+    eps: f32,
+    seed: u32,
+    expect_checksum: u64,
+    reference: &[f32],
+    out: &mut [f32],
+) -> Result<(), QuantError> {
+    assert_eq!(out.len(), reference.len(), "decode_slice: output buffer length");
+    assert_eq!(payload.len(), payload_bytes(reference.len(), bits), "decode_slice: payload size");
+    let m = 1i64 << bits;
     let half = m / 2;
-    let reduced = unpack_bits(&msg.payload, msg.bits, msg.len);
+    let mask = (1u64 << bits) - 1;
+    // little-endian bit accumulator, mirror of the encode side
+    let mut acc: u64 = 0;
+    let mut acc_bits: u32 = 0;
+    let mut byte = 0usize;
     let mut checksum: u64 = CHECKSUM_INIT;
-    for (i, ((&r, &y), o)) in
-        reduced.iter().zip(reference).zip(out.iter_mut()).enumerate()
-    {
+    for (i, (&y, o)) in reference.iter().zip(out.iter_mut()).enumerate() {
+        while acc_bits < bits {
+            acc |= (payload[byte] as u64) << acc_bits;
+            byte += 1;
+            acc_bits += 8;
+        }
+        let r = acc & mask;
+        acc >>= bits;
+        acc_bits -= bits;
         // receiver's own (deterministic, same-seed) lattice coordinate
-        let yc = (y / msg.eps + uniform01(i as u32, msg.seed)).floor() as i64;
+        let yc = (y / eps + uniform01(i as u32, seed)).floor() as i64;
         // signed difference of residues in [-M/2, M/2)
         let mut diff = (r as i64 - yc.rem_euclid(m)) % m;
         if diff >= half {
@@ -214,9 +253,9 @@ pub fn decode_into(
         }
         let c = yc + diff;
         checksum = checksum_step(checksum, c);
-        *o = c as f32 * msg.eps;
+        *o = c as f32 * eps;
     }
-    if checksum != msg.checksum {
+    if checksum != expect_checksum {
         return Err(QuantError::ChecksumMismatch);
     }
     Ok(())
@@ -337,6 +376,24 @@ mod tests {
         x = x.wrapping_mul(0x846CA68B);
         x ^= x >> 16;
         x
+    }
+
+    #[test]
+    fn slice_codecs_match_the_vec_codecs() {
+        let mut rng = Pcg64::seed(11);
+        let eps = 1e-3f32;
+        for bits in [2u32, 5, 8, 11, 16] {
+            let x = randvec(&mut rng, 257, 0.05); // odd len: partial tail byte
+            let msg = encode(&x, eps, bits, 77);
+            let mut payload = vec![0u8; payload_bytes(x.len(), bits)];
+            let checksum = encode_slice_into(&x, eps, bits, 77, &mut payload);
+            assert_eq!(payload, msg.payload, "bits={bits}");
+            assert_eq!(checksum, msg.checksum);
+            let y: Vec<f32> = x.iter().map(|v| v + 0.001).collect();
+            let mut out = vec![0.0f32; x.len()];
+            decode_slice(&payload, bits, eps, 77, checksum, &y, &mut out).unwrap();
+            assert_eq!(out, decode(&msg, &y).unwrap());
+        }
     }
 
     #[test]

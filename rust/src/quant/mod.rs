@@ -23,8 +23,9 @@ mod packing;
 mod qsgd;
 
 pub use lattice::{
-    decode, decode_into, encode, encode_into, hash_u32, quantize_unbiased,
-    uniform01, QuantError, QuantizedMsg,
+    decode, decode_into, decode_slice, encode, encode_into, encode_slice_into,
+    hash_u32, payload_bytes, quantize_unbiased, uniform01, QuantError,
+    QuantizedMsg,
 };
 pub use packing::{pack_bits, pack_bits_into, unpack_bits, unpack_bits_into};
 pub use qsgd::{

@@ -73,6 +73,25 @@ impl Pcg64 {
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.f64() < p
     }
+
+    /// The raw 128-bit LCG state, for compact external persistence (the
+    /// membership `NodeStore` parks each node's stream in 16 bytes).
+    /// A cached Box–Muller half is *not* captured — see [`Pcg64::from_raw_state`].
+    #[inline]
+    pub fn state_raw(&self) -> u128 {
+        self.state
+    }
+
+    /// Rebuild a generator from [`Pcg64::state_raw`]. The `spare_normal`
+    /// Box–Muller cache is dropped across the round-trip: the resumed
+    /// stream may differ from the uninterrupted one by one discarded
+    /// gaussian half. That is fine for the statistical (non-replayable)
+    /// executors this exists for; replayable paths keep their `Pcg64`
+    /// values alive instead of round-tripping them.
+    #[inline]
+    pub fn from_raw_state(state: u128) -> Self {
+        Self { state, spare_normal: None }
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +115,18 @@ mod tests {
         v.sort_unstable();
         v.dedup();
         assert!(v.len() > 99_990);
+    }
+
+    #[test]
+    fn raw_state_roundtrips_the_u64_stream() {
+        let mut a = Pcg64::seed(17);
+        for _ in 0..10 {
+            a.next_u64();
+        }
+        let mut b = Pcg64::from_raw_state(a.state_raw());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

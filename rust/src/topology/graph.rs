@@ -20,6 +20,12 @@ pub enum Topology {
     Hypercube,
     /// Random r-regular graph via the pairing model (connected by retry).
     RandomRegular(usize),
+    /// Random r-regular **expander** (default r=8): re-sampled until the
+    /// Laplacian gap clears the pinned Alon–Boppana-style lower bound
+    /// [`Graph::expander_gap_bound`]. The O(n³) spectral certificate runs
+    /// at sizes up to [`Graph::EXPANDER_CHECK_MAX`]; larger instances rely
+    /// on random regular graphs being near-Ramanujan w.h.p. (Friedman).
+    Expander(usize),
     /// Barabási–Albert preferential attachment: each new node attaches to
     /// `m` distinct existing nodes with probability ∝ degree, grown from a
     /// connected (m+1)-clique — hub-heavy degree distribution, connected
@@ -29,8 +35,9 @@ pub enum Topology {
 
 impl Topology {
     /// Parse a topology name: `complete | ring | torus | hypercube |
-    /// random<r> | regular<r> | powerlaw | powerlaw<m>` (`regular<r>` is an
-    /// alias of `random<r>`; bare `powerlaw` attaches with m=2).
+    /// random<r> | regular<r> | expander | expander<r> | powerlaw |
+    /// powerlaw<m>` (`regular<r>` is an alias of `random<r>`; bare
+    /// `expander` is 8-regular; bare `powerlaw` attaches with m=2).
     pub fn parse(name: &str) -> Result<Self, String> {
         let degree = |t: &str, prefix: &str| -> Result<usize, String> {
             t[prefix.len()..]
@@ -43,13 +50,16 @@ impl Topology {
             "torus" => Topology::Torus,
             "hypercube" => Topology::Hypercube,
             "powerlaw" => Topology::PowerLaw(2),
+            "expander" => Topology::Expander(8),
             t if t.starts_with("random") => Topology::RandomRegular(degree(t, "random")?),
             t if t.starts_with("regular") => Topology::RandomRegular(degree(t, "regular")?),
             t if t.starts_with("powerlaw") => Topology::PowerLaw(degree(t, "powerlaw")?),
+            t if t.starts_with("expander") => Topology::Expander(degree(t, "expander")?),
             t => {
                 return Err(format!(
                     "unknown topology '{t}' (known: complete, ring, torus, \
-                     hypercube, random<r>/regular<r>, powerlaw[<m>])"
+                     hypercube, random<r>/regular<r>, expander[<r>], \
+                     powerlaw[<m>])"
                 ))
             }
         })
@@ -114,6 +124,22 @@ impl Topology {
                     ));
                 }
             }
+            Topology::Expander(r) => {
+                if r < 3 || r >= n {
+                    return Err(format!(
+                        "expander topology needs degree 3 <= r < n, got r={r} n={n}"
+                    ));
+                }
+                if n * r % 2 != 0 {
+                    return Err(format!(
+                        "expander topology needs n*r even (every graph has an \
+                         even degree sum); n={n} r={r} gives n*r={} — use an \
+                         even degree (e.g. expander{}) or an even n",
+                        n * r,
+                        r + 1
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -143,6 +169,7 @@ impl Graph {
             Topology::Hypercube => Self::hypercube(n),
             Topology::RandomRegular(r) => Self::random_regular(n, r, rng),
             Topology::PowerLaw(m) => Self::power_law(n, m, rng),
+            Topology::Expander(r) => Self::expander(n, r, rng),
         }
     }
 
@@ -331,6 +358,44 @@ impl Graph {
         let g = Self::from_edges(n, edges);
         debug_assert!(g.is_connected());
         g
+    }
+
+    /// Largest n at which [`Graph::expander`] runs its O(n³) spectral
+    /// certificate; larger instances rely on the w.h.p. guarantee.
+    pub const EXPANDER_CHECK_MAX: usize = 256;
+
+    /// The pinned Laplacian-gap lower bound an expander sample must clear:
+    /// `r − 2.2·√(r−1)`. Alon–Boppana caps the adjacency gap of any
+    /// r-regular graph at `r − 2√(r−1) − o(1)`, and random regular graphs
+    /// get within any ε of it w.h.p. (Friedman), so the 2.2 slack makes
+    /// the certificate pass after few retries while still rejecting
+    /// near-bipartite or badly-clustered samples. For the default r=8
+    /// this demands λ₂ ≥ 2.18 — far above ring (λ₂ → 0) at equal n.
+    pub fn expander_gap_bound(r: usize) -> f64 {
+        (r as f64 - 2.2 * ((r.max(1) - 1) as f64).sqrt()).max(0.0)
+    }
+
+    /// Random r-regular expander: [`Graph::random_regular`] re-sampled
+    /// until λ₂ clears [`Graph::expander_gap_bound`]. The certificate is
+    /// checked up to [`Graph::EXPANDER_CHECK_MAX`] nodes (the eigensolver
+    /// is O(n³)); beyond that a single sample is returned unchecked.
+    pub fn expander(n: usize, r: usize, rng: &mut Pcg64) -> Self {
+        assert!(r >= 3 && r < n, "expander needs 3 <= r < n");
+        if n > Self::EXPANDER_CHECK_MAX {
+            return Self::random_regular(n, r, rng);
+        }
+        let bound = Self::expander_gap_bound(r);
+        let mut g = Self::random_regular(n, r, rng);
+        for _ in 0..16 {
+            if g.lambda2() >= bound {
+                return g;
+            }
+            g = Self::random_regular(n, r, rng);
+        }
+        panic!(
+            "expander({n},{r}): no sample cleared the λ₂ >= {bound:.3} \
+             certificate in 16 draws"
+        );
     }
 
     /// Barabási–Albert preferential attachment: start from a complete
@@ -575,6 +640,28 @@ mod tests {
     fn sample_edge_rejects_directed() {
         let g = Graph::directed_ring(4);
         g.sample_edge(&mut rng());
+    }
+
+    #[test]
+    fn expander_parses_validates_and_clears_the_gap_bound() {
+        assert_eq!(Topology::parse("expander").unwrap(), Topology::Expander(8));
+        assert_eq!(Topology::parse("expander6").unwrap(), Topology::Expander(6));
+        assert!(Topology::parse("expanderx").is_err());
+        assert!(Topology::Expander(8).validate(64).is_ok());
+        assert!(Topology::Expander(2).validate(64).is_err()); // r < 3
+        assert!(Topology::Expander(64).validate(64).is_err()); // r >= n
+        assert!(Topology::Expander(3).validate(9).is_err()); // n*r odd
+        let e = Topology::Expander(3).validate(9).unwrap_err();
+        assert!(e.contains("even"), "{e}");
+
+        // the certificate actually holds on a checked-size sample
+        let mut r = rng();
+        let g = Graph::expander(64, 8, &mut r);
+        assert_eq!(g.regular_degree(), Some(8));
+        assert!(g.is_connected());
+        let bound = Graph::expander_gap_bound(8);
+        assert!(bound > 2.0 && bound < 3.0, "bound={bound}");
+        assert!(g.lambda2() >= bound, "gap {} < bound {bound}", g.lambda2());
     }
 
     #[test]

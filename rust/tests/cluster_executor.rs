@@ -220,6 +220,10 @@ fn cluster_loopback_run_converges_with_real_wire_bits() {
     };
     assert!(status.contains("\"workers\":2"), "status: {status}");
     assert!(status.contains("\"rank\":0") && status.contains("\"rank\":1"), "status: {status}");
+    // no recovery has happened, so the shard assignment is still roster
+    // epoch 0 — both at the run level and per worker
+    assert!(status.contains("\"roster_epoch\":0"), "status: {status}");
+    assert!(status.contains("\"epoch\":0"), "status: {status}");
     assert_eq!(prom_value(&metrics, "swarm_cluster_workers_alive"), Some(2.0), "{metrics}");
     assert!(metrics.contains("# TYPE swarm_interactions_total counter"), "{metrics}");
 

@@ -1,0 +1,120 @@
+//! Membership subsystem integration tests: the churn process holds its
+//! statistical band end-to-end through `run_scale`, churned runs still
+//! converge, and recycled roster slots never alias a live generation.
+
+use swarm_sgd::coordinator::{make_algorithm, AlgoOptions, LrSchedule, RunSpec};
+use swarm_sgd::grad::ProcQuadraticOracle;
+use swarm_sgd::membership::{run_scale, ChurnSpec, Roster, ScaleOptions};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::topology::Topology;
+
+fn scale_run(
+    n: usize,
+    events: u64,
+    churn: ChurnSpec,
+    topology: Topology,
+) -> swarm_sgd::coordinator::RunMetrics {
+    let algo = make_algorithm("swarm", &AlgoOptions::default()).expect("known algorithm");
+    let backend = ProcQuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.2, 9);
+    let cost = CostModel::deterministic(0.1);
+    let spec = RunSpec {
+        n,
+        events,
+        lr: LrSchedule::Constant(0.05),
+        seed: 7,
+        name: "membership-it".into(),
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let opts = ScaleOptions {
+        threads: 2,
+        topology,
+        churn,
+        ..ScaleOptions::default()
+    };
+    run_scale(algo.as_ref(), &backend, &spec, &cost, &opts).expect("scale run")
+}
+
+/// The birth–death competition mean-reverts the live count to
+/// `n · min(1, join/leave)`: with join 0.3 / leave 0.6 the stationary
+/// fraction is 1/2, and after many events the run must sit inside a wide
+/// band around it — while the flux counters stay consistent with the
+/// final census.
+#[test]
+fn churn_holds_the_stationary_band_through_the_public_api() {
+    let n = 512;
+    let m = scale_run(n, 25_000, ChurnSpec { join: 0.3, leave: 0.6 }, Topology::Complete);
+    let fr = m.freerun.expect("scale telemetry");
+    let ms = fr.membership.expect("membership telemetry");
+    assert_eq!(ms.capacity, n);
+    assert_eq!(ms.live_start, n as u64);
+    assert!(ms.joins > 0 && ms.leaves > 0, "churn never fired: {ms:?}");
+    let frac = ms.live_end as f64 / n as f64;
+    assert!(
+        (0.3..=0.7).contains(&frac),
+        "live fraction {frac:.3} outside the [0.3, 0.7] band around the \
+         n/2 equilibrium: {ms:?}"
+    );
+    // census identity: every join/leave is one slot transition
+    assert_eq!(
+        ms.live_end,
+        ms.live_start + ms.joins - ms.leaves,
+        "flux counters disagree with the final census: {ms:?}"
+    );
+}
+
+/// A churned run still trains: joiners bootstrap from a live neighbor's
+/// snapshot, so the population loss keeps descending from x0 even while
+/// half the roster turns over.
+#[test]
+fn churned_run_converges_on_the_procedural_quadratic() {
+    let n = 256;
+    let backend = ProcQuadraticOracle::new(16, n, 1.0, 0.5, 2.0, 0.2, 9);
+    let x0_loss = {
+        use swarm_sgd::backend::Backend;
+        let (p0, _) = backend.init();
+        backend.full_loss(&p0)
+    };
+    let m = scale_run(n, 20_000, ChurnSpec { join: 0.2, leave: 0.2 }, Topology::Expander(8));
+    assert!(
+        m.final_eval_loss < 0.6 * x0_loss,
+        "churned run did not converge: final {} vs x0 {x0_loss}",
+        m.final_eval_loss
+    );
+    let ms = m.freerun.expect("telemetry").membership.expect("membership");
+    assert!(ms.joins > 0 && ms.leaves > 0);
+    assert_eq!(ms.decode_failures, 0, "store roundtrips must be clean");
+}
+
+/// The aliasing guarantee behind safe slot recycling: across arbitrary
+/// retire/admit cycles, `(slot, generation)` pairs are unique, live
+/// generations are exactly the odd ones, and no recycled incarnation ever
+/// reuses a prior generation — so a stale cross-write tagged with a dead
+/// generation can always be recognized and dropped.
+#[test]
+fn recycled_slots_never_alias_live_generations() {
+    let r = Roster::new(8, 8);
+    let mut seen: std::collections::HashSet<(usize, u32)> = std::collections::HashSet::new();
+    for slot in 0..8 {
+        assert!(r.is_live(slot));
+        assert!(seen.insert((slot, r.generation(slot))));
+    }
+    // cycle each slot a different number of times; every observed live
+    // generation must be fresh and odd
+    for slot in 0..8 {
+        for _ in 0..=slot {
+            let dead = r.retire(slot);
+            assert_eq!(dead & 1, 0, "retired generation must be even");
+            assert!(!r.is_live(slot));
+            let live = r.admit(slot);
+            assert_eq!(live & 1, 1, "admitted generation must be odd");
+            assert!(
+                seen.insert((slot, live)),
+                "slot {slot} recycled into a previously-live generation {live}"
+            );
+        }
+    }
+    assert_eq!(r.live_count(), 8);
+    assert_eq!(r.joins(), 8 * 9 / 2);
+    assert_eq!(r.leaves(), 8 * 9 / 2);
+}

@@ -1,0 +1,135 @@
+//! RSS-proxy pin of the scale engine's bytes-per-node budget at n=100k.
+//!
+//! A tracking global allocator (same single-test-per-file discipline as
+//! `merge_no_alloc.rs` — no other test may share the process and pollute
+//! the counters) records live heap bytes and their high-water mark. The
+//! test runs a real `run_scale` at n=100,000 / d=64 with the budget gate
+//! armed at 512 B/node and asserts the *measured peak heap growth* of the
+//! whole run stays under `n · budget` — so the budget the engine enforces
+//! arithmetically is also the budget the process actually observes. A
+//! lower bound (the store arena itself) proves the proxy measured the run
+//! rather than trivially passing, and the exact 212 B/node accounting pins
+//! the d=64 record layout against regressions.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use swarm_sgd::coordinator::{make_algorithm, AlgoOptions, LrSchedule, RunSpec};
+use swarm_sgd::grad::ProcQuadraticOracle;
+use swarm_sgd::membership::{run_scale, ChurnSpec, NodeStore, ScaleOptions};
+use swarm_sgd::netmodel::CostModel;
+use swarm_sgd::topology::Topology;
+
+/// Live heap bytes right now (alloc adds, dealloc subtracts).
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of `LIVE` — the resident-set proxy.
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+struct PeakAlloc;
+
+impl PeakAlloc {
+    fn credit(size: usize) {
+        let now = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(now, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            Self::credit(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            Self::credit(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+            Self::credit(new_size);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static A: PeakAlloc = PeakAlloc;
+
+#[test]
+fn scale_run_at_100k_stays_under_the_bytes_per_node_budget() {
+    const N: usize = 100_000;
+    const DIM: usize = 64;
+    const BUDGET: u64 = 512;
+
+    // the d=64 record layout, pinned exactly: 48-byte header + 128-byte
+    // lattice payload (8-aligned) + 24 bytes of per-slot atomics = 200,
+    // and the engine accounts roster generation (4) + speed rate (8) on top
+    assert_eq!(NodeStore::record_bytes(DIM), 200);
+
+    let algo = make_algorithm("swarm", &AlgoOptions::default()).expect("known algorithm");
+    let backend = ProcQuadraticOracle::new(DIM, N, 1.0, 0.5, 2.0, 0.2, 5);
+    let cost = CostModel::deterministic(0.2);
+    let spec = RunSpec {
+        n: N,
+        events: 30_000,
+        lr: LrSchedule::Constant(0.02),
+        seed: 13,
+        name: "budget-proxy".into(),
+        eval_every: 0,
+        track_gamma: false,
+    };
+    let opts = ScaleOptions {
+        threads: 2,
+        topology: Topology::Expander(8),
+        churn: ChurnSpec::none(),
+        node_budget: BUDGET,
+        ..ScaleOptions::default()
+    };
+
+    let baseline = LIVE.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    let m = run_scale(algo.as_ref(), &backend, &spec, &cost, &opts).expect("scale run");
+    let grown = PEAK.load(Ordering::Relaxed).saturating_sub(baseline);
+
+    let ms = m
+        .freerun
+        .expect("scale telemetry")
+        .membership
+        .expect("membership telemetry");
+    assert_eq!(ms.bytes_per_node, 212, "accounted d=64 record layout moved");
+    assert_eq!(ms.node_budget, BUDGET);
+    assert!(ms.bytes_per_node <= BUDGET);
+    assert_eq!(ms.decode_failures, 0);
+
+    // the proxy really measured the run: peak growth covers at least the
+    // store arena (100k × 176-byte records)
+    let arena_floor = N * 176;
+    assert!(
+        grown >= arena_floor,
+        "peak heap growth {grown} B below the {arena_floor} B arena — the \
+         allocator proxy measured nothing"
+    );
+    // and the whole run — arena, roster, rates, worklists, worker scratch,
+    // eval buffers — stays under the budget the gate promises per node
+    let ceiling = N * BUDGET as usize;
+    assert!(
+        grown <= ceiling,
+        "peak heap growth {grown} B exceeds n·budget = {ceiling} B \
+         ({:.1} B/node measured vs {BUDGET} budgeted)",
+        grown as f64 / N as f64
+    );
+}
